@@ -1,0 +1,16 @@
+use bts::cachesim::*;
+fn main() {
+    for (name, mk) in [("eaglet", 0), ("nf_hi", 1), ("nf_lo", 2)] {
+        println!("-- {name}");
+        for kb in [256, 512, 1024, 2048, 4096, 8192, 16384, 32768] {
+            let cfg = match mk {
+                0 => TraceConfig::eaglet(kb * 1024),
+                1 => TraceConfig::netflix(kb * 1024, 0.5),
+                _ => TraceConfig::netflix(kb * 1024, 0.0625),
+            };
+            let mut h = Hierarchy::new(CacheConfig::sandy_bridge());
+            run_task_trace(&cfg, &mut h);
+            println!("{kb:6} KB  l2mpi={:.6}  l3mpi={:.6}  amat={:.1}", h.l2_mpi(), h.l3_mpi(), h.amat());
+        }
+    }
+}

@@ -1,0 +1,18 @@
+use bts::runtime::{HostTensor, Manifest, Runtime};
+use std::sync::Arc;
+fn main() {
+    let m = Arc::new(Manifest::load("artifacts").unwrap());
+    let rt = Runtime::new(m.clone()).unwrap();
+    let p = &m.params;
+    let e = m.entry("eaglet_map", 1).unwrap().clone();
+    let geno = HostTensor::F32(vec![0.5; p.markers * p.individuals], vec![1, p.markers, p.individuals]);
+    let pos = HostTensor::F32((0..p.markers).map(|i| i as f32 / p.markers as f32).collect(), vec![1, p.markers]);
+    let idx = HostTensor::I32((0..(p.rounds * p.subsample) as i32).map(|i| i % p.markers as i32).collect(), vec![p.rounds, p.subsample]);
+    let grid = HostTensor::F32((0..p.grid).map(|i| i as f32 / p.grid as f32).collect(), vec![p.grid]);
+    let out = rt.execute(&e, &[geno, pos, idx, grid]).unwrap();
+    println!("eaglet map out: {} tensors, first len {} vals {:?}", out.len(), out[0].len(), &out[0][..4]);
+    let e2 = m.entry("netflix_reduce", 16).unwrap().clone();
+    let parts = HostTensor::F32(vec![1.0; 16*12*3], vec![16,12,3]);
+    let out2 = rt.execute(&e2, &[parts]).unwrap();
+    println!("netflix reduce: {:?}", &out2[0][..6]);
+}

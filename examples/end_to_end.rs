@@ -1,0 +1,183 @@
+//! End-to-end validation driver (DESIGN.md §validation): exercises every
+//! layer of the system on real small workloads and reports the paper's
+//! headline metric. This is the run recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example end_to_end
+//!
+//! Covered, in order:
+//!   1. offline kneepoint profiling (cache simulator)
+//!   2. real EAGLET + Netflix jobs through pack → two-step scheduler →
+//!      replicated store (adaptive RF, prefetch) → PJRT map → shuffle →
+//!      PJRT reduce, across all three sizing policies
+//!   3. monitoring on/off overhead (the §4.2.2 experiment)
+//!   4. injected node failure → job-level recovery → bit-identical result
+//!   5. distributed mode: the same job over TCP leader/workers
+//!   6. throughput headline (Mb/s per 12-core-node-equivalent)
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use bts::cachesim::CacheConfig;
+use bts::coordinator::{
+    run_job, run_with_recovery, FailurePlan, JobConfig,
+};
+use bts::data::Workload;
+use bts::dfs::LatencyModel;
+use bts::kneepoint::{kneepoint_bytes, TaskSizing};
+use bts::net::{run_worker, serve_job};
+use bts::runtime::Manifest;
+use bts::workloads::build_small;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load_default()?);
+    let cache = CacheConfig::sandy_bridge();
+    println!("=== 1. offline kneepoint profiling ===");
+    let mut knees = std::collections::HashMap::new();
+    for w in [Workload::Eaglet, Workload::NetflixHi, Workload::NetflixLo] {
+        let k = kneepoint_bytes(w, &cache);
+        println!("  {:12} kneepoint {:.2} MB", w.name(), k as f64 / 1048576.0);
+        knees.insert(w, k);
+    }
+
+    println!("\n=== 2. real jobs, all sizing policies ===");
+    println!(
+        "  {:12} {:10} {:>7} {:>9} {:>9} {:>8} {:>4}",
+        "workload", "sizing", "tasks", "total s", "MB/s", "hit%", "rf"
+    );
+    let mut eaglet_total_mb_s = 0.0;
+    for (w, samples) in [
+        (Workload::Eaglet, 120usize),
+        (Workload::NetflixHi, 300),
+        (Workload::NetflixLo, 300),
+    ] {
+        let ds = build_small(w, &manifest.params, samples);
+        for (sizing, name) in [
+            (TaskSizing::Kneepoint(knees[&w].min(256 * 1024)), "kneepoint"),
+            (TaskSizing::LargeSn { workers: 4 }, "large"),
+            (TaskSizing::Tiniest, "tiniest"),
+        ] {
+            let cfg = JobConfig {
+                sizing,
+                workers: 4,
+                data_nodes: 6,
+                latency: LatencyModel::lan(),
+                ..Default::default()
+            };
+            let r = run_job(ds.as_ref(), manifest.clone(), &cfg)?;
+            println!(
+                "  {:12} {:10} {:>7} {:>9.3} {:>9.2} {:>7.0}% {:>4}",
+                w.name(),
+                name,
+                r.report.tasks,
+                r.report.total_s,
+                r.report.throughput_mbs(),
+                r.report.prefetch_hit_rate * 100.0,
+                r.report.final_rf,
+            );
+            if w == Workload::Eaglet && name == "kneepoint" {
+                eaglet_total_mb_s = r.report.throughput_mbs();
+            }
+        }
+    }
+
+    println!("\n=== 3. monitoring overhead (§4.2.2) ===");
+    let ds = build_small(Workload::Eaglet, &manifest.params, 120);
+    let mut times = Vec::new();
+    for monitoring in [false, true] {
+        let cfg = JobConfig {
+            sizing: TaskSizing::Tiniest,
+            workers: 4,
+            monitoring,
+            ..Default::default()
+        };
+        let r = run_job(ds.as_ref(), manifest.clone(), &cfg)?;
+        println!(
+            "  monitoring={:5} total {:.3}s startup {:.3}s ({} records)",
+            monitoring, r.report.total_s, r.report.startup_s, r.monitor_records
+        );
+        times.push(r.report.total_s);
+    }
+    println!(
+        "  measured monitoring slowdown: {:+.1}% (paper: +21% startup on \
+         MB jobs, +15% runtime on GB jobs on its testbed)",
+        (times[1] / times[0] - 1.0) * 100.0
+    );
+
+    println!("\n=== 4. job-level recovery ===");
+    let clean = run_job(
+        ds.as_ref(),
+        manifest.clone(),
+        &JobConfig { sizing: TaskSizing::Tiniest, workers: 3, ..Default::default() },
+    )?;
+    let mut cfg = JobConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 3,
+        ..Default::default()
+    };
+    cfg.failure =
+        Some(FailurePlan { worker: 1, after_tasks: 2, on_attempt: 1 });
+    let recovered = run_with_recovery(ds.as_ref(), manifest.clone(), &cfg, 3)?;
+    println!(
+        "  worker 1 killed after 2 tasks → {} restart(s); result identical: {}",
+        recovered.report.restarts,
+        recovered.output == clean.output
+    );
+    assert_eq!(recovered.output, clean.output);
+
+    println!("\n=== 5. distributed mode (TCP leader + 2 workers) ===");
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let report = std::thread::scope(|sc| {
+        for w in 0..2u32 {
+            let addr = addr.clone();
+            let m = manifest.clone();
+            sc.spawn(move || run_worker(&addr, w, m).unwrap());
+        }
+        serve_job(
+            listener,
+            ds.as_ref(),
+            manifest.clone(),
+            TaskSizing::Kneepoint(knees[&Workload::Eaglet].min(256 * 1024)),
+            2,
+            0xB75,
+        )
+        .unwrap()
+    });
+    println!(
+        "  {} tasks over TCP in {:.3}s ({:.2} MB shipped); result matches \
+         in-process: {}",
+        report.tasks,
+        report.total_s,
+        report.bytes_shipped as f64 / 1048576.0,
+        {
+            let local = run_job(
+                ds.as_ref(),
+                manifest.clone(),
+                &JobConfig {
+                    sizing: TaskSizing::Kneepoint(
+                        knees[&Workload::Eaglet].min(256 * 1024),
+                    ),
+                    workers: 2,
+                    seed: 0xB75,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            report.output == local.output
+        }
+    );
+
+    println!("\n=== 6. headline ===");
+    println!(
+        "  EAGLET kneepoint throughput on 4 worker threads: {:.1} MB/s \
+         ({:.0} Mb/s)\n  (paper: 117 Mb/s per 12-core node on its legacy \
+         pipeline — our kernel is\n  ~80x lighter, so absolute Mb/s and the \
+         sizing margins are not directly\n  comparable at this scale; the \
+         paper-scale sizing ratios are carried by\n  the calibrated \
+         simulator: `bts repro --only fig4,fig8`)",
+        eaglet_total_mb_s,
+        eaglet_total_mb_s * 8.0
+    );
+    println!("\nall layers verified ✔");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Genetic-analysis scenario (the thesis's EAGLET workload, §4.1.1.1):
+//! profile the task-size → miss-rate curve offline, size tasks at the
+//! kneepoint, and compare the three BashReduce configurations on the
+//! real platform — with and without the study's outlier families.
+//!
+//!     make artifacts && cargo run --release --example genetic_analysis
+
+use std::sync::Arc;
+
+use bts::cachesim::CacheConfig;
+use bts::coordinator::{run_job, JobConfig};
+use bts::data::eaglet::{EagletConfig, EagletDataset};
+use bts::data::{Dataset, Workload};
+use bts::kneepoint::{kneepoint_bytes, TaskSizing};
+use bts::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load_default()?);
+
+    // Offline step (thesis Fig 3): find the kneepoint for this workload
+    // on the reference cache geometry.
+    let knee = kneepoint_bytes(Workload::Eaglet, &CacheConfig::sandy_bridge());
+    println!(
+        "offline kneepoint: {:.2} MB (thesis: 2.5 MB on Sandy Bridge)\n",
+        knee as f64 / (1024.0 * 1024.0)
+    );
+
+    let full = EagletDataset::generate(
+        &manifest.params,
+        EagletConfig { families: 200, ..Default::default() },
+    );
+    let clean = full.without_outliers();
+
+    // Warm the executor pool (compile every bucket once) so the table
+    // measures steady-state platform behaviour, not first-touch compile.
+    let _ = run_job(
+        &full,
+        manifest.clone(),
+        &JobConfig { sizing: TaskSizing::Tiniest, workers: 4, ..Default::default() },
+    )?;
+
+    println!(
+        "{:14} {:12} {:>8} {:>9} {:>10} {:>9}",
+        "dataset", "sizing", "tasks", "total s", "MB/s", "hit rate"
+    );
+    for (ds, tag) in [(&full, "with outliers"), (&clean, "no outliers")] {
+        for (sizing, name) in [
+            (TaskSizing::Kneepoint(knee.min(256 * 1024)), "kneepoint"),
+            (TaskSizing::LargeSn { workers: 4 }, "large(Sn)"),
+            (TaskSizing::Tiniest, "tiniest"),
+        ] {
+            let cfg = JobConfig { sizing, workers: 4, ..Default::default() };
+            let r = run_job(ds, manifest.clone(), &cfg)?;
+            println!(
+                "{tag:14} {name:12} {:>8} {:>9.3} {:>10.2} {:>8.0}%",
+                r.report.tasks,
+                r.report.total_s,
+                r.report.throughput_mbs(),
+                r.report.prefetch_hit_rate * 100.0,
+            );
+        }
+    }
+    println!(
+        "\n(total MB here is the synthetic stand-in's size — the paper's \
+         ratios\ncome from the simulated testbed; see `bts repro --only \
+         fig4,fig8`)"
+    );
+    let _ = full.total_bytes();
+    Ok(())
+}

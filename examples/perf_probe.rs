@@ -1,0 +1,30 @@
+//! Perf probe (§Perf in EXPERIMENTS.md): steady-state job timing
+//! breakdown for a tiny-task and a kneepoint job on the real engine.
+
+use std::sync::Arc;
+use bts::coordinator::{run_job, JobConfig};
+use bts::kneepoint::TaskSizing;
+use bts::runtime::Manifest;
+use bts::workloads::build_small;
+use bts::data::Workload;
+fn main() {
+    let m = Arc::new(Manifest::load_default().unwrap());
+    for (w, n) in [(Workload::Eaglet, 400usize), (Workload::NetflixLo, 2000)] {
+        for (sizing, name) in [
+            (TaskSizing::Tiniest, "tiniest"),
+            (TaskSizing::Kneepoint(256 * 1024), "knee256k"),
+        ] {
+            let cfg = JobConfig { sizing, workers: 4, ..Default::default() };
+            let ds = build_small(w, &m.params, n);
+            let _warm = run_job(ds.as_ref(), m.clone(), &cfg).unwrap();
+            let t = std::time::Instant::now();
+            let r = run_job(ds.as_ref(), m.clone(), &cfg).unwrap();
+            let wall = t.elapsed().as_secs_f64();
+            println!(
+                "{:11} {:9} wall {:.3}s | startup {:.3} map {:.3} reduce {:.3} | tasks {} exec p50 {:.2}ms p95 {:.2}ms | fetch p50 {:.3}ms | tput {:.2} MB/s",
+                w.name(), name, wall, r.report.startup_s, r.report.map_s, r.report.reduce_s,
+                r.report.tasks, r.report.task_exec.p50*1e3, r.report.task_exec.p95*1e3,
+                r.report.task_fetch.p50*1e3, r.report.throughput_mbs());
+        }
+    }
+}

@@ -1,0 +1,176 @@
+"""AOT: lower every L2 entry point to HLO *text* + a manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one per entry point x bucket):
+    artifacts/<name>.hlo.txt
+    artifacts/manifest.json   — shapes, dtypes, buckets, model params
+
+The Makefile makes this a no-op when inputs are unchanged; additionally we
+skip rewrites when content is identical so artifact mtimes stay stable.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points():
+    """Yield (name, kind, bucket, fn, arg_specs, input_names, output_names)."""
+    s = shapes
+    for b in s.BUCKETS:
+        yield (
+            f"eaglet_map_b{b}",
+            "eaglet_map",
+            b,
+            model.eaglet_map,
+            [
+                spec((b, s.MARKERS, s.INDIVIDUALS)),
+                spec((b, s.MARKERS)),
+                spec((s.ROUNDS, s.SUBSAMPLE), I32),
+                spec((s.GRID,)),
+            ],
+            ["geno", "pos", "idx", "grid"],
+            ["alod"],
+        )
+        for conf, sub in (("hi", s.S_HI), ("lo", s.S_LO)):
+            yield (
+                f"netflix_map_{conf}_b{b}",
+                f"netflix_map_{conf}",
+                b,
+                model.netflix_map,
+                [
+                    spec((b, s.RATINGS_CAP)),
+                    spec((b, s.RATINGS_CAP)),
+                    spec((b, s.RATINGS_CAP)),
+                    spec((sub,), I32),
+                ],
+                ["vals", "months", "mask", "idx"],
+                ["stats"],
+            )
+    yield (
+        "eaglet_reduce",
+        "eaglet_reduce",
+        s.REDUCE_FAN,
+        model.eaglet_reduce,
+        [spec((s.REDUCE_FAN, s.GRID)), spec((s.REDUCE_FAN,))],
+        ["parts", "weights"],
+        ["wsum", "wtot"],
+    )
+    yield (
+        "netflix_reduce",
+        "netflix_reduce",
+        s.REDUCE_FAN,
+        model.netflix_reduce,
+        [spec((s.REDUCE_FAN, s.MONTHS, s.STAT_FIELDS))],
+        ["parts"],
+        ["stats"],
+    )
+
+
+def params_block():
+    s = shapes
+    return {
+        "markers": s.MARKERS,
+        "individuals": s.INDIVIDUALS,
+        "subsample": s.SUBSAMPLE,
+        "rounds": s.ROUNDS,
+        "grid": s.GRID,
+        "bandwidth": s.BANDWIDTH,
+        "ratings_cap": s.RATINGS_CAP,
+        "months": s.MONTHS,
+        "s_hi": s.S_HI,
+        "s_lo": s.S_LO,
+        "stat_fields": s.STAT_FIELDS,
+        "buckets": list(s.BUCKETS),
+        "reduce_fan": s.REDUCE_FAN,
+        "chunk_bytes": s.CHUNK_BYTES,
+    }
+
+
+def write_if_changed(path: str, text: str) -> bool:
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "params": params_block(), "entries": []}
+    for name, kind, bucket, fn, arg_specs, in_names, out_names in entry_points():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        changed = write_if_changed(os.path.join(args.out_dir, fname), text)
+        out_shapes = [
+            {"shape": list(o.shape), "dtype": str(o.dtype)}
+            for o in lowered.out_info
+        ]
+        manifest["entries"].append(
+            {
+                "name": name,
+                "kind": kind,
+                "bucket": bucket,
+                "file": fname,
+                "inputs": [
+                    {
+                        "name": n,
+                        "shape": list(a.shape),
+                        "dtype": str(a.dtype),
+                    }
+                    for n, a in zip(in_names, arg_specs)
+                ],
+                "outputs": [
+                    {"name": n, **o} for n, o in zip(out_names, out_shapes)
+                ],
+            }
+        )
+        print(f"{'wrote' if changed else 'kept '} {fname} ({len(text)} chars)")
+
+    write_if_changed(
+        os.path.join(args.out_dir, "manifest.json"),
+        json.dumps(manifest, indent=2) + "\n",
+    )
+    print(f"manifest: {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- lod_grid:      EAGLET ALOD grid statistic (subsampled-marker scoring)
+- rating_stats:  Netflix per-month rating accumulators
+- ref:           pure-jnp oracles for both (the pytest ground truth)
+"""
+
+from .lod_grid import lod_grid
+from .rating_stats import rating_stats
+
+__all__ = ["lod_grid", "rating_stats"]

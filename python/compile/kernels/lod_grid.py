@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: ALOD-style grid statistic for EAGLET map tasks.
+
+The compute hot-spot of the EAGLET workload: for a block of B family
+chunks, score every subsampled marker and spread the scores onto a common
+LOD grid with a tricube position weight.  The grid reduction is expressed
+as a score x weight contraction so the non-interpret (TPU) lowering lands
+on the MXU; the per-program working set  (bB*S*I + bB*S*G + bB*G) * 4 B
+is a few KB — far under VMEM — so the BlockSpec tiles only the batch
+dimension (see DESIGN.md §3 Hardware adaptation).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and the AOT HLO must execute on the rust CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+# Batch tile: one program instance handles BLOCK_B chunks.  Chosen so the
+# tile divides every compiled bucket (1, 4, 16, 64).
+BLOCK_B = 4
+
+
+def _lod_grid_kernel(geno_ref, pos_ref, grid_ref, out_ref):
+    geno = geno_ref[...]                               # [bB, S, I]
+    pos = pos_ref[...]                                 # [bB, S]
+    grid = grid_ref[...]                               # [G]
+
+    # Per-marker linkage score: information-like m^2 / (var + eps).
+    # Centered variance — the naive E[x^2]-m^2 form cancels catastrophically
+    # for low-variance markers and diverges from the oracle.
+    m = jnp.mean(geno, axis=-1)                        # [bB, S]
+    d = geno - m[..., None]
+    v = jnp.mean(d * d, axis=-1)
+    score = (m * m) / (v + shapes.SCORE_EPS)
+
+    # Tricube weights of each marker onto each grid point.
+    u = jnp.abs(pos[:, :, None] - grid[None, None, :]) / shapes.BANDWIDTH
+    w = jnp.where(u < 1.0, (1.0 - u**3) ** 3, 0.0)     # [bB, S, G]
+
+    # Weighted average onto the grid (contraction over S -> MXU-shaped).
+    num = jnp.einsum(
+        "bs,bsg->bg", score, w, preferred_element_type=jnp.float32
+    )
+    den = jnp.sum(w, axis=1) + shapes.WEIGHT_EPS
+    out_ref[...] = num / den
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lod_grid(geno, pos, grid):
+    """Pallas entry point; same contract as ref.lod_grid_ref.
+
+    geno [B,S,I] f32, pos [B,S] f32, grid [G] f32 -> [B,G] f32.
+    B must be a multiple of BLOCK_B (or < BLOCK_B, handled by a 1-wide tile).
+    """
+    b, s, i = geno.shape
+    (g,) = grid.shape
+    blk = BLOCK_B if b % BLOCK_B == 0 else 1
+    return pl.pallas_call(
+        _lod_grid_kernel,
+        grid=(b // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, s, i), lambda n: (n, 0, 0)),
+            pl.BlockSpec((blk, s), lambda n: (n, 0)),
+            pl.BlockSpec((g,), lambda n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, g), lambda n: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g), jnp.float32),
+        interpret=True,
+    )(geno, pos, grid)

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: per-month rating accumulators for Netflix map tasks.
+
+For a block of B movie samples with S subsampled ratings each, accumulate
+(sum, sumsq, count) per calendar month.  The month scatter is expressed as
+a one-hot contraction ([B,S] x [B,S,12]) so the TPU lowering is a batched
+matmul rather than a serial scatter; working set per program is
+(3*bB*S + bB*S*12) * 4 B — trivially VMEM-resident.
+
+interpret=True for CPU PJRT execution (see lod_grid.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+BLOCK_B = 4  # must divide every bucket in shapes.BUCKETS (or fall back to 1)
+
+
+def _rating_stats_kernel(vals_ref, months_ref, mask_ref, out_ref):
+    vals = vals_ref[...]                               # [bB, S]
+    months = months_ref[...]                           # [bB, S]
+    mask = mask_ref[...]                               # [bB, S]
+
+    mo = jax.lax.broadcasted_iota(jnp.float32, (shapes.MONTHS,), 0)
+    onehot = jnp.where(
+        jnp.abs(months[:, :, None] - mo[None, None, :]) < 0.5, 1.0, 0.0
+    ) * mask[:, :, None]                               # [bB, S, 12]
+
+    s = jnp.einsum(
+        "bs,bsm->bm", vals, onehot, preferred_element_type=jnp.float32
+    )
+    ss = jnp.einsum(
+        "bs,bsm->bm", vals * vals, onehot, preferred_element_type=jnp.float32
+    )
+    c = jnp.sum(onehot, axis=1)
+    out_ref[...] = jnp.stack([s, ss, c], axis=-1)      # [bB, 12, 3]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rating_stats(vals, months, mask):
+    """Pallas entry point; same contract as ref.rating_stats_ref.
+
+    vals/months/mask [B,S] f32 -> [B, 12, 3] f32 (sum, sumsq, count).
+    """
+    b, s = vals.shape
+    blk = BLOCK_B if b % BLOCK_B == 0 else 1
+    return pl.pallas_call(
+        _rating_stats_kernel,
+        grid=(b // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, s), lambda n: (n, 0)),
+            pl.BlockSpec((blk, s), lambda n: (n, 0)),
+            pl.BlockSpec((blk, s), lambda n: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (blk, shapes.MONTHS, shapes.STAT_FIELDS), lambda n: (n, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, shapes.MONTHS, shapes.STAT_FIELDS), jnp.float32
+        ),
+        interpret=True,
+    )(vals, months, mask)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `pytest python/tests` sweeps the
+Pallas kernels (interpret=True) against these with hypothesis-generated
+shapes/seeds and `assert_allclose`.  They are also what the L2 model would
+compute if L1 were absent, so they double as the "pure-jnp reference
+roofline" for the §Perf comparison.
+"""
+
+import jax.numpy as jnp
+
+from .. import shapes
+
+
+def lod_grid_ref(geno, pos, grid):
+    """ALOD-style grid statistic over one subsample round.
+
+    geno: [B, S, I] f32 genotype scores of the subsampled markers
+    pos:  [B, S]    f32 genomic positions in [0, 1)
+    grid: [G]       f32 common grid positions
+    returns [B, G] f32: tricube position-weighted average of the per-marker
+    linkage score  m^2 / (v + eps)  (information-like statistic).
+    """
+    m = jnp.mean(geno, axis=-1)                       # [B, S]
+    d = geno - m[..., None]
+    v = jnp.mean(d * d, axis=-1)                      # [B, S] centered (stable)
+    score = (m * m) / (v + shapes.SCORE_EPS)          # [B, S]
+    u = jnp.abs(pos[:, :, None] - grid[None, None, :]) / shapes.BANDWIDTH
+    w = jnp.where(u < 1.0, (1.0 - u**3) ** 3, 0.0)    # [B, S, G] tricube
+    num = jnp.einsum("bs,bsg->bg", score, w)
+    den = jnp.sum(w, axis=1) + shapes.WEIGHT_EPS
+    return num / den
+
+
+def rating_stats_ref(vals, months, mask):
+    """Per-month rating accumulators over one subsampled batch.
+
+    vals:   [B, S] f32 rating values
+    months: [B, S] f32 month index in [0, 12) (integral values)
+    mask:   [B, S] f32 1.0 = valid rating, 0.0 = padding
+    returns [B, 12, 3] f32: (sum, sumsq, count) per month.
+    """
+    mo = jnp.arange(shapes.MONTHS, dtype=vals.dtype)
+    onehot = jnp.where(
+        jnp.abs(months[:, :, None] - mo[None, None, :]) < 0.5, 1.0, 0.0
+    ) * mask[:, :, None]                              # [B, S, 12]
+    s = jnp.einsum("bs,bsm->bm", vals, onehot)
+    ss = jnp.einsum("bs,bsm->bm", vals * vals, onehot)
+    c = jnp.sum(onehot, axis=1)
+    return jnp.stack([s, ss, c], axis=-1)             # [B, 12, 3]

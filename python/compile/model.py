@@ -1,0 +1,100 @@
+"""L2: jax map/reduce compute graphs for both subsampling workloads.
+
+Each function here is an AOT entry point (lowered by aot.py at the bucket
+shapes in shapes.py).  The subsample *gather* lives at this layer —
+subsampling decides its indices at runtime, so the L3 coordinator ships the
+round indices with every task — while the dense hot-spot is delegated to
+the L1 Pallas kernels so both lower into one HLO module.
+
+All entry points return tuples (lowered with return_tuple=True; the rust
+side unwraps with to_tupleN).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import shapes
+from .kernels import lod_grid, rating_stats
+
+
+# --- EAGLET ------------------------------------------------------------------
+
+def eaglet_map(geno, pos, idx, grid):
+    """One map task: ALOD over ROUNDS subsample rounds for B family chunks.
+
+    geno: [B, M, I] f32   genotype scores for all markers of each chunk
+    pos:  [B, M]    f32   genomic positions of all markers
+    idx:  [R, S]    i32   subsample-round marker indices (chosen by L3)
+    grid: [G]       f32   common LOD grid
+    returns ([B, G] f32,) — per-chunk ALOD (mean LOD over rounds).
+    """
+
+    def one_round(ix):
+        g = jnp.take(geno, ix, axis=1)    # [B, S, I]
+        p = jnp.take(pos, ix, axis=1)     # [B, S]
+        return lod_grid(g, p, grid)       # [B, G]
+
+    lods = lax.map(one_round, idx)        # [R, B, G]
+    return (jnp.mean(lods, axis=0),)
+
+
+def eaglet_reduce(parts, weights):
+    """Associative combine of K per-task ALOD grids.
+
+    parts:   [K, G] f32 partial ALODs (zero-padded rows allowed)
+    weights: [K]    f32 chunk weights (0.0 for padding)
+    returns ([G] f32 weighted sum, [1] f32 weight total) — the final
+    division happens after the L3 reduce tree bottoms out.
+    """
+    wsum = jnp.einsum("kg,k->g", parts, weights)
+    wtot = jnp.sum(weights)[None]
+    return (wsum, wtot)
+
+
+# --- Netflix -----------------------------------------------------------------
+
+def netflix_map(vals, months, mask, idx):
+    """One map task: per-month stats over a subsample of each movie's ratings.
+
+    vals/months/mask: [B, N] f32 padded rating tuples for B movies
+    idx:              [S]    i32 subsample positions (shared across movies;
+                      L3 draws fresh indices per task)
+    returns ([B, 12, 3] f32,) — per-movie (sum, sumsq, count) by month.
+    """
+    v = jnp.take(vals, idx, axis=1)       # [B, S]
+    m = jnp.take(months, idx, axis=1)
+    k = jnp.take(mask, idx, axis=1)
+    return (rating_stats(v, m, k),)
+
+
+def netflix_reduce(parts):
+    """Associative combine of K per-task stat tensors.
+
+    parts: [K, 12, 3] f32 -> ([12, 3] f32,).  Sums are associative, so the
+    L3 reduce tree applies this repeatedly; mean/CI finalization is scalar
+    math done by the reporter.
+    """
+    return (jnp.sum(parts, axis=0),)
+
+
+# --- Pure-jnp references for whole entry points (used by tests) ---------------
+
+def eaglet_map_ref(geno, pos, idx, grid):
+    from .kernels import ref
+
+    def one_round(ix):
+        g = jnp.take(geno, ix, axis=1)
+        p = jnp.take(pos, ix, axis=1)
+        return ref.lod_grid_ref(g, p, grid)
+
+    lods = lax.map(one_round, idx)
+    return (jnp.mean(lods, axis=0),)
+
+
+def netflix_map_ref(vals, months, mask, idx):
+    from .kernels import ref
+
+    v = jnp.take(vals, idx, axis=1)
+    m = jnp.take(months, idx, axis=1)
+    k = jnp.take(mask, idx, axis=1)
+    return (ref.rating_stats_ref(v, m, k),)

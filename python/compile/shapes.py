@@ -1,0 +1,52 @@
+"""Canonical shapes shared by L1 kernels, L2 models, AOT lowering and tests.
+
+These are the *compiled* (bucketed) shapes: HLO artifacts are shape-static,
+so the rust runtime pads each task to the next bucket and masks via reduce
+weights.  The same constants are exported into artifacts/manifest.json so
+the rust side never hardcodes them.
+
+EAGLET data model (synthetic stand-in for family SNP linkage data, see
+DESIGN.md §2): a family is one or more fixed-size *chunks* of
+[MARKERS x INDIVIDUALS] genotype scores plus per-marker genomic positions
+in [0, 1).  Outlier families simply span many chunks (the paper: one 15x
+and one 7x sample).  A map task is a batch of B chunks; each subsample
+round picks SUBSAMPLE of the MARKERS, and the ALOD statistic is averaged
+over ROUNDS rounds on a common GRID.
+
+Netflix data model: a movie sample is up to RATINGS_CAP rating tuples
+(value, month, valid-mask); a map task subsamples S_HI (high-confidence)
+or S_LO (low-confidence) ratings per movie and accumulates per-month
+(sum, sumsq, count).
+"""
+
+# --- EAGLET -----------------------------------------------------------------
+MARKERS = 64          # M: SNP markers per chunk
+INDIVIDUALS = 8       # I: individuals per chunk
+SUBSAMPLE = 16        # S: markers drawn per subsample round
+ROUNDS = 8            # R: subsample rounds averaged into the ALOD
+GRID = 32             # G: common LOD grid positions
+BANDWIDTH = 0.15      # tricube kernel bandwidth on [0,1) positions
+SCORE_EPS = 1e-3      # variance floor in the per-marker linkage score
+WEIGHT_EPS = 1e-6     # denominator floor in the grid-weighted average
+
+# --- Netflix ----------------------------------------------------------------
+RATINGS_CAP = 256     # N: padded ratings per movie sample
+MONTHS = 12
+S_HI = 128            # high-confidence subsample size
+S_LO = 16             # low-confidence subsample size
+STAT_FIELDS = 3       # (sum, sumsq, count)
+
+# --- Bucketing / reduce ------------------------------------------------------
+BUCKETS = (1, 4, 16, 64)   # samples(-chunks) per compiled map task
+REDUCE_FAN = 16            # K: parts combined per reduce artifact call
+
+# Bytes per EAGLET chunk as stored in the data layer (geno f32 + pos f32).
+CHUNK_BYTES = MARKERS * INDIVIDUALS * 4 + MARKERS * 4
+
+
+def bucket_for(n: int) -> int:
+    """Smallest compiled bucket >= n (callers split tasks larger than max)."""
+    for b in BUCKETS:
+        if n <= b:
+            return b
+    raise ValueError(f"task of {n} chunks exceeds largest bucket {BUCKETS[-1]}")

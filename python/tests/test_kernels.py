@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and seeds; every case asserts allclose against
+ref.py.  This is the CORE correctness signal for the compute layer — the
+AOT artifacts embed exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import shapes
+from compile.kernels import lod_grid, rating_stats, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 1e-4
+ATOL = 1e-5
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+def _eaglet_inputs(seed, b, s, i, g):
+    k1, k2 = jax.random.split(_key(seed))
+    geno = jax.random.normal(k1, (b, s, i), dtype=jnp.float32)
+    pos = jax.random.uniform(k2, (b, s), dtype=jnp.float32)
+    grid = jnp.linspace(0.0, 1.0, g, dtype=jnp.float32)
+    return geno, pos, grid
+
+
+def _netflix_inputs(seed, b, s):
+    k1, k2, k3 = jax.random.split(_key(seed), 3)
+    vals = jax.random.uniform(k1, (b, s), dtype=jnp.float32) * 4.0 + 1.0
+    months = jnp.floor(jax.random.uniform(k2, (b, s)) * shapes.MONTHS)
+    mask = (jax.random.uniform(k3, (b, s)) > 0.25).astype(jnp.float32)
+    return vals, months.astype(jnp.float32), mask
+
+
+class TestLodGrid:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.sampled_from([1, 2, 4, 8, 16]),
+        s=st.sampled_from([4, 16, 32]),
+        i=st.sampled_from([2, 8]),
+        g=st.sampled_from([8, 32]),
+    )
+    def test_matches_ref(self, seed, b, s, i, g):
+        geno, pos, grid = _eaglet_inputs(seed, b, s, i, g)
+        got = lod_grid(geno, pos, grid)
+        want = ref.lod_grid_ref(geno, pos, grid)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_canonical_shapes(self):
+        geno, pos, grid = _eaglet_inputs(
+            0, 4, shapes.SUBSAMPLE, shapes.INDIVIDUALS, shapes.GRID
+        )
+        out = lod_grid(geno, pos, grid)
+        assert out.shape == (4, shapes.GRID)
+        assert out.dtype == jnp.float32
+
+    def test_constant_geno_zero_variance_is_finite(self):
+        # m^2/(v+eps) must not blow up when every individual agrees.
+        geno = jnp.ones((4, 8, 4), dtype=jnp.float32) * 2.0
+        pos = jnp.linspace(0.1, 0.9, 8)[None, :].repeat(4, axis=0)
+        grid = jnp.linspace(0.0, 1.0, 16, dtype=jnp.float32)
+        out = lod_grid(geno, pos, grid)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        want = ref.lod_grid_ref(geno, pos, grid)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_far_markers_contribute_nothing(self):
+        # markers clustered at 0.0 leave grid points > bandwidth untouched.
+        geno = jax.random.normal(_key(3), (1, 8, 4), dtype=jnp.float32)
+        pos = jnp.zeros((1, 8), dtype=jnp.float32)
+        grid = jnp.array([0.0, 0.9], dtype=jnp.float32)
+        out = np.asarray(lod_grid(geno, pos, grid))
+        assert abs(out[0, 1]) < 1e-4  # tricube support exceeded
+        assert abs(out[0, 0]) > 0.0
+
+    def test_batch_tiling_invariance(self):
+        # B=8 (tiled BLOCK_B=4) must equal two stacked B=4 calls.
+        geno, pos, grid = _eaglet_inputs(7, 8, 16, 4, 16)
+        whole = lod_grid(geno, pos, grid)
+        halves = jnp.concatenate(
+            [
+                lod_grid(geno[:4], pos[:4], grid),
+                lod_grid(geno[4:], pos[4:], grid),
+            ]
+        )
+        np.testing.assert_allclose(whole, halves, rtol=RTOL, atol=ATOL)
+
+
+class TestRatingStats:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.sampled_from([1, 2, 4, 8, 16]),
+        s=st.sampled_from([4, 16, 128]),
+    )
+    def test_matches_ref(self, seed, b, s):
+        vals, months, mask = _netflix_inputs(seed, b, s)
+        got = rating_stats(vals, months, mask)
+        want = ref.rating_stats_ref(vals, months, mask)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_counts_partition_the_mask(self):
+        vals, months, mask = _netflix_inputs(11, 8, 64)
+        out = np.asarray(rating_stats(vals, months, mask))
+        np.testing.assert_allclose(
+            out[:, :, 2].sum(axis=1), np.asarray(mask).sum(axis=1), rtol=1e-6
+        )
+
+    def test_masked_out_rows_are_zero(self):
+        vals, months, _ = _netflix_inputs(13, 4, 32)
+        out = np.asarray(rating_stats(vals, months, jnp.zeros_like(vals)))
+        np.testing.assert_array_equal(out, np.zeros_like(out))
+
+    def test_single_month_accumulates_all(self):
+        b, s = 2, 16
+        vals = jnp.ones((b, s), dtype=jnp.float32) * 3.0
+        months = jnp.full((b, s), 5.0, dtype=jnp.float32)
+        mask = jnp.ones((b, s), dtype=jnp.float32)
+        out = np.asarray(rating_stats(vals, months, mask))
+        np.testing.assert_allclose(out[:, 5, 0], 48.0)  # 16 * 3
+        np.testing.assert_allclose(out[:, 5, 1], 144.0)  # 16 * 9
+        np.testing.assert_allclose(out[:, 5, 2], 16.0)
+        other = np.delete(out, 5, axis=1)
+        np.testing.assert_array_equal(other, np.zeros_like(other))
+
+    @pytest.mark.parametrize("b", [1, 4, 16])
+    def test_bucket_shapes(self, b):
+        vals, months, mask = _netflix_inputs(17, b, shapes.S_LO)
+        out = rating_stats(vals, months, mask)
+        assert out.shape == (b, shapes.MONTHS, shapes.STAT_FIELDS)

@@ -1,0 +1,146 @@
+"""L2 correctness: full map/reduce entry points vs pure-jnp references,
+plus algebraic invariants the L3 reduce tree relies on (associativity,
+padding-neutrality)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model, shapes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _eaglet_task(seed, b):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    geno = jax.random.normal(
+        k[0], (b, shapes.MARKERS, shapes.INDIVIDUALS), dtype=jnp.float32
+    )
+    pos = jnp.sort(
+        jax.random.uniform(k[1], (b, shapes.MARKERS), dtype=jnp.float32),
+        axis=1,
+    )
+    idx = jax.random.randint(
+        k[2], (shapes.ROUNDS, shapes.SUBSAMPLE), 0, shapes.MARKERS
+    ).astype(jnp.int32)
+    grid = jnp.linspace(0.0, 1.0, shapes.GRID, dtype=jnp.float32)
+    return geno, pos, idx, grid
+
+
+def _netflix_task(seed, b, s):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    vals = jax.random.uniform(k[0], (b, shapes.RATINGS_CAP)) * 4.0 + 1.0
+    months = jnp.floor(jax.random.uniform(k[1], (b, shapes.RATINGS_CAP)) * 12)
+    mask = (jax.random.uniform(k[2], (b, shapes.RATINGS_CAP)) > 0.3).astype(
+        jnp.float32
+    )
+    idx = jax.random.randint(k[3], (s,), 0, shapes.RATINGS_CAP).astype(
+        jnp.int32
+    )
+    return vals.astype(jnp.float32), months.astype(jnp.float32), mask, idx
+
+
+class TestEagletMap:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 1000), b=st.sampled_from([1, 4]))
+    def test_matches_ref(self, seed, b):
+        geno, pos, idx, grid = _eaglet_task(seed, b)
+        (got,) = model.eaglet_map(geno, pos, idx, grid)
+        (want,) = model.eaglet_map_ref(geno, pos, idx, grid)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_bucket_shapes(self):
+        for b in shapes.BUCKETS[:3]:
+            geno, pos, idx, grid = _eaglet_task(1, b)
+            (alod,) = model.eaglet_map(geno, pos, idx, grid)
+            assert alod.shape == (b, shapes.GRID)
+
+    def test_alod_is_round_mean(self):
+        geno, pos, idx, grid = _eaglet_task(5, 4)
+        # one-round idx repeated R times == single-round result
+        idx_rep = jnp.tile(idx[:1], (shapes.ROUNDS, 1))
+        (alod,) = model.eaglet_map(geno, pos, idx_rep, grid)
+        (one,) = model.eaglet_map(geno, pos, idx_rep[:1].repeat(shapes.ROUNDS, 0), grid)
+        np.testing.assert_allclose(alod, one, rtol=1e-6)
+
+
+class TestEagletReduce:
+    def test_weighted_combine(self):
+        parts = jnp.arange(
+            shapes.REDUCE_FAN * shapes.GRID, dtype=jnp.float32
+        ).reshape(shapes.REDUCE_FAN, shapes.GRID)
+        w = jnp.ones((shapes.REDUCE_FAN,), dtype=jnp.float32)
+        wsum, wtot = model.eaglet_reduce(parts, w)
+        np.testing.assert_allclose(wsum, parts.sum(axis=0), rtol=1e-6)
+        assert float(wtot[0]) == shapes.REDUCE_FAN
+
+    def test_zero_weight_padding_is_neutral(self):
+        k = jax.random.PRNGKey(0)
+        parts = jax.random.normal(k, (shapes.REDUCE_FAN, shapes.GRID))
+        w = jnp.zeros((shapes.REDUCE_FAN,)).at[:3].set(2.0)
+        wsum, wtot = model.eaglet_reduce(parts, w)
+        np.testing.assert_allclose(
+            wsum, 2.0 * parts[:3].sum(axis=0), rtol=1e-5, atol=1e-5
+        )
+        assert float(wtot[0]) == 6.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_tree_associativity(self, seed):
+        # combining in two levels equals one flat weighted sum
+        k = jax.random.split(jax.random.PRNGKey(seed), 2)
+        parts = jax.random.normal(k[0], (shapes.REDUCE_FAN, shapes.GRID))
+        w = jax.random.uniform(k[1], (shapes.REDUCE_FAN,))
+        wsum, wtot = model.eaglet_reduce(parts, w)
+        # level 2: feed (wsum, wtot) back as a weighted part of itself
+        parts2 = jnp.zeros_like(parts).at[0].set(wsum / wtot[0])
+        w2 = jnp.zeros_like(w).at[0].set(wtot[0])
+        wsum2, wtot2 = model.eaglet_reduce(parts2, w2)
+        np.testing.assert_allclose(wsum2, wsum, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(wtot2, wtot, rtol=1e-6)
+
+
+class TestNetflixMap:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 1000),
+        b=st.sampled_from([1, 4]),
+        s=st.sampled_from([shapes.S_LO, shapes.S_HI]),
+    )
+    def test_matches_ref(self, seed, b, s):
+        vals, months, mask, idx = _netflix_task(seed, b, s)
+        (got,) = model.netflix_map(vals, months, mask, idx)
+        (want,) = model.netflix_map_ref(vals, months, mask, idx)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_count_bounded_by_subsample(self):
+        vals, months, mask, idx = _netflix_task(3, 4, shapes.S_LO)
+        (stats,) = model.netflix_map(vals, months, mask, idx)
+        counts = np.asarray(stats)[:, :, 2].sum(axis=1)
+        assert (counts <= shapes.S_LO).all()
+
+
+class TestNetflixReduce:
+    def test_sum_combine(self):
+        parts = jnp.ones(
+            (shapes.REDUCE_FAN, shapes.MONTHS, shapes.STAT_FIELDS)
+        )
+        (out,) = model.netflix_reduce(parts)
+        np.testing.assert_allclose(out, shapes.REDUCE_FAN)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_associative(self, seed):
+        k = jax.random.PRNGKey(seed)
+        parts = jax.random.normal(
+            k, (shapes.REDUCE_FAN, shapes.MONTHS, shapes.STAT_FIELDS)
+        )
+        (whole,) = model.netflix_reduce(parts)
+        (a,) = model.netflix_reduce(
+            jnp.concatenate([parts[:8], jnp.zeros_like(parts[:8])])
+        )
+        (b,) = model.netflix_reduce(
+            jnp.concatenate([parts[8:], jnp.zeros_like(parts[8:])])
+        )
+        np.testing.assert_allclose(a + b, whole, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,123 @@
+//! Ablation benches (DESIGN.md §8): each of the platform's design
+//! choices switched off in isolation, on the REAL engine, to show what
+//! it buys. Complements the paper-figure benches, which compare whole
+//! platforms.
+//!
+//!   * two-step scheduler vs one-task-at-a-time dispatch (lead_s=0,
+//!     batch=1, no stealing) — the thesis's "a few milliseconds wait
+//!     time on a millisecond job would be significantly higher"
+//!   * prefetching on vs off (k=1) under LAN latency
+//!   * adaptive replication vs fixed rf=1 under LAN latency
+//!   * work stealing on vs off with an imbalance-inducing task mix
+
+use std::sync::Arc;
+
+use bts::coordinator::{run_job, JobConfig};
+use bts::data::Workload;
+use bts::dfs::LatencyModel;
+use bts::kneepoint::TaskSizing;
+use bts::runtime::Manifest;
+use bts::scheduler::SchedConfig;
+use bts::util::bench::Bench;
+use bts::workloads::build_small;
+
+fn main() {
+    let Ok(m) = Manifest::load("artifacts") else {
+        eprintln!("skipping ablations: run `make artifacts`");
+        return;
+    };
+    let m = Arc::new(m);
+    let mut b = Bench::new("ablations").with_iters(1, 5);
+
+    let ds = build_small(Workload::Eaglet, &m.params, 200);
+    let nf = build_small(Workload::NetflixLo, &m.params, 1000);
+
+    // --- scheduler: two-step vs single-dispatch ------------------------
+    let two_step = JobConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 4,
+        ..Default::default()
+    };
+    let single = JobConfig {
+        sched: SchedConfig {
+            lead_s: 0.0,
+            max_batch: 1,
+            max_queue: 2,
+            steal: false,
+            ..Default::default()
+        },
+        ..two_step.clone()
+    };
+    let mut t = 0.0;
+    b.measure("sched_two_step", || {
+        t = run_job(ds.as_ref(), m.clone(), &two_step).unwrap().report.total_s;
+    });
+    b.record("sched_two_step_total", t, "s");
+    b.measure("sched_single_dispatch", || {
+        t = run_job(ds.as_ref(), m.clone(), &single).unwrap().report.total_s;
+    });
+    b.record("sched_single_dispatch_total", t, "s");
+
+    // --- prefetch: k=8 vs k=1 under LAN latency ------------------------
+    for (k, name) in [(8usize, "prefetch_k8"), (1, "prefetch_off")] {
+        let cfg = JobConfig {
+            sizing: TaskSizing::Tiniest,
+            workers: 2,
+            latency: LatencyModel::lan(),
+            prefetch_k: k,
+            ..Default::default()
+        };
+        let mut hit = 0.0;
+        b.measure(name, || {
+            let r = run_job(nf.as_ref(), m.clone(), &cfg).unwrap();
+            t = r.report.total_s;
+            hit = r.report.prefetch_hit_rate;
+        });
+        b.record(&format!("{name}_total"), t, "s");
+        b.record(&format!("{name}_hit_rate"), hit, "frac");
+    }
+
+    // --- replication: adaptive vs pinned rf=1 under LAN ----------------
+    for (adaptive, name) in [(true, "rf_adaptive"), (false, "rf_fixed1")] {
+        let mut cfg = JobConfig {
+            sizing: TaskSizing::Tiniest,
+            workers: 4,
+            data_nodes: 8,
+            latency: LatencyModel::lan(),
+            adaptive_rf: adaptive,
+            ..Default::default()
+        };
+        if !adaptive {
+            cfg.replication.min_rf = 1;
+            cfg.replication.max_rf = 1;
+        }
+        let mut rf = 0usize;
+        b.measure(name, || {
+            let r = run_job(nf.as_ref(), m.clone(), &cfg).unwrap();
+            t = r.report.total_s;
+            rf = r.report.final_rf;
+        });
+        b.record(&format!("{name}_total"), t, "s");
+        b.record(&format!("{name}_final_rf"), rf as f64, "nodes");
+    }
+
+    // --- work stealing on/off -------------------------------------------
+    for (steal, name) in [(true, "steal_on"), (false, "steal_off")] {
+        let cfg = JobConfig {
+            sizing: TaskSizing::Tiniest,
+            workers: 4,
+            sched: SchedConfig { steal, ..Default::default() },
+            ..Default::default()
+        };
+        let mut steals = 0u64;
+        b.measure(name, || {
+            let r = run_job(ds.as_ref(), m.clone(), &cfg).unwrap();
+            t = r.report.total_s;
+            steals = r.sched.steals;
+        });
+        b.record(&format!("{name}_total"), t, "s");
+        b.record(&format!("{name}_steals"), steals as f64, "count");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,33 @@
+//! Figs 10–11 bench: BTS vs Hadoop setups across job sizes (simulated
+//! testbed; constants calibrated per DESIGN.md §6). Records the series
+//! the paper plots and times the simulator itself.
+
+use bts::figures::Ctx;
+use bts::platforms::PlatformSpec;
+use bts::sim::{default_params, simulate, Cluster, HardwareType};
+use bts::data::Workload;
+use bts::util::bench::Bench;
+
+fn main() {
+    let ctx = Ctx::default();
+    let mut b = Bench::new("fig10_fig11_vs_hadoop").with_iters(1, 3);
+    let cluster = Cluster::homogeneous(HardwareType::TypeII, 6);
+    let c = ctx.compute_s_per_mib(Workload::Eaglet);
+    for mb in [12usize, 91, 230, 1024, 4096, 16384] {
+        let p = default_params(Workload::Eaglet, mb * 1024 * 1024, c);
+        let bts = simulate(&PlatformSpec::bts(), &cluster, &p);
+        let vh = simulate(&PlatformSpec::vanilla_hadoop(), &cluster, &p);
+        let jlh = simulate(&PlatformSpec::job_level_hadoop(), &cluster, &p);
+        let lh = simulate(&PlatformSpec::lite_hadoop(), &cluster, &p);
+        b.record(&format!("{mb}MB_bts_total"), bts.total_s, "s");
+        b.record(&format!("{mb}MB_vh_over_bts"), vh.total_s / bts.total_s, "x");
+        b.record(&format!("{mb}MB_jlh_over_bts"), jlh.total_s / bts.total_s, "x");
+        b.record(&format!("{mb}MB_lh_over_bts"), lh.total_s / bts.total_s, "x");
+    }
+    // simulator wallclock (it must stay cheap enough for planners)
+    let p = default_params(Workload::Eaglet, 16 << 30, c);
+    b.measure("simulate_16GB_job_wall", || {
+        simulate(&PlatformSpec::bts(), &cluster, &p);
+    });
+    b.finish();
+}

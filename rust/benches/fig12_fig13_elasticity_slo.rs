@@ -1,0 +1,41 @@
+//! Figs 12–13 bench: core-scaling series and the SLO planner.
+
+use bts::data::Workload;
+use bts::figures::Ctx;
+use bts::platforms::PlatformSpec;
+use bts::sim::{default_params, simulate, Cluster, HardwareType};
+use bts::util::bench::Bench;
+
+fn main() {
+    let ctx = Ctx::default();
+    let c = ctx.compute_s_per_mib(Workload::Eaglet);
+    let mut b = Bench::new("fig12_fig13_elasticity_slo").with_iters(1, 3);
+    for nodes in [1usize, 3, 6] {
+        let cluster = Cluster::homogeneous(HardwareType::TypeII, nodes);
+        for gb in [2usize, 64] {
+            let p = default_params(Workload::Eaglet, gb << 30, c);
+            let r = simulate(&PlatformSpec::bts(), &cluster, &p);
+            b.record(
+                &format!("{}c_{gb}GB_tput", nodes * 12),
+                r.throughput_mbs,
+                "MB/s",
+            );
+            if nodes == 6 && gb == 64 {
+                b.record("net_util_72c_64GB", r.network_utilization, "frac");
+            }
+        }
+    }
+    let jobs: Vec<usize> =
+        [64, 230, 1024, 4096, 16384, 65536].iter().map(|m| m << 20).collect();
+    for (name, slo) in [("2min", 120.0), ("5min", 300.0), ("10min", 600.0)] {
+        if let Some(plan) =
+            bts::slo::best_under_slo(Workload::Eaglet, slo, &[12, 36, 72], &jobs, c)
+        {
+            b.record(&format!("slo_{name}_frac_of_peak"), plan.frac_of_peak, "frac");
+        }
+    }
+    b.measure("slo_planner_wall", || {
+        bts::slo::best_under_slo(Workload::Eaglet, 120.0, &[12, 36, 72], &jobs, c);
+    });
+    b.finish();
+}

@@ -1,0 +1,53 @@
+//! Figs 14–16 bench: Netflix scaling on virtualized hardware, job-size
+//! sweep, and the reduce-task model.
+
+use bts::data::Workload;
+use bts::figures::Ctx;
+use bts::platforms::PlatformSpec;
+use bts::sim::{
+    default_params, simulate, sweep_reduce_tasks, Cluster, HardwareType,
+};
+use bts::util::bench::Bench;
+
+fn main() {
+    let ctx = Ctx::default();
+    let mut b = Bench::new("fig14_fig15_fig16_netflix").with_iters(1, 3);
+    let hi = ctx.compute_s_per_mib(Workload::NetflixHi);
+    let lo = ctx.compute_s_per_mib(Workload::NetflixLo);
+    // fig14: virtualized type-3 scaling
+    for nodes in [1usize, 2, 4] {
+        let cluster = Cluster::homogeneous(HardwareType::TypeIII, nodes);
+        let p = default_params(Workload::NetflixHi, 2 << 30, hi);
+        let r = simulate(&PlatformSpec::bts(), &cluster, &p);
+        b.record(&format!("virt_{}c_tput", nodes * 32), r.throughput_mbs, "MB/s");
+    }
+    // fig15: job-size sweep, both confidence levels
+    let cluster = Cluster::homogeneous(HardwareType::TypeIII, 2);
+    for (w, c, tag) in
+        [(Workload::NetflixHi, hi, "hi"), (Workload::NetflixLo, lo, "lo")]
+    {
+        for mb in [256usize, 2048, 16384] {
+            let p = default_params(w, mb << 20, c);
+            let r = simulate(&PlatformSpec::bts(), &cluster, &p);
+            b.record(&format!("{tag}_{mb}MB_tput"), r.throughput_mbs, "MB/s");
+        }
+    }
+    // fig16: reduce sweep
+    let cluster = Cluster::homogeneous(HardwareType::TypeII, 6);
+    for (w, c, tag) in
+        [(Workload::Eaglet, 0.52, "eaglet"), (Workload::NetflixHi, hi, "netflix")]
+    {
+        let p = default_params(w, 2 << 30, c);
+        let sweep = sweep_reduce_tasks(
+            &p.reduce,
+            2 << 30,
+            &cluster,
+            &PlatformSpec::bts(),
+            &[1, 4, 16, 64],
+        );
+        for (r, total, _net) in sweep {
+            b.record(&format!("{tag}_r{r}_reduce_s"), total, "s");
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Fig 2 bench: the task-size → miss-rate/AMAT curve on the simulated
+//! Sandy Bridge, plus the wallclock cost of profiling itself (the
+//! "offline phase ≈ 3% of online" claim depends on it being cheap).
+
+use bts::cachesim::{CacheConfig, Hierarchy, TraceConfig, run_task_trace};
+use bts::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig2_cachesim").with_iters(1, 5);
+    let cache = CacheConfig::sandy_bridge();
+    for mb in [1usize, 2, 4, 8, 11, 16, 25] {
+        let bytes = mb * 1024 * 1024;
+        let mut h = Hierarchy::new(cache.clone());
+        run_task_trace(&TraceConfig::eaglet(bytes), &mut h);
+        b.record(&format!("eaglet_{mb}MB_l2_mpi"), h.l2_mpi(), "miss/instr");
+        b.record(&format!("eaglet_{mb}MB_amat"), h.amat(), "cycles");
+        b.measure(&format!("profile_{mb}MB_wall"), || {
+            let mut h = Hierarchy::new(cache.clone());
+            run_task_trace(&TraceConfig::eaglet(bytes), &mut h);
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,50 @@
+//! Fig 4 bench: REAL jobs through the full platform (PJRT execution,
+//! dfs, scheduler) under the three sizing policies, with and without
+//! outlier samples. The paper's ratios come from cache effects its
+//! testbed had; here the measured deltas isolate the *platform* cost of
+//! each sizing (scheduling + launch + padding), which is the half of the
+//! tradeoff BTS has to keep small.
+
+use std::sync::Arc;
+
+use bts::coordinator::{run_job, JobConfig};
+use bts::data::eaglet::{EagletConfig, EagletDataset};
+use bts::data::Dataset;
+use bts::kneepoint::TaskSizing;
+use bts::runtime::Manifest;
+use bts::util::bench::Bench;
+
+fn main() {
+    let Ok(m) = Manifest::load("artifacts") else {
+        eprintln!("skipping fig4 bench: run `make artifacts`");
+        return;
+    };
+    let m = Arc::new(m);
+    let mut b = Bench::new("fig4_kneepoint").with_iters(1, 3);
+    let full = EagletDataset::generate(
+        &m.params,
+        EagletConfig { families: 150, ..Default::default() },
+    );
+    let no_outliers = full.without_outliers();
+    for (ds, tag) in [(&full, "outliers"), (&no_outliers, "clean")] {
+        let mb = ds.total_bytes() as f64 / (1024.0 * 1024.0);
+        for (sizing, name) in [
+            (TaskSizing::Kneepoint(256 * 1024), "kneepoint"),
+            (TaskSizing::Fixed(24 * 1024 * 1024), "large24MB"),
+            (TaskSizing::Tiniest, "tiniest"),
+        ] {
+            let cfg = JobConfig { sizing, workers: 4, ..Default::default() };
+            let mut last = 0.0;
+            b.measure(&format!("{tag}_{name}"), || {
+                let r = run_job(ds, m.clone(), &cfg).unwrap();
+                last = r.report.total_s;
+            });
+            b.record(
+                &format!("{tag}_{name}_tput"),
+                mb / last,
+                "MB/s",
+            );
+        }
+    }
+    b.finish();
+}

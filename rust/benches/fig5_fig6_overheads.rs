@@ -1,0 +1,62 @@
+//! Figs 5–6 bench: platform overhead models (startup, per-task) plus the
+//! REAL measured startup/per-task overheads of this implementation —
+//! staging, scheduler construction, monitoring on/off (the §4.2.2
+//! experiment re-run for real).
+
+use std::sync::Arc;
+
+use bts::coordinator::{run_job, JobConfig};
+use bts::data::eaglet::{EagletConfig, EagletDataset};
+use bts::kneepoint::TaskSizing;
+use bts::platforms::PlatformSpec;
+use bts::runtime::Manifest;
+use bts::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig5_fig6_overheads").with_iters(1, 5);
+    // model series (calibrated constants; Figs 5 & 6 shapes)
+    for p in [
+        PlatformSpec::vanilla_hadoop(),
+        PlatformSpec::job_level_hadoop(),
+        PlatformSpec::lite_hadoop(),
+        PlatformSpec::bts(),
+        PlatformSpec::native_linux(),
+    ] {
+        b.record(&format!("model_startup_{}", p.name), p.startup_s(72), "s");
+        b.record(
+            &format!("model_pertask_{}", p.name),
+            p.per_task_overhead_s(4608.0 / 1048576.0) * 1e3,
+            "ms",
+        );
+    }
+    // real platform: startup + per-task overhead, monitoring on/off
+    let Ok(m) = Manifest::load("artifacts") else {
+        eprintln!("artifacts missing: model series only");
+        b.finish();
+        return;
+    };
+    let m = Arc::new(m);
+    let ds = EagletDataset::generate(
+        &m.params,
+        EagletConfig { families: 80, ..Default::default() },
+    );
+    for monitoring in [false, true] {
+        let cfg = JobConfig {
+            sizing: TaskSizing::Tiniest,
+            workers: 4,
+            monitoring,
+            ..Default::default()
+        };
+        let tag = if monitoring { "monitor" } else { "plain" };
+        let mut startup = 0.0;
+        let mut per_task = 0.0;
+        b.measure(&format!("real_job_{tag}"), || {
+            let r = run_job(&ds, m.clone(), &cfg).unwrap();
+            startup = r.report.startup_s;
+            per_task = r.report.map_s / r.report.tasks as f64;
+        });
+        b.record(&format!("real_startup_{tag}"), startup, "s");
+        b.record(&format!("real_pertask_{tag}"), per_task * 1e3, "ms");
+    }
+    b.finish();
+}

@@ -1,0 +1,47 @@
+//! Fig 8 bench: BTS/BLT/BTT on both REAL workloads through the engine
+//! (kneepoint sizes from the offline profiler), reporting throughput.
+
+use std::sync::Arc;
+
+use bts::cachesim::CacheConfig;
+use bts::coordinator::{run_job, JobConfig};
+use bts::data::Workload;
+use bts::kneepoint::{kneepoint_bytes, TaskSizing};
+use bts::runtime::Manifest;
+use bts::util::bench::Bench;
+use bts::workloads::build_small;
+
+fn main() {
+    let Ok(m) = Manifest::load("artifacts") else {
+        eprintln!("skipping fig8 bench: run `make artifacts`");
+        return;
+    };
+    let m = Arc::new(m);
+    let mut b = Bench::new("fig8_task_sizing").with_iters(1, 3);
+    let cache = CacheConfig::sandy_bridge();
+    for (w, n_samples) in [
+        (Workload::Eaglet, 120usize),
+        (Workload::NetflixHi, 400),
+        (Workload::NetflixLo, 400),
+    ] {
+        let ds = build_small(w, &m.params, n_samples);
+        let knee = kneepoint_bytes(w, &cache);
+        let mb = ds.total_bytes() as f64 / (1024.0 * 1024.0);
+        for (sizing, name) in [
+            (TaskSizing::Kneepoint(knee), "bts"),
+            (TaskSizing::LargeSn { workers: 4 }, "blt"),
+            (TaskSizing::Tiniest, "btt"),
+        ] {
+            let cfg = JobConfig { sizing, workers: 4, ..Default::default() };
+            let mut total = 0.0;
+            b.measure(&format!("{}_{name}", w.name()), || {
+                total = run_job(ds.as_ref(), m.clone(), &cfg)
+                    .unwrap()
+                    .report
+                    .total_s;
+            });
+            b.record(&format!("{}_{name}_tput", w.name()), mb / total, "MB/s");
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,130 @@
+//! Hot-path micro benches: everything on or near the per-task critical
+//! path. §Perf in EXPERIMENTS.md tracks these before/after.
+
+use std::sync::Arc;
+
+use bts::coordinator::assemble::MapTask;
+use bts::data::eaglet::{EagletConfig, EagletDataset};
+use bts::data::netflix::{NetflixConfig, NetflixDataset};
+use bts::data::{Dataset, SampleMeta, Workload};
+use bts::dfs::{Dfs, LatencyModel, Prefetcher};
+use bts::kneepoint::{pack, TaskSizing};
+use bts::runtime::Manifest;
+use bts::scheduler::{SchedConfig, TaskSpec, TwoStepScheduler};
+use bts::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("hot_paths").with_iters(3, 20);
+
+    // --- scheduler: claim+report round trip -----------------------------
+    let metas: Vec<SampleMeta> = (0..20_000u64)
+        .map(|id| SampleMeta { id, bytes: 4608, units: 1 })
+        .collect();
+    b.measure("sched_20k_tasks_4_workers", || {
+        let specs: Vec<TaskSpec> = pack(&metas, TaskSizing::Tiniest)
+            .into_iter()
+            .map(|t| TaskSpec::new(t, Workload::Eaglet, 1))
+            .collect();
+        let s = TwoStepScheduler::new(specs, 4, SchedConfig::default());
+        let mut more = true;
+        while more {
+            more = false;
+            for w in 0..4 {
+                if let Some(_t) = s.next(w) {
+                    s.report(w, 0.0, 0.001);
+                    more = true;
+                }
+            }
+        }
+    });
+
+    // --- packing ----------------------------------------------------------
+    b.measure("pack_100k_samples_kneepoint", || {
+        let metas: Vec<SampleMeta> = (0..100_000u64)
+            .map(|id| SampleMeta { id, bytes: 4608, units: 2 })
+            .collect();
+        std::hint::black_box(pack(&metas, TaskSizing::Kneepoint(256 * 1024)));
+    });
+
+    // --- dfs + prefetcher -------------------------------------------------
+    let dfs = Dfs::new(4, 2, LatencyModel::none());
+    for k in 0..512 {
+        dfs.put(&format!("k{k}"), Arc::new(vec![7u8; 4608]));
+    }
+    b.measure("dfs_get_512_blocks", || {
+        for k in 0..512 {
+            std::hint::black_box(dfs.get(&format!("k{k}")).unwrap());
+        }
+    });
+    b.measure("prefetch_pump_take_256", || {
+        let mut pf = Prefetcher::new(dfs.clone(), 8);
+        pf.enqueue((0..256).map(|k| format!("k{k}")));
+        for k in 0..256 {
+            pf.pump().unwrap();
+            std::hint::black_box(pf.take(&format!("k{k}")).unwrap());
+            pf.observe_exec(0.0005);
+        }
+    });
+
+    // --- block encode/decode + assemble ------------------------------------
+    let params = bts::data::ModelParams::default();
+    let eaglet = EagletDataset::generate(
+        &params,
+        EagletConfig { families: 64, ..Default::default() },
+    );
+    let blocks: Vec<_> = (2..18).map(|id| eaglet.encode_block(id)).collect();
+    b.measure("block_encode_decode_16", || {
+        for blk in &blocks {
+            let enc = blk.encode();
+            std::hint::black_box(
+                bts::data::Block::decode(&enc).unwrap(),
+            );
+        }
+    });
+    b.measure("assemble_eaglet_16_families", || {
+        std::hint::black_box(
+            MapTask::slices(&params, Workload::Eaglet, &blocks, 7).unwrap(),
+        );
+    });
+    let netflix = NetflixDataset::generate(
+        &params,
+        NetflixConfig { movies: 64, ..Default::default() },
+    );
+    let nblocks: Vec<_> = (0..64).map(|id| netflix.encode_block(id)).collect();
+    b.measure("assemble_netflix_64_movies", || {
+        std::hint::black_box(
+            MapTask::slices(&params, Workload::NetflixLo, &nblocks, 7)
+                .unwrap(),
+        );
+    });
+
+    // --- PJRT execution per bucket -----------------------------------------
+    if let Ok(m) = Manifest::load("artifacts") {
+        let m = Arc::new(m);
+        let rt = bts::runtime::Runtime::new(m.clone()).unwrap();
+        for bucket in [1usize, 4, 16, 64] {
+            let e = m.entry("eaglet_map", bucket).unwrap().clone();
+            let inputs: Vec<bts::runtime::HostTensor> = e
+                .inputs
+                .iter()
+                .map(|spec| match spec.dtype {
+                    bts::runtime::Dtype::F32 => bts::runtime::HostTensor::F32(
+                        vec![0.5; spec.elements()],
+                        spec.shape.clone(),
+                    ),
+                    bts::runtime::Dtype::I32 => bts::runtime::HostTensor::I32(
+                        vec![1; spec.elements()],
+                        spec.shape.clone(),
+                    ),
+                })
+                .collect();
+            rt.execute(&e, &inputs).unwrap(); // compile outside timing
+            b.measure(&format!("pjrt_eaglet_map_b{bucket}"), || {
+                std::hint::black_box(rt.execute(&e, &inputs).unwrap());
+            });
+        }
+    } else {
+        eprintln!("artifacts missing: skipping PJRT benches");
+    }
+    b.finish();
+}

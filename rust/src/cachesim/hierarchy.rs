@@ -1,0 +1,255 @@
+//! Multi-level cache hierarchy + AMAT model.
+//!
+//! Latencies follow the thesis's own analysis (§3.2): AMAT is "the time
+//! for a lookup in the fastest cache plus the product of the miss rate
+//! and the miss penalty" [Patterson & Hennessy], normalized so the
+//! fastest cache lookup costs 1 cycle; "memory fetch is 63 times slower
+//! than L2 cache fetch on architectures such as Intel Sandy Bridge".
+
+use super::lru::SetAssocCache;
+
+/// Where an access was served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    L1,
+    L2,
+    L3,
+    Mem,
+}
+
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub l1_bytes: usize,
+    pub l2_bytes: usize,
+    pub l3_bytes: usize,
+    pub line: usize,
+    pub l1_ways: usize,
+    pub l2_ways: usize,
+    pub l3_ways: usize,
+    /// cycles: fastest lookup normalized to 1 (thesis Fig 2 secondary axis)
+    pub l1_cycles: f64,
+    pub l2_cycles: f64,
+    pub l3_cycles: f64,
+    pub mem_cycles: f64,
+}
+
+impl CacheConfig {
+    /// The thesis testbed: Sandy Bridge, 1.5 MB L2, 15 MB L3 (Table 2 /
+    /// §3.2). L1 32 KB. mem = 63 × L2 fetch.
+    pub fn sandy_bridge() -> Self {
+        CacheConfig {
+            l1_bytes: 32 * 1024,
+            l2_bytes: 1536 * 1024,
+            l3_bytes: 15 * 1024 * 1024 / 15 * 15, // 15 MiB-ish, pow2 sets via ways
+            line: 64,
+            l1_ways: 8,
+            l2_ways: 12,
+            l3_ways: 15,
+            l1_cycles: 1.0,
+            l2_cycles: 8.0,
+            l3_cycles: 40.0,
+            mem_cycles: 8.0 * 63.0,
+        }
+    }
+
+    /// Opteron-like (Table 2 type 3): bigger L2 (32 MB aggregate).
+    pub fn opteron() -> Self {
+        CacheConfig {
+            l2_bytes: 2 * 1024 * 1024,
+            l3_bytes: 32 * 1024 * 1024,
+            l3_ways: 16,
+            ..Self::sandy_bridge()
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub cfg: CacheConfig,
+    l1: SetAssocCache,
+    l2: SetAssocCache,
+    l3: SetAssocCache,
+    pub accesses: u64,
+    pub l1_misses: u64,
+    pub l2_misses: u64,
+    pub l3_misses: u64,
+    /// instructions retired alongside the accesses (set by the trace)
+    pub instructions: u64,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: CacheConfig) -> Self {
+        // Round capacities so sets are powers of two.
+        fn mk(bytes: usize, line: usize, ways: usize) -> SetAssocCache {
+            let per_set = line * ways;
+            let sets = (bytes / per_set).next_power_of_two();
+            let sets = if sets * per_set > bytes * 2 { sets / 2 } else { sets };
+            SetAssocCache::new(sets.max(1) * per_set, line, ways)
+        }
+        Hierarchy {
+            l1: mk(cfg.l1_bytes, cfg.line, cfg.l1_ways),
+            l2: mk(cfg.l2_bytes, cfg.line, cfg.l2_ways),
+            l3: mk(cfg.l3_bytes, cfg.line, cfg.l3_ways),
+            cfg,
+            accesses: 0,
+            l1_misses: 0,
+            l2_misses: 0,
+            l3_misses: 0,
+            instructions: 0,
+        }
+    }
+
+    /// Access one address through the hierarchy (inclusive fill).
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> Level {
+        self.accesses += 1;
+        if self.l1.access(addr) {
+            return Level::L1;
+        }
+        self.l1_misses += 1;
+        if self.l2.access(addr) {
+            return Level::L2;
+        }
+        self.l2_misses += 1;
+        if self.l3.access(addr) {
+            return Level::L3;
+        }
+        self.l3_misses += 1;
+        Level::Mem
+    }
+
+    pub fn retire(&mut self, instructions: u64) {
+        self.instructions += instructions;
+    }
+
+    pub fn l2_mpi(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.l2_misses as f64 / self.instructions as f64
+        }
+    }
+
+    pub fn l3_mpi(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.l3_misses as f64 / self.instructions as f64
+        }
+    }
+
+    /// Average memory access time in cycles per access (normalized,
+    /// fastest = 1 cycle): AMAT = hit_L1 + mr1*(L2 + mr2*(L3 + mr3*Mem)).
+    pub fn amat(&self) -> f64 {
+        if self.accesses == 0 {
+            return self.cfg.l1_cycles;
+        }
+        let a = self.accesses as f64;
+        let mr1 = self.l1_misses as f64 / a;
+        let mr2 = if self.l1_misses == 0 {
+            0.0
+        } else {
+            self.l2_misses as f64 / self.l1_misses as f64
+        };
+        let mr3 = if self.l2_misses == 0 {
+            0.0
+        } else {
+            self.l3_misses as f64 / self.l2_misses as f64
+        };
+        self.cfg.l1_cycles
+            + mr1 * (self.cfg.l2_cycles
+                + mr2 * (self.cfg.l3_cycles + mr3 * self.cfg.mem_cycles))
+    }
+
+    /// Cycles-per-instruction estimate: base IPC-1 work + memory stalls.
+    pub fn cpi(&self, base_cpi: f64) -> f64 {
+        if self.instructions == 0 {
+            return base_cpi;
+        }
+        let mem_cycles = self.l1_misses as f64 * self.cfg.l2_cycles
+            + self.l2_misses as f64 * self.cfg.l3_cycles
+            + self.l3_misses as f64 * self.cfg.mem_cycles;
+        base_cpi + mem_cycles / self.instructions as f64
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.accesses = 0;
+        self.l1_misses = 0;
+        self.l2_misses = 0;
+        self.l3_misses = 0;
+        self.instructions = 0;
+        self.l1.reset_counters();
+        self.l2.reset_counters();
+        self.l3.reset_counters();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sandy_bridge_levels_ordered() {
+        let h = Hierarchy::new(CacheConfig::sandy_bridge());
+        assert!(h.l1.capacity_bytes() < h.l2.capacity_bytes());
+        assert!(h.l2.capacity_bytes() < h.l3.capacity_bytes());
+    }
+
+    #[test]
+    fn small_working_set_stays_in_l1() {
+        let mut h = Hierarchy::new(CacheConfig::sandy_bridge());
+        // warm up, then measure steady state
+        for addr in (0..8 * 1024u64).step_by(64) {
+            h.access(addr);
+        }
+        h.reset_counters();
+        for _ in 0..4 {
+            for addr in (0..8 * 1024u64).step_by(64) {
+                h.access(addr);
+            }
+        }
+        assert_eq!(h.l1_misses, 0);
+        assert!(h.amat() < 1.5, "amat {}", h.amat());
+    }
+
+    #[test]
+    fn huge_working_set_goes_to_memory() {
+        let mut h = Hierarchy::new(CacheConfig::sandy_bridge());
+        // stream 64 MiB: far beyond L3
+        for addr in (0..64 * 1024 * 1024u64).step_by(64) {
+            h.access(addr);
+        }
+        assert!(h.l3_misses > 0);
+        assert!(h.amat() > 100.0, "amat {}", h.amat());
+    }
+
+    #[test]
+    fn amat_monotone_in_working_set() {
+        let mut last = 0.0;
+        for ws_kb in [16usize, 512, 4096, 32768] {
+            let mut h = Hierarchy::new(CacheConfig::sandy_bridge());
+            for _ in 0..3 {
+                for addr in (0..ws_kb * 1024).step_by(64) {
+                    h.access(addr as u64);
+                }
+            }
+            let amat = h.amat();
+            assert!(
+                amat >= last * 0.95,
+                "amat should not collapse: {amat} after {last} @{ws_kb}KiB"
+            );
+            last = amat;
+        }
+    }
+
+    #[test]
+    fn mpi_counts_instructions() {
+        let mut h = Hierarchy::new(CacheConfig::sandy_bridge());
+        for addr in (0..4 * 1024 * 1024u64).step_by(64) {
+            h.access(addr);
+            h.retire(50);
+        }
+        assert!(h.l2_mpi() > 0.0);
+        assert!(h.cpi(1.0) > 1.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Cache simulator substrate — the OProfile replacement (DESIGN.md §2).
+//!
+//! `kneepoint::profiler` drives `trace::run_task_trace` through a
+//! `hierarchy::Hierarchy` across task sizes to produce the task-size →
+//! miss-rate curve of Fig 2 / Fig 9; `figures::fig2` renders it.
+
+pub mod hierarchy;
+pub mod lru;
+pub mod trace;
+
+pub use hierarchy::{CacheConfig, Hierarchy, Level};
+pub use lru::SetAssocCache;
+pub use trace::{reuse_distances, run_task_trace, TraceConfig};

@@ -1,0 +1,318 @@
+//! Configuration system: a TOML-subset file format plus `--key=value`
+//! CLI overrides, resolving to a [`JobConfig`] + cluster/workload
+//! selection. The same `Config` drives `bts run`, the net leader, and
+//! the figure generators.
+//!
+//! Accepted file syntax (a strict TOML subset — enough for flat
+//! platform configs without pulling a dependency):
+//!
+//! ```toml
+//! [job]
+//! workload = "eaglet"      # eaglet | netflix_hi | netflix_lo
+//! sizing = "kneepoint"     # kneepoint | tiniest | large | <bytes>
+//! workers = 6
+//! seed = 42
+//!
+//! [dfs]
+//! data_nodes = 4
+//! adaptive_rf = true
+//! lan = false
+//! ```
+
+use crate::coordinator::JobConfig;
+use crate::data::Workload;
+use crate::dfs::LatencyModel;
+use crate::error::{Error, Result};
+use crate::kneepoint::TaskSizing;
+
+/// Resolved configuration. Field names mirror the file keys
+/// (`section.key`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub workload: Workload,
+    /// "kneepoint" resolves via the offline profiler at run time;
+    /// explicit bytes pin the task size.
+    pub sizing: SizingChoice,
+    pub workers: usize,
+    pub data_nodes: usize,
+    pub adaptive_rf: bool,
+    /// Use the LAN latency model on the data nodes (true) or the
+    /// in-memory fast path (false).
+    pub lan: bool,
+    pub monitoring: bool,
+    pub prefetch_k: usize,
+    pub seed: u64,
+    /// Scale the dataset to roughly this many bytes (None = original).
+    pub job_bytes: Option<usize>,
+    /// SLO bound in seconds (planner / reporting only).
+    pub slo_s: Option<f64>,
+    pub platform: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SizingChoice {
+    Kneepoint,
+    Tiniest,
+    Large,
+    FixedBytes(usize),
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workload: Workload::Eaglet,
+            sizing: SizingChoice::Kneepoint,
+            workers: 4,
+            data_nodes: 4,
+            adaptive_rf: true,
+            lan: false,
+            monitoring: false,
+            prefetch_k: 8,
+            seed: 0xB75,
+            job_bytes: None,
+            slo_s: None,
+            platform: "bts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse a config file (see module docs for the accepted subset).
+    pub fn from_toml(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) =
+                line.strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+            {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let full = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            cfg.set(&full, value.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply one `key=value` override (CLI `--set job.workers=8`, or the
+    /// short keys without a section).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = unquote(value);
+        let short = key.rsplit('.').next().unwrap_or(key);
+        match short {
+            "workload" => {
+                self.workload = Workload::parse(v).ok_or_else(|| {
+                    Error::Config(format!("unknown workload {v}"))
+                })?;
+            }
+            "sizing" => {
+                self.sizing = match v {
+                    "kneepoint" => SizingChoice::Kneepoint,
+                    "tiniest" => SizingChoice::Tiniest,
+                    "large" => SizingChoice::Large,
+                    n => SizingChoice::FixedBytes(parse_bytes(n)?),
+                };
+            }
+            "workers" => self.workers = parse_num(v)? as usize,
+            "data_nodes" => self.data_nodes = parse_num(v)? as usize,
+            "adaptive_rf" => self.adaptive_rf = parse_bool(v)?,
+            "lan" => self.lan = parse_bool(v)?,
+            "monitoring" => self.monitoring = parse_bool(v)?,
+            "prefetch_k" => self.prefetch_k = parse_num(v)? as usize,
+            "seed" => self.seed = parse_num(v)? as u64,
+            "job_bytes" | "job_size" => {
+                self.job_bytes = Some(parse_bytes(v)?)
+            }
+            "slo_s" => {
+                self.slo_s = Some(v.parse().map_err(|_| {
+                    Error::Config(format!("bad slo_s: {v}"))
+                })?)
+            }
+            "platform" => self.platform = v.to_string(),
+            other => {
+                return Err(Error::Config(format!("unknown key {other}")))
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve to a coordinator `JobConfig`; `kneepoint_bytes` supplies
+    /// the profiled knee when sizing is `Kneepoint`.
+    pub fn to_job_config(&self, kneepoint_bytes: usize) -> JobConfig {
+        let sizing = match self.sizing {
+            SizingChoice::Kneepoint => TaskSizing::Kneepoint(kneepoint_bytes),
+            SizingChoice::Tiniest => TaskSizing::Tiniest,
+            SizingChoice::Large => {
+                TaskSizing::LargeSn { workers: self.workers }
+            }
+            SizingChoice::FixedBytes(b) => TaskSizing::Fixed(b),
+        };
+        JobConfig {
+            sizing,
+            workers: self.workers,
+            data_nodes: self.data_nodes,
+            latency: if self.lan {
+                LatencyModel::lan()
+            } else {
+                LatencyModel::none()
+            },
+            adaptive_rf: self.adaptive_rf,
+            prefetch_k: self.prefetch_k,
+            monitoring: self.monitoring,
+            seed: self.seed,
+            platform: self.platform.clone(),
+            ..JobConfig::default()
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no '#' inside our quoted strings contain # rarely; honor quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> &str {
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or(v)
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "yes" | "1" => Ok(true),
+        "false" | "no" | "0" => Ok(false),
+        _ => Err(Error::Config(format!("bad bool: {v}"))),
+    }
+}
+
+fn parse_num(v: &str) -> Result<i64> {
+    v.replace('_', "")
+        .parse()
+        .map_err(|_| Error::Config(format!("bad number: {v}")))
+}
+
+/// Accept raw bytes or human sizes: `1536`, `24kb`, `2.5mb`, `1gb`, `1tb`.
+pub fn parse_bytes(v: &str) -> Result<usize> {
+    let s = v.to_ascii_lowercase();
+    let (num, mult) = if let Some(n) = s.strip_suffix("tb") {
+        (n, 1u64 << 40)
+    } else if let Some(n) = s.strip_suffix("gb") {
+        (n, 1 << 30)
+    } else if let Some(n) = s.strip_suffix("mb") {
+        (n, 1 << 20)
+    } else if let Some(n) = s.strip_suffix("kb") {
+        (n, 1 << 10)
+    } else {
+        (s.as_str(), 1)
+    };
+    let f: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("bad size: {v}")))?;
+    if f < 0.0 {
+        return Err(Error::Config(format!("negative size: {v}")));
+    }
+    Ok((f * mult as f64) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_round_trips_through_job_config() {
+        let c = Config::default();
+        let jc = c.to_job_config(1024 * 1024);
+        assert_eq!(jc.workers, c.workers);
+        assert_eq!(jc.sizing, TaskSizing::Kneepoint(1024 * 1024));
+    }
+
+    #[test]
+    fn parses_full_file() {
+        let text = r#"
+# cluster setup
+[job]
+workload = "netflix_hi"
+sizing = "1mb"          # the thesis's Netflix knee
+workers = 6
+seed = 7
+
+[dfs]
+data_nodes = 8
+adaptive_rf = false
+lan = true
+"#;
+        let c = Config::from_toml(text).unwrap();
+        assert_eq!(c.workload, Workload::NetflixHi);
+        assert_eq!(c.sizing, SizingChoice::FixedBytes(1 << 20));
+        assert_eq!(c.workers, 6);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.data_nodes, 8);
+        assert!(!c.adaptive_rf);
+        assert!(c.lan);
+    }
+
+    #[test]
+    fn named_sizings_parse() {
+        for (s, want) in [
+            ("kneepoint", SizingChoice::Kneepoint),
+            ("tiniest", SizingChoice::Tiniest),
+            ("large", SizingChoice::Large),
+        ] {
+            let mut c = Config::default();
+            c.set("sizing", s).unwrap();
+            assert_eq!(c.sizing, want);
+        }
+    }
+
+    #[test]
+    fn human_sizes() {
+        assert_eq!(parse_bytes("2.5mb").unwrap(), (2.5 * 1048576.0) as usize);
+        assert_eq!(parse_bytes("24kb").unwrap(), 24 * 1024);
+        assert_eq!(parse_bytes("1tb").unwrap(), 1 << 40);
+        assert_eq!(parse_bytes("512").unwrap(), 512);
+        assert!(parse_bytes("alot").is_err());
+    }
+
+    #[test]
+    fn bad_inputs_error_cleanly() {
+        assert!(Config::from_toml("workers 6").is_err());
+        let mut c = Config::default();
+        assert!(c.set("workload", "hbase").is_err());
+        assert!(c.set("no_such_key", "1").is_err());
+        assert!(c.set("adaptive_rf", "maybe").is_err());
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let c = Config::from_toml(
+            "workload = \"eaglet\" # the genetic study\nworkers = 12\n",
+        )
+        .unwrap();
+        assert_eq!(c.workload, Workload::Eaglet);
+        assert_eq!(c.workers, 12);
+    }
+}

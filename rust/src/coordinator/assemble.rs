@@ -1,0 +1,445 @@
+//! Marshal fetched dfs blocks into the padded, bucketed tensors the AOT
+//! artifacts expect, and draw the per-task subsample indices.
+//!
+//! Subsampling "decides which data is accessed in runtime" (§3.2) — the
+//! random indices are *not* baked into the compiled graph. The
+//! coordinator draws them per task from the task's seed, ships them as
+//! the `idx` input, and identical seeds reproduce identical statistics
+//! (the job-level-recovery determinism guarantee).
+
+use crate::data::block::{Block, KIND_EAGLET, KIND_NETFLIX};
+use crate::data::{ModelParams, Workload};
+use crate::error::{Error, Result};
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+/// Draw EAGLET subsample indices: `rounds × subsample` distinct marker
+/// columns per round (a subsample round never repeats a marker — that
+/// would double-count its information).
+pub fn draw_eaglet_idx(p: &ModelParams, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed);
+    let mut idx = Vec::with_capacity(p.rounds * p.subsample);
+    for r in 0..p.rounds {
+        let mut round = rng.fork(r as u64);
+        let mut picks =
+            round.sample_distinct(p.markers as u64, p.subsample as u64);
+        picks.sort_unstable();
+        idx.extend(picks.into_iter().map(|v| v as i32));
+    }
+    HostTensor::I32(idx, vec![p.rounds, p.subsample])
+}
+
+/// Draw Netflix subsample positions: `s` draws (with replacement — the
+/// classic bootstrap) over the padded rating slots; padded slots carry
+/// mask 0 and contribute nothing.
+pub fn draw_netflix_idx(p: &ModelParams, s: usize, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed);
+    let idx: Vec<i32> =
+        (0..s).map(|_| rng.below(p.ratings_cap as u64) as i32).collect();
+    HostTensor::I32(idx, vec![s])
+}
+
+/// The common LOD grid all EAGLET partials are combined over.
+pub fn lod_grid_points(p: &ModelParams) -> Vec<f32> {
+    (0..p.grid).map(|g| g as f32 / p.grid as f32).collect()
+}
+
+/// A fully-assembled map task: inputs ready for `Runtime::execute`, plus
+/// the bookkeeping needed to interpret the padded output.
+pub struct MapTask {
+    /// Manifest entry kind (eaglet_map / netflix_map_hi / netflix_map_lo).
+    pub kind: &'static str,
+    /// Bucket rows actually backed by data (≤ compiled bucket).
+    pub real_rows: usize,
+    pub bucket: usize,
+    pub inputs: Vec<HostTensor>,
+}
+
+impl MapTask {
+    /// Assemble from decoded blocks. For EAGLET a row is one chunk (a
+    /// task batches `units` chunks across its families); for Netflix a
+    /// row is one movie. Errors if the task exceeds the largest compiled
+    /// bucket — large (BLT-style) tasks go through [`MapTask::slices`].
+    pub fn assemble(
+        p: &ModelParams,
+        workload: Workload,
+        blocks: &[Block],
+        seed: u64,
+    ) -> Result<MapTask> {
+        let slices = Self::slices(p, workload, blocks, seed)?;
+        match <[_; 1]>::try_from(slices) {
+            Ok([one]) => Ok(one),
+            Err(v) => Err(Error::Scheduler(format!(
+                "task needs {} slices; use MapTask::slices",
+                v.len()
+            ))),
+        }
+    }
+
+    /// Assemble into one or more bucket-sized execution slices. Tiny
+    /// tasks yield exactly one slice; a BLT "all of Sn in one file" task
+    /// yields many — one software-component invocation streaming through
+    /// the whole partition, exactly the behaviour whose cache profile
+    /// the thesis measures.
+    pub fn slices(
+        p: &ModelParams,
+        workload: Workload,
+        blocks: &[Block],
+        seed: u64,
+    ) -> Result<Vec<MapTask>> {
+        match workload {
+            Workload::Eaglet => Self::eaglet_slices(p, blocks, seed),
+            Workload::NetflixHi => {
+                Self::netflix_slices(p, blocks, seed, true)
+            }
+            Workload::NetflixLo => {
+                Self::netflix_slices(p, blocks, seed, false)
+            }
+        }
+    }
+
+    fn eaglet_slices(
+        p: &ModelParams,
+        blocks: &[Block],
+        seed: u64,
+    ) -> Result<Vec<MapTask>> {
+        let m = p.markers;
+        let i = p.individuals;
+        let chunk_words = m * i + m;
+        // Flatten to (block, chunk) rows; a huge family may span slices.
+        let mut rows: Vec<(&Block, usize)> = Vec::new();
+        for b in blocks {
+            if b.id.kind != KIND_EAGLET {
+                return Err(Error::Data(format!(
+                    "eaglet task got block kind {}",
+                    b.id.kind
+                )));
+            }
+            if b.payload.len() != b.units as usize * chunk_words {
+                return Err(Error::Data(format!(
+                    "block {} payload {} != {} chunks × {chunk_words}",
+                    b.id.sample,
+                    b.payload.len(),
+                    b.units
+                )));
+            }
+            rows.extend((0..b.units as usize).map(|c| (b, c)));
+        }
+        rows.chunks(p.max_bucket())
+            .map(|slice| {
+                let n = slice.len();
+                let bucket = p.bucket_for(n).expect("≤ max bucket");
+                let mut geno = vec![0.0f32; bucket * m * i];
+                let mut pos = vec![0.0f32; bucket * m];
+                for (row, (b, c)) in slice.iter().enumerate() {
+                    let src =
+                        &b.payload[c * chunk_words..(c + 1) * chunk_words];
+                    geno[row * m * i..(row + 1) * m * i]
+                        .copy_from_slice(&src[..m * i]);
+                    pos[row * m..(row + 1) * m]
+                        .copy_from_slice(&src[m * i..]);
+                }
+                Ok(MapTask {
+                    kind: "eaglet_map",
+                    real_rows: n,
+                    bucket,
+                    inputs: vec![
+                        HostTensor::F32(geno, vec![bucket, m, i]),
+                        HostTensor::F32(pos, vec![bucket, m]),
+                        draw_eaglet_idx(p, seed),
+                        HostTensor::F32(lod_grid_points(p), vec![p.grid]),
+                    ],
+                })
+            })
+            .collect()
+    }
+
+    fn netflix_slices(
+        p: &ModelParams,
+        blocks: &[Block],
+        seed: u64,
+        high_confidence: bool,
+    ) -> Result<Vec<MapTask>> {
+        let cap = p.ratings_cap;
+        let (kind, s) = if high_confidence {
+            ("netflix_map_hi", p.s_hi)
+        } else {
+            ("netflix_map_lo", p.s_lo)
+        };
+        blocks
+            .chunks(p.max_bucket())
+            .map(|slice| {
+                let rows = slice.len();
+                let bucket = p.bucket_for(rows).expect("≤ max bucket");
+                let mut vals = vec![0.0f32; bucket * cap];
+                let mut months = vec![0.0f32; bucket * cap];
+                let mut mask = vec![0.0f32; bucket * cap];
+                for (row, b) in slice.iter().enumerate() {
+                    if b.id.kind != KIND_NETFLIX {
+                        return Err(Error::Data(format!(
+                            "netflix task got block kind {}",
+                            b.id.kind
+                        )));
+                    }
+                    if b.payload.len() != 3 * cap {
+                        return Err(Error::Data(format!(
+                            "movie block {} payload {} != 3×{cap}",
+                            b.id.sample,
+                            b.payload.len()
+                        )));
+                    }
+                    vals[row * cap..(row + 1) * cap]
+                        .copy_from_slice(&b.payload[..cap]);
+                    months[row * cap..(row + 1) * cap]
+                        .copy_from_slice(&b.payload[cap..2 * cap]);
+                    mask[row * cap..(row + 1) * cap]
+                        .copy_from_slice(&b.payload[2 * cap..]);
+                }
+                Ok(MapTask {
+                    kind,
+                    real_rows: rows,
+                    bucket,
+                    inputs: vec![
+                        HostTensor::F32(vals, vec![bucket, cap]),
+                        HostTensor::F32(months, vec![bucket, cap]),
+                        HostTensor::F32(mask, vec![bucket, cap]),
+                        draw_netflix_idx(p, s, seed),
+                    ],
+                })
+            })
+            .collect()
+    }
+}
+
+/// A map task's contribution to the final statistic, ready for the
+/// reduce tree. Padded output rows are already discarded here.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskPartial {
+    /// Mean ALOD over the task's real chunks + its chunk weight.
+    Eaglet { alod: Vec<f32>, weight: f32 },
+    /// Per-month (sum, sumsq, count) summed over the task's movies.
+    Netflix { stats: Vec<f32> },
+}
+
+impl TaskPartial {
+    /// Merge slice partials into one task partial (used when a large
+    /// task executed as several bucket-sized slices).
+    pub fn merge(parts: Vec<TaskPartial>) -> Result<TaskPartial> {
+        let mut it = parts.into_iter();
+        let mut acc = it
+            .next()
+            .ok_or_else(|| Error::Scheduler("merge of zero partials".into()))?;
+        for p in it {
+            match (&mut acc, p) {
+                (
+                    TaskPartial::Eaglet { alod, weight },
+                    TaskPartial::Eaglet { alod: a2, weight: w2 },
+                ) => {
+                    let wtot = *weight + w2;
+                    for (x, y) in alod.iter_mut().zip(&a2) {
+                        *x = (*x * *weight + y * w2) / wtot;
+                    }
+                    *weight = wtot;
+                }
+                (
+                    TaskPartial::Netflix { stats },
+                    TaskPartial::Netflix { stats: s2 },
+                ) => {
+                    for (x, y) in stats.iter_mut().zip(&s2) {
+                        *x += y;
+                    }
+                }
+                _ => {
+                    return Err(Error::Scheduler(
+                        "cannot merge partials of different kinds".into(),
+                    ))
+                }
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Build from the raw map output (`out[0]`, row-major over the
+    /// bucket dimension).
+    pub fn from_map_output(
+        p: &ModelParams,
+        task: &MapTask,
+        out0: &[f32],
+    ) -> Result<TaskPartial> {
+        match task.kind {
+            "eaglet_map" => {
+                let g = p.grid;
+                if out0.len() != task.bucket * g {
+                    return Err(Error::Artifact(format!(
+                        "eaglet map output {} != {}×{g}",
+                        out0.len(),
+                        task.bucket
+                    )));
+                }
+                let mut alod = vec![0.0f32; g];
+                for row in 0..task.real_rows {
+                    for (a, v) in
+                        alod.iter_mut().zip(&out0[row * g..(row + 1) * g])
+                    {
+                        *a += v;
+                    }
+                }
+                let w = task.real_rows as f32;
+                for a in &mut alod {
+                    *a /= w;
+                }
+                Ok(TaskPartial::Eaglet { alod, weight: w })
+            }
+            _ => {
+                let f = p.months * p.stat_fields;
+                if out0.len() != task.bucket * f {
+                    return Err(Error::Artifact(format!(
+                        "netflix map output {} != {}×{f}",
+                        out0.len(),
+                        task.bucket
+                    )));
+                }
+                let mut stats = vec![0.0f32; f];
+                for row in 0..task.real_rows {
+                    for (a, v) in
+                        stats.iter_mut().zip(&out0[row * f..(row + 1) * f])
+                    {
+                        *a += v;
+                    }
+                }
+                Ok(TaskPartial::Netflix { stats })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::eaglet::{EagletConfig, EagletDataset};
+    use crate::data::netflix::{NetflixConfig, NetflixDataset};
+    use crate::data::Dataset;
+
+    fn params() -> ModelParams {
+        ModelParams::default()
+    }
+
+    #[test]
+    fn eaglet_idx_is_deterministic_and_in_range() {
+        let p = params();
+        let a = draw_eaglet_idx(&p, 7);
+        let b = draw_eaglet_idx(&p, 7);
+        assert_eq!(a, b);
+        let c = draw_eaglet_idx(&p, 8);
+        assert_ne!(a, c);
+        if let HostTensor::I32(v, shape) = &a {
+            assert_eq!(shape, &[p.rounds, p.subsample]);
+            assert!(v.iter().all(|&x| (0..p.markers as i32).contains(&x)));
+            // distinct within a round
+            for r in 0..p.rounds {
+                let mut round = v[r * p.subsample..(r + 1) * p.subsample].to_vec();
+                round.sort_unstable();
+                round.dedup();
+                assert_eq!(round.len(), p.subsample);
+            }
+        } else {
+            panic!("expected i32 tensor");
+        }
+    }
+
+    #[test]
+    fn netflix_idx_shape_and_range() {
+        let p = params();
+        let t = draw_netflix_idx(&p, p.s_lo, 3);
+        if let HostTensor::I32(v, shape) = &t {
+            assert_eq!(shape, &[p.s_lo]);
+            assert!(v.iter().all(|&x| (0..p.ratings_cap as i32).contains(&x)));
+        } else {
+            panic!("expected i32 tensor");
+        }
+    }
+
+    #[test]
+    fn assemble_eaglet_pads_to_bucket() {
+        let p = params();
+        let d = EagletDataset::generate(
+            &p,
+            EagletConfig { families: 20, ..Default::default() },
+        );
+        // two ordinary families (ids 2,3 to dodge the outliers)
+        let blocks = vec![d.encode_block(2), d.encode_block(3)];
+        let rows: usize = blocks.iter().map(|b| b.units as usize).sum();
+        let t = MapTask::assemble(&p, Workload::Eaglet, &blocks, 1).unwrap();
+        assert_eq!(t.real_rows, rows);
+        assert!(t.bucket >= rows);
+        assert_eq!(t.inputs[0].shape(), &[t.bucket, p.markers, p.individuals]);
+        // padding rows are zero
+        if let HostTensor::F32(geno, _) = &t.inputs[0] {
+            let m = p.markers * p.individuals;
+            assert!(geno[rows * m..].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn assemble_netflix_rows_are_movies() {
+        let p = params();
+        let d = NetflixDataset::generate(
+            &p,
+            NetflixConfig { movies: 10, ..Default::default() },
+        );
+        let blocks: Vec<Block> = (0..5).map(|i| d.encode_block(i)).collect();
+        let t =
+            MapTask::assemble(&p, Workload::NetflixLo, &blocks, 9).unwrap();
+        assert_eq!(t.real_rows, 5);
+        assert_eq!(t.bucket, 16);
+        assert_eq!(t.kind, "netflix_map_lo");
+        assert_eq!(t.inputs[3].shape(), &[p.s_lo]);
+    }
+
+    #[test]
+    fn assemble_rejects_wrong_kind() {
+        let p = params();
+        let d = NetflixDataset::generate(
+            &p,
+            NetflixConfig { movies: 3, ..Default::default() },
+        );
+        let blocks = vec![d.encode_block(0)];
+        assert!(MapTask::assemble(&p, Workload::Eaglet, &blocks, 0).is_err());
+    }
+
+    #[test]
+    fn partial_discards_padding_rows() {
+        let p = params();
+        let task = MapTask {
+            kind: "eaglet_map",
+            real_rows: 2,
+            bucket: 4,
+            inputs: vec![],
+        };
+        // rows: [1..], [3..], then padding rows that must be ignored
+        let mut out = vec![0.0f32; 4 * p.grid];
+        out[..p.grid].iter_mut().for_each(|v| *v = 1.0);
+        out[p.grid..2 * p.grid].iter_mut().for_each(|v| *v = 3.0);
+        out[2 * p.grid..].iter_mut().for_each(|v| *v = 99.0);
+        let partial = TaskPartial::from_map_output(&p, &task, &out).unwrap();
+        match partial {
+            TaskPartial::Eaglet { alod, weight } => {
+                assert_eq!(weight, 2.0);
+                assert!(alod.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+            }
+            _ => panic!("wrong partial kind"),
+        }
+    }
+
+    #[test]
+    fn partial_size_mismatch_errors() {
+        let p = params();
+        let task = MapTask {
+            kind: "eaglet_map",
+            real_rows: 1,
+            bucket: 1,
+            inputs: vec![],
+        };
+        assert!(TaskPartial::from_map_output(&p, &task, &[0.0; 3]).is_err());
+    }
+}

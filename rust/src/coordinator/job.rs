@@ -1,0 +1,428 @@
+//! One map-reduce job, end to end: stage → schedule → map → shuffle →
+//! reduce → finalize.
+//!
+//! The master stages sample blocks into the replicated store, packs
+//! tasks under the configured sizing policy, and runs the two-step
+//! scheduler. Worker threads model BashReduce map slots: each owns a
+//! PJRT runtime (compiled-executable cache and all) plus a prefetcher,
+//! claims tasks, fetches and decodes blocks, executes the map artifact,
+//! and ships its partial to the master over the shuffle channel. While
+//! the map phase runs, the master drives the adaptive replication
+//! controller off the scheduler's feedback EWMAs. The reduce tree runs
+//! on the master through the same compiled artifacts.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use super::assemble::{MapTask, TaskPartial};
+use super::monitor::MonitorSink;
+use super::recovery::FailurePlan;
+use super::reduce::{
+    finalize_netflix, reduce_eaglet, reduce_netflix, NetflixStats,
+};
+use crate::data::{BlockId, Dataset, Workload};
+use crate::data::block::Block;
+use crate::dfs::{
+    initial_data_nodes, ControllerState, Dfs, LatencyModel, Prefetcher,
+    ReplicationPolicy,
+};
+use crate::error::{Error, Result};
+use crate::kneepoint::TaskSizing;
+use crate::metrics::{JobMetrics, JobReport, Timer};
+use crate::runtime::{ExecutorPool, Manifest};
+use crate::scheduler::{SchedConfig, SchedSnapshot, TaskSpec, TwoStepScheduler};
+
+/// Everything a job run needs beyond the dataset and the artifacts.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    pub sizing: TaskSizing,
+    /// Worker threads (map slots).
+    pub workers: usize,
+    /// Data nodes backing the replicated store.
+    pub data_nodes: usize,
+    pub latency: LatencyModel,
+    pub replication: ReplicationPolicy,
+    /// Drive the replication factor from the fetch/exec feedback loop.
+    pub adaptive_rf: bool,
+    pub sched: SchedConfig,
+    /// Upper bound on the per-worker prefetch depth k.
+    pub prefetch_k: usize,
+    /// Enable the central monitoring sink (the §4.2.2 experiment).
+    pub monitoring: bool,
+    /// Job seed: drives every task's subsample indices.
+    pub seed: u64,
+    /// Injected failure (recovery tests / §3.3 experiments).
+    pub failure: Option<FailurePlan>,
+    /// Attempt number, set by `run_with_recovery` (1-based).
+    pub attempt: u32,
+    /// Label for reports ("bts", "blt", "btt", ...).
+    pub platform: String,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            sizing: TaskSizing::Kneepoint(256 * 1024),
+            workers: 4,
+            data_nodes: 4,
+            latency: LatencyModel::none(),
+            replication: ReplicationPolicy::default(),
+            adaptive_rf: true,
+            sched: SchedConfig::default(),
+            prefetch_k: 8,
+            monitoring: false,
+            seed: 0xB75,
+            failure: None,
+            attempt: 1,
+            platform: "bts".into(),
+        }
+    }
+}
+
+/// The job's statistical output.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobOutput {
+    /// Final ALOD curve over the common grid + total chunk weight.
+    Eaglet { alod: Vec<f32>, weight: f32 },
+    Netflix(NetflixStats),
+}
+
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub output: JobOutput,
+    pub report: JobReport,
+    pub sched: SchedSnapshot,
+    /// Replication-factor trajectory (initial → final decisions).
+    pub rf_trajectory: Vec<usize>,
+    pub monitor_records: usize,
+}
+
+/// Run one job attempt. Worker failure (injected or real) surfaces as
+/// `Err` — job-level recovery (`run_with_recovery`) restarts the whole
+/// job, never a task.
+pub fn run_job(
+    dataset: &dyn Dataset,
+    manifest: Arc<Manifest>,
+    cfg: &JobConfig,
+) -> Result<JobResult> {
+    if cfg.workers == 0 {
+        return Err(Error::Config("job needs at least one worker".into()));
+    }
+    let p = manifest.params.clone();
+    let workload = dataset.workload();
+    let total_t = Timer::start();
+    let monitor = Arc::new(MonitorSink::new(cfg.monitoring));
+
+    // ---- startup: pack, stage, register --------------------------------
+    let metas = dataset.metas();
+    if metas.is_empty() {
+        return Err(Error::Data("empty dataset".into()));
+    }
+    let tasks = crate::kneepoint::pack(metas, cfg.sizing);
+    let n_tasks = tasks.len();
+    let mean_task_bytes =
+        tasks.iter().map(|t| t.bytes).sum::<usize>() / n_tasks.max(1);
+    let rf0 = initial_data_nodes(
+        cfg.workers,
+        mean_task_bytes,
+        0.05, // pre-probe guess; the controller corrects it online
+        &cfg.replication,
+    )
+    .min(cfg.data_nodes);
+    let dfs = Dfs::new(cfg.data_nodes, rf0, cfg.latency.clone());
+    let kind = match workload {
+        Workload::Eaglet => crate::data::block::KIND_EAGLET,
+        _ => crate::data::block::KIND_NETFLIX,
+    };
+    for meta in metas {
+        let block = dataset.encode_block(meta.id);
+        let key = BlockId { kind, sample: meta.id }.key();
+        dfs.put(&key, Arc::new(block.encode()));
+    }
+    let specs: Vec<TaskSpec> = tasks
+        .into_iter()
+        .map(|t| TaskSpec::new(t, workload, cfg.seed))
+        .collect();
+    let sched = TwoStepScheduler::new(specs, cfg.workers, cfg.sched.clone());
+    for w in 0..cfg.workers {
+        monitor.register_slot(w, cfg.workers);
+    }
+    let startup_s = total_t.secs();
+
+    // ---- map phase ------------------------------------------------------
+    let map_t = Timer::start();
+    let metrics = JobMetrics::new();
+    let (tx, rx) = mpsc::channel::<(usize, TaskPartial)>();
+    let failed = Arc::new(AtomicBool::new(false));
+    let mut partials: Vec<Option<TaskPartial>> = vec![None; n_tasks];
+    let mut rf_trajectory = vec![dfs.replication_factor()];
+    let mut worker_err: Option<Error> = None;
+
+    std::thread::scope(|sc| {
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let tx = tx.clone();
+            let sched = &sched;
+            let dfs = dfs.clone();
+            let manifest = manifest.clone();
+            let monitor = monitor.clone();
+            let metrics = &metrics;
+            let failed = failed.clone();
+            let cfg = &*cfg;
+            handles.push(sc.spawn(move || {
+                worker_loop(
+                    w, cfg, sched, dfs, manifest, monitor, metrics, failed,
+                    tx,
+                )
+            }));
+        }
+        drop(tx);
+
+        // Master loop: collect partials; drive the replication controller.
+        let mut ctrl = ControllerState::default();
+        loop {
+            match rx.recv_timeout(Duration::from_millis(10)) {
+                Ok((seq, partial)) => partials[seq] = Some(partial),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            if cfg.adaptive_rf {
+                if let (Some(fetch), Some(exec)) =
+                    (sched.observed_fetch_s(), sched.observed_exec_s())
+                {
+                    let cur = dfs.replication_factor();
+                    let next = crate::dfs::decide(
+                        &cfg.replication,
+                        &mut ctrl,
+                        fetch,
+                        exec,
+                        cur,
+                    );
+                    if next != cur {
+                        dfs.set_replication_factor(next);
+                        rf_trajectory.push(next);
+                    }
+                }
+            }
+        }
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => worker_err = Some(e),
+                Err(_) => {
+                    worker_err =
+                        Some(Error::Scheduler("worker panicked".into()))
+                }
+            }
+        }
+    });
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
+    let map_s = map_t.secs();
+
+    // ---- shuffle sanity + reduce ---------------------------------------
+    let collected: Vec<TaskPartial> = partials
+        .into_iter()
+        .enumerate()
+        .map(|(seq, p)| {
+            p.ok_or_else(|| {
+                Error::Scheduler(format!("task {seq} produced no partial"))
+            })
+        })
+        .collect::<Result<_>>()?;
+    let reduce_t = Timer::start();
+    let pool = ExecutorPool::global(&manifest)?;
+    let output = match workload {
+        Workload::Eaglet => {
+            let parts: Vec<(Vec<f32>, f32)> = collected
+                .into_iter()
+                .map(|p| match p {
+                    TaskPartial::Eaglet { alod, weight } => (alod, weight),
+                    _ => unreachable!("workload-homogeneous job"),
+                })
+                .collect();
+            let (alod, weight) = reduce_eaglet(pool.as_ref(), &p, parts)?;
+            JobOutput::Eaglet { alod, weight }
+        }
+        Workload::NetflixHi | Workload::NetflixLo => {
+            let parts: Vec<Vec<f32>> = collected
+                .into_iter()
+                .map(|pt| match pt {
+                    TaskPartial::Netflix { stats } => stats,
+                    _ => unreachable!("workload-homogeneous job"),
+                })
+                .collect();
+            let stats = reduce_netflix(pool.as_ref(), &p, parts)?;
+            JobOutput::Netflix(finalize_netflix(&p, &stats)?)
+        }
+    };
+    let reduce_s = reduce_t.secs();
+
+    let report = JobReport {
+        workload: workload.name().to_string(),
+        platform: cfg.platform.clone(),
+        tasks: n_tasks,
+        samples: metas.len(),
+        input_bytes: dataset.total_bytes(),
+        startup_s,
+        map_s,
+        reduce_s,
+        total_s: total_t.secs(),
+        task_exec: metrics.exec_summary(),
+        task_fetch: metrics.fetch_summary(),
+        prefetch_hit_rate: metrics.hit_rate(),
+        final_rf: dfs.replication_factor(),
+        restarts: cfg.attempt - 1,
+    };
+    Ok(JobResult {
+        output,
+        report,
+        sched: sched.snapshot(),
+        rf_trajectory,
+        monitor_records: monitor.record_count(),
+    })
+}
+
+/// One worker (map slot): claim → prefetch → fetch → assemble → execute
+/// → emit partial. Owns a PJRT runtime and a prefetcher for its lifetime.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    w: usize,
+    cfg: &JobConfig,
+    sched: &TwoStepScheduler,
+    dfs: Arc<Dfs>,
+    manifest: Arc<Manifest>,
+    monitor: Arc<MonitorSink>,
+    metrics: &JobMetrics,
+    failed: Arc<AtomicBool>,
+    tx: mpsc::Sender<(usize, TaskPartial)>,
+) -> Result<()> {
+    let p = manifest.params.clone();
+    let pool = ExecutorPool::global(&manifest)?;
+    let mut pf = Prefetcher::new(dfs, cfg.prefetch_k);
+    // Small claimed-task lookahead so the prefetcher has keys to pump
+    // ("while a task is being processed, data required for the next k
+    // tasks are pre-fetched").
+    let mut lookahead: std::collections::VecDeque<TaskSpec> =
+        std::collections::VecDeque::new();
+    let mut done: u64 = 0;
+    loop {
+        if failed.load(Ordering::Relaxed) {
+            // Another worker died: abandon the attempt promptly (the
+            // whole job restarts anyway — that is job-level recovery).
+            return Ok(());
+        }
+        // Top up the lookahead to the current prefetch depth.
+        let want = pf.depth().max(1);
+        while lookahead.len() < want {
+            match sched.next(w) {
+                Some(spec) => {
+                    let kind = match spec.workload {
+                        Workload::Eaglet => crate::data::block::KIND_EAGLET,
+                        _ => crate::data::block::KIND_NETFLIX,
+                    };
+                    pf.enqueue(spec.task.sample_ids.iter().map(|&id| {
+                        BlockId { kind, sample: id }.key()
+                    }));
+                    lookahead.push_back(spec);
+                }
+                None => break,
+            }
+        }
+        let Some(spec) = lookahead.pop_front() else {
+            return Ok(());
+        };
+        pf.pump()?;
+
+        // Fetch + decode this task's blocks.
+        let fetch_t = Timer::start();
+        let kind = match spec.workload {
+            Workload::Eaglet => crate::data::block::KIND_EAGLET,
+            _ => crate::data::block::KIND_NETFLIX,
+        };
+        let mut blocks = Vec::with_capacity(spec.task.sample_ids.len());
+        for &id in &spec.task.sample_ids {
+            let key = BlockId { kind, sample: id }.key();
+            let bytes = pf.take(&key)?;
+            blocks.push(Block::decode(&bytes)?);
+        }
+        let fetch_s = fetch_t.secs();
+
+        // Execute (possibly in slices, for large tasks).
+        let exec_t = Timer::start();
+        let slices = MapTask::slices(&p, spec.workload, &blocks, spec.seed)?;
+        let mut slice_partials = Vec::with_capacity(slices.len());
+        for slice in slices {
+            let entry = manifest
+                .entry(slice.kind, slice.bucket)
+                .ok_or_else(|| {
+                    Error::Artifact(format!(
+                        "no entry {} bucket {}",
+                        slice.kind, slice.bucket
+                    ))
+                })?;
+            // Hand the inputs to the executor pool by value (they are
+            // consumed by the transfer anyway); keep a shell with the
+            // row bookkeeping for output interpretation.
+            let shell = MapTask {
+                kind: slice.kind,
+                real_rows: slice.real_rows,
+                bucket: slice.bucket,
+                inputs: Vec::new(),
+            };
+            let out = pool.execute(entry, slice.inputs)?;
+            slice_partials.push(TaskPartial::from_map_output(
+                &p, &shell, &out[0],
+            )?);
+        }
+        let partial = TaskPartial::merge(slice_partials)?;
+        let exec_s = exec_t.secs();
+
+        pf.observe_exec(exec_s);
+        metrics.observe_fetch(fetch_s);
+        metrics.observe_exec(exec_s);
+        metrics
+            .prefetch_hits
+            .store(pf.hits, Ordering::Relaxed);
+        metrics
+            .prefetch_misses
+            .store(pf.misses, Ordering::Relaxed);
+        monitor.record_task(w, spec.task.seq, fetch_s, exec_s, spec.task.bytes);
+        sched.report(w, fetch_s, exec_s);
+        // Shuffle: deliver the partial. A dropped receiver means the
+        // master already gave up on this attempt.
+        let _ = tx.send((spec.task.seq, partial));
+        done += 1;
+
+        if let Some(plan) = cfg.failure {
+            if plan.worker == w
+                && cfg.attempt == plan.on_attempt
+                && done >= plan.after_tasks
+            {
+                failed.store(true, Ordering::Relaxed);
+                return Err(Error::Scheduler(format!(
+                    "injected node failure on worker {w} after {done} tasks"
+                )));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = JobConfig::default();
+        assert!(c.workers > 0);
+        assert!(c.data_nodes > 0);
+        assert_eq!(c.attempt, 1);
+        assert!(c.failure.is_none());
+    }
+
+    // Full job runs (they need compiled artifacts) live in
+    // rust/tests/integration_engine.rs and integration_recovery.rs.
+}

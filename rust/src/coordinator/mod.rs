@@ -1,0 +1,25 @@
+//! The BTS coordinator: job lifecycle around the two-step scheduler and
+//! the replicated data layer, executing map/reduce statistics through
+//! the PJRT runtime.
+//!
+//! Layout:
+//! - [`assemble`]  — dfs blocks → padded `HostTensor` batches; per-task
+//!   subsample index drawing (the L3 side of the subsampling contract).
+//! - [`reduce`]    — artifact-based reduce tree + scalar finalization.
+//! - [`job`]       — master/worker execution of one map-reduce job.
+//! - [`recovery`]  — job-level recovery: f_w analysis (§3.3), failure
+//!   injection, restart-until-done wrapper.
+//! - [`monitor`]   — optional task monitoring (the "BTS with
+//!   monitoring" experiment, §4.2.2).
+
+pub mod assemble;
+pub mod job;
+pub mod monitor;
+pub mod recovery;
+pub mod reduce;
+
+pub use assemble::{draw_eaglet_idx, draw_netflix_idx, MapTask};
+pub use job::{run_job, JobConfig, JobOutput, JobResult};
+pub use monitor::MonitorSink;
+pub use recovery::{expected_failures, run_with_recovery, FailurePlan, RecoveryParams};
+pub use reduce::{finalize_netflix, reduce_eaglet, reduce_netflix, NetflixStats};

@@ -1,0 +1,138 @@
+//! Job-level recovery (thesis §3.3).
+//!
+//! The thesis argues task-level recovery only pays when failures are
+//! likely *within* a job: with SLO window P(w), cluster size N, mean
+//! time to failure mttf and heavy-tail factor φ, the expected failures
+//! per execution are `f_w = N·P(w)·φ / mttf`. At the paper's settings
+//! (P(w)=10 min, N=100, mttf=4.3 months, φ=1.5) f_w ≈ 0.0078 — so
+//! monitoring overhead would have to fall below ~1% to justify
+//! task-level recovery, and BTS restarts whole jobs instead.
+
+use super::job::{run_job, JobConfig, JobResult};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::runtime::Manifest;
+use std::sync::Arc;
+
+/// Inputs to the f_w analysis.
+#[derive(Debug, Clone)]
+pub struct RecoveryParams {
+    /// Worst-case running time (the SLO window), seconds.
+    pub slo_s: f64,
+    /// Cluster size in nodes.
+    pub nodes: usize,
+    /// Mean time to node/disk failure, seconds.
+    pub mttf_s: f64,
+    /// Correlated heavy-tail factor φ.
+    pub phi: f64,
+}
+
+impl RecoveryParams {
+    /// The thesis's worked example: P(w)=10 min, N=100, mttf=4.3 months,
+    /// φ=1.5 → f_w ≈ 0.0078.
+    pub fn thesis_example() -> Self {
+        RecoveryParams {
+            slo_s: 10.0 * 60.0,
+            nodes: 100,
+            mttf_s: 4.3 * 30.44 * 24.0 * 3600.0,
+            phi: 1.5,
+        }
+    }
+}
+
+/// Expected failures during one execution window: `N·P(w)·φ / mttf`.
+pub fn expected_failures(p: &RecoveryParams) -> f64 {
+    p.nodes as f64 * p.slo_s * p.phi / p.mttf_s
+}
+
+/// Minimum task-level monitoring slowdown (cost_tl) that job-level
+/// recovery tolerates: restarting whole jobs costs `f_w · job_time`
+/// extra in expectation, so monitoring must cost less than that to win.
+pub fn breakeven_monitor_overhead(p: &RecoveryParams) -> f64 {
+    expected_failures(p)
+}
+
+/// Failure injection: simulated node crash for recovery tests and the
+/// §3.3 experiments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailurePlan {
+    /// Worker that dies.
+    pub worker: usize,
+    /// ... after completing this many tasks.
+    pub after_tasks: u64,
+    /// ... on this attempt only (1-based). Later attempts run clean,
+    /// modelling a transient node failure.
+    pub on_attempt: u32,
+}
+
+/// Run a job with job-level recovery: on any worker failure the *entire
+/// job* restarts (same seed → identical final statistic), up to
+/// `max_attempts`.
+pub fn run_with_recovery(
+    dataset: &dyn Dataset,
+    manifest: Arc<Manifest>,
+    cfg: &JobConfig,
+    max_attempts: u32,
+) -> Result<JobResult> {
+    let mut last_err: Option<Error> = None;
+    for attempt in 1..=max_attempts.max(1) {
+        let mut attempt_cfg = cfg.clone();
+        attempt_cfg.attempt = attempt;
+        match run_job(dataset, manifest.clone(), &attempt_cfg) {
+            Ok(mut result) => {
+                result.report.restarts = attempt - 1;
+                return Ok(result);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(Error::JobFailed {
+        attempts: max_attempts,
+        cause: last_err
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "unknown".into()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thesis_fw_value_reproduced() {
+        let fw = expected_failures(&RecoveryParams::thesis_example());
+        // §3.3: "Under these settings, fw = 0.0078"
+        assert!(
+            (fw - 0.0078).abs() < 0.0010,
+            "f_w = {fw}, thesis says 0.0078"
+        );
+    }
+
+    #[test]
+    fn fw_scales_linearly_with_cluster_and_window() {
+        let base = RecoveryParams::thesis_example();
+        let mut big = base.clone();
+        big.nodes *= 10;
+        assert!(
+            (expected_failures(&big) / expected_failures(&base) - 10.0).abs()
+                < 1e-9
+        );
+        let mut long = base.clone();
+        long.slo_s *= 3.0;
+        assert!(
+            (expected_failures(&long) / expected_failures(&base) - 3.0).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn monitoring_breakeven_below_one_percent() {
+        // The §3.3 punchline: "monitoring overhead would have to fall
+        // below 1% to justify task-level recovery".
+        let be = breakeven_monitor_overhead(&RecoveryParams::thesis_example());
+        assert!(be < 0.01, "breakeven {be} should be < 1%");
+    }
+
+    // End-to-end restart determinism is covered by
+    // rust/tests/integration_recovery.rs (needs artifacts).
+}

@@ -1,0 +1,185 @@
+//! Artifact-based reduce tree + scalar finalization.
+//!
+//! Reduce phases for interactive subsampling workloads are short
+//! relative to map (§3.1); BTS runs them on the master through the same
+//! compiled artifacts, `reduce_fan` partials per call, repeating until
+//! one partial remains. Partials are combined in `seq` order so results
+//! are bit-identical across runs and across job-level restarts.
+
+use crate::data::ModelParams;
+use crate::error::{Error, Result};
+use crate::runtime::{Exec, HostTensor};
+
+/// Reduce EAGLET `(alod, weight)` partials to the final `(alod, total
+/// weight)` via the `eaglet_reduce` artifact (weighted combine).
+pub fn reduce_eaglet(
+    rt: &impl Exec,
+    p: &ModelParams,
+    mut partials: Vec<(Vec<f32>, f32)>,
+) -> Result<(Vec<f32>, f32)> {
+    if partials.is_empty() {
+        return Err(Error::Scheduler("reduce over zero partials".into()));
+    }
+    let g = p.grid;
+    let k = p.reduce_fan;
+    let entry = rt
+        .manifest()
+        .entry("eaglet_reduce", k)
+        .ok_or_else(|| Error::Artifact("missing eaglet_reduce".into()))?
+        .clone();
+    while partials.len() > 1 {
+        let mut next = Vec::with_capacity(partials.len().div_ceil(k));
+        for group in partials.chunks(k) {
+            let mut parts = vec![0.0f32; k * g];
+            let mut weights = vec![0.0f32; k];
+            for (i, (alod, w)) in group.iter().enumerate() {
+                if alod.len() != g {
+                    return Err(Error::Artifact(format!(
+                        "partial grid {} != {g}",
+                        alod.len()
+                    )));
+                }
+                parts[i * g..(i + 1) * g].copy_from_slice(alod);
+                weights[i] = *w;
+            }
+            let out = rt.run(
+                &entry,
+                vec![
+                    HostTensor::F32(parts, vec![k, g]),
+                    HostTensor::F32(weights, vec![k]),
+                ],
+            )?;
+            let wsum = &out[0];
+            let wtot = out[1][0];
+            if wtot <= 0.0 {
+                return Err(Error::Artifact(
+                    "reduce produced zero total weight".into(),
+                ));
+            }
+            next.push((wsum.iter().map(|v| v / wtot).collect(), wtot));
+        }
+        partials = next;
+    }
+    Ok(partials.pop().expect("non-empty"))
+}
+
+/// Reduce Netflix `[months × fields]` partial stat tensors to one.
+pub fn reduce_netflix(
+    rt: &impl Exec,
+    p: &ModelParams,
+    mut partials: Vec<Vec<f32>>,
+) -> Result<Vec<f32>> {
+    if partials.is_empty() {
+        return Err(Error::Scheduler("reduce over zero partials".into()));
+    }
+    let f = p.months * p.stat_fields;
+    let k = p.reduce_fan;
+    let entry = rt
+        .manifest()
+        .entry("netflix_reduce", k)
+        .ok_or_else(|| Error::Artifact("missing netflix_reduce".into()))?
+        .clone();
+    while partials.len() > 1 {
+        let mut next = Vec::with_capacity(partials.len().div_ceil(k));
+        for group in partials.chunks(k) {
+            let mut parts = vec![0.0f32; k * f];
+            for (i, s) in group.iter().enumerate() {
+                if s.len() != f {
+                    return Err(Error::Artifact(format!(
+                        "partial stats {} != {f}",
+                        s.len()
+                    )));
+                }
+                parts[i * f..(i + 1) * f].copy_from_slice(s);
+            }
+            let out = rt.run(
+                &entry,
+                vec![HostTensor::F32(parts, vec![k, p.months, p.stat_fields])],
+            )?;
+            next.push(out[0].clone());
+        }
+        partials = next;
+    }
+    Ok(partials.pop().expect("non-empty"))
+}
+
+/// Final per-month estimates (the quantity §4.1.1.2 reports: "typical
+/// user ratings by month", with a confidence interval).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetflixStats {
+    pub mean: Vec<f64>,
+    /// 95% CI half-width per month (t≈1.96 normal approximation).
+    pub ci_half: Vec<f64>,
+    pub count: Vec<f64>,
+}
+
+/// Turn the reduced `[months × (sum, sumsq, count)]` tensor into
+/// mean/CI — scalar math after the reduce tree bottoms out.
+pub fn finalize_netflix(p: &ModelParams, stats: &[f32]) -> Result<NetflixStats> {
+    let f = p.stat_fields;
+    if stats.len() != p.months * f {
+        return Err(Error::Artifact(format!(
+            "finalize: stats {} != {}×{f}",
+            stats.len(),
+            p.months
+        )));
+    }
+    let mut out = NetflixStats {
+        mean: Vec::with_capacity(p.months),
+        ci_half: Vec::with_capacity(p.months),
+        count: Vec::with_capacity(p.months),
+    };
+    for m in 0..p.months {
+        let sum = stats[m * f] as f64;
+        let sumsq = stats[m * f + 1] as f64;
+        let n = stats[m * f + 2] as f64;
+        if n < 1.0 {
+            out.mean.push(f64::NAN);
+            out.ci_half.push(f64::NAN);
+            out.count.push(n);
+            continue;
+        }
+        let mean = sum / n;
+        let var = if n > 1.0 {
+            ((sumsq - sum * sum / n) / (n - 1.0)).max(0.0)
+        } else {
+            0.0
+        };
+        out.mean.push(mean);
+        out.ci_half.push(1.96 * (var / n).sqrt());
+        out.count.push(n);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finalize_handles_simple_stats() {
+        let p = ModelParams::default();
+        let f = p.stat_fields;
+        let mut stats = vec![0.0f32; p.months * f];
+        // month 0: ratings {3, 5} → mean 4, var 2
+        stats[0] = 8.0;
+        stats[1] = 34.0;
+        stats[2] = 2.0;
+        let s = finalize_netflix(&p, &stats).unwrap();
+        assert!((s.mean[0] - 4.0).abs() < 1e-9);
+        let want_ci = 1.96 * (2.0f64 / 2.0).sqrt();
+        assert!((s.ci_half[0] - want_ci).abs() < 1e-9);
+        // empty month → NaN mean, count 0
+        assert!(s.mean[1].is_nan());
+        assert_eq!(s.count[1], 0.0);
+    }
+
+    #[test]
+    fn finalize_rejects_wrong_len() {
+        let p = ModelParams::default();
+        assert!(finalize_netflix(&p, &[0.0; 5]).is_err());
+    }
+
+    // Tree-reduce correctness against a host-side oracle lives in
+    // rust/tests/integration_runtime.rs (needs compiled artifacts).
+}

@@ -1,0 +1,139 @@
+//! Block wire format: how one sample's tensors travel through the dfs.
+//!
+//! Layout (little-endian):
+//!   magic  u32 = 0x42545342 ("BSTB")
+//!   kind   u32   (0 = eaglet family, 1 = netflix movie)
+//!   id     u64
+//!   units  u32   (eaglet: chunk count; netflix: 1)
+//!   nf32   u32   number of f32 payload words
+//!   payload [nf32 × f32]
+//!
+//! EAGLET payload: per chunk, geno[M*I] then pos[M].
+//! Netflix payload: vals[N], months[N], mask[N].
+
+use crate::error::{Error, Result};
+
+pub const MAGIC: u32 = 0x4254_5342;
+pub const KIND_EAGLET: u32 = 0;
+pub const KIND_NETFLIX: u32 = 1;
+
+/// Identifies one sample's block in the store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId {
+    pub kind: u32,
+    pub sample: u64,
+}
+
+impl BlockId {
+    pub fn key(&self) -> String {
+        format!("b{}:{}", self.kind, self.sample)
+    }
+}
+
+/// A decoded block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub id: BlockId,
+    pub units: u32,
+    pub payload: Vec<f32>,
+}
+
+impl Block {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(24 + self.payload.len() * 4);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&self.id.kind.to_le_bytes());
+        out.extend_from_slice(&self.id.sample.to_le_bytes());
+        out.extend_from_slice(&self.units.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        for v in &self.payload {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Block> {
+        if bytes.len() < 24 {
+            return Err(Error::Data("block too short".into()));
+        }
+        let rd_u32 = |o: usize| {
+            u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap())
+        };
+        if rd_u32(0) != MAGIC {
+            return Err(Error::Data("bad block magic".into()));
+        }
+        let kind = rd_u32(4);
+        let sample = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let units = rd_u32(16);
+        let nf32 = rd_u32(20) as usize;
+        if bytes.len() != 24 + nf32 * 4 {
+            return Err(Error::Data(format!(
+                "block length {} != expected {}",
+                bytes.len(),
+                24 + nf32 * 4
+            )));
+        }
+        let mut payload = Vec::with_capacity(nf32);
+        for i in 0..nf32 {
+            let o = 24 + i * 4;
+            payload.push(f32::from_le_bytes(
+                bytes[o..o + 4].try_into().unwrap(),
+            ));
+        }
+        Ok(Block { id: BlockId { kind, sample }, units, payload })
+    }
+
+    pub fn byte_len(&self) -> usize {
+        24 + self.payload.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let n = rng.below(512) as usize;
+            let b = Block {
+                id: BlockId {
+                    kind: rng.below(2) as u32,
+                    sample: rng.next_u64(),
+                },
+                units: rng.below(30) as u32 + 1,
+                payload: (0..n).map(|_| rng.f32()).collect(),
+            };
+            let enc = b.encode();
+            assert_eq!(enc.len(), b.byte_len());
+            assert_eq!(Block::decode(&enc).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let b = Block {
+            id: BlockId { kind: 0, sample: 7 },
+            units: 2,
+            payload: vec![1.0, 2.0],
+        };
+        let mut enc = b.encode();
+        assert!(Block::decode(&enc[..10]).is_err()); // truncated header
+        enc[0] ^= 0xFF; // bad magic
+        assert!(Block::decode(&enc).is_err());
+        let enc2 = b.encode();
+        assert!(Block::decode(&enc2[..enc2.len() - 1]).is_err()); // short
+    }
+
+    #[test]
+    fn key_is_unique_per_sample() {
+        let a = BlockId { kind: 0, sample: 1 }.key();
+        let b = BlockId { kind: 1, sample: 1 }.key();
+        let c = BlockId { kind: 0, sample: 2 }.key();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

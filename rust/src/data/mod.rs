@@ -1,0 +1,84 @@
+//! Data layer: sample model, synthetic generators for both subsampling
+//! workloads, and the block wire format stored in the distributed
+//! in-memory store (`dfs`).
+//!
+//! Terminology follows the thesis (§3.1): input data is grouped by a
+//! unique key into **samples** (an EAGLET *family*, a Netflix *movie*);
+//! a **task** processes `task size` worth of samples in one software-
+//! component invocation. EAGLET samples are measured in fixed-size
+//! *chunks* (see python/compile/shapes.py) so heavy-tailed families —
+//! including the paper's 15× and 7× outliers — are representable under
+//! shape-static compiled artifacts.
+
+pub mod block;
+pub mod eaglet;
+pub mod netflix;
+pub mod params;
+
+pub use block::{Block, BlockId};
+pub use params::ModelParams;
+
+/// Which subsampling workload a dataset/job belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    Eaglet,
+    /// Netflix with the high-confidence subsample size (S_HI).
+    NetflixHi,
+    /// Netflix with the low-confidence subsample size (S_LO).
+    NetflixLo,
+}
+
+impl Workload {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Eaglet => "eaglet",
+            Workload::NetflixHi => "netflix_hi",
+            Workload::NetflixLo => "netflix_lo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "eaglet" => Some(Workload::Eaglet),
+            "netflix_hi" | "netflix-hi" => Some(Workload::NetflixHi),
+            "netflix_lo" | "netflix-lo" => Some(Workload::NetflixLo),
+            _ => None,
+        }
+    }
+}
+
+/// Size/identity metadata for one sample — all the scheduler and the
+/// kneepoint packer ever need (payloads stay in the data layer).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SampleMeta {
+    pub id: u64,
+    /// Payload size in bytes, as stored in the dfs block.
+    pub bytes: usize,
+    /// Compiled-shape units this sample occupies in a map batch
+    /// (EAGLET: chunks; Netflix: always 1 movie row).
+    pub units: u32,
+}
+
+/// A dataset the coordinator can run a job over.
+pub trait Dataset: Send + Sync {
+    fn workload(&self) -> Workload;
+    fn metas(&self) -> &[SampleMeta];
+    /// Encode sample `id` into its dfs block payload.
+    fn encode_block(&self, id: u64) -> Block;
+    fn total_bytes(&self) -> usize {
+        self.metas().iter().map(|m| m.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_name_round_trip() {
+        for w in [Workload::Eaglet, Workload::NetflixHi, Workload::NetflixLo] {
+            assert_eq!(Workload::parse(w.name()), Some(w));
+        }
+        assert_eq!(Workload::parse("hadoop"), None);
+    }
+}

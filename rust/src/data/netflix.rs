@@ -1,0 +1,214 @@
+//! Synthetic Netflix-ratings dataset: per-movie rating tuples.
+//!
+//! Stands in for the Netflix Prize data (§4.1.1.2: tuples of
+//! (date, user, rating) per movie; the workload estimates typical user
+//! ratings by month, trading confidence for speed by subsample size).
+//! Ratings-per-movie follows a power law (blockbusters vs long tail);
+//! each movie has a latent per-month quality curve so subsampled monthly
+//! means converge to something real.
+
+use super::block::{Block, BlockId, KIND_NETFLIX};
+use super::params::ModelParams;
+use super::{Dataset, SampleMeta, Workload};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct NetflixConfig {
+    pub movies: usize,
+    pub seed: u64,
+    /// Power-law exponent for ratings-per-movie.
+    pub tail_alpha: f64,
+    /// High (S_HI) vs low (S_LO) confidence subsampling.
+    pub high_confidence: bool,
+}
+
+impl Default for NetflixConfig {
+    fn default() -> Self {
+        NetflixConfig {
+            movies: 256,
+            seed: 0x0EF11C5,
+            tail_alpha: 1.3,
+            high_confidence: false,
+        }
+    }
+}
+
+/// One movie sample, padded to `ratings_cap`.
+#[derive(Debug, Clone)]
+pub struct Movie {
+    pub id: u64,
+    pub n_ratings: u32,
+    pub vals: Vec<f32>,   // [cap]
+    pub months: Vec<f32>, // [cap], 0..12
+    pub mask: Vec<f32>,   // [cap], 1.0 valid
+}
+
+#[derive(Debug, Clone)]
+pub struct NetflixDataset {
+    pub params: ModelParams,
+    pub config: NetflixConfig,
+    pub movies: Vec<Movie>,
+    metas: Vec<SampleMeta>,
+}
+
+impl NetflixDataset {
+    pub fn generate(params: &ModelParams, config: NetflixConfig) -> Self {
+        let mut rng = Rng::new(config.seed);
+        let cap = params.ratings_cap;
+        let mut movies = Vec::with_capacity(config.movies);
+        for id in 0..config.movies as u64 {
+            let mut r = rng.fork(id);
+            // ratings count: power law clamped to [8, cap]
+            let raw = 8.0 * r.pareto(config.tail_alpha);
+            let n = (raw.round() as usize).clamp(8, cap) as u32;
+            // latent monthly quality curve around a base rating
+            let base = 2.0 + 2.0 * r.f64();
+            let seasonal: Vec<f64> = (0..params.months)
+                .map(|_| r.normal_ms(0.0, 0.4))
+                .collect();
+            let mut vals = vec![0.0f32; cap];
+            let mut months = vec![0.0f32; cap];
+            let mut mask = vec![0.0f32; cap];
+            for j in 0..n as usize {
+                let mo = r.below(params.months as u64) as usize;
+                let v = (base + seasonal[mo] + r.normal_ms(0.0, 0.8))
+                    .clamp(1.0, 5.0);
+                vals[j] = v as f32;
+                months[j] = mo as f32;
+                mask[j] = 1.0;
+            }
+            movies.push(Movie { id, n_ratings: n, vals, months, mask });
+        }
+        let bytes = params.movie_bytes();
+        let metas = movies
+            .iter()
+            .map(|m| SampleMeta { id: m.id, bytes, units: 1 })
+            .collect();
+        NetflixDataset { params: params.clone(), config, movies, metas }
+    }
+
+    /// Scale by appending movies (job-size sweeps, Fig 15).
+    pub fn scaled_to(&self, target_bytes: usize) -> NetflixDataset {
+        let need = target_bytes.div_ceil(self.params.movie_bytes());
+        if need <= self.movies.len() {
+            return self.clone();
+        }
+        let config = NetflixConfig {
+            movies: need,
+            seed: self.config.seed,
+            ..self.config.clone()
+        };
+        NetflixDataset::generate(&self.params, config)
+    }
+
+    pub fn movie(&self, id: u64) -> Option<&Movie> {
+        self.movies.get(id as usize).filter(|m| m.id == id)
+    }
+}
+
+impl Dataset for NetflixDataset {
+    fn workload(&self) -> Workload {
+        if self.config.high_confidence {
+            Workload::NetflixHi
+        } else {
+            Workload::NetflixLo
+        }
+    }
+
+    fn metas(&self) -> &[SampleMeta] {
+        &self.metas
+    }
+
+    fn encode_block(&self, id: u64) -> Block {
+        let m = self.movie(id).expect("unknown movie id");
+        let mut payload =
+            Vec::with_capacity(3 * self.params.ratings_cap);
+        payload.extend_from_slice(&m.vals);
+        payload.extend_from_slice(&m.months);
+        payload.extend_from_slice(&m.mask);
+        Block {
+            id: BlockId { kind: KIND_NETFLIX, sample: id },
+            units: 1,
+            payload,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(hi: bool) -> NetflixDataset {
+        NetflixDataset::generate(
+            &ModelParams::default(),
+            NetflixConfig {
+                movies: 64,
+                high_confidence: hi,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(small(false).movies[9].vals, small(false).movies[9].vals);
+    }
+
+    #[test]
+    fn ratings_within_bounds() {
+        let d = small(false);
+        for m in &d.movies {
+            assert!(m.n_ratings >= 8);
+            assert!(m.n_ratings as usize <= d.params.ratings_cap);
+            for j in 0..m.n_ratings as usize {
+                assert!(m.mask[j] == 1.0);
+                assert!((1.0..=5.0).contains(&m.vals[j]));
+                assert!((0.0..12.0).contains(&m.months[j]));
+            }
+            // padding is masked out
+            for j in m.n_ratings as usize..d.params.ratings_cap {
+                assert_eq!(m.mask[j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn power_law_tail() {
+        let d = NetflixDataset::generate(
+            &ModelParams::default(),
+            NetflixConfig { movies: 2000, ..Default::default() },
+        );
+        let counts: Vec<u32> = d.movies.iter().map(|m| m.n_ratings).collect();
+        let capped = counts
+            .iter()
+            .filter(|&&c| c as usize == d.params.ratings_cap)
+            .count();
+        let small = counts.iter().filter(|&&c| c < 16).count();
+        assert!(capped > 10, "expected some blockbusters, got {capped}");
+        assert!(small > 200, "expected a long tail, got {small}");
+    }
+
+    #[test]
+    fn confidence_sets_workload() {
+        assert_eq!(small(true).workload(), Workload::NetflixHi);
+        assert_eq!(small(false).workload(), Workload::NetflixLo);
+    }
+
+    #[test]
+    fn block_round_trip_and_meta_bytes() {
+        let d = small(false);
+        let b = d.encode_block(3);
+        assert_eq!(Block::decode(&b.encode()).unwrap(), b);
+        assert_eq!(b.payload.len() * 4, d.metas()[3].bytes);
+        assert_eq!(b.units, 1);
+    }
+
+    #[test]
+    fn scaled_to_adds_movies() {
+        let d = small(false);
+        let s = d.scaled_to(d.total_bytes() * 4);
+        assert!(s.movies.len() >= d.movies.len() * 4);
+        // prefix is identical (same seed, same per-movie fork)
+        assert_eq!(s.movies[5].vals, d.movies[5].vals);
+    }
+}

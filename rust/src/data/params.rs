@@ -1,0 +1,138 @@
+//! Compiled model parameters — the rust mirror of python/compile/shapes.py.
+//!
+//! The defaults below MUST match shapes.py; at startup the runtime parses
+//! artifacts/manifest.json and overrides them, so a drift between the two
+//! sides is caught the moment shapes disagree (`Manifest::validate`).
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    pub markers: usize,      // M: SNP markers per EAGLET chunk
+    pub individuals: usize,  // I
+    pub subsample: usize,    // S: markers per subsample round
+    pub rounds: usize,       // R
+    pub grid: usize,         // G: LOD grid points
+    pub bandwidth: f64,
+    pub ratings_cap: usize,  // N: padded ratings per movie
+    pub months: usize,
+    pub s_hi: usize,
+    pub s_lo: usize,
+    pub stat_fields: usize,
+    pub buckets: Vec<usize>, // compiled samples-per-task buckets
+    pub reduce_fan: usize,   // K: parts per reduce call
+    pub chunk_bytes: usize,  // bytes per EAGLET chunk in the data layer
+}
+
+impl Default for ModelParams {
+    fn default() -> Self {
+        ModelParams {
+            markers: 64,
+            individuals: 8,
+            subsample: 16,
+            rounds: 8,
+            grid: 32,
+            bandwidth: 0.15,
+            ratings_cap: 256,
+            months: 12,
+            s_hi: 128,
+            s_lo: 16,
+            stat_fields: 3,
+            buckets: vec![1, 4, 16, 64],
+            reduce_fan: 16,
+            chunk_bytes: 64 * 8 * 4 + 64 * 4,
+        }
+    }
+}
+
+impl ModelParams {
+    /// Parse the `params` block of artifacts/manifest.json.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(ModelParams {
+            markers: j.req_usize("markers")?,
+            individuals: j.req_usize("individuals")?,
+            subsample: j.req_usize("subsample")?,
+            rounds: j.req_usize("rounds")?,
+            grid: j.req_usize("grid")?,
+            bandwidth: j.req_f64("bandwidth")?,
+            ratings_cap: j.req_usize("ratings_cap")?,
+            months: j.req_usize("months")?,
+            s_hi: j.req_usize("s_hi")?,
+            s_lo: j.req_usize("s_lo")?,
+            stat_fields: j.req_usize("stat_fields")?,
+            buckets: j
+                .req_arr("buckets")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            reduce_fan: j.req_usize("reduce_fan")?,
+            chunk_bytes: j.req_usize("chunk_bytes")?,
+        })
+    }
+
+    /// Smallest compiled bucket that fits `units` samples, or None if the
+    /// task must be split first.
+    pub fn bucket_for(&self, units: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| units <= b)
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().expect("buckets non-empty")
+    }
+
+    /// Bytes of one Netflix movie sample in the data layer
+    /// (vals + months + mask, f32 each).
+    pub fn movie_bytes(&self) -> usize {
+        self.ratings_cap * 3 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_chunk_bytes_consistent() {
+        let p = ModelParams::default();
+        assert_eq!(
+            p.chunk_bytes,
+            p.markers * p.individuals * 4 + p.markers * 4
+        );
+    }
+
+    #[test]
+    fn bucket_for_boundaries() {
+        let p = ModelParams::default();
+        assert_eq!(p.bucket_for(1), Some(1));
+        assert_eq!(p.bucket_for(2), Some(4));
+        assert_eq!(p.bucket_for(64), Some(64));
+        assert_eq!(p.bucket_for(65), None);
+        assert_eq!(p.max_bucket(), 64);
+    }
+
+    #[test]
+    fn parses_from_json() {
+        let p = ModelParams::default();
+        let text = format!(
+            r#"{{"markers":{},"individuals":{},"subsample":{},"rounds":{},
+              "grid":{},"bandwidth":{},"ratings_cap":{},"months":{},
+              "s_hi":{},"s_lo":{},"stat_fields":{},"buckets":[1,4,16,64],
+              "reduce_fan":{},"chunk_bytes":{}}}"#,
+            p.markers,
+            p.individuals,
+            p.subsample,
+            p.rounds,
+            p.grid,
+            p.bandwidth,
+            p.ratings_cap,
+            p.months,
+            p.s_hi,
+            p.s_lo,
+            p.stat_fields,
+            p.reduce_fan,
+            p.chunk_bytes
+        );
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(ModelParams::from_json(&j).unwrap(), p);
+    }
+}

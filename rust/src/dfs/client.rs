@@ -1,0 +1,265 @@
+//! Distributed store client: replica selection by observed response time.
+//!
+//! Thesis §3.5: "A data modelling engine collects the data fetch time
+//! from each node" — per-node EWMAs of response time; `get` prefers the
+//! replica with the lowest estimate (with an occasional exploration probe
+//! so recovered nodes are rediscovered), and every fetch feeds the
+//! estimate back.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use super::ring::Ring;
+use super::store::{DataNode, LatencyModel};
+use crate::error::{Error, Result};
+use crate::util::stats::Ewma;
+
+pub struct Dfs {
+    pub nodes: Vec<Arc<DataNode>>,
+    ring: RwLock<Ring>,
+    rf: AtomicUsize,
+    /// EWMA of measured wall response time per node (seconds).
+    response: Mutex<Vec<Ewma>>,
+    /// every Nth fetch probes a non-best replica
+    probe_every: u64,
+    fetch_seq: AtomicU64,
+}
+
+impl Dfs {
+    pub fn new(n_nodes: usize, rf: usize, latency: LatencyModel) -> Arc<Self> {
+        assert!(n_nodes > 0);
+        let nodes = (0..n_nodes)
+            .map(|id| Arc::new(DataNode::new(id, latency.clone())))
+            .collect();
+        Arc::new(Dfs {
+            nodes,
+            ring: RwLock::new(Ring::new(n_nodes, 64)),
+            rf: AtomicUsize::new(rf.clamp(1, n_nodes)),
+            response: Mutex::new(vec![Ewma::new(0.3); n_nodes]),
+            probe_every: 16,
+            fetch_seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn replication_factor(&self) -> usize {
+        self.rf.load(Ordering::SeqCst)
+    }
+
+    /// Change the replication factor; re-replicates (or trims) every
+    /// stored block to match. Called by the adaptive controller.
+    pub fn set_replication_factor(&self, rf: usize) {
+        let rf = rf.clamp(1, self.nodes.len());
+        let old = self.rf.swap(rf, Ordering::SeqCst);
+        if rf == old {
+            return;
+        }
+        // Re-place all keys currently on node 0's view of the world: walk
+        // every node's blocks, collect the union of keys, re-pin.
+        let mut keys: Vec<(String, Arc<Vec<u8>>)> = Vec::new();
+        {
+            let ring = self.ring.read().unwrap();
+            let mut seen = std::collections::HashSet::new();
+            for n in &self.nodes {
+                // snapshot keys (cheap: blocks are Arc'd)
+                for key in n.keys() {
+                    if seen.insert(key.clone()) {
+                        if let Ok((data, _)) = self.get_from_replicas(
+                            &ring.replicas(&key, self.nodes.len()),
+                            &key,
+                        ) {
+                            keys.push((key, data));
+                        }
+                    }
+                }
+            }
+        }
+        for (key, data) in keys {
+            self.put(&key, data);
+        }
+    }
+
+    /// Store a block on the current replica set.
+    pub fn put(&self, key: &str, data: Arc<Vec<u8>>) {
+        let rf = self.replication_factor();
+        let ring = self.ring.read().unwrap();
+        let reps = ring.replicas(key, rf);
+        for &n in &reps {
+            self.nodes[n].put(key.to_string(), data.clone());
+        }
+        // trim stale copies beyond the replica set
+        for n in 0..self.nodes.len() {
+            if !reps.contains(&n) {
+                self.nodes[n].remove(key);
+            }
+        }
+    }
+
+    /// Fetch a block from the best replica; records response time.
+    pub fn get(&self, key: &str) -> Result<(Arc<Vec<u8>>, f64)> {
+        let rf = self.replication_factor();
+        let reps = self.ring.read().unwrap().replicas(key, rf);
+        self.get_from_replicas(&reps, key)
+    }
+
+    fn get_from_replicas(
+        &self,
+        reps: &[usize],
+        key: &str,
+    ) -> Result<(Arc<Vec<u8>>, f64)> {
+        let seq = self.fetch_seq.fetch_add(1, Ordering::Relaxed);
+        let choice = {
+            let resp = self.response.lock().unwrap();
+            let mut order: Vec<usize> = reps.to_vec();
+            order.sort_by(|&a, &b| {
+                resp[a]
+                    .get_or(0.0)
+                    .partial_cmp(&resp[b].get_or(0.0))
+                    .unwrap()
+            });
+            if seq % self.probe_every == 0 && order.len() > 1 {
+                order[1 + (seq as usize / self.probe_every as usize) % (order.len() - 1)]
+            } else {
+                order[0]
+            }
+        };
+        let mut last_err = None;
+        // try chosen first, fall back over the remaining replicas
+        let mut tries = vec![choice];
+        tries.extend(reps.iter().copied().filter(|&n| n != choice));
+        for n in tries {
+            let t = Instant::now();
+            match self.nodes[n].get(key) {
+                Ok((data, _service)) => {
+                    let wall = t.elapsed().as_secs_f64();
+                    self.response.lock().unwrap()[n].observe(wall);
+                    return Ok((data, wall));
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| Error::Dfs(format!("no replicas for {key}"))))
+    }
+
+    /// Mean observed response time across nodes that served anything.
+    pub fn mean_response(&self) -> Option<f64> {
+        let resp = self.response.lock().unwrap();
+        let vals: Vec<f64> = resp.iter().filter_map(|e| e.get()).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    pub fn per_node_response(&self) -> Vec<Option<f64>> {
+        self.response.lock().unwrap().iter().map(|e| e.get()).collect()
+    }
+
+    pub fn total_fetches(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| n.fetches.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(n: usize, rf: usize) -> Arc<Dfs> {
+        Dfs::new(n, rf, LatencyModel::none())
+    }
+
+    #[test]
+    fn put_get_round_trip() {
+        let d = store(4, 2);
+        d.put("k1", Arc::new(vec![1, 2, 3]));
+        let (data, _) = d.get("k1").unwrap();
+        assert_eq!(*data, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn replication_factor_controls_copies() {
+        let d = store(5, 3);
+        for k in 0..40 {
+            d.put(&format!("k{k}"), Arc::new(vec![k as u8]));
+        }
+        let copies: usize = d.nodes.iter().map(|n| n.block_count()).sum();
+        assert_eq!(copies, 40 * 3);
+    }
+
+    #[test]
+    fn set_rf_rereplicates() {
+        let d = store(5, 1);
+        for k in 0..20 {
+            d.put(&format!("k{k}"), Arc::new(vec![k as u8; 10]));
+        }
+        assert_eq!(
+            d.nodes.iter().map(|n| n.block_count()).sum::<usize>(),
+            20
+        );
+        d.set_replication_factor(4);
+        assert_eq!(
+            d.nodes.iter().map(|n| n.block_count()).sum::<usize>(),
+            80
+        );
+        // every key still readable
+        for k in 0..20 {
+            assert!(d.get(&format!("k{k}")).is_ok());
+        }
+        d.set_replication_factor(2);
+        assert_eq!(
+            d.nodes.iter().map(|n| n.block_count()).sum::<usize>(),
+            40
+        );
+    }
+
+    #[test]
+    fn prefers_fast_replica() {
+        // two nodes, one artificially slow: after warm-up, the fast one
+        // should take the vast majority of fetches.
+        let slow = LatencyModel {
+            base_s: 3e-3,
+            per_mib_s: 0.0,
+            per_inflight_s: 0.0,
+            sleep: true,
+        };
+        let nodes = vec![
+            Arc::new(DataNode::new(0, LatencyModel::none())),
+            Arc::new(DataNode::new(1, slow)),
+        ];
+        let d = Dfs {
+            nodes,
+            ring: RwLock::new(Ring::new(2, 64)),
+            rf: AtomicUsize::new(2),
+            response: Mutex::new(vec![Ewma::new(0.3); 2]),
+            probe_every: 16,
+            fetch_seq: AtomicU64::new(0),
+        };
+        d.put("x", Arc::new(vec![0u8; 64]));
+        for _ in 0..60 {
+            d.get("x").unwrap();
+        }
+        let f0 = d.nodes[0].fetches.load(Ordering::Relaxed);
+        let f1 = d.nodes[1].fetches.load(Ordering::Relaxed);
+        assert!(f0 > 3 * f1, "fast {f0} vs slow {f1}");
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let d = store(3, 2);
+        assert!(d.get("ghost").is_err());
+    }
+
+    #[test]
+    fn mean_response_tracks() {
+        let d = store(2, 2);
+        assert!(d.mean_response().is_none());
+        d.put("a", Arc::new(vec![1]));
+        d.get("a").unwrap();
+        assert!(d.mean_response().unwrap() >= 0.0);
+    }
+}

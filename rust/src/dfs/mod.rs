@@ -1,0 +1,23 @@
+//! "CassandraLite" — the scalable distributed in-memory data layer
+//! (thesis §3.5, Fig 7, built on Cassandra in the original system [44]).
+//!
+//! Components:
+//! - `ring`:        consistent-hash placement with virtual nodes
+//! - `store`:       in-memory data nodes with a service-time model
+//! - `client`:      response-time-aware replica selection (`Dfs`)
+//! - `replication`: the adaptive replication-factor controller
+//! - `prefetch`:    scheduler-driven prefetching with dynamic depth k
+
+pub mod client;
+pub mod prefetch;
+pub mod replication;
+pub mod ring;
+pub mod store;
+
+pub use client::Dfs;
+pub use prefetch::{prefetch_depth, Prefetcher};
+pub use replication::{
+    decide, initial_data_nodes, ControllerState, ReplicationPolicy,
+};
+pub use ring::Ring;
+pub use store::{DataNode, LatencyModel};

@@ -1,0 +1,184 @@
+//! Prefetcher: hide data-fetch latency behind task execution.
+//!
+//! Thesis §3.5: "Since the tasks are assigned in groups, we pre-fetch the
+//! data based on scheduler. While a task is being processed, data
+//! required for the next k tasks are pre-fetched. K is decided
+//! dynamically from the average data fetch time and average task
+//! execution time."
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::client::Dfs;
+use crate::error::Result;
+use crate::util::stats::Ewma;
+
+/// Dynamic prefetch depth: enough fetches in flight to cover one task's
+/// execution window, clamped.
+pub fn prefetch_depth(avg_fetch_s: f64, avg_exec_s: f64, max_k: usize) -> usize {
+    if avg_exec_s <= 0.0 {
+        return 1;
+    }
+    let k = (avg_fetch_s / avg_exec_s).ceil() as usize + 1;
+    k.clamp(1, max_k.max(1))
+}
+
+/// Worker-local block cache fed ahead of execution. Single-threaded by
+/// design — each worker owns one (fetches happen between task executions
+/// on the worker's thread; the *k* depth bounds how far ahead it reads).
+pub struct Prefetcher {
+    dfs: Arc<Dfs>,
+    cache: HashMap<String, Arc<Vec<u8>>>,
+    /// keys queued but not yet fetched, in task order
+    pending: std::collections::VecDeque<String>,
+    pub max_k: usize,
+    fetch_ewma: Ewma,
+    exec_ewma: Ewma,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Prefetcher {
+    pub fn new(dfs: Arc<Dfs>, max_k: usize) -> Self {
+        Prefetcher {
+            dfs,
+            cache: HashMap::new(),
+            pending: std::collections::VecDeque::new(),
+            max_k,
+            fetch_ewma: Ewma::new(0.3),
+            exec_ewma: Ewma::new(0.3),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Enqueue upcoming block keys (in the order tasks will run).
+    pub fn enqueue(&mut self, keys: impl IntoIterator<Item = String>) {
+        self.pending.extend(keys);
+    }
+
+    /// Record a task execution time (feeds the dynamic k).
+    pub fn observe_exec(&mut self, secs: f64) {
+        self.exec_ewma.observe(secs);
+    }
+
+    pub fn depth(&self) -> usize {
+        prefetch_depth(
+            self.fetch_ewma.get_or(1e-4),
+            self.exec_ewma.get_or(1e-3),
+            self.max_k,
+        )
+    }
+
+    /// Pull queued blocks into the cache up to the current depth. Called
+    /// between task executions ("while a task is being processed, data
+    /// can be fetched for the tasks in the queue").
+    pub fn pump(&mut self) -> Result<()> {
+        let want = self.depth().saturating_sub(self.cache.len());
+        for _ in 0..want {
+            let Some(key) = self.pending.pop_front() else { break };
+            if self.cache.contains_key(&key) {
+                continue;
+            }
+            let (data, secs) = self.dfs.get(&key)?;
+            self.fetch_ewma.observe(secs);
+            self.cache.insert(key, data);
+        }
+        Ok(())
+    }
+
+    /// Fetch a block for immediate use: from cache if prefetched,
+    /// otherwise synchronously (a prefetch miss — the task waits).
+    pub fn take(&mut self, key: &str) -> Result<Arc<Vec<u8>>> {
+        if let Some(data) = self.cache.remove(key) {
+            self.hits += 1;
+            return Ok(data);
+        }
+        self.misses += 1;
+        // remove from pending if queued (we're fetching it now)
+        if let Some(pos) = self.pending.iter().position(|k| k == key) {
+            self.pending.remove(pos);
+        }
+        let (data, secs) = self.dfs.get(key)?;
+        self.fetch_ewma.observe(secs);
+        Ok(data)
+    }
+
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::store::LatencyModel;
+
+    #[test]
+    fn depth_grows_with_fetch_time() {
+        assert_eq!(prefetch_depth(0.001, 0.010, 8), 2);
+        assert_eq!(prefetch_depth(0.010, 0.010, 8), 2);
+        assert_eq!(prefetch_depth(0.050, 0.010, 8), 6);
+        assert_eq!(prefetch_depth(10.0, 0.010, 8), 8); // clamped
+        assert_eq!(prefetch_depth(0.0, 0.010, 8), 1);
+    }
+
+    fn dfs_with_blocks(n: usize) -> Arc<Dfs> {
+        let d = Dfs::new(2, 2, LatencyModel::none());
+        for k in 0..n {
+            d.put(&format!("b{k}"), Arc::new(vec![k as u8; 128]));
+        }
+        d
+    }
+
+    #[test]
+    fn pump_then_take_hits() {
+        let d = dfs_with_blocks(10);
+        let mut p = Prefetcher::new(d, 8);
+        p.enqueue((0..10).map(|k| format!("b{k}")));
+        p.observe_exec(0.01);
+        p.pump().unwrap();
+        assert!(p.cached() >= 1);
+        let first_cached = p.cached();
+        let data = p.take("b0").unwrap();
+        assert_eq!(data[0], 0);
+        assert_eq!(p.hits + p.misses, 1);
+        assert!(p.cached() <= first_cached);
+    }
+
+    #[test]
+    fn take_without_prefetch_still_works() {
+        let d = dfs_with_blocks(3);
+        let mut p = Prefetcher::new(d, 4);
+        let data = p.take("b2").unwrap();
+        assert_eq!(data[0], 2);
+        assert_eq!(p.misses, 1);
+    }
+
+    #[test]
+    fn sequential_workflow_mostly_hits() {
+        let d = dfs_with_blocks(32);
+        let mut p = Prefetcher::new(d, 8);
+        p.enqueue((0..32).map(|k| format!("b{k}")));
+        // simulate slow-ish fetches vs fast tasks => small k, but pump
+        // before each take keeps the next block ready
+        for k in 0..32 {
+            p.pump().unwrap();
+            p.take(&format!("b{k}")).unwrap();
+            p.observe_exec(0.002);
+        }
+        assert!(
+            p.hits >= 28,
+            "expected mostly prefetch hits, got {} hits {} misses",
+            p.hits,
+            p.misses
+        );
+    }
+
+    #[test]
+    fn missing_block_propagates_error() {
+        let d = dfs_with_blocks(1);
+        let mut p = Prefetcher::new(d, 2);
+        assert!(p.take("ghost").is_err());
+    }
+}

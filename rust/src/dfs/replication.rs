@@ -1,0 +1,174 @@
+//! Adaptive replication controller (thesis §3.5, Fig 7).
+//!
+//! "Since we know the task size and the number worker nodes prior to
+//! execution, we decide a few initial data nodes that all worker nodes
+//! access. Data is fully replicated across these nodes. Based on the
+//! response times from the initial set of data nodes, we estimate the
+//! cache interference between task execution and data fetch cycles; the
+//! replication factor (number of data nodes) is varied accordingly to
+//! meet the SLOs of tiny tasks."
+//!
+//! Controller: fetch time should stay a small fraction of task execution
+//! time ("time needed to read input data should not be a significant
+//! factor compared to task durations", §1.1.4). When the observed
+//! fetch/exec ratio exceeds the budget, widen the replica set (more data
+//! nodes → less queueing per node); when it is far under budget and above
+//! the floor, shrink to save memory.
+
+#[derive(Debug, Clone)]
+pub struct ReplicationPolicy {
+    /// Target ceiling for fetch_time / exec_time.
+    pub budget: f64,
+    /// Shrink when the ratio falls below `budget * shrink_margin`.
+    pub shrink_margin: f64,
+    pub min_rf: usize,
+    pub max_rf: usize,
+    /// Consecutive over-budget observations required before growing
+    /// (hysteresis against transient spikes — cf. replication-for-
+    /// predictability works [3],[32]).
+    pub patience: u32,
+}
+
+impl Default for ReplicationPolicy {
+    fn default() -> Self {
+        ReplicationPolicy {
+            budget: 0.25,
+            shrink_margin: 0.25,
+            min_rf: 2,
+            max_rf: 16,
+            patience: 2,
+        }
+    }
+}
+
+/// Decide the initial number of data nodes from what is known before
+/// execution (task size, worker count, link speed vs expected task time).
+pub fn initial_data_nodes(
+    workers: usize,
+    task_bytes: usize,
+    expected_task_s: f64,
+    policy: &ReplicationPolicy,
+) -> usize {
+    // Each worker generates ~1 fetch of task_bytes per task; a data node
+    // serving `c` concurrent workers needs task transfer time * c to stay
+    // under budget * task time.
+    let mib = task_bytes as f64 / (1024.0 * 1024.0);
+    let xfer_s = 120e-6 + mib * 8e-3; // LAN model (store::LatencyModel::lan)
+    let per_node_capacity =
+        ((policy.budget * expected_task_s) / xfer_s).max(1.0);
+    let rf = (workers as f64 / per_node_capacity).ceil() as usize;
+    rf.clamp(policy.min_rf, policy.max_rf)
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ControllerState {
+    over_budget_streak: u32,
+    under_budget_streak: u32,
+}
+
+/// One control step. Returns the new replication factor.
+pub fn decide(
+    policy: &ReplicationPolicy,
+    state: &mut ControllerState,
+    avg_fetch_s: f64,
+    avg_exec_s: f64,
+    current_rf: usize,
+) -> usize {
+    let exec = avg_exec_s.max(1e-9);
+    let ratio = avg_fetch_s / exec;
+    if ratio > policy.budget {
+        state.over_budget_streak += 1;
+        state.under_budget_streak = 0;
+        if state.over_budget_streak >= policy.patience {
+            state.over_budget_streak = 0;
+            return (current_rf + 1).min(policy.max_rf);
+        }
+    } else if ratio < policy.budget * policy.shrink_margin {
+        state.under_budget_streak += 1;
+        state.over_budget_streak = 0;
+        if state.under_budget_streak >= policy.patience * 2 {
+            state.under_budget_streak = 0;
+            return current_rf.saturating_sub(1).max(policy.min_rf);
+        }
+    } else {
+        state.over_budget_streak = 0;
+        state.under_budget_streak = 0;
+    }
+    current_rf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_when_fetch_dominates() {
+        let p = ReplicationPolicy::default();
+        let mut st = ControllerState::default();
+        let mut rf = 2;
+        for _ in 0..4 {
+            rf = decide(&p, &mut st, 0.5, 1.0, rf); // ratio 0.5 > 0.25
+        }
+        assert!(rf > 2, "rf should grow, got {rf}");
+    }
+
+    #[test]
+    fn shrinks_when_fetch_negligible() {
+        let p = ReplicationPolicy::default();
+        let mut st = ControllerState::default();
+        let mut rf = 8;
+        for _ in 0..10 {
+            rf = decide(&p, &mut st, 0.001, 1.0, rf);
+        }
+        assert!(rf < 8, "rf should shrink, got {rf}");
+        assert!(rf >= p.min_rf);
+    }
+
+    #[test]
+    fn stable_inside_band() {
+        let p = ReplicationPolicy::default();
+        let mut st = ControllerState::default();
+        let mut rf = 4;
+        for _ in 0..20 {
+            rf = decide(&p, &mut st, 0.15, 1.0, rf); // 0.0625 < 0.15 < 0.25
+        }
+        assert_eq!(rf, 4);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let p = ReplicationPolicy { max_rf: 5, min_rf: 2, ..Default::default() };
+        let mut st = ControllerState::default();
+        let mut rf = 5;
+        for _ in 0..10 {
+            rf = decide(&p, &mut st, 10.0, 1.0, rf);
+        }
+        assert_eq!(rf, 5);
+        let mut rf = 2;
+        for _ in 0..20 {
+            rf = decide(&p, &mut st, 0.0, 1.0, rf);
+        }
+        assert_eq!(rf, 2);
+    }
+
+    #[test]
+    fn hysteresis_ignores_single_spike() {
+        let p = ReplicationPolicy::default();
+        let mut st = ControllerState::default();
+        let rf = decide(&p, &mut st, 10.0, 1.0, 4); // one spike
+        assert_eq!(rf, 4);
+        let rf = decide(&p, &mut st, 0.1, 1.0, 4); // back to normal
+        assert_eq!(rf, 4);
+    }
+
+    #[test]
+    fn initial_nodes_scale_with_workers_and_task_size() {
+        let p = ReplicationPolicy::default();
+        let small = initial_data_nodes(12, 256 * 1024, 0.5, &p);
+        let many_workers = initial_data_nodes(72, 256 * 1024, 0.5, &p);
+        let big_tasks = initial_data_nodes(12, 24 * 1024 * 1024, 0.5, &p);
+        assert!(many_workers >= small);
+        assert!(big_tasks >= small);
+        assert!(small >= p.min_rf);
+    }
+}

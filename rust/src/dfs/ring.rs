@@ -1,0 +1,166 @@
+//! Consistent-hash ring with virtual nodes (the Cassandra-style placement
+//! substrate under the data distribution layer, thesis §3.5 / [44]).
+//!
+//! The BTS data layer starts from *full replication on a few data nodes*
+//! and adapts the replication factor; the ring provides the general
+//! placement primitive: `replicas(key, rf)` walks clockwise from the
+//! key's position over distinct physical nodes.
+
+use crate::util::rng::fnv1a;
+
+/// fnv1a mixes short, similar strings poorly in the high bits the ring
+/// orders by; finish with a splitmix64-style avalanche.
+#[inline]
+fn ring_hash(bytes: &[u8]) -> u64 {
+    let mut z = fnv1a(bytes);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// sorted (hash, node) points
+    points: Vec<(u64, usize)>,
+    nodes: usize,
+    vnodes: usize,
+}
+
+impl Ring {
+    pub fn new(nodes: usize, vnodes: usize) -> Self {
+        assert!(nodes > 0 && vnodes > 0);
+        let mut points = Vec::with_capacity(nodes * vnodes);
+        for n in 0..nodes {
+            for v in 0..vnodes {
+                let h = ring_hash(format!("node{n}#v{v}").as_bytes());
+                points.push((h, n));
+            }
+        }
+        points.sort_unstable();
+        points.dedup_by_key(|p| p.0);
+        Ring { points, nodes, vnodes }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes
+    }
+
+    /// Primary owner of `key`.
+    pub fn primary(&self, key: &str) -> usize {
+        self.replicas(key, 1)[0]
+    }
+
+    /// First `rf` *distinct* nodes clockwise from the key's hash.
+    pub fn replicas(&self, key: &str, rf: usize) -> Vec<usize> {
+        let rf = rf.clamp(1, self.nodes);
+        let h = ring_hash(key.as_bytes());
+        let start = self
+            .points
+            .partition_point(|&(ph, _)| ph < h)
+            % self.points.len();
+        let mut out = Vec::with_capacity(rf);
+        for i in 0..self.points.len() {
+            let (_, n) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&n) {
+                out.push(n);
+                if out.len() == rf {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Add a node (used by the adaptive replication controller when it
+    /// widens the data-node set).
+    pub fn grow(&self) -> Ring {
+        Ring::new(self.nodes + 1, self.vnodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use std::collections::HashMap;
+
+    #[test]
+    fn replicas_distinct_and_bounded() {
+        let r = Ring::new(5, 32);
+        for k in 0..100 {
+            let reps = r.replicas(&format!("key{k}"), 3);
+            assert_eq!(reps.len(), 3);
+            let mut d = reps.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 3);
+            assert!(reps.iter().all(|&n| n < 5));
+        }
+    }
+
+    #[test]
+    fn rf_clamped_to_node_count() {
+        let r = Ring::new(3, 16);
+        assert_eq!(r.replicas("x", 10).len(), 3);
+        assert_eq!(r.replicas("x", 0).len(), 1);
+    }
+
+    #[test]
+    fn balanced_within_factor() {
+        let r = Ring::new(6, 64);
+        let mut counts = HashMap::new();
+        for k in 0..6000 {
+            *counts.entry(r.primary(&format!("blk:{k}"))).or_insert(0usize) += 1;
+        }
+        let min = counts.values().min().copied().unwrap_or(0);
+        let max = counts.values().max().copied().unwrap();
+        assert!(counts.len() == 6, "some node owns nothing: {counts:?}");
+        assert!(
+            max < min * 4,
+            "imbalance too high: min {min} max {max}"
+        );
+    }
+
+    #[test]
+    fn prop_growth_is_mostly_monotone() {
+        // consistent hashing: adding a node remaps only a bounded share
+        // of keys
+        check("ring growth monotone", 20, |rng| {
+            let n = rng.range(3, 10) as usize;
+            let r1 = Ring::new(n, 48);
+            let r2 = r1.grow();
+            let total = 2000;
+            let mut moved = 0;
+            for k in 0..total {
+                let key = format!("k{k}");
+                let a = r1.primary(&key);
+                let b = r2.primary(&key);
+                if a != b {
+                    // keys may only move to the NEW node under growth
+                    prop_assert!(
+                        b == n,
+                        "key moved between old nodes {a}->{b} (n={n})"
+                    );
+                    moved += 1;
+                }
+            }
+            let expected = total / (n + 1);
+            prop_assert!(
+                moved < expected * 3,
+                "too many keys moved: {moved} vs expected ~{expected}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Ring::new(4, 16);
+        let b = Ring::new(4, 16);
+        for k in 0..50 {
+            let key = format!("z{k}");
+            assert_eq!(a.replicas(&key, 2), b.replicas(&key, 2));
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! In-memory data node — one member of the "CassandraLite" store.
+//!
+//! Thesis §3.5: "we need a distributed in-memory storage system that
+//! would have significantly low fetch time compared to job execution
+//! time". Each node holds immutable blocks behind an RwLock; fetches are
+//! cheap Arc clones. An optional service-time model (base + per-MB +
+//! load penalty) lets experiments reproduce the response-time dynamics
+//! that drive adaptive replication, without needing a real remote
+//! cluster.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Service-time model for one node.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Fixed per-request overhead (network RTT + lookup), seconds.
+    pub base_s: f64,
+    /// Transfer time per MiB, seconds.
+    pub per_mib_s: f64,
+    /// Extra delay per concurrent in-flight request (queueing).
+    pub per_inflight_s: f64,
+    /// Actually sleep for the modeled duration (end-to-end experiments)
+    /// vs just report it (fast unit tests / benches).
+    pub sleep: bool,
+}
+
+impl LatencyModel {
+    /// Instant fetches; still tracks counters.
+    pub fn none() -> Self {
+        LatencyModel { base_s: 0.0, per_mib_s: 0.0, per_inflight_s: 0.0, sleep: false }
+    }
+
+    /// A LAN-attached in-memory store (the platform's intended regime).
+    pub fn lan() -> Self {
+        LatencyModel {
+            base_s: 120e-6,
+            per_mib_s: 8e-3, // ~1 Gb/s
+            per_inflight_s: 60e-6,
+            sleep: true,
+        }
+    }
+}
+
+pub struct DataNode {
+    pub id: usize,
+    blocks: RwLock<HashMap<String, Arc<Vec<u8>>>>,
+    latency: LatencyModel,
+    inflight: AtomicUsize,
+    pub fetches: AtomicU64,
+    pub bytes_served: AtomicU64,
+}
+
+impl DataNode {
+    pub fn new(id: usize, latency: LatencyModel) -> Self {
+        DataNode {
+            id,
+            blocks: RwLock::new(HashMap::new()),
+            latency,
+            inflight: AtomicUsize::new(0),
+            fetches: AtomicU64::new(0),
+            bytes_served: AtomicU64::new(0),
+        }
+    }
+
+    pub fn put(&self, key: String, data: Arc<Vec<u8>>) {
+        self.blocks.write().unwrap().insert(key, data);
+    }
+
+    pub fn remove(&self, key: &str) {
+        self.blocks.write().unwrap().remove(key);
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.blocks.read().unwrap().contains_key(key)
+    }
+
+    pub fn block_count(&self) -> usize {
+        self.blocks.read().unwrap().len()
+    }
+
+    /// Snapshot of stored keys (re-replication / tests).
+    pub fn keys(&self) -> Vec<String> {
+        self.blocks.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn stored_bytes(&self) -> usize {
+        self.blocks.read().unwrap().values().map(|b| b.len()).sum()
+    }
+
+    /// Fetch a block. Returns (data, modeled_service_seconds).
+    pub fn get(&self, key: &str) -> Result<(Arc<Vec<u8>>, f64)> {
+        let q = self.inflight.fetch_add(1, Ordering::SeqCst);
+        let out = (|| {
+            let data = self
+                .blocks
+                .read()
+                .unwrap()
+                .get(key)
+                .cloned()
+                .ok_or_else(|| {
+                    Error::Dfs(format!("node {}: missing block {key}", self.id))
+                })?;
+            let mib = data.len() as f64 / (1024.0 * 1024.0);
+            let service = self.latency.base_s
+                + mib * self.latency.per_mib_s
+                + q as f64 * self.latency.per_inflight_s;
+            if self.latency.sleep && service > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(service));
+            }
+            self.fetches.fetch_add(1, Ordering::Relaxed);
+            self.bytes_served
+                .fetch_add(data.len() as u64, Ordering::Relaxed);
+            Ok((data, service))
+        })();
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_round_trip() {
+        let n = DataNode::new(0, LatencyModel::none());
+        n.put("a".into(), Arc::new(vec![1, 2, 3]));
+        let (d, s) = n.get("a").unwrap();
+        assert_eq!(*d, vec![1, 2, 3]);
+        assert_eq!(s, 0.0);
+        assert_eq!(n.fetches.load(Ordering::Relaxed), 1);
+        assert_eq!(n.bytes_served.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn missing_block_errors() {
+        let n = DataNode::new(1, LatencyModel::none());
+        assert!(n.get("nope").is_err());
+    }
+
+    #[test]
+    fn service_time_scales_with_size() {
+        let mut lm = LatencyModel::lan();
+        lm.sleep = false; // just model, don't wait
+        let n = DataNode::new(0, lm);
+        n.put("small".into(), Arc::new(vec![0u8; 1024]));
+        n.put("big".into(), Arc::new(vec![0u8; 4 * 1024 * 1024]));
+        let (_, s_small) = n.get("small").unwrap();
+        let (_, s_big) = n.get("big").unwrap();
+        assert!(s_big > 4.0 * s_small, "{s_big} vs {s_small}");
+    }
+
+    #[test]
+    fn remove_and_contains() {
+        let n = DataNode::new(0, LatencyModel::none());
+        n.put("k".into(), Arc::new(vec![9]));
+        assert!(n.contains("k"));
+        n.remove("k");
+        assert!(!n.contains("k"));
+        assert_eq!(n.block_count(), 0);
+    }
+}

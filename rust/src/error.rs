@@ -1,0 +1,74 @@
+//! Crate-wide error type. Library APIs return `bts::Result<T>`;
+//! binaries/examples convert to `anyhow` at the edge.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("scheduler error: {0}")]
+    Scheduler(String),
+
+    #[error("dfs error: {0}")]
+    Dfs(String),
+
+    #[error("job failed after {attempts} attempts: {cause}")]
+    JobFailed { attempts: u32, cause: String },
+
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Other(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_variants() {
+        let e = Error::Config("bad cluster".into());
+        assert_eq!(e.to_string(), "config error: bad cluster");
+        let e = Error::JobFailed { attempts: 3, cause: "node died".into() };
+        assert!(e.to_string().contains("3 attempts"));
+    }
+
+    #[test]
+    fn converts_io() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,185 @@
+//! Cache-simulator figures: Fig 2 (the case for tiny tasks), Fig 3
+//! (kneepoint detection), Fig 9 (Netflix knees across confidence).
+
+use super::Ctx;
+use crate::cachesim::CacheConfig;
+use crate::data::Workload;
+use crate::kneepoint::{
+    default_sizes, kneepoints, profile_workload, smallest_kneepoint,
+    KNEE_THRESHOLD,
+};
+use crate::util::render_table;
+
+fn mb(bytes: usize) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+/// Fig 2: L2/L3 misses per instruction + normalized AMAT vs task size on
+/// EAGLET, Sandy-Bridge cache geometry.
+pub fn fig2(_ctx: &Ctx) -> String {
+    let cache = CacheConfig::sandy_bridge();
+    let profile =
+        profile_workload(Workload::Eaglet, &cache, &default_sizes(), None);
+    let base_amat = profile
+        .points
+        .iter()
+        .map(|p| p.amat)
+        .fold(f64::INFINITY, f64::min);
+    let rows: Vec<Vec<String>> = profile
+        .points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:.2}", mb(p.task_bytes)),
+                format!("{:.6}", p.l2_mpi),
+                format!("{:.6}", p.l3_mpi),
+                format!("{:.1}", p.amat / base_amat),
+            ]
+        })
+        .collect();
+    let l2_knees = kneepoints(&profile.l2_curve(), KNEE_THRESHOLD);
+    let l3_knees = kneepoints(&profile.l3_curve(), KNEE_THRESHOLD);
+    let ratio = {
+        let at = |target_mb: f64| {
+            profile
+                .points
+                .iter()
+                .min_by(|a, b| {
+                    (mb(a.task_bytes) - target_mb)
+                        .abs()
+                        .partial_cmp(&(mb(b.task_bytes) - target_mb).abs())
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        at(25.0).l2_mpi / at(2.5).l2_mpi.max(1e-12)
+    };
+    let amat_growth = profile
+        .points
+        .iter()
+        .map(|p| p.amat)
+        .fold(0.0f64, f64::max)
+        / base_amat;
+    format!(
+        "{}\nL2 kneepoints: {:?} MB   L3 kneepoints: {:?} MB\n\
+         25MB/2.5MB L2-miss ratio: {ratio:.0}x   max AMAT growth: {amat_growth:.0}x\n\
+         paper: knees at 2.5 MB (L2) and 11 MB (L3); 25MB task sees 35x the\n\
+         paper: L2 misses/instr of a 2.5MB task; >1,000x AMAT growth overall\n",
+        render_table(
+            "Fig 2 — EAGLET task size vs cache behaviour (simulated Sandy Bridge)",
+            &["task MB", "L2 miss/instr", "L3 miss/instr", "AMAT (norm)"],
+            &rows,
+        ),
+        l2_knees.iter().map(|&b| mb(b)).collect::<Vec<_>>(),
+        l3_knees.iter().map(|&b| mb(b)).collect::<Vec<_>>(),
+    )
+}
+
+/// Fig 3: run the offline kneepoint algorithm end to end on the
+/// simulated profile and show what it picks.
+pub fn fig3(_ctx: &Ctx) -> String {
+    let cache = CacheConfig::sandy_bridge();
+    let mut out = String::new();
+    for (w, label) in [
+        (Workload::Eaglet, "EAGLET"),
+        (Workload::NetflixHi, "Netflix (high confidence)"),
+        (Workload::NetflixLo, "Netflix (low confidence)"),
+    ] {
+        let profile = profile_workload(w, &cache, &default_sizes(), None);
+        let knee = smallest_kneepoint(&profile.l2_curve(), KNEE_THRESHOLD);
+        out.push_str(&format!(
+            "{label:32} smallest kneepoint: {}\n",
+            knee.map(|b| format!("{:.2} MB", mb(b)))
+                .unwrap_or_else(|| "none (flat curve)".into()),
+        ));
+    }
+    out.push_str(
+        "\nAlgorithm (thesis Fig 3): grow the working set until the\n\
+         miss-rate *growth rate* first exceeds the initial growth rate;\n\
+         return the last size before that increase.\n\
+         paper: offline phase costs ~3% of online time, paid once per dataset\n",
+    );
+    out
+}
+
+/// Fig 9: Netflix kneepoints move with the confidence level (subsample
+/// fraction), and the 1 MB choice stays near-best across levels.
+pub fn fig9(ctx: &Ctx) -> String {
+    let cache = CacheConfig::sandy_bridge();
+    // five workloads varying by output confidence (subsample fraction)
+    let fracs = [0.0625, 0.125, 0.25, 0.375, 0.5];
+    let mut rows = Vec::new();
+    let mut one_mb_ranks = Vec::new();
+    for &frac in &fracs {
+        let profile = profile_workload(
+            Workload::NetflixHi,
+            &cache,
+            &default_sizes(),
+            Some(frac),
+        );
+        let knee = smallest_kneepoint(&profile.l2_curve(), KNEE_THRESHOLD);
+        // rank task sizes by simulated job throughput at this confidence
+        let sizes = [256 * 1024, 512 * 1024, 1 << 20, 4 << 20, 16 << 20];
+        let mut scored: Vec<(usize, f64)> = sizes
+            .iter()
+            .map(|&ts| {
+                let mut p = crate::sim::default_params(
+                    Workload::NetflixHi,
+                    256 << 20,
+                    ctx.compute_s_per_mib(Workload::NetflixHi),
+                );
+                p.penalty = profile
+                    .points
+                    .iter()
+                    .map(|pt| crate::kneepoint::CurvePoint {
+                        task_bytes: pt.task_bytes,
+                        miss_rate: (pt.cpi
+                            / profile
+                                .points
+                                .iter()
+                                .map(|q| q.cpi)
+                                .fold(f64::INFINITY, f64::min))
+                        .max(1.0),
+                    })
+                    .collect();
+                let mut plat = crate::platforms::PlatformSpec::bts();
+                plat.sizing = crate::platforms::SizingKind::Fixed(ts);
+                let r = crate::sim::simulate(
+                    &plat,
+                    &crate::sim::Cluster::homogeneous(
+                        crate::sim::HardwareType::TypeII,
+                        6,
+                    ),
+                    &p,
+                );
+                (ts, r.throughput_mbs)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let rank_1mb = scored
+            .iter()
+            .position(|(ts, _)| *ts == (1 << 20))
+            .unwrap()
+            + 1;
+        one_mb_ranks.push(rank_1mb);
+        rows.push(vec![
+            format!("{frac:.4}"),
+            knee.map(|b| format!("{:.2}", mb(b)))
+                .unwrap_or_else(|| "-".into()),
+            format!("{rank_1mb}"),
+            format!("{:.1}", scored[0].1),
+        ]);
+    }
+    let top2 = one_mb_ranks.iter().filter(|&&r| r <= 2).count();
+    format!(
+        "{}\n1 MB task size ranks in the top-2 for {top2}/5 confidence levels\n\
+         paper: knees differ between high/low confidence; the single 1 MB\n\
+         paper: setting ranked top-2 in 3/5 workloads, within 10% otherwise,\n\
+         paper: and beat large/tiniest in all 5\n",
+        render_table(
+            "Fig 9 — Netflix kneepoints vs confidence level",
+            &["subsample frac", "knee MB", "rank of 1MB", "best MB/s"],
+            &rows,
+        )
+    )
+}

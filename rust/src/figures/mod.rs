@@ -1,0 +1,231 @@
+//! Figure/table generators: one per table and figure in the thesis's
+//! evaluation (§4) plus the §3 analysis figures. `bts repro` drives
+//! these; each generator prints the same rows/series the paper reports
+//! with a `paper:` annotation giving the published shape to compare
+//! against (DESIGN.md §5 maps ids → modules → benches).
+
+pub mod cache_figs;
+pub mod platform_figs;
+pub mod recovery_figs;
+pub mod sim_figs;
+
+use crate::data::Workload;
+use crate::workloads::default_compute_s_per_mib;
+
+/// Shared context: calibration constants (measured from the real
+/// runtime when artifacts exist, else the recorded defaults).
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    pub eaglet_s_per_mib: f64,
+    pub netflix_hi_s_per_mib: f64,
+    pub netflix_lo_s_per_mib: f64,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx {
+            eaglet_s_per_mib: default_compute_s_per_mib(Workload::Eaglet),
+            netflix_hi_s_per_mib: default_compute_s_per_mib(
+                Workload::NetflixHi,
+            ),
+            netflix_lo_s_per_mib: default_compute_s_per_mib(
+                Workload::NetflixLo,
+            ),
+        }
+    }
+}
+
+impl Ctx {
+    pub fn compute_s_per_mib(&self, w: Workload) -> f64 {
+        match w {
+            Workload::Eaglet => self.eaglet_s_per_mib,
+            Workload::NetflixHi => self.netflix_hi_s_per_mib,
+            Workload::NetflixLo => self.netflix_lo_s_per_mib,
+        }
+    }
+
+    /// The figure context always models the *paper's* workloads (the
+    /// thesis-anchored constants in `workloads::calibration` — our
+    /// Pallas kernels are ~80× lighter than the legacy MERLIN/Perl
+    /// pipeline, and using their cost would flatten every crossover the
+    /// paper reports). This constructor additionally *measures* the
+    /// real kernels through PJRT as a health check and returns those
+    /// numbers for reporting; `None` when artifacts are not built.
+    pub fn calibrated() -> (Ctx, Option<[f64; 3]>) {
+        let ctx = Ctx::default();
+        let Ok(m) = crate::runtime::Manifest::load_default() else {
+            return (ctx, None);
+        };
+        let m = std::sync::Arc::new(m);
+        let p = m.params.clone();
+        let mut measured = [0.0f64; 3];
+        for (i, w) in [
+            Workload::Eaglet,
+            Workload::NetflixHi,
+            Workload::NetflixLo,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let ds = crate::workloads::build_small(w, &p, 24);
+            match crate::workloads::measure_compute_s_per_mib(
+                m.clone(),
+                ds.as_ref(),
+                256 * 1024,
+                4,
+            ) {
+                Ok(v) => measured[i] = v,
+                Err(_) => return (ctx, None),
+            }
+        }
+        (ctx, Some(measured))
+    }
+}
+
+/// One reproducible artifact of the paper.
+pub struct Figure {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub generate: fn(&Ctx) -> String,
+}
+
+/// The full registry, in paper order.
+pub fn all() -> Vec<Figure> {
+    vec![
+        Figure {
+            id: "table1",
+            title: "Comparison chart of platforms",
+            generate: platform_figs::table1,
+        },
+        Figure {
+            id: "table2",
+            title: "Types of hardware",
+            generate: platform_figs::table2,
+        },
+        Figure {
+            id: "fig2",
+            title: "L2 misses/instr and AMAT across task sizes (EAGLET)",
+            generate: cache_figs::fig2,
+        },
+        Figure {
+            id: "fig3",
+            title: "Task sizing algorithm (kneepoint detection demo)",
+            generate: cache_figs::fig3,
+        },
+        Figure {
+            id: "fig4",
+            title: "Impact of the kneepoint algorithm on runtime",
+            generate: sim_figs::fig4,
+        },
+        Figure {
+            id: "fig5",
+            title: "Startup overhead relative to BashReduce",
+            generate: platform_figs::fig5,
+        },
+        Figure {
+            id: "fig6",
+            title: "Per-task runtime overhead relative to native Linux",
+            generate: platform_figs::fig6,
+        },
+        Figure {
+            id: "fig8",
+            title: "BTS vs BLT vs BTT on both workloads",
+            generate: sim_figs::fig8,
+        },
+        Figure {
+            id: "fig9",
+            title: "Netflix kneepoints across confidence levels",
+            generate: cache_figs::fig9,
+        },
+        Figure {
+            id: "fig10",
+            title: "BTS speedup over VH and JLH vs job size",
+            generate: sim_figs::fig10,
+        },
+        Figure {
+            id: "fig11",
+            title: "Running time vs job size (log-log), BTS vs VH vs LH",
+            generate: sim_figs::fig11,
+        },
+        Figure {
+            id: "fig12",
+            title: "EAGLET on BTS as cores scale",
+            generate: sim_figs::fig12,
+        },
+        Figure {
+            id: "fig13",
+            title: "Throughput under service level objectives",
+            generate: sim_figs::fig13,
+        },
+        Figure {
+            id: "fig14",
+            title: "Netflix scaling on virtualized Type-3 hardware",
+            generate: sim_figs::fig14,
+        },
+        Figure {
+            id: "fig15",
+            title: "Netflix throughput vs job size",
+            generate: sim_figs::fig15,
+        },
+        Figure {
+            id: "fig16",
+            title: "Reduce-task scaling and network demand",
+            generate: sim_figs::fig16,
+        },
+        Figure {
+            id: "hetero",
+            title: "Heterogeneous cluster (1 slow node of 5)",
+            generate: sim_figs::hetero,
+        },
+        Figure {
+            id: "recovery",
+            title: "f_w failure analysis (job- vs task-level recovery)",
+            generate: recovery_figs::recovery,
+        },
+        Figure {
+            id: "headline",
+            title: "Headline claims (abstract/conclusion)",
+            generate: sim_figs::headline,
+        },
+    ]
+}
+
+pub fn by_id(id: &str) -> Option<Figure> {
+    all().into_iter().find(|f| f.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_lookup_works() {
+        let figs = all();
+        let mut ids: Vec<_> = figs.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+        assert!(by_id("fig10").is_some());
+        assert!(by_id("fig999").is_none());
+    }
+
+    #[test]
+    fn every_generator_produces_output() {
+        // Default (uncalibrated) ctx so this runs without artifacts.
+        let ctx = Ctx::default();
+        for f in all() {
+            let out = (f.generate)(&ctx);
+            assert!(
+                out.len() > 100,
+                "{} produced suspiciously short output",
+                f.id
+            );
+            assert!(
+                out.contains("paper:"),
+                "{} must cite the paper's shape",
+                f.id
+            );
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! §3.3 recovery analysis figure: expected failures per execution and
+//! the breakeven monitoring overhead.
+
+use super::Ctx;
+use crate::coordinator::{expected_failures, RecoveryParams};
+use crate::util::render_table;
+
+pub fn recovery(_ctx: &Ctx) -> String {
+    let base = RecoveryParams::thesis_example();
+    let fw = expected_failures(&base);
+
+    // Sweep cluster size: where does task-level recovery start paying,
+    // assuming its measured ~21% monitoring overhead?
+    let mut rows = Vec::new();
+    for nodes in [10, 100, 1_000, 10_000, 30_000, 100_000] {
+        let p = RecoveryParams { nodes, ..base.clone() };
+        let f = expected_failures(&p);
+        rows.push(vec![
+            format!("{nodes}"),
+            format!("{f:.4}"),
+            if f > 0.21 { "task-level" } else { "job-level" }.to_string(),
+        ]);
+    }
+    format!(
+        "{}\nthesis example (N=100, P(w)=10min, mttf=4.3mo, phi=1.5): \
+         f_w = {fw:.4}\n\
+         paper: f_w = 0.0078 — monitoring must cost <1% to justify\n\
+         paper: task-level recovery; clusters under ~30K nodes do not\n\
+         paper: justify the observed 21% startup overhead\n",
+        render_table(
+            "§3.3 — expected failures per job execution vs cluster size",
+            &["nodes", "f_w", "recovery that pays (at 21% monitor cost)"],
+            &rows,
+        )
+    )
+}

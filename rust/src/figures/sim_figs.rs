@@ -1,0 +1,555 @@
+//! Event-simulator figures: everything in §4.2 that needed the 72-core
+//! testbed (Figs 4, 8, 10–16, the heterogeneity study, the headline).
+
+use super::Ctx;
+use crate::data::Workload;
+use crate::platforms::{PlatformSpec, SizingKind};
+use crate::sim::{
+    default_params, simulate, sweep_reduce_tasks, Cluster, HardwareType,
+    SimParams, VIRT_SLOWDOWN,
+};
+use crate::util::render_table;
+
+const MB: usize = 1024 * 1024;
+const GB: usize = 1024 * MB;
+
+/// Build SimParams once per workload and retarget job size cheaply (the
+/// penalty curve and knee do not depend on job size).
+fn base_params(ctx: &Ctx, w: Workload) -> SimParams {
+    default_params(w, 256 * MB, ctx.compute_s_per_mib(w))
+}
+
+fn at_size(base: &SimParams, job_bytes: usize) -> SimParams {
+    SimParams { job_bytes, ..base.clone() }
+}
+
+fn c72() -> Cluster {
+    Cluster::homogeneous(HardwareType::TypeII, 6)
+}
+
+/// Fig 4: kneepoint sizing vs the 24 MB large-task baseline vs tiniest,
+/// with and without the outlier samples.
+pub fn fig4(ctx: &Ctx) -> String {
+    let cluster = c72();
+    let base = base_params(ctx, Workload::Eaglet);
+    // ~30 subsamples per family over the 230MB study ⇒ 6.9GB of task work
+    let job = 6_900 * MB;
+    let mut rows = Vec::new();
+    let mut summaries = Vec::new();
+    for outliers in [false, true] {
+        let p = SimParams { outliers, ..at_size(&base, job) };
+        let mut spec24 = PlatformSpec::bts();
+        spec24.sizing = SizingKind::Fixed(24 * MB);
+        let t24 = simulate(&spec24, &cluster, &p).throughput_mbs;
+        let knee = simulate(&PlatformSpec::bts(), &cluster, &p);
+        let tiny = simulate(&PlatformSpec::btt(), &cluster, &p);
+        for (name, r) in [
+            ("24MB large (baseline)", t24),
+            ("kneepoint (BTS)", knee.throughput_mbs),
+            ("tiniest (BTT)", tiny.throughput_mbs),
+        ] {
+            rows.push(vec![
+                if outliers { "with outliers" } else { "no outliers" }
+                    .to_string(),
+                name.to_string(),
+                format!("{r:.1}"),
+                format!("{:+.0}%", (r / t24 - 1.0) * 100.0),
+            ]);
+        }
+        summaries.push((
+            outliers,
+            (knee.throughput_mbs / t24 - 1.0) * 100.0,
+            (tiny.throughput_mbs / t24 - 1.0) * 100.0,
+        ));
+    }
+    format!(
+        "{}\nkneepoint gain: {:+.0}% (no outliers), {:+.0}% (with outliers)\n\
+         paper: kneepoint +15% without outliers, +23% with; tiniest -8%;\n\
+         paper: outliers themselves cost 2.4x; task sizing helps more under\n\
+         paper: the heterogeneous (outlier) workload but cannot erase it\n",
+        render_table(
+            "Fig 4 — kneepoint algorithm vs 24MB large tasks (EAGLET, 72 cores)",
+            &["dataset", "sizing", "MB/s", "vs 24MB"],
+            &rows,
+        ),
+        summaries[0].1,
+        summaries[1].1,
+    )
+}
+
+/// Fig 8: the three BashReduce configurations on both workloads,
+/// original dataset sizes, 72 cores.
+pub fn fig8(ctx: &Ctx) -> String {
+    let cluster = c72();
+    let mut rows = Vec::new();
+    let mut margins = Vec::new();
+    for (w, job, label) in [
+        (Workload::Eaglet, 6_900 * MB, "EAGLET (230MB x30)"),
+        (Workload::NetflixHi, 2 * GB, "Netflix high-conf (2GB)"),
+        (Workload::NetflixLo, 2 * GB, "Netflix low-conf (2GB)"),
+    ] {
+        let p = at_size(&base_params(ctx, w), job);
+        let bts = simulate(&PlatformSpec::bts(), &cluster, &p);
+        let blt = simulate(&PlatformSpec::blt(), &cluster, &p);
+        let btt = simulate(&PlatformSpec::btt(), &cluster, &p);
+        for (name, r) in
+            [("BTS", &bts), ("BLT", &blt), ("BTT", &btt)]
+        {
+            rows.push(vec![
+                label.to_string(),
+                name.to_string(),
+                format!("{:.1}", r.throughput_mbs),
+                format!("{}", r.tasks),
+                format!("{:.2}", r.total_s),
+            ]);
+        }
+        let runner_up = blt.throughput_mbs.max(btt.throughput_mbs);
+        margins.push((
+            label,
+            (bts.throughput_mbs / blt.throughput_mbs - 1.0) * 100.0,
+            (bts.throughput_mbs / runner_up - 1.0) * 100.0,
+        ));
+    }
+    let mut tail = String::new();
+    for (label, vs_blt, vs_best) in margins {
+        tail.push_str(&format!(
+            "{label}: BTS {vs_blt:+.0}% vs BLT, {vs_best:+.0}% vs runner-up\n"
+        ));
+    }
+    format!(
+        "{}\n{tail}paper: BTS 10-90% over BLT and 26-32% over BTT on EAGLET;\n\
+         paper: Netflix favors BTT more (fewer components) — BTS still wins,\n\
+         paper: typically beating its closest competitor by ~17%\n",
+        render_table(
+            "Fig 8 — BTS vs BLT vs BTT, 72 cores, original datasets",
+            &["workload", "config", "MB/s", "tasks", "total s"],
+            &rows,
+        )
+    )
+}
+
+/// Fig 10: throughput of BTS vs VH/JLH across job sizes, plus the
+/// monitoring-enabled BTS arm.
+pub fn fig10(ctx: &Ctx) -> String {
+    let cluster = c72();
+    let base = base_params(ctx, Workload::Eaglet);
+    let mut rows = Vec::new();
+    let mut small_speedups = (0.0, 0.0);
+    for job in [12 * MB, 91 * MB, 230 * MB, GB, 4 * GB, 16 * GB] {
+        let p = at_size(&base, job);
+        let bts = simulate(&PlatformSpec::bts(), &cluster, &p);
+        let btsm =
+            simulate(&PlatformSpec::bts_with_monitoring(), &cluster, &p);
+        let vh = simulate(&PlatformSpec::vanilla_hadoop(), &cluster, &p);
+        let jlh = simulate(&PlatformSpec::job_level_hadoop(), &cluster, &p);
+        if job == 12 * MB {
+            small_speedups = (
+                vh.total_s / bts.total_s,
+                jlh.total_s / bts.total_s,
+            );
+        }
+        rows.push(vec![
+            human(job),
+            format!("{:.1}", bts.throughput_mbs),
+            format!("{:.1}", btsm.throughput_mbs),
+            format!("{:.1}", vh.throughput_mbs),
+            format!("{:.1}", jlh.throughput_mbs),
+            format!("{:.1}x", vh.total_s / bts.total_s),
+            format!("{:.1}x", jlh.total_s / bts.total_s),
+        ]);
+    }
+    format!(
+        "{}\n12MB job: BTS speeds up VH {:.1}x, JLH {:.1}x\n\
+         paper: ~5x over VH and 3.7x over JLH at 12MB, shrinking as VH\n\
+         paper: amortizes startup; BTS+monitoring loses 21% on MB jobs and\n\
+         paper: 15% on GB jobs yet stays 2.5x/1.5x ahead of JLH\n",
+        render_table(
+            "Fig 10 — BTS vs Hadoop setups (EAGLET, type 2, 72 cores)",
+            &[
+                "job", "BTS MB/s", "BTS+mon MB/s", "VH MB/s", "JLH MB/s",
+                "VH/BTS", "JLH/BTS",
+            ],
+            &rows,
+        ),
+        small_speedups.0,
+        small_speedups.1,
+    )
+}
+
+/// Fig 11: absolute running time vs job size (log-log in the paper).
+pub fn fig11(ctx: &Ctx) -> String {
+    let cluster = c72();
+    let base = base_params(ctx, Workload::Eaglet);
+    let mut rows = Vec::new();
+    let mut marks = (0.0, 0.0, 0.0);
+    for job in [
+        12 * MB,
+        91 * MB,
+        230 * MB,
+        1100 * MB,
+        8 * GB,
+        64 * GB,
+        GB * 1024,
+    ] {
+        let p = at_size(&base, job);
+        let bts = simulate(&PlatformSpec::bts(), &cluster, &p);
+        let vh = simulate(&PlatformSpec::vanilla_hadoop(), &cluster, &p);
+        let lh = simulate(&PlatformSpec::lite_hadoop(), &cluster, &p);
+        if job == 91 * MB {
+            marks.0 = bts.total_s;
+        }
+        if job == 230 * MB {
+            marks.1 = bts.total_s;
+        }
+        if job == GB * 1024 {
+            marks.2 = lh.total_s / bts.total_s;
+        }
+        rows.push(vec![
+            human(job),
+            format!("{:.1}", bts.total_s),
+            format!("{:.1}", vh.total_s),
+            format!("{:.1}", lh.total_s),
+        ]);
+    }
+    format!(
+        "{}\n91MB on BTS: {:.0}s; 230MB: {:.0}s; LH/BTS at 1TB: {:.2}x\n\
+         paper: 91MB in 40s (150s on VH); 230MB in 68s; LH tracks VH on\n\
+         paper: small jobs (startup) and approaches BTS at scale, but BTS\n\
+         paper: keeps a 25% throughput lead even at 1TB (note log-log)\n",
+        render_table(
+            "Fig 11 — running time vs job size (EAGLET, 72 cores)",
+            &["job", "BTS s", "VH s", "LH s"],
+            &rows,
+        ),
+        marks.0,
+        marks.1,
+        marks.2,
+    )
+}
+
+/// Fig 12: EAGLET on BTS as the core count changes; network utilization.
+pub fn fig12(ctx: &Ctx) -> String {
+    let base = base_params(ctx, Workload::Eaglet);
+    let mut rows = Vec::new();
+    let mut util72 = 0.0;
+    for job in [32 * MB, 230 * MB, 2 * GB, 16 * GB, 128 * GB, GB * 1024] {
+        let p = at_size(&base, job);
+        let mut row = vec![human(job)];
+        for nodes in [1, 3, 6] {
+            let cluster = Cluster::homogeneous(HardwareType::TypeII, nodes);
+            let r = simulate(&PlatformSpec::bts(), &cluster, &p);
+            row.push(format!("{:.1}", r.throughput_mbs));
+            if nodes == 6 && job == GB * 1024 {
+                util72 = r.network_utilization;
+            }
+        }
+        rows.push(row);
+    }
+    format!(
+        "{}\n72-core network utilization at 1TB: {:.0}%\n\
+         paper: linear scaling up to 1TB on a 1Gb/s network; the 72-core\n\
+         paper: test ran at 45% of network capacity; regions where 72-core\n\
+         paper: equals 36-core reflect startup costs on small jobs\n",
+        render_table(
+            "Fig 12 — EAGLET on BTS as cores scale (MB/s)",
+            &["job", "12 cores", "36 cores", "72 cores"],
+            &rows,
+        ),
+        util72 * 100.0,
+    )
+}
+
+/// Fig 13: throughput under SLOs relative to unconstrained peak.
+pub fn fig13(ctx: &Ctx) -> String {
+    let jobs: Vec<usize> = [4, 16, 64, 230, 1024, 4096, 16384, 65536]
+        .iter()
+        .map(|mb| mb * MB)
+        .collect();
+    let cores = [12, 36, 72];
+    let mut rows = Vec::new();
+    let mut marks = (0.0, 0.0);
+    for (label, slo_s) in [
+        ("30 s", 30.0),
+        ("1 min", 60.0),
+        ("2 min", 120.0),
+        ("5 min", 300.0),
+        ("10 min", 600.0),
+        ("1 hour", 3600.0),
+    ] {
+        let plan = crate::slo::best_under_slo(
+            Workload::Eaglet,
+            slo_s,
+            &cores,
+            &jobs,
+            ctx.compute_s_per_mib(Workload::Eaglet),
+        );
+        match plan {
+            Some(p) => {
+                if label == "2 min" {
+                    marks.0 = p.frac_of_peak;
+                }
+                if label == "5 min" {
+                    marks.1 = p.frac_of_peak;
+                }
+                rows.push(vec![
+                    label.to_string(),
+                    format!("{}", p.best.cores),
+                    human(p.best.job_bytes),
+                    format!("{:.1}", p.best.total_s),
+                    format!("{:.1}", p.best.throughput_mbs),
+                    format!("{:.0}%", p.frac_of_peak * 100.0),
+                ]);
+            }
+            None => rows.push(vec![
+                label.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "infeasible".into(),
+            ]),
+        }
+    }
+    format!(
+        "{}\n2-minute SLO achieves {:.0}% of peak; 5-minute {:.0}%\n\
+         paper: 2min SLO → 50% of peak throughput; 5min → 83%; 72 cores\n\
+         paper: only win for the 2- and 5-minute bounds (startup costs)\n",
+        render_table(
+            "Fig 13 — best configuration under a fixed running-time bound",
+            &["SLO", "cores", "job", "time s", "MB/s", "of peak"],
+            &rows,
+        ),
+        marks.0 * 100.0,
+        marks.1 * 100.0,
+    )
+}
+
+/// Fig 14: Netflix scaling on virtualized Type-3 Opterons.
+pub fn fig14(ctx: &Ctx) -> String {
+    let base = base_params(ctx, Workload::NetflixHi);
+    let job = 2 * GB;
+    let p = at_size(&base, job);
+    let mut rows = Vec::new();
+    let mut tp = Vec::new();
+    for nodes in [1, 2, 3, 4] {
+        let virt = Cluster::homogeneous(HardwareType::TypeIII, nodes);
+        let r = simulate(&PlatformSpec::bts(), &virt, &p);
+        tp.push(r.throughput_mbs);
+        rows.push(vec![
+            format!("{}", virt.total_cores()),
+            format!("{:.1}", r.throughput_mbs),
+            format!("{:.1}", r.total_s),
+        ]);
+    }
+    // virtualization cost vs a would-be bare-metal type 3
+    let linear = tp
+        .iter()
+        .enumerate()
+        .skip(1)
+        .all(|(i, t)| *t > tp[0] * (i as f64 + 1.0) * 0.6);
+    format!(
+        "{}\nscaling {} (virtualization slowdown modeled at {:.0}%)\n\
+         paper: linear improvement for Netflix as type-3 cores scale; 16%\n\
+         paper: slowdown vs bare-metal type 2 across both workloads;\n\
+         paper: re-profiled knees on this hardware: EAGLET 1.2MB, Netflix 1MB\n",
+        render_table(
+            "Fig 14 — Netflix on virtualized Type-3 hardware",
+            &["cores", "MB/s", "total s"],
+            &rows,
+        ),
+        if linear { "≈ linear" } else { "sub-linear" },
+        VIRT_SLOWDOWN * 100.0,
+    )
+}
+
+/// Fig 15: Netflix throughput as job size grows.
+pub fn fig15(ctx: &Ctx) -> String {
+    let cluster = Cluster::homogeneous(HardwareType::TypeIII, 2);
+    let mut rows = Vec::new();
+    for (w, label) in [
+        (Workload::NetflixHi, "high confidence"),
+        (Workload::NetflixLo, "low confidence"),
+    ] {
+        let base = base_params(ctx, w);
+        for job in [32 * MB, 256 * MB, 2 * GB, 16 * GB] {
+            let r =
+                simulate(&PlatformSpec::bts(), &cluster, &at_size(&base, job));
+            rows.push(vec![
+                label.to_string(),
+                human(job),
+                format!("{:.1}", r.throughput_mbs),
+                format!("{:.1}", r.total_s),
+            ]);
+        }
+    }
+    format!(
+        "{}\npaper: throughput rises with job size as startup amortizes, then\n\
+         paper: flattens; low-confidence (smaller subsamples) runs faster\n",
+        render_table(
+            "Fig 15 — Netflix throughput vs job size (type 3)",
+            &["confidence", "job", "MB/s", "total s"],
+            &rows,
+        )
+    )
+}
+
+/// Fig 16: reduce-task sweep — EAGLET sees immediate diminishing
+/// returns; Netflix gains before communication costs win.
+pub fn fig16(ctx: &Ctx) -> String {
+    let cluster = c72();
+    let platform = PlatformSpec::bts();
+    let rs = [1usize, 2, 4, 8, 16, 32, 64];
+    let mut rows = Vec::new();
+    let mut best = (1usize, 1usize);
+    for (w, job, label) in [
+        (Workload::Eaglet, 2 * GB, "EAGLET"),
+        (Workload::NetflixHi, 2 * GB, "Netflix"),
+    ] {
+        let base = base_params(ctx, w);
+        let sweep =
+            sweep_reduce_tasks(&base.reduce, job, &cluster, &platform, &rs);
+        let best_r = sweep
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        if w == Workload::Eaglet {
+            best.0 = best_r;
+        } else {
+            best.1 = best_r;
+        }
+        for (r, total_s, net_bytes) in sweep {
+            rows.push(vec![
+                label.to_string(),
+                format!("{r}"),
+                format!("{:.3}", total_s),
+                format!("{:.1}", net_bytes / MB as f64),
+            ]);
+        }
+    }
+    format!(
+        "{}\nbest reduce-task count: EAGLET r={}, Netflix r={}\n\
+         paper: EAGLET is compute-intensive — adding reduce tasks quickly\n\
+         paper: exhibits diminishing returns; Netflix can speed up at the\n\
+         paper: reduce stage; network demand grows with reduce tasks\n",
+        render_table(
+            "Fig 16 — reduce-phase time and network demand vs reduce tasks",
+            &["workload", "r", "shuffle+reduce s", "net MB"],
+            &rows,
+        ),
+        best.0,
+        best.1,
+    )
+}
+
+/// §4.2.4: one slow node in the cluster.
+pub fn hetero(ctx: &Ctx) -> String {
+    let base = base_params(ctx, Workload::Eaglet);
+    let hetero = Cluster::heterogeneous(1, 4); // 1 slow type-1 node
+    let homo = Cluster::homogeneous(HardwareType::TypeIII, 4);
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+    for job in [8 * MB, 64 * MB, 512 * MB, 4 * GB] {
+        let p = at_size(&base, job);
+        let th = simulate(&PlatformSpec::bts(), &hetero, &p);
+        let to = simulate(&PlatformSpec::bts(), &homo, &p);
+        let ratio = th.total_s / to.total_s;
+        ratios.push((job, ratio));
+        rows.push(vec![
+            human(job),
+            format!("{:.1}", th.total_s),
+            format!("{:.1}", to.total_s),
+            format!("{:.2}x", ratio),
+        ]);
+    }
+    format!(
+        "{}\nslowdown shrinks from {:.2}x (small) to {:.2}x (large)\n\
+         paper: slow nodes cause proportional slowdown on MB jobs; on larger\n\
+         paper: jobs the round-robin scheduler skips busy slow cores and the\n\
+         paper: loss spreads across the fast cores\n",
+        render_table(
+            "§4.2.4 — heterogeneous cluster: 1 slow node vs homogeneous",
+            &["job", "hetero s", "homo s", "slowdown"],
+            &rows,
+        ),
+        ratios.first().unwrap().1,
+        ratios.last().unwrap().1,
+    )
+}
+
+/// Headline claims from the abstract/conclusion, checked in one place.
+pub fn headline(ctx: &Ctx) -> String {
+    let cluster = c72();
+    let e = base_params(ctx, Workload::Eaglet);
+    let n = base_params(ctx, Workload::NetflixHi);
+
+    let e230 = at_size(&e, 230 * MB);
+    let n2g = at_size(&n, 2 * GB);
+    let vs = |p: &SimParams, a: PlatformSpec, b: PlatformSpec| {
+        simulate(&b, &cluster, p).total_s / simulate(&a, &cluster, p).total_s
+    };
+    let eaglet_vs_vh = vs(
+        &e230,
+        PlatformSpec::bts(),
+        PlatformSpec::vanilla_hadoop(),
+    );
+    let netflix_vs_vh =
+        vs(&n2g, PlatformSpec::bts(), PlatformSpec::vanilla_hadoop());
+    let small = at_size(&e, 12 * MB);
+    let small_vs_vh = vs(
+        &small,
+        PlatformSpec::bts(),
+        PlatformSpec::vanilla_hadoop(),
+    );
+    let tb = at_size(&e, GB * 1024);
+    let tb_vs_lh =
+        vs(&tb, PlatformSpec::bts(), PlatformSpec::lite_hadoop());
+    // per-12-core-node throughput on a type-2 node, large EAGLET job
+    let one_node = Cluster::homogeneous(HardwareType::TypeII, 1);
+    let tput = simulate(&PlatformSpec::bts(), &one_node, &at_size(&e, 2 * GB))
+        .throughput_mbs;
+    let rows = vec![
+        vec![
+            "EAGLET 230MB: BTS vs VH".to_string(),
+            format!("{eaglet_vs_vh:.1}x"),
+            "3x".to_string(),
+        ],
+        vec![
+            "Netflix 2GB: BTS vs VH".to_string(),
+            format!("{netflix_vs_vh:.1}x"),
+            "2.5x".to_string(),
+        ],
+        vec![
+            "small (12MB) jobs: BTS vs VH".to_string(),
+            format!("{small_vs_vh:.1}x"),
+            "12x (minutes-scale jobs)".to_string(),
+        ],
+        vec![
+            "1TB: BTS vs lite Hadoop".to_string(),
+            format!("{:.0}%", (tb_vs_lh - 1.0) * 100.0),
+            "25%".to_string(),
+        ],
+        vec![
+            "per-12-core-node throughput".to_string(),
+            format!("{:.0} Mb/s", tput * 8.0),
+            "117 Mb/s (CloudBurst: 24-60)".to_string(),
+        ],
+    ];
+    format!(
+        "{}\npaper: 'our improved platform performed 9X better than vanilla\n\
+         paper: Hadoop' on short interactive workloads\n",
+        render_table(
+            "Headline claims — measured (simulated testbed) vs paper",
+            &["claim", "ours", "paper"],
+            &rows,
+        )
+    )
+}
+
+fn human(bytes: usize) -> String {
+    if bytes >= GB {
+        format!("{:.1}GB", bytes as f64 / GB as f64)
+    } else {
+        format!("{}MB", bytes / MB)
+    }
+}

@@ -1,0 +1,174 @@
+//! Kneepoint detection on the task-size → miss-rate curve (thesis Fig 3).
+//!
+//! "We size tasks at the smallest kneepoint on the task size to miss rate
+//! curve. The smallest kneepoint is the largest task size before the
+//! first increase in the cache-miss growth rate." The offline profiler
+//! produces the curve; this module finds the knees.
+//!
+//! Implementation note: the thesis pseudo-code compares raw growth rates
+//! (Δmiss/Δsize) against the first observed rate. Raw rates are
+//! scale-dependent and fragile under measurement noise, while the thesis
+//! itself reports that "kneepoint selection is insensitive to small
+//! errors" — so we detect knees on the log-log *elasticity*
+//! e = Δlog(miss)/Δlog(size): flat-cache regions have e ≈ 0, and a knee
+//! is the last size before e first exceeds a threshold. This preserves
+//! the algorithm's contract (largest task size before the first increase
+//! in miss-rate growth) and is robust to ±5% noise.
+
+/// One measured point of the offline profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    pub task_bytes: usize,
+    pub miss_rate: f64,
+}
+
+const FLOOR: f64 = 1e-12;
+
+fn elasticities(curve: &[CurvePoint]) -> Vec<(usize, f64)> {
+    curve
+        .windows(2)
+        .filter(|w| w[1].task_bytes > w[0].task_bytes)
+        .map(|w| {
+            let e = ((w[1].miss_rate.max(FLOOR)) / (w[0].miss_rate.max(FLOOR)))
+                .ln()
+                / ((w[1].task_bytes as f64) / (w[0].task_bytes as f64)).ln();
+            (w[0].task_bytes, e)
+        })
+        .collect()
+}
+
+/// The *smallest kneepoint*: the largest task size before the miss-rate
+/// growth first becomes significant (elasticity > `threshold`; the
+/// thesis's default behaviour corresponds to threshold ≈ 0.8, i.e. the
+/// miss rate starts growing nearly linearly in task size). Returns the
+/// largest measured size when the curve never turns up.
+pub fn smallest_kneepoint(curve: &[CurvePoint], threshold: f64) -> Option<usize> {
+    if curve.len() < 2 {
+        return None;
+    }
+    for (size, e) in elasticities(curve) {
+        if e > threshold {
+            return Some(size);
+        }
+    }
+    curve.last().map(|p| p.task_bytes)
+}
+
+/// All kneepoints: starts of rising regions. A segment opens a knee when
+/// its elasticity exceeds `threshold` and either the previous segment was
+/// calm or the elasticity jumped ≥2× (two stacked knees — the L2 knee and
+/// the L3 knee of Fig 2 — appear as a second acceleration inside one
+/// rising region).
+pub fn kneepoints(curve: &[CurvePoint], threshold: f64) -> Vec<usize> {
+    let es = elasticities(curve);
+    let mut knees = Vec::new();
+    let mut prev_e = 0.0f64;
+    for (size, e) in es {
+        let calm_before = prev_e <= threshold;
+        if e > threshold && (calm_before || e > 2.0 * prev_e) {
+            knees.push(size);
+        }
+        prev_e = e;
+    }
+    knees
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(kb: usize, mr: f64) -> CurvePoint {
+        CurvePoint { task_bytes: kb * 1024, miss_rate: mr }
+    }
+
+    /// Synthetic two-knee curve shaped like Fig 2.
+    fn fig2_like() -> Vec<CurvePoint> {
+        vec![
+            pt(256, 0.0010),
+            pt(512, 0.0011),
+            pt(1024, 0.0012),
+            pt(2560, 0.0014), // knee 1 ~2.5MB: growth jumps after here
+            pt(4096, 0.0060),
+            pt(8192, 0.0130),
+            pt(11264, 0.0180), // knee 2 ~11MB: second acceleration
+            pt(16384, 0.0900),
+            pt(25600, 0.2200),
+        ]
+    }
+
+    #[test]
+    fn finds_smallest_kneepoint() {
+        let k = smallest_kneepoint(&fig2_like(), 0.8).unwrap();
+        assert_eq!(k, 2560 * 1024, "expected the 2.5MB knee, got {k}");
+    }
+
+    #[test]
+    fn finds_both_knees() {
+        let ks = kneepoints(&fig2_like(), 0.8);
+        assert!(
+            ks.contains(&(2560 * 1024)),
+            "missing first knee in {ks:?}"
+        );
+        assert!(
+            ks.iter().any(|&k| k >= 8192 * 1024),
+            "missing second knee in {ks:?}"
+        );
+    }
+
+    #[test]
+    fn flat_curve_returns_largest() {
+        let c = vec![pt(1, 0.001), pt(2, 0.001), pt(4, 0.001), pt(8, 0.001)];
+        assert_eq!(smallest_kneepoint(&c, 0.8), Some(8 * 1024));
+        assert!(kneepoints(&c, 0.8).is_empty());
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(smallest_kneepoint(&[], 0.8), None);
+        assert_eq!(smallest_kneepoint(&[pt(1, 0.1)], 0.8), None);
+    }
+
+    #[test]
+    fn zero_miss_rates_do_not_panic() {
+        let c = vec![pt(64, 0.0), pt(128, 0.0), pt(256, 0.02)];
+        let k = smallest_kneepoint(&c, 0.8).unwrap();
+        assert_eq!(k, 128 * 1024);
+    }
+
+    #[test]
+    fn tolerance_suppresses_noise() {
+        // small wiggles should not register as a knee
+        let c = vec![
+            pt(256, 0.0010),
+            pt(512, 0.0011),
+            pt(1024, 0.00105),
+            pt(2048, 0.00125),
+            pt(4096, 0.0013),
+            pt(8192, 0.0200), // real knee precedes this jump
+        ];
+        let k = smallest_kneepoint(&c, 0.8).unwrap();
+        assert_eq!(k, 4096 * 1024);
+    }
+
+    #[test]
+    fn insensitive_to_small_errors() {
+        // thesis §3.2.1: "kneepoint selection is insensitive to small
+        // errors" — perturb the curve by ±5% and expect the same knee.
+        let base = fig2_like();
+        for seed in 0..50u64 {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let noisy: Vec<CurvePoint> = base
+                .iter()
+                .map(|p| CurvePoint {
+                    task_bytes: p.task_bytes,
+                    miss_rate: p.miss_rate * (0.95 + 0.1 * rng.f64()),
+                })
+                .collect();
+            let k = smallest_kneepoint(&noisy, 0.8).unwrap();
+            assert!(
+                (1024 * 1024..=4096 * 1024).contains(&k),
+                "seed {seed}: knee drifted to {k}"
+            );
+        }
+    }
+}

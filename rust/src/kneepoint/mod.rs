@@ -1,0 +1,54 @@
+//! Task sizing — the thesis's first contribution (§3.2.1, Fig 3).
+//!
+//! Offline: `profiler` builds the task-size → miss-rate curve on the
+//! cache-simulator "benchmarking node"; `detector` finds the smallest
+//! kneepoint. Online: `packing` groups samples into kneepoint-sized
+//! tasks before map tasks start.
+
+pub mod detector;
+pub mod packing;
+pub mod profiler;
+
+pub use detector::{kneepoints, smallest_kneepoint, CurvePoint};
+pub use packing::{max_multi_sample_bytes, pack, PackedTask, TaskSizing};
+pub use profiler::{default_sizes, profile_workload, Profile, ProfileCache, ProfilePoint};
+
+use crate::cachesim::CacheConfig;
+use crate::data::Workload;
+
+/// Default knee elasticity threshold (see detector.rs module docs).
+pub const KNEE_THRESHOLD: f64 = 0.8;
+
+/// One-call convenience: offline-profile `workload` on `cache` and return
+/// the kneepoint task size in bytes (what BTS configures per §4.1.3:
+/// "BTS sets task size to 2.5 MB for EAGLET and 1 MB for Netflix").
+pub fn kneepoint_bytes(workload: Workload, cache: &CacheConfig) -> usize {
+    // Memoized process-wide: the offline profile is deterministic in
+    // (workload, cache geometry) and callers (sim::default_params, the
+    // figure generators) ask for it repeatedly.
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    type Key = (Workload, usize, usize);
+    static CACHE: OnceLock<Mutex<HashMap<Key, usize>>> = OnceLock::new();
+    let key = (workload, cache.l2_bytes, cache.l3_bytes);
+    let map = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(&v) = map.lock().unwrap().get(&key) {
+        return v;
+    }
+    let p = profile_workload(workload, cache, &default_sizes(), None);
+    let knee = smallest_kneepoint(&p.l2_curve(), KNEE_THRESHOLD)
+        .unwrap_or(2 * 1024 * 1024);
+    map.lock().unwrap().insert(key, knee);
+    knee
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kneepoint_bytes_in_range() {
+        let k = kneepoint_bytes(Workload::Eaglet, &CacheConfig::sandy_bridge());
+        assert!((128 * 1024..=32 * 1024 * 1024).contains(&k), "{k}");
+    }
+}

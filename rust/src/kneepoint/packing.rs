@@ -1,0 +1,206 @@
+//! Online phase (thesis §3.2.1, right column of Fig 3): pack samples
+//! into tasks of (kneepoint) size before starting map tasks.
+//!
+//! "We modified our platform to group samples into tasks of equal
+//! (kneepoint) size before starting map tasks." Samples are atomic (an
+//! EAGLET family is "the atomic part for computing the statistic"), so a
+//! task holds whole samples; a task may exceed the byte target only when
+//! a single sample alone does (the 15×/7× outliers).
+
+use crate::data::SampleMeta;
+
+/// How the platform sizes tasks — one arm per experimental configuration
+/// (§4.1.3: BTS / BLT / BTT).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TaskSizing {
+    /// BTS: pack to the offline-detected kneepoint (bytes).
+    Kneepoint(usize),
+    /// BLT: one task per worker holding all samples partitioned to it.
+    LargeSn { workers: usize },
+    /// BTT: one sample per task.
+    Tiniest,
+    /// Fixed byte target (sweeps, e.g. the Fig 8 x-axis).
+    Fixed(usize),
+}
+
+/// One packed map task (ids reference the dataset's sample metas).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTask {
+    pub seq: usize,
+    pub sample_ids: Vec<u64>,
+    pub units: u32,
+    pub bytes: usize,
+}
+
+/// Pack `metas` into tasks under the given sizing policy.
+pub fn pack(metas: &[SampleMeta], sizing: TaskSizing) -> Vec<PackedTask> {
+    match sizing {
+        TaskSizing::Kneepoint(target) | TaskSizing::Fixed(target) => {
+            pack_to_bytes(metas, target.max(1))
+        }
+        TaskSizing::Tiniest => metas
+            .iter()
+            .enumerate()
+            .map(|(seq, m)| PackedTask {
+                seq,
+                sample_ids: vec![m.id],
+                units: m.units,
+                bytes: m.bytes,
+            })
+            .collect(),
+        TaskSizing::LargeSn { workers } => pack_large(metas, workers.max(1)),
+    }
+}
+
+fn pack_to_bytes(metas: &[SampleMeta], target: usize) -> Vec<PackedTask> {
+    let mut out = Vec::new();
+    let mut cur = PackedTask { seq: 0, sample_ids: Vec::new(), units: 0, bytes: 0 };
+    for m in metas {
+        if !cur.sample_ids.is_empty() && cur.bytes + m.bytes > target {
+            let seq = out.len();
+            out.push(PackedTask { seq, ..std::mem::replace(&mut cur, PackedTask {
+                seq: 0,
+                sample_ids: Vec::new(),
+                units: 0,
+                bytes: 0,
+            }) });
+        }
+        cur.sample_ids.push(m.id);
+        cur.units += m.units;
+        cur.bytes += m.bytes;
+    }
+    if !cur.sample_ids.is_empty() {
+        let seq = out.len();
+        out.push(PackedTask { seq, ..cur });
+    }
+    out
+}
+
+/// BLT: split samples into `workers` contiguous groups of roughly equal
+/// byte size — "the master node referred to all samples on a node within
+/// a single file" (§4.1.3).
+fn pack_large(metas: &[SampleMeta], workers: usize) -> Vec<PackedTask> {
+    let total: usize = metas.iter().map(|m| m.bytes).sum();
+    let per = total.div_ceil(workers).max(1);
+    let tasks = pack_to_bytes(metas, per);
+    // pack_to_bytes may produce slightly more groups than workers when
+    // boundaries land badly; that still models "one big file per node".
+    tasks
+}
+
+/// Sanity bound used by callers and property tests: the largest packed
+/// task under Kneepoint/Fixed sizing, discounting single-sample tasks.
+pub fn max_multi_sample_bytes(tasks: &[PackedTask]) -> usize {
+    tasks
+        .iter()
+        .filter(|t| t.sample_ids.len() > 1)
+        .map(|t| t.bytes)
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn metas_from(rng: &mut Rng, n: usize) -> Vec<SampleMeta> {
+        (0..n as u64)
+            .map(|id| {
+                let units = rng.range(1, 8) as u32;
+                SampleMeta { id, bytes: units as usize * 2304, units }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tiniest_is_one_sample_per_task() {
+        let mut rng = Rng::new(1);
+        let metas = metas_from(&mut rng, 40);
+        let tasks = pack(&metas, TaskSizing::Tiniest);
+        assert_eq!(tasks.len(), 40);
+        assert!(tasks.iter().all(|t| t.sample_ids.len() == 1));
+    }
+
+    #[test]
+    fn large_sn_groups_to_worker_count() {
+        let mut rng = Rng::new(2);
+        let metas = metas_from(&mut rng, 100);
+        let tasks = pack(&metas, TaskSizing::LargeSn { workers: 6 });
+        assert!((6..=8).contains(&tasks.len()), "{} groups", tasks.len());
+    }
+
+    #[test]
+    fn kneepoint_respects_target_except_outliers() {
+        let mut metas = vec![SampleMeta { id: 0, bytes: 100_000, units: 30 }];
+        let mut rng = Rng::new(3);
+        metas.extend(metas_from(&mut rng, 50).into_iter().map(|mut m| {
+            m.id += 1;
+            m
+        }));
+        let tasks = pack(&metas, TaskSizing::Kneepoint(10_000));
+        // the outlier is alone in its task
+        let outlier_task = tasks
+            .iter()
+            .find(|t| t.sample_ids.contains(&0))
+            .unwrap();
+        assert_eq!(outlier_task.sample_ids.len(), 1);
+        assert!(max_multi_sample_bytes(&tasks) <= 10_000);
+    }
+
+    /// Property: packing conserves samples exactly, never duplicates,
+    /// and respects the byte target for multi-sample tasks.
+    #[test]
+    fn prop_packing_conserves_samples() {
+        check("packing conserves samples", 300, |rng| {
+            let n = rng.range(1, 120) as usize;
+            let metas = metas_from(rng, n);
+            let sizing = match rng.below(4) {
+                0 => TaskSizing::Tiniest,
+                1 => TaskSizing::LargeSn { workers: rng.range(1, 12) as usize },
+                2 => TaskSizing::Kneepoint(rng.range(1_000, 60_000) as usize),
+                _ => TaskSizing::Fixed(rng.range(1_000, 60_000) as usize),
+            };
+            let tasks = pack(&metas, sizing);
+            let mut ids: Vec<u64> =
+                tasks.iter().flat_map(|t| t.sample_ids.clone()).collect();
+            ids.sort_unstable();
+            let mut want: Vec<u64> = metas.iter().map(|m| m.id).collect();
+            want.sort_unstable();
+            prop_assert!(ids == want, "ids mismatch under {sizing:?}");
+            for t in &tasks {
+                let b: usize = t
+                    .sample_ids
+                    .iter()
+                    .map(|id| metas.iter().find(|m| m.id == *id).unwrap().bytes)
+                    .sum();
+                prop_assert!(b == t.bytes, "bytes bookkeeping off");
+                let u: u32 = t
+                    .sample_ids
+                    .iter()
+                    .map(|id| metas.iter().find(|m| m.id == *id).unwrap().units)
+                    .sum();
+                prop_assert!(u == t.units, "units bookkeeping off");
+            }
+            if let TaskSizing::Kneepoint(target) | TaskSizing::Fixed(target) = sizing {
+                prop_assert!(
+                    max_multi_sample_bytes(&tasks) <= target,
+                    "multi-sample task exceeds target {target}"
+                );
+            }
+            // seq numbering is dense
+            for (i, t) in tasks.iter().enumerate() {
+                prop_assert!(t.seq == i, "seq not dense");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_input_empty_output() {
+        assert!(pack(&[], TaskSizing::Tiniest).is_empty());
+        assert!(pack(&[], TaskSizing::Kneepoint(1000)).is_empty());
+    }
+}

@@ -1,0 +1,42 @@
+//! # subsample-bts
+//!
+//! Production-grade reproduction of *"An Efficient and Balanced Platform
+//! for Data-Parallel Subsampling Workloads"* (Kambhampati, OSU MS thesis,
+//! 2014): a data-parallel platform ("BTS") that sizes map tasks at the
+//! kneepoint of the task-size → cache-miss-rate curve, schedules the
+//! resulting *tiny tasks* with a two-step feedback scheduler, serves
+//! their data from an adaptively-replicated in-memory store, and uses
+//! job-level (not task-level) recovery.
+//!
+//! Three-layer architecture (DESIGN.md §3): this crate is Layer 3 — the
+//! rust coordinator that owns the event loop, scheduling, data
+//! distribution and metrics. The map/reduce statistics themselves are
+//! JAX + Pallas programs (python/compile/), AOT-lowered to HLO text and
+//! executed through the PJRT CPU client (`runtime`). Python never runs
+//! on the request path.
+//!
+//! ```text
+//! job → kneepoint::pack → scheduler::TwoStep → worker: dfs fetch →
+//!       runtime::execute(map artifact) → shuffle → runtime::execute
+//!       (reduce artifact, tree) → finalize
+//! ```
+
+pub mod cachesim;
+pub mod coordinator;
+pub mod data;
+pub mod dfs;
+pub mod error;
+pub mod figures;
+pub mod kneepoint;
+pub mod config;
+pub mod metrics;
+pub mod net;
+pub mod platforms;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod slo;
+pub mod util;
+pub mod workloads;
+
+pub use error::{Error, Result};

@@ -1,0 +1,300 @@
+//! `bts` — the platform launcher.
+//!
+//! ```text
+//! bts repro [--only ID[,ID...]] [--out DIR]     regenerate paper figures
+//! bts run [--config FILE] [--set k=v ...]       run a real job end to end
+//! bts profile [--workload W]                    offline kneepoint profiling
+//! bts calibrate                                 measure sim constants from PJRT
+//! bts plan --slo SECONDS [--workload W]         SLO planner (Fig 13 machinery)
+//! bts leader --listen ADDR --workers N [...]    serve a job over TCP
+//! bts worker --connect ADDR --id N              join a TCP leader
+//! bts list                                      list figure ids
+//! ```
+
+use std::sync::Arc;
+
+use bts::cachesim::CacheConfig;
+use bts::config::Config;
+use bts::coordinator::run_with_recovery;
+use bts::data::Workload;
+use bts::error::{Error, Result};
+use bts::figures::{all, Ctx};
+use bts::kneepoint::{
+    default_sizes, kneepoint_bytes, profile_workload, smallest_kneepoint,
+    KNEE_THRESHOLD,
+};
+use bts::runtime::Manifest;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("repro") => cmd_repro(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
+        Some("calibrate") => cmd_calibrate(),
+        Some("plan") => cmd_plan(&args[1..]),
+        Some("leader") => cmd_leader(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
+        Some("list") => {
+            for f in all() {
+                println!("{:10} {}", f.id, f.title);
+            }
+            Ok(())
+        }
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!(
+            "unknown command {other}; see `bts help`"
+        ))),
+    }
+}
+
+const HELP: &str = "\
+bts — an efficient and balanced platform for data-parallel subsampling workloads
+
+commands:
+  repro [--only IDs] [--out DIR]    regenerate every paper table/figure
+  run [--config F] [--set k=v]...   run a real job (PJRT execution)
+  profile [--workload W]            offline task-size -> miss-rate profiling
+  calibrate                         measure compute s/MiB from artifacts
+  plan --slo S [--workload W]       best configuration under an SLO
+  leader --listen A --workers N     serve a job over TCP
+  worker --connect A --id N         join a TCP leader
+  list                              list figure ids
+";
+
+fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn workload_arg(args: &[String]) -> Result<Workload> {
+    let w = flag(args, "--workload").unwrap_or("eaglet");
+    Workload::parse(w)
+        .ok_or_else(|| Error::Config(format!("unknown workload {w}")))
+}
+
+fn cmd_repro(args: &[String]) -> Result<()> {
+    let only: Option<Vec<&str>> =
+        flag(args, "--only").map(|s| s.split(',').collect());
+    let out_dir = flag(args, "--out");
+    if let Some(d) = out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    let (ctx, kernel) = Ctx::calibrated();
+    eprintln!(
+        "simulator constants (thesis-anchored, s/MiB processed): eaglet {:.3}, netflix_hi {:.3}, netflix_lo {:.3}",
+        ctx.eaglet_s_per_mib, ctx.netflix_hi_s_per_mib, ctx.netflix_lo_s_per_mib
+    );
+    match kernel {
+        Some([e, hi, lo]) => eprintln!(
+            "measured PJRT kernel cost (health check): eaglet {e:.4}, netflix_hi {hi:.4}, netflix_lo {lo:.4} s/MiB"
+        ),
+        None => eprintln!("artifacts not built: kernel health check skipped"),
+    }
+    for f in all() {
+        if let Some(ids) = &only {
+            if !ids.contains(&f.id) {
+                continue;
+            }
+        }
+        let text = (f.generate)(&ctx);
+        println!("\n===== {} — {} =====\n{}", f.id, f.title, text);
+        if let Some(d) = out_dir {
+            std::fs::write(format!("{d}/{}.txt", f.id), &text)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let mut cfg = match flag(args, "--config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--set" {
+            let kv = args.get(i + 1).ok_or_else(|| {
+                Error::Config("--set needs key=value".into())
+            })?;
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                Error::Config(format!("bad --set {kv}"))
+            })?;
+            cfg.set(k, v)?;
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    let manifest = Arc::new(Manifest::load_default()?);
+    let knee = kneepoint_bytes(cfg.workload, &CacheConfig::sandy_bridge());
+    println!(
+        "workload {}  sizing {:?}  kneepoint {:.2} MB  workers {}",
+        cfg.workload.name(),
+        cfg.sizing,
+        knee as f64 / (1024.0 * 1024.0),
+        cfg.workers
+    );
+    let ds = bts::workloads::build(
+        cfg.workload,
+        &manifest.params,
+        cfg.job_bytes,
+    );
+    let job_cfg = cfg.to_job_config(knee);
+    let r = run_with_recovery(ds.as_ref(), manifest, &job_cfg, 3)?;
+    println!("{}", r.report.render());
+    println!(
+        "scheduler: {} refills, {} steals; rf trajectory {:?}",
+        r.sched.refills, r.sched.steals, r.rf_trajectory
+    );
+    match &r.output {
+        bts::coordinator::JobOutput::Eaglet { alod, weight } => {
+            println!("ALOD over {weight} chunks:");
+            for (i, v) in alod.iter().enumerate() {
+                println!("  grid {i:2}: {v:8.4}");
+            }
+        }
+        bts::coordinator::JobOutput::Netflix(stats) => {
+            println!("per-month mean rating (95% CI half-width, n):");
+            for m in 0..stats.mean.len() {
+                println!(
+                    "  month {m:2}: {:.3} (±{:.3}, n={})",
+                    stats.mean[m], stats.ci_half[m], stats.count[m]
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &[String]) -> Result<()> {
+    let w = workload_arg(args)?;
+    let cache = CacheConfig::sandy_bridge();
+    let profile = profile_workload(w, &cache, &default_sizes(), None);
+    println!("task MB    L2 miss/instr   L3 miss/instr   AMAT");
+    for p in &profile.points {
+        println!(
+            "{:8.2}   {:12.6}   {:12.6}   {:6.1}",
+            p.task_bytes as f64 / (1024.0 * 1024.0),
+            p.l2_mpi,
+            p.l3_mpi,
+            p.amat
+        );
+    }
+    let knee = smallest_kneepoint(&profile.l2_curve(), KNEE_THRESHOLD);
+    println!(
+        "smallest kneepoint: {}",
+        knee.map(|b| format!("{:.2} MB", b as f64 / 1048576.0))
+            .unwrap_or_else(|| "none".into())
+    );
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    let (ctx, kernel) = Ctx::calibrated();
+    println!("simulator model constants (thesis-anchored):");
+    println!("  eaglet     {:.5} s/MiB processed", ctx.eaglet_s_per_mib);
+    println!("  netflix_hi {:.5} s/MiB processed", ctx.netflix_hi_s_per_mib);
+    println!("  netflix_lo {:.5} s/MiB processed", ctx.netflix_lo_s_per_mib);
+    match kernel {
+        Some([e, hi, lo]) => {
+            println!("measured PJRT kernel cost on this host:");
+            println!("  eaglet     {e:.5} s/MiB");
+            println!("  netflix_hi {hi:.5} s/MiB");
+            println!("  netflix_lo {lo:.5} s/MiB");
+        }
+        None => println!("artifacts not built: run `make artifacts` to measure kernels"),
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &[String]) -> Result<()> {
+    let w = workload_arg(args)?;
+    let slo: f64 = flag(args, "--slo")
+        .ok_or_else(|| Error::Config("--slo SECONDS required".into()))?
+        .parse()
+        .map_err(|_| Error::Config("bad --slo".into()))?;
+    let ctx = Ctx::default();
+    let jobs: Vec<usize> = [4, 16, 64, 230, 1024, 4096, 16384, 65536]
+        .iter()
+        .map(|mb| mb * 1024 * 1024)
+        .collect();
+    match bts::slo::best_under_slo(
+        w,
+        slo,
+        &[12, 36, 72],
+        &jobs,
+        ctx.compute_s_per_mib(w),
+    ) {
+        Some(p) => println!(
+            "best: {} cores, {:.0} MB job, {:.1}s, {:.1} MB/s ({:.0}% of peak)",
+            p.best.cores,
+            p.best.job_bytes as f64 / 1048576.0,
+            p.best.total_s,
+            p.best.throughput_mbs,
+            p.frac_of_peak * 100.0
+        ),
+        None => println!("no configuration meets a {slo}s SLO"),
+    }
+    Ok(())
+}
+
+fn cmd_leader(args: &[String]) -> Result<()> {
+    let addr = flag(args, "--listen").unwrap_or("127.0.0.1:7462");
+    let workers: usize = flag(args, "--workers")
+        .unwrap_or("2")
+        .parse()
+        .map_err(|_| Error::Config("bad --workers".into()))?;
+    let w = workload_arg(args)?;
+    let manifest = Arc::new(Manifest::load_default()?);
+    let knee = kneepoint_bytes(w, &CacheConfig::sandy_bridge());
+    let ds = bts::workloads::build(
+        w,
+        &manifest.params,
+        flag(args, "--job-bytes")
+            .map(bts::config::parse_bytes)
+            .transpose()?,
+    );
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!("leader on {addr}, waiting for {workers} workers...");
+    let report = bts::net::serve_job(
+        listener,
+        ds.as_ref(),
+        manifest,
+        bts::kneepoint::TaskSizing::Kneepoint(knee),
+        workers,
+        0xB75,
+    )?;
+    println!(
+        "done: {} tasks on {} workers in {:.2}s ({:.2} MB shipped)",
+        report.tasks,
+        report.workers,
+        report.total_s,
+        report.bytes_shipped as f64 / 1048576.0
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let addr = flag(args, "--connect").unwrap_or("127.0.0.1:7462");
+    let id: u32 = flag(args, "--id")
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| Error::Config("bad --id".into()))?;
+    let manifest = Arc::new(Manifest::load_default()?);
+    let n = bts::net::run_worker(addr, id, manifest)?;
+    println!("worker {id}: executed {n} tasks");
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Run metrics: timers, counters, and job reports.
+//!
+//! BTS exposes the same signals the thesis reports: startup time,
+//! per-task runtime overhead, throughput (MB/s), prefetch hit rate, and
+//! the replication factor trajectory. The optional `monitor` feature in
+//! the coordinator samples these every second, reproducing the
+//! "BTS with monitoring" experiment (§4.2.2).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Monotonic wall-clock timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Thread-safe f64 accumulator (microsecond resolution).
+#[derive(Default)]
+pub struct SecsCounter(AtomicU64);
+
+impl SecsCounter {
+    pub fn add(&self, secs: f64) {
+        self.0
+            .fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        self.0.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// Everything a finished job reports (EXPERIMENTS.md rows are printed
+/// from these).
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub workload: String,
+    pub platform: String,
+    pub tasks: usize,
+    pub samples: usize,
+    pub input_bytes: usize,
+    pub startup_s: f64,
+    pub map_s: f64,
+    pub reduce_s: f64,
+    pub total_s: f64,
+    pub task_exec: Summary,
+    pub task_fetch: Summary,
+    pub prefetch_hit_rate: f64,
+    pub final_rf: usize,
+    pub restarts: u32,
+}
+
+impl JobReport {
+    /// Throughput in MB/s over the whole job (the thesis's headline
+    /// metric; 117 Mb/s per 12-core node on EAGLET).
+    pub fn throughput_mbs(&self) -> f64 {
+        if self.total_s <= 0.0 {
+            return 0.0;
+        }
+        self.input_bytes as f64 / (1024.0 * 1024.0) / self.total_s
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "job[{} on {}] {} tasks / {} samples / {:.2} MB in {:.3}s \
+             (startup {:.3}s, map {:.3}s, reduce {:.3}s) => {:.2} MB/s; \
+             task exec p50 {:.1}ms p95 {:.1}ms; fetch p50 {:.2}ms; \
+             prefetch hits {:.0}%; rf {}; restarts {}",
+            self.workload,
+            self.platform,
+            self.tasks,
+            self.samples,
+            self.input_bytes as f64 / (1024.0 * 1024.0),
+            self.total_s,
+            self.startup_s,
+            self.map_s,
+            self.reduce_s,
+            self.throughput_mbs(),
+            self.task_exec.p50 * 1e3,
+            self.task_exec.p95 * 1e3,
+            self.task_fetch.p50 * 1e3,
+            self.prefetch_hit_rate * 100.0,
+            self.final_rf,
+            self.restarts,
+        )
+    }
+}
+
+/// Builder used by the coordinator while a job runs.
+#[derive(Default)]
+pub struct JobMetrics {
+    pub exec_times: std::sync::Mutex<Vec<f64>>,
+    pub fetch_times: std::sync::Mutex<Vec<f64>>,
+    pub prefetch_hits: AtomicU64,
+    pub prefetch_misses: AtomicU64,
+}
+
+impl JobMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe_exec(&self, secs: f64) {
+        self.exec_times.lock().unwrap().push(secs);
+    }
+
+    pub fn observe_fetch(&self, secs: f64) {
+        self.fetch_times.lock().unwrap().push(secs);
+    }
+
+    pub fn exec_summary(&self) -> Summary {
+        let v = self.exec_times.lock().unwrap();
+        summarize(if v.is_empty() { &[0.0] } else { &v })
+    }
+
+    pub fn fetch_summary(&self) -> Summary {
+        let v = self.fetch_times.lock().unwrap();
+        summarize(if v.is_empty() { &[0.0] } else { &v })
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.prefetch_hits.load(Ordering::Relaxed) as f64;
+        let m = self.prefetch_misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let r = JobReport {
+            workload: "eaglet".into(),
+            platform: "bts".into(),
+            tasks: 10,
+            samples: 100,
+            input_bytes: 10 * 1024 * 1024,
+            startup_s: 0.1,
+            map_s: 1.0,
+            reduce_s: 0.1,
+            total_s: 2.0,
+            task_exec: summarize(&[0.01]),
+            task_fetch: summarize(&[0.001]),
+            prefetch_hit_rate: 0.9,
+            final_rf: 3,
+            restarts: 0,
+        };
+        assert!((r.throughput_mbs() - 5.0).abs() < 1e-9);
+        assert!(r.render().contains("5.00 MB/s"));
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let m = JobMetrics::new();
+        m.observe_exec(0.5);
+        m.observe_exec(1.5);
+        m.observe_fetch(0.1);
+        m.prefetch_hits.store(9, Ordering::Relaxed);
+        m.prefetch_misses.store(1, Ordering::Relaxed);
+        assert!((m.exec_summary().mean - 1.0).abs() < 1e-9);
+        assert!((m.hit_rate() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn secs_counter() {
+        let c = SecsCounter::default();
+        c.add(0.25);
+        c.add(0.25);
+        assert!((c.get() - 0.5).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,177 @@
+//! Leader: owns the dataset, the packer and the two-step scheduler;
+//! pushes tasks (data inline) to connected workers and reduces the
+//! partials it collects.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use super::protocol::Message;
+use crate::coordinator::reduce::{
+    finalize_netflix, reduce_eaglet, reduce_netflix,
+};
+use crate::coordinator::JobOutput;
+use crate::data::{Dataset, Workload};
+use crate::error::{Error, Result};
+use crate::kneepoint::TaskSizing;
+use crate::metrics::Timer;
+use crate::runtime::{Manifest, Runtime};
+use crate::scheduler::{SchedConfig, TaskSpec, TwoStepScheduler};
+
+/// What a finished distributed job reports.
+#[derive(Debug, Clone)]
+pub struct LeaderReport {
+    pub output: JobOutput,
+    pub tasks: usize,
+    pub workers: usize,
+    pub total_s: f64,
+    pub bytes_shipped: usize,
+}
+
+/// Serve one job to `workers` connecting worker processes, then reduce.
+///
+/// `listener` should already be bound (letting the caller pick port 0
+/// for tests). Blocks until the job completes.
+pub fn serve_job(
+    listener: TcpListener,
+    dataset: &dyn Dataset,
+    manifest: Arc<Manifest>,
+    sizing: TaskSizing,
+    workers: usize,
+    seed: u64,
+) -> Result<LeaderReport> {
+    let timer = Timer::start();
+    let workload = dataset.workload();
+    let tasks = crate::kneepoint::pack(dataset.metas(), sizing);
+    let n_tasks = tasks.len();
+    let specs: Vec<TaskSpec> = tasks
+        .into_iter()
+        .map(|t| TaskSpec::new(t, workload, seed))
+        .collect();
+    let sched =
+        TwoStepScheduler::new(specs, workers, SchedConfig::default());
+
+    // Accept exactly `workers` connections (Hello handshake).
+    let mut conns: Vec<TcpStream> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (stream, _addr) = listener.accept()?;
+        stream.set_nodelay(true).ok();
+        let mut rd = BufReader::new(stream.try_clone()?);
+        match Message::read_from(&mut rd)? {
+            Message::Hello { .. } => conns.push(stream),
+            other => {
+                return Err(Error::Protocol(format!(
+                    "expected Hello, got {other:?}"
+                )))
+            }
+        }
+    }
+
+    let partials: Mutex<Vec<Option<(f32, Vec<f32>)>>> =
+        Mutex::new(vec![None; n_tasks]);
+    let shipped = Mutex::new(0usize);
+    let mut first_err: Option<Error> = None;
+
+    std::thread::scope(|sc| {
+        let mut handles = Vec::new();
+        for (w, stream) in conns.into_iter().enumerate() {
+            let sched = &sched;
+            let partials = &partials;
+            let shipped = &shipped;
+            handles.push(sc.spawn(move || -> Result<()> {
+                let mut rd = BufReader::new(stream.try_clone()?);
+                let mut wr = BufWriter::new(stream);
+                while let Some(spec) = sched.next(w) {
+                    let blocks: Vec<_> = spec
+                        .task
+                        .sample_ids
+                        .iter()
+                        .map(|&id| dataset.encode_block(id))
+                        .collect();
+                    let msg = Message::Task {
+                        seq: spec.task.seq as u32,
+                        workload: spec.workload,
+                        seed: spec.seed,
+                        blocks,
+                    };
+                    let t = Timer::start();
+                    *shipped.lock().unwrap() += spec.task.bytes;
+                    msg.write_to(&mut wr)?;
+                    match Message::read_from(&mut rd)? {
+                        Message::Partial { seq, weight, values, .. } => {
+                            partials.lock().unwrap()[seq as usize] =
+                                Some((weight, values));
+                        }
+                        Message::Error { message } => {
+                            return Err(Error::Protocol(format!(
+                                "worker {w}: {message}"
+                            )))
+                        }
+                        other => {
+                            return Err(Error::Protocol(format!(
+                                "expected Partial, got {other:?}"
+                            )))
+                        }
+                    }
+                    // round-trip time feeds the feedback loop as "exec"
+                    sched.report(w, 0.0, t.secs());
+                }
+                Message::Done.write_to(&mut wr)?;
+                Ok(())
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = Some(e),
+                Err(_) => {
+                    first_err =
+                        Some(Error::Protocol("leader thread panicked".into()))
+                }
+            }
+        }
+    });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    // Reduce on the leader through the same artifacts.
+    let collected: Vec<(f32, Vec<f32>)> = partials
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(seq, p)| {
+            p.ok_or_else(|| {
+                Error::Protocol(format!("no partial for task {seq}"))
+            })
+        })
+        .collect::<Result<_>>()?;
+    let rt = Runtime::new(manifest.clone())?;
+    let p = &manifest.params;
+    let output = match workload {
+        Workload::Eaglet => {
+            let (alod, weight) = reduce_eaglet(
+                &rt,
+                p,
+                collected.into_iter().map(|(w, v)| (v, w)).collect(),
+            )?;
+            JobOutput::Eaglet { alod, weight }
+        }
+        _ => {
+            let stats = reduce_netflix(
+                &rt,
+                p,
+                collected.into_iter().map(|(_, v)| v).collect(),
+            )?;
+            JobOutput::Netflix(finalize_netflix(p, &stats)?)
+        }
+    };
+    Ok(LeaderReport {
+        output,
+        tasks: n_tasks,
+        workers,
+        total_s: timer.secs(),
+        bytes_shipped: shipped.into_inner().unwrap(),
+    })
+}

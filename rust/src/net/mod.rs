@@ -1,0 +1,21 @@
+//! TCP leader/worker mode — the nc6-pipe stand-in (DESIGN.md §2).
+//!
+//! BashReduce connects map slots "through simple TCP pipes using the
+//! nc6 tool"; here the leader (master node) owns the scheduler and
+//! partitions data, pushing each task *with its input blocks inline* to
+//! worker processes over length-prefixed frames, and collecting partials
+//! back over the same socket. Workers execute through their local PJRT
+//! runtime; Python never appears on either side.
+//!
+//! The in-process engine (`coordinator::run_job`) remains the primary
+//! data plane (it exercises the dfs layer); this module exists so the
+//! platform also runs as real separate processes (`bts leader` /
+//! `bts worker`) and to price the wire protocol in the benches.
+
+pub mod leader;
+pub mod protocol;
+pub mod worker;
+
+pub use leader::{serve_job, LeaderReport};
+pub use protocol::Message;
+pub use worker::run_worker;

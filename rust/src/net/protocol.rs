@@ -1,0 +1,293 @@
+//! Wire protocol: length-prefixed binary frames, hand-rolled (no serde —
+//! the format is small and stable, and the explicit encoding doubles as
+//! its own documentation).
+//!
+//! Frame: `u32 LE payload length ‖ payload`. Payload: `u8 tag ‖ body`.
+
+use std::io::{Read, Write};
+
+use crate::data::block::Block;
+use crate::data::Workload;
+use crate::error::{Error, Result};
+
+/// Refuse frames beyond this size (a corrupt length prefix should fail
+/// fast, not allocate gigabytes). Large tasks ship many blocks but the
+/// packer keeps multi-sample tasks at kneepoint scale.
+pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
+
+const TAG_HELLO: u8 = 1;
+const TAG_TASK: u8 = 2;
+const TAG_PARTIAL: u8 = 3;
+const TAG_DONE: u8 = 4;
+const TAG_ERROR: u8 = 5;
+
+/// Everything that crosses the leader↔worker socket.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Hello { worker: u32 },
+    /// One map task with its input data inline (the leader "partitions
+    /// data and tasks access only the local file system" — here the
+    /// local side of that is the frame itself).
+    Task {
+        seq: u32,
+        workload: Workload,
+        seed: u64,
+        blocks: Vec<Block>,
+    },
+    /// Eaglet partial: mean ALOD + weight. Netflix partial: stat tensor.
+    Partial {
+        seq: u32,
+        weight: f32,
+        values: Vec<f32>,
+        netflix: bool,
+    },
+    Done,
+    Error { message: String },
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            return Err(Error::Protocol("truncated frame".into()));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.off != self.buf.len() {
+            return Err(Error::Protocol(format!(
+                "{} trailing bytes in frame",
+                self.buf.len() - self.off
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn workload_tag(w: Workload) -> u8 {
+    match w {
+        Workload::Eaglet => 0,
+        Workload::NetflixHi => 1,
+        Workload::NetflixLo => 2,
+    }
+}
+
+fn workload_from(tag: u8) -> Result<Workload> {
+    match tag {
+        0 => Ok(Workload::Eaglet),
+        1 => Ok(Workload::NetflixHi),
+        2 => Ok(Workload::NetflixLo),
+        other => Err(Error::Protocol(format!("bad workload tag {other}"))),
+    }
+}
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Message::Hello { worker } => {
+                out.push(TAG_HELLO);
+                put_u32(&mut out, *worker);
+            }
+            Message::Task { seq, workload, seed, blocks } => {
+                out.push(TAG_TASK);
+                put_u32(&mut out, *seq);
+                out.push(workload_tag(*workload));
+                put_u64(&mut out, *seed);
+                put_u32(&mut out, blocks.len() as u32);
+                for b in blocks {
+                    let enc = b.encode();
+                    put_u32(&mut out, enc.len() as u32);
+                    out.extend_from_slice(&enc);
+                }
+            }
+            Message::Partial { seq, weight, values, netflix } => {
+                out.push(TAG_PARTIAL);
+                put_u32(&mut out, *seq);
+                out.push(u8::from(*netflix));
+                out.extend_from_slice(&weight.to_le_bytes());
+                put_u32(&mut out, values.len() as u32);
+                for v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Message::Done => out.push(TAG_DONE),
+            Message::Error { message } => {
+                out.push(TAG_ERROR);
+                out.extend_from_slice(message.as_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Message> {
+        let mut c = Cursor { buf: payload, off: 0 };
+        let msg = match c.u8()? {
+            TAG_HELLO => Message::Hello { worker: c.u32()? },
+            TAG_TASK => {
+                let seq = c.u32()?;
+                let workload = workload_from(c.u8()?)?;
+                let seed = c.u64()?;
+                let n = c.u32()? as usize;
+                let mut blocks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let len = c.u32()? as usize;
+                    blocks.push(Block::decode(c.take(len)?)?);
+                }
+                Message::Task { seq, workload, seed, blocks }
+            }
+            TAG_PARTIAL => {
+                let seq = c.u32()?;
+                let netflix = c.u8()? != 0;
+                let weight = c.f32()?;
+                let n = c.u32()? as usize;
+                let mut values = Vec::with_capacity(n);
+                for _ in 0..n {
+                    values.push(c.f32()?);
+                }
+                Message::Partial { seq, weight, values, netflix }
+            }
+            TAG_DONE => Message::Done,
+            TAG_ERROR => Message::Error {
+                message: String::from_utf8_lossy(
+                    c.take(payload.len() - 1)?,
+                )
+                .into_owned(),
+            },
+            other => {
+                return Err(Error::Protocol(format!("unknown tag {other}")))
+            }
+        };
+        c.done()?;
+        Ok(msg)
+    }
+
+    /// Write one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        let payload = self.encode();
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        w.write_all(&payload)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one frame (blocking).
+    pub fn read_from(r: &mut impl Read) -> Result<Message> {
+        let mut len = [0u8; 4];
+        r.read_exact(&mut len)?;
+        let len = u32::from_le_bytes(len);
+        if len > MAX_FRAME {
+            return Err(Error::Protocol(format!(
+                "frame of {len} bytes exceeds cap"
+            )));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)?;
+        Message::decode(&payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::block::BlockId;
+    use crate::util::rng::Rng;
+
+    fn round_trip(m: &Message) {
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let back = Message::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(&back, m);
+    }
+
+    #[test]
+    fn all_messages_round_trip() {
+        round_trip(&Message::Hello { worker: 3 });
+        round_trip(&Message::Done);
+        round_trip(&Message::Error { message: "boom: Ω".into() });
+        round_trip(&Message::Partial {
+            seq: 9,
+            weight: 2.5,
+            values: vec![1.0, -3.5, 0.0],
+            netflix: false,
+        });
+        let mut rng = Rng::new(1);
+        let blocks: Vec<Block> = (0..3)
+            .map(|i| Block {
+                id: BlockId { kind: 0, sample: i },
+                units: 2,
+                payload: (0..50).map(|_| rng.f32()).collect(),
+            })
+            .collect();
+        round_trip(&Message::Task {
+            seq: 1,
+            workload: Workload::Eaglet,
+            seed: 0xDEAD,
+            blocks,
+        });
+        round_trip(&Message::Task {
+            seq: 2,
+            workload: Workload::NetflixHi,
+            seed: 1,
+            blocks: vec![],
+        });
+    }
+
+    #[test]
+    fn rejects_truncated_and_trailing() {
+        let m = Message::Hello { worker: 1 };
+        let payload = m.encode();
+        assert!(Message::decode(&payload[..payload.len() - 1]).is_err());
+        let mut extra = payload.clone();
+        extra.push(0);
+        assert!(Message::decode(&extra).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_tags_and_oversize_frames() {
+        assert!(Message::decode(&[99]).is_err());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        assert!(Message::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn workload_tags_round_trip() {
+        for w in [Workload::Eaglet, Workload::NetflixHi, Workload::NetflixLo]
+        {
+            assert_eq!(workload_from(workload_tag(w)).unwrap(), w);
+        }
+        assert!(workload_from(7).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Worker process: connect to the leader, execute every task pushed at
+//! it through the local PJRT runtime, stream partials back.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use super::protocol::Message;
+use crate::coordinator::assemble::{MapTask, TaskPartial};
+use crate::error::{Error, Result};
+use crate::runtime::{Manifest, Runtime};
+
+/// Connect to `addr`, announce as `worker_id`, and serve until Done.
+/// Returns the number of tasks executed.
+pub fn run_worker(
+    addr: &str,
+    worker_id: u32,
+    manifest: Arc<Manifest>,
+) -> Result<u64> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut rd = BufReader::new(stream.try_clone()?);
+    let mut wr = BufWriter::new(stream);
+    Message::Hello { worker: worker_id }.write_to(&mut wr)?;
+
+    let p = manifest.params.clone();
+    let rt = Runtime::new(manifest)?;
+    let mut done: u64 = 0;
+    loop {
+        match Message::read_from(&mut rd)? {
+            Message::Task { seq, workload, seed, blocks } => {
+                let reply = (|| -> Result<Message> {
+                    let slices =
+                        MapTask::slices(&p, workload, &blocks, seed)?;
+                    let mut parts = Vec::with_capacity(slices.len());
+                    for s in &slices {
+                        let e = rt
+                            .manifest
+                            .entry(s.kind, s.bucket)
+                            .ok_or_else(|| {
+                                Error::Artifact(format!(
+                                    "no entry {} b{}",
+                                    s.kind, s.bucket
+                                ))
+                            })?
+                            .clone();
+                        let out = rt.execute(&e, &s.inputs)?;
+                        parts.push(TaskPartial::from_map_output(
+                            &p, s, &out[0],
+                        )?);
+                    }
+                    Ok(match TaskPartial::merge(parts)? {
+                        TaskPartial::Eaglet { alod, weight } => {
+                            Message::Partial {
+                                seq,
+                                weight,
+                                values: alod,
+                                netflix: false,
+                            }
+                        }
+                        TaskPartial::Netflix { stats } => Message::Partial {
+                            seq,
+                            weight: 0.0,
+                            values: stats,
+                            netflix: true,
+                        },
+                    })
+                })();
+                match reply {
+                    Ok(msg) => msg.write_to(&mut wr)?,
+                    Err(e) => {
+                        Message::Error { message: e.to_string() }
+                            .write_to(&mut wr)?;
+                        return Err(e);
+                    }
+                }
+                done += 1;
+            }
+            Message::Done => return Ok(done),
+            other => {
+                return Err(Error::Protocol(format!(
+                    "worker expected Task/Done, got {other:?}"
+                )))
+            }
+        }
+    }
+}

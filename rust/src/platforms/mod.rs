@@ -1,0 +1,39 @@
+//! Platform models: BTS itself plus the comparison platforms of Table 1.
+//!
+//! BTS is *fully implemented* in this crate (scheduler + dfs + runtime);
+//! Hadoop variants are overhead models calibrated once against the
+//! thesis's own Figures 5–6 (DESIGN.md §6). Everything downstream —
+//! the Fig 10/11 crossovers, SLO behaviour, elasticity — emerges from
+//! the event model plus these constants.
+
+pub mod spec;
+
+pub use spec::{PlatformKind, PlatformSpec, SizingKind};
+
+/// All platforms of Table 1 plus the three BashReduce sizing arms
+/// (§4.1.3) and bare Linux (the Fig 6 baseline).
+pub fn all_platforms() -> Vec<PlatformSpec> {
+    vec![
+        PlatformSpec::native_linux(),
+        PlatformSpec::bts(),
+        PlatformSpec::blt(),
+        PlatformSpec::btt(),
+        PlatformSpec::vanilla_hadoop(),
+        PlatformSpec::job_level_hadoop(),
+        PlatformSpec::lite_hadoop(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inventory_matches_table1() {
+        let names: Vec<&str> =
+            all_platforms().iter().map(|p| p.name).collect();
+        for want in ["native-linux", "bts", "blt", "btt", "vanilla-hadoop", "job-level-hadoop", "lite-hadoop"] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT execution: load HLO-text artifacts, compile once, run many.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (jax ≥0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects).
+//!
+//! `Runtime` is intentionally **not Send** (the xla crate wraps the
+//! client in an `Rc`): each worker thread constructs its own via
+//! `Runtime::new`, compiles lazily, and caches executables for the
+//! duration of the process — compilation never sits on the per-task
+//! path after first touch.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::manifest::{Dtype, Entry, Manifest};
+use crate::error::{Error, Result};
+
+/// A host-side tensor handed to/returned from an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => Err(Error::Artifact("expected f32 tensor".into())),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v, _) => xla::Literal::vec1(v),
+            HostTensor::I32(v, _) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Arc<Manifest>,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    pub executions: std::cell::Cell<u64>,
+    pub compile_s: std::cell::Cell<f64>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Arc<Manifest>) -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            executions: std::cell::Cell::new(0),
+            compile_s: std::cell::Cell::new(0.0),
+        })
+    }
+
+    /// Pre-compile a set of entries (pull compile time off the first
+    /// task's critical path).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            let e = self
+                .manifest
+                .entry_named(n)
+                .ok_or_else(|| Error::Artifact(format!("no entry {n}")))?
+                .clone();
+            self.ensure_compiled(&e)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&self, entry: &Entry) -> Result<()> {
+        if self.cache.borrow().contains_key(&entry.name) {
+            return Ok(());
+        }
+        let t = std::time::Instant::now();
+        let path = self.manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Artifact("non-utf8 artifact path".into())
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_s
+            .set(self.compile_s.get() + t.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(entry.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Validate inputs against the entry spec (shape + dtype) — catches
+    /// marshaling bugs at the boundary instead of inside XLA.
+    fn check_inputs(entry: &Entry, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: got {} inputs, want {}",
+                entry.name,
+                inputs.len(),
+                entry.inputs.len()
+            )));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if t.shape() != spec.shape.as_slice() || t.dtype() != spec.dtype
+            {
+                return Err(Error::Artifact(format!(
+                    "{} input #{i} ({}): got {:?} {:?}, want {:?} {:?}",
+                    entry.name,
+                    spec.name,
+                    t.dtype(),
+                    t.shape(),
+                    spec.dtype,
+                    spec.shape,
+                )));
+            }
+            if t.elements() != spec.elements() {
+                return Err(Error::Artifact(format!(
+                    "{} input #{i}: element count mismatch",
+                    entry.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an entry; returns the output tensors as flat f32 vectors
+    /// (all our artifact outputs are f32).
+    pub fn execute(
+        &self,
+        entry: &Entry,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<Vec<f32>>> {
+        Self::check_inputs(entry, inputs)?;
+        self.ensure_compiled(entry)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(&entry.name).expect("just compiled");
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        self.executions.set(self.executions.get() + 1);
+        // aot.py lowers with return_tuple=True: output is an n-tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: got {} outputs, want {}",
+                entry.name,
+                parts.len(),
+                entry.outputs.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// Convenience: execute the map entry for `kind` at the bucket
+    /// fitting `units` samples.
+    pub fn execute_map(
+        &self,
+        kind: &str,
+        units: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.map_entry(kind, units)?.clone();
+        self.execute(&entry, inputs)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Execution round-trip tests live in rust/tests/integration_runtime.rs
+    // (they need built artifacts); here we cover the host-tensor plumbing.
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.elements(), 4);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.as_f32().is_ok());
+        let i = HostTensor::I32(vec![1, 2], vec![2]);
+        assert_eq!(i.dtype(), Dtype::I32);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn input_check_catches_shape_mismatch() {
+        let entry = Entry {
+            name: "t".into(),
+            kind: "t".into(),
+            bucket: 1,
+            file: "t.hlo.txt".into(),
+            inputs: vec![super::super::manifest::TensorSpec {
+                name: "x".into(),
+                shape: vec![2, 2],
+                dtype: Dtype::F32,
+            }],
+            outputs: vec![],
+        };
+        let bad_shape = HostTensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert!(Runtime::check_inputs(&entry, &[bad_shape]).is_err());
+        let bad_dtype = HostTensor::I32(vec![0; 4], vec![2, 2]);
+        assert!(Runtime::check_inputs(&entry, &[bad_dtype]).is_err());
+        let bad_arity = HostTensor::F32(vec![0.0; 4], vec![2, 2]);
+        assert!(
+            Runtime::check_inputs(&entry, &[bad_arity.clone(), bad_arity])
+                .is_err()
+        );
+        let good = HostTensor::F32(vec![0.0; 4], vec![2, 2]);
+        assert!(Runtime::check_inputs(&entry, &[good]).is_ok());
+    }
+}

@@ -1,0 +1,230 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! `artifacts/manifest.json` lists every compiled HLO entry point with
+//! its input/output tensor specs and the model parameters
+//! (`data::ModelParams`); `Manifest::load` parses and validates it so a
+//! drift between shapes.py and the rust defaults fails loudly at startup
+//! rather than corrupting results.
+
+use std::path::{Path, PathBuf};
+
+use crate::data::ModelParams;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => Err(Error::Artifact(format!("unsupported dtype {other}"))),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    /// Entry family: eaglet_map, netflix_map_hi, netflix_map_lo,
+    /// eaglet_reduce, netflix_reduce.
+    pub kind: String,
+    /// Samples-per-task bucket (map) or fan-in K (reduce).
+    pub bucket: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub params: ModelParams,
+    pub entries: Vec<Entry>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| Error::Artifact("specs not an array".into()))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.req_str("name")?.to_string(),
+                shape: t
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: Dtype::parse(t.req_str("dtype")?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| {
+                Error::Artifact(format!(
+                    "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                    dir.display()
+                ))
+            })?;
+        let j = Json::parse(&text)?;
+        let params = ModelParams::from_json(j.req("params")?)?;
+        let entries = j
+            .req_arr("entries")?
+            .iter()
+            .map(|e| {
+                Ok(Entry {
+                    name: e.req_str("name")?.to_string(),
+                    kind: e.req_str("kind")?.to_string(),
+                    bucket: e.req_usize("bucket")?,
+                    file: e.req_str("file")?.to_string(),
+                    inputs: tensor_specs(e.req("inputs")?)?,
+                    outputs: tensor_specs(e.req("outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest { dir, params, entries };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Default artifact location: $BTS_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("BTS_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.entries.is_empty() {
+            return Err(Error::Artifact("manifest has no entries".into()));
+        }
+        for e in &self.entries {
+            if !self.dir.join(&e.file).exists() {
+                return Err(Error::Artifact(format!(
+                    "artifact file missing: {}",
+                    e.file
+                )));
+            }
+            if e.inputs.is_empty() || e.outputs.is_empty() {
+                return Err(Error::Artifact(format!(
+                    "entry {} missing tensor specs",
+                    e.name
+                )));
+            }
+        }
+        // every bucket advertised by params must have all map kinds
+        for &b in &self.params.buckets {
+            for kind in ["eaglet_map", "netflix_map_hi", "netflix_map_lo"] {
+                if self.entry(kind, b).is_none() {
+                    return Err(Error::Artifact(format!(
+                        "missing {kind} bucket {b}"
+                    )));
+                }
+            }
+        }
+        for kind in ["eaglet_reduce", "netflix_reduce"] {
+            if !self.entries.iter().any(|e| e.kind == kind) {
+                return Err(Error::Artifact(format!("missing {kind}")));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, kind: &str, bucket: usize) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.bucket == bucket)
+    }
+
+    pub fn entry_named(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Map-entry lookup for a task of `units` samples: smallest compiled
+    /// bucket that fits.
+    pub fn map_entry(&self, kind: &str, units: usize) -> Result<&Entry> {
+        let bucket = self.params.bucket_for(units).ok_or_else(|| {
+            Error::Artifact(format!(
+                "task of {units} units exceeds max bucket {}",
+                self.params.max_bucket()
+            ))
+        })?;
+        self.entry(kind, bucket).ok_or_else(|| {
+            Error::Artifact(format!("no entry {kind} bucket {bucket}"))
+        })
+    }
+
+    pub fn hlo_path(&self, e: &Entry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert_eq!(m.params, ModelParams::default(), "shapes.py drifted");
+        assert_eq!(m.entries.len(), 3 * m.params.buckets.len() + 2);
+        let e = m.map_entry("eaglet_map", 3).unwrap();
+        assert_eq!(e.bucket, 4);
+        assert_eq!(e.inputs[0].shape, vec![4, 64, 8]);
+        assert_eq!(e.outputs[0].shape, vec![4, 32]);
+    }
+
+    #[test]
+    fn map_entry_rejects_oversize() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert!(m.map_entry("eaglet_map", 65).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_a_clear_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("float64").is_err());
+    }
+}

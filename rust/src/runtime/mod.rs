@@ -1,0 +1,44 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (python/compile/aot.py → HLO text + manifest.json) and executes them
+//! on the request path — Python never runs here.
+//!
+//! See /opt/xla-example/load_hlo and DESIGN.md §3 for the interchange
+//! contract (HLO *text*, not serialized StableHLO).
+
+pub mod client;
+pub mod manifest;
+pub mod pool;
+
+pub use client::{HostTensor, Runtime};
+pub use pool::ExecutorPool;
+pub use manifest::{Dtype, Entry, Manifest, TensorSpec};
+
+use crate::error::Result;
+
+/// Anything that can execute a compiled artifact — the per-thread
+/// [`Runtime`] or the process-wide [`ExecutorPool`]. Reduce trees and
+/// calibration are generic over this.
+pub trait Exec {
+    fn manifest(&self) -> &Manifest;
+    fn run(&self, entry: &Entry, inputs: Vec<HostTensor>) -> Result<Vec<Vec<f32>>>;
+}
+
+impl Exec for Runtime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, entry: &Entry, inputs: Vec<HostTensor>) -> Result<Vec<Vec<f32>>> {
+        self.execute(entry, &inputs)
+    }
+}
+
+impl Exec for ExecutorPool {
+    fn manifest(&self) -> &Manifest {
+        self.manifest_ref()
+    }
+
+    fn run(&self, entry: &Entry, inputs: Vec<HostTensor>) -> Result<Vec<Vec<f32>>> {
+        self.execute(entry, inputs)
+    }
+}

@@ -1,0 +1,214 @@
+//! Process-wide executor pool: persistent PJRT runtimes behind channels.
+//!
+//! §Perf (EXPERIMENTS.md): profiling showed a 400-task tiny-task job
+//! spending ~2 s of its 2.1 s wall in *per-worker* `PjRtClient::cpu()`
+//! creation and executable compilation — the map work itself was ~85 ms.
+//! The xla crate's client is `Rc`-based (not `Send`), so runtimes cannot
+//! be shared across worker threads directly; instead a fixed pool of
+//! executor threads each owns one `Runtime` for the life of the process
+//! and serves execute requests over channels. Compilation happens at
+//! most once per (executor, entry) — first job in a process pays it,
+//! every later job (and every later task) runs hot. Workers stay
+//! lightweight: fetch, assemble, submit, report.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+
+use super::client::{HostTensor, Runtime};
+use super::manifest::{Entry, Manifest};
+use crate::error::{Error, Result};
+
+struct Request {
+    entry_name: String,
+    inputs: Vec<HostTensor>,
+    resp: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Fixed-size pool of executor threads, each owning a persistent
+/// `Runtime` (PJRT client + compiled-executable cache).
+pub struct ExecutorPool {
+    manifest: Arc<Manifest>,
+    senders: Vec<Mutex<mpsc::Sender<Request>>>,
+    rr: AtomicUsize,
+}
+
+impl ExecutorPool {
+    /// Build a pool of `n` executors. Prefer [`ExecutorPool::global`].
+    pub fn new(manifest: Arc<Manifest>, n: usize) -> Arc<ExecutorPool> {
+        let n = n.max(1);
+        let mut senders = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let m = manifest.clone();
+            std::thread::Builder::new()
+                .name(format!("bts-exec-{i}"))
+                .spawn(move || executor_loop(m, rx))
+                .expect("spawn executor");
+            senders.push(Mutex::new(tx));
+        }
+        Arc::new(ExecutorPool {
+            manifest,
+            senders,
+            rr: AtomicUsize::new(0),
+        })
+    }
+
+    /// The process-wide pool, created on first use against the default
+    /// manifest location. Sized to the host's parallelism (capped — each
+    /// executor holds a full PJRT client).
+    pub fn global(manifest: &Arc<Manifest>) -> Result<Arc<ExecutorPool>> {
+        static POOL: OnceLock<Arc<ExecutorPool>> = OnceLock::new();
+        let pool = POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+                .min(8);
+            ExecutorPool::new(manifest.clone(), n)
+        });
+        // A process talks to one artifact set; catch accidental mixes.
+        if pool.manifest.dir != manifest.dir {
+            return Err(Error::Artifact(format!(
+                "executor pool bound to {}, asked for {}",
+                pool.manifest.dir.display(),
+                manifest.dir.display()
+            )));
+        }
+        Ok(pool.clone())
+    }
+
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn manifest_ref(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute `entry` on the least-recently-used executor (round
+    /// robin). Blocks until the result is back.
+    pub fn execute(
+        &self,
+        entry: &Entry,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let req = Request {
+            entry_name: entry.name.clone(),
+            inputs,
+            resp: resp_tx,
+        };
+        self.senders[i]
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| Error::Xla("executor thread gone".into()))?;
+        resp_rx
+            .recv()
+            .map_err(|_| Error::Xla("executor dropped request".into()))?
+    }
+
+    /// Pre-compile entries on every executor (pull compile cost off the
+    /// first tasks). Best-effort; errors surface on first real use.
+    pub fn warm(&self, names: &[&str]) {
+        for name in names {
+            let Some(entry) = self.manifest.entry_named(name) else {
+                continue;
+            };
+            let probe: Vec<HostTensor> = entry
+                .inputs
+                .iter()
+                .map(|spec| match spec.dtype {
+                    super::manifest::Dtype::F32 => HostTensor::F32(
+                        vec![0.0; spec.elements()],
+                        spec.shape.clone(),
+                    ),
+                    super::manifest::Dtype::I32 => HostTensor::I32(
+                        vec![0; spec.elements()],
+                        spec.shape.clone(),
+                    ),
+                })
+                .collect();
+            for _ in 0..self.senders.len() {
+                let _ = self.execute(entry, probe.clone());
+            }
+        }
+    }
+}
+
+fn executor_loop(manifest: Arc<Manifest>, rx: mpsc::Receiver<Request>) {
+    let rt = match Runtime::new(manifest.clone()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Fail every request with the construction error.
+            while let Ok(req) = rx.recv() {
+                let _ = req
+                    .resp
+                    .send(Err(Error::Xla(format!("runtime init failed: {e}"))));
+            }
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        let result = match manifest.entry_named(&req.entry_name) {
+            Some(entry) => rt.execute(entry, &req.inputs),
+            None => Err(Error::Artifact(format!(
+                "unknown entry {}",
+                req.entry_name
+            ))),
+        };
+        // Receiver may have given up (job aborted) — fine.
+        let _ = req.resp.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Arc<Manifest>> {
+        Manifest::load("artifacts").ok().map(Arc::new)
+    }
+
+    #[test]
+    fn pool_executes_and_round_robins() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let pool = ExecutorPool::new(m.clone(), 2);
+        let e = m.entry("netflix_reduce", m.params.reduce_fan).unwrap();
+        let parts = HostTensor::F32(
+            vec![1.0; m.params.reduce_fan * m.params.months * m.params.stat_fields],
+            vec![m.params.reduce_fan, m.params.months, m.params.stat_fields],
+        );
+        for _ in 0..4 {
+            let out = pool.execute(e, vec![parts.clone()]).unwrap();
+            assert_eq!(
+                out[0].len(),
+                m.params.months * m.params.stat_fields
+            );
+            assert!(out[0].iter().all(|&v| v == m.params.reduce_fan as f32));
+        }
+    }
+
+    #[test]
+    fn pool_reports_unknown_entry() {
+        let Some(m) = manifest() else { return };
+        let pool = ExecutorPool::new(m.clone(), 1);
+        let mut bogus = m.entries[0].clone();
+        bogus.name = "nope".into();
+        assert!(pool.execute(&bogus, vec![]).is_err());
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_guards_manifest_dir() {
+        let Some(m) = manifest() else { return };
+        let a = ExecutorPool::global(&m).unwrap();
+        let b = ExecutorPool::global(&m).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let mut other = (*m).clone();
+        other.dir = "/tmp/elsewhere".into();
+        assert!(ExecutorPool::global(&Arc::new(other)).is_err());
+    }
+}

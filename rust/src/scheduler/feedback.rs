@@ -1,0 +1,121 @@
+//! Feedback loop: sizes step-2 batches from observed task timings.
+//!
+//! The thesis prescribes queueing enough tasks that a worker "can
+//! quickly fetch from the queue" instead of waiting a scheduler
+//! round-trip per tiny task: we target `lead_s` seconds of queued work
+//! per worker, estimated from an EWMA of per-task execution time.
+
+use crate::util::stats::Ewma;
+
+/// Aggregated timing observations driving the step-2 batch size.
+#[derive(Debug)]
+pub struct FeedbackStats {
+    /// EWMA of per-task wall execution seconds (map execute only).
+    pub exec_s: Ewma,
+    /// EWMA of per-task data fetch seconds.
+    pub fetch_s: Ewma,
+    /// Per-worker EWMA of execution seconds (busy-skip + hetero view).
+    pub worker_exec_s: Vec<Ewma>,
+    /// Tasks reported complete.
+    pub completed: u64,
+}
+
+impl FeedbackStats {
+    pub fn new(workers: usize, alpha: f64) -> Self {
+        FeedbackStats {
+            exec_s: Ewma::new(alpha),
+            fetch_s: Ewma::new(alpha),
+            worker_exec_s: (0..workers).map(|_| Ewma::new(alpha)).collect(),
+            completed: 0,
+        }
+    }
+
+    pub fn observe(&mut self, worker: usize, fetch_s: f64, exec_s: f64) {
+        self.exec_s.observe(exec_s);
+        self.fetch_s.observe(fetch_s);
+        if let Some(w) = self.worker_exec_s.get_mut(worker) {
+            w.observe(exec_s);
+        }
+        self.completed += 1;
+    }
+
+    /// Relative speed of `worker` (1.0 = cluster mean; >1 = faster).
+    /// Drives busy-skip: slow workers get smaller refills.
+    pub fn relative_speed(&self, worker: usize) -> f64 {
+        let mine = match self.worker_exec_s.get(worker).and_then(|e| e.get())
+        {
+            Some(v) if v > 0.0 => v,
+            _ => return 1.0,
+        };
+        let known: Vec<f64> = self
+            .worker_exec_s
+            .iter()
+            .filter_map(|e| e.get())
+            .filter(|v| *v > 0.0)
+            .collect();
+        if known.is_empty() {
+            return 1.0;
+        }
+        let mean = known.iter().sum::<f64>() / known.len() as f64;
+        (mean / mine).clamp(0.1, 10.0)
+    }
+}
+
+/// Batch size for a step-2 refill: enough tasks to cover `lead_s`
+/// seconds at the observed per-task time, clamped to `[1, max_batch]`.
+/// Before any observation exists (cold start), returns 1 — the probe.
+pub fn batch_size(avg_exec_s: Option<f64>, lead_s: f64, max_batch: usize) -> usize {
+    match avg_exec_s {
+        None => 1,
+        Some(t) if t <= 0.0 => max_batch.max(1),
+        Some(t) => ((lead_s / t).ceil() as usize).clamp(1, max_batch.max(1)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_is_probe_sized() {
+        assert_eq!(batch_size(None, 1.0, 64), 1);
+    }
+
+    #[test]
+    fn fast_tasks_get_bigger_batches() {
+        let slow = batch_size(Some(0.5), 1.0, 64);
+        let fast = batch_size(Some(0.01), 1.0, 64);
+        assert!(fast > slow, "fast={fast} slow={slow}");
+        assert_eq!(fast, 64.min((1.0f64 / 0.01).ceil() as usize));
+    }
+
+    #[test]
+    fn batch_clamped_to_max() {
+        assert_eq!(batch_size(Some(1e-9), 1.0, 16), 16);
+        assert_eq!(batch_size(Some(100.0), 1.0, 16), 1);
+        assert_eq!(batch_size(Some(0.0), 1.0, 16), 16);
+    }
+
+    #[test]
+    fn relative_speed_tracks_hetero_workers() {
+        let mut s = FeedbackStats::new(3, 0.5);
+        for _ in 0..20 {
+            s.observe(0, 0.0, 0.10); // fast
+            s.observe(1, 0.0, 0.10);
+            s.observe(2, 0.0, 0.40); // slow node
+        }
+        assert!(s.relative_speed(0) > 1.0);
+        assert!(s.relative_speed(2) < 0.7);
+        // unknown worker defaults to mean speed
+        assert_eq!(s.relative_speed(99), 1.0);
+    }
+
+    #[test]
+    fn observe_counts() {
+        let mut s = FeedbackStats::new(1, 0.3);
+        s.observe(0, 0.1, 0.2);
+        s.observe(0, 0.1, 0.2);
+        assert_eq!(s.completed, 2);
+        assert!(s.exec_s.get().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Two-step dynamic task scheduler (thesis §1.1.2, §3.5, Fig 7).
+//!
+//! Step 1 assigns exactly **one probe task per worker**. Step 2 runs a
+//! feedback loop: measured task execution and data-fetch times size the
+//! per-worker batches ("the dynamic scheduler now queues multiple tasks
+//! to a node such that a node need not wait for next task, instead it
+//! can quickly fetch from the queue"). Refills are round-robin with
+//! busy-skip — workers whose queue is still deep are skipped, which is
+//! what erases the heterogeneity slowdown on large jobs (§4.2.4) — and
+//! idle workers steal from the longest queue once the pending pool
+//! drains (work stealing, refs [2],[39],[41]).
+
+pub mod feedback;
+pub mod twostep;
+
+pub use feedback::{batch_size, FeedbackStats};
+pub use twostep::{SchedConfig, SchedSnapshot, TaskSpec, TwoStepScheduler};

@@ -1,0 +1,167 @@
+//! Cluster description — the Table-2 hardware types and node sets used
+//! throughout §4.
+//!
+//! | | Type I | Type II | Type III |
+//! | Processor | Xeon | Xeon | Opteron |
+//! | Cores/Node | 12 | 12 | 32 |
+//! | Speed | 2.0G | 2.3G | 2.3G |
+//! | L2 | 15MB | 15MB | 32MB |
+//! | Memory | 32GB | 32GB | 64GB |
+//! | Virtualized | No | No | Yes |
+
+use crate::cachesim::CacheConfig;
+
+/// Virtualization slowdown observed in §4.2.4 ("we observed slowdown of
+/// 16% across both workloads" on user-mode Linux VMs).
+pub const VIRT_SLOWDOWN: f64 = 0.16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HardwareType {
+    TypeI,
+    TypeII,
+    TypeIII,
+}
+
+impl HardwareType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HardwareType::TypeI => "Type I (Xeon 12c @2.0GHz)",
+            HardwareType::TypeII => "Type II (Xeon 12c @2.3GHz)",
+            HardwareType::TypeIII => "Type III (Opteron 32c @2.3GHz, virtualized)",
+        }
+    }
+
+    pub fn cores(&self) -> usize {
+        match self {
+            HardwareType::TypeI | HardwareType::TypeII => 12,
+            HardwareType::TypeIII => 32,
+        }
+    }
+
+    pub fn ghz(&self) -> f64 {
+        match self {
+            HardwareType::TypeI => 2.0,
+            _ => 2.3,
+        }
+    }
+
+    pub fn l2_mb(&self) -> usize {
+        match self {
+            HardwareType::TypeI | HardwareType::TypeII => 15,
+            HardwareType::TypeIII => 32,
+        }
+    }
+
+    pub fn mem_gb(&self) -> usize {
+        match self {
+            HardwareType::TypeI | HardwareType::TypeII => 32,
+            HardwareType::TypeIII => 64,
+        }
+    }
+
+    pub fn virtualized(&self) -> bool {
+        matches!(self, HardwareType::TypeIII)
+    }
+
+    /// Relative core speed vs Type II (the reference testbed): clock
+    /// ratio × virtualization penalty.
+    pub fn speed_factor(&self) -> f64 {
+        let clock = self.ghz() / 2.3;
+        if self.virtualized() {
+            clock * (1.0 - VIRT_SLOWDOWN)
+        } else {
+            clock
+        }
+    }
+
+    /// Cache hierarchy for the kneepoint profiler on this hardware.
+    pub fn cache_config(&self) -> CacheConfig {
+        match self {
+            HardwareType::TypeI | HardwareType::TypeII => {
+                CacheConfig::sandy_bridge()
+            }
+            HardwareType::TypeIII => CacheConfig::opteron(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub hw: HardwareType,
+}
+
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub nodes: Vec<NodeSpec>,
+    /// Shared interconnect capacity (the §4.2.3 testbed ran on 1 Gb/s).
+    pub network_gbps: f64,
+}
+
+impl Cluster {
+    pub fn homogeneous(hw: HardwareType, nodes: usize) -> Self {
+        Cluster {
+            nodes: vec![NodeSpec { hw }; nodes],
+            network_gbps: 1.0,
+        }
+    }
+
+    /// The §4.2.4 heterogeneous setup: `slow` Type-I nodes (15% slower)
+    /// among Type-III nodes, 60 cores total in the thesis.
+    pub fn heterogeneous(slow_nodes: usize, fast_nodes: usize) -> Self {
+        let mut nodes = vec![NodeSpec { hw: HardwareType::TypeI }; slow_nodes];
+        nodes.extend(vec![
+            NodeSpec { hw: HardwareType::TypeIII };
+            fast_nodes
+        ]);
+        Cluster { nodes, network_gbps: 1.0 }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes.iter().map(|n| n.hw.cores()).sum()
+    }
+
+    /// Per-core speed factors, flattened (the list scheduler's view).
+    pub fn core_speeds(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.total_cores());
+        for n in &self.nodes {
+            for _ in 0..n.hw.cores() {
+                v.push(n.hw.speed_factor());
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        assert_eq!(HardwareType::TypeI.cores(), 12);
+        assert_eq!(HardwareType::TypeIII.cores(), 32);
+        assert_eq!(HardwareType::TypeI.ghz(), 2.0);
+        assert_eq!(HardwareType::TypeIII.l2_mb(), 32);
+        assert!(HardwareType::TypeIII.virtualized());
+        assert!(!HardwareType::TypeII.virtualized());
+    }
+
+    #[test]
+    fn speed_factors_ordered() {
+        let s1 = HardwareType::TypeI.speed_factor();
+        let s2 = HardwareType::TypeII.speed_factor();
+        let s3 = HardwareType::TypeIII.speed_factor();
+        assert!(s2 > s1, "Type II faster clock than I");
+        assert!(s2 > s3, "virtualization should cost Type III");
+        assert!((s2 - 1.0).abs() < 1e-12, "Type II is the reference");
+    }
+
+    #[test]
+    fn cluster_core_accounting() {
+        let c = Cluster::homogeneous(HardwareType::TypeII, 6);
+        assert_eq!(c.total_cores(), 72); // the thesis's 72-core testbed
+        assert_eq!(c.core_speeds().len(), 72);
+        let h = Cluster::heterogeneous(1, 2);
+        assert_eq!(h.total_cores(), 12 + 64);
+    }
+}

@@ -1,0 +1,121 @@
+//! Cluster/event simulation — the testbed replacement for the §4
+//! experiments that need 72-core clusters, 1 Gb/s networks, and
+//! heterogeneous/virtualized hardware (DESIGN.md §2).
+
+pub mod cluster;
+pub mod engine;
+pub mod reduce_model;
+
+pub use cluster::{Cluster, HardwareType, NodeSpec, VIRT_SLOWDOWN};
+pub use engine::{simulate, SimParams, SimResult};
+pub use reduce_model::{
+    reduce_phase, shuffle_bytes, sweep_reduce_tasks, ReduceParams,
+};
+
+use crate::cachesim::CacheConfig;
+use crate::data::Workload;
+use crate::kneepoint::{self, CurvePoint};
+
+/// Build the cache-penalty curve for `simulate` from the offline profile:
+/// normalized CPI as a function of task size (≥ 1.0 at the minimum).
+///
+/// Results are memoized process-wide: the offline profile is a pure
+/// function of (workload, cache geometry), and figure generators /
+/// the SLO planner request it hundreds of times (perf pass, see
+/// EXPERIMENTS.md §Perf).
+pub fn penalty_curve(workload: Workload, cache: &CacheConfig) -> Vec<CurvePoint> {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    type Key = (Workload, usize, usize);
+    static CACHE: OnceLock<Mutex<HashMap<Key, Vec<CurvePoint>>>> =
+        OnceLock::new();
+    let key = (workload, cache.l2_bytes, cache.l3_bytes);
+    let map = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(v) = map.lock().unwrap().get(&key) {
+        return v.clone();
+    }
+    let profile = kneepoint::profile_workload(
+        workload,
+        cache,
+        &kneepoint::default_sizes(),
+        None,
+    );
+    // Per-workload base CPI: the profiler's `cpi` assumes every retired
+    // instruction costs 1 cycle of non-memory work (`cpi(1.0)` = 1 +
+    // memory stalls/instr). The legacy EAGLET pipeline retires far more
+    // compute per memory touch (MERLIN's likelihood math) than the Bash
+    // Netflix scripts, which damps how much the cache knee shows up in
+    // *runtime*. Chosen so the sim reproduces the paper's runtime
+    // ratios: Fig 4's modest +15–23% knee gain and Fig 8's 10–90% BTS
+    // margin over BLT (never the raw 35×/1000× AMAT figures — those are
+    // per-access, not per-second).
+    let base_cpi = match workload {
+        Workload::Eaglet => 12.0,
+        Workload::NetflixHi | Workload::NetflixLo => 5.0,
+    };
+    let extra = base_cpi - 1.0;
+    let min_cpi = profile
+        .points
+        .iter()
+        .map(|p| p.cpi)
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-9);
+    let curve: Vec<CurvePoint> = profile
+        .points
+        .iter()
+        .map(|p| CurvePoint {
+            task_bytes: p.task_bytes,
+            miss_rate: ((extra + p.cpi) / (extra + min_cpi)).max(1.0),
+        })
+        .collect();
+    map.lock().unwrap().insert(key, curve.clone());
+    curve
+}
+
+/// Default SimParams for a workload at a given job size, using the
+/// Sandy-Bridge profile and calibration constants measured from the real
+/// runtime (see `workloads::calibration`).
+pub fn default_params(
+    workload: Workload,
+    job_bytes: usize,
+    compute_s_per_mib: f64,
+) -> SimParams {
+    let cache = CacheConfig::sandy_bridge();
+    // Sample sizes at the thesis's scale: a bi-polar-study family is
+    // 230 MB / 400 ≈ 575 KB and a tiniest task is one family-subsample
+    // ("30 x 400 families could run in its own map slot"); a Netflix
+    // movie is 118 KB (§4.1.1.2). `components` is the per-task software
+    // launch count; `remote_read_frac` reproduces Fig 12's 45%-of-1Gb/s
+    // at 1 TB.
+    let (sample_bytes, reduce, components, frac) = match workload {
+        Workload::Eaglet => (576 * 1024, ReduceParams::eaglet_like(), 6, 0.40),
+        Workload::NetflixHi => (118 * 1024, ReduceParams::netflix_like(), 1, 0.30),
+        Workload::NetflixLo => (118 * 1024, ReduceParams::netflix_like(), 1, 0.30),
+    };
+    SimParams {
+        job_bytes,
+        sample_bytes,
+        compute_s_per_mib,
+        penalty: penalty_curve(workload, &cache),
+        kneepoint_bytes: kneepoint::kneepoint_bytes(workload, &cache),
+        remote_read_frac: frac,
+        reduce,
+        outliers: workload == Workload::Eaglet,
+        components,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penalty_curve_is_normalized_and_rising() {
+        let c = penalty_curve(Workload::Eaglet, &CacheConfig::sandy_bridge());
+        assert!(!c.is_empty());
+        assert!(c.iter().all(|p| p.miss_rate >= 1.0));
+        let first = c.first().unwrap().miss_rate;
+        let last = c.last().unwrap().miss_rate;
+        assert!(last > first, "penalty should grow with task size");
+    }
+}

@@ -1,0 +1,151 @@
+//! Reduce/shuffle phase model (Fig 16), after Zhang et al. [41].
+//!
+//! §4.2.4: "The BashReduce platform does not support multiple reduce
+//! slots gracefully ... We used simulation to understand the impact of
+//! multiple reduce stages, and corresponding communication delay. We
+//! used formulas from [41] ... calibrated with average map time, reduce
+//! time, and shuffle time from our experiments with 1-node map reduce."
+//!
+//! Model: with `r` reduce tasks,
+//!   shuffle(r) = (intermediate bytes × fanout(r)) / network
+//!   reduce(r)  = reduce_work / min(r, cores) + r × reduce_task_overhead
+//! EAGLET is compute-heavy (intermediate data small ⇒ diminishing
+//! returns immediately); Netflix moves real intermediate volume and
+//! benefits from parallel reduce before communication wins.
+
+use super::cluster::Cluster;
+use crate::platforms::PlatformSpec;
+
+#[derive(Debug, Clone)]
+pub struct ReduceParams {
+    /// Intermediate bytes produced per input byte.
+    pub intermediate_ratio: f64,
+    /// Reduce compute seconds per MiB of *input* (aggregated work).
+    pub reduce_s_per_mib: f64,
+    /// Number of reduce tasks.
+    pub reduce_tasks: usize,
+}
+
+impl ReduceParams {
+    /// EAGLET: tiny ALOD grids — "secondary genetic analysis is compute
+    /// intensive; adding reduce tasks quickly exhibits diminishing
+    /// returns".
+    pub fn eaglet_like() -> Self {
+        ReduceParams {
+            intermediate_ratio: 0.002,
+            reduce_s_per_mib: 0.0002,
+            reduce_tasks: 1,
+        }
+    }
+
+    /// Netflix: per-movie/month stat tensors are a real fraction of the
+    /// input — "the Netflix workload, however, can speed up at the reduce
+    /// stage".
+    pub fn netflix_like() -> Self {
+        ReduceParams {
+            intermediate_ratio: 0.08,
+            reduce_s_per_mib: 0.012,
+            reduce_tasks: 1,
+        }
+    }
+
+    pub fn with_reduce_tasks(mut self, r: usize) -> Self {
+        self.reduce_tasks = r.max(1);
+        self
+    }
+}
+
+/// Shuffle bytes that cross the network for `r` reduce tasks: each mapper
+/// partition reaches every reducer; with more reducers a larger share of
+/// intermediate data is non-local (1 - 1/r stays remote).
+pub fn shuffle_bytes(p: &ReduceParams, job_bytes: usize) -> f64 {
+    let inter = job_bytes as f64 * p.intermediate_ratio;
+    let r = p.reduce_tasks as f64;
+    inter * (1.0 - 1.0 / r).max(0.0) + inter * 0.05 // +local serialization
+}
+
+/// (shuffle_s, reduce_s) for a job.
+pub fn reduce_phase(
+    p: &ReduceParams,
+    job_bytes: usize,
+    cluster: &Cluster,
+    platform: &PlatformSpec,
+) -> (f64, f64) {
+    let capacity = cluster.network_gbps * 1e9 / 8.0;
+    let shuffle_s = shuffle_bytes(p, job_bytes) / capacity;
+    let job_mib = job_bytes as f64 / (1024.0 * 1024.0);
+    let work = job_mib * p.reduce_s_per_mib;
+    let r = p.reduce_tasks.min(cluster.total_cores()).max(1);
+    let reduce_s = work / r as f64
+        + p.reduce_tasks as f64 * platform.per_task_overhead_s(0.1);
+    (shuffle_s, reduce_s)
+}
+
+/// Fig-16 sweep: total reduce-phase time and network demand vs r.
+pub fn sweep_reduce_tasks(
+    base: &ReduceParams,
+    job_bytes: usize,
+    cluster: &Cluster,
+    platform: &PlatformSpec,
+    rs: &[usize],
+) -> Vec<(usize, f64, f64)> {
+    rs.iter()
+        .map(|&r| {
+            let p = base.clone().with_reduce_tasks(r);
+            let (s, d) = reduce_phase(&p, job_bytes, cluster, platform);
+            (r, s + d, shuffle_bytes(&p, job_bytes))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms::PlatformSpec;
+    use crate::sim::cluster::{Cluster, HardwareType};
+
+    fn cluster() -> Cluster {
+        Cluster::homogeneous(HardwareType::TypeII, 6)
+    }
+
+    #[test]
+    fn eaglet_reduce_has_diminishing_returns() {
+        let job = 1 << 30; // 1 GiB
+        let sweep = sweep_reduce_tasks(
+            &ReduceParams::eaglet_like(),
+            job,
+            &cluster(),
+            &PlatformSpec::bts(),
+            &[1, 2, 4, 8, 16, 32],
+        );
+        // best r is small; r=32 is worse than r=2
+        let t2 = sweep.iter().find(|s| s.0 == 2).unwrap().1;
+        let t32 = sweep.iter().find(|s| s.0 == 32).unwrap().1;
+        assert!(t32 >= t2, "eaglet should not keep improving: {t2} vs {t32}");
+    }
+
+    #[test]
+    fn netflix_reduce_benefits_then_saturates() {
+        let job = 1 << 30;
+        let sweep = sweep_reduce_tasks(
+            &ReduceParams::netflix_like(),
+            job,
+            &cluster(),
+            &PlatformSpec::bts(),
+            &[1, 2, 4, 8, 16, 64],
+        );
+        let t1 = sweep[0].1;
+        let t8 = sweep.iter().find(|s| s.0 == 8).unwrap().1;
+        assert!(t8 < t1 * 0.6, "netflix should speed up: {t1} -> {t8}");
+    }
+
+    #[test]
+    fn network_demand_increases_with_reducers() {
+        let p = ReduceParams::netflix_like();
+        let job = 1 << 30;
+        let b1 = shuffle_bytes(&p.clone().with_reduce_tasks(1), job);
+        let b8 = shuffle_bytes(&p.clone().with_reduce_tasks(8), job);
+        let b64 = shuffle_bytes(&p.with_reduce_tasks(64), job);
+        assert!(b1 < b8 && b8 < b64, "Fig 16: demand must grow");
+    }
+}

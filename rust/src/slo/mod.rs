@@ -1,0 +1,176 @@
+//! SLO planner (§4.2.3, Fig 13): pick the cluster configuration with the
+//! highest achieved throughput whose running time fits a fixed bound,
+//! and advise scale-out only "until additional cores provide diminishing
+//! returns and no further" (Fig 12's management takeaway).
+
+use crate::data::Workload;
+use crate::platforms::PlatformSpec;
+use crate::sim::{default_params, simulate, Cluster, HardwareType};
+
+/// One candidate configuration's simulated outcome.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    pub cores: usize,
+    pub job_bytes: usize,
+    pub total_s: f64,
+    pub throughput_mbs: f64,
+}
+
+/// The planner's answer for one SLO bound.
+#[derive(Debug, Clone)]
+pub struct SloPlan {
+    pub slo_s: f64,
+    pub best: PlanPoint,
+    /// Fraction of the no-SLO peak throughput this plan achieves (the
+    /// Fig-13 y-axis: 2-minute SLO → ~50%, 5-minute → ~83%).
+    pub frac_of_peak: f64,
+}
+
+/// Hardware used for planning (the thesis's type-2 Xeons).
+fn cluster_of(cores: usize) -> Cluster {
+    Cluster::homogeneous(HardwareType::TypeII, cores.div_ceil(12).max(1))
+}
+
+/// Highest-throughput (cores, job size) whose simulated running time is
+/// ≤ `slo_s`. Mirrors Fig 13: "Each result reflects the platform
+/// configuration with highest achieved throughput within the fixed
+/// running time."
+pub fn best_under_slo(
+    workload: Workload,
+    slo_s: f64,
+    core_options: &[usize],
+    job_sizes: &[usize],
+    compute_s_per_mib: f64,
+) -> Option<SloPlan> {
+    let mut best: Option<PlanPoint> = None;
+    let mut peak = 0.0f64;
+    for &cores in core_options {
+        let cluster = cluster_of(cores);
+        for &job in job_sizes {
+            let p = default_params(workload, job, compute_s_per_mib);
+            let r = simulate(&PlatformSpec::bts(), &cluster, &p);
+            peak = peak.max(r.throughput_mbs);
+            if r.total_s <= slo_s
+                && best
+                    .as_ref()
+                    .map(|b| r.throughput_mbs > b.throughput_mbs)
+                    .unwrap_or(true)
+            {
+                best = Some(PlanPoint {
+                    cores,
+                    job_bytes: job,
+                    total_s: r.total_s,
+                    throughput_mbs: r.throughput_mbs,
+                });
+            }
+        }
+    }
+    best.map(|b| SloPlan {
+        slo_s,
+        frac_of_peak: if peak > 0.0 { b.throughput_mbs / peak } else { 0.0 },
+        best: b,
+    })
+}
+
+/// Smallest core count achieving ≥ `frac` of the best simulated
+/// throughput at this job size — the "scale out until diminishing
+/// returns" advisor.
+pub fn min_cores_for(
+    workload: Workload,
+    job_bytes: usize,
+    core_options: &[usize],
+    frac: f64,
+    compute_s_per_mib: f64,
+) -> Option<usize> {
+    let results: Vec<(usize, f64)> = core_options
+        .iter()
+        .map(|&cores| {
+            let p = default_params(workload, job_bytes, compute_s_per_mib);
+            let r = simulate(&PlatformSpec::bts(), &cluster_of(cores), &p);
+            (cores, r.throughput_mbs)
+        })
+        .collect();
+    let best = results.iter().map(|r| r.1).fold(0.0, f64::max);
+    results
+        .iter()
+        .filter(|(_, t)| *t >= best * frac)
+        .map(|(c, _)| *c)
+        .min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORES: [usize; 3] = [12, 36, 72];
+
+    fn jobs() -> Vec<usize> {
+        [8, 32, 128, 512, 2048, 8192]
+            .iter()
+            .map(|mb| mb * 1024 * 1024)
+            .collect()
+    }
+
+    #[test]
+    fn looser_slo_never_hurts_throughput() {
+        let tight = best_under_slo(
+            Workload::Eaglet, 30.0, &CORES, &jobs(), 0.06,
+        )
+        .unwrap();
+        let loose = best_under_slo(
+            Workload::Eaglet, 600.0, &CORES, &jobs(), 0.06,
+        )
+        .unwrap();
+        assert!(loose.best.throughput_mbs >= tight.best.throughput_mbs);
+        assert!(loose.frac_of_peak >= tight.frac_of_peak);
+        assert!(tight.best.total_s <= 30.0);
+    }
+
+    #[test]
+    fn tight_slo_prefers_fewer_cores_or_smaller_jobs() {
+        // Fig 13: under tight bounds the 72-core config's startup costs
+        // push the planner to smaller configurations.
+        let plan =
+            best_under_slo(Workload::Eaglet, 10.0, &CORES, &jobs(), 0.06);
+        if let Some(p) = plan {
+            assert!(p.best.total_s <= 10.0);
+            assert!(p.frac_of_peak <= 1.0);
+        }
+    }
+
+    #[test]
+    fn min_cores_finds_diminishing_returns() {
+        // On a small job, 72 cores shouldn't be needed to hit 90% of peak.
+        let c = min_cores_for(
+            Workload::Eaglet,
+            16 * 1024 * 1024,
+            &CORES,
+            0.90,
+            0.06,
+        )
+        .unwrap();
+        assert!(c <= 36, "small jobs should not need 72 cores, got {c}");
+        // On a big job, more cores should genuinely be selected.
+        let c_big = min_cores_for(
+            Workload::Eaglet,
+            4 * 1024 * 1024 * 1024,
+            &CORES,
+            0.90,
+            0.06,
+        )
+        .unwrap();
+        assert!(c_big >= c);
+    }
+
+    #[test]
+    fn impossible_slo_returns_none() {
+        let plan = best_under_slo(
+            Workload::Eaglet,
+            1e-6,
+            &CORES,
+            &jobs(),
+            0.06,
+        );
+        assert!(plan.is_none());
+    }
+}

@@ -1,0 +1,153 @@
+//! Micro/macro bench harness (the offline vendor set has no criterion).
+//!
+//! `Bench::new("group")` collects named measurements — each timed over
+//! warmup + N iterations — and prints a criterion-style table plus an
+//! optional CSV (results/<group>.csv). All `cargo bench` targets
+//! (rust/benches/*.rs, harness = false) are built on this.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+pub struct Bench {
+    group: String,
+    rows: Vec<(String, Summary, Option<String>)>,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Bench {
+            group: group.to_string(),
+            rows: Vec::new(),
+            warmup: 2,
+            iters: 10,
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Time `f` (seconds per call) over warmup + iters calls.
+    pub fn measure<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        self.rows.push((name.to_string(), summarize(&samples), None));
+    }
+
+    /// Record a precomputed scalar (e.g. a simulated runtime or a model
+    /// output) so figure benches can report series, not only wallclock.
+    pub fn record(&mut self, name: &str, value: f64, unit: &str) {
+        self.rows.push((
+            name.to_string(),
+            Summary {
+                n: 1,
+                mean: value,
+                std: 0.0,
+                min: value,
+                p50: value,
+                p95: value,
+                max: value,
+            },
+            Some(unit.to_string()),
+        ));
+    }
+
+    /// Render the table; also writes results/<group>.csv when possible.
+    pub fn finish(self) {
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== bench group: {} ==", self.group);
+        let width = self
+            .rows
+            .iter()
+            .map(|(n, _, _)| n.len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        let _ = writeln!(
+            out,
+            "{:width$}  {:>12} {:>12} {:>12} {:>12}  unit",
+            "name", "mean", "p50", "p95", "std",
+        );
+        let mut csv = String::from("name,mean,p50,p95,std,min,max,n,unit\n");
+        for (name, s, unit) in &self.rows {
+            let unit = unit.as_deref().unwrap_or("s");
+            let fmt = |v: f64| {
+                if unit == "s" {
+                    format_secs(v)
+                } else {
+                    format!("{v:.4}")
+                }
+            };
+            let _ = writeln!(
+                out,
+                "{:width$}  {:>12} {:>12} {:>12} {:>12}  {}",
+                name,
+                fmt(s.mean),
+                fmt(s.p50),
+                fmt(s.p95),
+                fmt(s.std),
+                unit,
+            );
+            let _ = writeln!(
+                csv,
+                "{name},{},{},{},{},{},{},{},{unit}",
+                s.mean, s.p50, s.p95, s.std, s.min, s.max, s.n
+            );
+        }
+        println!("{out}");
+        let path = format!("results/{}.csv", self.group.replace(' ', "_"));
+        if std::fs::create_dir_all("results").is_ok() {
+            let _ = std::fs::write(&path, csv);
+        }
+    }
+}
+
+pub fn format_secs(v: f64) -> String {
+    if v >= 1.0 {
+        format!("{v:.3} s")
+    } else if v >= 1e-3 {
+        format!("{:.3} ms", v * 1e3)
+    } else if v >= 1e-6 {
+        format!("{:.3} µs", v * 1e6)
+    } else {
+        format!("{:.1} ns", v * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_formats() {
+        let mut b = Bench::new("selftest").with_iters(1, 3);
+        b.measure("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        b.record("model_output", 42.0, "MB/s");
+        assert_eq!(b.rows.len(), 2);
+        assert!(b.rows[0].1.mean >= 0.0);
+        assert_eq!(b.rows[1].1.mean, 42.0);
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(format_secs(2.5), "2.500 s");
+        assert_eq!(format_secs(0.0025), "2.500 ms");
+        assert_eq!(format_secs(2.5e-6), "2.500 µs");
+        assert!(format_secs(3e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Shared utilities: deterministic RNG, minimal JSON, stats, and the
+//! bench/property harnesses that stand in for criterion/proptest in this
+//! offline build (see DESIGN.md §2).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Render an aligned text table (used by the figures harness).
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("\n## {title}\n"));
+    let line = |cells: &[String]| -> String {
+        let mut s = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:w$} | ", c, w = widths[i]));
+        }
+        s.trim_end().to_string() + "\n"
+    };
+    out.push_str(&line(
+        &header.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push_str(&line(
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+    ));
+    for row in rows {
+        out.push_str(&line(row));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table_renders_aligned() {
+        let t = super::render_table(
+            "T",
+            &["a", "long_header"],
+            &[vec!["1".into(), "2".into()]],
+        );
+        assert!(t.contains("## T"));
+        assert!(t.contains("long_header"));
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,107 @@
+//! Workload bindings: turn a `Workload` tag into a generated dataset at
+//! a target size, and calibrate the simulator's compute constant from
+//! *measured* PJRT execution of the real kernels.
+
+pub mod calibration;
+
+pub use calibration::{default_compute_s_per_mib, measure_compute_s_per_mib};
+
+use crate::data::eaglet::{EagletConfig, EagletDataset};
+use crate::data::netflix::{NetflixConfig, NetflixDataset};
+use crate::data::{Dataset, ModelParams, Workload};
+
+/// Original-dataset sizes from the thesis (§4.1.1): the bi-polar study's
+/// 400 families and a Netflix slice at `movies` samples.
+pub const EAGLET_BASE_FAMILIES: usize = 400;
+pub const NETFLIX_BASE_MOVIES: usize = 2000;
+
+/// Build a dataset for `workload`, optionally scaled up to roughly
+/// `target_bytes` with statistically-similar synthetic samples
+/// (§4.1.1.1: "As we scaled our experiments we simulated data from the
+/// original computation").
+pub fn build(
+    workload: Workload,
+    params: &ModelParams,
+    target_bytes: Option<usize>,
+) -> Box<dyn Dataset> {
+    match workload {
+        Workload::Eaglet => {
+            let base = EagletDataset::generate(
+                params,
+                EagletConfig {
+                    families: EAGLET_BASE_FAMILIES,
+                    ..Default::default()
+                },
+            );
+            Box::new(match target_bytes {
+                Some(t) if t > base.total_bytes() => base.scaled_to(t),
+                _ => base,
+            })
+        }
+        Workload::NetflixHi | Workload::NetflixLo => {
+            let base = NetflixDataset::generate(
+                params,
+                NetflixConfig {
+                    movies: NETFLIX_BASE_MOVIES,
+                    high_confidence: workload == Workload::NetflixHi,
+                    ..Default::default()
+                },
+            );
+            Box::new(match target_bytes {
+                Some(t) if t > base.total_bytes() => base.scaled_to(t),
+                _ => base,
+            })
+        }
+    }
+}
+
+/// A smaller build for tests and examples that cannot afford staging
+/// hundreds of MB.
+pub fn build_small(
+    workload: Workload,
+    params: &ModelParams,
+    samples: usize,
+) -> Box<dyn Dataset> {
+    match workload {
+        Workload::Eaglet => Box::new(EagletDataset::generate(
+            params,
+            EagletConfig { families: samples, ..Default::default() },
+        )),
+        Workload::NetflixHi | Workload::NetflixLo => {
+            Box::new(NetflixDataset::generate(
+                params,
+                NetflixConfig {
+                    movies: samples,
+                    high_confidence: workload == Workload::NetflixHi,
+                    ..Default::default()
+                },
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_small_respects_workload_tag() {
+        let p = ModelParams::default();
+        for w in [Workload::Eaglet, Workload::NetflixHi, Workload::NetflixLo]
+        {
+            let ds = build_small(w, &p, 10);
+            assert_eq!(ds.workload(), w);
+            assert_eq!(ds.metas().len(), 10);
+            assert!(ds.total_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn build_scales_to_target() {
+        let p = ModelParams::default();
+        let small = build(Workload::NetflixLo, &p, None);
+        let target = small.total_bytes() * 2;
+        let big = build(Workload::NetflixLo, &p, Some(target));
+        assert!(big.total_bytes() >= target);
+    }
+}

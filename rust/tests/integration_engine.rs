@@ -1,0 +1,280 @@
+//! End-to-end jobs through the full stack: pack → schedule → dfs fetch →
+//! PJRT map → shuffle → PJRT reduce. Needs `make artifacts`.
+
+use std::sync::Arc;
+
+use bts::coordinator::{run_job, JobConfig, JobOutput};
+use bts::data::eaglet::{EagletConfig, EagletDataset};
+use bts::data::netflix::{NetflixConfig, NetflixDataset};
+use bts::data::{Dataset, Workload};
+use bts::dfs::LatencyModel;
+use bts::kneepoint::TaskSizing;
+use bts::runtime::{Manifest, Runtime};
+
+fn manifest() -> Option<Arc<Manifest>> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(Arc::new(m)),
+        Err(_) => {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+fn small_eaglet(m: &Manifest) -> EagletDataset {
+    EagletDataset::generate(
+        &m.params,
+        EagletConfig { families: 40, ..Default::default() },
+    )
+}
+
+fn small_netflix(m: &Manifest, hi: bool) -> NetflixDataset {
+    NetflixDataset::generate(
+        &m.params,
+        NetflixConfig {
+            movies: 60,
+            high_confidence: hi,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn eaglet_job_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let ds = small_eaglet(&m);
+    let cfg = JobConfig {
+        sizing: TaskSizing::Kneepoint(16 * 1024),
+        workers: 4,
+        ..Default::default()
+    };
+    let r = run_job(&ds, m.clone(), &cfg).unwrap();
+    let JobOutput::Eaglet { alod, weight } = &r.output else {
+        panic!("wrong output kind")
+    };
+    assert_eq!(alod.len(), m.params.grid);
+    assert!(alod.iter().all(|v| v.is_finite()));
+    // total weight == total chunks in the dataset, regardless of packing
+    let chunks: f32 =
+        ds.metas().iter().map(|meta| meta.units as f32).sum();
+    assert!(
+        (weight - chunks).abs() < 1e-3,
+        "weight {weight} != total chunks {chunks}"
+    );
+    assert_eq!(r.report.tasks, r.sched.assigned as usize);
+    assert!(r.report.total_s > 0.0);
+    assert!(r.report.throughput_mbs() > 0.0);
+}
+
+#[test]
+fn worker_count_does_not_change_the_statistic() {
+    // Subsample indices are seeded per task, partials are reduced in seq
+    // order → the statistic must be bit-identical across parallelism.
+    let Some(m) = manifest() else { return };
+    let ds = small_eaglet(&m);
+    let base = JobConfig {
+        sizing: TaskSizing::Kneepoint(16 * 1024),
+        ..Default::default()
+    };
+    let r1 = run_job(
+        &ds,
+        m.clone(),
+        &JobConfig { workers: 1, ..base.clone() },
+    )
+    .unwrap();
+    let r4 = run_job(
+        &ds,
+        m.clone(),
+        &JobConfig { workers: 4, ..base.clone() },
+    )
+    .unwrap();
+    assert_eq!(r1.output, r4.output, "parallelism changed the answer");
+}
+
+#[test]
+fn sizing_policies_conserve_weight() {
+    let Some(m) = manifest() else { return };
+    let ds = small_eaglet(&m);
+    let chunks: f32 =
+        ds.metas().iter().map(|meta| meta.units as f32).sum();
+    for sizing in [
+        TaskSizing::Tiniest,
+        TaskSizing::Kneepoint(8 * 1024),
+        TaskSizing::LargeSn { workers: 3 },
+    ] {
+        let cfg = JobConfig { sizing, workers: 3, ..Default::default() };
+        let r = run_job(&ds, m.clone(), &cfg).unwrap();
+        let JobOutput::Eaglet { weight, .. } = r.output else {
+            panic!("wrong kind")
+        };
+        assert!(
+            (weight - chunks).abs() < 1e-2,
+            "{sizing:?}: weight {weight} != {chunks}"
+        );
+    }
+}
+
+#[test]
+fn netflix_job_produces_sane_stats() {
+    let Some(m) = manifest() else { return };
+    for hi in [false, true] {
+        let ds = small_netflix(&m, hi);
+        let cfg = JobConfig {
+            sizing: TaskSizing::Kneepoint(64 * 1024),
+            workers: 2,
+            ..Default::default()
+        };
+        let r = run_job(&ds, m.clone(), &cfg).unwrap();
+        let JobOutput::Netflix(stats) = &r.output else {
+            panic!("wrong kind")
+        };
+        let mut rated_months = 0;
+        for mo in 0..m.params.months {
+            if stats.count[mo] > 0.0 {
+                rated_months += 1;
+                assert!(
+                    stats.mean[mo] >= 1.0 && stats.mean[mo] <= 5.0,
+                    "month {mo} mean {} out of rating range",
+                    stats.mean[mo]
+                );
+                assert!(stats.ci_half[mo].is_finite());
+            }
+        }
+        assert!(rated_months >= 6, "only {rated_months} months rated");
+        // counts cannot exceed the total subsample draws, and should
+        // track the dataset's valid-rating density (draws land on padded
+        // slots with probability 1 - density).
+        let total: f64 = stats.count.iter().sum();
+        let s = if hi { m.params.s_hi } else { m.params.s_lo };
+        let draws = (ds.metas().len() * s) as f64;
+        let density = ds
+            .movies
+            .iter()
+            .map(|mv| mv.n_ratings as f64)
+            .sum::<f64>()
+            / (ds.movies.len() * m.params.ratings_cap) as f64;
+        assert!(total <= draws + 0.5, "count {total} exceeds draws {draws}");
+        let want = draws * density;
+        assert!(
+            (total - want).abs() < want * 0.5,
+            "count {total} far from expected {want} (density {density:.3})"
+        );
+    }
+}
+
+#[test]
+fn direct_oracle_matches_platform_result() {
+    // Execute the same packed tasks directly (no dfs, no scheduler, one
+    // runtime) and f64-reduce on the host: the platform must agree.
+    let Some(m) = manifest() else { return };
+    let ds = small_eaglet(&m);
+    let sizing = TaskSizing::Tiniest;
+    let cfg = JobConfig { sizing, workers: 4, ..Default::default() };
+    let r = run_job(&ds, m.clone(), &cfg).unwrap();
+    let JobOutput::Eaglet { alod, weight } = &r.output else {
+        panic!("wrong kind")
+    };
+
+    use bts::coordinator::assemble::{MapTask, TaskPartial};
+    use bts::scheduler::TaskSpec;
+    let rt = Runtime::new(m.clone()).unwrap();
+    let tasks = bts::kneepoint::pack(ds.metas(), sizing);
+    let mut wsum = vec![0.0f64; m.params.grid];
+    let mut wtot = 0.0f64;
+    for t in tasks {
+        let spec = TaskSpec::new(t, Workload::Eaglet, cfg.seed);
+        let blocks: Vec<_> = spec
+            .task
+            .sample_ids
+            .iter()
+            .map(|&id| ds.encode_block(id))
+            .collect();
+        let slices =
+            MapTask::slices(&m.params, Workload::Eaglet, &blocks, spec.seed)
+                .unwrap();
+        let mut parts = Vec::new();
+        for s in &slices {
+            let e = rt.manifest.entry(s.kind, s.bucket).unwrap().clone();
+            let out = rt.execute(&e, &s.inputs).unwrap();
+            parts.push(
+                TaskPartial::from_map_output(&m.params, s, &out[0]).unwrap(),
+            );
+        }
+        match TaskPartial::merge(parts).unwrap() {
+            TaskPartial::Eaglet { alod, weight } => {
+                for (acc, v) in wsum.iter_mut().zip(&alod) {
+                    *acc += *v as f64 * weight as f64;
+                }
+                wtot += weight as f64;
+            }
+            _ => unreachable!(),
+        }
+    }
+    assert!((wtot - *weight as f64).abs() < 1e-3);
+    for (i, (want, got)) in wsum
+        .iter()
+        .map(|v| v / wtot)
+        .zip(alod.iter())
+        .enumerate()
+    {
+        assert!(
+            (want - *got as f64).abs() < 1e-3,
+            "grid point {i}: oracle {want} vs platform {got}"
+        );
+    }
+}
+
+#[test]
+fn monitoring_collects_a_record_per_task_plus_registration() {
+    let Some(m) = manifest() else { return };
+    let ds = small_eaglet(&m);
+    let cfg = JobConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 2,
+        monitoring: true,
+        ..Default::default()
+    };
+    let r = run_job(&ds, m.clone(), &cfg).unwrap();
+    assert_eq!(r.monitor_records, r.report.tasks + cfg.workers);
+}
+
+#[test]
+fn adaptive_rf_reacts_to_slow_data_nodes() {
+    let Some(m) = manifest() else { return };
+    let ds = small_eaglet(&m);
+    // lan latency + sleep makes fetches genuinely slow relative to tiny
+    // task execution → the controller must widen the replica set.
+    let cfg = JobConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 4,
+        data_nodes: 8,
+        latency: LatencyModel::lan(),
+        adaptive_rf: true,
+        ..Default::default()
+    };
+    let r = run_job(&ds, m.clone(), &cfg).unwrap();
+    assert!(!r.rf_trajectory.is_empty());
+    assert!(r.report.final_rf >= 1);
+    assert!(r.report.prefetch_hit_rate >= 0.0);
+}
+
+#[test]
+fn prefetcher_hides_fetches_on_multi_task_queues() {
+    let Some(m) = manifest() else { return };
+    let ds = small_eaglet(&m);
+    let cfg = JobConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 2,
+        latency: LatencyModel::lan(),
+        prefetch_k: 8,
+        ..Default::default()
+    };
+    let r = run_job(&ds, m.clone(), &cfg).unwrap();
+    // With 40 tiny tasks on 2 workers and k up to 8, a decent share of
+    // fetches should be prefetch hits.
+    assert!(
+        r.report.prefetch_hit_rate > 0.2,
+        "hit rate {}",
+        r.report.prefetch_hit_rate
+    );
+}

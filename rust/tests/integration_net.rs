@@ -1,0 +1,110 @@
+//! Leader/worker over real TCP sockets (loopback), compared against the
+//! in-process engine for agreement. Needs `make artifacts`.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use bts::coordinator::{run_job, JobConfig, JobOutput};
+use bts::data::eaglet::{EagletConfig, EagletDataset};
+use bts::data::netflix::{NetflixConfig, NetflixDataset};
+use bts::kneepoint::TaskSizing;
+use bts::net::{run_worker, serve_job};
+use bts::runtime::Manifest;
+
+fn manifest() -> Option<Arc<Manifest>> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(Arc::new(m)),
+        Err(_) => {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn tcp_job_matches_in_process_engine() {
+    let Some(m) = manifest() else { return };
+    let ds = EagletDataset::generate(
+        &m.params,
+        EagletConfig { families: 24, ..Default::default() },
+    );
+    let sizing = TaskSizing::Kneepoint(16 * 1024);
+    let seed = 0xB75;
+
+    // In-process reference (same sizing, same seed → same indices).
+    let reference = run_job(
+        &ds,
+        m.clone(),
+        &JobConfig { sizing, workers: 2, seed, ..Default::default() },
+    )
+    .unwrap();
+
+    // Distributed run: leader + 2 worker threads over loopback TCP.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let report = std::thread::scope(|sc| {
+        for w in 0..2u32 {
+            let addr = addr.clone();
+            let m = m.clone();
+            sc.spawn(move || run_worker(&addr, w, m).unwrap());
+        }
+        serve_job(listener, &ds, m.clone(), sizing, 2, seed).unwrap()
+    });
+
+    assert_eq!(report.workers, 2);
+    assert_eq!(report.tasks, reference.report.tasks);
+    assert!(report.bytes_shipped >= ds.families.iter().map(|f| f.chunks as usize).sum::<usize>());
+    assert_eq!(
+        report.output, reference.output,
+        "TCP path must produce the identical statistic"
+    );
+}
+
+#[test]
+fn tcp_netflix_job_completes() {
+    let Some(m) = manifest() else { return };
+    let ds = NetflixDataset::generate(
+        &m.params,
+        NetflixConfig { movies: 30, ..Default::default() },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let report = std::thread::scope(|sc| {
+        sc.spawn({
+            let addr = addr.clone();
+            let m = m.clone();
+            move || run_worker(&addr, 0, m).unwrap()
+        });
+        serve_job(listener, &ds, m.clone(), TaskSizing::Tiniest, 1, 1)
+            .unwrap()
+    });
+    assert_eq!(report.tasks, 30);
+    let JobOutput::Netflix(stats) = report.output else {
+        panic!("wrong kind")
+    };
+    assert!(stats.count.iter().sum::<f64>() > 0.0);
+}
+
+#[test]
+fn worker_counts_tasks_and_exits_on_done() {
+    let Some(m) = manifest() else { return };
+    let ds = EagletDataset::generate(
+        &m.params,
+        EagletConfig { families: 10, ..Default::default() },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (tasks_done, report) = std::thread::scope(|sc| {
+        let h = sc.spawn({
+            let addr = addr.clone();
+            let m = m.clone();
+            move || run_worker(&addr, 0, m).unwrap()
+        });
+        let report =
+            serve_job(listener, &ds, m.clone(), TaskSizing::Tiniest, 1, 7)
+                .unwrap();
+        (h.join().unwrap(), report)
+    });
+    assert_eq!(tasks_done, 10);
+    assert_eq!(report.tasks, 10);
+}

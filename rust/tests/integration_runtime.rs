@@ -1,0 +1,170 @@
+//! Runtime ↔ artifact round-trips: compiled HLO executes correctly and
+//! the artifact-based reduce tree matches a host-side f64 oracle.
+//! Needs `make artifacts`.
+
+use std::sync::Arc;
+
+use bts::coordinator::{finalize_netflix, reduce_eaglet, reduce_netflix};
+use bts::runtime::{HostTensor, Manifest, Runtime};
+use bts::util::rng::Rng;
+
+fn runtime() -> Option<(Arc<Manifest>, Runtime)> {
+    let m = match Manifest::load("artifacts") {
+        Ok(m) => Arc::new(m),
+        Err(_) => {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+    };
+    let rt = Runtime::new(m.clone()).unwrap();
+    Some((m, rt))
+}
+
+#[test]
+fn every_manifest_entry_compiles_and_executes() {
+    let Some((m, rt)) = runtime() else { return };
+    let mut rng = Rng::new(0xC0FFEE);
+    for e in &m.entries {
+        let inputs: Vec<HostTensor> = e
+            .inputs
+            .iter()
+            .map(|spec| {
+                let n = spec.elements();
+                match spec.dtype {
+                    bts::runtime::Dtype::F32 => HostTensor::F32(
+                        (0..n).map(|_| rng.f32()).collect(),
+                        spec.shape.clone(),
+                    ),
+                    bts::runtime::Dtype::I32 => {
+                        // index inputs must stay in their gather range;
+                        // every idx input indexes either markers or
+                        // the ratings cap — both ≥ 16, so stay under 16.
+                        HostTensor::I32(
+                            (0..n).map(|_| rng.below(16) as i32).collect(),
+                            spec.shape.clone(),
+                        )
+                    }
+                }
+            })
+            .collect();
+        let out = rt.execute(e, &inputs).unwrap_or_else(|err| {
+            panic!("{} failed to execute: {err}", e.name)
+        });
+        assert_eq!(out.len(), e.outputs.len(), "{}: output arity", e.name);
+        for (o, spec) in out.iter().zip(&e.outputs) {
+            assert_eq!(o.len(), spec.elements(), "{}: output size", e.name);
+            assert!(
+                o.iter().all(|v| v.is_finite()),
+                "{}: non-finite output",
+                e.name
+            );
+        }
+    }
+    // compile cache: all entries compiled exactly once
+    assert_eq!(rt.compiled_count(), m.entries.len());
+}
+
+#[test]
+fn eaglet_reduce_tree_matches_f64_oracle() {
+    let Some((m, rt)) = runtime() else { return };
+    let p = &m.params;
+    let mut rng = Rng::new(7);
+    // 100 partials forces two tree levels at fan-in 16.
+    let partials: Vec<(Vec<f32>, f32)> = (0..100)
+        .map(|_| {
+            let alod: Vec<f32> =
+                (0..p.grid).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let w = 1.0 + rng.below(20) as f32;
+            (alod, w)
+        })
+        .collect();
+    let mut wsum = vec![0.0f64; p.grid];
+    let mut wtot = 0.0f64;
+    for (alod, w) in &partials {
+        for (acc, v) in wsum.iter_mut().zip(alod) {
+            *acc += *v as f64 * *w as f64;
+        }
+        wtot += *w as f64;
+    }
+    let (alod, weight) = reduce_eaglet(&rt, p, partials).unwrap();
+    assert!((weight as f64 - wtot).abs() < 1e-2);
+    for (i, (got, want)) in
+        alod.iter().zip(wsum.iter().map(|v| v / wtot)).enumerate()
+    {
+        assert!(
+            (*got as f64 - want).abs() < 1e-3,
+            "grid {i}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn netflix_reduce_tree_matches_f64_oracle() {
+    let Some((m, rt)) = runtime() else { return };
+    let p = &m.params;
+    let f = p.months * p.stat_fields;
+    let mut rng = Rng::new(8);
+    let partials: Vec<Vec<f32>> = (0..50)
+        .map(|_| (0..f).map(|_| rng.f32() * 10.0).collect())
+        .collect();
+    let mut want = vec![0.0f64; f];
+    for part in &partials {
+        for (acc, v) in want.iter_mut().zip(part) {
+            *acc += *v as f64;
+        }
+    }
+    let got = reduce_netflix(&rt, p, partials).unwrap();
+    for i in 0..f {
+        assert!(
+            (got[i] as f64 - want[i]).abs() < want[i].abs() * 1e-4 + 1e-3,
+            "field {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn single_partial_reduces_are_identity() {
+    let Some((m, rt)) = runtime() else { return };
+    let p = &m.params;
+    let alod: Vec<f32> = (0..p.grid).map(|i| i as f32).collect();
+    let (out, w) = reduce_eaglet(&rt, p, vec![(alod.clone(), 3.0)]).unwrap();
+    assert_eq!(out, alod);
+    assert_eq!(w, 3.0);
+    let stats: Vec<f32> =
+        (0..p.months * p.stat_fields).map(|i| i as f32).collect();
+    let out = reduce_netflix(&rt, p, vec![stats.clone()]).unwrap();
+    assert_eq!(out, stats);
+}
+
+#[test]
+fn finalize_after_reduce_produces_valid_ci() {
+    let Some((m, rt)) = runtime() else { return };
+    let p = &m.params;
+    let f = p.stat_fields;
+    // two partials, month 0: ratings {2,4} and {3,5}
+    let mk = |sum: f32, sumsq: f32, n: f32| {
+        let mut v = vec![0.0f32; p.months * f];
+        v[0] = sum;
+        v[1] = sumsq;
+        v[2] = n;
+        v
+    };
+    let parts = vec![mk(6.0, 20.0, 2.0), mk(8.0, 34.0, 2.0)];
+    let reduced = reduce_netflix(&rt, p, parts).unwrap();
+    let stats = finalize_netflix(p, &reduced).unwrap();
+    assert!((stats.mean[0] - 3.5).abs() < 1e-6);
+    assert_eq!(stats.count[0], 4.0);
+    assert!(stats.ci_half[0] > 0.0);
+}
+
+#[test]
+fn warm_precompiles_entries() {
+    let Some((m, rt)) = runtime() else { return };
+    assert_eq!(rt.compiled_count(), 0);
+    rt.warm(&["eaglet_map_b1", "netflix_reduce"]).unwrap();
+    assert_eq!(rt.compiled_count(), 2);
+    assert!(rt.warm(&["nonexistent"]).is_err());
+    let _ = m;
+}

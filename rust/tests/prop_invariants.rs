@@ -1,0 +1,233 @@
+//! Cross-module property tests: invariants that must hold for *any*
+//! seed/shape, exercised with the crate's own deterministic generator
+//! (`util::prop::check`).
+
+use bts::data::eaglet::{EagletConfig, EagletDataset};
+use bts::data::netflix::{NetflixConfig, NetflixDataset};
+use bts::data::{Block, Dataset, ModelParams, SampleMeta, Workload};
+use bts::dfs::{Dfs, LatencyModel, Ring};
+use bts::kneepoint::{pack, smallest_kneepoint, CurvePoint, TaskSizing};
+use bts::prop_assert;
+use bts::scheduler::{SchedConfig, TaskSpec, TwoStepScheduler};
+use bts::util::prop::check;
+use bts::util::rng::Rng;
+use std::sync::Arc;
+
+#[test]
+fn prop_block_encode_decode_identity() {
+    check("block round trip", 200, |rng: &mut Rng| {
+        let b = Block {
+            id: bts::data::BlockId {
+                kind: rng.below(2) as u32,
+                sample: rng.next_u64(),
+            },
+            units: rng.range(1, 64) as u32,
+            payload: (0..rng.below(2048) as usize)
+                .map(|_| rng.f32() * 1e3 - 500.0)
+                .collect(),
+        };
+        let back = Block::decode(&b.encode()).map_err(|e| e.to_string())?;
+        prop_assert!(back == b, "round trip changed the block");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_blocks_match_metas() {
+    check("dataset meta/block agreement", 20, |rng: &mut Rng| {
+        let p = ModelParams::default();
+        let ds: Box<dyn Dataset> = if rng.below(2) == 0 {
+            Box::new(EagletDataset::generate(
+                &p,
+                EagletConfig {
+                    families: rng.range(3, 40) as usize,
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                },
+            ))
+        } else {
+            Box::new(NetflixDataset::generate(
+                &p,
+                NetflixConfig {
+                    movies: rng.range(3, 40) as usize,
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                },
+            ))
+        };
+        for m in ds.metas() {
+            let b = ds.encode_block(m.id);
+            prop_assert!(
+                b.payload.len() * 4 == m.bytes,
+                "sample {}: block bytes {} != meta {}",
+                m.id,
+                b.payload.len() * 4,
+                m.bytes
+            );
+            prop_assert!(b.units == m.units, "units mismatch");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ring_replicas_distinct_and_stable() {
+    check("ring replica invariants", 100, |rng: &mut Rng| {
+        let nodes = rng.range(1, 24) as usize;
+        let ring = Ring::new(nodes, 64);
+        let rf = rng.range(1, nodes as u64 + 1) as usize;
+        let key = format!("key-{}", rng.next_u64());
+        let reps = ring.replicas(&key, rf);
+        prop_assert!(reps.len() == rf.min(nodes), "replica count");
+        let mut sorted = reps.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        prop_assert!(sorted.len() == reps.len(), "duplicate replicas");
+        prop_assert!(
+            reps.iter().all(|&n| n < nodes),
+            "replica out of range"
+        );
+        // stability: same key, same ring → same replicas
+        prop_assert!(ring.replicas(&key, rf) == reps, "not deterministic");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dfs_put_get_under_rf_changes() {
+    check("dfs rf churn keeps data readable", 30, |rng: &mut Rng| {
+        let nodes = rng.range(2, 9) as usize;
+        let d = Dfs::new(nodes, 1, LatencyModel::none());
+        let n_keys = rng.range(1, 40) as usize;
+        for k in 0..n_keys {
+            d.put(&format!("k{k}"), Arc::new(vec![k as u8; 64]));
+        }
+        for _ in 0..3 {
+            let rf = rng.range(1, nodes as u64 + 1) as usize;
+            d.set_replication_factor(rf);
+            for k in 0..n_keys {
+                let (data, _) =
+                    d.get(&format!("k{k}")).map_err(|e| e.to_string())?;
+                prop_assert!(data[0] == k as u8, "data corrupted");
+            }
+            // copies = keys × rf
+            let copies: usize =
+                d.nodes.iter().map(|n| n.block_count()).sum();
+            prop_assert!(
+                copies == n_keys * d.replication_factor(),
+                "copies {} != {} × {}",
+                copies,
+                n_keys,
+                d.replication_factor()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_with_random_report_patterns() {
+    check("scheduler under adversarial timing", 40, |rng: &mut Rng| {
+        let n = rng.range(1, 200) as usize;
+        let workers = rng.range(1, 7) as usize;
+        let metas: Vec<SampleMeta> = (0..n as u64)
+            .map(|id| SampleMeta {
+                id,
+                bytes: rng.range(1, 50_000) as usize,
+                units: rng.range(1, 8) as u32,
+            })
+            .collect();
+        let specs: Vec<TaskSpec> =
+            pack(&metas, TaskSizing::Kneepoint(rng.range(1_000, 100_000) as usize))
+                .into_iter()
+                .map(|t| TaskSpec::new(t, Workload::Eaglet, rng.next_u64()))
+                .collect();
+        let total = specs.len();
+        let s = TwoStepScheduler::new(specs, workers, SchedConfig::default());
+        let mut seen = std::collections::HashSet::new();
+        // workers progress in random interleavings with random timings
+        let mut live: Vec<usize> = (0..workers).collect();
+        while !live.is_empty() {
+            let w = live[rng.below(live.len() as u64) as usize];
+            match s.next(w) {
+                Some(t) => {
+                    prop_assert!(
+                        seen.insert(t.task.seq),
+                        "double assignment of {}",
+                        t.task.seq
+                    );
+                    s.report(w, rng.f64() * 0.01, rng.f64() * 0.1);
+                }
+                None => live.retain(|&x| x != w),
+            }
+        }
+        prop_assert!(seen.len() == total, "{}/{total} ran", seen.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kneepoint_detector_sane() {
+    check("kneepoint detector", 100, |rng: &mut Rng| {
+        // synthesize a monotone curve with a known knee
+        let knee_at = rng.range(2, 10) as usize;
+        let n = rng.range(12, 20) as usize;
+        let mut curve = Vec::new();
+        let mut rate = 0.001;
+        for i in 0..n {
+            if i > knee_at {
+                rate *= 1.5 + rng.f64(); // growth accelerates past knee
+            }
+            curve.push(CurvePoint {
+                task_bytes: (i + 1) * 1024 * 1024,
+                miss_rate: rate,
+            });
+            rate += 0.0001;
+        }
+        if let Some(k) = smallest_kneepoint(&curve, 0.8) {
+            prop_assert!(
+                k <= (knee_at + 2) * 1024 * 1024,
+                "knee {} found after true knee {}",
+                k,
+                (knee_at + 1) << 20
+            );
+            prop_assert!(
+                curve.iter().any(|p| p.task_bytes == k),
+                "knee not a curve point"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_netflix_stats_finite_under_any_seed() {
+    check("netflix generator stats", 20, |rng: &mut Rng| {
+        let p = ModelParams::default();
+        let ds = NetflixDataset::generate(
+            &p,
+            NetflixConfig {
+                movies: 12,
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        for m in &ds.movies {
+            prop_assert!(m.n_ratings >= 8, "too few ratings");
+            for j in 0..p.ratings_cap {
+                if m.mask[j] > 0.0 {
+                    prop_assert!(
+                        (1.0..=5.0).contains(&m.vals[j]),
+                        "rating {} out of range",
+                        m.vals[j]
+                    );
+                    prop_assert!(
+                        (0.0..12.0).contains(&m.months[j]),
+                        "month out of range"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
