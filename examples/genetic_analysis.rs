@@ -14,7 +14,9 @@ use bts::data::{Dataset, Workload};
 use bts::kneepoint::{kneepoint_bytes, TaskSizing};
 use bts::runtime::Manifest;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bts::Result<()> {
+    // Needs `make artifacts` (PJRT path); see examples/end_to_end.rs
+    // for the artifact-free executor.
     let manifest = Arc::new(Manifest::load_default()?);
 
     // Offline step (thesis Fig 3): find the kneepoint for this workload

@@ -11,7 +11,9 @@ use bts::data::netflix::{NetflixConfig, NetflixDataset};
 use bts::kneepoint::TaskSizing;
 use bts::runtime::Manifest;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bts::Result<()> {
+    // Needs `make artifacts` (PJRT path); see examples/end_to_end.rs
+    // for the artifact-free executor.
     let manifest = Arc::new(Manifest::load_default()?);
     let mut results = Vec::new();
     for hi in [true, false] {

@@ -13,9 +13,11 @@ use bts::data::eaglet::{EagletConfig, EagletDataset};
 use bts::kneepoint::TaskSizing;
 use bts::runtime::Manifest;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bts::Result<()> {
     // 1. Load the AOT artifacts (HLO text compiled once by `make
-    //    artifacts`; Python never runs from here on).
+    //    artifacts`; Python never runs from here on). Without them this
+    //    exits with a clear message — `examples/end_to_end.rs` runs the
+    //    same pipeline through the artifact-free native backend.
     let manifest = Arc::new(Manifest::load_default()?);
 
     // 2. A small family-linkage dataset (synthetic stand-in for the

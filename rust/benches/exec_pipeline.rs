@@ -1,0 +1,65 @@
+//! Exec-pipeline bench: whole jobs through the channel-based cluster
+//! executor on the native kernel backend (runs on every host — no
+//! artifacts). Records the trade the thesis quantifies: per-task
+//! latency, leader dispatch overhead, and throughput across sizing
+//! policies and worker counts. These numbers are the baseline for
+//! BENCH_*.json trajectory entries (see results/exec_pipeline.csv and
+//! results/exec_baseline.json from examples/end_to_end.rs).
+
+use std::sync::Arc;
+
+use bts::data::{ModelParams, Workload};
+use bts::exec::{run_cluster, Backend, ExecConfig};
+use bts::kneepoint::TaskSizing;
+use bts::util::bench::Bench;
+use bts::workloads::build_small;
+
+fn main() {
+    let params = ModelParams::default();
+    let backend = Arc::new(Backend::native(params.clone()));
+    let mut b = Bench::new("exec_pipeline").with_iters(1, 5);
+    for (w, n_samples) in
+        [(Workload::Eaglet, 200usize), (Workload::NetflixLo, 800)]
+    {
+        let ds = build_small(w, &params, n_samples);
+        for (sizing, name) in [
+            (TaskSizing::Tiniest, "tiniest"),
+            (TaskSizing::Kneepoint(256 * 1024), "knee256k"),
+        ] {
+            for workers in [1usize, 4] {
+                let cfg = ExecConfig { sizing, workers, ..Default::default() };
+                let tag = format!("{}_{name}_{workers}w", w.name());
+                let mut last = None;
+                b.measure(&tag, || {
+                    last = Some(
+                        run_cluster(ds.as_ref(), backend.clone(), &cfg)
+                            .unwrap(),
+                    );
+                });
+                if let Some(r) = last {
+                    b.record(
+                        &format!("{tag}_exec_p50_ms"),
+                        r.report.task_exec.p50 * 1e3,
+                        "ms",
+                    );
+                    b.record(
+                        &format!("{tag}_dispatch_us_per_call"),
+                        r.overhead.dispatch_us_per_call(),
+                        "us",
+                    );
+                    b.record(
+                        &format!("{tag}_queue_wait_p50_ms"),
+                        r.overhead.queue_wait.p50 * 1e3,
+                        "ms",
+                    );
+                    b.record(
+                        &format!("{tag}_tput"),
+                        r.report.throughput_mbs(),
+                        "MB/s",
+                    );
+                }
+            }
+        }
+    }
+    b.finish();
+}

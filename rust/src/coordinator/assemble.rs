@@ -10,7 +10,7 @@
 use crate::data::block::{Block, KIND_EAGLET, KIND_NETFLIX};
 use crate::data::{ModelParams, Workload};
 use crate::error::{Error, Result};
-use crate::runtime::HostTensor;
+use crate::runtime::{Exec, HostTensor};
 use crate::util::rng::Rng;
 
 /// Draw EAGLET subsample indices: `rounds × subsample` distinct marker
@@ -209,6 +209,35 @@ impl MapTask {
             })
             .collect()
     }
+}
+
+/// Execute assembled slices through any backend and merge them into
+/// the task's partial — the shared worker-side hot loop (the exec
+/// cluster's workers and the TCP workers both run exactly this).
+/// Inputs are handed to the backend by value; the slice shell keeps
+/// the row bookkeeping needed to interpret the padded output.
+pub fn execute_slices(
+    rt: &impl Exec,
+    p: &ModelParams,
+    slices: Vec<MapTask>,
+) -> Result<TaskPartial> {
+    let mut parts = Vec::with_capacity(slices.len());
+    for mut s in slices {
+        let entry = rt
+            .manifest()
+            .entry(s.kind, s.bucket)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no entry {} bucket {}",
+                    s.kind, s.bucket
+                ))
+            })?
+            .clone();
+        let inputs = std::mem::take(&mut s.inputs);
+        let out = rt.run(&entry, inputs)?;
+        parts.push(TaskPartial::from_map_output(p, &s, &out[0])?);
+    }
+    TaskPartial::merge(parts)
 }
 
 /// A map task's contribution to the final statistic, ready for the

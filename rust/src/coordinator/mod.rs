@@ -11,6 +11,11 @@
 //!   injection, restart-until-done wrapper.
 //! - [`monitor`]   — optional task monitoring (the "BTS with
 //!   monitoring" experiment, §4.2.2).
+//!
+//! [`job`] is the scoped-thread engine (workers pull from a shared
+//! scheduler and execute through the PJRT pool); the channel-based
+//! leader/worker executor with pluggable backends lives in
+//! [`crate::exec`] and reuses [`assemble`] and [`reduce`] unchanged.
 
 pub mod assemble;
 pub mod job;
@@ -18,7 +23,7 @@ pub mod monitor;
 pub mod recovery;
 pub mod reduce;
 
-pub use assemble::{draw_eaglet_idx, draw_netflix_idx, MapTask};
+pub use assemble::{draw_eaglet_idx, draw_netflix_idx, MapTask, TaskPartial};
 pub use job::{run_job, JobConfig, JobOutput, JobResult};
 pub use monitor::MonitorSink;
 pub use recovery::{expected_failures, run_with_recovery, FailurePlan, RecoveryParams};

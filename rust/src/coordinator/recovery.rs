@@ -65,24 +65,21 @@ pub struct FailurePlan {
     pub on_attempt: u32,
 }
 
-/// Run a job with job-level recovery: on any worker failure the *entire
-/// job* restarts (same seed → identical final statistic), up to
-/// `max_attempts`.
-pub fn run_with_recovery(
-    dataset: &dyn Dataset,
-    manifest: Arc<Manifest>,
-    cfg: &JobConfig,
+/// Generic job-level retry: run `attempt_fn(attempt)` (1-based) up to
+/// `max_attempts.max(1)` times. `Ok` carries the successful value plus
+/// the number of restarts that preceded it; exhaustion yields
+/// [`Error::JobFailed`] whose `attempts` matches the attempts actually
+/// run. Shared by [`run_with_recovery`] and
+/// `exec::run_cluster_with_recovery`.
+pub fn retry<T>(
     max_attempts: u32,
-) -> Result<JobResult> {
+    mut attempt_fn: impl FnMut(u32) -> Result<T>,
+) -> Result<(T, u32)> {
+    let max_attempts = max_attempts.max(1);
     let mut last_err: Option<Error> = None;
-    for attempt in 1..=max_attempts.max(1) {
-        let mut attempt_cfg = cfg.clone();
-        attempt_cfg.attempt = attempt;
-        match run_job(dataset, manifest.clone(), &attempt_cfg) {
-            Ok(mut result) => {
-                result.report.restarts = attempt - 1;
-                return Ok(result);
-            }
+    for attempt in 1..=max_attempts {
+        match attempt_fn(attempt) {
+            Ok(v) => return Ok((v, attempt - 1)),
             Err(e) => last_err = Some(e),
         }
     }
@@ -92,6 +89,24 @@ pub fn run_with_recovery(
             .map(|e| e.to_string())
             .unwrap_or_else(|| "unknown".into()),
     })
+}
+
+/// Run a job with job-level recovery: on any worker failure the *entire
+/// job* restarts (same seed → identical final statistic), up to
+/// `max_attempts`.
+pub fn run_with_recovery(
+    dataset: &dyn Dataset,
+    manifest: Arc<Manifest>,
+    cfg: &JobConfig,
+    max_attempts: u32,
+) -> Result<JobResult> {
+    let (mut result, restarts) = retry(max_attempts, |attempt| {
+        let mut attempt_cfg = cfg.clone();
+        attempt_cfg.attempt = attempt;
+        run_job(dataset, manifest.clone(), &attempt_cfg)
+    })?;
+    result.report.restarts = restarts;
+    Ok(result)
 }
 
 #[cfg(test)]

@@ -47,7 +47,7 @@ impl Default for ModelParams {
 
 impl ModelParams {
     /// Parse the `params` block of artifacts/manifest.json.
-    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+    pub fn from_json(j: &Json) -> crate::error::Result<Self> {
         Ok(ModelParams {
             markers: j.req_usize("markers")?,
             individuals: j.req_usize("individuals")?,

@@ -163,6 +163,15 @@ impl Dfs {
             .map(|n| n.fetches.load(Ordering::Relaxed))
             .sum()
     }
+
+    /// Total payload bytes served across all data nodes — the job's
+    /// data-plane volume (replica re-fetches included).
+    pub fn bytes_served(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| n.bytes_served.load(Ordering::Relaxed))
+            .sum()
+    }
 }
 
 #[cfg(test)]

@@ -1,53 +1,75 @@
 //! Crate-wide error type. Library APIs return `bts::Result<T>`;
-//! binaries/examples convert to `anyhow` at the edge.
+//! binaries and examples bubble the same type to `main`.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`/`anyhow`): the
+//! offline vendor set carries no proc-macro crates, and the variant
+//! list is small and stable enough that the explicit impls double as
+//! documentation of every failure domain.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+use crate::util::json::JsonError;
+
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
-
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-
-    #[error("config error: {0}")]
+    Json(JsonError),
     Config(String),
-
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("scheduler error: {0}")]
     Scheduler(String),
-
-    #[error("dfs error: {0}")]
     Dfs(String),
-
-    #[error("job failed after {attempts} attempts: {cause}")]
     JobFailed { attempts: u32, cause: String },
-
-    #[error("protocol error: {0}")]
     Protocol(String),
-
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Json(e) => write!(f, "json error: {e}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Scheduler(m) => write!(f, "scheduler error: {m}"),
+            Error::Dfs(m) => write!(f, "dfs error: {m}"),
+            Error::JobFailed { attempts, cause } => {
+                write!(f, "job failed after {attempts} attempts: {cause}")
+            }
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<JsonError> for Error {
+    fn from(e: JsonError) -> Self {
+        Error::Json(e)
+    }
 }
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
-    }
-}
-
-impl From<anyhow::Error> for Error {
-    fn from(e: anyhow::Error) -> Self {
-        Error::Other(e.to_string())
     }
 }
 
@@ -70,5 +92,14 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn json_error_is_chained_as_source() {
+        use std::error::Error as _;
+        let je = JsonError { msg: "boom".into(), pos: 3 };
+        let e: Error = je.into();
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("boom"));
     }
 }

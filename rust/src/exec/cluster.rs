@@ -1,0 +1,736 @@
+//! The in-process cluster: a leader and N worker threads joined by
+//! mpsc channels, driving one job end to end.
+//!
+//! Roles (thesis Fig 7, collapsed into one process):
+//!
+//! * **Leader** (the calling thread): packs samples into kneepoint-
+//!   sized tasks, stages their blocks into the replicated store, owns
+//!   the [`TwoStepScheduler`], pushes [`TaskSpec`]s down per-worker
+//!   channels (keeping a small dispatch window in flight so worker
+//!   prefetchers have lookahead), collects partials, drives the
+//!   adaptive replication controller, and runs the reduce tree.
+//! * **Workers**: each owns a [`Prefetcher`] over the shared [`Dfs`]
+//!   and an [`Exec`] backend reference; for every task it fetches and
+//!   decodes blocks, assembles bucket slices, executes the map kernel,
+//!   and ships the merged [`TaskPartial`] back up.
+//!
+//! Shutdown ordering is explicit: the leader sends `Shutdown` to a
+//! worker only when the scheduler has no work left for it and nothing
+//! of its is in flight; workers acknowledge by reporting `Exited`, and
+//! the leader joins every worker thread before reducing. A worker
+//! failure aborts the attempt (all workers are told to stop, then
+//! joined) and surfaces as `Err` — job-level recovery restarts the
+//! whole job via [`run_cluster_with_recovery`], reproducing the
+//! statistic exactly (per-task seeds, seq-ordered reduce).
+//!
+//! Unlike `coordinator::job` (scoped threads pulling from a shared
+//! scheduler, PJRT-only), this executor isolates every cross-thread
+//! interaction in messages and is generic over the execution backend —
+//! and it measures what the thesis says must stay small: per-task
+//! latency and scheduler overhead (leader dispatch time + worker queue
+//! wait).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use super::backend::Backend;
+use crate::coordinator::assemble::{execute_slices, MapTask, TaskPartial};
+use crate::coordinator::recovery::{retry, FailurePlan};
+use crate::coordinator::reduce::{
+    finalize_netflix, reduce_eaglet, reduce_netflix,
+};
+use crate::coordinator::JobOutput;
+use crate::data::block::{Block, KIND_EAGLET, KIND_NETFLIX};
+use crate::data::{BlockId, Dataset, ModelParams, Workload};
+use crate::dfs::{
+    decide, initial_data_nodes, ControllerState, Dfs, LatencyModel,
+    Prefetcher, ReplicationPolicy,
+};
+use crate::error::{Error, Result};
+use crate::kneepoint::TaskSizing;
+use crate::metrics::{JobReport, Timer};
+use crate::runtime::Exec;
+use crate::scheduler::{SchedConfig, SchedSnapshot, TaskSpec, TwoStepScheduler};
+use crate::util::json::{num, obj, Json};
+use crate::util::stats::{summarize, Summary};
+
+/// Everything one cluster run needs beyond the dataset and backend.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    pub sizing: TaskSizing,
+    /// Worker threads (map slots).
+    pub workers: usize,
+    /// Data nodes backing the replicated store.
+    pub data_nodes: usize,
+    pub latency: LatencyModel,
+    pub replication: ReplicationPolicy,
+    /// Drive the replication factor from the fetch/exec feedback loop.
+    pub adaptive_rf: bool,
+    pub sched: SchedConfig,
+    /// Upper bound on the per-worker prefetch depth k.
+    pub prefetch_k: usize,
+    /// Tasks kept in flight per worker channel (dispatch lookahead —
+    /// what lets the prefetcher pump ahead of execution).
+    pub inflight: usize,
+    /// Job seed: drives every task's subsample indices.
+    pub seed: u64,
+    /// Injected failure (shutdown-ordering and recovery tests).
+    pub failure: Option<FailurePlan>,
+    /// Attempt number, set by [`run_cluster_with_recovery`] (1-based).
+    pub attempt: u32,
+    /// Label for reports.
+    pub platform: String,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            sizing: TaskSizing::Kneepoint(256 * 1024),
+            workers: 4,
+            data_nodes: 4,
+            latency: LatencyModel::none(),
+            replication: ReplicationPolicy::default(),
+            adaptive_rf: true,
+            sched: SchedConfig::default(),
+            prefetch_k: 8,
+            inflight: 4,
+            seed: 0xB75,
+            failure: None,
+            attempt: 1,
+            platform: "bts-exec".into(),
+        }
+    }
+}
+
+/// Leader → worker messages.
+enum LeaderMsg {
+    Task(Box<TaskSpec>),
+    Shutdown,
+}
+
+/// One finished task, reported up the shuffle channel.
+struct TaskDone {
+    worker: usize,
+    seq: usize,
+    partial: TaskPartial,
+    fetch_s: f64,
+    exec_s: f64,
+    /// Seconds the worker sat idle waiting for this task to arrive.
+    queue_wait_s: f64,
+    prefetch_hits: u64,
+    prefetch_misses: u64,
+}
+
+/// Worker → leader messages.
+enum WorkerMsg {
+    Done(Box<TaskDone>),
+    Failed { error: Error },
+    Exited { worker: usize, executed: u64, clean: bool },
+}
+
+/// Per-worker lifecycle accounting (shutdown-ordering tests key off
+/// `clean_shutdown`).
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub executed: u64,
+    /// The worker exited because the leader told it to (orderly
+    /// drain), not because a channel died under it.
+    pub clean_shutdown: bool,
+}
+
+/// Scheduler-overhead metrics — the cost side of the tiny-task trade
+/// the thesis quantifies (§1.1.2).
+#[derive(Debug, Clone)]
+pub struct SchedOverhead {
+    /// Leader wall time spent inside scheduler claim/report calls and
+    /// channel dispatch.
+    pub dispatch_s: f64,
+    pub dispatch_calls: u64,
+    /// Worker-side idle wait for the next task after finishing one.
+    pub queue_wait: Summary,
+}
+
+impl SchedOverhead {
+    pub fn dispatch_us_per_call(&self) -> f64 {
+        if self.dispatch_calls == 0 {
+            0.0
+        } else {
+            self.dispatch_s / self.dispatch_calls as f64 * 1e6
+        }
+    }
+}
+
+/// A finished cluster run.
+#[derive(Debug, Clone)]
+pub struct ExecResult {
+    pub output: JobOutput,
+    pub report: JobReport,
+    pub sched: SchedSnapshot,
+    pub overhead: SchedOverhead,
+    /// Replication-factor trajectory (initial → final decisions).
+    pub rf_trajectory: Vec<usize>,
+    /// Data-plane volume: payload bytes served by the store across all
+    /// data nodes (replica re-fetches included).
+    pub dfs_bytes_served: u64,
+    pub workers: Vec<WorkerStats>,
+}
+
+impl ExecResult {
+    /// Flat JSON record — the baseline format for BENCH_*.json
+    /// trajectory entries (`results/exec_baseline.json`).
+    pub fn metrics_json(&self) -> Json {
+        obj(vec![
+            ("report", self.report.to_json()),
+            ("sched_dispatch_s", num(self.overhead.dispatch_s)),
+            ("sched_dispatch_calls", num(self.overhead.dispatch_calls as f64)),
+            (
+                "sched_dispatch_us_per_call",
+                num(self.overhead.dispatch_us_per_call()),
+            ),
+            ("queue_wait_p50_s", num(self.overhead.queue_wait.p50)),
+            ("queue_wait_p95_s", num(self.overhead.queue_wait.p95)),
+            ("sched_steals", num(self.sched.steals as f64)),
+            ("sched_refills", num(self.sched.refills as f64)),
+            ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
+        ])
+    }
+}
+
+/// Keep `worker` topped up to `target` in-flight tasks, timing every
+/// scheduler interaction. Sends `Shutdown` (and retires the channel)
+/// once the scheduler is dry for this worker and nothing is in flight.
+#[allow(clippy::too_many_arguments)]
+fn top_up(
+    sched: &TwoStepScheduler,
+    task_txs: &mut [Option<mpsc::Sender<LeaderMsg>>],
+    inflight: &mut [usize],
+    w: usize,
+    target: usize,
+    dispatch_s: &mut f64,
+    dispatch_calls: &mut u64,
+) {
+    while inflight[w] < target {
+        // Own a handle (Sender is an Arc clone) so retiring the slot
+        // below never aliases the borrow.
+        let Some(tx) = task_txs[w].clone() else { return };
+        let t = Timer::start();
+        let next = sched.next(w);
+        *dispatch_s += t.secs();
+        *dispatch_calls += 1;
+        match next {
+            Some(spec) => {
+                if tx.send(LeaderMsg::Task(Box::new(spec))).is_err() {
+                    // Worker gone; its Exited/Failed message explains.
+                    task_txs[w] = None;
+                    return;
+                }
+                inflight[w] += 1;
+            }
+            None => {
+                if inflight[w] == 0 {
+                    let _ = tx.send(LeaderMsg::Shutdown);
+                    task_txs[w] = None;
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Run one cluster attempt. A worker failure (injected or real)
+/// surfaces as `Err` after an orderly abort — job-level recovery
+/// restarts the whole job, never a task.
+pub fn run_cluster(
+    dataset: &dyn Dataset,
+    backend: Arc<Backend>,
+    cfg: &ExecConfig,
+) -> Result<ExecResult> {
+    if cfg.workers == 0 {
+        return Err(Error::Config("cluster needs at least one worker".into()));
+    }
+    let params = backend.manifest().params.clone();
+    let workload = dataset.workload();
+    let total_t = Timer::start();
+
+    // ---- startup: pack, stage, schedule --------------------------------
+    let metas = dataset.metas();
+    if metas.is_empty() {
+        return Err(Error::Data("empty dataset".into()));
+    }
+    let tasks = crate::kneepoint::pack(metas, cfg.sizing);
+    let n_tasks = tasks.len();
+    let mean_task_bytes =
+        tasks.iter().map(|t| t.bytes).sum::<usize>() / n_tasks.max(1);
+    let rf0 = initial_data_nodes(
+        cfg.workers,
+        mean_task_bytes,
+        0.05, // pre-probe guess; the controller corrects it online
+        &cfg.replication,
+    )
+    .min(cfg.data_nodes);
+    let dfs = Dfs::new(cfg.data_nodes, rf0, cfg.latency.clone());
+    let kind = match workload {
+        Workload::Eaglet => KIND_EAGLET,
+        _ => KIND_NETFLIX,
+    };
+    for meta in metas {
+        let block = dataset.encode_block(meta.id);
+        let key = BlockId { kind, sample: meta.id }.key();
+        dfs.put(&key, Arc::new(block.encode()));
+    }
+    let specs: Vec<TaskSpec> = tasks
+        .into_iter()
+        .map(|t| TaskSpec::new(t, workload, cfg.seed))
+        .collect();
+    let sched = TwoStepScheduler::new(specs, cfg.workers, cfg.sched.clone());
+    let input_bytes = dataset.total_bytes();
+    let samples = metas.len();
+    let startup_s = total_t.secs();
+
+    // ---- map phase: spawn workers, lead the job -------------------------
+    let map_t = Timer::start();
+    let (worker_tx, worker_rx) = mpsc::channel::<WorkerMsg>();
+    let mut task_txs: Vec<Option<mpsc::Sender<LeaderMsg>>> =
+        Vec::with_capacity(cfg.workers);
+    let mut handles = Vec::with_capacity(cfg.workers);
+    for w in 0..cfg.workers {
+        let (tx, rx) = mpsc::channel::<LeaderMsg>();
+        task_txs.push(Some(tx));
+        let wcfg = WorkerCfg {
+            worker: w,
+            prefetch_k: cfg.prefetch_k,
+            failure: cfg.failure,
+            attempt: cfg.attempt,
+        };
+        let backend = backend.clone();
+        let dfs = dfs.clone();
+        let params = params.clone();
+        let up = worker_tx.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("bts-exec-worker-{w}"))
+                .spawn(move || worker_main(wcfg, params, backend, dfs, rx, up))
+                .map_err(|e| {
+                    Error::Scheduler(format!("spawn worker {w}: {e}"))
+                })?,
+        );
+    }
+    drop(worker_tx);
+
+    let target = cfg.inflight.max(1);
+    let mut inflight = vec![0usize; cfg.workers];
+    let mut dispatch_s = 0.0f64;
+    let mut dispatch_calls = 0u64;
+    for w in 0..cfg.workers {
+        top_up(
+            &sched,
+            &mut task_txs,
+            &mut inflight,
+            w,
+            target,
+            &mut dispatch_s,
+            &mut dispatch_calls,
+        );
+    }
+
+    let mut partials: Vec<Option<TaskPartial>> = vec![None; n_tasks];
+    let mut fetch_times: Vec<f64> = Vec::with_capacity(n_tasks);
+    let mut exec_times: Vec<f64> = Vec::with_capacity(n_tasks);
+    let mut queue_waits: Vec<f64> = Vec::with_capacity(n_tasks);
+    let mut hits = vec![(0u64, 0u64); cfg.workers];
+    let mut rf_trajectory = vec![dfs.replication_factor()];
+    let mut ctrl = ControllerState::default();
+    let mut worker_stats: Vec<Option<WorkerStats>> = vec![None; cfg.workers];
+    let mut first_err: Option<Error> = None;
+
+    while worker_stats.iter().any(|s| s.is_none()) {
+        let msg = match worker_rx.recv() {
+            Ok(m) => m,
+            Err(_) => break, // every worker sender gone
+        };
+        match msg {
+            WorkerMsg::Done(d) => {
+                let w = d.worker;
+                inflight[w] = inflight[w].saturating_sub(1);
+                partials[d.seq] = Some(d.partial);
+                fetch_times.push(d.fetch_s);
+                exec_times.push(d.exec_s);
+                queue_waits.push(d.queue_wait_s);
+                hits[w] = (d.prefetch_hits, d.prefetch_misses);
+                let t = Timer::start();
+                sched.report(w, d.fetch_s, d.exec_s);
+                dispatch_s += t.secs();
+                dispatch_calls += 1;
+                if cfg.adaptive_rf {
+                    if let (Some(fetch), Some(exec)) =
+                        (sched.observed_fetch_s(), sched.observed_exec_s())
+                    {
+                        let cur = dfs.replication_factor();
+                        let next = decide(
+                            &cfg.replication,
+                            &mut ctrl,
+                            fetch,
+                            exec,
+                            cur,
+                        );
+                        if next != cur {
+                            dfs.set_replication_factor(next);
+                            rf_trajectory.push(next);
+                        }
+                    }
+                }
+                top_up(
+                    &sched,
+                    &mut task_txs,
+                    &mut inflight,
+                    w,
+                    target,
+                    &mut dispatch_s,
+                    &mut dispatch_calls,
+                );
+            }
+            WorkerMsg::Failed { error } => {
+                first_err.get_or_insert(error);
+                // Orderly abort: every worker drains its channel and
+                // stops at the Shutdown marker.
+                for tx in task_txs.iter_mut() {
+                    if let Some(t) = tx.take() {
+                        let _ = t.send(LeaderMsg::Shutdown);
+                    }
+                }
+            }
+            WorkerMsg::Exited { worker, executed, clean } => {
+                worker_stats[worker] =
+                    Some(WorkerStats { worker, executed, clean_shutdown: clean });
+            }
+        }
+    }
+
+    // Leader joins every worker before touching the partials — the
+    // shutdown-ordering contract.
+    for h in handles {
+        if h.join().is_err() {
+            first_err
+                .get_or_insert(Error::Scheduler("worker panicked".into()));
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let map_s = map_t.secs();
+
+    // ---- shuffle sanity + reduce (on the leader, via the backend) -------
+    let collected: Vec<TaskPartial> = partials
+        .into_iter()
+        .enumerate()
+        .map(|(seq, p)| {
+            p.ok_or_else(|| {
+                Error::Scheduler(format!("task {seq} produced no partial"))
+            })
+        })
+        .collect::<Result<_>>()?;
+    let reduce_t = Timer::start();
+    let output = match workload {
+        Workload::Eaglet => {
+            let parts: Vec<(Vec<f32>, f32)> = collected
+                .into_iter()
+                .map(|p| match p {
+                    TaskPartial::Eaglet { alod, weight } => (alod, weight),
+                    _ => unreachable!("workload-homogeneous job"),
+                })
+                .collect();
+            let (alod, weight) =
+                reduce_eaglet(backend.as_ref(), &params, parts)?;
+            JobOutput::Eaglet { alod, weight }
+        }
+        Workload::NetflixHi | Workload::NetflixLo => {
+            let parts: Vec<Vec<f32>> = collected
+                .into_iter()
+                .map(|pt| match pt {
+                    TaskPartial::Netflix { stats } => stats,
+                    _ => unreachable!("workload-homogeneous job"),
+                })
+                .collect();
+            let stats = reduce_netflix(backend.as_ref(), &params, parts)?;
+            JobOutput::Netflix(finalize_netflix(&params, &stats)?)
+        }
+    };
+    let reduce_s = reduce_t.secs();
+
+    let (h, m) = hits
+        .iter()
+        .fold((0u64, 0u64), |(a, b), &(x, y)| (a + x, b + y));
+    let report = JobReport {
+        workload: workload.name().to_string(),
+        platform: cfg.platform.clone(),
+        tasks: n_tasks,
+        samples,
+        input_bytes,
+        startup_s,
+        map_s,
+        reduce_s,
+        total_s: total_t.secs(),
+        task_exec: summarize(if exec_times.is_empty() {
+            &[0.0]
+        } else {
+            &exec_times
+        }),
+        task_fetch: summarize(if fetch_times.is_empty() {
+            &[0.0]
+        } else {
+            &fetch_times
+        }),
+        prefetch_hit_rate: if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        },
+        final_rf: dfs.replication_factor(),
+        restarts: cfg.attempt - 1,
+    };
+    let overhead = SchedOverhead {
+        dispatch_s,
+        dispatch_calls,
+        queue_wait: summarize(if queue_waits.is_empty() {
+            &[0.0]
+        } else {
+            &queue_waits
+        }),
+    };
+    Ok(ExecResult {
+        output,
+        report,
+        sched: sched.snapshot(),
+        overhead,
+        rf_trajectory,
+        dfs_bytes_served: dfs.bytes_served(),
+        workers: worker_stats
+            .into_iter()
+            .enumerate()
+            .map(|(w, s)| {
+                s.unwrap_or(WorkerStats {
+                    worker: w,
+                    executed: 0,
+                    clean_shutdown: false,
+                })
+            })
+            .collect(),
+    })
+}
+
+/// Run with job-level recovery: on any worker failure the *entire job*
+/// restarts (same seed ⇒ identical final statistic), up to
+/// `max_attempts`.
+pub fn run_cluster_with_recovery(
+    dataset: &dyn Dataset,
+    backend: Arc<Backend>,
+    cfg: &ExecConfig,
+    max_attempts: u32,
+) -> Result<ExecResult> {
+    let (mut r, restarts) = retry(max_attempts, |attempt| {
+        let mut attempt_cfg = cfg.clone();
+        attempt_cfg.attempt = attempt;
+        run_cluster(dataset, backend.clone(), &attempt_cfg)
+    })?;
+    r.report.restarts = restarts;
+    Ok(r)
+}
+
+struct WorkerCfg {
+    worker: usize,
+    prefetch_k: usize,
+    failure: Option<FailurePlan>,
+    attempt: u32,
+}
+
+fn enqueue_keys(pf: &mut Prefetcher, spec: &TaskSpec) {
+    let kind = match spec.workload {
+        Workload::Eaglet => KIND_EAGLET,
+        _ => KIND_NETFLIX,
+    };
+    pf.enqueue(
+        spec.task
+            .sample_ids
+            .iter()
+            .map(|&id| BlockId { kind, sample: id }.key()),
+    );
+}
+
+/// One worker thread: drain the task channel into a local queue (so
+/// the prefetcher sees upcoming block keys), execute front-of-queue
+/// tasks through the backend, report partials up. Exits on `Shutdown`
+/// (clean) or channel death, always announcing `Exited` last.
+fn worker_main(
+    cfg: WorkerCfg,
+    params: ModelParams,
+    backend: Arc<Backend>,
+    dfs: Arc<Dfs>,
+    rx: mpsc::Receiver<LeaderMsg>,
+    up: mpsc::Sender<WorkerMsg>,
+) {
+    let mut pf = Prefetcher::new(dfs, cfg.prefetch_k);
+    let mut queue: VecDeque<TaskSpec> = VecDeque::new();
+    let mut executed = 0u64;
+    let mut clean = false;
+    'outer: loop {
+        // Non-blocking drain: pick up everything the leader has queued.
+        loop {
+            match rx.try_recv() {
+                Ok(LeaderMsg::Task(spec)) => {
+                    enqueue_keys(&mut pf, &spec);
+                    queue.push_back(*spec);
+                }
+                Ok(LeaderMsg::Shutdown) => {
+                    clean = true;
+                    break 'outer;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    if queue.is_empty() {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        // Idle: block for the next instruction, measuring queue wait.
+        let mut queue_wait_s = 0.0;
+        if queue.is_empty() {
+            let wait_t = Timer::start();
+            match rx.recv() {
+                Ok(LeaderMsg::Task(spec)) => {
+                    queue_wait_s = wait_t.secs();
+                    enqueue_keys(&mut pf, &spec);
+                    queue.push_back(*spec);
+                }
+                Ok(LeaderMsg::Shutdown) => {
+                    clean = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        let Some(spec) = queue.pop_front() else { continue };
+        match run_task(&params, &backend, &mut pf, &spec) {
+            Ok((partial, fetch_s, exec_s)) => {
+                executed += 1;
+                let done = TaskDone {
+                    worker: cfg.worker,
+                    seq: spec.task.seq,
+                    partial,
+                    fetch_s,
+                    exec_s,
+                    queue_wait_s,
+                    prefetch_hits: pf.hits,
+                    prefetch_misses: pf.misses,
+                };
+                if up.send(WorkerMsg::Done(Box::new(done))).is_err() {
+                    break;
+                }
+                if let Some(plan) = cfg.failure {
+                    if plan.worker == cfg.worker
+                        && cfg.attempt == plan.on_attempt
+                        && executed >= plan.after_tasks
+                    {
+                        let _ = up.send(WorkerMsg::Failed {
+                            error: Error::Scheduler(format!(
+                                "injected node failure on worker {} after {executed} tasks",
+                                cfg.worker
+                            )),
+                        });
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                let _ = up.send(WorkerMsg::Failed { error: e });
+                break;
+            }
+        }
+    }
+    let _ = up.send(WorkerMsg::Exited {
+        worker: cfg.worker,
+        executed,
+        clean,
+    });
+}
+
+/// Fetch, assemble and execute one task; returns (partial, fetch
+/// seconds, exec seconds).
+fn run_task(
+    p: &ModelParams,
+    backend: &Backend,
+    pf: &mut Prefetcher,
+    spec: &TaskSpec,
+) -> Result<(TaskPartial, f64, f64)> {
+    pf.pump()?;
+    let fetch_t = Timer::start();
+    let kind = match spec.workload {
+        Workload::Eaglet => KIND_EAGLET,
+        _ => KIND_NETFLIX,
+    };
+    let mut blocks = Vec::with_capacity(spec.task.sample_ids.len());
+    for &id in &spec.task.sample_ids {
+        let key = BlockId { kind, sample: id }.key();
+        let bytes = pf.take(&key)?;
+        blocks.push(Block::decode(&bytes)?);
+    }
+    let fetch_s = fetch_t.secs();
+
+    let exec_t = Timer::start();
+    let slices = MapTask::slices(p, spec.workload, &blocks, spec.seed)?;
+    let partial = execute_slices(backend, p, slices)?;
+    let exec_s = exec_t.secs();
+    pf.observe_exec(exec_s);
+    Ok((partial, fetch_s, exec_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = ExecConfig::default();
+        assert!(c.workers > 0);
+        assert!(c.data_nodes > 0);
+        assert!(c.inflight >= 1);
+        assert_eq!(c.attempt, 1);
+        assert!(c.failure.is_none());
+    }
+
+    #[test]
+    fn zero_workers_is_a_config_error() {
+        let backend = Arc::new(Backend::native(ModelParams::default()));
+        let ds = crate::workloads::build_small(
+            Workload::Eaglet,
+            &ModelParams::default(),
+            4,
+        );
+        let cfg = ExecConfig { workers: 0, ..Default::default() };
+        assert!(run_cluster(ds.as_ref(), backend, &cfg).is_err());
+    }
+
+    #[test]
+    fn overhead_math() {
+        let o = SchedOverhead {
+            dispatch_s: 0.002,
+            dispatch_calls: 1000,
+            queue_wait: summarize(&[0.0]),
+        };
+        assert!((o.dispatch_us_per_call() - 2.0).abs() < 1e-9);
+        let zero = SchedOverhead {
+            dispatch_s: 0.0,
+            dispatch_calls: 0,
+            queue_wait: summarize(&[0.0]),
+        };
+        assert_eq!(zero.dispatch_us_per_call(), 0.0);
+    }
+
+    // End-to-end cluster runs (both workloads, oracle agreement,
+    // shutdown ordering, recovery) live in
+    // rust/tests/integration_exec.rs — they need no artifacts.
+}

@@ -1,0 +1,37 @@
+//! The execution spine: an in-process multi-threaded cluster executor
+//! with pluggable kernel backends (DESIGN.md §4).
+//!
+//! This is the path that *runs* — a leader plus N worker threads over
+//! channels, driving a real job end to end:
+//!
+//! ```text
+//! kneepoint::pack → TwoStepScheduler dispatch (leader, channels) →
+//!   worker: dfs fetch (+prefetch) → MapTask assembly →
+//!   Backend::run (map kernel) → shuffle (mpsc) →
+//!   reduce tree on the leader → JobOutput + metrics
+//! ```
+//!
+//! Layout:
+//! - [`native`]  — pure-rust ports of the L1/L2 kernels (ref.py
+//!   semantics) behind a synthetic manifest; always available.
+//! - [`backend`] — [`Backend`]: native kernels or the PJRT pool, with
+//!   probing auto-selection.
+//! - [`cluster`] — the leader/worker machinery, shutdown ordering,
+//!   failure injection, and the scheduler-overhead metrics
+//!   ([`SchedOverhead`]) this platform is graded on.
+//!
+//! `coordinator::job` remains the scoped-thread PJRT engine; this
+//! module is the backend-generic, message-passing executor the CLI
+//! (`bts exec`), `examples/end_to_end.rs` and
+//! `benches/exec_pipeline.rs` drive.
+
+pub mod backend;
+pub mod cluster;
+pub mod native;
+
+pub use backend::Backend;
+pub use cluster::{
+    run_cluster, run_cluster_with_recovery, ExecConfig, ExecResult,
+    SchedOverhead, WorkerStats,
+};
+pub use native::NativeExec;

@@ -1,0 +1,412 @@
+//! Native kernel backend: the map/reduce statistics computed in pure
+//! rust against a synthetic manifest.
+//!
+//! These functions are line-for-line ports of the pure-jnp oracles in
+//! `python/compile/kernels/ref.py` and the entry points in
+//! `python/compile/model.py` (same shapes, same epsilons, same masking
+//! semantics), so a job produces the same statistic whether its tasks
+//! execute through compiled PJRT artifacts or through this backend.
+//! All arithmetic is f32, like the artifacts; within one backend the
+//! computation is bit-deterministic (fixed iteration order), which is
+//! what job-level recovery's restart ⇒ identical-result contract needs.
+//!
+//! [`NativeExec`] implements [`Exec`] over [`Manifest::synthetic`], so
+//! everything written against the artifact contract — `MapTask`
+//! assembly, bucket lookup, the reduce tree — runs unchanged.
+
+use crate::data::ModelParams;
+use crate::error::{Error, Result};
+use crate::runtime::{Entry, Exec, HostTensor, Manifest, Runtime};
+
+/// Variance floor in the per-marker linkage score (shapes.SCORE_EPS).
+pub const SCORE_EPS: f32 = 1e-3;
+/// Denominator floor in the grid-weighted average (shapes.WEIGHT_EPS).
+pub const WEIGHT_EPS: f32 = 1e-6;
+
+/// `eaglet_map`: per-chunk ALOD over `rounds` subsample rounds.
+///
+/// Inputs follow the artifact contract: `geno [bucket, M, I]`,
+/// `pos [bucket, M]`, `idx [R, S]`, `grid [G]`; returns `[bucket, G]`
+/// row-major. Padding rows (all-zero geno) produce zero scores and are
+/// discarded later by `TaskPartial::from_map_output`.
+pub fn eaglet_map(
+    p: &ModelParams,
+    bucket: usize,
+    geno: &[f32],
+    pos: &[f32],
+    idx: &[i32],
+    grid: &[f32],
+) -> Vec<f32> {
+    let (m, i, g) = (p.markers, p.individuals, p.grid);
+    let (rounds, sub) = (p.rounds, p.subsample);
+    let bw = p.bandwidth as f32;
+    let mut out = vec![0.0f32; bucket * g];
+    let mut num = vec![0.0f32; g];
+    let mut den = vec![0.0f32; g];
+    for b in 0..bucket {
+        let geno_b = &geno[b * m * i..(b + 1) * m * i];
+        let pos_b = &pos[b * m..(b + 1) * m];
+        let out_b = &mut out[b * g..(b + 1) * g];
+        for r in 0..rounds {
+            num.iter_mut().for_each(|v| *v = 0.0);
+            den.iter_mut().for_each(|v| *v = WEIGHT_EPS);
+            for s in 0..sub {
+                let mk = idx[r * sub + s] as usize;
+                let row = &geno_b[mk * i..(mk + 1) * i];
+                let mean = row.iter().sum::<f32>() / i as f32;
+                let var = row
+                    .iter()
+                    .map(|x| (x - mean) * (x - mean))
+                    .sum::<f32>()
+                    / i as f32;
+                let score = mean * mean / (var + SCORE_EPS);
+                let pm = pos_b[mk];
+                for (gi, &gp) in grid.iter().enumerate() {
+                    let u = (pm - gp).abs() / bw;
+                    if u < 1.0 {
+                        let w = (1.0 - u * u * u).powi(3);
+                        num[gi] += score * w;
+                        den[gi] += w;
+                    }
+                }
+            }
+            for gi in 0..g {
+                out_b[gi] += num[gi] / den[gi];
+            }
+        }
+        for v in out_b.iter_mut() {
+            *v /= rounds as f32;
+        }
+    }
+    out
+}
+
+/// `netflix_map`: per-movie, per-month `(sum, sumsq, count)` over the
+/// task's subsample draw.
+///
+/// Inputs: `vals/months/mask [bucket, N]`, `idx [S]` (shared across the
+/// batch, like the compiled graph); returns `[bucket, months, 3]`.
+/// A draw landing on a padded slot contributes nothing (mask 0), and a
+/// month value only buckets when it is within 0.5 of an integral month
+/// — exactly ref.py's one-hot condition.
+pub fn netflix_map(
+    p: &ModelParams,
+    bucket: usize,
+    vals: &[f32],
+    months: &[f32],
+    mask: &[f32],
+    idx: &[i32],
+) -> Vec<f32> {
+    let n = p.ratings_cap;
+    let (mo, f) = (p.months, p.stat_fields);
+    let mut out = vec![0.0f32; bucket * mo * f];
+    for b in 0..bucket {
+        let base = b * n;
+        let out_b = &mut out[b * mo * f..(b + 1) * mo * f];
+        for &j in idx {
+            let j = base + j as usize;
+            let k = mask[j];
+            if k == 0.0 {
+                continue;
+            }
+            let mth = months[j];
+            let mi = mth.round();
+            if (mth - mi).abs() < 0.5 && mi >= 0.0 && (mi as usize) < mo {
+                let v = vals[j];
+                let o = mi as usize * f;
+                out_b[o] += v * k;
+                out_b[o + 1] += v * v * k;
+                out_b[o + 2] += k;
+            }
+        }
+    }
+    out
+}
+
+/// `eaglet_reduce`: weighted combine of `reduce_fan` ALOD partials.
+/// Returns `(weighted sum [G], total weight)`; the final division
+/// happens in the reduce tree, like the artifact.
+pub fn eaglet_reduce(
+    p: &ModelParams,
+    parts: &[f32],
+    weights: &[f32],
+) -> (Vec<f32>, f32) {
+    let g = p.grid;
+    let mut wsum = vec![0.0f32; g];
+    for (ki, &w) in weights.iter().enumerate().take(p.reduce_fan) {
+        if w == 0.0 {
+            continue;
+        }
+        for gi in 0..g {
+            wsum[gi] += parts[ki * g + gi] * w;
+        }
+    }
+    (wsum, weights.iter().sum())
+}
+
+/// `netflix_reduce`: sum `reduce_fan` stat tensors into one.
+pub fn netflix_reduce(p: &ModelParams, parts: &[f32]) -> Vec<f32> {
+    let f = p.months * p.stat_fields;
+    let mut out = vec![0.0f32; f];
+    for ki in 0..p.reduce_fan {
+        for fi in 0..f {
+            out[fi] += parts[ki * f + fi];
+        }
+    }
+    out
+}
+
+/// An [`Exec`] backend that computes every manifest entry natively.
+/// Always available — no artifacts, no XLA runtime, no filesystem.
+pub struct NativeExec {
+    manifest: Manifest,
+}
+
+impl NativeExec {
+    pub fn new(params: ModelParams) -> NativeExec {
+        NativeExec { manifest: Manifest::synthetic(params) }
+    }
+
+    fn check_idx(entry: &Entry, idx: &[i32], limit: usize) -> Result<()> {
+        if idx.iter().any(|&v| v < 0 || v as usize >= limit) {
+            return Err(Error::Data(format!(
+                "{}: subsample index out of range (limit {limit})",
+                entry.name
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Exec for NativeExec {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(
+        &self,
+        entry: &Entry,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Vec<Vec<f32>>> {
+        // Same boundary validation as the PJRT path (shape, dtype,
+        // element count) — malformed tensors error cleanly instead of
+        // panicking inside a kernel.
+        Runtime::check_inputs(entry, &inputs)?;
+        let p = &self.manifest.params;
+        match entry.kind.as_str() {
+            "eaglet_map" => {
+                let geno = inputs[0].as_f32()?;
+                let pos = inputs[1].as_f32()?;
+                let idx = inputs[2].as_i32()?;
+                let grid = inputs[3].as_f32()?;
+                Self::check_idx(entry, idx, p.markers)?;
+                Ok(vec![eaglet_map(p, entry.bucket, geno, pos, idx, grid)])
+            }
+            "netflix_map_hi" | "netflix_map_lo" => {
+                let vals = inputs[0].as_f32()?;
+                let months = inputs[1].as_f32()?;
+                let mask = inputs[2].as_f32()?;
+                let idx = inputs[3].as_i32()?;
+                Self::check_idx(entry, idx, p.ratings_cap)?;
+                Ok(vec![netflix_map(p, entry.bucket, vals, months, mask, idx)])
+            }
+            "eaglet_reduce" => {
+                let parts = inputs[0].as_f32()?;
+                let weights = inputs[1].as_f32()?;
+                let (wsum, wtot) = eaglet_reduce(p, parts, weights);
+                Ok(vec![wsum, vec![wtot]])
+            }
+            "netflix_reduce" => {
+                let parts = inputs[0].as_f32()?;
+                Ok(vec![netflix_reduce(p, parts)])
+            }
+            other => Err(Error::Artifact(format!(
+                "native backend: unknown entry kind {other}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ModelParams {
+        ModelParams::default()
+    }
+
+    #[test]
+    fn netflix_map_matches_hand_computed_stats() {
+        let p = params();
+        let ne = NativeExec::new(p.clone());
+        let n = p.ratings_cap;
+        let mut vals = vec![0.0f32; n];
+        let mut months = vec![0.0f32; n];
+        let mut mask = vec![0.0f32; n];
+        // three valid ratings: (4.0, month 2), (2.0, month 2), (5.0, month 7)
+        for (slot, (v, mth)) in [(4.0, 2.0), (2.0, 2.0), (5.0, 7.0)]
+            .iter()
+            .enumerate()
+        {
+            vals[slot] = *v;
+            months[slot] = *mth;
+            mask[slot] = 1.0;
+        }
+        // draw slots 0, 1, 2, plus slot 1 again (bootstrap repeat) and a
+        // padded slot (ignored); pad the idx vector with padded slots.
+        let mut idx = vec![200i32; p.s_lo];
+        idx[..4].copy_from_slice(&[0, 1, 2, 1]);
+        let entry = ne.manifest().entry("netflix_map_lo", 1).unwrap().clone();
+        let out = ne
+            .run(
+                &entry,
+                vec![
+                    HostTensor::F32(vals, vec![1, n]),
+                    HostTensor::F32(months, vec![1, n]),
+                    HostTensor::F32(mask, vec![1, n]),
+                    HostTensor::I32(idx, vec![p.s_lo]),
+                ],
+            )
+            .unwrap();
+        let stats = &out[0];
+        let f = p.stat_fields;
+        // month 2: 4 + 2 + 2 (slot 1 drawn twice)
+        assert!((stats[2 * f] - 8.0).abs() < 1e-6);
+        assert!((stats[2 * f + 1] - (16.0 + 4.0 + 4.0)).abs() < 1e-6);
+        assert!((stats[2 * f + 2] - 3.0).abs() < 1e-6);
+        // month 7: one rating of 5
+        assert!((stats[7 * f] - 5.0).abs() < 1e-6);
+        assert!((stats[7 * f + 2] - 1.0).abs() < 1e-6);
+        // all other months empty
+        let total: f32 = (0..p.months).map(|m| stats[m * f + 2]).sum();
+        assert!((total - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eaglet_map_is_deterministic_and_finite() {
+        let p = params();
+        let ne = NativeExec::new(p.clone());
+        let entry = ne.manifest().entry("eaglet_map", 4).unwrap().clone();
+        let mut rng = crate::util::rng::Rng::new(9);
+        let geno: Vec<f32> = (0..4 * p.markers * p.individuals)
+            .map(|_| rng.f32() * 2.0 - 1.0)
+            .collect();
+        let pos: Vec<f32> =
+            (0..4 * p.markers).map(|_| rng.f32()).collect();
+        let idx: Vec<i32> = (0..p.rounds * p.subsample)
+            .map(|_| rng.below(p.markers as u64) as i32)
+            .collect();
+        let grid: Vec<f32> =
+            (0..p.grid).map(|g| g as f32 / p.grid as f32).collect();
+        let mk_inputs = || {
+            vec![
+                HostTensor::F32(geno.clone(), vec![4, p.markers, p.individuals]),
+                HostTensor::F32(pos.clone(), vec![4, p.markers]),
+                HostTensor::I32(idx.clone(), vec![p.rounds, p.subsample]),
+                HostTensor::F32(grid.clone(), vec![p.grid]),
+            ]
+        };
+        let a = ne.run(&entry, mk_inputs()).unwrap();
+        let b = ne.run(&entry, mk_inputs()).unwrap();
+        assert_eq!(a, b, "native kernel must be bit-deterministic");
+        assert_eq!(a[0].len(), 4 * p.grid);
+        assert!(a[0].iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn zero_padding_rows_produce_zero_alod() {
+        let p = params();
+        let ne = NativeExec::new(p.clone());
+        let entry = ne.manifest().entry("eaglet_map", 1).unwrap().clone();
+        let out = ne
+            .run(
+                &entry,
+                vec![
+                    HostTensor::F32(
+                        vec![0.0; p.markers * p.individuals],
+                        vec![1, p.markers, p.individuals],
+                    ),
+                    HostTensor::F32(vec![0.0; p.markers], vec![1, p.markers]),
+                    HostTensor::I32(
+                        vec![0; p.rounds * p.subsample],
+                        vec![p.rounds, p.subsample],
+                    ),
+                    HostTensor::F32(
+                        (0..p.grid).map(|g| g as f32 / p.grid as f32).collect(),
+                        vec![p.grid],
+                    ),
+                ],
+            )
+            .unwrap();
+        assert!(out[0].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn reduce_kernels_match_f64_oracle() {
+        let p = params();
+        let ne = NativeExec::new(p.clone());
+        let k = p.reduce_fan;
+        let g = p.grid;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let parts: Vec<f32> = (0..k * g).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let weights: Vec<f32> =
+            (0..k).map(|_| 1.0 + rng.below(9) as f32).collect();
+        let e = ne.manifest().entry("eaglet_reduce", k).unwrap().clone();
+        let out = ne
+            .run(
+                &e,
+                vec![
+                    HostTensor::F32(parts.clone(), vec![k, g]),
+                    HostTensor::F32(weights.clone(), vec![k]),
+                ],
+            )
+            .unwrap();
+        for gi in 0..g {
+            let want: f64 = (0..k)
+                .map(|ki| parts[ki * g + gi] as f64 * weights[ki] as f64)
+                .sum();
+            assert!((out[0][gi] as f64 - want).abs() < 1e-3);
+        }
+        let wtot: f64 = weights.iter().map(|&w| w as f64).sum();
+        assert!((out[1][0] as f64 - wtot).abs() < 1e-3);
+
+        let f = p.months * p.stat_fields;
+        let nparts: Vec<f32> = (0..k * f).map(|_| rng.f32() * 10.0).collect();
+        let e = ne.manifest().entry("netflix_reduce", k).unwrap().clone();
+        let out = ne
+            .run(&e, vec![HostTensor::F32(nparts.clone(), vec![k, p.months, p.stat_fields])])
+            .unwrap();
+        for fi in 0..f {
+            let want: f64 =
+                (0..k).map(|ki| nparts[ki * f + fi] as f64).sum();
+            assert!((out[0][fi] as f64 - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_out_of_range_indices() {
+        let p = params();
+        let ne = NativeExec::new(p.clone());
+        let entry = ne.manifest().entry("netflix_reduce", p.reduce_fan).unwrap().clone();
+        // wrong arity
+        assert!(ne.run(&entry, vec![]).is_err());
+        // wrong shape
+        let bad = HostTensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert!(ne.run(&entry, vec![bad]).is_err());
+        // out-of-range subsample index
+        let e = ne.manifest().entry("eaglet_map", 1).unwrap().clone();
+        let inputs = vec![
+            HostTensor::F32(
+                vec![0.0; p.markers * p.individuals],
+                vec![1, p.markers, p.individuals],
+            ),
+            HostTensor::F32(vec![0.0; p.markers], vec![1, p.markers]),
+            HostTensor::I32(
+                vec![p.markers as i32; p.rounds * p.subsample],
+                vec![p.rounds, p.subsample],
+            ),
+            HostTensor::F32(vec![0.0; p.grid], vec![p.grid]),
+        ];
+        assert!(ne.run(&e, inputs).is_err());
+    }
+}

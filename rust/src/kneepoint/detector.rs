@@ -129,6 +129,71 @@ mod tests {
     }
 
     #[test]
+    fn monotone_growth_below_threshold_has_no_knee() {
+        // Steadily rising curve whose elasticity stays ≈0.26 (<0.8)
+        // everywhere: growth never *accelerates*, so there is no knee —
+        // the detector returns the largest measured size (run the
+        // biggest task the curve blesses).
+        let mut c = Vec::new();
+        let mut mr = 0.001;
+        for i in 0..10u32 {
+            c.push(pt(1usize << i, mr));
+            mr *= 1.2; // +20% per size doubling
+        }
+        assert_eq!(
+            smallest_kneepoint(&c, 0.8),
+            Some(c.last().unwrap().task_bytes)
+        );
+        assert!(kneepoints(&c, 0.8).is_empty());
+    }
+
+    #[test]
+    fn single_point_profile_has_no_knee() {
+        let c = [pt(512, 0.01)];
+        assert_eq!(smallest_kneepoint(&c, 0.8), None);
+        assert!(kneepoints(&c, 0.8).is_empty());
+    }
+
+    #[test]
+    fn plateau_rise_plateau_yields_exactly_one_knee() {
+        // flat → rise → flat: the knee is the last flat size before the
+        // rise; the trailing plateau must not register a second knee.
+        let c = vec![
+            pt(1024, 0.001),
+            pt(2048, 0.001),
+            pt(4096, 0.001),
+            pt(8192, 0.02),
+            pt(16384, 0.02),
+            pt(32768, 0.02),
+        ];
+        assert_eq!(smallest_kneepoint(&c, 0.8), Some(4096 * 1024));
+        assert_eq!(kneepoints(&c, 0.8), vec![4096 * 1024]);
+    }
+
+    #[test]
+    fn duplicate_sizes_are_skipped_not_fatal() {
+        // Repeated measurements at one size produce a zero-width
+        // segment; the elasticity filter drops it instead of dividing
+        // by ln(1) = 0.
+        let c = vec![
+            pt(1024, 0.001),
+            pt(1024, 0.002),
+            pt(2048, 0.001),
+            pt(4096, 0.05),
+        ];
+        assert_eq!(smallest_kneepoint(&c, 0.8), Some(2048 * 1024));
+    }
+
+    #[test]
+    fn declining_curve_has_no_knee() {
+        // Miss rate falling with task size (negative elasticity): no
+        // knee anywhere, largest size returned.
+        let c = vec![pt(1024, 0.04), pt(2048, 0.02), pt(4096, 0.01)];
+        assert_eq!(smallest_kneepoint(&c, 0.8), Some(4096 * 1024));
+        assert!(kneepoints(&c, 0.8).is_empty());
+    }
+
+    #[test]
     fn zero_miss_rates_do_not_panic() {
         let c = vec![pt(64, 0.0), pt(128, 0.0), pt(256, 0.02)];
         let k = smallest_kneepoint(&c, 0.8).unwrap();

@@ -20,12 +20,19 @@
 //!       runtime::execute(map artifact) → shuffle → runtime::execute
 //!       (reduce artifact, tree) → finalize
 //! ```
+//!
+//! Two executors drive that pipeline: `coordinator::job` (scoped
+//! threads pulling from the shared scheduler, PJRT artifacts) and
+//! `exec` (a leader plus N workers over channels, generic over the
+//! kernel backend — compiled artifacts or the pure-rust `exec::native`
+//! kernels, so jobs run end to end on hosts without XLA; DESIGN.md §4).
 
 pub mod cachesim;
 pub mod coordinator;
 pub mod data;
 pub mod dfs;
 pub mod error;
+pub mod exec;
 pub mod figures;
 pub mod kneepoint;
 pub mod config;

@@ -3,6 +3,7 @@
 //! ```text
 //! bts repro [--only ID[,ID...]] [--out DIR]     regenerate paper figures
 //! bts run [--config FILE] [--set k=v ...]       run a real job end to end
+//! bts exec [--workload W] [--workers N] [...]   run via the cluster executor
 //! bts profile [--workload W]                    offline kneepoint profiling
 //! bts calibrate                                 measure sim constants from PJRT
 //! bts plan --slo SECONDS [--workload W]         SLO planner (Fig 13 machinery)
@@ -37,6 +38,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("repro") => cmd_repro(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
+        Some("exec") => cmd_exec(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("calibrate") => cmd_calibrate(),
         Some("plan") => cmd_plan(&args[1..]),
@@ -64,6 +66,10 @@ bts — an efficient and balanced platform for data-parallel subsampling workloa
 commands:
   repro [--only IDs] [--out DIR]    regenerate every paper table/figure
   run [--config F] [--set k=v]...   run a real job (PJRT execution)
+  exec [--workload W] [--workers N] [--samples N] [--sizing S]
+                                    run a job through the in-process
+                                    cluster executor (native kernels
+                                    when artifacts are unavailable)
   profile [--workload W]            offline task-size -> miss-rate profiling
   calibrate                         measure compute s/MiB from artifacts
   plan --slo S [--workload W]       best configuration under an SLO
@@ -158,6 +164,78 @@ fn cmd_run(args: &[String]) -> Result<()> {
     println!(
         "scheduler: {} refills, {} steals; rf trajectory {:?}",
         r.sched.refills, r.sched.steals, r.rf_trajectory
+    );
+    match &r.output {
+        bts::coordinator::JobOutput::Eaglet { alod, weight } => {
+            println!("ALOD over {weight} chunks:");
+            for (i, v) in alod.iter().enumerate() {
+                println!("  grid {i:2}: {v:8.4}");
+            }
+        }
+        bts::coordinator::JobOutput::Netflix(stats) => {
+            println!("per-month mean rating (95% CI half-width, n):");
+            for m in 0..stats.mean.len() {
+                println!(
+                    "  month {m:2}: {:.3} (±{:.3}, n={})",
+                    stats.mean[m], stats.ci_half[m], stats.count[m]
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_exec(args: &[String]) -> Result<()> {
+    use bts::exec::{run_cluster, Backend, ExecConfig};
+    use bts::kneepoint::TaskSizing;
+    use bts::runtime::Exec as _;
+
+    let w = workload_arg(args)?;
+    let workers: usize = flag(args, "--workers")
+        .unwrap_or("4")
+        .parse()
+        .map_err(|_| Error::Config("bad --workers".into()))?;
+    let samples: usize = flag(args, "--samples")
+        .unwrap_or("200")
+        .parse()
+        .map_err(|_| Error::Config("bad --samples".into()))?;
+    let backend = Arc::new(Backend::auto());
+    let params = backend.manifest().params.clone();
+    let knee = kneepoint_bytes(w, &CacheConfig::sandy_bridge());
+    let sizing = match flag(args, "--sizing") {
+        None | Some("kneepoint") => {
+            // small synthetic datasets: cap the knee so jobs still
+            // split into a meaningful number of tiny tasks
+            TaskSizing::Kneepoint(knee.min(256 * 1024))
+        }
+        Some("tiniest") => TaskSizing::Tiniest,
+        Some("large") => TaskSizing::LargeSn { workers },
+        Some(n) => TaskSizing::Fixed(bts::config::parse_bytes(n)?),
+    };
+    let cfg = ExecConfig { sizing, workers, ..Default::default() };
+    let ds = bts::workloads::build_small(w, &params, samples);
+    println!(
+        "backend {}  workload {}  {} samples  sizing {:?}  {} workers",
+        backend.name(),
+        w.name(),
+        samples,
+        cfg.sizing,
+        cfg.workers
+    );
+    let r = run_cluster(ds.as_ref(), backend, &cfg)?;
+    println!("{}", r.report.render());
+    println!(
+        "scheduler: dispatch {:.1} µs/call over {} calls; queue wait \
+         p50 {:.3} ms p95 {:.3} ms; {} refills, {} steals; rf {:?}; \
+         dfs served {:.2} MB",
+        r.overhead.dispatch_us_per_call(),
+        r.overhead.dispatch_calls,
+        r.overhead.queue_wait.p50 * 1e3,
+        r.overhead.queue_wait.p95 * 1e3,
+        r.sched.refills,
+        r.sched.steals,
+        r.rf_trajectory,
+        r.dfs_bytes_served as f64 / 1048576.0
     );
     match &r.output {
         bts::coordinator::JobOutput::Eaglet { alod, weight } => {

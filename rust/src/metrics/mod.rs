@@ -9,6 +9,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::util::json::{num, obj, s, Json};
 use crate::util::stats::{summarize, Summary};
 
 /// Monotonic wall-clock timer.
@@ -67,6 +68,29 @@ impl JobReport {
             return 0.0;
         }
         self.input_bytes as f64 / (1024.0 * 1024.0) / self.total_s
+    }
+
+    /// Serialize to JSON — the record format `BENCH_*.json` trajectory
+    /// entries and `results/exec_baseline.json` are built from.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("workload", s(&self.workload)),
+            ("platform", s(&self.platform)),
+            ("tasks", num(self.tasks as f64)),
+            ("samples", num(self.samples as f64)),
+            ("input_bytes", num(self.input_bytes as f64)),
+            ("startup_s", num(self.startup_s)),
+            ("map_s", num(self.map_s)),
+            ("reduce_s", num(self.reduce_s)),
+            ("total_s", num(self.total_s)),
+            ("throughput_mbs", num(self.throughput_mbs())),
+            ("task_exec_p50_s", num(self.task_exec.p50)),
+            ("task_exec_p95_s", num(self.task_exec.p95)),
+            ("task_fetch_p50_s", num(self.task_fetch.p50)),
+            ("prefetch_hit_rate", num(self.prefetch_hit_rate)),
+            ("final_rf", num(self.final_rf as f64)),
+            ("restarts", num(self.restarts as f64)),
+        ])
     }
 
     pub fn render(&self) -> String {
@@ -162,6 +186,11 @@ mod tests {
         };
         assert!((r.throughput_mbs() - 5.0).abs() < 1e-9);
         assert!(r.render().contains("5.00 MB/s"));
+        // json round-trips through the parser and keeps the fields
+        let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.req_str("workload").unwrap(), "eaglet");
+        assert_eq!(j.req_usize("tasks").unwrap(), 10);
+        assert!((j.req_f64("throughput_mbs").unwrap() - 5.0).abs() < 1e-9);
     }
 
     #[test]

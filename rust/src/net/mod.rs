@@ -18,4 +18,4 @@ pub mod worker;
 
 pub use leader::{serve_job, LeaderReport};
 pub use protocol::Message;
-pub use worker::run_worker;
+pub use worker::{run_worker, serve_connection};

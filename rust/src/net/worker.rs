@@ -1,17 +1,27 @@
 //! Worker process: connect to the leader, execute every task pushed at
-//! it through the local PJRT runtime, stream partials back.
+//! it, stream partials back.
+//!
+//! The task loop is backend-agnostic ([`serve_connection`] is generic
+//! over [`Exec`]): `bts worker` runs it over a per-process PJRT
+//! [`Runtime`], and the native kernel backend (`exec::NativeExec` /
+//! `exec::Backend`) plugs into the same loop on hosts without XLA.
 
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
 use std::sync::Arc;
 
 use super::protocol::Message;
-use crate::coordinator::assemble::{MapTask, TaskPartial};
+use crate::coordinator::assemble::{execute_slices, MapTask, TaskPartial};
 use crate::error::{Error, Result};
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::{Exec, Manifest, Runtime};
 
-/// Connect to `addr`, announce as `worker_id`, and serve until Done.
-/// Returns the number of tasks executed.
+/// Connect to `addr`, announce as `worker_id`, and serve until Done
+/// through a local PJRT runtime. Returns the number of tasks executed.
+///
+/// Connects (and sends Hello) *before* constructing the runtime: if
+/// runtime init fails — e.g. a build linking the vendored xla stub —
+/// the dropped stream surfaces as a read error at the leader, which
+/// fails the job fast instead of waiting forever in `accept()`.
 pub fn run_worker(
     addr: &str,
     worker_id: u32,
@@ -22,9 +32,32 @@ pub fn run_worker(
     let mut rd = BufReader::new(stream.try_clone()?);
     let mut wr = BufWriter::new(stream);
     Message::Hello { worker: worker_id }.write_to(&mut wr)?;
-
-    let p = manifest.params.clone();
     let rt = Runtime::new(manifest)?;
+    serve_frames(&rt, &mut rd, &mut wr)
+}
+
+/// Connect to `addr`, announce as `worker_id`, and execute every pushed
+/// task through `rt` until the leader sends Done.
+pub fn serve_connection(
+    addr: &str,
+    worker_id: u32,
+    rt: &impl Exec,
+) -> Result<u64> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut rd = BufReader::new(stream.try_clone()?);
+    let mut wr = BufWriter::new(stream);
+    Message::Hello { worker: worker_id }.write_to(&mut wr)?;
+    serve_frames(rt, &mut rd, &mut wr)
+}
+
+/// The task loop proper, over any framed transport.
+fn serve_frames(
+    rt: &impl Exec,
+    mut rd: &mut impl std::io::Read,
+    mut wr: &mut impl std::io::Write,
+) -> Result<u64> {
+    let p = rt.manifest().params.clone();
     let mut done: u64 = 0;
     loop {
         match Message::read_from(&mut rd)? {
@@ -32,24 +65,7 @@ pub fn run_worker(
                 let reply = (|| -> Result<Message> {
                     let slices =
                         MapTask::slices(&p, workload, &blocks, seed)?;
-                    let mut parts = Vec::with_capacity(slices.len());
-                    for s in &slices {
-                        let e = rt
-                            .manifest
-                            .entry(s.kind, s.bucket)
-                            .ok_or_else(|| {
-                                Error::Artifact(format!(
-                                    "no entry {} b{}",
-                                    s.kind, s.bucket
-                                ))
-                            })?
-                            .clone();
-                        let out = rt.execute(&e, &s.inputs)?;
-                        parts.push(TaskPartial::from_map_output(
-                            &p, s, &out[0],
-                        )?);
-                    }
-                    Ok(match TaskPartial::merge(parts)? {
+                    Ok(match execute_slices(rt, &p, slices)? {
                         TaskPartial::Eaglet { alod, weight } => {
                             Message::Partial {
                                 seq,

@@ -10,6 +10,11 @@
 //! `Runtime::new`, compiles lazily, and caches executables for the
 //! duration of the process — compilation never sits on the per-task
 //! path after first touch.
+//!
+//! Offline builds link the vendored `xla` stub (vendor/xla), where
+//! `PjRtClient::cpu()` fails with a clear message; jobs then run
+//! through the native kernel backend instead (`exec::NativeExec`, see
+//! DESIGN.md §4).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -50,6 +55,13 @@ impl HostTensor {
         match self {
             HostTensor::F32(v, _) => Ok(v),
             _ => Err(Error::Artifact("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Ok(v),
+            _ => Err(Error::Artifact("expected i32 tensor".into())),
         }
     }
 
@@ -116,9 +128,14 @@ impl Runtime {
         Ok(())
     }
 
-    /// Validate inputs against the entry spec (shape + dtype) — catches
-    /// marshaling bugs at the boundary instead of inside XLA.
-    fn check_inputs(entry: &Entry, inputs: &[HostTensor]) -> Result<()> {
+    /// Validate inputs against the entry spec (shape + dtype + element
+    /// count) — catches marshaling bugs at the boundary instead of
+    /// inside XLA. Shared with the native backend (`exec::native`), so
+    /// both execution paths reject malformed tensors identically.
+    pub(crate) fn check_inputs(
+        entry: &Entry,
+        inputs: &[HostTensor],
+    ) -> Result<()> {
         if inputs.len() != entry.inputs.len() {
             return Err(Error::Artifact(format!(
                 "{}: got {} inputs, want {}",
@@ -215,9 +232,11 @@ mod tests {
         assert_eq!(t.elements(), 4);
         assert_eq!(t.dtype(), Dtype::F32);
         assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
         let i = HostTensor::I32(vec![1, 2], vec![2]);
         assert_eq!(i.dtype(), Dtype::I32);
         assert!(i.as_f32().is_err());
+        assert_eq!(i.as_i32().unwrap(), &[1, 2]);
     }
 
     #[test]

@@ -118,6 +118,88 @@ impl Manifest {
         Self::load(dir)
     }
 
+    /// Build the manifest aot.py would emit for `params`, without
+    /// touching the filesystem. Entry names, kinds, buckets and tensor
+    /// specs mirror `python/compile/aot.py::entry_points` exactly; this
+    /// is the contract backends that compute the kernels natively
+    /// (`exec::NativeExec`) serve lookups from. The `file` fields name
+    /// artifacts that do not exist, so `validate()` is intentionally
+    /// not called (and would fail) — only `load` validates.
+    pub fn synthetic(params: ModelParams) -> Manifest {
+        use super::manifest::Dtype::{F32, I32};
+        let spec = |name: &str, shape: Vec<usize>, dtype| TensorSpec {
+            name: name.to_string(),
+            shape,
+            dtype,
+        };
+        let mut entries = Vec::new();
+        for &b in &params.buckets {
+            entries.push(Entry {
+                name: format!("eaglet_map_b{b}"),
+                kind: "eaglet_map".to_string(),
+                bucket: b,
+                file: format!("eaglet_map_b{b}.hlo.txt"),
+                inputs: vec![
+                    spec("geno", vec![b, params.markers, params.individuals], F32),
+                    spec("pos", vec![b, params.markers], F32),
+                    spec("idx", vec![params.rounds, params.subsample], I32),
+                    spec("grid", vec![params.grid], F32),
+                ],
+                outputs: vec![spec("alod", vec![b, params.grid], F32)],
+            });
+            for (conf, s) in [("hi", params.s_hi), ("lo", params.s_lo)] {
+                entries.push(Entry {
+                    name: format!("netflix_map_{conf}_b{b}"),
+                    kind: format!("netflix_map_{conf}"),
+                    bucket: b,
+                    file: format!("netflix_map_{conf}_b{b}.hlo.txt"),
+                    inputs: vec![
+                        spec("vals", vec![b, params.ratings_cap], F32),
+                        spec("months", vec![b, params.ratings_cap], F32),
+                        spec("mask", vec![b, params.ratings_cap], F32),
+                        spec("idx", vec![s], I32),
+                    ],
+                    outputs: vec![spec(
+                        "stats",
+                        vec![b, params.months, params.stat_fields],
+                        F32,
+                    )],
+                });
+            }
+        }
+        entries.push(Entry {
+            name: "eaglet_reduce".to_string(),
+            kind: "eaglet_reduce".to_string(),
+            bucket: params.reduce_fan,
+            file: "eaglet_reduce.hlo.txt".to_string(),
+            inputs: vec![
+                spec("parts", vec![params.reduce_fan, params.grid], F32),
+                spec("weights", vec![params.reduce_fan], F32),
+            ],
+            outputs: vec![
+                spec("wsum", vec![params.grid], F32),
+                spec("wtot", vec![1], F32),
+            ],
+        });
+        entries.push(Entry {
+            name: "netflix_reduce".to_string(),
+            kind: "netflix_reduce".to_string(),
+            bucket: params.reduce_fan,
+            file: "netflix_reduce.hlo.txt".to_string(),
+            inputs: vec![spec(
+                "parts",
+                vec![params.reduce_fan, params.months, params.stat_fields],
+                F32,
+            )],
+            outputs: vec![spec(
+                "stats",
+                vec![params.months, params.stat_fields],
+                F32,
+            )],
+        });
+        Manifest { dir: PathBuf::from("<native>"), params, entries }
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.entries.is_empty() {
             return Err(Error::Artifact("manifest has no entries".into()));
@@ -219,6 +301,32 @@ mod tests {
     fn missing_dir_is_a_clear_error() {
         let err = Manifest::load("/nonexistent-dir").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn synthetic_mirrors_aot_entry_points() {
+        let p = ModelParams::default();
+        let m = Manifest::synthetic(p.clone());
+        // 3 map kinds × buckets + 2 reduce kinds (aot.py's count).
+        assert_eq!(m.entries.len(), 3 * p.buckets.len() + 2);
+        let e = m.map_entry("eaglet_map", 3).unwrap();
+        assert_eq!(e.bucket, 4);
+        assert_eq!(e.name, "eaglet_map_b4");
+        assert_eq!(e.inputs[0].shape, vec![4, p.markers, p.individuals]);
+        assert_eq!(e.outputs[0].shape, vec![4, p.grid]);
+        for kind in ["netflix_map_hi", "netflix_map_lo"] {
+            for &b in &p.buckets {
+                assert!(m.entry(kind, b).is_some(), "missing {kind} b{b}");
+            }
+        }
+        let r = m.entry("eaglet_reduce", p.reduce_fan).unwrap();
+        assert_eq!(r.outputs.len(), 2);
+        assert!(m.entry("netflix_reduce", p.reduce_fan).is_some());
+        // hi entries subsample more than lo
+        let hi = m.entry("netflix_map_hi", 1).unwrap();
+        let lo = m.entry("netflix_map_lo", 1).unwrap();
+        assert_eq!(hi.inputs[3].shape, vec![p.s_hi]);
+        assert_eq!(lo.inputs[3].shape, vec![p.s_lo]);
     }
 
     #[test]

@@ -170,7 +170,12 @@ impl TwoStepScheduler {
         // speed so slow nodes hold less queued work to strand.
         let scaled =
             ((base as f64) * g.stats.relative_speed(worker)).round() as usize;
-        let want = scaled.clamp(1, self.cfg.max_queue - g.queues[worker].len().min(self.cfg.max_queue));
+        // `clamp` panics when lo > hi: keep the refill headroom at ≥ 1
+        // even if the queue is already at (or over) max_queue, e.g.
+        // under a degenerate SchedConfig { max_queue: 0, .. }.
+        let headroom =
+            self.cfg.max_queue.saturating_sub(g.queues[worker].len()).max(1);
+        let want = scaled.clamp(1, headroom);
         for _ in 0..want {
             match g.pending.pop_front() {
                 Some(t) => {

@@ -21,12 +21,27 @@ pub enum Json {
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
     pub msg: String,
+    /// Byte offset of a parse error; [`JsonError::NO_POS`] for schema
+    /// (required-field) errors that have no source position.
     pub pos: usize,
+}
+
+impl JsonError {
+    pub const NO_POS: usize = usize::MAX;
+
+    /// A positionless schema error (missing/ill-typed field).
+    pub fn schema(msg: String) -> JsonError {
+        JsonError { msg, pos: Self::NO_POS }
+    }
 }
 
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+        if self.pos == Self::NO_POS {
+            write!(f, "json error: {}", self.msg)
+        } else {
+            write!(f, "json error at byte {}: {}", self.pos, self.msg)
+        }
     }
 }
 
@@ -91,35 +106,38 @@ impl Json {
         }
     }
 
-    /// Required-field helpers that produce readable errors.
-    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+    /// Required-field helpers that produce readable errors. They return
+    /// positionless [`JsonError`]s (`pos` is [`JsonError::NO_POS`] —
+    /// schema violations have no byte offset), which convert into
+    /// `bts::Error::Json` at `?` sites.
+    pub fn req(&self, key: &str) -> Result<&Json, JsonError> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing json field `{key}`"))
+            .ok_or_else(|| JsonError::schema(format!("missing json field `{key}`")))
     }
 
-    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+    pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
         self.req(key)?
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("field `{key}` is not a string"))
+            .ok_or_else(|| JsonError::schema(format!("field `{key}` is not a string")))
     }
 
-    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+    pub fn req_usize(&self, key: &str) -> Result<usize, JsonError> {
         self.req(key)?
             .as_f64()
             .map(|n| n as usize)
-            .ok_or_else(|| anyhow::anyhow!("field `{key}` is not a number"))
+            .ok_or_else(|| JsonError::schema(format!("field `{key}` is not a number")))
     }
 
-    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+    pub fn req_f64(&self, key: &str) -> Result<f64, JsonError> {
         self.req(key)?
             .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("field `{key}` is not a number"))
+            .ok_or_else(|| JsonError::schema(format!("field `{key}` is not a number")))
     }
 
-    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
+    pub fn req_arr(&self, key: &str) -> Result<&[Json], JsonError> {
         self.req(key)?
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("field `{key}` is not an array"))
+            .ok_or_else(|| JsonError::schema(format!("field `{key}` is not an array")))
     }
 
     // -- writer -----------------------------------------------------------

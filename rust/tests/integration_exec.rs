@@ -1,0 +1,324 @@
+//! The `exec` cluster executor end to end, against the native kernel
+//! backend — no artifacts, no XLA runtime needed, so these run on
+//! every host.
+
+use std::sync::Arc;
+
+use bts::coordinator::assemble::{execute_slices, MapTask, TaskPartial};
+use bts::coordinator::{FailurePlan, JobOutput};
+use bts::data::{Dataset, ModelParams, Workload};
+use bts::error::Error;
+use bts::exec::{
+    run_cluster, run_cluster_with_recovery, Backend, ExecConfig,
+};
+use bts::kneepoint::TaskSizing;
+use bts::scheduler::TaskSpec;
+use bts::workloads::build_small;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+fn params() -> ModelParams {
+    ModelParams::default()
+}
+
+#[test]
+fn eaglet_cluster_matches_serial_oracle() {
+    // Execute the same packed tasks serially through the native backend
+    // and f64-reduce on the host: the channel cluster must agree.
+    let backend = native();
+    let p = params();
+    let ds = build_small(Workload::Eaglet, &p, 40);
+    let sizing = TaskSizing::Kneepoint(16 * 1024);
+    let cfg = ExecConfig { sizing, workers: 4, ..Default::default() };
+    let r = run_cluster(ds.as_ref(), backend.clone(), &cfg).unwrap();
+    let JobOutput::Eaglet { alod, weight } = &r.output else {
+        panic!("wrong output kind")
+    };
+    assert_eq!(alod.len(), p.grid);
+    assert!(alod.iter().all(|v| v.is_finite()));
+
+    let tasks = bts::kneepoint::pack(ds.metas(), sizing);
+    let mut wsum = vec![0.0f64; p.grid];
+    let mut wtot = 0.0f64;
+    for t in tasks {
+        let spec = TaskSpec::new(t, Workload::Eaglet, cfg.seed);
+        let blocks: Vec<_> = spec
+            .task
+            .sample_ids
+            .iter()
+            .map(|&id| ds.encode_block(id))
+            .collect();
+        let slices =
+            MapTask::slices(&p, Workload::Eaglet, &blocks, spec.seed).unwrap();
+        // Same map path as the cluster workers; the oracle's
+        // independence is the host-side f64 reduce below.
+        match execute_slices(backend.as_ref(), &p, slices).unwrap() {
+            TaskPartial::Eaglet { alod, weight } => {
+                for (acc, v) in wsum.iter_mut().zip(&alod) {
+                    *acc += *v as f64 * weight as f64;
+                }
+                wtot += weight as f64;
+            }
+            _ => unreachable!(),
+        }
+    }
+    assert!((wtot - *weight as f64).abs() < 1e-2);
+    for (i, (want, got)) in
+        wsum.iter().map(|v| v / wtot).zip(alod.iter()).enumerate()
+    {
+        assert!(
+            (want - *got as f64).abs() < 1e-2 * want.abs().max(1.0),
+            "grid point {i}: oracle {want} vs cluster {got}"
+        );
+    }
+    // total weight == total chunks, regardless of packing
+    let chunks: f64 = ds.metas().iter().map(|m| m.units as f64).sum();
+    assert!((*weight as f64 - chunks).abs() < 1e-2);
+}
+
+#[test]
+fn worker_count_does_not_change_the_statistic() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 30);
+    let base = ExecConfig {
+        sizing: TaskSizing::Kneepoint(16 * 1024),
+        ..Default::default()
+    };
+    let r1 = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig { workers: 1, ..base.clone() },
+    )
+    .unwrap();
+    let r4 = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig { workers: 4, ..base.clone() },
+    )
+    .unwrap();
+    assert_eq!(r1.output, r4.output, "parallelism changed the answer");
+}
+
+#[test]
+fn netflix_cluster_produces_sane_stats() {
+    let backend = native();
+    let p = params();
+    for w in [Workload::NetflixHi, Workload::NetflixLo] {
+        let ds = build_small(w, &p, 60);
+        let cfg = ExecConfig {
+            sizing: TaskSizing::Kneepoint(512 * 1024),
+            workers: 3,
+            ..Default::default()
+        };
+        let r = run_cluster(ds.as_ref(), backend.clone(), &cfg).unwrap();
+        let JobOutput::Netflix(stats) = &r.output else {
+            panic!("wrong output kind")
+        };
+        let mut rated = 0;
+        for mo in 0..p.months {
+            if stats.count[mo] > 0.0 {
+                rated += 1;
+                assert!(
+                    stats.mean[mo] >= 1.0 && stats.mean[mo] <= 5.0,
+                    "month {mo} mean {} out of rating range",
+                    stats.mean[mo]
+                );
+                assert!(stats.ci_half[mo].is_finite());
+            }
+        }
+        assert!(rated >= 6, "only {rated} months rated");
+        let total: f64 = stats.count.iter().sum();
+        let s = if w == Workload::NetflixHi { p.s_hi } else { p.s_lo };
+        let draws = (ds.metas().len() * s) as f64;
+        assert!(total <= draws + 0.5, "count {total} exceeds draws {draws}");
+    }
+}
+
+#[test]
+fn shutdown_is_orderly_and_accounted() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 25);
+    let cfg = ExecConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 4,
+        ..Default::default()
+    };
+    let r = run_cluster(ds.as_ref(), backend, &cfg).unwrap();
+    // Every worker got an explicit Shutdown (no channel-death exits)…
+    assert_eq!(r.workers.len(), 4);
+    for ws in &r.workers {
+        assert!(
+            ws.clean_shutdown,
+            "worker {} exited uncleanly: {ws:?}",
+            ws.worker
+        );
+    }
+    // …and together they executed every task exactly once.
+    let executed: u64 = r.workers.iter().map(|w| w.executed).sum();
+    assert_eq!(executed, r.report.tasks as u64);
+    assert_eq!(r.report.tasks, 25); // tiniest = one task per sample
+    // Overhead metrics were actually collected.
+    assert!(r.overhead.dispatch_calls > 0);
+    assert!(r.overhead.dispatch_s >= 0.0);
+    assert!(r.overhead.queue_wait.n >= 1);
+    // metrics record parses back as json
+    let j = bts::util::json::Json::parse(
+        &r.metrics_json().to_string_pretty(),
+    )
+    .unwrap();
+    assert!(j.req("report").is_ok());
+}
+
+#[test]
+fn injected_failure_fails_a_single_attempt() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 25);
+    let mut cfg = ExecConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 3,
+        ..Default::default()
+    };
+    cfg.failure =
+        Some(FailurePlan { worker: 1, after_tasks: 2, on_attempt: 1 });
+    let err = run_cluster(ds.as_ref(), backend, &cfg).unwrap_err();
+    assert!(
+        err.to_string().contains("injected node failure"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn recovery_restarts_and_reproduces_the_clean_result() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 25);
+    let cfg = ExecConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 3,
+        ..Default::default()
+    };
+    let clean = run_cluster(ds.as_ref(), backend.clone(), &cfg).unwrap();
+    let mut failing = cfg.clone();
+    failing.failure =
+        Some(FailurePlan { worker: 0, after_tasks: 2, on_attempt: 1 });
+    let recovered =
+        run_cluster_with_recovery(ds.as_ref(), backend, &failing, 3).unwrap();
+    assert_eq!(recovered.report.restarts, 1, "exactly one restart");
+    assert_eq!(
+        recovered.output, clean.output,
+        "job-level recovery must reproduce the statistic exactly"
+    );
+}
+
+#[test]
+fn persistent_failure_exhausts_attempts() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 12);
+    let mut cfg = ExecConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 2,
+        ..Default::default()
+    };
+    cfg.failure =
+        Some(FailurePlan { worker: 0, after_tasks: 1, on_attempt: 1 });
+    let err =
+        run_cluster_with_recovery(ds.as_ref(), backend, &cfg, 1).unwrap_err();
+    match err {
+        Error::JobFailed { attempts, cause } => {
+            assert_eq!(attempts, 1);
+            assert!(cause.contains("injected"));
+        }
+        other => panic!("expected JobFailed, got {other}"),
+    }
+}
+
+#[test]
+fn tcp_worker_loop_serves_native_backend() {
+    // Drive net::serve_connection — the backend-generic TCP worker
+    // loop — with the native backend, against a minimal hand-rolled
+    // leader: Hello → Task (blocks inline) → Partial → Done. Keeps
+    // the wire path covered on artifact-free hosts.
+    use bts::net::Message;
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpListener;
+
+    let backend = native();
+    let p = params();
+    let ds = build_small(Workload::Eaglet, &p, 6);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let (served, partials) = std::thread::scope(|sc| {
+        let worker = sc.spawn({
+            let backend = backend.clone();
+            let addr = addr.clone();
+            move || {
+                bts::net::serve_connection(&addr, 7, backend.as_ref())
+                    .unwrap()
+            }
+        });
+        // Leader side: accept, handshake, push every sample as a task.
+        let (stream, _) = listener.accept().unwrap();
+        let mut rd = BufReader::new(stream.try_clone().unwrap());
+        let mut wr = BufWriter::new(stream);
+        let Message::Hello { worker: id } =
+            Message::read_from(&mut rd).unwrap()
+        else {
+            panic!("expected Hello")
+        };
+        assert_eq!(id, 7);
+        let mut partials = Vec::new();
+        for (seq, meta) in ds.metas().iter().enumerate() {
+            Message::Task {
+                seq: seq as u32,
+                workload: Workload::Eaglet,
+                seed: 0xB75 ^ seq as u64,
+                blocks: vec![ds.encode_block(meta.id)],
+            }
+            .write_to(&mut wr)
+            .unwrap();
+            match Message::read_from(&mut rd).unwrap() {
+                Message::Partial { seq: got, weight, values, netflix } => {
+                    assert_eq!(got as usize, seq);
+                    assert!(!netflix);
+                    assert_eq!(values.len(), p.grid);
+                    assert!(weight > 0.0);
+                    partials.push((weight, values));
+                }
+                other => panic!("expected Partial, got {other:?}"),
+            }
+        }
+        Message::Done.write_to(&mut wr).unwrap();
+        (worker.join().unwrap(), partials)
+    });
+    assert_eq!(served, ds.metas().len() as u64);
+    assert_eq!(partials.len(), ds.metas().len());
+    // every partial's weight is that sample's chunk count
+    for ((w, _), meta) in partials.iter().zip(ds.metas()) {
+        assert!((w - meta.units as f32).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn large_sn_and_fixed_sizing_also_run() {
+    // Multi-slice tasks (a BLT-style partition spans several compiled
+    // buckets) flow through the same channel path.
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 30);
+    for sizing in [
+        TaskSizing::LargeSn { workers: 2 },
+        TaskSizing::Fixed(64 * 1024),
+    ] {
+        let cfg = ExecConfig { sizing, workers: 2, ..Default::default() };
+        let r = run_cluster(ds.as_ref(), backend.clone(), &cfg).unwrap();
+        let JobOutput::Eaglet { weight, .. } = r.output else {
+            panic!("wrong kind")
+        };
+        let chunks: f32 = ds.metas().iter().map(|m| m.units as f32).sum();
+        assert!(
+            (weight - chunks).abs() < 1e-2,
+            "{sizing:?}: weight {weight} != {chunks}"
+        );
+    }
+}

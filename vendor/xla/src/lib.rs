@@ -1,0 +1,218 @@
+//! API-compatible **stub** for the `xla` crate (PJRT bindings).
+//!
+//! The BTS runtime (`rust/src/runtime/client.rs`) executes AOT-lowered
+//! HLO artifacts through PJRT. That path needs the native XLA runtime
+//! library, which offline build hosts do not carry — so this crate
+//! mirrors exactly the slice of the `xla` API the runtime uses and
+//! fails *at runtime construction* (`PjRtClient::cpu`) with a clear
+//! message instead of failing the build.
+//!
+//! The gate is deliberate and total: every fallible entry point returns
+//! [`Error`], so a `Runtime` can never be constructed against the stub
+//! and no artifact execution is silently wrong. Hosts with the real XLA
+//! runtime swap this path dependency for the real `xla` crate in the
+//! workspace manifest; nothing else in the tree changes.
+//!
+//! Jobs still run end to end without PJRT: the `bts::exec` subsystem
+//! provides a pure-rust kernel backend (`exec::NativeExec`) that
+//! computes the same map/reduce statistics natively.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (message-only in the stub).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: built against the vendored xla stub (no PJRT/XLA \
+         runtime on this host); swap vendor/xla for the real xla crate \
+         to execute compiled artifacts, or use the native exec backend"
+    ))
+}
+
+/// Host literal storage. The stub keeps real data so the host-side
+/// conversions (`vec1`/`reshape`/`to_vec`) behave faithfully; only
+/// device execution is gated.
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold (f32 and i32 — the only dtypes
+/// the BTS artifact contract uses).
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn literal(v: &[Self]) -> Literal;
+    #[doc(hidden)]
+    fn extract(l: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn literal(v: &[Self]) -> Literal {
+        Literal { data: Data::F32(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    fn extract(l: &Literal) -> Result<Vec<Self>> {
+        match &l.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error("Literal::to_vec: dtype mismatch (want f32)".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn literal(v: &[Self]) -> Literal {
+        Literal { data: Data::I32(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    fn extract(l: &Literal) -> Result<Vec<Self>> {
+        match &l.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error("Literal::to_vec: dtype mismatch (want i32)".into())),
+        }
+    }
+}
+
+/// A host-side tensor literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::literal(v)
+    }
+
+    /// Reshape without copying semantics; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "Literal::reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples
+    /// (execution is gated), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// PJRT CPU client. Construction fails in the stub — this is the gate
+/// that keeps every downstream execution path honest.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_are_gated() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
