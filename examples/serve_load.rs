@@ -1,0 +1,146 @@
+//! Sustained-load smoke driver for the serve layer (DESIGN.md §9):
+//! start the long-lived multi-tenant service, push a mixed
+//! EAGLET/Netflix job set through it with Poisson arrivals, and hold
+//! it to the warm-pool contract. CI runs this on every push:
+//!
+//!     cargo run --release --example serve_load -- --jobs 6 --workers 4
+//!
+//! Hard assertions (nonzero exit on violation):
+//!   1. every admitted job completes and reduces;
+//!   2. zero worker respawns — the pool spawned exactly `--workers`
+//!      threads for the entire session;
+//!   3. at least one deadline-infeasible submission was rejected at
+//!      admission (the SLO gate actually fired);
+//!   4. a spot-checked job is bit-identical to the same request run
+//!      solo through `exec::run_cluster`;
+//!   5. results/BENCH_serve.json is written with the latency
+//!      percentiles in the baseline record format.
+
+use std::sync::Arc;
+
+use bts::exec::{run_cluster, Backend, ExecConfig};
+use bts::runtime::Exec as _;
+use bts::serve::{mixed_request, run_load, LoadConfig};
+
+fn main() -> bts::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // Same strict contract as the bts CLI (shared parser): both flag
+    // spellings accepted, unknown flags are errors.
+    let f = bts::util::cli::Flags::parse(
+        &args,
+        &["--jobs", "--workers", "--max-active"],
+    )?;
+    let cfg = LoadConfig {
+        jobs: f.num("--jobs", 20)?,
+        workers: f.num("--workers", 4)?,
+        max_active: f.num("--max-active", 4)?,
+        ..Default::default()
+    };
+    let backend = Arc::new(Backend::auto());
+    println!(
+        "=== serve load: {} mixed jobs over {} warm workers (backend: {}) ===",
+        cfg.jobs,
+        cfg.workers,
+        backend.name()
+    );
+
+    let out = run_load(backend.clone(), &cfg)?;
+    for r in &out.results {
+        println!("  {}", r.render_row());
+    }
+    println!("{}", out.report.render());
+
+    // 1. every admitted job completed
+    assert_eq!(
+        out.report.jobs_completed + out.report.jobs_rejected as usize,
+        cfg.jobs,
+        "admitted jobs must all complete ({} failed)",
+        out.report.jobs_failed
+    );
+    assert_eq!(out.report.jobs_failed, 0);
+
+    // 2. the pool stayed warm: no respawns, ever
+    assert_eq!(
+        out.report.workers_spawned, cfg.workers,
+        "pool must spawn exactly once"
+    );
+    assert_eq!(out.report.worker_respawns(), 0);
+    let executed: u64 = out.report.worker_executed.iter().sum();
+    assert_eq!(
+        executed, out.report.tasks_total,
+        "warm workers must have executed every task"
+    );
+    println!(
+        "  warm pool ✔ ({} workers spawned once, {} tasks across {} jobs)",
+        out.report.workers_spawned,
+        executed,
+        out.report.jobs_completed
+    );
+
+    // 3. the admission gate fired on the infeasible slice (which only
+    //    exists once the mix is long enough to contain it)
+    if cfg.infeasible_every > 0 && cfg.jobs >= cfg.infeasible_every {
+        assert!(
+            out.report.jobs_rejected >= 1,
+            "expected at least one deadline-infeasible rejection"
+        );
+        println!(
+            "  admission gate ✔ ({} rejected at the door)",
+            out.report.jobs_rejected
+        );
+    } else {
+        println!(
+            "  admission gate untested (needs --jobs >= {})",
+            cfg.infeasible_every
+        );
+    }
+
+    // 4. multiplexed == solo, bit for bit (spot-check job index 0)
+    if cfg.jobs > 0 {
+        let req = mixed_request(&cfg, 0);
+        let params = backend.manifest().params.clone();
+        let ds =
+            bts::workloads::build_small(req.workload, &params, req.samples);
+        let solo = run_cluster(
+            ds.as_ref(),
+            backend,
+            &ExecConfig {
+                sizing: req.sizing,
+                seed: req.seed,
+                ..Default::default()
+            },
+        )?;
+        let served = out
+            .results
+            .iter()
+            .find(|r| r.id == 1) // ids are 1-based in submission order
+            .expect("job 0 (id 1) completed");
+        assert_eq!(
+            served.output, solo.output,
+            "multiplexed job must equal its solo run bit-for-bit"
+        );
+        println!(
+            "  determinism ✔ (served output == solo run_cluster output)"
+        );
+    }
+
+    // 5. the perf-trail record
+    let path = bts::util::bench_record::write(
+        "serve",
+        vec![out.report.metrics_json()],
+    )?;
+    let back = bts::util::json::Json::parse(&std::fs::read_to_string(&path)?)
+        .map_err(bts::Error::Json)?;
+    let rec = match &back {
+        bts::util::json::Json::Arr(v) => &v[0],
+        _ => panic!("BENCH_serve.json must be a record array"),
+    };
+    for field in
+        ["queue_wait_p50_s", "e2e_p95_s", "tasks_per_s", "worker_respawns"]
+    {
+        rec.req_f64(field).map_err(bts::Error::Json)?;
+    }
+    println!("  wrote {path} (queue-wait/latency/throughput percentiles) ✔");
+    println!("\nserve load OK");
+    Ok(())
+}

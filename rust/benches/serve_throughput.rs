@@ -1,0 +1,79 @@
+//! Serve-layer throughput: a warm multi-tenant pool versus cold
+//! one-shot clusters on the identical job set.
+//!
+//!     cargo bench --bench serve_throughput
+//!
+//! The comparison the serve layer exists to win: N small mixed jobs
+//! through the persistent service (one spawn, shared store, tasks
+//! interleaved) against the same N jobs each paying `run_cluster`'s
+//! spawn/stage/join. Also records the service's sustained tasks/s and
+//! end-to-end latency percentiles from its own ServeReport.
+
+use std::sync::Arc;
+
+use bts::exec::{run_cluster, Backend, ExecConfig};
+use bts::runtime::Exec as _;
+use bts::serve::{mixed_request, run_load, LoadConfig};
+use bts::util::bench::Bench;
+
+fn main() {
+    let jobs = 12;
+    let load = LoadConfig {
+        jobs,
+        workers: 4,
+        max_active: 4,
+        // back-to-back submissions: measure service capacity, not
+        // generator pacing
+        arrival_rate_per_s: f64::INFINITY,
+        base_samples: 24,
+        infeasible_every: 0, // feed the pool only admissible work here
+        ..Default::default()
+    };
+
+    let mut b = Bench::new("serve_throughput").with_iters(1, 3);
+
+    let backend = Arc::new(Backend::native(
+        bts::data::ModelParams::default(),
+    ));
+    let params = backend.manifest().params.clone();
+
+    let be = backend.clone();
+    let lc = load.clone();
+    b.measure(&format!("serve_warm_pool_{jobs}_jobs"), || {
+        let out = run_load(be.clone(), &lc).expect("serve load");
+        assert_eq!(out.report.jobs_completed, jobs);
+        assert_eq!(out.report.worker_respawns(), 0);
+    });
+
+    let be = backend.clone();
+    let lc = load.clone();
+    b.measure(&format!("exec_cold_start_{jobs}_jobs"), || {
+        for i in 0..jobs {
+            let req = mixed_request(&lc, i);
+            let ds = bts::workloads::build_small(
+                req.workload,
+                &params,
+                req.samples,
+            );
+            let cfg = ExecConfig {
+                sizing: req.sizing,
+                seed: req.seed,
+                ..Default::default()
+            };
+            run_cluster(ds.as_ref(), be.clone(), &cfg).expect("solo job");
+        }
+    });
+
+    // One instrumented session for the service's own metrics.
+    let out = run_load(backend, &load).expect("serve load");
+    b.record("sustained_tasks_per_s", out.report.tasks_per_s(), "tasks/s");
+    b.record("e2e_p50", out.report.e2e.p50, "s");
+    b.record("e2e_p95", out.report.e2e.p95, "s");
+    b.record("queue_wait_p95", out.report.queue_wait.p95, "s");
+    b.record(
+        "ttfp_p50",
+        out.report.ttfp.p50,
+        "s",
+    );
+    b.finish();
+}

@@ -95,6 +95,15 @@ impl Dfs {
         }
     }
 
+    /// Delete a key from every node. The serve layer unstages a job's
+    /// namespaced blocks through this when the job completes, so a
+    /// long-lived shared store does not accumulate dead tenants.
+    pub fn remove(&self, key: &str) {
+        for n in &self.nodes {
+            n.remove(key);
+        }
+    }
+
     /// Fetch a block from the best replica; records response time.
     pub fn get(&self, key: &str) -> Result<(Arc<Vec<u8>>, f64)> {
         let rf = self.replication_factor();
@@ -255,6 +264,17 @@ mod tests {
         let f0 = d.nodes[0].fetches.load(Ordering::Relaxed);
         let f1 = d.nodes[1].fetches.load(Ordering::Relaxed);
         assert!(f0 > 3 * f1, "fast {f0} vs slow {f1}");
+    }
+
+    #[test]
+    fn remove_unstages_from_every_node() {
+        let d = store(4, 3);
+        d.put("gone", Arc::new(vec![7u8; 16]));
+        d.put("kept", Arc::new(vec![8u8; 16]));
+        d.remove("gone");
+        assert!(d.get("gone").is_err());
+        assert!(d.get("kept").is_ok());
+        assert!(d.nodes.iter().all(|n| !n.contains("gone")));
     }
 
     #[test]

@@ -15,6 +15,15 @@ pub mod ring;
 pub mod store;
 
 pub use client::Dfs;
+
+/// Key prefix isolating one job's blocks in a shared store. The serve
+/// layer multiplexes many tenants over a single [`Dfs`]; prefixing every
+/// block key with the job id keeps two in-flight jobs that stage the
+/// same sample ids from colliding. Solo `exec` runs (one private store
+/// per job) use the empty namespace `""`.
+pub fn job_ns(job: u64) -> String {
+    format!("j{job}/")
+}
 pub use prefetch::{prefetch_depth, Prefetcher};
 pub use replication::{
     decide, initial_data_nodes, ControllerState, ReplicationPolicy,

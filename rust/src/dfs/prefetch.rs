@@ -107,6 +107,15 @@ impl Prefetcher {
     pub fn cached(&self) -> usize {
         self.cache.len()
     }
+
+    /// Drop every queued and cached key under `prefix`. When the serve
+    /// pool aborts a job attempt, its workers purge the job's namespace
+    /// so stale blocks neither linger in the worker-local cache nor get
+    /// fetched for tasks that will never run.
+    pub fn purge_prefix(&mut self, prefix: &str) {
+        self.pending.retain(|k| !k.starts_with(prefix));
+        self.cache.retain(|k, _| !k.starts_with(prefix));
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +182,31 @@ mod tests {
             p.hits,
             p.misses
         );
+    }
+
+    #[test]
+    fn purge_prefix_clears_one_namespace_only() {
+        let d = Dfs::new(2, 2, LatencyModel::none());
+        for k in 0..4 {
+            d.put(&format!("j1/b{k}"), Arc::new(vec![1u8; 32]));
+            d.put(&format!("j2/b{k}"), Arc::new(vec![2u8; 32]));
+        }
+        let mut p = Prefetcher::new(d, 8);
+        p.enqueue((0..4).map(|k| format!("j1/b{k}")));
+        p.enqueue((0..4).map(|k| format!("j2/b{k}")));
+        p.observe_exec(0.01);
+        p.pump().unwrap();
+        p.purge_prefix("j1/");
+        // all of j1 is gone from cache and pending; j2 still flows
+        assert!(p.take("j2/b0").is_ok());
+        let hits_before = p.hits;
+        p.pump().unwrap();
+        for k in 1..4 {
+            p.take(&format!("j2/b{k}")).unwrap();
+        }
+        assert!(p.hits > hits_before || p.misses > 0);
+        // purged keys are refetchable (they were only evicted locally)
+        assert!(p.take("j1/b0").is_ok());
     }
 
     #[test]

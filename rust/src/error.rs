@@ -19,6 +19,8 @@ pub enum Error {
     Data(String),
     Artifact(String),
     Scheduler(String),
+    /// A job was refused at service admission (deadline infeasible).
+    Admission(String),
     Dfs(String),
     JobFailed { attempts: u32, cause: String },
     Protocol(String),
@@ -35,6 +37,7 @@ impl fmt::Display for Error {
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Scheduler(m) => write!(f, "scheduler error: {m}"),
+            Error::Admission(m) => write!(f, "admission rejected: {m}"),
             Error::Dfs(m) => write!(f, "dfs error: {m}"),
             Error::JobFailed { attempts, cause } => {
                 write!(f, "job failed after {attempts} attempts: {cause}")

@@ -23,6 +23,17 @@
 //! whole job via [`run_cluster_with_recovery`], reproducing the
 //! statistic exactly (per-task seeds, seq-ordered reduce).
 //!
+//! Since the serve layer landed, the per-job half of the leader lives
+//! in [`JobCtx`]: scheduler ownership, partial collection, per-task
+//! timing, the replication feedback loop, and the seq-ordered reduce.
+//! `run_cluster` drives exactly one `JobCtx` over workers it spawns and
+//! joins itself; `serve::JobService` drives *many* `JobCtx`s over a
+//! persistent [`crate::serve::PoolConfig`]-sized pool, which is what
+//! turns this executor into a long-lived multi-tenant service. Block
+//! keys are namespace-prefixed ([`crate::dfs::job_ns`]) so concurrent
+//! jobs sharing one store never collide; solo runs use the empty
+//! namespace and keep their historical keys.
+//!
 //! Unlike `coordinator::job` (scoped threads pulling from a shared
 //! scheduler, PJRT-only), this executor isolates every cross-thread
 //! interaction in messages and is generic over the execution backend —
@@ -110,17 +121,19 @@ enum LeaderMsg {
     Shutdown,
 }
 
-/// One finished task, reported up the shuffle channel.
-struct TaskDone {
-    worker: usize,
-    seq: usize,
-    partial: TaskPartial,
-    fetch_s: f64,
-    exec_s: f64,
+/// One finished task, reported up the shuffle channel. Prefetch
+/// counters are per-task deltas, so an accumulator can attribute them
+/// to the right job even when one worker serves many jobs.
+pub(crate) struct TaskDone {
+    pub(crate) worker: usize,
+    pub(crate) seq: usize,
+    pub(crate) partial: TaskPartial,
+    pub(crate) fetch_s: f64,
+    pub(crate) exec_s: f64,
     /// Seconds the worker sat idle waiting for this task to arrive.
-    queue_wait_s: f64,
-    prefetch_hits: u64,
-    prefetch_misses: u64,
+    pub(crate) queue_wait_s: f64,
+    pub(crate) prefetch_hits: u64,
+    pub(crate) prefetch_misses: u64,
 }
 
 /// Worker → leader messages.
@@ -199,28 +212,290 @@ impl ExecResult {
     }
 }
 
-/// Keep `worker` topped up to `target` in-flight tasks, timing every
-/// scheduler interaction. Sends `Shutdown` (and retires the channel)
-/// once the scheduler is dry for this worker and nothing is in flight.
-#[allow(clippy::too_many_arguments)]
+/// Store key for one sample's block under a job namespace (`""` for
+/// solo runs; [`crate::dfs::job_ns`] prefixes for multiplexed jobs).
+pub(crate) fn block_key(ns: &str, workload: Workload, sample: u64) -> String {
+    let kind = match workload {
+        Workload::Eaglet => KIND_EAGLET,
+        _ => KIND_NETFLIX,
+    };
+    format!("{ns}{}", BlockId { kind, sample }.key())
+}
+
+/// Encode every sample of `dataset` into the store under `ns`. Returns
+/// (samples, input bytes, staged keys) — the keys are what a
+/// multi-tenant owner removes when the job leaves the system.
+pub(crate) fn stage_dataset(
+    dataset: &dyn Dataset,
+    dfs: &Dfs,
+    ns: &str,
+) -> (usize, usize, Vec<String>) {
+    let metas = dataset.metas();
+    let workload = dataset.workload();
+    let mut keys = Vec::with_capacity(metas.len());
+    for meta in metas {
+        let block = dataset.encode_block(meta.id);
+        let key = block_key(ns, workload, meta.id);
+        dfs.put(&key, Arc::new(block.encode()));
+        keys.push(key);
+    }
+    (metas.len(), dataset.total_bytes(), keys)
+}
+
+/// Reduce seq-ordered task partials into the job statistic. Both the
+/// solo executor and the serve layer finish jobs through this single
+/// path — that shared, order-fixed reduce is the determinism argument
+/// for "a multiplexed job equals its solo run, bit for bit".
+fn reduce_partials(
+    backend: &Backend,
+    params: &ModelParams,
+    workload: Workload,
+    collected: Vec<TaskPartial>,
+) -> Result<JobOutput> {
+    Ok(match workload {
+        Workload::Eaglet => {
+            let parts: Vec<(Vec<f32>, f32)> = collected
+                .into_iter()
+                .map(|p| match p {
+                    TaskPartial::Eaglet { alod, weight } => (alod, weight),
+                    _ => unreachable!("workload-homogeneous job"),
+                })
+                .collect();
+            let (alod, weight) = reduce_eaglet(backend, params, parts)?;
+            JobOutput::Eaglet { alod, weight }
+        }
+        Workload::NetflixHi | Workload::NetflixLo => {
+            let parts: Vec<Vec<f32>> = collected
+                .into_iter()
+                .map(|pt| match pt {
+                    TaskPartial::Netflix { stats } => stats,
+                    _ => unreachable!("workload-homogeneous job"),
+                })
+                .collect();
+            let stats = reduce_netflix(backend, params, parts)?;
+            JobOutput::Netflix(finalize_netflix(params, &stats)?)
+        }
+    })
+}
+
+/// Everything a finished [`JobCtx`] yields short of pool-owned state
+/// (worker lifecycle, store volume), which the caller supplies.
+pub(crate) struct FinishedJob {
+    pub(crate) output: JobOutput,
+    pub(crate) report: JobReport,
+    pub(crate) sched: SchedSnapshot,
+    pub(crate) overhead: SchedOverhead,
+    pub(crate) rf_trajectory: Vec<usize>,
+}
+
+/// The per-job half of the leader: owns this job's scheduler and
+/// partials, times every scheduler interaction, drives the adaptive
+/// replication controller, and reduces in seq order when complete.
+///
+/// `run_cluster` drives one of these over workers it spawns itself;
+/// the serve dispatcher drives one per in-flight job over a shared
+/// persistent pool — "one job among many" with no per-job spawn/join.
+pub(crate) struct JobCtx {
+    cfg: ExecConfig,
+    workload: Workload,
+    dfs: Arc<Dfs>,
+    sched: TwoStepScheduler,
+    partials: Vec<Option<TaskPartial>>,
+    remaining: usize,
+    n_tasks: usize,
+    samples: usize,
+    input_bytes: usize,
+    startup_s: f64,
+    map_t: Timer,
+    fetch_times: Vec<f64>,
+    exec_times: Vec<f64>,
+    queue_waits: Vec<f64>,
+    hits: u64,
+    misses: u64,
+    rf_trajectory: Vec<usize>,
+    ctrl: ControllerState,
+    dispatch_s: f64,
+    dispatch_calls: u64,
+}
+
+impl JobCtx {
+    /// Build the leader state for one job whose blocks are already
+    /// staged in `dfs`. `pool_workers` sizes the scheduler's per-worker
+    /// queues (the number of map slots that will call [`JobCtx::next`]).
+    pub(crate) fn new(
+        specs: Vec<TaskSpec>,
+        dfs: Arc<Dfs>,
+        cfg: ExecConfig,
+        pool_workers: usize,
+        samples: usize,
+        input_bytes: usize,
+        startup_s: f64,
+    ) -> Result<JobCtx> {
+        let Some(first) = specs.first() else {
+            return Err(Error::Data("job packed zero tasks".into()));
+        };
+        let workload = first.workload;
+        let n_tasks = specs.len();
+        let sched =
+            TwoStepScheduler::new(specs, pool_workers, cfg.sched.clone());
+        let rf_trajectory = vec![dfs.replication_factor()];
+        Ok(JobCtx {
+            cfg,
+            workload,
+            dfs,
+            sched,
+            partials: vec![None; n_tasks],
+            remaining: n_tasks,
+            n_tasks,
+            samples,
+            input_bytes,
+            startup_s,
+            map_t: Timer::start(),
+            fetch_times: Vec::with_capacity(n_tasks),
+            exec_times: Vec::with_capacity(n_tasks),
+            queue_waits: Vec::with_capacity(n_tasks),
+            hits: 0,
+            misses: 0,
+            rf_trajectory,
+            ctrl: ControllerState::default(),
+            dispatch_s: 0.0,
+            dispatch_calls: 0,
+        })
+    }
+
+    /// Claim this job's next task for `worker`, timing the scheduler
+    /// interaction (the dispatch half of [`SchedOverhead`]).
+    pub(crate) fn next(&mut self, worker: usize) -> Option<TaskSpec> {
+        let t = Timer::start();
+        let next = self.sched.next(worker);
+        self.dispatch_s += t.secs();
+        self.dispatch_calls += 1;
+        next
+    }
+
+    /// Record one finished task: collect the partial, feed the
+    /// scheduler's feedback loop, and (if enabled) let the replication
+    /// controller react to the new fetch/exec balance.
+    pub(crate) fn on_done(&mut self, d: TaskDone) {
+        if self.partials[d.seq].replace(d.partial).is_none() {
+            self.remaining -= 1;
+        }
+        self.fetch_times.push(d.fetch_s);
+        self.exec_times.push(d.exec_s);
+        self.queue_waits.push(d.queue_wait_s);
+        self.hits += d.prefetch_hits;
+        self.misses += d.prefetch_misses;
+        let t = Timer::start();
+        self.sched.report(d.worker, d.fetch_s, d.exec_s);
+        self.dispatch_s += t.secs();
+        self.dispatch_calls += 1;
+        if self.cfg.adaptive_rf {
+            if let (Some(fetch), Some(exec)) =
+                (self.sched.observed_fetch_s(), self.sched.observed_exec_s())
+            {
+                let cur = self.dfs.replication_factor();
+                let next = decide(
+                    &self.cfg.replication,
+                    &mut self.ctrl,
+                    fetch,
+                    exec,
+                    cur,
+                );
+                if next != cur {
+                    self.dfs.set_replication_factor(next);
+                    self.rf_trajectory.push(next);
+                }
+            }
+        }
+    }
+
+    /// All partials collected — the job can reduce.
+    pub(crate) fn is_complete(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// Seq-ordered reduce plus the job report. Errors if any task
+    /// produced no partial (an aborted or still-running job).
+    pub(crate) fn finish(self, backend: &Backend) -> Result<FinishedJob> {
+        let map_s = self.map_t.secs();
+        let collected: Vec<TaskPartial> = self
+            .partials
+            .into_iter()
+            .enumerate()
+            .map(|(seq, p)| {
+                p.ok_or_else(|| {
+                    Error::Scheduler(format!("task {seq} produced no partial"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        let params = backend.manifest().params.clone();
+        let reduce_t = Timer::start();
+        let output =
+            reduce_partials(backend, &params, self.workload, collected)?;
+        let reduce_s = reduce_t.secs();
+        let (h, m) = (self.hits, self.misses);
+        let report = JobReport {
+            workload: self.workload.name().to_string(),
+            platform: self.cfg.platform.clone(),
+            tasks: self.n_tasks,
+            samples: self.samples,
+            input_bytes: self.input_bytes,
+            startup_s: self.startup_s,
+            map_s,
+            reduce_s,
+            total_s: self.startup_s + self.map_t.secs(),
+            task_exec: summarize(if self.exec_times.is_empty() {
+                &[0.0]
+            } else {
+                &self.exec_times
+            }),
+            task_fetch: summarize(if self.fetch_times.is_empty() {
+                &[0.0]
+            } else {
+                &self.fetch_times
+            }),
+            prefetch_hit_rate: if h + m == 0 {
+                0.0
+            } else {
+                h as f64 / (h + m) as f64
+            },
+            final_rf: self.dfs.replication_factor(),
+            restarts: self.cfg.attempt - 1,
+        };
+        let overhead = SchedOverhead {
+            dispatch_s: self.dispatch_s,
+            dispatch_calls: self.dispatch_calls,
+            queue_wait: summarize(if self.queue_waits.is_empty() {
+                &[0.0]
+            } else {
+                &self.queue_waits
+            }),
+        };
+        Ok(FinishedJob {
+            output,
+            report,
+            sched: self.sched.snapshot(),
+            overhead,
+            rf_trajectory: self.rf_trajectory,
+        })
+    }
+}
+
+/// Keep `worker` topped up to `target` in-flight tasks. Sends
+/// `Shutdown` (and retires the channel) once the scheduler is dry for
+/// this worker and nothing is in flight.
 fn top_up(
-    sched: &TwoStepScheduler,
+    ctx: &mut JobCtx,
     task_txs: &mut [Option<mpsc::Sender<LeaderMsg>>],
     inflight: &mut [usize],
     w: usize,
     target: usize,
-    dispatch_s: &mut f64,
-    dispatch_calls: &mut u64,
 ) {
     while inflight[w] < target {
         // Own a handle (Sender is an Arc clone) so retiring the slot
         // below never aliases the borrow.
         let Some(tx) = task_txs[w].clone() else { return };
-        let t = Timer::start();
-        let next = sched.next(w);
-        *dispatch_s += t.secs();
-        *dispatch_calls += 1;
-        match next {
+        match ctx.next(w) {
             Some(spec) => {
                 if tx.send(LeaderMsg::Task(Box::new(spec))).is_err() {
                     // Worker gone; its Exited/Failed message explains.
@@ -272,26 +547,23 @@ pub fn run_cluster(
     )
     .min(cfg.data_nodes);
     let dfs = Dfs::new(cfg.data_nodes, rf0, cfg.latency.clone());
-    let kind = match workload {
-        Workload::Eaglet => KIND_EAGLET,
-        _ => KIND_NETFLIX,
-    };
-    for meta in metas {
-        let block = dataset.encode_block(meta.id);
-        let key = BlockId { kind, sample: meta.id }.key();
-        dfs.put(&key, Arc::new(block.encode()));
-    }
+    let (samples, input_bytes, _keys) = stage_dataset(dataset, &dfs, "");
     let specs: Vec<TaskSpec> = tasks
         .into_iter()
         .map(|t| TaskSpec::new(t, workload, cfg.seed))
         .collect();
-    let sched = TwoStepScheduler::new(specs, cfg.workers, cfg.sched.clone());
-    let input_bytes = dataset.total_bytes();
-    let samples = metas.len();
     let startup_s = total_t.secs();
+    let mut ctx = JobCtx::new(
+        specs,
+        dfs.clone(),
+        cfg.clone(),
+        cfg.workers,
+        samples,
+        input_bytes,
+        startup_s,
+    )?;
 
     // ---- map phase: spawn workers, lead the job -------------------------
-    let map_t = Timer::start();
     let (worker_tx, worker_rx) = mpsc::channel::<WorkerMsg>();
     let mut task_txs: Vec<Option<mpsc::Sender<LeaderMsg>>> =
         Vec::with_capacity(cfg.workers);
@@ -322,27 +594,10 @@ pub fn run_cluster(
 
     let target = cfg.inflight.max(1);
     let mut inflight = vec![0usize; cfg.workers];
-    let mut dispatch_s = 0.0f64;
-    let mut dispatch_calls = 0u64;
     for w in 0..cfg.workers {
-        top_up(
-            &sched,
-            &mut task_txs,
-            &mut inflight,
-            w,
-            target,
-            &mut dispatch_s,
-            &mut dispatch_calls,
-        );
+        top_up(&mut ctx, &mut task_txs, &mut inflight, w, target);
     }
 
-    let mut partials: Vec<Option<TaskPartial>> = vec![None; n_tasks];
-    let mut fetch_times: Vec<f64> = Vec::with_capacity(n_tasks);
-    let mut exec_times: Vec<f64> = Vec::with_capacity(n_tasks);
-    let mut queue_waits: Vec<f64> = Vec::with_capacity(n_tasks);
-    let mut hits = vec![(0u64, 0u64); cfg.workers];
-    let mut rf_trajectory = vec![dfs.replication_factor()];
-    let mut ctrl = ControllerState::default();
     let mut worker_stats: Vec<Option<WorkerStats>> = vec![None; cfg.workers];
     let mut first_err: Option<Error> = None;
 
@@ -355,42 +610,8 @@ pub fn run_cluster(
             WorkerMsg::Done(d) => {
                 let w = d.worker;
                 inflight[w] = inflight[w].saturating_sub(1);
-                partials[d.seq] = Some(d.partial);
-                fetch_times.push(d.fetch_s);
-                exec_times.push(d.exec_s);
-                queue_waits.push(d.queue_wait_s);
-                hits[w] = (d.prefetch_hits, d.prefetch_misses);
-                let t = Timer::start();
-                sched.report(w, d.fetch_s, d.exec_s);
-                dispatch_s += t.secs();
-                dispatch_calls += 1;
-                if cfg.adaptive_rf {
-                    if let (Some(fetch), Some(exec)) =
-                        (sched.observed_fetch_s(), sched.observed_exec_s())
-                    {
-                        let cur = dfs.replication_factor();
-                        let next = decide(
-                            &cfg.replication,
-                            &mut ctrl,
-                            fetch,
-                            exec,
-                            cur,
-                        );
-                        if next != cur {
-                            dfs.set_replication_factor(next);
-                            rf_trajectory.push(next);
-                        }
-                    }
-                }
-                top_up(
-                    &sched,
-                    &mut task_txs,
-                    &mut inflight,
-                    w,
-                    target,
-                    &mut dispatch_s,
-                    &mut dispatch_calls,
-                );
+                ctx.on_done(*d);
+                top_up(&mut ctx, &mut task_txs, &mut inflight, w, target);
             }
             WorkerMsg::Failed { error } => {
                 first_err.get_or_insert(error);
@@ -420,92 +641,15 @@ pub fn run_cluster(
     if let Some(e) = first_err {
         return Err(e);
     }
-    let map_s = map_t.secs();
 
     // ---- shuffle sanity + reduce (on the leader, via the backend) -------
-    let collected: Vec<TaskPartial> = partials
-        .into_iter()
-        .enumerate()
-        .map(|(seq, p)| {
-            p.ok_or_else(|| {
-                Error::Scheduler(format!("task {seq} produced no partial"))
-            })
-        })
-        .collect::<Result<_>>()?;
-    let reduce_t = Timer::start();
-    let output = match workload {
-        Workload::Eaglet => {
-            let parts: Vec<(Vec<f32>, f32)> = collected
-                .into_iter()
-                .map(|p| match p {
-                    TaskPartial::Eaglet { alod, weight } => (alod, weight),
-                    _ => unreachable!("workload-homogeneous job"),
-                })
-                .collect();
-            let (alod, weight) =
-                reduce_eaglet(backend.as_ref(), &params, parts)?;
-            JobOutput::Eaglet { alod, weight }
-        }
-        Workload::NetflixHi | Workload::NetflixLo => {
-            let parts: Vec<Vec<f32>> = collected
-                .into_iter()
-                .map(|pt| match pt {
-                    TaskPartial::Netflix { stats } => stats,
-                    _ => unreachable!("workload-homogeneous job"),
-                })
-                .collect();
-            let stats = reduce_netflix(backend.as_ref(), &params, parts)?;
-            JobOutput::Netflix(finalize_netflix(&params, &stats)?)
-        }
-    };
-    let reduce_s = reduce_t.secs();
-
-    let (h, m) = hits
-        .iter()
-        .fold((0u64, 0u64), |(a, b), &(x, y)| (a + x, b + y));
-    let report = JobReport {
-        workload: workload.name().to_string(),
-        platform: cfg.platform.clone(),
-        tasks: n_tasks,
-        samples,
-        input_bytes,
-        startup_s,
-        map_s,
-        reduce_s,
-        total_s: total_t.secs(),
-        task_exec: summarize(if exec_times.is_empty() {
-            &[0.0]
-        } else {
-            &exec_times
-        }),
-        task_fetch: summarize(if fetch_times.is_empty() {
-            &[0.0]
-        } else {
-            &fetch_times
-        }),
-        prefetch_hit_rate: if h + m == 0 {
-            0.0
-        } else {
-            h as f64 / (h + m) as f64
-        },
-        final_rf: dfs.replication_factor(),
-        restarts: cfg.attempt - 1,
-    };
-    let overhead = SchedOverhead {
-        dispatch_s,
-        dispatch_calls,
-        queue_wait: summarize(if queue_waits.is_empty() {
-            &[0.0]
-        } else {
-            &queue_waits
-        }),
-    };
+    let fin = ctx.finish(backend.as_ref())?;
     Ok(ExecResult {
-        output,
-        report,
-        sched: sched.snapshot(),
-        overhead,
-        rf_trajectory,
+        output: fin.output,
+        report: fin.report,
+        sched: fin.sched,
+        overhead: fin.overhead,
+        rf_trajectory: fin.rf_trajectory,
         dfs_bytes_served: dfs.bytes_served(),
         workers: worker_stats
             .into_iter()
@@ -546,16 +690,13 @@ struct WorkerCfg {
     attempt: u32,
 }
 
-fn enqueue_keys(pf: &mut Prefetcher, spec: &TaskSpec) {
-    let kind = match spec.workload {
-        Workload::Eaglet => KIND_EAGLET,
-        _ => KIND_NETFLIX,
-    };
+/// Queue a task's block keys (under `ns`) for prefetch, in task order.
+pub(crate) fn enqueue_keys(pf: &mut Prefetcher, spec: &TaskSpec, ns: &str) {
     pf.enqueue(
         spec.task
             .sample_ids
             .iter()
-            .map(|&id| BlockId { kind, sample: id }.key()),
+            .map(|&id| block_key(ns, spec.workload, id)),
     );
 }
 
@@ -580,7 +721,7 @@ fn worker_main(
         loop {
             match rx.try_recv() {
                 Ok(LeaderMsg::Task(spec)) => {
-                    enqueue_keys(&mut pf, &spec);
+                    enqueue_keys(&mut pf, &spec, "");
                     queue.push_back(*spec);
                 }
                 Ok(LeaderMsg::Shutdown) => {
@@ -603,7 +744,7 @@ fn worker_main(
             match rx.recv() {
                 Ok(LeaderMsg::Task(spec)) => {
                     queue_wait_s = wait_t.secs();
-                    enqueue_keys(&mut pf, &spec);
+                    enqueue_keys(&mut pf, &spec, "");
                     queue.push_back(*spec);
                 }
                 Ok(LeaderMsg::Shutdown) => {
@@ -614,7 +755,8 @@ fn worker_main(
             }
         }
         let Some(spec) = queue.pop_front() else { continue };
-        match run_task(&params, &backend, &mut pf, &spec) {
+        let (h0, m0) = (pf.hits, pf.misses);
+        match run_task(&params, &backend, &mut pf, &spec, "") {
             Ok((partial, fetch_s, exec_s)) => {
                 executed += 1;
                 let done = TaskDone {
@@ -624,8 +766,8 @@ fn worker_main(
                     fetch_s,
                     exec_s,
                     queue_wait_s,
-                    prefetch_hits: pf.hits,
-                    prefetch_misses: pf.misses,
+                    prefetch_hits: pf.hits - h0,
+                    prefetch_misses: pf.misses - m0,
                 };
                 if up.send(WorkerMsg::Done(Box::new(done))).is_err() {
                     break;
@@ -658,23 +800,20 @@ fn worker_main(
     });
 }
 
-/// Fetch, assemble and execute one task; returns (partial, fetch
-/// seconds, exec seconds).
-fn run_task(
+/// Fetch, assemble and execute one task under a key namespace; returns
+/// (partial, fetch seconds, exec seconds).
+pub(crate) fn run_task(
     p: &ModelParams,
     backend: &Backend,
     pf: &mut Prefetcher,
     spec: &TaskSpec,
+    ns: &str,
 ) -> Result<(TaskPartial, f64, f64)> {
     pf.pump()?;
     let fetch_t = Timer::start();
-    let kind = match spec.workload {
-        Workload::Eaglet => KIND_EAGLET,
-        _ => KIND_NETFLIX,
-    };
     let mut blocks = Vec::with_capacity(spec.task.sample_ids.len());
     for &id in &spec.task.sample_ids {
-        let key = BlockId { kind, sample: id }.key();
+        let key = block_key(ns, spec.workload, id);
         let bytes = pf.take(&key)?;
         blocks.push(Block::decode(&bytes)?);
     }
@@ -728,6 +867,89 @@ mod tests {
             queue_wait: summarize(&[0.0]),
         };
         assert_eq!(zero.dispatch_us_per_call(), 0.0);
+    }
+
+    #[test]
+    fn block_keys_are_namespace_disjoint() {
+        let a = block_key("", Workload::Eaglet, 7);
+        let b = block_key(&crate::dfs::job_ns(1), Workload::Eaglet, 7);
+        let c = block_key(&crate::dfs::job_ns(2), Workload::Eaglet, 7);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert!(b.ends_with(&a), "namespacing must only prefix: {b} vs {a}");
+    }
+
+    #[test]
+    fn job_ctx_collects_and_finishes() {
+        // Drive a JobCtx by hand — the same motions the serve
+        // dispatcher makes — and check the reduce gate.
+        let backend = Backend::native(ModelParams::default());
+        let params = ModelParams::default();
+        let ds = crate::workloads::build_small(Workload::Eaglet, &params, 6);
+        let dfs = Dfs::new(2, 1, LatencyModel::none());
+        let (samples, bytes, keys) = stage_dataset(ds.as_ref(), &dfs, "t/");
+        assert_eq!(samples, 6);
+        assert!(keys.iter().all(|k| k.starts_with("t/")));
+        let specs: Vec<TaskSpec> =
+            crate::kneepoint::pack(ds.metas(), TaskSizing::Tiniest)
+                .into_iter()
+                .map(|t| TaskSpec::new(t, Workload::Eaglet, 1))
+                .collect();
+        let mut ctx = JobCtx::new(
+            specs,
+            dfs.clone(),
+            ExecConfig { adaptive_rf: false, ..Default::default() },
+            1,
+            samples,
+            bytes,
+            0.0,
+        )
+        .unwrap();
+        let mut pf = Prefetcher::new(dfs, 4);
+        while let Some(spec) = ctx.next(0) {
+            let (partial, fetch_s, exec_s) =
+                run_task(&params, &backend, &mut pf, &spec, "t/").unwrap();
+            assert!(!ctx.is_complete());
+            ctx.on_done(TaskDone {
+                worker: 0,
+                seq: spec.task.seq,
+                partial,
+                fetch_s,
+                exec_s,
+                queue_wait_s: 0.0,
+                prefetch_hits: 0,
+                prefetch_misses: 0,
+            });
+        }
+        assert!(ctx.is_complete());
+        let fin = ctx.finish(&backend).unwrap();
+        assert_eq!(fin.report.tasks, 6);
+        assert!(matches!(fin.output, JobOutput::Eaglet { .. }));
+    }
+
+    #[test]
+    fn unfinished_job_refuses_to_reduce() {
+        let params = ModelParams::default();
+        let ds = crate::workloads::build_small(Workload::Eaglet, &params, 3);
+        let dfs = Dfs::new(1, 1, LatencyModel::none());
+        let (samples, bytes, _) = stage_dataset(ds.as_ref(), &dfs, "");
+        let specs: Vec<TaskSpec> =
+            crate::kneepoint::pack(ds.metas(), TaskSizing::Tiniest)
+                .into_iter()
+                .map(|t| TaskSpec::new(t, Workload::Eaglet, 1))
+                .collect();
+        let ctx = JobCtx::new(
+            specs,
+            dfs,
+            ExecConfig::default(),
+            1,
+            samples,
+            bytes,
+            0.0,
+        )
+        .unwrap();
+        let backend = Backend::native(params);
+        assert!(ctx.finish(&backend).is_err());
     }
 
     // End-to-end cluster runs (both workloads, oracle agreement,

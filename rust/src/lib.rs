@@ -41,6 +41,7 @@ pub mod net;
 pub mod platforms;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod slo;
 pub mod util;

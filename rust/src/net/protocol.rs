@@ -84,6 +84,24 @@ impl<'a> Cursor<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    /// Guard a declared element count against the bytes actually left:
+    /// every element needs ≥ `elem_bytes`, so a lying count from a
+    /// malformed frame fails here instead of sizing a huge allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.remaining() {
+            return Err(Error::Protocol(format!(
+                "count {n} exceeds {} remaining frame bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
     fn done(&self) -> Result<()> {
         if self.off != self.buf.len() {
             return Err(Error::Protocol(format!(
@@ -159,8 +177,13 @@ impl Message {
                 let seq = c.u32()?;
                 let workload = workload_from(c.u8()?)?;
                 let seed = c.u64()?;
-                let n = c.u32()? as usize;
-                let mut blocks = Vec::with_capacity(n);
+                // each block carries at least its u32 length prefix
+                let n = c.count(4)?;
+                // a decoded Block outweighs its 4-byte wire floor
+                // ~12x, so cap the pre-reservation too: a lying count
+                // should cost a few pages, not gigabytes, before the
+                // first truncated block errors out
+                let mut blocks = Vec::with_capacity(n.min(4096));
                 for _ in 0..n {
                     let len = c.u32()? as usize;
                     blocks.push(Block::decode(c.take(len)?)?);
@@ -171,7 +194,7 @@ impl Message {
                 let seq = c.u32()?;
                 let netflix = c.u8()? != 0;
                 let weight = c.f32()?;
-                let n = c.u32()? as usize;
+                let n = c.count(4)?;
                 let mut values = Vec::with_capacity(n);
                 for _ in 0..n {
                     values.push(c.f32()?);
@@ -280,6 +303,65 @@ mod tests {
         let mut buf = Vec::new();
         buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         assert!(Message::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn lying_counts_error_before_allocating() {
+        // Partial frame claiming u32::MAX values with a 4-byte body:
+        // must be a Protocol error, not a multi-GB Vec::with_capacity.
+        let mut payload = vec![3u8]; // TAG_PARTIAL
+        payload.extend_from_slice(&9u32.to_le_bytes()); // seq
+        payload.push(0); // netflix=false
+        payload.extend_from_slice(&1.0f32.to_le_bytes()); // weight
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
+        payload.extend_from_slice(&[0u8; 4]);
+        assert!(Message::decode(&payload).is_err());
+        // Task frame with a huge block count
+        let mut payload = vec![2u8]; // TAG_TASK
+        payload.extend_from_slice(&1u32.to_le_bytes()); // seq
+        payload.push(0); // workload tag
+        payload.extend_from_slice(&7u64.to_le_bytes()); // seed
+        payload.extend_from_slice(&0x00FF_FFFFu32.to_le_bytes());
+        assert!(Message::decode(&payload).is_err());
+    }
+
+    #[test]
+    fn garbage_payloads_never_panic() {
+        // Fuzz decode over random byte strings — errors are fine,
+        // panics and aborts are not.
+        let mut rng = Rng::new(0xFEED);
+        for _ in 0..2000 {
+            let len = rng.below(64) as usize;
+            let bytes: Vec<u8> =
+                (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = Message::decode(&bytes);
+        }
+        // and over mutated valid frames
+        let good = Message::Partial {
+            seq: 3,
+            weight: 1.5,
+            values: vec![0.5; 8],
+            netflix: true,
+        }
+        .encode();
+        for _ in 0..2000 {
+            let mut bad = good.clone();
+            let i = rng.below(bad.len() as u64) as usize;
+            bad[i] ^= 1 << rng.below(8);
+            let _ = Message::decode(&bad);
+        }
+    }
+
+    #[test]
+    fn truncated_header_is_an_error() {
+        // read_from with fewer than 4 length bytes
+        let two = [0u8, 1];
+        assert!(Message::read_from(&mut &two[..]).is_err());
+        // declared length longer than the stream
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]);
+        assert!(Message::read_from(&mut &buf[..]).is_err());
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! SLO-aware admission: what enters the service, and in what order.
+//!
+//! Subsample queries arrive as [`JobRequest`]s — workload, size, sizing
+//! policy, and optionally a deadline. Admission is two decisions:
+//!
+//! 1. **Feasibility** (at submit): the `slo` planner's simulated time
+//!    estimate for the request ([`crate::slo::estimate_job_s`]) is
+//!    compared against the deadline; an estimate that already exceeds
+//!    it is rejected immediately ([`crate::Error::Admission`]) instead
+//!    of being queued to fail. The estimate is a *model* figure — the
+//!    thesis-scale platform simulation, the same machinery behind
+//!    `bts plan` / Fig 13 — so it orders and gates consistently even
+//!    though local wall-clock differs.
+//! 2. **Order** (at promote): [`AdmissionPolicy::EdfWithRejection`]
+//!    pops the earliest absolute deadline first (deadline-less jobs
+//!    queue FIFO behind every deadlined one);
+//!    [`AdmissionPolicy::Fifo`] ignores deadlines entirely.
+
+use std::time::Instant;
+
+use crate::data::Workload;
+use crate::kneepoint::TaskSizing;
+
+/// Per-sample size the admission estimator assumes, matching the
+/// thesis-scale constants `sim::default_params` is calibrated with
+/// (§4.1.1: a bi-polar family ≈ 576 KB, a Netflix movie ≈ 118 KB).
+pub fn nominal_sample_bytes(workload: Workload) -> usize {
+    match workload {
+        Workload::Eaglet => 576 * 1024,
+        Workload::NetflixHi | Workload::NetflixLo => 118 * 1024,
+    }
+}
+
+/// Fault injected into a multiplexed job (recovery tests): the
+/// dispatcher poisons the task dispatched after `after_tasks` tasks of
+/// the matching attempt, and the worker reports it failed instead of
+/// running it. `on_attempt == 0` poisons every attempt (a persistent
+/// fault that exhausts the job's recovery budget).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InjectedFault {
+    pub on_attempt: u32,
+    pub after_tasks: u64,
+}
+
+impl InjectedFault {
+    /// Does this fault fire on `attempt`?
+    pub fn applies_to(&self, attempt: u32) -> bool {
+        self.on_attempt == 0 || self.on_attempt == attempt
+    }
+}
+
+/// One tenant's job: what to compute, how to split it, and how soon
+/// it is needed.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub workload: Workload,
+    /// Dataset size in samples (families / movies); the service builds
+    /// and stages the synthetic dataset itself, so a request is a few
+    /// words — not a data shipment.
+    pub samples: usize,
+    pub sizing: TaskSizing,
+    /// Job seed: per-task subsample indices derive from it, so the
+    /// same request replays bit-identically (solo or multiplexed).
+    pub seed: u64,
+    /// Relative deadline in seconds from submission; `None` = best
+    /// effort (FIFO behind every deadlined job under EDF).
+    pub deadline_s: Option<f64>,
+    /// Job-level recovery budget (attempts, ≥ 1).
+    pub max_attempts: u32,
+    pub fault: Option<InjectedFault>,
+}
+
+impl JobRequest {
+    pub fn new(workload: Workload, samples: usize) -> JobRequest {
+        JobRequest {
+            workload,
+            samples,
+            sizing: TaskSizing::Kneepoint(64 * 1024),
+            seed: 0xB75,
+            deadline_s: None,
+            max_attempts: 3,
+            fault: None,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> JobRequest {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_sizing(mut self, sizing: TaskSizing) -> JobRequest {
+        self.sizing = sizing;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline_s: f64) -> JobRequest {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Estimator input: nominal bytes this request's dataset stands
+    /// for at thesis scale.
+    pub fn nominal_bytes(&self) -> usize {
+        self.samples * nominal_sample_bytes(self.workload)
+    }
+}
+
+/// Queue-ordering policy for admitted jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Earliest absolute deadline first; deadline-less jobs FIFO
+    /// behind all deadlined ones; infeasible deadlines rejected at
+    /// submit. The default.
+    EdfWithRejection,
+    /// Arrival order, deadlines ignored (no rejection).
+    Fifo,
+}
+
+/// A job waiting for a map-slot share, with everything the dispatcher
+/// needs to order it.
+#[derive(Debug)]
+pub(crate) struct QueuedJob<T> {
+    pub(crate) id: u64,
+    pub(crate) submitted: Instant,
+    /// Absolute deadline (submission + relative deadline).
+    pub(crate) deadline_at: Option<Instant>,
+    pub(crate) payload: T,
+}
+
+/// Pick the index of the next job to promote under `policy`.
+/// EDF: earliest `deadline_at`, `None` last, ties broken by id
+/// (arrival order). FIFO: smallest id.
+pub(crate) fn pop_index<T>(
+    queue: &[QueuedJob<T>],
+    policy: AdmissionPolicy,
+) -> Option<usize> {
+    if queue.is_empty() {
+        return None;
+    }
+    let idx = match policy {
+        AdmissionPolicy::Fifo => queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| q.id)
+            .map(|(i, _)| i)?,
+        AdmissionPolicy::EdfWithRejection => queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| {
+                (q.deadline_at.is_none(), q.deadline_at, q.id)
+            })
+            .map(|(i, _)| i)?,
+    };
+    Some(idx)
+}
+
+/// The feasibility gate: can `estimate_s` of simulated work fit the
+/// deadline at all? (`None` deadline is always feasible.)
+pub fn feasible(estimate_s: f64, deadline_s: Option<f64>) -> bool {
+    deadline_s.map_or(true, |d| estimate_s <= d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, deadline_s: Option<f64>) -> QueuedJob<()> {
+        let now = Instant::now();
+        QueuedJob {
+            id,
+            submitted: now,
+            deadline_at: deadline_s
+                .map(|d| now + std::time::Duration::from_secs_f64(d)),
+            payload: (),
+        }
+    }
+
+    #[test]
+    fn edf_pops_earliest_deadline_first() {
+        let queue =
+            vec![q(0, None), q(1, Some(500.0)), q(2, Some(100.0))];
+        let i = pop_index(&queue, AdmissionPolicy::EdfWithRejection).unwrap();
+        assert_eq!(queue[i].id, 2);
+        // deadline-less jobs only go when no deadlined job waits
+        let queue = vec![q(0, None), q(1, Some(1e6))];
+        let i = pop_index(&queue, AdmissionPolicy::EdfWithRejection).unwrap();
+        assert_eq!(queue[i].id, 1);
+    }
+
+    #[test]
+    fn edf_breaks_ties_and_none_by_arrival() {
+        let queue = vec![q(3, None), q(1, None), q(2, None)];
+        let i = pop_index(&queue, AdmissionPolicy::EdfWithRejection).unwrap();
+        assert_eq!(queue[i].id, 1);
+    }
+
+    #[test]
+    fn fifo_ignores_deadlines() {
+        let queue = vec![q(5, Some(1.0)), q(4, None)];
+        let i = pop_index(&queue, AdmissionPolicy::Fifo).unwrap();
+        assert_eq!(queue[i].id, 4);
+        assert!(pop_index::<()>(&[], AdmissionPolicy::Fifo).is_none());
+    }
+
+    #[test]
+    fn feasibility_gate() {
+        assert!(feasible(10.0, None));
+        assert!(feasible(10.0, Some(10.0)));
+        assert!(!feasible(10.0, Some(9.99)));
+    }
+
+    #[test]
+    fn fault_attempt_matching() {
+        let once = InjectedFault { on_attempt: 2, after_tasks: 1 };
+        assert!(!once.applies_to(1));
+        assert!(once.applies_to(2));
+        assert!(!once.applies_to(3));
+        let every = InjectedFault { on_attempt: 0, after_tasks: 0 };
+        assert!(every.applies_to(1) && every.applies_to(7));
+    }
+
+    #[test]
+    fn request_defaults_are_sane() {
+        let r = JobRequest::new(Workload::Eaglet, 40)
+            .with_seed(7)
+            .with_deadline(60.0);
+        assert_eq!(r.seed, 7);
+        assert_eq!(r.deadline_s, Some(60.0));
+        assert!(r.max_attempts >= 1);
+        assert_eq!(r.nominal_bytes(), 40 * 576 * 1024);
+    }
+}

@@ -1,0 +1,167 @@
+//! Closed-loop sustained-load generator: Poisson arrivals over a mixed
+//! EAGLET/Netflix job set, driven to completion against a
+//! [`JobService`]. `bts serve`, `examples/serve_load.rs` and
+//! `benches/serve_throughput.rs` all run this one harness so the
+//! numbers they report are the same experiment.
+//!
+//! The mix deliberately includes a slice of deadline-infeasible
+//! requests (`infeasible_every`): a service whose admission control
+//! never fires is a service whose admission control is untested.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::admission::JobRequest;
+use super::pool::PoolConfig;
+use super::service::{JobResult, JobService, ServeConfig, ServeReport};
+use crate::data::Workload;
+use crate::error::{Error, Result};
+use crate::exec::Backend;
+use crate::kneepoint::TaskSizing;
+use crate::util::rng::Rng;
+
+/// Shape of one sustained-load session.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Total submissions (admitted + rejected).
+    pub jobs: usize,
+    pub workers: usize,
+    /// Jobs multiplexed concurrently.
+    pub max_active: usize,
+    /// Poisson arrival rate, jobs per second (mean inter-arrival is
+    /// `1/rate`; `f64::INFINITY` submits back to back).
+    pub arrival_rate_per_s: f64,
+    pub seed: u64,
+    /// Baseline dataset size; each job draws samples in
+    /// `[base_samples, 1.5 * base_samples)`.
+    pub base_samples: usize,
+    /// Every Nth job asks for a deadline no configuration can meet and
+    /// must be rejected at admission. 0 disables.
+    pub infeasible_every: usize,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            jobs: 20,
+            workers: 4,
+            max_active: 4,
+            arrival_rate_per_s: 25.0,
+            seed: 0xB75,
+            base_samples: 40,
+            infeasible_every: 5,
+        }
+    }
+}
+
+/// What a finished load session hands back. Admission rejections are
+/// counted once, in `report.jobs_rejected`.
+pub struct LoadOutcome {
+    pub report: ServeReport,
+    pub results: Vec<JobResult>,
+}
+
+/// The `i`-th request of the mixed job set for `cfg` (deterministic in
+/// `(cfg.seed, i)` — callers replay any job solo from its index).
+pub fn mixed_request(cfg: &LoadConfig, i: usize) -> JobRequest {
+    let mut rng = Rng::new(cfg.seed ^ (i as u64).wrapping_mul(0x9E37));
+    let workload = match i % 3 {
+        0 => Workload::Eaglet,
+        1 => Workload::NetflixHi,
+        _ => Workload::NetflixLo,
+    };
+    let samples = cfg.base_samples
+        + rng.below((cfg.base_samples as u64 / 2).max(1)) as usize;
+    let infeasible = cfg.infeasible_every > 0
+        && (i + 1) % cfg.infeasible_every == 0;
+    let deadline_s = if infeasible {
+        // No platform configuration simulates below a millisecond.
+        Some(1e-3)
+    } else if i % 2 == 0 {
+        // Generous but real deadlines exercise the EDF path.
+        Some(3600.0 + (i as f64) * 60.0)
+    } else {
+        None
+    };
+    JobRequest {
+        workload,
+        samples,
+        sizing: TaskSizing::Kneepoint(32 * 1024),
+        seed: cfg.seed ^ ((i as u64) << 8),
+        deadline_s,
+        max_attempts: 3,
+        fault: None,
+    }
+}
+
+/// Run the session: start a service, submit `cfg.jobs` requests with
+/// exponential inter-arrival gaps, wait for every admitted job, drain.
+pub fn run_load(
+    backend: Arc<Backend>,
+    cfg: &LoadConfig,
+) -> Result<LoadOutcome> {
+    let svc = JobService::start(
+        backend,
+        ServeConfig {
+            pool: PoolConfig { workers: cfg.workers, ..Default::default() },
+            max_active: cfg.max_active,
+            ..Default::default()
+        },
+    )?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut handles = Vec::new();
+    for i in 0..cfg.jobs {
+        let req = mixed_request(cfg, i);
+        match svc.submit(req) {
+            Ok(h) => handles.push(h),
+            // expected for the infeasible slice; the service counts it
+            Err(Error::Admission(_)) => {}
+            Err(e) => return Err(e),
+        }
+        if cfg.arrival_rate_per_s.is_finite()
+            && cfg.arrival_rate_per_s > 0.0
+            && i + 1 < cfg.jobs
+        {
+            let gap = rng.exp(cfg.arrival_rate_per_s);
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.25)));
+        }
+    }
+    let results: Vec<JobResult> = handles
+        .into_iter()
+        .map(|h| h.wait())
+        .collect::<Result<_>>()?;
+    let report = svc.shutdown()?;
+    Ok(LoadOutcome { report, results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_requests_are_deterministic_and_mixed() {
+        let cfg = LoadConfig::default();
+        let a: Vec<JobRequest> =
+            (0..12).map(|i| mixed_request(&cfg, i)).collect();
+        let b: Vec<JobRequest> =
+            (0..12).map(|i| mixed_request(&cfg, i)).collect();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.workload, y.workload);
+            assert_eq!(x.samples, y.samples);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.deadline_s, y.deadline_s);
+        }
+        // all three workloads appear
+        for w in
+            [Workload::Eaglet, Workload::NetflixHi, Workload::NetflixLo]
+        {
+            assert!(a.iter().any(|r| r.workload == w));
+        }
+        // the infeasible slice exists and is actually infeasible-tight
+        let infeasible: Vec<&JobRequest> = a
+            .iter()
+            .filter(|r| r.deadline_s.is_some_and(|d| d < 0.01))
+            .collect();
+        assert!(!infeasible.is_empty());
+    }
+}

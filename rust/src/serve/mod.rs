@@ -1,0 +1,40 @@
+//! The serve layer: a long-lived multi-tenant job service over the
+//! exec spine (DESIGN.md §9).
+//!
+//! The thesis's premise is *interactive* subsampling — tiny tasks so
+//! statistics come back in fractions of a second — yet a one-shot
+//! `run_cluster` pays worker spawn, store staging, and join on every
+//! job: exactly the startup overhead Figs 5–6 say must stay small.
+//! This subsystem keeps the machinery warm and shares it:
+//!
+//! * [`pool`] — a persistent worker pool: map slots, prefetchers, and
+//!   the replicated store outlive any job; tasks carry their job id
+//!   and key namespace.
+//! * [`admission`] — [`JobRequest`]s enter through an SLO-aware gate:
+//!   the `slo` planner's time estimate rejects infeasible deadlines at
+//!   the door, and the queue orders by earliest deadline first
+//!   (deadline-less jobs ride FIFO behind).
+//! * [`service`] — the dispatcher multiplexes every in-flight job's
+//!   tasks across the shared workers while each job keeps its own
+//!   scheduler, seeds, seq-ordered reduce, and recovery — so a
+//!   multiplexed job's statistic is bit-identical to its solo run, and
+//!   one tenant's failure restarts only that tenant's job.
+//! * [`load`] — the sustained-load harness behind `bts serve`,
+//!   `examples/serve_load.rs`, and `benches/serve_throughput.rs`
+//!   (Poisson arrivals, mixed EAGLET/Netflix set, deliberate
+//!   infeasible slice), writing `results/BENCH_serve.json`.
+
+pub mod admission;
+pub mod load;
+pub mod pool;
+pub mod service;
+
+pub use admission::{
+    feasible, nominal_sample_bytes, AdmissionPolicy, InjectedFault,
+    JobRequest,
+};
+pub use load::{mixed_request, run_load, LoadConfig, LoadOutcome};
+pub use pool::PoolConfig;
+pub use service::{
+    JobHandle, JobResult, JobService, ServeConfig, ServeReport,
+};

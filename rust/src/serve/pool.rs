@@ -1,0 +1,358 @@
+//! The persistent worker pool: map slots, prefetchers, and the shared
+//! replicated store stay warm across jobs.
+//!
+//! This is the half of the thesis's "interactive subsampling" promise
+//! the one-shot executor could not keep: `exec::run_cluster` pays
+//! spawn/stage/join on every job, exactly the startup overhead Figs
+//! 5–6 say must stay small. Pool workers are spawned once, serve tasks
+//! from *any* job (each task carries its job id, attempt, and key
+//! namespace), and exit only at service shutdown — the pool's
+//! `spawned` count never grows past `workers`, which the serve tests
+//! assert as the warm-pool invariant.
+//!
+//! Failure semantics differ from the solo executor on purpose: a task
+//! error is reported as [`PoolUp::TaskFailed`] and the worker *keeps
+//! running* — one tenant's bad job must not take map slots away from
+//! the others. The dispatcher aborts and restarts just that job
+//! (job-level recovery, scoped to the tenant).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use crate::data::ModelParams;
+use crate::dfs::{job_ns, Dfs, LatencyModel, Prefetcher};
+use crate::error::{Error, Result};
+use crate::exec::cluster::{enqueue_keys, run_task, TaskDone};
+use crate::exec::Backend;
+use crate::metrics::Timer;
+use crate::scheduler::TaskSpec;
+
+/// Shape of the persistent pool backing a [`super::JobService`].
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker threads (map slots shared by every in-flight job).
+    pub workers: usize,
+    /// Data nodes backing the shared replicated store.
+    pub data_nodes: usize,
+    /// Replication factor for staged blocks (fixed for the pool's
+    /// lifetime; the per-job adaptive controller is a solo-run feature).
+    pub replication_factor: usize,
+    pub latency: LatencyModel,
+    /// Upper bound on each worker's prefetch depth k.
+    pub prefetch_k: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: 4,
+            data_nodes: 4,
+            replication_factor: 2,
+            latency: LatencyModel::none(),
+            prefetch_k: 8,
+        }
+    }
+}
+
+/// One task routed through the pool: a [`TaskSpec`] tagged with its
+/// tenant. `ns` prefixes every block key; `attempt` lets the
+/// dispatcher discard results that straggle in after a job restart.
+pub(crate) struct PoolTask {
+    pub(crate) job: u64,
+    pub(crate) attempt: u32,
+    pub(crate) ns: Arc<str>,
+    pub(crate) spec: TaskSpec,
+    /// Injected fault: the worker reports failure instead of running
+    /// the task (recovery tests; modelled after `FailurePlan`).
+    pub(crate) poison: bool,
+}
+
+/// Dispatcher → worker messages.
+pub(crate) enum PoolMsg {
+    Task(Box<PoolTask>),
+    /// Drop every queued task of `job` with attempt ≤ `upto_attempt`
+    /// and purge the job's namespace from the prefetcher. The worker
+    /// acknowledges with [`PoolUp::Aborted`] so the dispatcher can
+    /// reconcile its in-flight accounting.
+    Abort { job: u64, upto_attempt: u32 },
+    Shutdown,
+}
+
+/// Worker → dispatcher messages.
+pub(crate) enum PoolUp {
+    Done { job: u64, attempt: u32, done: TaskDone },
+    TaskFailed { job: u64, attempt: u32, worker: usize, error: Error },
+    Aborted { worker: usize, dropped: u64 },
+    Exited { worker: usize, executed: u64 },
+}
+
+/// A spawned-once pool of workers over one shared store. `spawned`
+/// equals `workers` for the pool's whole life — there is no respawn
+/// path — and the serve report surfaces both so tests can assert the
+/// "zero respawns between jobs" warm-pool invariant.
+pub(crate) struct WorkerPool {
+    pub(crate) dfs: Arc<Dfs>,
+    pub(crate) workers: usize,
+    pub(crate) spawned: usize,
+    txs: Vec<mpsc::Sender<PoolMsg>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn the pool. `up` is the dispatcher's channel; every worker
+    /// reports completions, failures and its exit through it.
+    pub(crate) fn new(
+        cfg: &PoolConfig,
+        params: ModelParams,
+        backend: Arc<Backend>,
+        up: mpsc::Sender<PoolUp>,
+    ) -> Result<WorkerPool> {
+        if cfg.workers == 0 {
+            return Err(Error::Config("pool needs at least one worker".into()));
+        }
+        let dfs = Dfs::new(
+            cfg.data_nodes.max(1),
+            cfg.replication_factor.max(1),
+            cfg.latency.clone(),
+        );
+        let mut txs = Vec::with_capacity(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        let mut spawned = 0;
+        for w in 0..cfg.workers {
+            let (tx, rx) = mpsc::channel::<PoolMsg>();
+            txs.push(tx);
+            let prefetch_k = cfg.prefetch_k;
+            let params = params.clone();
+            let backend = backend.clone();
+            let dfs = dfs.clone();
+            let up = up.clone();
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("bts-serve-worker-{w}"))
+                    .spawn(move || {
+                        pool_worker_main(
+                            w, prefetch_k, params, backend, dfs, rx, up,
+                        )
+                    })
+                    .map_err(|e| {
+                        Error::Scheduler(format!("spawn pool worker {w}: {e}"))
+                    })?,
+            );
+            spawned += 1;
+        }
+        Ok(WorkerPool { dfs, workers: cfg.workers, spawned, txs, handles })
+    }
+
+    /// Push a message to one worker. `false` means the worker's channel
+    /// is gone (it exited — only possible after shutdown began).
+    pub(crate) fn send(&self, worker: usize, msg: PoolMsg) -> bool {
+        self.txs[worker].send(msg).is_ok()
+    }
+
+    /// Broadcast a job abort to every worker.
+    pub(crate) fn abort(&self, job: u64, upto_attempt: u32) {
+        for tx in &self.txs {
+            let _ = tx.send(PoolMsg::Abort { job, upto_attempt });
+        }
+    }
+
+    /// Tell every worker to exit and join them. The caller drains the
+    /// up-channel for [`PoolUp::Exited`] accounting.
+    pub(crate) fn shutdown(self) {
+        for tx in &self.txs {
+            let _ = tx.send(PoolMsg::Shutdown);
+        }
+        drop(self.txs);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One persistent pool worker: the same drain → wait → execute loop as
+/// the solo executor's workers, but job-tagged, namespace-aware, and
+/// immortal until `Shutdown` — task failures are reported and survived.
+fn pool_worker_main(
+    worker: usize,
+    prefetch_k: usize,
+    params: ModelParams,
+    backend: Arc<Backend>,
+    dfs: Arc<Dfs>,
+    rx: mpsc::Receiver<PoolMsg>,
+    up: mpsc::Sender<PoolUp>,
+) {
+    let mut pf = Prefetcher::new(dfs, prefetch_k);
+    let mut queue: VecDeque<PoolTask> = VecDeque::new();
+    let mut executed = 0u64;
+    let handle_abort =
+        |queue: &mut VecDeque<PoolTask>,
+         pf: &mut Prefetcher,
+         job: u64,
+         upto: u32| {
+            let before = queue.len();
+            queue.retain(|t| !(t.job == job && t.attempt <= upto));
+            let dropped = (before - queue.len()) as u64;
+            pf.purge_prefix(&job_ns(job));
+            let _ = up.send(PoolUp::Aborted { worker, dropped });
+        };
+    'outer: loop {
+        // Non-blocking drain: enqueue everything the dispatcher sent
+        // (feeding the prefetcher lookahead across jobs).
+        loop {
+            match rx.try_recv() {
+                Ok(PoolMsg::Task(t)) => {
+                    enqueue_keys(&mut pf, &t.spec, &t.ns);
+                    queue.push_back(*t);
+                }
+                Ok(PoolMsg::Abort { job, upto_attempt }) => {
+                    handle_abort(&mut queue, &mut pf, job, upto_attempt);
+                }
+                Ok(PoolMsg::Shutdown) => break 'outer,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    if queue.is_empty() {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        // Idle: block for the next instruction, measuring queue wait.
+        let mut queue_wait_s = 0.0;
+        if queue.is_empty() {
+            let wait_t = Timer::start();
+            match rx.recv() {
+                Ok(PoolMsg::Task(t)) => {
+                    queue_wait_s = wait_t.secs();
+                    enqueue_keys(&mut pf, &t.spec, &t.ns);
+                    queue.push_back(*t);
+                }
+                Ok(PoolMsg::Abort { job, upto_attempt }) => {
+                    handle_abort(&mut queue, &mut pf, job, upto_attempt);
+                    continue;
+                }
+                Ok(PoolMsg::Shutdown) | Err(_) => break,
+            }
+        }
+        let Some(task) = queue.pop_front() else { continue };
+        if task.poison {
+            let _ = up.send(PoolUp::TaskFailed {
+                job: task.job,
+                attempt: task.attempt,
+                worker,
+                error: Error::Scheduler(format!(
+                    "injected task fault in job {} (attempt {}, task {})",
+                    task.job, task.attempt, task.spec.task.seq
+                )),
+            });
+            continue;
+        }
+        let (h0, m0) = (pf.hits, pf.misses);
+        match run_task(&params, &backend, &mut pf, &task.spec, &task.ns) {
+            Ok((partial, fetch_s, exec_s)) => {
+                executed += 1;
+                let done = TaskDone {
+                    worker,
+                    seq: task.spec.task.seq,
+                    partial,
+                    fetch_s,
+                    exec_s,
+                    queue_wait_s,
+                    prefetch_hits: pf.hits - h0,
+                    prefetch_misses: pf.misses - m0,
+                };
+                let sent = up.send(PoolUp::Done {
+                    job: task.job,
+                    attempt: task.attempt,
+                    done,
+                });
+                if sent.is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                let _ = up.send(PoolUp::TaskFailed {
+                    job: task.job,
+                    attempt: task.attempt,
+                    worker,
+                    error: e,
+                });
+            }
+        }
+    }
+    let _ = up.send(PoolUp::Exited { worker, executed });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Workload;
+    use crate::kneepoint::{pack, TaskSizing};
+
+    #[test]
+    fn zero_worker_pool_is_a_config_error() {
+        let (tx, _rx) = mpsc::channel();
+        let backend = Arc::new(Backend::native(ModelParams::default()));
+        let cfg = PoolConfig { workers: 0, ..Default::default() };
+        assert!(
+            WorkerPool::new(&cfg, ModelParams::default(), backend, tx)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn pool_executes_namespaced_tasks_and_survives_poison() {
+        let params = ModelParams::default();
+        let backend = Arc::new(Backend::native(params.clone()));
+        let (tx, rx) = mpsc::channel();
+        let pool = WorkerPool::new(
+            &PoolConfig { workers: 1, ..Default::default() },
+            params.clone(),
+            backend,
+            tx,
+        )
+        .unwrap();
+        let ds = crate::workloads::build_small(Workload::Eaglet, &params, 3);
+        let ns: Arc<str> = job_ns(9).into();
+        crate::exec::cluster::stage_dataset(ds.as_ref(), &pool.dfs, &ns);
+        let specs: Vec<TaskSpec> = pack(ds.metas(), TaskSizing::Tiniest)
+            .into_iter()
+            .map(|t| TaskSpec::new(t, Workload::Eaglet, 5))
+            .collect();
+        // poison the first task, run the rest
+        for (i, spec) in specs.into_iter().enumerate() {
+            pool.send(
+                0,
+                PoolMsg::Task(Box::new(PoolTask {
+                    job: 9,
+                    attempt: 1,
+                    ns: ns.clone(),
+                    spec,
+                    poison: i == 0,
+                })),
+            );
+        }
+        let mut done = 0;
+        let mut failed = 0;
+        for _ in 0..3 {
+            match rx.recv().unwrap() {
+                PoolUp::Done { job: 9, attempt: 1, .. } => done += 1,
+                PoolUp::TaskFailed { job: 9, attempt: 1, .. } => failed += 1,
+                _ => panic!("unexpected pool message"),
+            }
+        }
+        assert_eq!((done, failed), (2, 1), "poison must not kill the worker");
+        assert_eq!(pool.spawned, 1);
+        pool.shutdown();
+        // Exited arrives with the executed count (poisoned task excluded).
+        let exited = loop {
+            match rx.recv().unwrap() {
+                PoolUp::Exited { executed, .. } => break executed,
+                _ => continue,
+            }
+        };
+        assert_eq!(exited, 2);
+    }
+}

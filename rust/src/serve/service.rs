@@ -1,0 +1,878 @@
+//! The long-lived job service: admission, multiplexed dispatch, and
+//! per-job completion over one persistent pool.
+//!
+//! One dispatcher thread owns every in-flight job's [`JobCtx`] (the
+//! per-job half of the `exec` leader) and interleaves their
+//! [`crate::scheduler::TaskSpec`]s across the shared workers,
+//! round-robin per map slot. Each job keeps its own
+//! `TwoStepScheduler`, its own seed-derived task indices, and its own
+//! seq-ordered reduce — which is the whole determinism argument: the
+//! set of (seed, seq) pairs a job executes, and the order its partials
+//! reduce in, are identical whether the job runs alone through
+//! `run_cluster` or among twenty tenants here. Only *when* tasks run
+//! changes; nothing about *what* they compute does.
+//!
+//! Failure isolation follows the same line: a failed task aborts and
+//! restarts *its* job (same seed ⇒ same statistic), while every other
+//! job's scheduler, partials, and staged blocks are untouched and the
+//! pool keeps its workers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::admission::{
+    feasible, pop_index, AdmissionPolicy, InjectedFault, JobRequest,
+    QueuedJob,
+};
+use super::pool::{PoolConfig, PoolMsg, PoolTask, PoolUp, WorkerPool};
+use crate::coordinator::JobOutput;
+use crate::data::ModelParams;
+use crate::dfs::job_ns;
+use crate::error::{Error, Result};
+use crate::exec::cluster::{stage_dataset, JobCtx};
+use crate::exec::{Backend, ExecConfig};
+use crate::kneepoint::pack;
+use crate::metrics::{JobReport, Timer};
+use crate::runtime::Exec as _;
+use crate::scheduler::{SchedConfig, TaskSpec};
+use crate::slo::estimate_job_s;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::{summarize, Summary};
+use crate::workloads::{build_small, default_compute_s_per_mib};
+
+/// Service shape: the pool plus multiplexing and admission knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub pool: PoolConfig,
+    /// Jobs multiplexed at once; further admitted jobs queue.
+    pub max_active: usize,
+    /// Dispatch window per worker, shared across jobs (the lookahead
+    /// that keeps prefetchers pumping).
+    pub inflight: usize,
+    /// Per-job scheduler configuration.
+    pub sched: SchedConfig,
+    pub policy: AdmissionPolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            pool: PoolConfig::default(),
+            max_active: 4,
+            inflight: 4,
+            sched: SchedConfig::default(),
+            policy: AdmissionPolicy::EdfWithRejection,
+        }
+    }
+}
+
+/// One finished job, as the submitting tenant sees it.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub output: JobOutput,
+    pub report: JobReport,
+    /// Submission → promotion (admission queue wait).
+    pub queue_wait_s: f64,
+    /// Submission → first partial collected (interactivity signal).
+    pub ttfp_s: f64,
+    /// Submission → reduced statistic in hand.
+    pub e2e_s: f64,
+}
+
+impl JobResult {
+    /// One aligned per-job table row — shared by `bts serve` and the
+    /// CI smoke example so the two surfaces can't drift.
+    pub fn render_row(&self) -> String {
+        format!(
+            "job {:3} [{:10}] {:3} tasks  queue {:7.1}ms  \
+             ttfp {:7.1}ms  e2e {:7.1}ms  restarts {}",
+            self.id,
+            self.report.workload,
+            self.report.tasks,
+            self.queue_wait_s * 1e3,
+            self.ttfp_s * 1e3,
+            self.e2e_s * 1e3,
+            self.report.restarts,
+        )
+    }
+}
+
+/// Handle to an admitted job; `wait` blocks until the service reduces
+/// it (or gives up on it).
+pub struct JobHandle {
+    pub id: u64,
+    rx: mpsc::Receiver<Result<JobResult>>,
+}
+
+impl JobHandle {
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx.recv().map_err(|_| {
+            Error::Scheduler("service dropped the job".into())
+        })?
+    }
+}
+
+/// Service-level metrics over a full serve session, in the same flat
+/// JSON record family as `ExecResult::metrics_json`.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub jobs_admitted: usize,
+    pub jobs_completed: usize,
+    pub jobs_failed: usize,
+    /// Rejections happen on the submitter's thread, before the
+    /// dispatcher ever sees the job; `JobService::shutdown` fills this.
+    pub jobs_rejected: u64,
+    pub tasks_total: u64,
+    /// First submission → last completion (service lifetime when no
+    /// job completed).
+    pub wall_s: f64,
+    pub queue_wait: Summary,
+    pub ttfp: Summary,
+    pub e2e: Summary,
+    pub workers: usize,
+    /// Worker threads ever spawned; equal to `workers` iff the pool
+    /// stayed warm (no respawns between jobs — there is no respawn
+    /// path, and this stat proves it held).
+    pub workers_spawned: usize,
+    /// Tasks executed per worker over the whole session.
+    pub worker_executed: Vec<u64>,
+    pub dfs_bytes_served: u64,
+    /// Job ids in completion order (EDF tests read this).
+    pub completed_order: Vec<u64>,
+}
+
+impl ServeReport {
+    pub fn worker_respawns(&self) -> usize {
+        self.workers_spawned.saturating_sub(self.workers)
+    }
+
+    /// Sustained service throughput in tasks per second.
+    pub fn tasks_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.tasks_total as f64 / self.wall_s
+        }
+    }
+
+    /// Flat JSON record for `results/BENCH_serve.json`.
+    pub fn metrics_json(&self) -> Json {
+        obj(vec![
+            ("platform", s("bts-serve")),
+            ("jobs_admitted", num(self.jobs_admitted as f64)),
+            ("jobs_completed", num(self.jobs_completed as f64)),
+            ("jobs_failed", num(self.jobs_failed as f64)),
+            ("jobs_rejected", num(self.jobs_rejected as f64)),
+            ("tasks_total", num(self.tasks_total as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("tasks_per_s", num(self.tasks_per_s())),
+            ("queue_wait_p50_s", num(self.queue_wait.p50)),
+            ("queue_wait_p95_s", num(self.queue_wait.p95)),
+            ("ttfp_p50_s", num(self.ttfp.p50)),
+            ("ttfp_p95_s", num(self.ttfp.p95)),
+            ("e2e_p50_s", num(self.e2e.p50)),
+            ("e2e_p95_s", num(self.e2e.p95)),
+            ("e2e_mean_s", num(self.e2e.mean)),
+            ("workers", num(self.workers as f64)),
+            ("workers_spawned", num(self.workers_spawned as f64)),
+            ("worker_respawns", num(self.worker_respawns() as f64)),
+            ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "serve[{} workers, {} spawned] {} jobs in {:.2}s \
+             ({} failed, {} rejected); {} tasks => {:.1} tasks/s; \
+             queue wait p50 {:.1}ms p95 {:.1}ms; ttfp p50 {:.1}ms; \
+             e2e p50 {:.1}ms p95 {:.1}ms; dfs served {:.2} MB",
+            self.workers,
+            self.workers_spawned,
+            self.jobs_completed,
+            self.wall_s,
+            self.jobs_failed,
+            self.jobs_rejected,
+            self.tasks_total,
+            self.tasks_per_s(),
+            self.queue_wait.p50 * 1e3,
+            self.queue_wait.p95 * 1e3,
+            self.ttfp.p50 * 1e3,
+            self.e2e.p50 * 1e3,
+            self.e2e.p95 * 1e3,
+            self.dfs_bytes_served as f64 / 1048576.0,
+        )
+    }
+}
+
+/// Submitter → dispatcher commands.
+enum Cmd {
+    Submit(Box<Submission>),
+    Drain,
+}
+
+struct Submission {
+    id: u64,
+    submitted: Instant,
+    req: JobRequest,
+    reply: mpsc::Sender<Result<JobResult>>,
+}
+
+/// A job the dispatcher has admitted but not yet promoted.
+struct Pending {
+    req: JobRequest,
+    reply: mpsc::Sender<Result<JobResult>>,
+}
+
+/// One multiplexed in-flight job.
+struct ActiveJob {
+    id: u64,
+    ctx: JobCtx,
+    /// Retained for attempt restarts (blocks stay staged; only the
+    /// scheduler and partials rebuild).
+    specs: Vec<TaskSpec>,
+    keys: Vec<String>,
+    ns: Arc<str>,
+    reply: mpsc::Sender<Result<JobResult>>,
+    submitted: Instant,
+    started: Instant,
+    startup_s: f64,
+    first_partial: Option<Instant>,
+    attempt: u32,
+    max_attempts: u32,
+    fault: Option<InjectedFault>,
+    /// Tasks dispatched in the current attempt (fault trigger point).
+    dispatched: u64,
+    cfg: ExecConfig,
+    samples: usize,
+    input_bytes: usize,
+}
+
+struct JobRecord {
+    queue_wait_s: f64,
+    ttfp_s: f64,
+    e2e_s: f64,
+}
+
+/// The long-lived multi-tenant service. `start` spawns the pool and
+/// the dispatcher; `submit` admits (or rejects) jobs from any thread;
+/// `shutdown` drains and returns the session's [`ServeReport`].
+pub struct JobService {
+    submit_tx: mpsc::Sender<Cmd>,
+    report_rx: mpsc::Receiver<ServeReport>,
+    dispatcher: thread::JoinHandle<()>,
+    next_id: AtomicU64,
+    rejected: AtomicU64,
+    workers: usize,
+    policy: AdmissionPolicy,
+}
+
+impl JobService {
+    pub fn start(
+        backend: Arc<Backend>,
+        cfg: ServeConfig,
+    ) -> Result<JobService> {
+        let params = backend.manifest().params.clone();
+        let (up_tx, up_rx) = mpsc::channel();
+        let pool =
+            WorkerPool::new(&cfg.pool, params.clone(), backend.clone(), up_tx)?;
+        let workers = pool.workers;
+        let (submit_tx, submit_rx) = mpsc::channel();
+        let (report_tx, report_rx) = mpsc::channel();
+        let disp = Dispatcher {
+            backend,
+            params,
+            pool,
+            pool_rx: up_rx,
+            submit_rx,
+            policy: cfg.policy,
+            max_active: cfg.max_active.max(1),
+            target_inflight: cfg.inflight.max(1),
+            sched_cfg: cfg.sched,
+            queue: Vec::new(),
+            active: Vec::new(),
+            inflight: vec![0; workers],
+            rr: 0,
+            draining: false,
+            jobs_admitted: 0,
+            jobs_failed: 0,
+            tasks_total: 0,
+            records: Vec::new(),
+            completed_order: Vec::new(),
+            first_submit: None,
+            last_complete: None,
+            epoch: Instant::now(),
+        };
+        let dispatcher = thread::Builder::new()
+            .name("bts-serve-dispatcher".into())
+            .spawn(move || disp.run(report_tx))
+            .map_err(|e| {
+                Error::Scheduler(format!("spawn dispatcher: {e}"))
+            })?;
+        Ok(JobService {
+            submit_tx,
+            report_rx,
+            dispatcher,
+            next_id: AtomicU64::new(1),
+            rejected: AtomicU64::new(0),
+            workers,
+            policy: cfg.policy,
+        })
+    }
+
+    /// The admission controller's time estimate for `req` on this
+    /// service's pool (planner model seconds, not local wall-clock).
+    pub fn estimate_s(&self, req: &JobRequest) -> f64 {
+        estimate_job_s(
+            req.workload,
+            req.nominal_bytes(),
+            self.workers,
+            default_compute_s_per_mib(req.workload),
+        )
+    }
+
+    /// Admit a job (returning a handle to wait on) or reject it at the
+    /// door when its deadline is infeasible under the planner estimate.
+    pub fn submit(&self, req: JobRequest) -> Result<JobHandle> {
+        if req.samples == 0 {
+            return Err(Error::Config("job needs at least one sample".into()));
+        }
+        if let Some(d) = req.deadline_s {
+            // A NaN/infinite/negative deadline must die here, on the
+            // submitter's thread — inside the dispatcher it would
+            // panic Duration::from_secs_f64 and take down every
+            // tenant's service.
+            if !d.is_finite() || d < 0.0 {
+                return Err(Error::Config(format!(
+                    "deadline must be a finite non-negative number of \
+                     seconds, got {d}"
+                )));
+            }
+        }
+        // Deadline-less requests are always feasible — don't pay the
+        // planner simulation just to discard its answer.
+        if self.policy == AdmissionPolicy::EdfWithRejection
+            && req.deadline_s.is_some()
+        {
+            let est = self.estimate_s(&req);
+            if !feasible(est, req.deadline_s) {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Admission(format!(
+                    "planner estimates {est:.1}s for {} samples of {}, \
+                     beyond the {:.3}s deadline",
+                    req.samples,
+                    req.workload.name(),
+                    req.deadline_s.unwrap_or(f64::NAN),
+                )));
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, rx) = mpsc::channel();
+        let sub = Submission {
+            id,
+            submitted: Instant::now(),
+            req,
+            reply: reply_tx,
+        };
+        self.submit_tx
+            .send(Cmd::Submit(Box::new(sub)))
+            .map_err(|_| Error::Scheduler("service is shut down".into()))?;
+        Ok(JobHandle { id, rx })
+    }
+
+    /// Jobs rejected at admission so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Drain every queued and in-flight job, stop the pool, and return
+    /// the session report.
+    pub fn shutdown(self) -> Result<ServeReport> {
+        self.submit_tx
+            .send(Cmd::Drain)
+            .map_err(|_| Error::Scheduler("dispatcher already gone".into()))?;
+        let mut report = self.report_rx.recv().map_err(|_| {
+            Error::Scheduler("dispatcher exited without a report".into())
+        })?;
+        report.jobs_rejected = self.rejected.load(Ordering::Relaxed);
+        self.dispatcher
+            .join()
+            .map_err(|_| Error::Scheduler("dispatcher panicked".into()))?;
+        Ok(report)
+    }
+}
+
+struct Dispatcher {
+    backend: Arc<Backend>,
+    params: ModelParams,
+    pool: WorkerPool,
+    pool_rx: mpsc::Receiver<PoolUp>,
+    submit_rx: mpsc::Receiver<Cmd>,
+    policy: AdmissionPolicy,
+    max_active: usize,
+    target_inflight: usize,
+    sched_cfg: SchedConfig,
+    queue: Vec<QueuedJob<Pending>>,
+    active: Vec<ActiveJob>,
+    /// Tasks in flight per worker, across every job (dispatch window).
+    inflight: Vec<usize>,
+    /// Round-robin cursor over `active` (cross-job fairness).
+    rr: usize,
+    draining: bool,
+    jobs_admitted: usize,
+    jobs_failed: usize,
+    tasks_total: u64,
+    records: Vec<JobRecord>,
+    completed_order: Vec<u64>,
+    first_submit: Option<Instant>,
+    last_complete: Option<Instant>,
+    epoch: Instant,
+}
+
+impl Dispatcher {
+    fn run(mut self, report_tx: mpsc::Sender<ServeReport>) {
+        loop {
+            // 1. Pick up submissions (and the drain signal).
+            loop {
+                match self.submit_rx.try_recv() {
+                    Ok(Cmd::Submit(sub)) => self.enqueue(*sub),
+                    Ok(Cmd::Drain) => self.draining = true,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        self.draining = true;
+                        break;
+                    }
+                }
+            }
+            // 2. Promote queued jobs into free multiplex slots.
+            let mut promoted = false;
+            while self.active.len() < self.max_active && self.promote_one()
+            {
+                promoted = true;
+            }
+            if promoted {
+                for w in 0..self.pool.workers {
+                    self.top_up_worker(w);
+                }
+            }
+            // 3. Drained and idle: stop.
+            if self.draining
+                && self.active.is_empty()
+                && self.queue.is_empty()
+            {
+                break;
+            }
+            // 4. Idle service: nothing queued or running, so no pool
+            //    traffic is coming — sleep on the submission channel
+            //    instead of polling it. Stale pool acks (Aborted from
+            //    a just-retired job) are drained first so in-flight
+            //    accounting stays truthful.
+            if self.active.is_empty() && self.queue.is_empty() {
+                while let Ok(m) = self.pool_rx.try_recv() {
+                    self.handle_up(m);
+                }
+                match self.submit_rx.recv() {
+                    Ok(Cmd::Submit(sub)) => self.enqueue(*sub),
+                    Ok(Cmd::Drain) | Err(_) => self.draining = true,
+                }
+                continue;
+            }
+            // 5. Route pool messages (timeout keeps the submission
+            //    poll responsive while jobs run).
+            match self.pool_rx.recv_timeout(Duration::from_millis(2)) {
+                Ok(m) => {
+                    self.handle_up(m);
+                    while let Ok(m) = self.pool_rx.try_recv() {
+                        self.handle_up(m);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Orderly pool shutdown: every worker gets Shutdown, is joined,
+        // and its lifetime task count is collected.
+        let workers = self.pool.workers;
+        let spawned = self.pool.spawned;
+        let dfs_bytes_served = self.pool.dfs.bytes_served();
+        let pool = self.pool;
+        pool.shutdown();
+        let mut worker_executed = vec![0u64; workers];
+        while let Ok(m) = self.pool_rx.try_recv() {
+            if let PoolUp::Exited { worker, executed } = m {
+                worker_executed[worker] = executed;
+            }
+        }
+        let wall_s = match (self.first_submit, self.last_complete) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => self.epoch.elapsed().as_secs_f64(),
+        };
+        let col = |f: fn(&JobRecord) -> f64| -> Summary {
+            let v: Vec<f64> = self.records.iter().map(f).collect();
+            summarize(if v.is_empty() { &[0.0] } else { &v })
+        };
+        let report = ServeReport {
+            jobs_admitted: self.jobs_admitted,
+            jobs_completed: self.records.len(),
+            jobs_failed: self.jobs_failed,
+            jobs_rejected: 0, // filled by JobService::shutdown
+            tasks_total: self.tasks_total,
+            wall_s,
+            queue_wait: col(|r| r.queue_wait_s),
+            ttfp: col(|r| r.ttfp_s),
+            e2e: col(|r| r.e2e_s),
+            workers,
+            workers_spawned: spawned,
+            worker_executed,
+            dfs_bytes_served,
+            completed_order: self.completed_order,
+        };
+        let _ = report_tx.send(report);
+    }
+
+    fn enqueue(&mut self, sub: Submission) {
+        self.first_submit.get_or_insert(sub.submitted);
+        self.jobs_admitted += 1;
+        // submit() validated finiteness; the cap (~31 years) keeps
+        // Instant + Duration from ever overflowing.
+        let deadline_at = sub.req.deadline_s.map(|d| {
+            sub.submitted + Duration::from_secs_f64(d.clamp(0.0, 1e9))
+        });
+        self.queue.push(QueuedJob {
+            id: sub.id,
+            submitted: sub.submitted,
+            deadline_at,
+            payload: Pending { req: sub.req, reply: sub.reply },
+        });
+    }
+
+    /// Promote the next queued job (EDF or FIFO): build its dataset,
+    /// stage its blocks under its namespace, and hand it a fresh
+    /// [`JobCtx`]. Returns false when the queue is empty.
+    fn promote_one(&mut self) -> bool {
+        let Some(i) = pop_index(&self.queue, self.policy) else {
+            return false;
+        };
+        let qj = self.queue.remove(i);
+        let Pending { req, reply } = qj.payload;
+        let started = Instant::now();
+        let stage_t = Timer::start();
+        let ds = build_small(req.workload, &self.params, req.samples);
+        let tasks = pack(ds.metas(), req.sizing);
+        let ns: Arc<str> = job_ns(qj.id).into();
+        let (samples, input_bytes, keys) =
+            stage_dataset(ds.as_ref(), &self.pool.dfs, &ns);
+        let specs: Vec<TaskSpec> = tasks
+            .into_iter()
+            .map(|t| TaskSpec::new(t, req.workload, req.seed))
+            .collect();
+        let startup_s = stage_t.secs();
+        let cfg = ExecConfig {
+            sizing: req.sizing,
+            workers: self.pool.workers,
+            data_nodes: self.pool.dfs.nodes.len(),
+            adaptive_rf: false, // the shared store's rf is pool policy
+            sched: self.sched_cfg.clone(),
+            seed: req.seed,
+            attempt: 1,
+            platform: "bts-serve".into(),
+            ..ExecConfig::default()
+        };
+        match JobCtx::new(
+            specs.clone(),
+            self.pool.dfs.clone(),
+            cfg.clone(),
+            self.pool.workers,
+            samples,
+            input_bytes,
+            startup_s,
+        ) {
+            Ok(ctx) => {
+                self.active.push(ActiveJob {
+                    id: qj.id,
+                    ctx,
+                    specs,
+                    keys,
+                    ns,
+                    reply,
+                    submitted: qj.submitted,
+                    started,
+                    startup_s,
+                    first_partial: None,
+                    attempt: 1,
+                    max_attempts: req.max_attempts.max(1),
+                    fault: req.fault,
+                    dispatched: 0,
+                    cfg,
+                    samples,
+                    input_bytes,
+                });
+            }
+            Err(e) => {
+                // e.g. a dataset that packs to zero tasks
+                for k in &keys {
+                    self.pool.dfs.remove(k);
+                }
+                let _ = reply.send(Err(e));
+                self.jobs_failed += 1;
+            }
+        }
+        true
+    }
+
+    /// Fill `w`'s dispatch window, interleaving tasks from every
+    /// active job round-robin — the cross-tenant multiplexing step.
+    fn top_up_worker(&mut self, w: usize) {
+        while self.inflight[w] < self.target_inflight {
+            let n = self.active.len();
+            if n == 0 {
+                return;
+            }
+            let mut sent = false;
+            for off in 0..n {
+                let i = (self.rr + off) % n;
+                let job = &mut self.active[i];
+                if let Some(spec) = job.ctx.next(w) {
+                    let poison = job.fault.map_or(false, |f| {
+                        f.applies_to(job.attempt)
+                            && job.dispatched == f.after_tasks
+                    });
+                    job.dispatched += 1;
+                    let (jid, jattempt) = (job.id, job.attempt);
+                    let task = PoolTask {
+                        job: jid,
+                        attempt: jattempt,
+                        ns: job.ns.clone(),
+                        spec,
+                        poison,
+                    };
+                    self.rr = (i + 1) % n;
+                    if self.pool.send(w, PoolMsg::Task(Box::new(task))) {
+                        self.inflight[w] += 1;
+                        sent = true;
+                        break;
+                    }
+                    // Dead worker channel: the claimed spec just
+                    // vanished with the message. Abort/restart the job
+                    // so the task is re-dispatched, never leaked.
+                    self.on_task_failed(
+                        jid,
+                        jattempt,
+                        Error::Scheduler(format!(
+                            "worker {w} channel closed mid-dispatch"
+                        )),
+                    );
+                    return;
+                }
+            }
+            if !sent {
+                return;
+            }
+        }
+    }
+
+    fn handle_up(&mut self, msg: PoolUp) {
+        match msg {
+            PoolUp::Done { job, attempt, done } => {
+                let w = done.worker;
+                self.inflight[w] = self.inflight[w].saturating_sub(1);
+                // Route to the job iff it's still on this attempt —
+                // results that straggle in after a restart are stale.
+                if let Some(i) = self
+                    .active
+                    .iter()
+                    .position(|a| a.id == job && a.attempt == attempt)
+                {
+                    if self.active[i].first_partial.is_none() {
+                        self.active[i].first_partial = Some(Instant::now());
+                    }
+                    self.active[i].ctx.on_done(done);
+                    if self.active[i].ctx.is_complete() {
+                        self.finish_job(i);
+                    }
+                }
+                self.top_up_worker(w);
+            }
+            PoolUp::TaskFailed { job, attempt, worker, error } => {
+                self.inflight[worker] =
+                    self.inflight[worker].saturating_sub(1);
+                self.on_task_failed(job, attempt, error);
+                self.top_up_worker(worker);
+            }
+            PoolUp::Aborted { worker, dropped } => {
+                self.inflight[worker] = self.inflight[worker]
+                    .saturating_sub(dropped as usize);
+                self.top_up_worker(worker);
+            }
+            // Workers only exit during shutdown; the drain loop after
+            // the main loop collects these.
+            PoolUp::Exited { .. } => {}
+        }
+    }
+
+    /// Remove job `i` from the active set, keep the round-robin cursor
+    /// in range, and unstage the job's blocks from the shared store.
+    fn retire_active(&mut self, i: usize) -> ActiveJob {
+        let a = self.active.remove(i);
+        self.rr = if self.active.is_empty() {
+            0
+        } else {
+            self.rr % self.active.len()
+        };
+        for k in &a.keys {
+            self.pool.dfs.remove(k);
+        }
+        a
+    }
+
+    /// One task of `(job, attempt)` is lost (worker-reported failure or
+    /// a dead worker channel): abort the attempt everywhere (workers
+    /// purge the job's queued tasks and prefetched blocks), then
+    /// restart the job on the warm pool or give up — neighbours
+    /// unaffected either way.
+    fn on_task_failed(&mut self, job: u64, attempt: u32, error: Error) {
+        let Some(i) = self
+            .active
+            .iter()
+            .position(|a| a.id == job && a.attempt == attempt)
+        else {
+            return; // stale attempt — already restarted or retired
+        };
+        self.pool.abort(job, attempt);
+        if self.active[i].attempt >= self.active[i].max_attempts {
+            let a = self.retire_active(i);
+            let _ = a.reply.send(Err(Error::JobFailed {
+                attempts: a.attempt,
+                cause: error.to_string(),
+            }));
+            self.jobs_failed += 1;
+            return;
+        }
+        let workers = self.pool.workers;
+        let dfs = self.pool.dfs.clone();
+        // Blocks stay staged; same specs + seeds mean the restart
+        // reproduces the statistic exactly.
+        let (specs, cfg, samples, input_bytes, startup_s) = {
+            let a = &mut self.active[i];
+            a.attempt += 1;
+            a.dispatched = 0;
+            a.first_partial = None;
+            let mut cfg = a.cfg.clone();
+            cfg.attempt = a.attempt;
+            (a.specs.clone(), cfg, a.samples, a.input_bytes, a.startup_s)
+        };
+        match JobCtx::new(
+            specs,
+            dfs,
+            cfg,
+            workers,
+            samples,
+            input_bytes,
+            startup_s,
+        ) {
+            Ok(ctx) => self.active[i].ctx = ctx,
+            Err(e) => {
+                let a = self.retire_active(i);
+                let _ = a.reply.send(Err(e));
+                self.jobs_failed += 1;
+            }
+        }
+    }
+
+    /// All partials in: seq-ordered reduce, unstage the job's blocks,
+    /// answer the tenant.
+    fn finish_job(&mut self, i: usize) {
+        let a = self.retire_active(i);
+        match a.ctx.finish(self.backend.as_ref()) {
+            Ok(fin) => {
+                let e2e_s = a.submitted.elapsed().as_secs_f64();
+                let queue_wait_s =
+                    a.started.duration_since(a.submitted).as_secs_f64();
+                let ttfp_s = a
+                    .first_partial
+                    .map(|t| t.duration_since(a.submitted).as_secs_f64())
+                    .unwrap_or(e2e_s);
+                self.tasks_total += fin.report.tasks as u64;
+                self.records.push(JobRecord { queue_wait_s, ttfp_s, e2e_s });
+                self.completed_order.push(a.id);
+                self.last_complete = Some(Instant::now());
+                let _ = a.reply.send(Ok(JobResult {
+                    id: a.id,
+                    output: fin.output,
+                    report: fin.report,
+                    queue_wait_s,
+                    ttfp_s,
+                    e2e_s,
+                }));
+            }
+            Err(e) => {
+                self.jobs_failed += 1;
+                let _ = a.reply.send(Err(e));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Workload;
+
+    fn native_service(workers: usize, max_active: usize) -> JobService {
+        let backend =
+            Arc::new(Backend::native(ModelParams::default()));
+        JobService::start(
+            backend,
+            ServeConfig {
+                pool: PoolConfig { workers, ..Default::default() },
+                max_active,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_session_reports_cleanly() {
+        let svc = native_service(2, 2);
+        let report = svc.shutdown().unwrap();
+        assert_eq!(report.jobs_admitted, 0);
+        assert_eq!(report.jobs_completed, 0);
+        assert_eq!(report.workers_spawned, 2);
+        assert_eq!(report.worker_respawns(), 0);
+    }
+
+    #[test]
+    fn zero_sample_jobs_are_refused() {
+        let svc = native_service(1, 1);
+        let err = svc
+            .submit(JobRequest::new(Workload::Eaglet, 0))
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn one_job_round_trips() {
+        let svc = native_service(2, 2);
+        let h = svc
+            .submit(JobRequest::new(Workload::Eaglet, 8).with_seed(3))
+            .unwrap();
+        let r = h.wait().unwrap();
+        assert!(matches!(r.output, JobOutput::Eaglet { .. }));
+        assert_eq!(r.report.restarts, 0);
+        assert!(r.e2e_s >= r.ttfp_s || r.report.tasks == 1);
+        let report = svc.shutdown().unwrap();
+        assert_eq!(report.jobs_completed, 1);
+        assert!(report.tasks_total >= 1);
+        // the record parses back as flat JSON with the percentiles
+        let j = Json::parse(&report.metrics_json().to_string_pretty())
+            .unwrap();
+        assert!(j.req_f64("queue_wait_p50_s").is_ok());
+        assert!(j.req_f64("e2e_p95_s").is_ok());
+        assert!(j.req_f64("tasks_per_s").is_ok());
+    }
+}

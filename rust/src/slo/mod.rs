@@ -72,6 +72,22 @@ pub fn best_under_slo(
     })
 }
 
+/// Planner-backed wall-time estimate for one job: simulated total
+/// running time of `job_bytes` on `cores` map slots, using the same
+/// thesis-scale platform model as [`best_under_slo`]. This is the
+/// serve layer's admission signal — a *model* figure used to order
+/// the queue (EDF) and reject deadlines no configuration could meet,
+/// not a prediction of local wall-clock.
+pub fn estimate_job_s(
+    workload: Workload,
+    job_bytes: usize,
+    cores: usize,
+    compute_s_per_mib: f64,
+) -> f64 {
+    let p = default_params(workload, job_bytes, compute_s_per_mib);
+    simulate(&PlatformSpec::bts(), &cluster_of(cores.max(1)), &p).total_s
+}
+
 /// Smallest core count achieving ≥ `frac` of the best simulated
 /// throughput at this job size — the "scale out until diminishing
 /// returns" advisor.
@@ -160,6 +176,18 @@ mod tests {
         )
         .unwrap();
         assert!(c_big >= c);
+    }
+
+    #[test]
+    fn estimate_is_positive_and_monotone_in_job_size() {
+        let small =
+            estimate_job_s(Workload::Eaglet, 16 * 1024 * 1024, 4, 0.06);
+        let big =
+            estimate_job_s(Workload::Eaglet, 1024 * 1024 * 1024, 4, 0.06);
+        assert!(small > 0.0);
+        assert!(big > small, "more data must cost more time");
+        // zero cores clamps rather than dividing by zero
+        assert!(estimate_job_s(Workload::Eaglet, 1024, 0, 0.06) > 0.0);
     }
 
     #[test]

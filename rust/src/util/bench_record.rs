@@ -1,0 +1,64 @@
+//! `BENCH_*.json` trajectory writer.
+//!
+//! Every benchmark-bearing surface (`bts exec`, `bts serve`, and
+//! whatever future PRs add) funnels its flat metrics records through
+//! this one writer, so `results/` accumulates a comparable perf trail:
+//! one `BENCH_<name>.json` per surface, each a JSON array of flat
+//! records in the baseline format `examples/end_to_end.rs` first wrote
+//! to `results/exec_baseline.json` (see `ExecResult::metrics_json`).
+
+use super::json::{arr, Json};
+use crate::error::Result;
+
+/// Write `records` to `results/BENCH_<name>.json`; returns the path.
+pub fn write(name: &str, records: Vec<Json>) -> Result<String> {
+    write_in("results", name, records)
+}
+
+/// Same, into an explicit directory (tests point this at a temp dir).
+pub fn write_in(
+    dir: &str,
+    name: &str,
+    records: Vec<Json>,
+) -> Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let path = format!("{dir}/BENCH_{name}.json");
+    std::fs::write(&path, arr(records).to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    #[test]
+    fn writes_parseable_record_arrays() {
+        let dir = std::env::temp_dir()
+            .join("bts_bench_record_test")
+            .to_string_lossy()
+            .into_owned();
+        let path = write_in(
+            &dir,
+            "selftest",
+            vec![
+                obj(vec![("total_s", num(1.5))]),
+                obj(vec![("total_s", num(2.5))]),
+            ],
+        )
+        .unwrap();
+        assert!(path.ends_with("BENCH_selftest.json"));
+        let back =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        match back {
+            Json::Arr(v) => {
+                assert_eq!(v.len(), 2);
+                assert!((v[1].req_f64("total_s").unwrap() - 2.5).abs()
+                    < 1e-12);
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -1,0 +1,149 @@
+//! Strict command-line flag parsing, shared by the `bts` binary and
+//! the examples so every surface honours one contract: flags accept
+//! both `--name value` and `--name=value`, unknown flags and stray
+//! positional arguments are errors (never silence), and repeated
+//! flags keep every occurrence.
+
+use crate::error::{Error, Result};
+
+/// Parsed flags. `get` returns the last occurrence (override
+/// semantics); `get_all` yields every one (repeatable flags like
+/// `--set`).
+pub struct Flags {
+    vals: Vec<(String, String)>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String], allowed: &[&str]) -> Result<Flags> {
+        let expected = || {
+            if allowed.is_empty() {
+                "this command takes no flags".to_string()
+            } else {
+                format!("expected one of {}", allowed.join(", "))
+            }
+        };
+        let mut vals = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if !a.starts_with("--") {
+                return Err(Error::Config(format!(
+                    "unexpected argument {a}; {}",
+                    expected()
+                )));
+            }
+            let (name, inline) = match a.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (a.clone(), None),
+            };
+            if !allowed.contains(&name.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown flag {name}; {}",
+                    expected()
+                )));
+            }
+            let value = match inline {
+                Some(v) => v,
+                None => {
+                    i += 1;
+                    args.get(i).cloned().ok_or_else(|| {
+                        Error::Config(format!("flag {name} needs a value"))
+                    })?
+                }
+            };
+            vals.push((name, value));
+            i += 1;
+        }
+        Ok(Flags { vals })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.vals
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_all<'a>(
+        &'a self,
+        name: &'a str,
+    ) -> impl Iterator<Item = &'a str> {
+        self.vals
+            .iter()
+            .filter(move |(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse `name` as `T`, falling back to `default` when absent.
+    pub fn num<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad {name} value {v}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_accept_both_spellings() {
+        let f = Flags::parse(
+            &argv(&["--workers", "8", "--workload=netflix_hi"]),
+            &["--workers", "--workload"],
+        )
+        .unwrap();
+        assert_eq!(f.get("--workers"), Some("8"));
+        assert_eq!(f.get("--workload"), Some("netflix_hi"));
+        assert_eq!(f.num::<usize>("--workers", 1).unwrap(), 8);
+        assert_eq!(f.num::<usize>("--missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_flags_are_errors_not_silence() {
+        let err =
+            Flags::parse(&argv(&["--wrokers", "8"]), &["--workers"])
+                .unwrap_err();
+        assert!(err.to_string().contains("--wrokers"));
+        let err =
+            Flags::parse(&argv(&["stray"]), &["--workers"]).unwrap_err();
+        assert!(err.to_string().contains("stray"));
+        let err = Flags::parse(&argv(&["--any"]), &[]).unwrap_err();
+        assert!(err.to_string().contains("takes no flags"));
+    }
+
+    #[test]
+    fn missing_and_malformed_values_are_errors() {
+        let err = Flags::parse(&argv(&["--workers"]), &["--workers"])
+            .unwrap_err();
+        assert!(err.to_string().contains("needs a value"));
+        let f = Flags::parse(&argv(&["--workers", "many"]), &["--workers"])
+            .unwrap();
+        assert!(f.num::<usize>("--workers", 1).is_err());
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence() {
+        let f = Flags::parse(
+            &argv(&["--set", "a=1", "--set=b=2"]),
+            &["--set"],
+        )
+        .unwrap();
+        let all: Vec<&str> = f.get_all("--set").collect();
+        assert_eq!(all, vec!["a=1", "b=2"]);
+        // get() returns the last occurrence (override semantics)
+        assert_eq!(f.get("--set"), Some("b=2"));
+    }
+}

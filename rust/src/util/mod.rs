@@ -3,6 +3,8 @@
 //! offline build (see DESIGN.md §2).
 
 pub mod bench;
+pub mod bench_record;
+pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;

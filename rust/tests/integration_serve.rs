@@ -1,0 +1,277 @@
+//! The serve layer end to end against the native backend: multi-tenant
+//! multiplexing with per-job determinism, warm-pool reuse, SLO-aware
+//! admission, and tenant-scoped recovery. No artifacts needed.
+
+use std::sync::Arc;
+
+use bts::data::{ModelParams, Workload};
+use bts::error::Error;
+use bts::exec::{run_cluster, Backend, ExecConfig};
+use bts::kneepoint::TaskSizing;
+use bts::serve::{
+    AdmissionPolicy, InjectedFault, JobRequest, JobService, PoolConfig,
+    ServeConfig,
+};
+use bts::workloads::build_small;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+fn service(workers: usize, max_active: usize) -> JobService {
+    JobService::start(
+        native(),
+        ServeConfig {
+            pool: PoolConfig { workers, ..Default::default() },
+            max_active,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Run `req` solo through the one-shot executor — the oracle every
+/// multiplexed job must match bit for bit.
+fn solo_output(req: &JobRequest) -> bts::coordinator::JobOutput {
+    let backend = native();
+    let ds = build_small(req.workload, &ModelParams::default(), req.samples);
+    let cfg = ExecConfig {
+        sizing: req.sizing,
+        seed: req.seed,
+        ..Default::default()
+    };
+    run_cluster(ds.as_ref(), backend, &cfg).unwrap().output
+}
+
+fn mixed(i: usize, samples: usize) -> JobRequest {
+    let workload = match i % 3 {
+        0 => Workload::Eaglet,
+        1 => Workload::NetflixHi,
+        _ => Workload::NetflixLo,
+    };
+    JobRequest::new(workload, samples)
+        .with_seed(0xA11CE ^ (i as u64))
+        .with_sizing(TaskSizing::Kneepoint(16 * 1024))
+}
+
+#[test]
+fn multiplexed_jobs_match_their_solo_runs_bit_for_bit() {
+    let svc = service(4, 3);
+    let reqs: Vec<JobRequest> = (0..6).map(|i| mixed(i, 24)).collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|r| svc.submit(r.clone()).unwrap())
+        .collect();
+    // all six run interleaved over the shared pool (3 at a time)
+    let results: Vec<_> =
+        handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    for (req, res) in reqs.iter().zip(&results) {
+        assert_eq!(
+            res.output,
+            solo_output(req),
+            "job {} ({}) diverged from its solo run",
+            res.id,
+            req.workload.name()
+        );
+        assert_eq!(res.report.restarts, 0);
+        assert!(res.e2e_s > 0.0);
+    }
+    let report = svc.shutdown().unwrap();
+    assert_eq!(report.jobs_completed, 6);
+    assert_eq!(report.jobs_failed, 0);
+}
+
+#[test]
+fn twenty_mixed_jobs_reuse_one_warm_pool() {
+    let workers = 4;
+    let svc = service(workers, 4);
+    let handles: Vec<_> = (0..20)
+        .map(|i| svc.submit(mixed(i, 16)).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let report = svc.shutdown().unwrap();
+    assert_eq!(report.jobs_completed, 20);
+    assert_eq!(report.jobs_failed, 0);
+    // the warm-pool invariant: one spawn per worker for the whole
+    // session, no respawns between jobs, and those same workers
+    // executed every task of every job
+    assert_eq!(report.workers_spawned, workers);
+    assert_eq!(report.worker_respawns(), 0);
+    assert_eq!(report.worker_executed.len(), workers);
+    let executed: u64 = report.worker_executed.iter().sum();
+    assert_eq!(executed, report.tasks_total);
+    assert!(report.tasks_total >= 20, "each job runs at least one task");
+    assert!(report.wall_s > 0.0 && report.tasks_per_s() > 0.0);
+    // latency accounting covered every job
+    assert_eq!(report.queue_wait.n, 20);
+    assert_eq!(report.e2e.n, 20);
+    assert_eq!(report.completed_order.len(), 20);
+}
+
+#[test]
+fn infeasible_deadlines_are_rejected_at_admission() {
+    let svc = service(2, 2);
+    // no simulated configuration finishes in a microsecond
+    let err = svc
+        .submit(mixed(0, 40).with_deadline(1e-6))
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::Admission(_)),
+        "expected Admission error, got {err}"
+    );
+    assert_eq!(svc.rejected(), 1);
+    // non-finite / negative deadlines are config errors on the
+    // submitter's thread, not dispatcher panics (and don't count as
+    // admission rejections)
+    for bad in [f64::INFINITY, f64::NAN, -1.0] {
+        let err = svc.submit(mixed(0, 8).with_deadline(bad)).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "deadline {bad}: {err}");
+    }
+    assert_eq!(svc.rejected(), 1);
+    // a generous deadline passes the same gate and completes
+    let h = svc.submit(mixed(0, 12).with_deadline(1e6)).unwrap();
+    let r = h.wait().unwrap();
+    assert_eq!(r.report.restarts, 0);
+    let report = svc.shutdown().unwrap();
+    assert_eq!(report.jobs_rejected, 1);
+    assert_eq!(report.jobs_completed, 1);
+}
+
+#[test]
+fn fifo_policy_never_rejects() {
+    let svc = JobService::start(
+        native(),
+        ServeConfig {
+            pool: PoolConfig { workers: 2, ..Default::default() },
+            max_active: 2,
+            policy: AdmissionPolicy::Fifo,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // under FIFO the same impossible deadline is admitted (and simply
+    // missed) rather than rejected
+    let h = svc.submit(mixed(0, 8).with_deadline(1e-6)).unwrap();
+    h.wait().unwrap();
+    let report = svc.shutdown().unwrap();
+    assert_eq!(report.jobs_rejected, 0);
+    assert_eq!(report.jobs_completed, 1);
+}
+
+#[test]
+fn edf_promotes_urgent_jobs_first() {
+    // One multiplex slot: job A occupies it while B (loose deadline)
+    // and C (tight deadline) queue; EDF must complete C before B.
+    let svc = service(2, 1);
+    let a = svc.submit(mixed(0, 40).with_seed(1)).unwrap();
+    let b = svc
+        .submit(mixed(1, 12).with_seed(2).with_deadline(9_000.0))
+        .unwrap();
+    let c = svc
+        .submit(mixed(2, 12).with_seed(3).with_deadline(3_600.0))
+        .unwrap();
+    let (b_id, c_id) = (b.id, c.id);
+    a.wait().unwrap();
+    b.wait().unwrap();
+    c.wait().unwrap();
+    let report = svc.shutdown().unwrap();
+    let pos = |id: u64| {
+        report
+            .completed_order
+            .iter()
+            .position(|&x| x == id)
+            .unwrap()
+    };
+    assert!(
+        pos(c_id) < pos(b_id),
+        "EDF must finish the tight deadline first: order {:?}",
+        report.completed_order
+    );
+}
+
+#[test]
+fn one_tenant_recovers_without_disturbing_the_other() {
+    let svc = service(3, 2);
+    let mut faulty = mixed(0, 20).with_seed(77);
+    faulty.fault = Some(InjectedFault { on_attempt: 1, after_tasks: 2 });
+    let clean = mixed(1, 20).with_seed(78);
+    let hf = svc.submit(faulty.clone()).unwrap();
+    let hc = svc.submit(clean.clone()).unwrap();
+    let rf = hf.wait().unwrap();
+    let rc = hc.wait().unwrap();
+    // the faulty job restarted exactly once and still reproduced its
+    // solo statistic; the clean one never restarted and matches too
+    assert_eq!(rf.report.restarts, 1);
+    assert_eq!(rf.output, solo_output(&faulty));
+    assert_eq!(rc.report.restarts, 0);
+    assert_eq!(rc.output, solo_output(&clean));
+    let report = svc.shutdown().unwrap();
+    assert_eq!(report.jobs_completed, 2);
+    assert_eq!(report.jobs_failed, 0);
+    // recovery reused the warm pool — no respawns even across restarts
+    assert_eq!(report.workers_spawned, 3);
+    assert_eq!(report.worker_respawns(), 0);
+}
+
+#[test]
+fn persistent_fault_exhausts_attempts_and_fails_only_that_job() {
+    let svc = service(2, 2);
+    let mut doomed = mixed(0, 12).with_seed(5);
+    doomed.fault = Some(InjectedFault { on_attempt: 0, after_tasks: 0 });
+    doomed.max_attempts = 2;
+    let neighbour = mixed(2, 12).with_seed(6);
+    let hd = svc.submit(doomed).unwrap();
+    let hn = svc.submit(neighbour.clone()).unwrap();
+    let err = hd.wait().unwrap_err();
+    match err {
+        Error::JobFailed { attempts, cause } => {
+            assert_eq!(attempts, 2);
+            assert!(cause.contains("injected"), "cause: {cause}");
+        }
+        other => panic!("expected JobFailed, got {other}"),
+    }
+    // the neighbour is untouched, and the service keeps serving
+    assert_eq!(hn.wait().unwrap().output, solo_output(&neighbour));
+    let late = svc.submit(mixed(1, 10).with_seed(9)).unwrap();
+    assert!(late.wait().is_ok());
+    let report = svc.shutdown().unwrap();
+    assert_eq!(report.jobs_failed, 1);
+    assert_eq!(report.jobs_completed, 2);
+    assert_eq!(report.worker_respawns(), 0);
+}
+
+#[test]
+fn serve_report_record_carries_the_percentiles() {
+    let svc = service(2, 2);
+    for i in 0..4 {
+        svc.submit(mixed(i, 10).with_seed(i as u64))
+            .unwrap()
+            .wait()
+            .unwrap();
+    }
+    let report = svc.shutdown().unwrap();
+    let j = bts::util::json::Json::parse(
+        &report.metrics_json().to_string_pretty(),
+    )
+    .unwrap();
+    for field in [
+        "jobs_completed",
+        "tasks_per_s",
+        "queue_wait_p50_s",
+        "queue_wait_p95_s",
+        "ttfp_p50_s",
+        "e2e_p50_s",
+        "e2e_p95_s",
+        "workers_spawned",
+        "worker_respawns",
+    ] {
+        assert!(
+            j.req_f64(field).is_ok(),
+            "BENCH_serve record missing {field}"
+        );
+    }
+    assert_eq!(j.req_usize("jobs_completed").unwrap(), 4);
+    assert_eq!(j.req_usize("worker_respawns").unwrap(), 0);
+}
