@@ -1,0 +1,135 @@
+//! Cache + affinity: a warm-cache second tenant versus its cold first
+//! run over the shared serve pool, and affinity-routed refills versus
+//! plain FIFO on the solo executor.
+//!
+//!     cargo bench --bench cache_affinity
+//!
+//! The modeled data-node latency actually sleeps here, so the cold
+//! run pays real wall time per fetch and the warm tenant's hit rate
+//! is visible as a speedup, not just a counter. Writes the trajectory
+//! record to `results/BENCH_cache.json`.
+
+use std::sync::Arc;
+
+use bts::data::{ModelParams, Workload};
+use bts::dfs::LatencyModel;
+use bts::exec::{run_cluster, Backend, ExecConfig};
+use bts::kneepoint::TaskSizing;
+use bts::serve::{JobRequest, JobService, PoolConfig, ServeConfig};
+use bts::util::bench::Bench;
+use bts::util::json::{num, obj, s};
+
+fn main() {
+    let backend = Arc::new(Backend::native(ModelParams::default()));
+    let mut b = Bench::new("cache_affinity").with_iters(0, 1);
+
+    // ---- serve: cold tenant, then an identical warm tenant ----------
+    // every store fetch sleeps ~1.5ms, so misses cost real time
+    let latency = LatencyModel {
+        base_s: 1.5e-3,
+        per_mib_s: 2e-3,
+        per_inflight_s: 0.0,
+        sleep: true,
+    };
+    let svc = JobService::start(
+        backend.clone(),
+        ServeConfig {
+            pool: PoolConfig {
+                workers: 4,
+                cache_mb: 64,
+                affinity: true,
+                latency: latency.clone(),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .expect("service");
+    let req = JobRequest::new(Workload::Eaglet, 48)
+        .with_seed(0xCAFE)
+        .with_sizing(TaskSizing::Kneepoint(16 * 1024));
+    let cold = svc.submit(req.clone()).expect("admit").wait().expect("cold");
+    let warm = svc.submit(req.clone()).expect("admit").wait().expect("warm");
+    assert_eq!(cold.output, warm.output, "cache changed the statistic");
+    assert!(
+        warm.report.cache_hit_rate > 0.9,
+        "warm tenant hit only {:.2}",
+        warm.report.cache_hit_rate
+    );
+    assert!(
+        warm.e2e_s < cold.e2e_s,
+        "warm job ({:.1}ms) not faster than cold ({:.1}ms)",
+        warm.e2e_s * 1e3,
+        cold.e2e_s * 1e3
+    );
+    let report = svc.shutdown().expect("report");
+    let stats = report.cache.clone().expect("cache stats");
+    b.record("serve_cold_e2e", cold.e2e_s, "s");
+    b.record("serve_warm_e2e", warm.e2e_s, "s");
+    b.record("serve_warm_speedup", cold.e2e_s / warm.e2e_s.max(1e-9), "x");
+    b.record("serve_warm_hit_rate", warm.report.cache_hit_rate, "frac");
+    b.record("serve_dedup_hits", stats.dedup_hits as f64, "blocks");
+    println!(
+        "cold {:.1}ms -> warm {:.1}ms ({:.1}x); warm hit rate {:.0}%; \
+         {} dedup aliases",
+        cold.e2e_s * 1e3,
+        warm.e2e_s * 1e3,
+        cold.e2e_s / warm.e2e_s.max(1e-9),
+        warm.report.cache_hit_rate * 100.0,
+        stats.dedup_hits
+    );
+
+    // ---- exec: affinity-routed refills vs plain FIFO ----------------
+    let ds = bts::workloads::build_small(
+        Workload::NetflixHi,
+        &ModelParams::default(),
+        96,
+    );
+    let base = ExecConfig {
+        sizing: TaskSizing::Kneepoint(16 * 1024),
+        workers: 4,
+        cache_mb: 64,
+        latency: latency.clone(),
+        ..Default::default()
+    };
+    let plain_cfg = ExecConfig { affinity: false, ..base.clone() };
+    let affine_cfg = ExecConfig { affinity: true, ..base.clone() };
+    let be = backend.clone();
+    let dsr = ds.as_ref();
+    let mut plain_s = f64::INFINITY;
+    let mut affine_s = f64::INFINITY;
+    let mut routed = 0u64;
+    b.measure("exec_fifo_refills", || {
+        let r = run_cluster(dsr, be.clone(), &plain_cfg).expect("run");
+        plain_s = plain_s.min(r.report.total_s);
+    });
+    let be = backend.clone();
+    b.measure("exec_affinity_refills", || {
+        let r = run_cluster(dsr, be.clone(), &affine_cfg).expect("run");
+        affine_s = affine_s.min(r.report.total_s);
+        routed = routed.max(r.sched.affinity_routed);
+    });
+    b.record("exec_affinity_routed", routed as f64, "tasks");
+
+    // ---- trajectory record ------------------------------------------
+    let record = obj(vec![
+        ("bench", s("cache_affinity")),
+        ("serve_cold_e2e_s", num(cold.e2e_s)),
+        ("serve_warm_e2e_s", num(warm.e2e_s)),
+        (
+            "serve_warm_speedup",
+            num(cold.e2e_s / warm.e2e_s.max(1e-9)),
+        ),
+        ("serve_warm_hit_rate", num(warm.report.cache_hit_rate)),
+        ("serve_cache_dedup_hits", num(stats.dedup_hits as f64)),
+        ("serve_cache_evictions", num(stats.evicted as f64)),
+        ("exec_fifo_total_s", num(plain_s)),
+        ("exec_affinity_total_s", num(affine_s)),
+        ("exec_affinity_routed", num(routed as f64)),
+    ]);
+    let path = bts::util::bench_record::write("cache", vec![record])
+        .expect("write BENCH_cache.json");
+    println!("wrote {path}");
+
+    b.finish();
+}

@@ -1,0 +1,188 @@
+//! Worker block-affinity registry: which worker most recently held
+//! which block key.
+//!
+//! Every worker's prefetcher records the keys it fetches; the
+//! two-step scheduler consults the registry when it builds a refill
+//! batch, preferring tasks whose blocks the claiming worker already
+//! holds (cache-affinity dispatch). The registry is advisory and
+//! bounded — losing an entry costs at most one re-fetch, so shards
+//! prune themselves to a capacity instead of growing with the job
+//! history.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::rng::fnv1a;
+
+struct Slot {
+    worker: usize,
+    stamp: u64,
+}
+
+struct AffShard {
+    map: HashMap<String, Slot>,
+    clock: u64,
+}
+
+/// See module docs. One per executor/pool, shared by every worker.
+pub struct AffinityIndex {
+    shards: Vec<Mutex<AffShard>>,
+    cap_per_shard: usize,
+    recorded: AtomicU64,
+}
+
+impl AffinityIndex {
+    /// Registry bounded to roughly `capacity` keys across 8 shards.
+    pub fn new(capacity: usize) -> AffinityIndex {
+        let shards = 8;
+        AffinityIndex {
+            shards: (0..shards)
+                .map(|_| {
+                    Mutex::new(AffShard { map: HashMap::new(), clock: 0 })
+                })
+                .collect(),
+            cap_per_shard: (capacity / shards).max(16),
+            recorded: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &str) -> usize {
+        (fnv1a(key.as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    /// Note that `worker` now holds `key` (last writer wins).
+    pub fn record(&self, worker: usize, key: &str) {
+        let mut s = self.shards[self.shard(key)].lock().unwrap();
+        s.clock += 1;
+        let stamp = s.clock;
+        s.map.insert(key.to_string(), Slot { worker, stamp });
+        if s.map.len() > self.cap_per_shard {
+            // prune the stalest half; O(n log n) every cap/2 inserts
+            let mut stamps: Vec<u64> =
+                s.map.values().map(|v| v.stamp).collect();
+            stamps.sort_unstable();
+            let cutoff = stamps[stamps.len() / 2];
+            s.map.retain(|_, v| v.stamp >= cutoff);
+        }
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Worker last seen holding `key`, if any.
+    pub fn owner(&self, key: &str) -> Option<usize> {
+        let s = self.shards[self.shard(key)].lock().unwrap();
+        s.map.get(key).map(|v| v.worker)
+    }
+
+    /// How many of `keys` the registry attributes to `worker`.
+    pub fn score<I>(&self, worker: usize, keys: I) -> usize
+    where
+        I: IntoIterator<Item = String>,
+    {
+        keys.into_iter()
+            .filter(|k| self.owner(k) == Some(worker))
+            .count()
+    }
+
+    /// Forget every key under `prefix` (tenant cleanup; keeps a
+    /// retired job's keys from skewing future refill scores).
+    pub fn forget_prefix(&self, prefix: &str) {
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            s.map.retain(|k, _| !k.starts_with(prefix));
+        }
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The scheduler's view of the registry: the index plus the job's key
+/// namespace, so a per-job scheduler can rebuild block keys from its
+/// [`crate::scheduler::TaskSpec`]s alone.
+#[derive(Clone)]
+pub struct AffinityHook {
+    pub index: Arc<AffinityIndex>,
+    pub ns: Arc<str>,
+}
+
+impl AffinityHook {
+    pub fn new(index: Arc<AffinityIndex>, ns: Arc<str>) -> AffinityHook {
+        AffinityHook { index, ns }
+    }
+}
+
+impl fmt::Debug for AffinityHook {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AffinityHook")
+            .field("ns", &self.ns)
+            .field("keys", &self.index.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_scores_ownership() {
+        let a = AffinityIndex::new(1024);
+        a.record(0, "j1/b0:1");
+        a.record(0, "j1/b0:2");
+        a.record(1, "j1/b0:3");
+        assert_eq!(a.owner("j1/b0:1"), Some(0));
+        assert_eq!(a.owner("j1/b0:3"), Some(1));
+        assert_eq!(a.owner("ghost"), None);
+        let keys = |ids: &[u64]| {
+            ids.iter()
+                .map(|i| format!("j1/b0:{i}"))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(a.score(0, keys(&[1, 2, 3])), 2);
+        assert_eq!(a.score(1, keys(&[1, 2, 3])), 1);
+        assert_eq!(a.recorded(), 3);
+    }
+
+    #[test]
+    fn last_writer_wins() {
+        let a = AffinityIndex::new(1024);
+        a.record(0, "k");
+        a.record(3, "k");
+        assert_eq!(a.owner("k"), Some(3));
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn capacity_is_bounded_and_keeps_fresh_entries() {
+        let a = AffinityIndex::new(128); // 16 per shard
+        for i in 0..2000 {
+            a.record(0, &format!("b{i}"));
+        }
+        assert!(a.len() <= 8 * 17, "registry grew unbounded: {}", a.len());
+        // the freshest key always survives its own insert
+        a.record(2, "fresh");
+        assert_eq!(a.owner("fresh"), Some(2));
+    }
+
+    #[test]
+    fn forget_prefix_scopes_to_one_namespace() {
+        let a = AffinityIndex::new(1024);
+        a.record(0, "j1/x");
+        a.record(1, "j2/x");
+        a.forget_prefix("j1/");
+        assert_eq!(a.owner("j1/x"), None);
+        assert_eq!(a.owner("j2/x"), Some(1));
+        assert!(!a.is_empty());
+    }
+}

@@ -1,0 +1,677 @@
+//! The tiered worker-side block cache: sharded, byte-budgeted,
+//! 2Q-over-LRU with admission control and content-hash dedup.
+//!
+//! Layout: a *key index* (block key → content hash) and a *content
+//! store* (content hash → bytes + the keys referencing them), each
+//! sharded behind its own small mutexes so a fetch never touches the
+//! executor's hot-path locks. Replacement is 2Q-style: a block enters
+//! on probation and is promoted to the protected (LRU) side on its
+//! first re-reference, so a one-pass scan over a big job cannot flush
+//! the blocks hot tenants keep re-reading. Admission control refuses
+//! objects larger than a shard-budget fraction outright.
+//!
+//! Dedup: entries are keyed by a content hash, so two tenants staging
+//! byte-identical sample blocks under different job namespaces share
+//! one resident copy — the second tenant's keys *alias* the first's
+//! bytes ([`BlockCache::register_put`]) instead of double-fetching.
+//! Hash collisions are disarmed by comparing the actual bytes before
+//! any alias is created.
+//!
+//! Coherence: [`BlockCache::remove_key`] (driven by `Dfs::remove`) and
+//! [`BlockCache::purge_prefix`] (driven by `Prefetcher::purge_prefix`)
+//! drop the key → content mapping immediately, so a removed or
+//! overwritten key can never resurrect stale bytes; the unreferenced
+//! content itself stays resident until the byte budget evicts it,
+//! which is what keeps a *later* identical tenant warm.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::rng::{fnv1a, mix64};
+
+/// Content fingerprint of a block's bytes (dedup key).
+#[inline]
+pub fn content_hash(bytes: &[u8]) -> u64 {
+    mix64(fnv1a(bytes))
+}
+
+/// One resident content entry plus every key aliasing it.
+struct Entry {
+    data: Arc<Vec<u8>>,
+    keys: Vec<String>,
+    tick: u64,
+    /// 2Q state: false = probation (first touch), true = protected.
+    protected: bool,
+}
+
+/// One key-index shard: key → content hash, plus an invalidation
+/// epoch. The epoch is bumped by every invalidation touching the
+/// shard; a read-through fill that began before the bump is refused
+/// at mapping-commit time, so a racing `put`/`remove` can never be
+/// overwritten by stale bytes fetched earlier ([`BlockCache::fill`]).
+struct IxShard {
+    map: HashMap<String, u64>,
+    epoch: u64,
+}
+
+/// One content shard: entries plus a tick-ordered recency map.
+struct Shard {
+    entries: HashMap<u64, Entry>,
+    /// recency tick → content hash, oldest first.
+    by_tick: BTreeMap<u64, u64>,
+    tick: u64,
+    bytes: usize,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            entries: HashMap::new(),
+            by_tick: BTreeMap::new(),
+            tick: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Move `h` to the recency front.
+    fn touch(&mut self, h: u64) {
+        let Some(old) = self.entries.get(&h).map(|e| e.tick) else {
+            return;
+        };
+        self.by_tick.remove(&old);
+        self.tick += 1;
+        let t = self.tick;
+        if let Some(e) = self.entries.get_mut(&h) {
+            e.tick = t;
+        }
+        self.by_tick.insert(t, h);
+    }
+
+    /// Eviction victim, oldest-first within class: unreferenced
+    /// content goes before probation, probation before protected.
+    fn victim(&self) -> Option<u64> {
+        let mut first_any = None;
+        let mut first_probation = None;
+        for &h in self.by_tick.values() {
+            let e = &self.entries[&h];
+            if e.keys.is_empty() {
+                return Some(h);
+            }
+            if first_any.is_none() {
+                first_any = Some(h);
+            }
+            if first_probation.is_none() && !e.protected {
+                first_probation = Some(h);
+            }
+        }
+        first_probation.or(first_any)
+    }
+
+    /// Evict until the shard fits `budget`; returns the keys of every
+    /// evicted entry so the caller can clean the key index.
+    fn evict_to(&mut self, budget: usize) -> Vec<(u64, Vec<String>)> {
+        let mut out = Vec::new();
+        while self.bytes > budget {
+            let Some(h) = self.victim() else { break };
+            if let Some(e) = self.entries.remove(&h) {
+                self.by_tick.remove(&e.tick);
+                self.bytes -= e.data.len();
+                out.push((h, e.keys));
+            }
+        }
+        out
+    }
+}
+
+/// Point-in-time cache counters (tests, `ServeReport`, BENCH records).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserted: u64,
+    /// New keys that aliased already-resident content (a data-node
+    /// round trip another tenant would otherwise have paid twice).
+    pub dedup_hits: u64,
+    pub evicted: u64,
+    /// Inserts refused by admission control (oversized objects and
+    /// the astronomically unlikely verified hash collision).
+    pub rejected: u64,
+    /// Key mappings dropped for coherence (remove / overwrite / purge).
+    pub invalidated: u64,
+    pub resident_bytes: u64,
+    pub resident_blocks: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// See module docs. One per shared store ([`crate::dfs::Dfs`]).
+pub struct BlockCache {
+    index: Vec<Mutex<IxShard>>,
+    data: Vec<Mutex<Shard>>,
+    shard_budget: usize,
+    max_object: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserted: AtomicU64,
+    dedup_hits: AtomicU64,
+    evicted: AtomicU64,
+    rejected: AtomicU64,
+    invalidated: AtomicU64,
+}
+
+impl BlockCache {
+    /// A cache holding at most `budget_bytes` across `shards` shards.
+    /// Objects above a quarter of one shard's budget are never
+    /// admitted (they would evict a whole working set for one block).
+    pub fn new(budget_bytes: usize, shards: usize) -> BlockCache {
+        let shards = shards.clamp(1, 64);
+        let shard_budget = (budget_bytes / shards).max(1);
+        BlockCache {
+            index: (0..shards)
+                .map(|_| {
+                    Mutex::new(IxShard { map: HashMap::new(), epoch: 0 })
+                })
+                .collect(),
+            data: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_budget,
+            max_object: (shard_budget / 4).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserted: AtomicU64::new(0),
+            dedup_hits: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            invalidated: AtomicU64::new(0),
+        }
+    }
+
+    fn ishard(&self, key: &str) -> usize {
+        (mix64(fnv1a(key.as_bytes())) % self.index.len() as u64) as usize
+    }
+
+    fn dshard(&self, h: u64) -> usize {
+        (h % self.data.len() as u64) as usize
+    }
+
+    /// Look `key` up; a hit promotes the entry out of probation. A
+    /// stale index mapping (content already evicted) is cleaned and
+    /// reported as a miss.
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let h = {
+            let ix = self.index[self.ishard(key)].lock().unwrap();
+            ix.map.get(key).copied()
+        };
+        let Some(h) = h else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        let found = {
+            let mut s = self.data[self.dshard(h)].lock().unwrap();
+            let data = match s.entries.get_mut(&h) {
+                Some(e) => {
+                    e.protected = true;
+                    Some(e.data.clone())
+                }
+                None => None,
+            };
+            if data.is_some() {
+                s.touch(h);
+            }
+            data
+        };
+        match found {
+            Some(data) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(data)
+            }
+            None => {
+                let mut ix = self.index[self.ishard(key)].lock().unwrap();
+                if ix.map.get(key) == Some(&h) {
+                    ix.map.remove(key);
+                }
+                drop(ix);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// The key's current invalidation epoch. A read-through caller
+    /// snapshots this *before* it fetches from the store and hands it
+    /// to [`BlockCache::fill`], which refuses the mapping if any
+    /// invalidation touched the shard in between.
+    pub fn key_epoch(&self, key: &str) -> u64 {
+        self.index[self.ishard(key)].lock().unwrap().epoch
+    }
+
+    /// Admit `key` → `data` after a store fetch (the read-through
+    /// fill). Byte-identical content already resident is aliased, not
+    /// duplicated.
+    pub fn insert(&self, key: &str, data: &Arc<Vec<u8>>) {
+        self.insert_inner(key, data, None);
+    }
+
+    /// Read-through fill: like [`BlockCache::insert`], but the key
+    /// mapping only commits if the shard's invalidation epoch still
+    /// equals `observed_epoch` (snapshotted before the store fetch) —
+    /// a concurrent `put`/`remove` wins over the in-flight stale fill.
+    pub fn fill(&self, key: &str, data: &Arc<Vec<u8>>, observed_epoch: u64) {
+        self.insert_inner(key, data, Some(observed_epoch));
+    }
+
+    fn insert_inner(
+        &self,
+        key: &str,
+        data: &Arc<Vec<u8>>,
+        observed_epoch: Option<u64>,
+    ) {
+        if data.len() > self.max_object {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let h = content_hash(data);
+        let evicted = {
+            let mut s = self.data[self.dshard(h)].lock().unwrap();
+            let resident = match s.entries.get_mut(&h) {
+                Some(e) if *e.data != **data => {
+                    // verified 64-bit collision: refuse the alias
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Some(e) => {
+                    if !e.keys.iter().any(|k| k == key) {
+                        e.keys.push(key.to_string());
+                        self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    true
+                }
+                None => false,
+            };
+            if resident {
+                s.touch(h);
+                Vec::new()
+            } else {
+                s.tick += 1;
+                let t = s.tick;
+                s.by_tick.insert(t, h);
+                s.bytes += data.len();
+                s.entries.insert(
+                    h,
+                    Entry {
+                        data: data.clone(),
+                        keys: vec![key.to_string()],
+                        tick: t,
+                        protected: false,
+                    },
+                );
+                self.inserted.fetch_add(1, Ordering::Relaxed);
+                s.evict_to(self.shard_budget)
+            }
+        };
+        if !self.index_set(key, h, observed_epoch) {
+            // a put/remove invalidated the key while the store fetch
+            // was in flight: the stale mapping must not commit (the
+            // content entry stays as unreferenced dedup fodder)
+            self.deref_content(h, key);
+        }
+        self.clean_evicted(evicted);
+    }
+
+    /// Coherence + dedup hook for `Dfs::put`: the key's old mapping is
+    /// invalidated (its content may have changed); if byte-identical
+    /// content is already resident, the key aliases it so this
+    /// tenant's reads hit without refetching.
+    pub fn register_put(&self, key: &str, data: &Arc<Vec<u8>>) {
+        let h = content_hash(data);
+        // Re-putting identical content (e.g. the adaptive-RF re-pin
+        // sweep re-staging every key) is a mapping no-op: don't drop
+        // the key (readers would take a spurious miss) and don't count
+        // an invalidation or a dedup hit.
+        if data.len() <= self.max_object {
+            let existing = {
+                let ix = self.index[self.ishard(key)].lock().unwrap();
+                ix.map.get(key).copied()
+            };
+            if existing == Some(h) {
+                let mut s = self.data[self.dshard(h)].lock().unwrap();
+                let same = s
+                    .entries
+                    .get(&h)
+                    .is_some_and(|e| *e.data == **data);
+                if same {
+                    s.touch(h);
+                    return;
+                }
+            }
+        }
+        self.remove_key(key);
+        if data.len() > self.max_object {
+            return;
+        }
+        let aliased = {
+            let mut s = self.data[self.dshard(h)].lock().unwrap();
+            let aliased = match s.entries.get_mut(&h) {
+                Some(e) if *e.data == **data => {
+                    if !e.keys.iter().any(|k| k == key) {
+                        e.keys.push(key.to_string());
+                    }
+                    true
+                }
+                _ => false,
+            };
+            if aliased {
+                s.touch(h);
+            }
+            aliased
+        };
+        if aliased {
+            self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+            self.index_set(key, h, None);
+        }
+    }
+
+    /// Drop `key`'s mapping (invalidation). The content stays resident
+    /// for other keys — and, unreferenced, as first-in-line eviction
+    /// fodder that still warms a later identical tenant.
+    pub fn remove_key(&self, key: &str) {
+        let old = {
+            let mut ix = self.index[self.ishard(key)].lock().unwrap();
+            // bump even when no mapping exists: an in-flight fill may
+            // be about to commit bytes fetched before this removal
+            ix.epoch += 1;
+            ix.map.remove(key)
+        };
+        if let Some(h) = old {
+            self.invalidated.fetch_add(1, Ordering::Relaxed);
+            self.deref_content(h, key);
+        }
+    }
+
+    /// Drop every key mapping under `prefix` (tenant cleanup).
+    pub fn purge_prefix(&self, prefix: &str) {
+        for ix in &self.index {
+            let removed: Vec<(String, u64)> = {
+                let mut s = ix.lock().unwrap();
+                s.epoch += 1;
+                let gone: Vec<String> = s
+                    .map
+                    .keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned()
+                    .collect();
+                gone.into_iter()
+                    .filter_map(|k| s.map.remove(&k).map(|h| (k, h)))
+                    .collect()
+            };
+            for (k, h) in removed {
+                self.invalidated.fetch_add(1, Ordering::Relaxed);
+                self.deref_content(h, &k);
+            }
+        }
+    }
+
+    /// True iff `key` currently maps to resident content.
+    pub fn contains_key(&self, key: &str) -> bool {
+        let h = {
+            let ix = self.index[self.ishard(key)].lock().unwrap();
+            ix.map.get(key).copied()
+        };
+        match h {
+            Some(h) => {
+                let s = self.data[self.dshard(h)].lock().unwrap();
+                s.entries.contains_key(&h)
+            }
+            None => false,
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut resident_bytes = 0u64;
+        let mut resident_blocks = 0u64;
+        for d in &self.data {
+            let s = d.lock().unwrap();
+            resident_bytes += s.bytes as u64;
+            resident_blocks += s.entries.len() as u64;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserted: self.inserted.load(Ordering::Relaxed),
+            dedup_hits: self.dedup_hits.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            invalidated: self.invalidated.load(Ordering::Relaxed),
+            resident_bytes,
+            resident_blocks,
+        }
+    }
+
+    /// Commit `key` → `h`. With `expected_epoch` set (a read-through
+    /// fill), the commit is refused — returning false — when the
+    /// shard's invalidation epoch moved since the caller snapshotted
+    /// it, i.e. when the fetched bytes may predate a `put`/`remove`.
+    fn index_set(
+        &self,
+        key: &str,
+        h: u64,
+        expected_epoch: Option<u64>,
+    ) -> bool {
+        let old = {
+            let mut ix = self.index[self.ishard(key)].lock().unwrap();
+            if let Some(e0) = expected_epoch {
+                if ix.epoch != e0 {
+                    return false;
+                }
+            }
+            ix.map.insert(key.to_string(), h)
+        };
+        if let Some(oh) = old {
+            if oh != h {
+                self.invalidated.fetch_add(1, Ordering::Relaxed);
+                self.deref_content(oh, key);
+            }
+        }
+        true
+    }
+
+    /// Unlink `key` from content `h` (the entry itself stays resident).
+    fn deref_content(&self, h: u64, key: &str) {
+        let mut s = self.data[self.dshard(h)].lock().unwrap();
+        if let Some(e) = s.entries.get_mut(&h) {
+            e.keys.retain(|k| k != key);
+        }
+    }
+
+    /// After an eviction, drop the evictees' index mappings (done
+    /// outside the data-shard lock, so the two lock families never
+    /// nest).
+    fn clean_evicted(&self, evicted: Vec<(u64, Vec<String>)>) {
+        for (h, keys) in evicted {
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+            for k in keys {
+                let mut ix = self.index[self.ishard(&k)].lock().unwrap();
+                if ix.map.get(&k) == Some(&h) {
+                    ix.map.remove(&k);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(fill: u8, len: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![fill; len])
+    }
+
+    #[test]
+    fn insert_get_round_trip_counts_hits() {
+        let c = BlockCache::new(1 << 20, 4);
+        assert!(c.get("a").is_none());
+        c.insert("a", &block(1, 100));
+        let got = c.get("a").unwrap();
+        assert_eq!(got[0], 1);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert_eq!(st.resident_blocks, 1);
+        assert_eq!(st.resident_bytes, 100);
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_evicts_oldest_probation_first() {
+        // one shard, 1000-byte budget, 250-byte max object
+        let c = BlockCache::new(1000, 1);
+        for i in 0..4 {
+            c.insert(&format!("k{i}"), &block(i as u8, 240));
+        }
+        // promote k1 to protected
+        assert!(c.get("k1").is_some());
+        // two more inserts overflow the budget twice; k0 (oldest
+        // probation) and k2 go, protected k1 survives
+        c.insert("k4", &block(4, 240));
+        c.insert("k5", &block(5, 240));
+        assert!(c.contains_key("k1"), "protected entry evicted");
+        assert!(!c.contains_key("k0"), "oldest probation survived");
+        let st = c.stats();
+        assert_eq!(st.evicted, 2);
+        assert!(st.resident_bytes <= 1000);
+    }
+
+    #[test]
+    fn admission_rejects_oversized_objects() {
+        let c = BlockCache::new(1000, 1); // max object = 250
+        c.insert("big", &block(9, 600));
+        assert!(!c.contains_key("big"));
+        assert_eq!(c.stats().rejected, 1);
+        assert_eq!(c.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn identical_content_dedupes_across_keys() {
+        let c = BlockCache::new(1 << 20, 4);
+        c.insert("j1/b0", &block(7, 500));
+        c.insert("j2/b0", &block(7, 500));
+        let st = c.stats();
+        assert_eq!(st.resident_blocks, 1, "same bytes stored twice");
+        assert_eq!(st.resident_bytes, 500);
+        assert_eq!(st.dedup_hits, 1);
+        // both keys serve the shared bytes
+        assert_eq!(c.get("j1/b0").unwrap()[0], 7);
+        assert_eq!(c.get("j2/b0").unwrap()[0], 7);
+        // dropping one alias keeps the other readable
+        c.remove_key("j1/b0");
+        assert!(!c.contains_key("j1/b0"));
+        assert_eq!(c.get("j2/b0").unwrap()[0], 7);
+    }
+
+    #[test]
+    fn register_put_aliases_resident_content_only() {
+        let c = BlockCache::new(1 << 20, 4);
+        // nothing resident: a put registers no mapping
+        c.register_put("j1/b0", &block(3, 64));
+        assert!(!c.contains_key("j1/b0"));
+        // a read-through fill makes the content resident...
+        c.insert("j1/b0", &block(3, 64));
+        // ...so a second tenant staging identical bytes goes warm
+        c.register_put("j2/b0", &block(3, 64));
+        assert!(c.contains_key("j2/b0"));
+        assert_eq!(c.stats().dedup_hits, 1);
+        assert_eq!(c.stats().resident_blocks, 1);
+    }
+
+    #[test]
+    fn identical_reput_is_a_mapping_noop() {
+        // the adaptive-RF re-pin sweep re-puts every key with the
+        // same bytes: no invalidation, no dedup hit, mapping intact
+        let c = BlockCache::new(1 << 20, 2);
+        c.insert("k", &block(4, 80));
+        let before = c.stats();
+        c.register_put("k", &block(4, 80));
+        let after = c.stats();
+        assert!(c.contains_key("k"), "re-put dropped the mapping");
+        assert_eq!(after.invalidated, before.invalidated);
+        assert_eq!(after.dedup_hits, before.dedup_hits);
+        assert_eq!(after.resident_blocks, 1);
+    }
+
+    #[test]
+    fn overwrite_invalidates_the_old_mapping() {
+        let c = BlockCache::new(1 << 20, 2);
+        c.insert("k", &block(1, 50));
+        // the key's content changes: register_put must not let the
+        // cache keep serving the old bytes
+        c.register_put("k", &block(2, 50));
+        assert!(
+            !c.contains_key("k"),
+            "stale mapping survived an overwrite"
+        );
+        assert!(c.stats().invalidated >= 1);
+    }
+
+    #[test]
+    fn purge_prefix_clears_one_namespace_only() {
+        let c = BlockCache::new(1 << 20, 4);
+        for i in 0..4 {
+            c.insert(&format!("j1/b{i}"), &block(i as u8, 40 + i));
+            c.insert(&format!("j2/b{i}"), &block(10 + i as u8, 80 + i));
+        }
+        c.purge_prefix("j1/");
+        for i in 0..4 {
+            assert!(!c.contains_key(&format!("j1/b{i}")));
+            assert!(c.contains_key(&format!("j2/b{i}")));
+        }
+    }
+
+    #[test]
+    fn unreferenced_content_warms_a_later_identical_key() {
+        let c = BlockCache::new(1 << 20, 2);
+        c.insert("j1/b0", &block(5, 128));
+        c.remove_key("j1/b0");
+        // the bytes are unreferenced but resident: a new tenant
+        // staging the same content aliases them instead of refetching
+        c.register_put("j9/b0", &block(5, 128));
+        assert!(c.contains_key("j9/b0"));
+        assert_eq!(c.get("j9/b0").unwrap().len(), 128);
+    }
+
+    #[test]
+    fn stale_fill_is_refused_after_a_racing_invalidation() {
+        // simulate the read-through race: a fill whose bytes were
+        // fetched before a put/remove landed must not commit
+        let c = BlockCache::new(1 << 20, 2);
+        c.insert("k", &block(1, 50));
+        let epoch = c.key_epoch("k");
+        // the "concurrent" invalidation (Dfs::remove / overwrite)
+        c.remove_key("k");
+        // the in-flight fill resumes with pre-invalidation bytes
+        c.fill("k", &block(1, 50), epoch);
+        assert!(
+            !c.contains_key("k"),
+            "stale fill resurrected a removed key"
+        );
+        // a fresh fill (snapshotted after the invalidation) commits
+        let epoch = c.key_epoch("k");
+        c.fill("k", &block(2, 50), epoch);
+        assert_eq!(c.get("k").unwrap()[0], 2);
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_content_sensitive() {
+        let a = content_hash(&[1, 2, 3]);
+        assert_eq!(a, content_hash(&[1, 2, 3]));
+        assert_ne!(a, content_hash(&[1, 2, 4]));
+    }
+}

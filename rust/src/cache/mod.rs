@@ -1,0 +1,99 @@
+//! The cache subsystem: a worker-side tiered block cache with
+//! cache-affinity scheduling and cross-tenant dedup (DESIGN.md §10).
+//!
+//! The thesis's tiny-task argument only wins while cache-miss savings
+//! are not eclipsed by data-distribution cost — yet without this
+//! layer every task fetch pays the full modeled data-node round trip,
+//! even when the same worker (or another tenant) just staged the
+//! identical block. Three pieces close that gap:
+//!
+//! * [`BlockCache`] — a sharded, byte-budgeted 2Q/LRU cache with
+//!   admission control that the dfs client reads through
+//!   (`Dfs::attach_cache`). Entries are keyed by content hash, so
+//!   tenants staging byte-identical sample blocks under different job
+//!   namespaces share one resident copy (cross-tenant dedup) instead
+//!   of double-fetching. Invalidation is wired into `Dfs::remove` /
+//!   `Dfs::put` and `Prefetcher::purge_prefix`, so a removed or
+//!   overwritten key can never serve stale bytes.
+//! * [`AffinityIndex`] — which worker last held which block, recorded
+//!   by the prefetchers and consulted by the two-step scheduler's
+//!   refill step, which prefers tasks whose blocks the claiming
+//!   worker already holds ([`AffinityHook`] carries the job
+//!   namespace). Busy-skip round-robin and work stealing are
+//!   untouched — affinity reorders refills, it never starves anyone.
+//! * [`CacheLayer`] — the small builder both executors share: attach
+//!   a budgeted cache to a store and/or stand up an affinity
+//!   registry, from the `--cache-mb` / `--affinity` knobs.
+//!
+//! Determinism is untouched by construction: the cache returns the
+//! same bytes the store would, and affinity only changes *where* a
+//! task runs — per-task seeds and the seq-ordered reduce make the job
+//! statistic independent of placement (asserted end to end in
+//! `rust/tests/integration_cache.rs`).
+
+pub mod affinity;
+pub mod block_cache;
+
+use std::sync::Arc;
+
+pub use affinity::{AffinityHook, AffinityIndex};
+pub use block_cache::{content_hash, BlockCache, CacheStats};
+
+use crate::dfs::Dfs;
+
+/// Default shard count for executor-attached caches.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Default affinity-registry capacity (keys) for executor runs.
+pub const DEFAULT_AFFINITY_KEYS: usize = 1 << 16;
+
+/// What one executor run (or one serve pool) holds of the cache
+/// subsystem. Either half can be disabled independently.
+pub struct CacheLayer {
+    pub cache: Option<Arc<BlockCache>>,
+    pub affinity: Option<Arc<AffinityIndex>>,
+}
+
+impl CacheLayer {
+    /// Stand the layer up against `dfs`: a `cache_mb`-MiB block cache
+    /// attached to the store (0 disables), plus an affinity registry
+    /// when `affinity` is set.
+    pub fn build(dfs: &Dfs, cache_mb: usize, affinity: bool) -> CacheLayer {
+        let cache = (cache_mb > 0).then(|| {
+            let c = Arc::new(BlockCache::new(cache_mb << 20, DEFAULT_SHARDS));
+            dfs.attach_cache(c.clone());
+            c
+        });
+        let affinity = affinity
+            .then(|| Arc::new(AffinityIndex::new(DEFAULT_AFFINITY_KEYS)));
+        CacheLayer { cache, affinity }
+    }
+
+    /// The scheduler hook for one job's namespace, when affinity is on.
+    pub fn hook(&self, ns: Arc<str>) -> Option<AffinityHook> {
+        self.affinity
+            .as_ref()
+            .map(|a| AffinityHook::new(a.clone(), ns))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::LatencyModel;
+
+    #[test]
+    fn layer_build_respects_the_knobs() {
+        let dfs = Dfs::new(2, 1, LatencyModel::none());
+        let off = CacheLayer::build(&dfs, 0, false);
+        assert!(off.cache.is_none() && off.affinity.is_none());
+        assert!(off.hook("j1/".into()).is_none());
+
+        let dfs = Dfs::new(2, 1, LatencyModel::none());
+        let on = CacheLayer::build(&dfs, 16, true);
+        assert!(on.cache.is_some() && on.affinity.is_some());
+        let hook = on.hook("j1/".into()).unwrap();
+        assert_eq!(&*hook.ns, "j1/");
+        assert!(dfs.cache().is_some(), "cache not attached to the store");
+    }
+}

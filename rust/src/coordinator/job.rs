@@ -273,6 +273,9 @@ pub fn run_job(
         task_exec: metrics.exec_summary(),
         task_fetch: metrics.fetch_summary(),
         prefetch_hit_rate: metrics.hit_rate(),
+        // the coordinator engine predates the cache layer; its store
+        // runs uncached, so the rate is definitionally zero
+        cache_hit_rate: 0.0,
         final_rf: dfs.replication_factor(),
         restarts: cfg.attempt - 1,
     };

@@ -13,9 +13,23 @@
 
 use crate::error::{Error, Result};
 
+use super::Workload;
+
 pub const MAGIC: u32 = 0x4254_5342;
 pub const KIND_EAGLET: u32 = 0;
 pub const KIND_NETFLIX: u32 = 1;
+
+/// Store key for one sample's block under a job namespace (`""` for
+/// solo runs; [`crate::dfs::job_ns`] prefixes for multiplexed jobs).
+/// Shared by the executors, the serve pool, and the scheduler's
+/// cache-affinity scoring so key construction can never drift.
+pub fn block_key(ns: &str, workload: Workload, sample: u64) -> String {
+    let kind = match workload {
+        Workload::Eaglet => KIND_EAGLET,
+        _ => KIND_NETFLIX,
+    };
+    format!("{ns}{}", BlockId { kind, sample }.key())
+}
 
 /// Identifies one sample's block in the store.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -5,15 +5,31 @@
 //! replica with the lowest estimate (with an occasional exploration probe
 //! so recovered nodes are rediscovered), and every fetch feeds the
 //! estimate back.
+//!
+//! An optional worker-side [`BlockCache`] sits in front of replica
+//! selection ([`Dfs::attach_cache`]): `get` serves cached blocks
+//! without touching a data node, fills the cache on a miss, and keeps
+//! it coherent — `put` invalidates (and dedup-aliases) the key,
+//! `remove` drops it everywhere.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Instant;
 
 use super::ring::Ring;
 use super::store::{DataNode, LatencyModel};
+use crate::cache::{BlockCache, CacheStats};
 use crate::error::{Error, Result};
 use crate::util::stats::Ewma;
+
+/// How the optional shared cache participated in one fetch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheLookup {
+    Hit,
+    Miss,
+    /// No cache attached to this store.
+    Unattached,
+}
 
 pub struct Dfs {
     pub nodes: Vec<Arc<DataNode>>,
@@ -24,6 +40,8 @@ pub struct Dfs {
     /// every Nth fetch probes a non-best replica
     probe_every: u64,
     fetch_seq: AtomicU64,
+    /// Optional read-through block cache (set once, before traffic).
+    cache: OnceLock<Arc<BlockCache>>,
 }
 
 impl Dfs {
@@ -39,7 +57,31 @@ impl Dfs {
             response: Mutex::new(vec![Ewma::new(0.3); n_nodes]),
             probe_every: 16,
             fetch_seq: AtomicU64::new(0),
+            cache: OnceLock::new(),
         })
+    }
+
+    /// Attach a shared read-through block cache. First attach wins;
+    /// returns false (and leaves the existing cache) on later calls.
+    pub fn attach_cache(&self, cache: Arc<BlockCache>) -> bool {
+        self.cache.set(cache).is_ok()
+    }
+
+    pub fn cache(&self) -> Option<&Arc<BlockCache>> {
+        self.cache.get()
+    }
+
+    /// Snapshot of the attached cache's counters, if any.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.get().map(|c| c.stats())
+    }
+
+    /// Drop every cached key under `prefix` (tenant cleanup — wired
+    /// from [`super::Prefetcher::purge_prefix`]).
+    pub fn cache_purge_prefix(&self, prefix: &str) {
+        if let Some(c) = self.cache.get() {
+            c.purge_prefix(prefix);
+        }
     }
 
     pub fn replication_factor(&self) -> usize {
@@ -93,6 +135,12 @@ impl Dfs {
                 self.nodes[n].remove(key);
             }
         }
+        // cache coherence: the key's old mapping is stale now; if the
+        // new content is already resident (another tenant staged the
+        // same bytes), alias it — the cross-tenant dedup path.
+        if let Some(c) = self.cache.get() {
+            c.register_put(key, &data);
+        }
     }
 
     /// Delete a key from every node. The serve layer unstages a job's
@@ -102,10 +150,40 @@ impl Dfs {
         for n in &self.nodes {
             n.remove(key);
         }
+        if let Some(c) = self.cache.get() {
+            c.remove_key(key);
+        }
     }
 
     /// Fetch a block from the best replica; records response time.
     pub fn get(&self, key: &str) -> Result<(Arc<Vec<u8>>, f64)> {
+        self.get_traced(key).map(|(data, wall, _)| (data, wall))
+    }
+
+    /// Like [`Dfs::get`], but reports whether the attached cache
+    /// served the block (per-task hit/miss accounting upstream).
+    pub fn get_traced(
+        &self,
+        key: &str,
+    ) -> Result<(Arc<Vec<u8>>, f64, CacheLookup)> {
+        let Some(cache) = self.cache.get() else {
+            let (data, wall) = self.get_uncached(key)?;
+            return Ok((data, wall, CacheLookup::Unattached));
+        };
+        let t = Instant::now();
+        // epoch first: if a put/remove lands between this snapshot and
+        // the fill below, the fill is refused rather than committing
+        // bytes that predate the invalidation
+        let epoch = cache.key_epoch(key);
+        if let Some(data) = cache.get(key) {
+            return Ok((data, t.elapsed().as_secs_f64(), CacheLookup::Hit));
+        }
+        let (data, wall) = self.get_uncached(key)?;
+        cache.fill(key, &data, epoch);
+        Ok((data, wall, CacheLookup::Miss))
+    }
+
+    fn get_uncached(&self, key: &str) -> Result<(Arc<Vec<u8>>, f64)> {
         let rf = self.replication_factor();
         let reps = self.ring.read().unwrap().replicas(key, rf);
         self.get_from_replicas(&reps, key)
@@ -256,6 +334,7 @@ mod tests {
             response: Mutex::new(vec![Ewma::new(0.3); 2]),
             probe_every: 16,
             fetch_seq: AtomicU64::new(0),
+            cache: OnceLock::new(),
         };
         d.put("x", Arc::new(vec![0u8; 64]));
         for _ in 0..60 {
@@ -281,6 +360,58 @@ mod tests {
     fn missing_key_errors() {
         let d = store(3, 2);
         assert!(d.get("ghost").is_err());
+    }
+
+    #[test]
+    fn read_through_cache_serves_and_stays_coherent() {
+        let d = store(3, 2);
+        assert!(d.attach_cache(Arc::new(BlockCache::new(1 << 20, 2))));
+        assert!(!d.attach_cache(Arc::new(BlockCache::new(1 << 20, 2))));
+        d.put("k", Arc::new(vec![1u8; 64]));
+        // first read fills, second is served by the cache
+        let (_, _, l1) = d.get_traced("k").unwrap();
+        let (_, _, l2) = d.get_traced("k").unwrap();
+        assert_eq!(l1, CacheLookup::Miss);
+        assert_eq!(l2, CacheLookup::Hit);
+        let fetches = d.total_fetches();
+        d.get("k").unwrap();
+        assert_eq!(d.total_fetches(), fetches, "cache hit touched a node");
+        // overwrite: the cache must serve the new bytes, not v1
+        d.put("k", Arc::new(vec![2u8; 64]));
+        let (data, _, _) = d.get_traced("k").unwrap();
+        assert_eq!(data[0], 2);
+        // remove: the cache must not resurrect a deleted key
+        d.remove("k");
+        assert!(d.get("k").is_err());
+    }
+
+    #[test]
+    fn identical_content_dedupes_across_namespaced_keys() {
+        let d = store(3, 2);
+        d.attach_cache(Arc::new(BlockCache::new(1 << 20, 2)));
+        let bytes = vec![9u8; 128];
+        d.put("j1/b", Arc::new(bytes.clone()));
+        d.get("j1/b").unwrap(); // fill: content now resident
+        // a second tenant stages byte-identical content under its own
+        // namespace — its very first read must hit the shared copy
+        d.put("j2/b", Arc::new(bytes));
+        let fetches = d.total_fetches();
+        let (_, _, lookup) = d.get_traced("j2/b").unwrap();
+        assert_eq!(lookup, CacheLookup::Hit, "second tenant refetched");
+        assert_eq!(d.total_fetches(), fetches);
+        let st = d.cache_stats().unwrap();
+        assert!(st.dedup_hits >= 1, "no dedup recorded: {st:?}");
+        assert_eq!(st.resident_blocks, 1);
+    }
+
+    #[test]
+    fn uncached_store_reports_unattached() {
+        let d = store(2, 1);
+        d.put("a", Arc::new(vec![1]));
+        let (_, _, lookup) = d.get_traced("a").unwrap();
+        assert_eq!(lookup, CacheLookup::Unattached);
+        assert!(d.cache_stats().is_none());
+        d.cache_purge_prefix("a"); // no-op without a cache
     }
 
     #[test]

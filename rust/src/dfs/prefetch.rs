@@ -9,7 +9,8 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::client::Dfs;
+use super::client::{CacheLookup, Dfs};
+use crate::cache::AffinityIndex;
 use crate::error::Result;
 use crate::util::stats::Ewma;
 
@@ -36,6 +37,13 @@ pub struct Prefetcher {
     exec_ewma: Ewma,
     pub hits: u64,
     pub misses: u64,
+    /// Shared-cache ([`crate::cache::BlockCache`]) outcomes, counted
+    /// only when the store has a cache attached.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// (worker id, registry) — every fetched key is recorded so the
+    /// scheduler's refill step can route tasks back to this worker.
+    affinity: Option<(usize, Arc<AffinityIndex>)>,
 }
 
 impl Prefetcher {
@@ -49,6 +57,32 @@ impl Prefetcher {
             exec_ewma: Ewma::new(0.3),
             hits: 0,
             misses: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            affinity: None,
+        }
+    }
+
+    /// Record this worker's fetches in `index` (cache-affinity
+    /// dispatch feeds off it).
+    pub fn with_affinity(
+        mut self,
+        worker: usize,
+        index: Arc<AffinityIndex>,
+    ) -> Self {
+        self.affinity = Some((worker, index));
+        self
+    }
+
+    /// Account one store fetch: shared-cache outcome + affinity.
+    fn note_fetch(&mut self, key: &str, lookup: CacheLookup) {
+        match lookup {
+            CacheLookup::Hit => self.cache_hits += 1,
+            CacheLookup::Miss => self.cache_misses += 1,
+            CacheLookup::Unattached => {}
+        }
+        if let Some((worker, index)) = &self.affinity {
+            index.record(*worker, key);
         }
     }
 
@@ -80,8 +114,9 @@ impl Prefetcher {
             if self.cache.contains_key(&key) {
                 continue;
             }
-            let (data, secs) = self.dfs.get(&key)?;
+            let (data, secs, lookup) = self.dfs.get_traced(&key)?;
             self.fetch_ewma.observe(secs);
+            self.note_fetch(&key, lookup);
             self.cache.insert(key, data);
         }
         Ok(())
@@ -92,6 +127,10 @@ impl Prefetcher {
     pub fn take(&mut self, key: &str) -> Result<Arc<Vec<u8>>> {
         if let Some(data) = self.cache.remove(key) {
             self.hits += 1;
+            // still this worker's block — keep its affinity fresh
+            if let Some((worker, index)) = &self.affinity {
+                index.record(*worker, key);
+            }
             return Ok(data);
         }
         self.misses += 1;
@@ -99,8 +138,9 @@ impl Prefetcher {
         if let Some(pos) = self.pending.iter().position(|k| k == key) {
             self.pending.remove(pos);
         }
-        let (data, secs) = self.dfs.get(key)?;
+        let (data, secs, lookup) = self.dfs.get_traced(key)?;
         self.fetch_ewma.observe(secs);
+        self.note_fetch(key, lookup);
         Ok(data)
     }
 
@@ -108,11 +148,27 @@ impl Prefetcher {
         self.cache.len()
     }
 
-    /// Drop every queued and cached key under `prefix`. When the serve
-    /// pool aborts a job attempt, its workers purge the job's namespace
-    /// so stale blocks neither linger in the worker-local cache nor get
-    /// fetched for tasks that will never run.
+    /// Drop every queued and cached key under `prefix`. The full
+    /// tenant-cleanup purge: the worker-local queue and buffer, the
+    /// store's shared block cache, and the affinity registry — a
+    /// departing tenant leaves no key mappings behind anywhere.
+    ///
+    /// Pool workers aborting a job attempt use
+    /// [`Prefetcher::purge_prefix_local`] instead: the job's staged
+    /// blocks are unchanged across attempts, so its shared-cache
+    /// entries stay coherent and keep the restart warm — the shared
+    /// purge runs once, at tenant retirement.
     pub fn purge_prefix(&mut self, prefix: &str) {
+        self.purge_prefix_local(prefix);
+        self.dfs.cache_purge_prefix(prefix);
+        if let Some((_, index)) = &self.affinity {
+            index.forget_prefix(prefix);
+        }
+    }
+
+    /// The worker-local half of [`Prefetcher::purge_prefix`]: clears
+    /// only this prefetcher's pending queue and buffered blocks.
+    pub fn purge_prefix_local(&mut self, prefix: &str) {
         self.pending.retain(|k| !k.starts_with(prefix));
         self.cache.retain(|k, _| !k.starts_with(prefix));
     }
@@ -207,6 +263,32 @@ mod tests {
         assert!(p.hits > hits_before || p.misses > 0);
         // purged keys are refetchable (they were only evicted locally)
         assert!(p.take("j1/b0").is_ok());
+    }
+
+    #[test]
+    fn shared_cache_counters_and_affinity_recording() {
+        let d = dfs_with_blocks(8);
+        d.attach_cache(Arc::new(crate::cache::BlockCache::new(1 << 20, 2)));
+        let index = Arc::new(AffinityIndex::new(1024));
+        let mut p = Prefetcher::new(d.clone(), 4).with_affinity(3, index.clone());
+        // cold pass: every store fetch is a shared-cache miss
+        for k in 0..8 {
+            p.take(&format!("b{k}")).unwrap();
+        }
+        assert_eq!(p.cache_hits, 0);
+        assert_eq!(p.cache_misses, 8);
+        // every fetched key is now attributed to worker 3
+        assert_eq!(index.owner("b0"), Some(3));
+        assert_eq!(index.owner("b7"), Some(3));
+        // warm pass: served by the shared cache
+        for k in 0..8 {
+            p.take(&format!("b{k}")).unwrap();
+        }
+        assert_eq!(p.cache_hits, 8);
+        // purging a prefix forgets its affinity entries too
+        p.purge_prefix("b");
+        assert_eq!(index.owner("b0"), None);
+        assert!(!d.cache().unwrap().contains_key("b0"));
     }
 
     #[test]

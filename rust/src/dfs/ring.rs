@@ -6,16 +6,13 @@
 //! placement primitive: `replicas(key, rf)` walks clockwise from the
 //! key's position over distinct physical nodes.
 
-use crate::util::rng::fnv1a;
+use crate::util::rng::{fnv1a, mix64};
 
 /// fnv1a mixes short, similar strings poorly in the high bits the ring
-/// orders by; finish with a splitmix64-style avalanche.
+/// orders by; finish with the shared avalanche.
 #[inline]
 fn ring_hash(bytes: &[u8]) -> u64 {
-    let mut z = fnv1a(bytes);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
+    mix64(fnv1a(bytes))
 }
 
 #[derive(Debug, Clone)]
@@ -150,6 +147,74 @@ mod tests {
                 moved < expected * 3,
                 "too many keys moved: {moved} vs expected ~{expected}"
             );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_shrink_remaps_bounded() {
+        // removing one node strands only that node's keys: survivors
+        // keep their owner (vnode positions are per-node, independent
+        // of the node count), and the moved share is ~1/n
+        check("ring shrink monotone", 20, |rng| {
+            let n = rng.range(4, 11) as usize;
+            let big = Ring::new(n, 48);
+            let small = Ring::new(n - 1, 48);
+            let total = 2000;
+            let mut moved = 0;
+            for k in 0..total {
+                let key = format!("s{k}");
+                let a = big.primary(&key);
+                let b = small.primary(&key);
+                if a != b {
+                    prop_assert!(
+                        a == n - 1,
+                        "key left a surviving node {a}->{b} (n={n})"
+                    );
+                    moved += 1;
+                }
+            }
+            let expected = total / n;
+            prop_assert!(
+                moved < expected * 3,
+                "too many keys moved on shrink: {moved} vs ~{expected}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_replica_sets_distinct_and_stable_under_growth() {
+        // replica sets are duplicate-free at every (n, rf), and
+        // growing the ring by one node disturbs each set by at most
+        // one member (the walk sequence only gains the new node)
+        check("ring replica sets", 20, |rng| {
+            let n = rng.range(3, 9) as usize;
+            let rf = rng.range(2, (n as u64).min(4) + 1) as usize;
+            let r1 = Ring::new(n, 48);
+            let r2 = r1.grow();
+            for k in 0..300 {
+                let key = format!("r{k}");
+                let old = r1.replicas(&key, rf);
+                let new = r2.replicas(&key, rf);
+                for set in [&old, &new] {
+                    let mut d = (*set).clone();
+                    d.sort_unstable();
+                    d.dedup();
+                    prop_assert!(
+                        d.len() == rf,
+                        "replica set has duplicates: {set:?} (rf={rf})"
+                    );
+                }
+                let lost = old
+                    .iter()
+                    .filter(|&&m| !new.contains(&m))
+                    .count();
+                prop_assert!(
+                    lost <= 1,
+                    "growth displaced {lost} replicas: {old:?} -> {new:?}"
+                );
+            }
             Ok(())
         });
     }

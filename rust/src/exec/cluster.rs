@@ -47,14 +47,15 @@ use std::sync::Arc;
 use std::thread;
 
 use super::backend::Backend;
+use crate::cache::{AffinityIndex, CacheLayer, CacheStats};
 use crate::coordinator::assemble::{execute_slices, MapTask, TaskPartial};
 use crate::coordinator::recovery::{retry, FailurePlan};
 use crate::coordinator::reduce::{
     finalize_netflix, reduce_eaglet, reduce_netflix,
 };
 use crate::coordinator::JobOutput;
-use crate::data::block::{Block, KIND_EAGLET, KIND_NETFLIX};
-use crate::data::{BlockId, Dataset, ModelParams, Workload};
+use crate::data::block::Block;
+use crate::data::{Dataset, ModelParams, Workload};
 use crate::dfs::{
     decide, initial_data_nodes, ControllerState, Dfs, LatencyModel,
     Prefetcher, ReplicationPolicy,
@@ -85,6 +86,11 @@ pub struct ExecConfig {
     /// Tasks kept in flight per worker channel (dispatch lookahead —
     /// what lets the prefetcher pump ahead of execution).
     pub inflight: usize,
+    /// Shared read-through block cache budget in MiB (0 disables).
+    pub cache_mb: usize,
+    /// Cache-affinity dispatch: refill batches prefer the worker
+    /// already holding a task's blocks.
+    pub affinity: bool,
     /// Job seed: drives every task's subsample indices.
     pub seed: u64,
     /// Injected failure (shutdown-ordering and recovery tests).
@@ -107,6 +113,8 @@ impl Default for ExecConfig {
             sched: SchedConfig::default(),
             prefetch_k: 8,
             inflight: 4,
+            cache_mb: 0,
+            affinity: false,
             seed: 0xB75,
             failure: None,
             attempt: 1,
@@ -134,6 +142,10 @@ pub(crate) struct TaskDone {
     pub(crate) queue_wait_s: f64,
     pub(crate) prefetch_hits: u64,
     pub(crate) prefetch_misses: u64,
+    /// Shared block-cache outcomes for this task's fetches (zero when
+    /// no cache is attached to the store).
+    pub(crate) cache_hits: u64,
+    pub(crate) cache_misses: u64,
 }
 
 /// Worker → leader messages.
@@ -188,6 +200,8 @@ pub struct ExecResult {
     /// Data-plane volume: payload bytes served by the store across all
     /// data nodes (replica re-fetches included).
     pub dfs_bytes_served: u64,
+    /// Shared block-cache counters, when `cache_mb > 0`.
+    pub cache: Option<CacheStats>,
     pub workers: Vec<WorkerStats>,
 }
 
@@ -207,19 +221,36 @@ impl ExecResult {
             ("queue_wait_p95_s", num(self.overhead.queue_wait.p95)),
             ("sched_steals", num(self.sched.steals as f64)),
             ("sched_refills", num(self.sched.refills as f64)),
+            ("sched_affinity_routed", num(self.sched.affinity_routed as f64)),
             ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
+            // disambiguates "cache off" from "cache on, zero hits" in
+            // the cross-PR trajectory
+            (
+                "cache_enabled",
+                num(if self.cache.is_some() { 1.0 } else { 0.0 }),
+            ),
+            ("cache_hit_rate", num(self.report.cache_hit_rate)),
+            (
+                "cache_dedup_hits",
+                num(self
+                    .cache
+                    .as_ref()
+                    .map_or(0.0, |c| c.dedup_hits as f64)),
+            ),
+            (
+                "cache_evictions",
+                num(self.cache.as_ref().map_or(0.0, |c| c.evicted as f64)),
+            ),
         ])
     }
 }
 
 /// Store key for one sample's block under a job namespace (`""` for
 /// solo runs; [`crate::dfs::job_ns`] prefixes for multiplexed jobs).
+/// Now shared with the scheduler's affinity scoring via
+/// [`crate::data::block::block_key`].
 pub(crate) fn block_key(ns: &str, workload: Workload, sample: u64) -> String {
-    let kind = match workload {
-        Workload::Eaglet => KIND_EAGLET,
-        _ => KIND_NETFLIX,
-    };
-    format!("{ns}{}", BlockId { kind, sample }.key())
+    crate::data::block::block_key(ns, workload, sample)
 }
 
 /// Encode every sample of `dataset` into the store under `ns`. Returns
@@ -316,12 +347,18 @@ pub(crate) struct JobCtx {
     ctrl: ControllerState,
     dispatch_s: f64,
     dispatch_calls: u64,
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 impl JobCtx {
     /// Build the leader state for one job whose blocks are already
     /// staged in `dfs`. `pool_workers` sizes the scheduler's per-worker
-    /// queues (the number of map slots that will call [`JobCtx::next`]).
+    /// queues (the number of map slots that will call [`JobCtx::next`]);
+    /// `affinity` (when cache-affinity dispatch is on) carries the
+    /// shared registry plus this job's key namespace into the
+    /// scheduler's refill step.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         specs: Vec<TaskSpec>,
         dfs: Arc<Dfs>,
@@ -330,14 +367,18 @@ impl JobCtx {
         samples: usize,
         input_bytes: usize,
         startup_s: f64,
+        affinity: Option<crate::cache::AffinityHook>,
     ) -> Result<JobCtx> {
         let Some(first) = specs.first() else {
             return Err(Error::Data("job packed zero tasks".into()));
         };
         let workload = first.workload;
         let n_tasks = specs.len();
-        let sched =
+        let mut sched =
             TwoStepScheduler::new(specs, pool_workers, cfg.sched.clone());
+        if let Some(hook) = affinity {
+            sched.set_affinity(hook);
+        }
         let rf_trajectory = vec![dfs.replication_factor()];
         Ok(JobCtx {
             cfg,
@@ -360,6 +401,8 @@ impl JobCtx {
             ctrl: ControllerState::default(),
             dispatch_s: 0.0,
             dispatch_calls: 0,
+            cache_hits: 0,
+            cache_misses: 0,
         })
     }
 
@@ -385,6 +428,8 @@ impl JobCtx {
         self.queue_waits.push(d.queue_wait_s);
         self.hits += d.prefetch_hits;
         self.misses += d.prefetch_misses;
+        self.cache_hits += d.cache_hits;
+        self.cache_misses += d.cache_misses;
         let t = Timer::start();
         self.sched.report(d.worker, d.fetch_s, d.exec_s);
         self.dispatch_s += t.secs();
@@ -458,6 +503,14 @@ impl JobCtx {
                 0.0
             } else {
                 h as f64 / (h + m) as f64
+            },
+            cache_hit_rate: {
+                let (ch, cm) = (self.cache_hits, self.cache_misses);
+                if ch + cm == 0 {
+                    0.0
+                } else {
+                    ch as f64 / (ch + cm) as f64
+                }
             },
             final_rf: self.dfs.replication_factor(),
             restarts: self.cfg.attempt - 1,
@@ -547,6 +600,7 @@ pub fn run_cluster(
     )
     .min(cfg.data_nodes);
     let dfs = Dfs::new(cfg.data_nodes, rf0, cfg.latency.clone());
+    let layer = CacheLayer::build(&dfs, cfg.cache_mb, cfg.affinity);
     let (samples, input_bytes, _keys) = stage_dataset(dataset, &dfs, "");
     let specs: Vec<TaskSpec> = tasks
         .into_iter()
@@ -561,6 +615,7 @@ pub fn run_cluster(
         samples,
         input_bytes,
         startup_s,
+        layer.hook("".into()),
     )?;
 
     // ---- map phase: spawn workers, lead the job -------------------------
@@ -576,6 +631,7 @@ pub fn run_cluster(
             prefetch_k: cfg.prefetch_k,
             failure: cfg.failure,
             attempt: cfg.attempt,
+            affinity: layer.affinity.clone(),
         };
         let backend = backend.clone();
         let dfs = dfs.clone();
@@ -651,6 +707,7 @@ pub fn run_cluster(
         overhead: fin.overhead,
         rf_trajectory: fin.rf_trajectory,
         dfs_bytes_served: dfs.bytes_served(),
+        cache: dfs.cache_stats(),
         workers: worker_stats
             .into_iter()
             .enumerate()
@@ -688,6 +745,8 @@ struct WorkerCfg {
     prefetch_k: usize,
     failure: Option<FailurePlan>,
     attempt: u32,
+    /// Shared affinity registry (cache-affinity dispatch), if enabled.
+    affinity: Option<Arc<AffinityIndex>>,
 }
 
 /// Queue a task's block keys (under `ns`) for prefetch, in task order.
@@ -713,6 +772,9 @@ fn worker_main(
     up: mpsc::Sender<WorkerMsg>,
 ) {
     let mut pf = Prefetcher::new(dfs, cfg.prefetch_k);
+    if let Some(index) = cfg.affinity.clone() {
+        pf = pf.with_affinity(cfg.worker, index);
+    }
     let mut queue: VecDeque<TaskSpec> = VecDeque::new();
     let mut executed = 0u64;
     let mut clean = false;
@@ -756,6 +818,7 @@ fn worker_main(
         }
         let Some(spec) = queue.pop_front() else { continue };
         let (h0, m0) = (pf.hits, pf.misses);
+        let (ch0, cm0) = (pf.cache_hits, pf.cache_misses);
         match run_task(&params, &backend, &mut pf, &spec, "") {
             Ok((partial, fetch_s, exec_s)) => {
                 executed += 1;
@@ -768,6 +831,8 @@ fn worker_main(
                     queue_wait_s,
                     prefetch_hits: pf.hits - h0,
                     prefetch_misses: pf.misses - m0,
+                    cache_hits: pf.cache_hits - ch0,
+                    cache_misses: pf.cache_misses - cm0,
                 };
                 if up.send(WorkerMsg::Done(Box::new(done))).is_err() {
                     break;
@@ -903,6 +968,7 @@ mod tests {
             samples,
             bytes,
             0.0,
+            None,
         )
         .unwrap();
         let mut pf = Prefetcher::new(dfs, 4);
@@ -919,6 +985,8 @@ mod tests {
                 queue_wait_s: 0.0,
                 prefetch_hits: 0,
                 prefetch_misses: 0,
+                cache_hits: 0,
+                cache_misses: 0,
             });
         }
         assert!(ctx.is_complete());
@@ -946,6 +1014,7 @@ mod tests {
             samples,
             bytes,
             0.0,
+            None,
         )
         .unwrap();
         let backend = Backend::native(params);

@@ -27,6 +27,7 @@
 //! kernel backend — compiled artifacts or the pure-rust `exec::native`
 //! kernels, so jobs run end to end on hosts without XLA; DESIGN.md §4).
 
+pub mod cache;
 pub mod cachesim;
 pub mod coordinator;
 pub mod data;

@@ -3,7 +3,7 @@
 //! ```text
 //! bts repro [--only ID[,ID...]] [--out DIR]     regenerate paper figures
 //! bts run [--config FILE] [--set k=v ...]       run a real job end to end
-//! bts exec [--workload W] [--workers N] [...]   run via the cluster executor
+//! bts exec [--workload W] [--cache-mb MB] [...]  run via the cluster executor
 //! bts serve [--jobs N] [--workers N] [...]      sustained multi-tenant load
 //! bts submit [--workload W] [--deadline S]      one job through the service
 //! bts profile [--workload W]                    offline kneepoint profiling
@@ -79,12 +79,14 @@ commands:
   repro [--only IDs] [--out DIR]    regenerate every paper table/figure
   run [--config F] [--set k=v]...   run a real job (PJRT execution)
   exec [--workload W] [--workers N] [--samples N] [--sizing S]
+       [--cache-mb MB] [--affinity on|off]
                                     run a job through the in-process
                                     cluster executor (native kernels
                                     when artifacts are unavailable);
                                     writes results/BENCH_exec.json
   serve [--jobs N] [--workers N] [--rate R] [--max-active N]
-        [--samples N] [--seed S]    sustained mixed load through the
+        [--samples N] [--seed S] [--cache-mb MB] [--affinity on|off]
+                                    sustained mixed load through the
                                     long-lived multi-tenant service;
                                     writes results/BENCH_serve.json
   submit [--workload W] [--samples N] [--workers N] [--deadline S]
@@ -105,6 +107,18 @@ fn workload_flag(f: &Flags) -> Result<Workload> {
     let w = f.get("--workload").unwrap_or("eaglet");
     Workload::parse(w)
         .ok_or_else(|| Error::Config(format!("unknown workload {w}")))
+}
+
+/// An on/off flag (`--affinity on`), parsed strictly.
+fn on_off_flag(f: &Flags, name: &str, default: bool) -> Result<bool> {
+    match f.get(name) {
+        None => Ok(default),
+        Some("on" | "true" | "1") => Ok(true),
+        Some("off" | "false" | "0") => Ok(false),
+        Some(v) => Err(Error::Config(format!(
+            "bad {name} value {v}; want on|off"
+        ))),
+    }
 }
 
 fn cmd_repro(args: &[String]) -> Result<()> {
@@ -205,11 +219,20 @@ fn cmd_exec(args: &[String]) -> Result<()> {
 
     let f = Flags::parse(
         args,
-        &["--workload", "--workers", "--samples", "--sizing"],
+        &[
+            "--workload",
+            "--workers",
+            "--samples",
+            "--sizing",
+            "--cache-mb",
+            "--affinity",
+        ],
     )?;
     let w = workload_flag(&f)?;
     let workers: usize = f.num("--workers", 4)?;
     let samples: usize = f.num("--samples", 200)?;
+    let cache_mb: usize = f.num("--cache-mb", 0)?;
+    let affinity = on_off_flag(&f, "--affinity", false)?;
     let backend = Arc::new(Backend::auto());
     let params = backend.manifest().params.clone();
     let knee = kneepoint_bytes(w, &CacheConfig::sandy_bridge());
@@ -223,28 +246,38 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         Some("large") => TaskSizing::LargeSn { workers },
         Some(n) => TaskSizing::Fixed(bts::config::parse_bytes(n)?),
     };
-    let cfg = ExecConfig { sizing, workers, ..Default::default() };
+    let cfg = ExecConfig {
+        sizing,
+        workers,
+        cache_mb,
+        affinity,
+        ..Default::default()
+    };
     let ds = bts::workloads::build_small(w, &params, samples);
     println!(
-        "backend {}  workload {}  {} samples  sizing {:?}  {} workers",
+        "backend {}  workload {}  {} samples  sizing {:?}  {} workers  \
+         cache {} MB  affinity {}",
         backend.name(),
         w.name(),
         samples,
         cfg.sizing,
-        cfg.workers
+        cfg.workers,
+        cfg.cache_mb,
+        if cfg.affinity { "on" } else { "off" }
     );
     let r = run_cluster(ds.as_ref(), backend, &cfg)?;
     println!("{}", r.report.render());
     println!(
         "scheduler: dispatch {:.1} µs/call over {} calls; queue wait \
-         p50 {:.3} ms p95 {:.3} ms; {} refills, {} steals; rf {:?}; \
-         dfs served {:.2} MB",
+         p50 {:.3} ms p95 {:.3} ms; {} refills, {} steals, {} affine; \
+         rf {:?}; dfs served {:.2} MB",
         r.overhead.dispatch_us_per_call(),
         r.overhead.dispatch_calls,
         r.overhead.queue_wait.p50 * 1e3,
         r.overhead.queue_wait.p95 * 1e3,
         r.sched.refills,
         r.sched.steals,
+        r.sched.affinity_routed,
         r.rf_trajectory,
         r.dfs_bytes_served as f64 / 1048576.0
     );
@@ -267,6 +300,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--seed",
             "--max-active",
             "--samples",
+            "--cache-mb",
+            "--affinity",
         ],
     )?;
     let cfg = LoadConfig {
@@ -276,6 +311,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         arrival_rate_per_s: f.num("--rate", 25.0)?,
         seed: f.num("--seed", 0xB75)?,
         base_samples: f.num("--samples", 40)?,
+        cache_mb: f.num("--cache-mb", 0)?,
+        affinity: on_off_flag(&f, "--affinity", false)?,
         ..Default::default()
     };
     let backend = Arc::new(Backend::auto());
@@ -499,5 +536,20 @@ mod tests {
         assert!(workload_flag(&f).is_err());
         let f = Flags::parse(&argv(&[]), &["--workload"]).unwrap();
         assert_eq!(workload_flag(&f).unwrap(), Workload::Eaglet);
+    }
+
+    #[test]
+    fn on_off_flag_parses_and_rejects() {
+        let f = Flags::parse(&argv(&["--affinity=on"]), &["--affinity"])
+            .unwrap();
+        assert!(on_off_flag(&f, "--affinity", false).unwrap());
+        let f = Flags::parse(&argv(&["--affinity", "off"]), &["--affinity"])
+            .unwrap();
+        assert!(!on_off_flag(&f, "--affinity", true).unwrap());
+        let f = Flags::parse(&argv(&[]), &["--affinity"]).unwrap();
+        assert!(on_off_flag(&f, "--affinity", true).unwrap());
+        let f = Flags::parse(&argv(&["--affinity=maybe"]), &["--affinity"])
+            .unwrap();
+        assert!(on_off_flag(&f, "--affinity", false).is_err());
     }
 }

@@ -56,6 +56,9 @@ pub struct JobReport {
     pub task_exec: Summary,
     pub task_fetch: Summary,
     pub prefetch_hit_rate: f64,
+    /// Shared block-cache hit rate over this job's store fetches
+    /// (0 when the executor ran without a cache attached).
+    pub cache_hit_rate: f64,
     pub final_rf: usize,
     pub restarts: u32,
 }
@@ -88,6 +91,7 @@ impl JobReport {
             ("task_exec_p95_s", num(self.task_exec.p95)),
             ("task_fetch_p50_s", num(self.task_fetch.p50)),
             ("prefetch_hit_rate", num(self.prefetch_hit_rate)),
+            ("cache_hit_rate", num(self.cache_hit_rate)),
             ("final_rf", num(self.final_rf as f64)),
             ("restarts", num(self.restarts as f64)),
         ])
@@ -98,7 +102,7 @@ impl JobReport {
             "job[{} on {}] {} tasks / {} samples / {:.2} MB in {:.3}s \
              (startup {:.3}s, map {:.3}s, reduce {:.3}s) => {:.2} MB/s; \
              task exec p50 {:.1}ms p95 {:.1}ms; fetch p50 {:.2}ms; \
-             prefetch hits {:.0}%; rf {}; restarts {}",
+             prefetch hits {:.0}%; cache hits {:.0}%; rf {}; restarts {}",
             self.workload,
             self.platform,
             self.tasks,
@@ -113,6 +117,7 @@ impl JobReport {
             self.task_exec.p95 * 1e3,
             self.task_fetch.p50 * 1e3,
             self.prefetch_hit_rate * 100.0,
+            self.cache_hit_rate * 100.0,
             self.final_rf,
             self.restarts,
         )
@@ -181,6 +186,7 @@ mod tests {
             task_exec: summarize(&[0.01]),
             task_fetch: summarize(&[0.001]),
             prefetch_hit_rate: 0.9,
+            cache_hit_rate: 0.5,
             final_rf: 3,
             restarts: 0,
         };

@@ -6,13 +6,29 @@
 //! sits behind one mutex — the scheduler is *supposed* to be cheap
 //! relative to even tiny tasks (the paper's BashReduce point), and the
 //! hot-path bench (`benches/hot_paths.rs`) holds us to it.
+//!
+//! **Cache-affinity dispatch** (opt-in via
+//! [`TwoStepScheduler::set_affinity`]): when a refill batch is built,
+//! a bounded window at the front of the pending pool is scored by how
+//! many of each task's blocks the claiming worker already holds
+//! ([`crate::cache::AffinityIndex`]), and the batch takes the
+//! best-scoring tasks first — seq order breaks ties, and zero-score
+//! batches degrade to the plain FIFO refill. The probe step, the
+//! busy-skip round-robin sweep, and work stealing are deliberately
+//! untouched: affinity reorders refills, it never starves a worker.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
 
 use super::feedback::{batch_size, FeedbackStats};
+use crate::cache::AffinityHook;
+use crate::data::block::block_key;
 use crate::data::Workload;
 use crate::kneepoint::PackedTask;
+
+/// How far into the pending pool a refill looks for affine tasks.
+/// Bounded so the scoring scan stays off the hot-path critical path.
+const AFFINITY_WINDOW: usize = 32;
 
 /// A schedulable unit: a packed task plus everything the worker needs
 /// to run it (workload kind and the subsample-index seed for this task).
@@ -72,6 +88,9 @@ struct Inner {
     assigned: u64,
     steals: u64,
     refills: u64,
+    /// Tasks a refill placed on a worker already holding ≥1 of their
+    /// blocks (the affinity win counter).
+    affinity_routed: u64,
 }
 
 /// See module docs. One instance per job.
@@ -79,6 +98,7 @@ pub struct TwoStepScheduler {
     cfg: SchedConfig,
     workers: usize,
     total: usize,
+    affinity: Option<AffinityHook>,
     inner: Mutex<Inner>,
 }
 
@@ -91,6 +111,7 @@ pub struct SchedSnapshot {
     pub completed: u64,
     pub steals: u64,
     pub refills: u64,
+    pub affinity_routed: u64,
 }
 
 impl TwoStepScheduler {
@@ -109,9 +130,18 @@ impl TwoStepScheduler {
                 assigned: 0,
                 steals: 0,
                 refills: 0,
+                affinity_routed: 0,
             }),
+            affinity: None,
             cfg,
         }
+    }
+
+    /// Enable cache-affinity dispatch: refill batches prefer tasks
+    /// whose blocks (under the hook's namespace) the claiming worker
+    /// already holds. Must be called before workers start claiming.
+    pub fn set_affinity(&mut self, hook: AffinityHook) {
+        self.affinity = Some(hook);
     }
 
     pub fn total_tasks(&self) -> usize {
@@ -176,14 +206,9 @@ impl TwoStepScheduler {
         let headroom =
             self.cfg.max_queue.saturating_sub(g.queues[worker].len()).max(1);
         let want = scaled.clamp(1, headroom);
-        for _ in 0..want {
-            match g.pending.pop_front() {
-                Some(t) => {
-                    g.queues[worker].push_back(t);
-                    g.assigned += 1;
-                }
-                None => break,
-            }
+        for t in self.pick_batch(g, worker, want) {
+            g.queues[worker].push_back(t);
+            g.assigned += 1;
         }
         g.refills += 1;
         // Round-robin sweep: give one task to each other worker whose
@@ -200,6 +225,64 @@ impl TwoStepScheduler {
             }
         }
         g.rr = (g.rr + 1) % self.workers;
+    }
+
+    /// Take up to `want` tasks from the pending pool for `worker`.
+    /// Plain FIFO without affinity; with it, a bounded front window is
+    /// scored by how many of each task's blocks the worker holds, and
+    /// the batch takes the best scores first (seq order on ties — a
+    /// zero-score window degrades to exactly the FIFO batch).
+    fn pick_batch(
+        &self,
+        g: &mut Inner,
+        worker: usize,
+        want: usize,
+    ) -> Vec<TaskSpec> {
+        let want = want.min(g.pending.len());
+        if want == 0 {
+            return Vec::new();
+        }
+        let Some(hook) = &self.affinity else {
+            return g.pending.drain(..want).collect();
+        };
+        if hook.index.recorded() == 0 || want == g.pending.len() {
+            // nothing recorded yet, or the batch takes the whole pool
+            // anyway (order within one worker's queue is irrelevant):
+            // skip the scoring scan under the scheduler lock
+            return g.pending.drain(..want).collect();
+        }
+        let window = g.pending.len().min(AFFINITY_WINDOW.max(want));
+        let mut scored: Vec<(usize, usize)> = (0..window)
+            .map(|i| {
+                let spec = &g.pending[i];
+                let score = hook.index.score(
+                    worker,
+                    spec.task
+                        .sample_ids
+                        .iter()
+                        .map(|&id| block_key(&hook.ns, spec.workload, id)),
+                );
+                (i, score)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        scored.truncate(want);
+        g.affinity_routed +=
+            scored.iter().filter(|(_, s)| *s > 0).count() as u64;
+        // Pull the chosen positions out of the deque back to front so
+        // earlier indices stay valid, then restore the chosen order.
+        let chosen: Vec<usize> = scored.iter().map(|&(i, _)| i).collect();
+        let mut by_pos = chosen.clone();
+        by_pos.sort_unstable();
+        by_pos.reverse();
+        let mut pulled: HashMap<usize, TaskSpec> = by_pos
+            .into_iter()
+            .map(|i| (i, g.pending.remove(i).expect("window index in range")))
+            .collect();
+        chosen
+            .into_iter()
+            .map(|i| pulled.remove(&i).expect("chosen index pulled"))
+            .collect()
     }
 
     fn steal(g: &mut Inner, thief: usize) -> Option<TaskSpec> {
@@ -228,6 +311,7 @@ impl TwoStepScheduler {
             completed: g.stats.completed,
             steals: g.steals,
             refills: g.refills,
+            affinity_routed: g.affinity_routed,
         }
     }
 
@@ -244,11 +328,13 @@ impl TwoStepScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::AffinityIndex;
     use crate::kneepoint::{pack, TaskSizing};
     use crate::data::SampleMeta;
     use crate::prop_assert;
     use crate::util::prop::check;
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
     fn specs(n: usize) -> Vec<TaskSpec> {
         let metas: Vec<SampleMeta> = (0..n as u64)
@@ -388,6 +474,66 @@ mod tests {
             prop_assert!(seen.len() == n, "{} of {n} tasks ran", seen.len());
             Ok(())
         });
+    }
+
+    #[test]
+    fn affinity_routes_tasks_to_block_holders() {
+        let index = Arc::new(AffinityIndex::new(1024));
+        // worker 1 already holds the blocks of samples 5..10
+        for id in 5..10u64 {
+            index.record(1, &block_key("", Workload::Eaglet, id));
+        }
+        // small batches so the refill has a real choice to make (a
+        // batch that would drain the whole pool skips scoring)
+        let cfg = SchedConfig { max_batch: 4, ..Default::default() };
+        let mut s = TwoStepScheduler::new(specs(20), 2, cfg);
+        s.set_affinity(AffinityHook::new(index, "".into()));
+        // the probe step stays FIFO
+        let probe = s.next(1).unwrap();
+        assert_eq!(probe.task.seq, 0);
+        s.report(1, 0.001, 0.01);
+        // the feedback refill prefers the held blocks
+        let t = s.next(1).unwrap();
+        assert!(
+            (5..10).contains(&t.task.seq),
+            "refill ignored affinity: got seq {}",
+            t.task.seq
+        );
+        assert!(s.snapshot().affinity_routed >= 1);
+    }
+
+    #[test]
+    fn zero_score_affinity_degrades_to_fifo() {
+        let index = Arc::new(AffinityIndex::new(1024));
+        // non-empty registry (so the scoring path runs), but nothing
+        // relevant to this job's keys
+        index.record(0, "other-job/blk");
+        let mut s =
+            TwoStepScheduler::new(specs(10), 2, SchedConfig::default());
+        s.set_affinity(AffinityHook::new(index, "".into()));
+        let probe = s.next(0).unwrap();
+        assert_eq!(probe.task.seq, 0);
+        s.report(0, 0.001, 0.01);
+        let t = s.next(0).unwrap();
+        assert_eq!(t.task.seq, 1, "empty registry must keep seq order");
+        assert_eq!(s.snapshot().affinity_routed, 0);
+    }
+
+    #[test]
+    fn affinity_still_conserves_every_task() {
+        let index = Arc::new(AffinityIndex::new(1024));
+        for id in 0..40u64 {
+            index.record((id % 3) as usize, &block_key("", Workload::Eaglet, id));
+        }
+        let mut s =
+            TwoStepScheduler::new(specs(103), 3, SchedConfig::default());
+        s.set_affinity(AffinityHook::new(index, "".into()));
+        let got = drain_all(&s, 3);
+        let mut seqs: Vec<usize> = got.into_iter().flatten().collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..103).collect::<Vec<_>>());
+        assert_eq!(s.snapshot().pending, 0);
+        assert_eq!(s.snapshot().queued, 0);
     }
 
     #[test]

@@ -157,7 +157,10 @@ pub(crate) fn pop_index<T>(
 /// The feasibility gate: can `estimate_s` of simulated work fit the
 /// deadline at all? (`None` deadline is always feasible.)
 pub fn feasible(estimate_s: f64, deadline_s: Option<f64>) -> bool {
-    deadline_s.map_or(true, |d| estimate_s <= d)
+    match deadline_s {
+        Some(d) => estimate_s <= d,
+        None => true,
+    }
 }
 
 #[cfg(test)]

@@ -38,6 +38,10 @@ pub struct LoadConfig {
     /// Every Nth job asks for a deadline no configuration can meet and
     /// must be rejected at admission. 0 disables.
     pub infeasible_every: usize,
+    /// Shared block cache budget in MiB for the pool (0 disables).
+    pub cache_mb: usize,
+    /// Cache-affinity dispatch across the warm pool.
+    pub affinity: bool,
 }
 
 impl Default for LoadConfig {
@@ -50,6 +54,8 @@ impl Default for LoadConfig {
             seed: 0xB75,
             base_samples: 40,
             infeasible_every: 5,
+            cache_mb: 0,
+            affinity: false,
         }
     }
 }
@@ -103,7 +109,12 @@ pub fn run_load(
     let svc = JobService::start(
         backend,
         ServeConfig {
-            pool: PoolConfig { workers: cfg.workers, ..Default::default() },
+            pool: PoolConfig {
+                workers: cfg.workers,
+                cache_mb: cfg.cache_mb,
+                affinity: cfg.affinity,
+                ..Default::default()
+            },
             max_active: cfg.max_active,
             ..Default::default()
         },

@@ -21,6 +21,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 
+use crate::cache::{AffinityIndex, CacheLayer};
 use crate::data::ModelParams;
 use crate::dfs::{job_ns, Dfs, LatencyModel, Prefetcher};
 use crate::error::{Error, Result};
@@ -42,6 +43,12 @@ pub struct PoolConfig {
     pub latency: LatencyModel,
     /// Upper bound on each worker's prefetch depth k.
     pub prefetch_k: usize,
+    /// Shared block cache budget in MiB (0 disables). The cache is
+    /// keyed by content hash, so concurrent tenants staging identical
+    /// sample blocks dedupe instead of double-fetching.
+    pub cache_mb: usize,
+    /// Cache-affinity dispatch across the warm pool.
+    pub affinity: bool,
 }
 
 impl Default for PoolConfig {
@@ -52,6 +59,8 @@ impl Default for PoolConfig {
             replication_factor: 2,
             latency: LatencyModel::none(),
             prefetch_k: 8,
+            cache_mb: 0,
+            affinity: false,
         }
     }
 }
@@ -96,6 +105,8 @@ pub(crate) struct WorkerPool {
     pub(crate) dfs: Arc<Dfs>,
     pub(crate) workers: usize,
     pub(crate) spawned: usize,
+    /// Shared affinity registry (None unless `PoolConfig::affinity`).
+    pub(crate) affinity: Option<Arc<AffinityIndex>>,
     txs: Vec<mpsc::Sender<PoolMsg>>,
     handles: Vec<thread::JoinHandle<()>>,
 }
@@ -117,13 +128,18 @@ impl WorkerPool {
             cfg.replication_factor.max(1),
             cfg.latency.clone(),
         );
+        let layer = CacheLayer::build(&dfs, cfg.cache_mb, cfg.affinity);
         let mut txs = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
         let mut spawned = 0;
         for w in 0..cfg.workers {
             let (tx, rx) = mpsc::channel::<PoolMsg>();
             txs.push(tx);
-            let prefetch_k = cfg.prefetch_k;
+            let wcfg = PoolWorkerCfg {
+                worker: w,
+                prefetch_k: cfg.prefetch_k,
+                affinity: layer.affinity.clone(),
+            };
             let params = params.clone();
             let backend = backend.clone();
             let dfs = dfs.clone();
@@ -132,9 +148,7 @@ impl WorkerPool {
                 thread::Builder::new()
                     .name(format!("bts-serve-worker-{w}"))
                     .spawn(move || {
-                        pool_worker_main(
-                            w, prefetch_k, params, backend, dfs, rx, up,
-                        )
+                        pool_worker_main(wcfg, params, backend, dfs, rx, up)
                     })
                     .map_err(|e| {
                         Error::Scheduler(format!("spawn pool worker {w}: {e}"))
@@ -142,7 +156,14 @@ impl WorkerPool {
             );
             spawned += 1;
         }
-        Ok(WorkerPool { dfs, workers: cfg.workers, spawned, txs, handles })
+        Ok(WorkerPool {
+            dfs,
+            workers: cfg.workers,
+            spawned,
+            affinity: layer.affinity,
+            txs,
+            handles,
+        })
     }
 
     /// Push a message to one worker. `false` means the worker's channel
@@ -171,19 +192,29 @@ impl WorkerPool {
     }
 }
 
+/// Per-worker knobs handed to [`pool_worker_main`].
+struct PoolWorkerCfg {
+    worker: usize,
+    prefetch_k: usize,
+    affinity: Option<Arc<AffinityIndex>>,
+}
+
 /// One persistent pool worker: the same drain → wait → execute loop as
 /// the solo executor's workers, but job-tagged, namespace-aware, and
 /// immortal until `Shutdown` — task failures are reported and survived.
 fn pool_worker_main(
-    worker: usize,
-    prefetch_k: usize,
+    cfg: PoolWorkerCfg,
     params: ModelParams,
     backend: Arc<Backend>,
     dfs: Arc<Dfs>,
     rx: mpsc::Receiver<PoolMsg>,
     up: mpsc::Sender<PoolUp>,
 ) {
-    let mut pf = Prefetcher::new(dfs, prefetch_k);
+    let worker = cfg.worker;
+    let mut pf = Prefetcher::new(dfs, cfg.prefetch_k);
+    if let Some(index) = cfg.affinity {
+        pf = pf.with_affinity(worker, index);
+    }
     let mut queue: VecDeque<PoolTask> = VecDeque::new();
     let mut executed = 0u64;
     let handle_abort =
@@ -194,7 +225,11 @@ fn pool_worker_main(
             let before = queue.len();
             queue.retain(|t| !(t.job == job && t.attempt <= upto));
             let dropped = (before - queue.len()) as u64;
-            pf.purge_prefix(&job_ns(job));
+            // local-only: the job's staged blocks are unchanged across
+            // attempts, so its shared-cache entries stay coherent (and
+            // keep the restart warm); shared-structure invalidation
+            // happens once, at retirement
+            pf.purge_prefix_local(&job_ns(job));
             let _ = up.send(PoolUp::Aborted { worker, dropped });
         };
     'outer: loop {
@@ -250,6 +285,7 @@ fn pool_worker_main(
             continue;
         }
         let (h0, m0) = (pf.hits, pf.misses);
+        let (ch0, cm0) = (pf.cache_hits, pf.cache_misses);
         match run_task(&params, &backend, &mut pf, &task.spec, &task.ns) {
             Ok((partial, fetch_s, exec_s)) => {
                 executed += 1;
@@ -262,6 +298,8 @@ fn pool_worker_main(
                     queue_wait_s,
                     prefetch_hits: pf.hits - h0,
                     prefetch_misses: pf.misses - m0,
+                    cache_hits: pf.cache_hits - ch0,
+                    cache_misses: pf.cache_misses - cm0,
                 };
                 let sent = up.send(PoolUp::Done {
                     job: task.job,

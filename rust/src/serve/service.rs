@@ -28,6 +28,7 @@ use super::admission::{
     QueuedJob,
 };
 use super::pool::{PoolConfig, PoolMsg, PoolTask, PoolUp, WorkerPool};
+use crate::cache::{AffinityHook, CacheStats};
 use crate::coordinator::JobOutput;
 use crate::data::ModelParams;
 use crate::dfs::job_ns;
@@ -141,6 +142,9 @@ pub struct ServeReport {
     /// Tasks executed per worker over the whole session.
     pub worker_executed: Vec<u64>,
     pub dfs_bytes_served: u64,
+    /// Shared block-cache counters over the whole session, when the
+    /// pool ran with `cache_mb > 0` (hit rate, cross-tenant dedup).
+    pub cache: Option<CacheStats>,
     /// Job ids in completion order (EDF tests read this).
     pub completed_order: Vec<u64>,
 }
@@ -181,15 +185,52 @@ impl ServeReport {
             ("workers_spawned", num(self.workers_spawned as f64)),
             ("worker_respawns", num(self.worker_respawns() as f64)),
             ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
+            // disambiguates "cache off" from "cache on, zero hits" in
+            // the cross-PR trajectory
+            (
+                "cache_enabled",
+                num(if self.cache.is_some() { 1.0 } else { 0.0 }),
+            ),
+            (
+                "cache_hit_rate",
+                num(self.cache.as_ref().map_or(0.0, |c| c.hit_rate())),
+            ),
+            (
+                "cache_dedup_hits",
+                num(self
+                    .cache
+                    .as_ref()
+                    .map_or(0.0, |c| c.dedup_hits as f64)),
+            ),
+            (
+                "cache_evictions",
+                num(self.cache.as_ref().map_or(0.0, |c| c.evicted as f64)),
+            ),
+            (
+                "cache_resident_bytes",
+                num(self
+                    .cache
+                    .as_ref()
+                    .map_or(0.0, |c| c.resident_bytes as f64)),
+            ),
         ])
     }
 
     pub fn render(&self) -> String {
+        let cache = match &self.cache {
+            Some(c) => format!(
+                "; cache hits {:.0}% ({} dedup, {} evictions)",
+                c.hit_rate() * 100.0,
+                c.dedup_hits,
+                c.evicted
+            ),
+            None => String::new(),
+        };
         format!(
             "serve[{} workers, {} spawned] {} jobs in {:.2}s \
              ({} failed, {} rejected); {} tasks => {:.1} tasks/s; \
              queue wait p50 {:.1}ms p95 {:.1}ms; ttfp p50 {:.1}ms; \
-             e2e p50 {:.1}ms p95 {:.1}ms; dfs served {:.2} MB",
+             e2e p50 {:.1}ms p95 {:.1}ms; dfs served {:.2} MB{}",
             self.workers,
             self.workers_spawned,
             self.jobs_completed,
@@ -204,6 +245,7 @@ impl ServeReport {
             self.e2e.p50 * 1e3,
             self.e2e.p95 * 1e3,
             self.dfs_bytes_served as f64 / 1048576.0,
+            cache,
         )
     }
 }
@@ -498,6 +540,7 @@ impl Dispatcher {
         let workers = self.pool.workers;
         let spawned = self.pool.spawned;
         let dfs_bytes_served = self.pool.dfs.bytes_served();
+        let cache = self.pool.dfs.cache_stats();
         let pool = self.pool;
         pool.shutdown();
         let mut worker_executed = vec![0u64; workers];
@@ -528,6 +571,7 @@ impl Dispatcher {
             workers_spawned: spawned,
             worker_executed,
             dfs_bytes_served,
+            cache,
             completed_order: self.completed_order,
         };
         let _ = report_tx.send(report);
@@ -581,6 +625,11 @@ impl Dispatcher {
             platform: "bts-serve".into(),
             ..ExecConfig::default()
         };
+        let hook = self
+            .pool
+            .affinity
+            .as_ref()
+            .map(|a| AffinityHook::new(a.clone(), ns.clone()));
         match JobCtx::new(
             specs.clone(),
             self.pool.dfs.clone(),
@@ -589,6 +638,7 @@ impl Dispatcher {
             samples,
             input_bytes,
             startup_s,
+            hook,
         ) {
             Ok(ctx) => {
                 self.active.push(ActiveJob {
@@ -636,7 +686,7 @@ impl Dispatcher {
                 let i = (self.rr + off) % n;
                 let job = &mut self.active[i];
                 if let Some(spec) = job.ctx.next(w) {
-                    let poison = job.fault.map_or(false, |f| {
+                    let poison = job.fault.is_some_and(|f| {
                         f.applies_to(job.attempt)
                             && job.dispatched == f.after_tasks
                     });
@@ -723,7 +773,13 @@ impl Dispatcher {
             self.rr % self.active.len()
         };
         for k in &a.keys {
+            // also invalidates the shared block cache's key mappings
+            // (the content stays resident as dedup fodder for later
+            // identical tenants until the byte budget reclaims it)
             self.pool.dfs.remove(k);
+        }
+        if let Some(aff) = &self.pool.affinity {
+            aff.forget_prefix(&a.ns);
         }
         a
     }
@@ -742,6 +798,11 @@ impl Dispatcher {
             return; // stale attempt — already restarted or retired
         };
         self.pool.abort(job, attempt);
+        // NB: the shared block cache and affinity registry are *not*
+        // purged here — the job's blocks stay staged byte-identical
+        // for the restart, so its cached entries are still coherent
+        // and make the retry warm. Shared-structure invalidation
+        // happens at retirement (`retire_active`), once.
         if self.active[i].attempt >= self.active[i].max_attempts {
             let a = self.retire_active(i);
             let _ = a.reply.send(Err(Error::JobFailed {
@@ -755,15 +816,27 @@ impl Dispatcher {
         let dfs = self.pool.dfs.clone();
         // Blocks stay staged; same specs + seeds mean the restart
         // reproduces the statistic exactly.
-        let (specs, cfg, samples, input_bytes, startup_s) = {
+        let (specs, cfg, samples, input_bytes, startup_s, ns) = {
             let a = &mut self.active[i];
             a.attempt += 1;
             a.dispatched = 0;
             a.first_partial = None;
             let mut cfg = a.cfg.clone();
             cfg.attempt = a.attempt;
-            (a.specs.clone(), cfg, a.samples, a.input_bytes, a.startup_s)
+            (
+                a.specs.clone(),
+                cfg,
+                a.samples,
+                a.input_bytes,
+                a.startup_s,
+                a.ns.clone(),
+            )
         };
+        let hook = self
+            .pool
+            .affinity
+            .as_ref()
+            .map(|a| AffinityHook::new(a.clone(), ns));
         match JobCtx::new(
             specs,
             dfs,
@@ -772,6 +845,7 @@ impl Dispatcher {
             samples,
             input_bytes,
             startup_s,
+            hook,
         ) {
             Ok(ctx) => self.active[i].ctx = ctx,
             Err(e) => {

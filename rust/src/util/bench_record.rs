@@ -1,14 +1,52 @@
 //! `BENCH_*.json` trajectory writer.
 //!
-//! Every benchmark-bearing surface (`bts exec`, `bts serve`, and
-//! whatever future PRs add) funnels its flat metrics records through
-//! this one writer, so `results/` accumulates a comparable perf trail:
-//! one `BENCH_<name>.json` per surface, each a JSON array of flat
-//! records in the baseline format `examples/end_to_end.rs` first wrote
-//! to `results/exec_baseline.json` (see `ExecResult::metrics_json`).
+//! Every benchmark-bearing surface (`bts exec`, `bts serve`,
+//! `cargo bench --bench cache_affinity`, and whatever future PRs add)
+//! funnels its flat metrics records through this one writer, so
+//! `results/` accumulates a comparable perf trail: one
+//! `BENCH_<name>.json` per surface, each a JSON array of flat records
+//! in the baseline format `examples/end_to_end.rs` first wrote to
+//! `results/exec_baseline.json` (see `ExecResult::metrics_json`).
+//!
+//! Each record is stamped with a schema version and run metadata
+//! (host threads, cargo profile) before it lands on disk, so records
+//! from different PRs — and from hosts of different sizes or debug
+//! builds — stay comparable across the whole trajectory. Stamping
+//! never overwrites a key a record already carries.
 
-use super::json::{arr, Json};
+use super::json::{arr, num, s, Json};
 use crate::error::Result;
+
+/// Version stamped into every record; bump on incompatible changes to
+/// the record shape so trajectory readers can branch on it.
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// The run-metadata pairs added to every record.
+fn run_meta() -> Vec<(&'static str, Json)> {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
+    vec![
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("host_threads", num(threads as f64)),
+        ("cargo_profile", s(profile)),
+    ]
+}
+
+/// Stamp one record with the schema version and run metadata. Only
+/// object records are stamped; existing keys always win.
+pub fn stamp(record: Json) -> Json {
+    match record {
+        Json::Obj(mut m) => {
+            for (k, v) in run_meta() {
+                m.entry(k.to_string()).or_insert(v);
+            }
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
 
 /// Write `records` to `results/BENCH_<name>.json`; returns the path.
 pub fn write(name: &str, records: Vec<Json>) -> Result<String> {
@@ -23,14 +61,15 @@ pub fn write_in(
 ) -> Result<String> {
     std::fs::create_dir_all(dir)?;
     let path = format!("{dir}/BENCH_{name}.json");
-    std::fs::write(&path, arr(records).to_string_pretty())?;
+    let stamped: Vec<Json> = records.into_iter().map(stamp).collect();
+    std::fs::write(&path, arr(stamped).to_string_pretty())?;
     Ok(path)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::json::{num, obj};
+    use crate::util::json::obj;
 
     #[test]
     fn writes_parseable_record_arrays() {
@@ -60,5 +99,49 @@ mod tests {
         }
         let _ = std::fs::remove_file(&path);
         let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn every_record_is_stamped_with_schema_and_run_meta() {
+        let dir = std::env::temp_dir()
+            .join("bts_bench_record_stamp_test")
+            .to_string_lossy()
+            .into_owned();
+        let path = write_in(
+            &dir,
+            "stamped",
+            vec![obj(vec![("total_s", num(1.0))])],
+        )
+        .unwrap();
+        let back =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let Json::Arr(v) = back else { panic!("expected array") };
+        let r = &v[0];
+        assert_eq!(
+            r.req_usize("schema_version").unwrap(),
+            SCHEMA_VERSION as usize
+        );
+        assert!(r.req_usize("host_threads").unwrap() >= 1);
+        let profile = r.req_str("cargo_profile").unwrap();
+        assert!(
+            profile == "debug" || profile == "release",
+            "odd profile {profile}"
+        );
+        // the original fields survive
+        assert!((r.req_f64("total_s").unwrap() - 1.0).abs() < 1e-12);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn stamping_never_overwrites_caller_keys() {
+        let r = stamp(obj(vec![("host_threads", num(99.0))]));
+        assert_eq!(r.req_usize("host_threads").unwrap(), 99);
+        assert_eq!(
+            r.req_usize("schema_version").unwrap(),
+            SCHEMA_VERSION as usize
+        );
+        // non-object records pass through untouched
+        assert_eq!(stamp(num(7.0)), num(7.0));
     }
 }

@@ -46,9 +46,19 @@ impl Flags {
                 Some(v) => v,
                 None => {
                     i += 1;
-                    args.get(i).cloned().ok_or_else(|| {
+                    let v = args.get(i).cloned().ok_or_else(|| {
                         Error::Config(format!("flag {name} needs a value"))
-                    })?
+                    })?;
+                    // `--workers --workload x` is a dropped value, not
+                    // a value that happens to start with `--`; demand
+                    // the inline form for flag-like values.
+                    if v.starts_with("--") {
+                        return Err(Error::Config(format!(
+                            "flag {name} needs a value, got {v}; use \
+                             {name}=VALUE if the value starts with --"
+                        )));
+                    }
+                    v
                 }
             };
             vals.push((name, value));
@@ -132,6 +142,42 @@ mod tests {
         let f = Flags::parse(&argv(&["--workers", "many"]), &["--workers"])
             .unwrap();
         assert!(f.num::<usize>("--workers", 1).is_err());
+    }
+
+    #[test]
+    fn space_form_never_swallows_a_following_flag() {
+        // `--workers --workload x` is a user who dropped a value, not
+        // a value of "--workload"
+        let err = Flags::parse(
+            &argv(&["--workers", "--workload", "eaglet"]),
+            &["--workers", "--workload"],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("--workers needs a value"));
+        // the inline form still accepts flag-like values
+        let f = Flags::parse(&argv(&["--set=--weird"]), &["--set"]).unwrap();
+        assert_eq!(f.get("--set"), Some("--weird"));
+        // negative numbers are plain values in either form
+        let f = Flags::parse(&argv(&["--delta", "-3"]), &["--delta"])
+            .unwrap();
+        assert_eq!(f.num::<i64>("--delta", 0).unwrap(), -3);
+    }
+
+    #[test]
+    fn both_spellings_mix_and_last_occurrence_wins() {
+        let f = Flags::parse(
+            &argv(&["--workers", "2", "--workers=8"]),
+            &["--workers"],
+        )
+        .unwrap();
+        assert_eq!(f.num::<usize>("--workers", 0).unwrap(), 8);
+        // an unknown flag errors in the space-separated form too
+        let err = Flags::parse(
+            &argv(&["--wrokers", "8"]),
+            &["--workers", "--delta"],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown flag --wrokers"));
     }
 
     #[test]

@@ -28,6 +28,16 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// SplitMix64-style avalanche finisher: fnv1a mixes short, similar
+/// strings poorly in the high bits, so hash consumers that shard or
+/// order by them (the dfs ring, the block cache) finish with this.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256++ — fast, high-quality, 2^256-1 period.
 #[derive(Debug, Clone)]
 pub struct Rng {

@@ -1,0 +1,207 @@
+//! The cache subsystem end to end: determinism with the cache and
+//! affinity dispatch enabled (solo, multiplexed, and through
+//! job-level recovery), warm second tenants deduping against the
+//! shared pool cache, and the per-job hit-rate metrics. Native
+//! backend; no artifacts needed.
+
+use std::sync::Arc;
+
+use bts::data::{ModelParams, Workload};
+use bts::exec::{
+    run_cluster, run_cluster_with_recovery, Backend, ExecConfig,
+};
+use bts::coordinator::FailurePlan;
+use bts::kneepoint::TaskSizing;
+use bts::serve::{JobRequest, JobService, PoolConfig, ServeConfig};
+use bts::workloads::build_small;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+fn cfg(cache_mb: usize, affinity: bool) -> ExecConfig {
+    ExecConfig {
+        sizing: TaskSizing::Kneepoint(16 * 1024),
+        workers: 4,
+        cache_mb,
+        affinity,
+        seed: 0xCAC4E,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn cache_and_affinity_never_change_the_statistic() {
+    for w in [Workload::Eaglet, Workload::NetflixHi] {
+        let ds = build_small(w, &ModelParams::default(), 24);
+        let plain =
+            run_cluster(ds.as_ref(), native(), &cfg(0, false)).unwrap();
+        let cached =
+            run_cluster(ds.as_ref(), native(), &cfg(32, false)).unwrap();
+        let affine =
+            run_cluster(ds.as_ref(), native(), &cfg(32, true)).unwrap();
+        assert_eq!(
+            plain.output,
+            cached.output,
+            "cache changed the {} statistic",
+            w.name()
+        );
+        assert_eq!(
+            plain.output,
+            affine.output,
+            "affinity dispatch changed the {} statistic",
+            w.name()
+        );
+        // the cached run carries its counters
+        let stats = cached.cache.expect("cache stats missing");
+        assert!(
+            stats.inserted > 0,
+            "read-through fill never ran: {stats:?}"
+        );
+        assert!(plain.cache.is_none());
+    }
+}
+
+#[test]
+fn repeat_cached_runs_reproduce_bit_for_bit() {
+    let ds = build_small(Workload::NetflixLo, &ModelParams::default(), 20);
+    let a = run_cluster(ds.as_ref(), native(), &cfg(32, true)).unwrap();
+    let b = run_cluster(ds.as_ref(), native(), &cfg(32, true)).unwrap();
+    assert_eq!(a.output, b.output, "repeat run diverged with cache on");
+}
+
+#[test]
+fn recovery_with_cache_reproduces_the_clean_result() {
+    let ds = build_small(Workload::Eaglet, &ModelParams::default(), 25);
+    let base = ExecConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: 3,
+        ..cfg(32, true)
+    };
+    let clean = run_cluster(ds.as_ref(), native(), &base).unwrap();
+    let mut failing = base.clone();
+    failing.failure = Some(FailurePlan {
+        worker: 1,
+        after_tasks: 2,
+        on_attempt: 1,
+    });
+    let recovered =
+        run_cluster_with_recovery(ds.as_ref(), native(), &failing, 3)
+            .unwrap();
+    assert_eq!(recovered.report.restarts, 1);
+    assert_eq!(
+        recovered.output, clean.output,
+        "job-level recovery diverged with the cache enabled"
+    );
+}
+
+#[test]
+fn warm_second_tenant_dedupes_against_the_shared_cache() {
+    let svc = JobService::start(
+        native(),
+        ServeConfig {
+            pool: PoolConfig {
+                workers: 4,
+                cache_mb: 32,
+                affinity: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let req = JobRequest::new(Workload::Eaglet, 20)
+        .with_seed(0xF00D)
+        .with_sizing(TaskSizing::Kneepoint(16 * 1024));
+    // cold tenant: every store fetch misses the empty cache
+    let cold = svc.submit(req.clone()).unwrap().wait().unwrap();
+    assert!(
+        cold.report.cache_hit_rate < 0.5,
+        "cold run hit rate {} — cache was not cold",
+        cold.report.cache_hit_rate
+    );
+    // second tenant stages byte-identical blocks under its own job
+    // namespace: staging aliases the resident content (dedup), so its
+    // reads hit without refetching from the data nodes
+    let warm = svc.submit(req.clone()).unwrap().wait().unwrap();
+    assert!(
+        warm.report.cache_hit_rate > 0.9,
+        "warm tenant only hit {:.2} of its fetches",
+        warm.report.cache_hit_rate
+    );
+    // identical request + per-job seeds: identical statistic
+    assert_eq!(cold.output, warm.output);
+    let report = svc.shutdown().unwrap();
+    let stats = report.cache.expect("pool ran with a cache");
+    assert!(
+        stats.dedup_hits > 0,
+        "cross-tenant dedup never fired: {stats:?}"
+    );
+    // the record surfaces the cache fields
+    let j = bts::util::json::Json::parse(
+        &report.metrics_json().to_string_pretty(),
+    )
+    .unwrap();
+    assert!(j.req_f64("cache_hit_rate").unwrap() > 0.0);
+    assert!(j.req_f64("cache_dedup_hits").unwrap() > 0.0);
+}
+
+#[test]
+fn tenant_cleanup_keeps_namespaces_isolated() {
+    // Different content must never dedupe: two workloads with
+    // different bytes through one cached pool, interleaved, still
+    // match their solo oracles.
+    let svc = JobService::start(
+        native(),
+        ServeConfig {
+            pool: PoolConfig {
+                workers: 3,
+                cache_mb: 16,
+                affinity: true,
+                ..Default::default()
+            },
+            max_active: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let reqs: Vec<JobRequest> = (0..4)
+        .map(|i| {
+            let w = if i % 2 == 0 {
+                Workload::Eaglet
+            } else {
+                Workload::NetflixHi
+            };
+            JobRequest::new(w, 16)
+                .with_seed(0xA0 + i as u64)
+                .with_sizing(TaskSizing::Kneepoint(16 * 1024))
+        })
+        .collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|r| svc.submit(r.clone()).unwrap())
+        .collect();
+    let results: Vec<_> =
+        handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    for (req, res) in reqs.iter().zip(&results) {
+        let ds =
+            build_small(req.workload, &ModelParams::default(), req.samples);
+        let solo = run_cluster(
+            ds.as_ref(),
+            native(),
+            &ExecConfig {
+                sizing: req.sizing,
+                seed: req.seed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            res.output,
+            solo.output,
+            "multiplexed cached job {} diverged from its solo run",
+            res.id
+        );
+    }
+    svc.shutdown().unwrap();
+}
