@@ -1,0 +1,179 @@
+//! Transport overhead: the distribution half of the thesis's tiny-task
+//! trade, now a measured, swappable axis.
+//!
+//!     cargo bench --bench transport_overhead
+//!
+//! Runs the same job (same seed, same packing) over the two
+//! transports and prices what changed:
+//!
+//! * **per-task dispatch** — leader-side scheduler claim + link send
+//!   (`SchedOverhead::dispatch_us_per_call`), mpsc channel vs framed
+//!   loopback TCP;
+//! * **data distribution** — per-task fetch time with blocks served
+//!   from the local replicated store (in-proc) vs leader-proxied
+//!   `DfsGet` over the socket, with and without a worker-local block
+//!   cache in front of the wire.
+//!
+//! Outputs are asserted bit-identical across all configurations
+//! before anything is recorded (a perf number for a wrong answer is
+//! noise). Writes the trajectory record to
+//! `results/BENCH_transport.json`.
+
+use std::sync::Arc;
+use std::thread;
+
+use bts::data::{ModelParams, Workload};
+use bts::exec::{run_cluster, Backend, ExecConfig, ExecResult};
+use bts::kneepoint::TaskSizing;
+use bts::net::run_worker;
+use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
+use bts::util::bench::Bench;
+use bts::util::json::{num, obj, s, Json};
+
+const SEED: u64 = 0xB75;
+const SAMPLES: usize = 96;
+
+fn base_cfg() -> ExecConfig {
+    ExecConfig {
+        sizing: TaskSizing::Kneepoint(16 * 1024),
+        seed: SEED,
+        ..Default::default()
+    }
+}
+
+/// One TCP run: bind, stand up `n` remote worker sessions, run the
+/// job over `local` in-proc slots + the remotes.
+fn run_tcp(
+    backend: &Arc<Backend>,
+    ds: &dyn bts::data::Dataset,
+    local: usize,
+    n_remote: usize,
+    worker_cache_mb: usize,
+) -> ExecResult {
+    let remote = RemoteWorkers::bind("127.0.0.1:0", n_remote)
+        .expect("bind loopback");
+    let addr = remote.addr();
+    let workers: Vec<_> = (0..n_remote)
+        .map(|_| {
+            let addr = addr.clone();
+            let backend = backend.clone();
+            thread::spawn(move || {
+                run_worker(
+                    &addr,
+                    backend,
+                    &RemoteWorkerOpts {
+                        cache_mb: worker_cache_mb,
+                        ..Default::default()
+                    },
+                )
+                .expect("worker session")
+            })
+        })
+        .collect();
+    let r = run_cluster(
+        ds,
+        backend.clone(),
+        &ExecConfig {
+            workers: local,
+            remote: Some(remote),
+            ..base_cfg()
+        },
+    )
+    .expect("tcp run");
+    for h in workers {
+        h.join().unwrap();
+    }
+    r
+}
+
+fn flat(name: &str, r: &ExecResult) -> Json {
+    obj(vec![
+        ("config", s(name)),
+        ("tasks", num(r.report.tasks as f64)),
+        (
+            "dispatch_us_per_task",
+            num(r.overhead.dispatch_us_per_call()),
+        ),
+        ("queue_wait_p50_s", num(r.overhead.queue_wait.p50)),
+        ("queue_wait_p95_s", num(r.overhead.queue_wait.p95)),
+        ("task_fetch_p50_s", num(r.report.task_fetch.p50)),
+        ("task_fetch_p95_s", num(r.report.task_fetch.p95)),
+        ("task_exec_p50_s", num(r.report.task_exec.p50)),
+        ("map_s", num(r.report.map_s)),
+        ("total_s", num(r.report.total_s)),
+        ("dfs_bytes_served", num(r.dfs_bytes_served as f64)),
+        ("prefetch_hit_rate", num(r.report.prefetch_hit_rate)),
+        ("cache_hit_rate", num(r.report.cache_hit_rate)),
+    ])
+}
+
+fn main() {
+    let backend = Arc::new(Backend::native(ModelParams::default()));
+    let mut b = Bench::new("transport_overhead").with_iters(0, 1);
+    let ds =
+        bts::workloads::build_small(Workload::Eaglet, &ModelParams::default(), SAMPLES);
+
+    // ---- in-proc channels: the baseline spine -----------------------
+    let inproc = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig { workers: 2, ..base_cfg() },
+    )
+    .expect("inproc run");
+
+    // ---- loopback TCP: same slot count, framed transport ------------
+    let tcp = run_tcp(&backend, ds.as_ref(), 0, 2, 0);
+    // ---- loopback TCP + worker-local cache over the data plane ------
+    let tcp_cached = run_tcp(&backend, ds.as_ref(), 0, 2, 32);
+    // ---- mixed: one local slot, one remote --------------------------
+    let mixed = run_tcp(&backend, ds.as_ref(), 1, 1, 0);
+
+    // A perf number for a wrong answer is noise: equivalence first.
+    assert_eq!(inproc.output, tcp.output, "tcp changed the statistic");
+    assert_eq!(
+        inproc.output, tcp_cached.output,
+        "worker cache changed the statistic"
+    );
+    assert_eq!(inproc.output, mixed.output, "mixed set changed the statistic");
+
+    for (name, r) in [
+        ("inproc", &inproc),
+        ("tcp", &tcp),
+        ("tcp_worker_cache", &tcp_cached),
+        ("mixed", &mixed),
+    ] {
+        b.record(
+            &format!("{name}_dispatch_us_per_task"),
+            r.overhead.dispatch_us_per_call(),
+            "us",
+        );
+        b.record(
+            &format!("{name}_task_fetch_p50"),
+            r.report.task_fetch.p50,
+            "s",
+        );
+        b.record(&format!("{name}_map"), r.report.map_s, "s");
+        println!(
+            "{name:>18}: dispatch {:6.1} us/task  fetch p50 {:8.6}s  \
+             queue-wait p50 {:8.6}s  map {:.3}s  ({} tasks, {:.2} MB served)",
+            r.overhead.dispatch_us_per_call(),
+            r.report.task_fetch.p50,
+            r.overhead.queue_wait.p50,
+            r.report.map_s,
+            r.report.tasks,
+            r.dfs_bytes_served as f64 / 1048576.0,
+        );
+    }
+
+    let records = vec![
+        flat("inproc", &inproc),
+        flat("tcp", &tcp),
+        flat("tcp_worker_cache", &tcp_cached),
+        flat("mixed_local_remote", &mixed),
+    ];
+    let path = bts::util::bench_record::write("transport", records)
+        .expect("write BENCH_transport.json");
+    println!("wrote {path}");
+
+    b.finish();
+}

@@ -31,6 +31,40 @@ pub enum CacheLookup {
     Unattached,
 }
 
+/// A worker's view of the data plane: where its [`super::Prefetcher`]
+/// gets blocks from. In-proc workers hold the replicated [`Dfs`]
+/// directly; remote workers hold a
+/// [`crate::transport::remote::RemoteDfs`] that proxies fetches over
+/// the job socket (the leader answers from this same store, so
+/// replica selection, response-time EWMAs and the shared block cache
+/// still apply to them). Abstracting the source — not the prefetcher
+/// — is what lets the data-distribution overhead be a measured,
+/// swappable axis.
+pub trait BlockSource: Send + Sync {
+    /// Fetch one block: (bytes, wall seconds, cache outcome).
+    fn get_traced(&self, key: &str)
+        -> Result<(Arc<Vec<u8>>, f64, CacheLookup)>;
+
+    /// Drop key mappings under `prefix` from any cache this source
+    /// fronts (tenant retirement / job abort). Default: nothing to
+    /// purge.
+    fn cache_purge_prefix(&self, _prefix: &str) {}
+}
+
+impl BlockSource for Dfs {
+    fn get_traced(
+        &self,
+        key: &str,
+    ) -> Result<(Arc<Vec<u8>>, f64, CacheLookup)> {
+        // Inherent method (takes precedence over the trait's name).
+        Dfs::get_traced(self, key)
+    }
+
+    fn cache_purge_prefix(&self, prefix: &str) {
+        Dfs::cache_purge_prefix(self, prefix);
+    }
+}
+
 pub struct Dfs {
     pub nodes: Vec<Arc<DataNode>>,
     ring: RwLock<Ring>,

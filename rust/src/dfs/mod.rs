@@ -14,7 +14,7 @@ pub mod replication;
 pub mod ring;
 pub mod store;
 
-pub use client::{CacheLookup, Dfs};
+pub use client::{BlockSource, CacheLookup, Dfs};
 
 /// Key prefix isolating one job's blocks in a shared store. The serve
 /// layer multiplexes many tenants over a single [`Dfs`]; prefixing every

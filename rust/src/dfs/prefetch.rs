@@ -9,7 +9,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::client::{CacheLookup, Dfs};
+use super::client::{BlockSource, CacheLookup};
 use crate::cache::AffinityIndex;
 use crate::error::Result;
 use crate::util::stats::Ewma;
@@ -27,8 +27,12 @@ pub fn prefetch_depth(avg_fetch_s: f64, avg_exec_s: f64, max_k: usize) -> usize 
 /// Worker-local block cache fed ahead of execution. Single-threaded by
 /// design — each worker owns one (fetches happen between task executions
 /// on the worker's thread; the *k* depth bounds how far ahead it reads).
+/// Generic over the [`BlockSource`] data plane: the local replicated
+/// store for in-proc workers, a leader-proxied socket path for remote
+/// ones — prefetch depth, hit accounting and affinity recording are
+/// transport-independent.
 pub struct Prefetcher {
-    dfs: Arc<Dfs>,
+    src: Arc<dyn BlockSource>,
     cache: HashMap<String, Arc<Vec<u8>>>,
     /// keys queued but not yet fetched, in task order
     pending: std::collections::VecDeque<String>,
@@ -47,9 +51,9 @@ pub struct Prefetcher {
 }
 
 impl Prefetcher {
-    pub fn new(dfs: Arc<Dfs>, max_k: usize) -> Self {
+    pub fn new(src: Arc<dyn BlockSource>, max_k: usize) -> Self {
         Prefetcher {
-            dfs,
+            src,
             cache: HashMap::new(),
             pending: std::collections::VecDeque::new(),
             max_k,
@@ -114,7 +118,7 @@ impl Prefetcher {
             if self.cache.contains_key(&key) {
                 continue;
             }
-            let (data, secs, lookup) = self.dfs.get_traced(&key)?;
+            let (data, secs, lookup) = self.src.get_traced(&key)?;
             self.fetch_ewma.observe(secs);
             self.note_fetch(&key, lookup);
             self.cache.insert(key, data);
@@ -138,7 +142,7 @@ impl Prefetcher {
         if let Some(pos) = self.pending.iter().position(|k| k == key) {
             self.pending.remove(pos);
         }
-        let (data, secs, lookup) = self.dfs.get_traced(key)?;
+        let (data, secs, lookup) = self.src.get_traced(key)?;
         self.fetch_ewma.observe(secs);
         self.note_fetch(key, lookup);
         Ok(data)
@@ -160,7 +164,7 @@ impl Prefetcher {
     /// purge runs once, at tenant retirement.
     pub fn purge_prefix(&mut self, prefix: &str) {
         self.purge_prefix_local(prefix);
-        self.dfs.cache_purge_prefix(prefix);
+        self.src.cache_purge_prefix(prefix);
         if let Some((_, index)) = &self.affinity {
             index.forget_prefix(prefix);
         }
@@ -178,6 +182,7 @@ impl Prefetcher {
 mod tests {
     use super::*;
     use crate::dfs::store::LatencyModel;
+    use crate::dfs::Dfs;
 
     #[test]
     fn depth_grows_with_fetch_time() {

@@ -1,32 +1,37 @@
-//! The in-process cluster: a leader and N worker threads joined by
-//! mpsc channels, driving one job end to end.
+//! The cluster executor: a leader and N map slots joined by the
+//! pluggable transport layer, driving one job end to end.
 //!
-//! Roles (thesis Fig 7, collapsed into one process):
+//! Roles (thesis Fig 7):
 //!
 //! * **Leader** (the calling thread): packs samples into kneepoint-
 //!   sized tasks, stages their blocks into the replicated store, owns
 //!   the [`TwoStepScheduler`], pushes [`TaskSpec`]s down per-worker
-//!   channels (keeping a small dispatch window in flight so worker
+//!   links (keeping a small dispatch window in flight so worker
 //!   prefetchers have lookahead), collects partials, drives the
 //!   adaptive replication controller, and runs the reduce tree.
-//! * **Workers**: each owns a [`Prefetcher`] over the shared [`Dfs`]
-//!   and an [`Exec`] backend reference; for every task it fetches and
-//!   decodes blocks, assembles bucket slices, executes the map kernel,
-//!   and ships the merged [`TaskPartial`] back up.
+//! * **Workers**: every map slot runs [`crate::transport::worker_body`]
+//!   over a [`crate::transport::WorkerLink`] — local threads over mpsc
+//!   channels, and (with [`ExecConfig::remote`]) `bts worker
+//!   --connect` processes over framed TCP, fetching blocks through
+//!   the leader-proxied DFS path instead of receiving data inline.
+//!   Above the links the leader cannot tell the transports apart.
 //!
 //! Shutdown ordering is explicit: the leader sends `Shutdown` to a
 //! worker only when the scheduler has no work left for it and nothing
 //! of its is in flight; workers acknowledge by reporting `Exited`, and
-//! the leader joins every worker thread before reducing. A worker
-//! failure aborts the attempt (all workers are told to stop, then
-//! joined) and surfaces as `Err` — job-level recovery restarts the
-//! whole job via [`run_cluster_with_recovery`], reproducing the
-//! statistic exactly (per-task seeds, seq-ordered reduce).
+//! the leader joins every link before reducing. A worker failure —
+//! reported ([`Up::TaskFailed`]) or transport-level
+//! ([`Up::Lost`], e.g. a TCP worker dropping mid-job) — aborts the
+//! attempt (all workers are told to stop, then joined) and surfaces
+//! as `Err`; job-level recovery restarts the whole job via
+//! [`run_cluster_with_recovery`], reproducing the statistic exactly
+//! (per-task seeds, seq-ordered reduce — the transport-independent
+//! determinism contract).
 //!
 //! Since the serve layer landed, the per-job half of the leader lives
 //! in [`JobCtx`]: scheduler ownership, partial collection, per-task
 //! timing, the replication feedback loop, and the seq-ordered reduce.
-//! `run_cluster` drives exactly one `JobCtx` over workers it spawns and
+//! `run_cluster` drives exactly one `JobCtx` over links it spawns and
 //! joins itself; `serve::JobService` drives *many* `JobCtx`s over a
 //! persistent [`crate::serve::PoolConfig`]-sized pool, which is what
 //! turns this executor into a long-lived multi-tenant service. Block
@@ -41,30 +46,31 @@
 //! latency and scheduler overhead (leader dispatch time + worker queue
 //! wait).
 
-use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::thread;
 
 use super::backend::Backend;
-use crate::cache::{AffinityIndex, CacheLayer, CacheStats};
-use crate::coordinator::assemble::{execute_slices, MapTask, TaskPartial};
+use crate::cache::{CacheLayer, CacheStats};
+use crate::coordinator::assemble::TaskPartial;
 use crate::coordinator::recovery::{retry, FailurePlan};
 use crate::coordinator::reduce::{
     finalize_netflix, reduce_eaglet, reduce_netflix,
 };
 use crate::coordinator::JobOutput;
-use crate::data::block::Block;
 use crate::data::{Dataset, ModelParams, Workload};
 use crate::dfs::{
     decide, initial_data_nodes, ControllerState, Dfs, LatencyModel,
-    Prefetcher, ReplicationPolicy,
+    ReplicationPolicy,
 };
 use crate::error::{Error, Result};
 use crate::kneepoint::TaskSizing;
 use crate::metrics::{JobReport, Timer};
 use crate::runtime::Exec;
 use crate::scheduler::{SchedConfig, SchedSnapshot, TaskSpec, TwoStepScheduler};
+use crate::transport::{
+    accept_links, teardown, BodyCfg, Down, RemoteWorkers, TaskDone,
+    TaskEnvelope, Up, WorkerLink,
+};
 use crate::util::json::{num, obj, Json};
 use crate::util::stats::{summarize, Summary};
 
@@ -72,8 +78,15 @@ use crate::util::stats::{summarize, Summary};
 #[derive(Debug, Clone)]
 pub struct ExecConfig {
     pub sizing: TaskSizing,
-    /// Worker threads (map slots).
+    /// Local worker threads (in-proc map slots).
     pub workers: usize,
+    /// Remote TCP map slots: a pre-bound listener plus how many
+    /// `bts worker --connect` processes to accept on it. Remote
+    /// workers take the slot indices after the local ones. The
+    /// listener lives in the config (an `Arc`), so job-level recovery
+    /// reuses it across attempts — reconnecting workers are adopted
+    /// by the next attempt.
+    pub remote: Option<RemoteWorkers>,
     /// Data nodes backing the replicated store.
     pub data_nodes: usize,
     pub latency: LatencyModel,
@@ -83,7 +96,7 @@ pub struct ExecConfig {
     pub sched: SchedConfig,
     /// Upper bound on the per-worker prefetch depth k.
     pub prefetch_k: usize,
-    /// Tasks kept in flight per worker channel (dispatch lookahead —
+    /// Tasks kept in flight per worker link (dispatch lookahead —
     /// what lets the prefetcher pump ahead of execution).
     pub inflight: usize,
     /// Shared read-through block cache budget in MiB (0 disables).
@@ -106,6 +119,7 @@ impl Default for ExecConfig {
         ExecConfig {
             sizing: TaskSizing::Kneepoint(256 * 1024),
             workers: 4,
+            remote: None,
             data_nodes: 4,
             latency: LatencyModel::none(),
             replication: ReplicationPolicy::default(),
@@ -123,36 +137,11 @@ impl Default for ExecConfig {
     }
 }
 
-/// Leader → worker messages.
-enum LeaderMsg {
-    Task(Box<TaskSpec>),
-    Shutdown,
-}
-
-/// One finished task, reported up the shuffle channel. Prefetch
-/// counters are per-task deltas, so an accumulator can attribute them
-/// to the right job even when one worker serves many jobs.
-pub(crate) struct TaskDone {
-    pub(crate) worker: usize,
-    pub(crate) seq: usize,
-    pub(crate) partial: TaskPartial,
-    pub(crate) fetch_s: f64,
-    pub(crate) exec_s: f64,
-    /// Seconds the worker sat idle waiting for this task to arrive.
-    pub(crate) queue_wait_s: f64,
-    pub(crate) prefetch_hits: u64,
-    pub(crate) prefetch_misses: u64,
-    /// Shared block-cache outcomes for this task's fetches (zero when
-    /// no cache is attached to the store).
-    pub(crate) cache_hits: u64,
-    pub(crate) cache_misses: u64,
-}
-
-/// Worker → leader messages.
-enum WorkerMsg {
-    Done(Box<TaskDone>),
-    Failed { error: Error },
-    Exited { worker: usize, executed: u64, clean: bool },
+impl ExecConfig {
+    /// Total map slots: local threads plus remote TCP workers.
+    pub fn slots(&self) -> usize {
+        self.workers + self.remote.as_ref().map_or(0, |r| r.count)
+    }
 }
 
 /// Per-worker lifecycle accounting (shutdown-ordering tests key off
@@ -162,7 +151,7 @@ pub struct WorkerStats {
     pub worker: usize,
     pub executed: u64,
     /// The worker exited because the leader told it to (orderly
-    /// drain), not because a channel died under it.
+    /// drain), not because a link died under it.
     pub clean_shutdown: bool,
 }
 
@@ -171,7 +160,7 @@ pub struct WorkerStats {
 #[derive(Debug, Clone)]
 pub struct SchedOverhead {
     /// Leader wall time spent inside scheduler claim/report calls and
-    /// channel dispatch.
+    /// link dispatch.
     pub dispatch_s: f64,
     pub dispatch_calls: u64,
     /// Worker-side idle wait for the next task after finishing one.
@@ -198,7 +187,8 @@ pub struct ExecResult {
     /// Replication-factor trajectory (initial → final decisions).
     pub rf_trajectory: Vec<usize>,
     /// Data-plane volume: payload bytes served by the store across all
-    /// data nodes (replica re-fetches included).
+    /// data nodes (replica re-fetches included; remote workers'
+    /// DFS-proxied fetches land here too).
     pub dfs_bytes_served: u64,
     /// Shared block-cache counters, when `cache_mb > 0`.
     pub cache: Option<CacheStats>,
@@ -247,7 +237,7 @@ impl ExecResult {
 
 /// Store key for one sample's block under a job namespace (`""` for
 /// solo runs; [`crate::dfs::job_ns`] prefixes for multiplexed jobs).
-/// Now shared with the scheduler's affinity scoring via
+/// Shared with the scheduler's affinity scoring via
 /// [`crate::data::block::block_key`].
 pub(crate) fn block_key(ns: &str, workload: Workload, sample: u64) -> String {
     crate::data::block::block_key(ns, workload, sample)
@@ -276,7 +266,8 @@ pub(crate) fn stage_dataset(
 /// Reduce seq-ordered task partials into the job statistic. Both the
 /// solo executor and the serve layer finish jobs through this single
 /// path — that shared, order-fixed reduce is the determinism argument
-/// for "a multiplexed job equals its solo run, bit for bit".
+/// for "a multiplexed job equals its solo run, bit for bit" and for
+/// "a TCP run equals its in-proc run, bit for bit".
 fn reduce_partials(
     backend: &Backend,
     params: &ModelParams,
@@ -323,7 +314,7 @@ pub(crate) struct FinishedJob {
 /// partials, times every scheduler interaction, drives the adaptive
 /// replication controller, and reduces in seq order when complete.
 ///
-/// `run_cluster` drives one of these over workers it spawns itself;
+/// `run_cluster` drives one of these over links it spawns itself;
 /// the serve dispatcher drives one per in-flight job over a shared
 /// persistent pool — "one job among many" with no per-job spawn/join.
 pub(crate) struct JobCtx {
@@ -535,32 +526,41 @@ impl JobCtx {
 }
 
 /// Keep `worker` topped up to `target` in-flight tasks. Sends
-/// `Shutdown` (and retires the channel) once the scheduler is dry for
+/// `Shutdown` (and retires the link) once the scheduler is dry for
 /// this worker and nothing is in flight.
+#[allow(clippy::too_many_arguments)]
 fn top_up(
     ctx: &mut JobCtx,
-    task_txs: &mut [Option<mpsc::Sender<LeaderMsg>>],
+    links: &[WorkerLink],
+    retired: &mut [bool],
     inflight: &mut [usize],
     w: usize,
     target: usize,
+    attempt: u32,
+    ns: &Arc<str>,
 ) {
-    while inflight[w] < target {
-        // Own a handle (Sender is an Arc clone) so retiring the slot
-        // below never aliases the borrow.
-        let Some(tx) = task_txs[w].clone() else { return };
+    while !retired[w] && inflight[w] < target {
         match ctx.next(w) {
             Some(spec) => {
-                if tx.send(LeaderMsg::Task(Box::new(spec))).is_err() {
-                    // Worker gone; its Exited/Failed message explains.
-                    task_txs[w] = None;
+                let env = TaskEnvelope {
+                    job: 0,
+                    attempt,
+                    ns: ns.clone(),
+                    spec,
+                    poison: false,
+                };
+                if links[w].send(Down::Task(Box::new(env))) {
+                    inflight[w] += 1;
+                } else {
+                    // Link gone; its Lost/Exited message explains.
+                    retired[w] = true;
                     return;
                 }
-                inflight[w] += 1;
             }
             None => {
                 if inflight[w] == 0 {
-                    let _ = tx.send(LeaderMsg::Shutdown);
-                    task_txs[w] = None;
+                    let _ = links[w].send(Down::Shutdown);
+                    retired[w] = true;
                 }
                 return;
             }
@@ -568,16 +568,19 @@ fn top_up(
     }
 }
 
-/// Run one cluster attempt. A worker failure (injected or real)
-/// surfaces as `Err` after an orderly abort — job-level recovery
-/// restarts the whole job, never a task.
+/// Run one cluster attempt. A worker failure — injected, real, or a
+/// dropped remote link — surfaces as `Err` after an orderly abort;
+/// job-level recovery restarts the whole job, never a task.
 pub fn run_cluster(
     dataset: &dyn Dataset,
     backend: Arc<Backend>,
     cfg: &ExecConfig,
 ) -> Result<ExecResult> {
-    if cfg.workers == 0 {
-        return Err(Error::Config("cluster needs at least one worker".into()));
+    let slots = cfg.slots();
+    if slots == 0 {
+        return Err(Error::Config(
+            "cluster needs at least one worker (local or remote)".into(),
+        ));
     }
     let params = backend.manifest().params.clone();
     let workload = dataset.workload();
@@ -593,7 +596,7 @@ pub fn run_cluster(
     let mean_task_bytes =
         tasks.iter().map(|t| t.bytes).sum::<usize>() / n_tasks.max(1);
     let rf0 = initial_data_nodes(
-        cfg.workers,
+        slots,
         mean_task_bytes,
         0.05, // pre-probe guess; the controller corrects it online
         &cfg.replication,
@@ -611,85 +614,111 @@ pub fn run_cluster(
         specs,
         dfs.clone(),
         cfg.clone(),
-        cfg.workers,
+        slots,
         samples,
         input_bytes,
         startup_s,
         layer.hook("".into()),
     )?;
 
-    // ---- map phase: spawn workers, lead the job -------------------------
-    let (worker_tx, worker_rx) = mpsc::channel::<WorkerMsg>();
-    let mut task_txs: Vec<Option<mpsc::Sender<LeaderMsg>>> =
-        Vec::with_capacity(cfg.workers);
-    let mut handles = Vec::with_capacity(cfg.workers);
+    // ---- map phase: stand up the links, lead the job --------------------
+    let (up_tx, up_rx) = mpsc::channel::<Up>();
+    let mut links: Vec<WorkerLink> = Vec::with_capacity(slots);
     for w in 0..cfg.workers {
-        let (tx, rx) = mpsc::channel::<LeaderMsg>();
-        task_txs.push(Some(tx));
-        let wcfg = WorkerCfg {
+        let body = BodyCfg {
             worker: w,
             prefetch_k: cfg.prefetch_k,
             failure: cfg.failure,
-            attempt: cfg.attempt,
+            // Solo semantics: a task error is fatal to the attempt.
+            survive_task_errors: false,
             affinity: layer.affinity.clone(),
         };
-        let backend = backend.clone();
-        let dfs = dfs.clone();
-        let params = params.clone();
-        let up = worker_tx.clone();
-        handles.push(
-            thread::Builder::new()
-                .name(format!("bts-exec-worker-{w}"))
-                .spawn(move || worker_main(wcfg, params, backend, dfs, rx, up))
-                .map_err(|e| {
-                    Error::Scheduler(format!("spawn worker {w}: {e}"))
-                })?,
+        links.push(WorkerLink::spawn_inproc(
+            body,
+            params.clone(),
+            backend.clone(),
+            dfs.clone(),
+            up_tx.clone(),
+            "bts-exec-worker",
+        )?);
+    }
+    if let Some(remote) = &cfg.remote {
+        match accept_links(remote, cfg.workers, &dfs, &up_tx) {
+            Ok(remote_links) => links.extend(remote_links),
+            Err(e) => {
+                // Orderly teardown of whatever already stood up.
+                teardown(links);
+                return Err(e);
+            }
+        }
+    }
+    drop(up_tx);
+
+    let ns: Arc<str> = Arc::from("");
+    let target = cfg.inflight.max(1);
+    let mut inflight = vec![0usize; slots];
+    let mut retired = vec![false; slots];
+    for w in 0..slots {
+        top_up(
+            &mut ctx,
+            &links,
+            &mut retired,
+            &mut inflight,
+            w,
+            target,
+            cfg.attempt,
+            &ns,
         );
     }
-    drop(worker_tx);
 
-    let target = cfg.inflight.max(1);
-    let mut inflight = vec![0usize; cfg.workers];
-    for w in 0..cfg.workers {
-        top_up(&mut ctx, &mut task_txs, &mut inflight, w, target);
-    }
-
-    let mut worker_stats: Vec<Option<WorkerStats>> = vec![None; cfg.workers];
+    let mut worker_stats: Vec<Option<WorkerStats>> = vec![None; slots];
     let mut first_err: Option<Error> = None;
 
     while worker_stats.iter().any(|s| s.is_none()) {
-        let msg = match worker_rx.recv() {
+        let msg = match up_rx.recv() {
             Ok(m) => m,
-            Err(_) => break, // every worker sender gone
+            Err(_) => break, // every up-channel sender gone
         };
         match msg {
-            WorkerMsg::Done(d) => {
-                let w = d.worker;
+            Up::Done { done, .. } => {
+                let w = done.worker;
                 inflight[w] = inflight[w].saturating_sub(1);
-                ctx.on_done(*d);
-                top_up(&mut ctx, &mut task_txs, &mut inflight, w, target);
+                ctx.on_done(*done);
+                top_up(
+                    &mut ctx,
+                    &links,
+                    &mut retired,
+                    &mut inflight,
+                    w,
+                    target,
+                    cfg.attempt,
+                    &ns,
+                );
             }
-            WorkerMsg::Failed { error } => {
+            Up::TaskFailed { error, .. } | Up::Lost { error, .. } => {
                 first_err.get_or_insert(error);
-                // Orderly abort: every worker drains its channel and
-                // stops at the Shutdown marker.
-                for tx in task_txs.iter_mut() {
-                    if let Some(t) = tx.take() {
-                        let _ = t.send(LeaderMsg::Shutdown);
+                // Orderly abort: every live worker drains its channel
+                // and stops at the Shutdown marker.
+                for (w, link) in links.iter().enumerate() {
+                    if !retired[w] {
+                        let _ = link.send(Down::Shutdown);
+                        retired[w] = true;
                     }
                 }
             }
-            WorkerMsg::Exited { worker, executed, clean } => {
+            // Solo runs never send Abort, so acks cannot arrive.
+            Up::Aborted { .. } => {}
+            Up::Exited { worker, executed, clean } => {
                 worker_stats[worker] =
                     Some(WorkerStats { worker, executed, clean_shutdown: clean });
             }
         }
     }
 
-    // Leader joins every worker before touching the partials — the
+    // Leader joins every link before touching the partials — the
     // shutdown-ordering contract.
-    for h in handles {
-        if h.join().is_err() {
+    for l in links {
+        if !l.join() {
             first_err
                 .get_or_insert(Error::Scheduler("worker panicked".into()));
         }
@@ -724,7 +753,9 @@ pub fn run_cluster(
 
 /// Run with job-level recovery: on any worker failure the *entire job*
 /// restarts (same seed ⇒ identical final statistic), up to
-/// `max_attempts`.
+/// `max_attempts`. With remote workers, the listener in
+/// [`ExecConfig::remote`] is reused across attempts, so replacement
+/// workers connect to the same address.
 pub fn run_cluster_with_recovery(
     dataset: &dyn Dataset,
     backend: Arc<Backend>,
@@ -740,166 +771,18 @@ pub fn run_cluster_with_recovery(
     Ok(r)
 }
 
-struct WorkerCfg {
-    worker: usize,
-    prefetch_k: usize,
-    failure: Option<FailurePlan>,
-    attempt: u32,
-    /// Shared affinity registry (cache-affinity dispatch), if enabled.
-    affinity: Option<Arc<AffinityIndex>>,
-}
-
-/// Queue a task's block keys (under `ns`) for prefetch, in task order.
-pub(crate) fn enqueue_keys(pf: &mut Prefetcher, spec: &TaskSpec, ns: &str) {
-    pf.enqueue(
-        spec.task
-            .sample_ids
-            .iter()
-            .map(|&id| block_key(ns, spec.workload, id)),
-    );
-}
-
-/// One worker thread: drain the task channel into a local queue (so
-/// the prefetcher sees upcoming block keys), execute front-of-queue
-/// tasks through the backend, report partials up. Exits on `Shutdown`
-/// (clean) or channel death, always announcing `Exited` last.
-fn worker_main(
-    cfg: WorkerCfg,
-    params: ModelParams,
-    backend: Arc<Backend>,
-    dfs: Arc<Dfs>,
-    rx: mpsc::Receiver<LeaderMsg>,
-    up: mpsc::Sender<WorkerMsg>,
-) {
-    let mut pf = Prefetcher::new(dfs, cfg.prefetch_k);
-    if let Some(index) = cfg.affinity.clone() {
-        pf = pf.with_affinity(cfg.worker, index);
-    }
-    let mut queue: VecDeque<TaskSpec> = VecDeque::new();
-    let mut executed = 0u64;
-    let mut clean = false;
-    'outer: loop {
-        // Non-blocking drain: pick up everything the leader has queued.
-        loop {
-            match rx.try_recv() {
-                Ok(LeaderMsg::Task(spec)) => {
-                    enqueue_keys(&mut pf, &spec, "");
-                    queue.push_back(*spec);
-                }
-                Ok(LeaderMsg::Shutdown) => {
-                    clean = true;
-                    break 'outer;
-                }
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    if queue.is_empty() {
-                        break 'outer;
-                    }
-                    break;
-                }
-            }
-        }
-        // Idle: block for the next instruction, measuring queue wait.
-        let mut queue_wait_s = 0.0;
-        if queue.is_empty() {
-            let wait_t = Timer::start();
-            match rx.recv() {
-                Ok(LeaderMsg::Task(spec)) => {
-                    queue_wait_s = wait_t.secs();
-                    enqueue_keys(&mut pf, &spec, "");
-                    queue.push_back(*spec);
-                }
-                Ok(LeaderMsg::Shutdown) => {
-                    clean = true;
-                    break;
-                }
-                Err(_) => break,
-            }
-        }
-        let Some(spec) = queue.pop_front() else { continue };
-        let (h0, m0) = (pf.hits, pf.misses);
-        let (ch0, cm0) = (pf.cache_hits, pf.cache_misses);
-        match run_task(&params, &backend, &mut pf, &spec, "") {
-            Ok((partial, fetch_s, exec_s)) => {
-                executed += 1;
-                let done = TaskDone {
-                    worker: cfg.worker,
-                    seq: spec.task.seq,
-                    partial,
-                    fetch_s,
-                    exec_s,
-                    queue_wait_s,
-                    prefetch_hits: pf.hits - h0,
-                    prefetch_misses: pf.misses - m0,
-                    cache_hits: pf.cache_hits - ch0,
-                    cache_misses: pf.cache_misses - cm0,
-                };
-                if up.send(WorkerMsg::Done(Box::new(done))).is_err() {
-                    break;
-                }
-                if let Some(plan) = cfg.failure {
-                    if plan.worker == cfg.worker
-                        && cfg.attempt == plan.on_attempt
-                        && executed >= plan.after_tasks
-                    {
-                        let _ = up.send(WorkerMsg::Failed {
-                            error: Error::Scheduler(format!(
-                                "injected node failure on worker {} after {executed} tasks",
-                                cfg.worker
-                            )),
-                        });
-                        break;
-                    }
-                }
-            }
-            Err(e) => {
-                let _ = up.send(WorkerMsg::Failed { error: e });
-                break;
-            }
-        }
-    }
-    let _ = up.send(WorkerMsg::Exited {
-        worker: cfg.worker,
-        executed,
-        clean,
-    });
-}
-
-/// Fetch, assemble and execute one task under a key namespace; returns
-/// (partial, fetch seconds, exec seconds).
-pub(crate) fn run_task(
-    p: &ModelParams,
-    backend: &Backend,
-    pf: &mut Prefetcher,
-    spec: &TaskSpec,
-    ns: &str,
-) -> Result<(TaskPartial, f64, f64)> {
-    pf.pump()?;
-    let fetch_t = Timer::start();
-    let mut blocks = Vec::with_capacity(spec.task.sample_ids.len());
-    for &id in &spec.task.sample_ids {
-        let key = block_key(ns, spec.workload, id);
-        let bytes = pf.take(&key)?;
-        blocks.push(Block::decode(&bytes)?);
-    }
-    let fetch_s = fetch_t.secs();
-
-    let exec_t = Timer::start();
-    let slices = MapTask::slices(p, spec.workload, &blocks, spec.seed)?;
-    let partial = execute_slices(backend, p, slices)?;
-    let exec_s = exec_t.secs();
-    pf.observe_exec(exec_s);
-    Ok((partial, fetch_s, exec_s))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dfs::Prefetcher;
+    use crate::transport::run_task;
 
     #[test]
     fn default_config_is_sane() {
         let c = ExecConfig::default();
         assert!(c.workers > 0);
+        assert!(c.remote.is_none());
+        assert_eq!(c.slots(), c.workers);
         assert!(c.data_nodes > 0);
         assert!(c.inflight >= 1);
         assert_eq!(c.attempt, 1);
@@ -1023,5 +906,7 @@ mod tests {
 
     // End-to-end cluster runs (both workloads, oracle agreement,
     // shutdown ordering, recovery) live in
-    // rust/tests/integration_exec.rs — they need no artifacts.
+    // rust/tests/integration_exec.rs, and the in-proc ≡ TCP
+    // equivalence contract in rust/tests/integration_transport.rs —
+    // they need no artifacts.
 }

@@ -1,13 +1,14 @@
-//! The execution spine: an in-process multi-threaded cluster executor
-//! with pluggable kernel backends (DESIGN.md §4).
+//! The execution spine: a cluster executor over the pluggable
+//! transport layer, with pluggable kernel backends (DESIGN.md §4, §11).
 //!
-//! This is the path that *runs* — a leader plus N worker threads over
-//! channels, driving a real job end to end:
+//! This is the path that *runs* — a leader plus N map slots (local
+//! threads over channels, or remote `bts worker` processes over
+//! framed TCP), driving a real job end to end:
 //!
 //! ```text
-//! kneepoint::pack → TwoStepScheduler dispatch (leader, channels) →
-//!   worker: dfs fetch (+prefetch) → MapTask assembly →
-//!   Backend::run (map kernel) → shuffle (mpsc) →
+//! kneepoint::pack → TwoStepScheduler dispatch (leader, WorkerLinks) →
+//!   worker: dfs fetch (+prefetch; DFS-proxied for remote slots) →
+//!   MapTask assembly → Backend::run (map kernel) → shuffle (Up) →
 //!   reduce tree on the leader → JobOutput + metrics
 //! ```
 //!

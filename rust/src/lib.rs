@@ -45,6 +45,7 @@ pub mod scheduler;
 pub mod serve;
 pub mod sim;
 pub mod slo;
+pub mod transport;
 pub mod util;
 pub mod workloads;
 

@@ -3,14 +3,15 @@
 //! ```text
 //! bts repro [--only ID[,ID...]] [--out DIR]     regenerate paper figures
 //! bts run [--config FILE] [--set k=v ...]       run a real job end to end
-//! bts exec [--workload W] [--cache-mb MB] [...]  run via the cluster executor
-//! bts serve [--jobs N] [--workers N] [...]      sustained multi-tenant load
+//! bts exec [--workload W] [--cache-mb MB]
+//!     [--listen ADDR --workers-remote N] [...]  run via the cluster executor
+//! bts serve [--jobs N] [--workers N]
+//!     [--listen ADDR --workers-remote N] [...]  sustained multi-tenant load
 //! bts submit [--workload W] [--deadline S]      one job through the service
 //! bts profile [--workload W]                    offline kneepoint profiling
 //! bts calibrate                                 measure sim constants from PJRT
 //! bts plan --slo SECONDS [--workload W]         SLO planner (Fig 13 machinery)
-//! bts leader --listen ADDR --workers N [...]    serve a job over TCP
-//! bts worker --connect ADDR --id N              join a TCP leader
+//! bts worker --connect ADDR [--cache-mb MB]     serve as a remote map slot
 //! bts list                                      list figure ids
 //! ```
 //!
@@ -53,7 +54,6 @@ fn dispatch(args: &[String]) -> Result<()> {
             cmd_calibrate()
         }
         Some("plan") => cmd_plan(&args[1..]),
-        Some("leader") => cmd_leader(&args[1..]),
         Some("worker") => cmd_worker(&args[1..]),
         Some("list") => {
             Flags::parse(&args[1..], &[])?;
@@ -79,13 +79,17 @@ commands:
   repro [--only IDs] [--out DIR]    regenerate every paper table/figure
   run [--config F] [--set k=v]...   run a real job (PJRT execution)
   exec [--workload W] [--workers N] [--samples N] [--sizing S]
-       [--cache-mb MB] [--affinity on|off]
-                                    run a job through the in-process
-                                    cluster executor (native kernels
-                                    when artifacts are unavailable);
+       [--cache-mb MB] [--affinity on|off] [--out-json FILE]
+       [--listen ADDR --workers-remote N]
+                                    run a job through the cluster
+                                    executor (native kernels when
+                                    artifacts are unavailable); with
+                                    --listen, accepts N `bts worker`
+                                    processes as extra map slots;
                                     writes results/BENCH_exec.json
   serve [--jobs N] [--workers N] [--rate R] [--max-active N]
         [--samples N] [--seed S] [--cache-mb MB] [--affinity on|off]
+        [--listen ADDR --workers-remote N]
                                     sustained mixed load through the
                                     long-lived multi-tenant service;
                                     writes results/BENCH_serve.json
@@ -95,8 +99,10 @@ commands:
   profile [--workload W]            offline task-size -> miss-rate profiling
   calibrate                         measure compute s/MiB from artifacts
   plan --slo S [--workload W]       best configuration under an SLO
-  leader --listen A --workers N     serve a job over TCP
-  worker --connect A --id N         join a TCP leader
+  worker --connect A [--cache-mb MB] [--prefetch-k N]
+                                    join a leader as a remote map slot
+                                    (serves until the leader shuts the
+                                    session down)
   list                              list figure ids
 
 flags take `--name value` or `--name=value`; unknown flags are errors.
@@ -212,6 +218,62 @@ fn print_output(output: &bts::coordinator::JobOutput) {
     }
 }
 
+/// `--listen ADDR` + `--workers-remote N` → remote map slots, parsed
+/// strictly (each flag requires the other).
+fn remote_flags(f: &Flags) -> Result<Option<bts::transport::RemoteWorkers>> {
+    let count: usize = f.num("--workers-remote", 0)?;
+    match (f.get("--listen"), count) {
+        (Some(addr), n) if n > 0 => {
+            let remote = bts::transport::RemoteWorkers::bind(addr, n)?;
+            println!(
+                "listening on {} for {} remote worker{} \
+                 (`bts worker --connect {}`)",
+                remote.addr(),
+                n,
+                if n == 1 { "" } else { "s" },
+                remote.addr()
+            );
+            Ok(Some(remote))
+        }
+        (Some(_), _) => Err(Error::Config(
+            "--listen needs --workers-remote N (how many to accept)".into(),
+        )),
+        (None, n) if n > 0 => Err(Error::Config(
+            "--workers-remote needs --listen ADDR".into(),
+        )),
+        _ => Ok(None),
+    }
+}
+
+/// The job statistic as deterministic JSON — what the CI transport
+/// smoke diffs between an in-proc and a loopback-TCP run of the same
+/// seed (bit-identical outputs ⇒ byte-identical files).
+fn output_json(output: &bts::coordinator::JobOutput) -> bts::util::json::Json {
+    use bts::util::json::{arr, num, obj, s};
+    match output {
+        bts::coordinator::JobOutput::Eaglet { alod, weight } => obj(vec![
+            ("workload", s("eaglet")),
+            ("weight", num(*weight as f64)),
+            (
+                "alod",
+                arr(alod.iter().map(|&v| num(v as f64)).collect()),
+            ),
+        ]),
+        bts::coordinator::JobOutput::Netflix(stats) => obj(vec![
+            ("workload", s("netflix")),
+            ("mean", arr(stats.mean.iter().map(|&v| num(v)).collect())),
+            (
+                "ci_half",
+                arr(stats.ci_half.iter().map(|&v| num(v)).collect()),
+            ),
+            (
+                "count",
+                arr(stats.count.iter().map(|&v| num(v)).collect()),
+            ),
+        ]),
+    }
+}
+
 fn cmd_exec(args: &[String]) -> Result<()> {
     use bts::exec::{run_cluster, Backend, ExecConfig};
     use bts::kneepoint::TaskSizing;
@@ -226,6 +288,9 @@ fn cmd_exec(args: &[String]) -> Result<()> {
             "--sizing",
             "--cache-mb",
             "--affinity",
+            "--listen",
+            "--workers-remote",
+            "--out-json",
         ],
     )?;
     let w = workload_flag(&f)?;
@@ -233,6 +298,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
     let samples: usize = f.num("--samples", 200)?;
     let cache_mb: usize = f.num("--cache-mb", 0)?;
     let affinity = on_off_flag(&f, "--affinity", false)?;
+    let remote = remote_flags(&f)?;
     let backend = Arc::new(Backend::auto());
     let params = backend.manifest().params.clone();
     let knee = kneepoint_bytes(w, &CacheConfig::sandy_bridge());
@@ -249,19 +315,21 @@ fn cmd_exec(args: &[String]) -> Result<()> {
     let cfg = ExecConfig {
         sizing,
         workers,
+        remote,
         cache_mb,
         affinity,
         ..Default::default()
     };
     let ds = bts::workloads::build_small(w, &params, samples);
     println!(
-        "backend {}  workload {}  {} samples  sizing {:?}  {} workers  \
-         cache {} MB  affinity {}",
+        "backend {}  workload {}  {} samples  sizing {:?}  {} workers \
+         (+{} remote)  cache {} MB  affinity {}",
         backend.name(),
         w.name(),
         samples,
         cfg.sizing,
         cfg.workers,
+        cfg.remote.as_ref().map_or(0, |r| r.count),
         cfg.cache_mb,
         if cfg.affinity { "on" } else { "off" }
     );
@@ -282,6 +350,15 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         r.dfs_bytes_served as f64 / 1048576.0
     );
     print_output(&r.output);
+    if let Some(out) = f.get("--out-json") {
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(out, output_json(&r.output).to_string_pretty())?;
+        println!("wrote {out}");
+    }
     let path = bts::util::bench_record::write("exec", vec![r.metrics_json()])?;
     println!("wrote {path}");
     Ok(())
@@ -302,6 +379,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--samples",
             "--cache-mb",
             "--affinity",
+            "--listen",
+            "--workers-remote",
         ],
     )?;
     let cfg = LoadConfig {
@@ -313,13 +392,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         base_samples: f.num("--samples", 40)?,
         cache_mb: f.num("--cache-mb", 0)?,
         affinity: on_off_flag(&f, "--affinity", false)?,
+        remote: remote_flags(&f)?,
         ..Default::default()
     };
     let backend = Arc::new(Backend::auto());
     println!(
-        "serving {} mixed jobs over {} warm workers (max {} multiplexed, \
-         ~{:.0} arrivals/s)",
-        cfg.jobs, cfg.workers, cfg.max_active, cfg.arrival_rate_per_s
+        "serving {} mixed jobs over {} warm workers (+{} remote, max {} \
+         multiplexed, ~{:.0} arrivals/s)",
+        cfg.jobs,
+        cfg.workers,
+        cfg.remote.as_ref().map_or(0, |r| r.count),
+        cfg.max_active,
+        cfg.arrival_rate_per_s
     );
     let out = run_load(backend, &cfg)?;
     for r in &out.results {
@@ -466,50 +550,26 @@ fn cmd_plan(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_leader(args: &[String]) -> Result<()> {
-    let f = Flags::parse(
-        args,
-        &["--listen", "--workers", "--workload", "--job-bytes"],
-    )?;
-    let addr = f.get("--listen").unwrap_or("127.0.0.1:7462");
-    let workers: usize = f.num("--workers", 2)?;
-    let w = workload_flag(&f)?;
-    let manifest = Arc::new(Manifest::load_default()?);
-    let knee = kneepoint_bytes(w, &CacheConfig::sandy_bridge());
-    let ds = bts::workloads::build(
-        w,
-        &manifest.params,
-        f.get("--job-bytes")
-            .map(bts::config::parse_bytes)
-            .transpose()?,
-    );
-    let listener = std::net::TcpListener::bind(addr)?;
-    println!("leader on {addr}, waiting for {workers} workers...");
-    let report = bts::net::serve_job(
-        listener,
-        ds.as_ref(),
-        manifest,
-        bts::kneepoint::TaskSizing::Kneepoint(knee),
-        workers,
-        0xB75,
-    )?;
-    println!(
-        "done: {} tasks on {} workers in {:.2}s ({:.2} MB shipped)",
-        report.tasks,
-        report.workers,
-        report.total_s,
-        report.bytes_shipped as f64 / 1048576.0
-    );
-    Ok(())
-}
-
 fn cmd_worker(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &["--connect", "--id"])?;
+    use bts::exec::Backend;
+    use bts::transport::RemoteWorkerOpts;
+
+    let f =
+        Flags::parse(args, &["--connect", "--cache-mb", "--prefetch-k"])?;
     let addr = f.get("--connect").unwrap_or("127.0.0.1:7462");
-    let id: u32 = f.num("--id", 0)?;
-    let manifest = Arc::new(Manifest::load_default()?);
-    let n = bts::net::run_worker(addr, id, manifest)?;
-    println!("worker {id}: executed {n} tasks");
+    let opts = RemoteWorkerOpts {
+        cache_mb: f.num("--cache-mb", 0)?,
+        prefetch_k: f.num("--prefetch-k", 8)?,
+        ..Default::default()
+    };
+    let backend = Arc::new(Backend::auto());
+    println!(
+        "worker connecting to {addr} (backend {}, cache {} MB)",
+        backend.name(),
+        opts.cache_mb
+    );
+    let n = bts::net::run_worker(addr, backend, &opts)?;
+    println!("worker session done: executed {n} tasks");
     Ok(())
 }
 

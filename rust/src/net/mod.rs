@@ -1,21 +1,25 @@
-//! TCP leader/worker mode — the nc6-pipe stand-in (DESIGN.md §2).
+//! The wire layer: framed TCP for the transport spine (DESIGN.md §11).
 //!
-//! BashReduce connects map slots "through simple TCP pipes using the
-//! nc6 tool"; here the leader (master node) owns the scheduler and
-//! partitions data, pushing each task *with its input blocks inline* to
-//! worker processes over length-prefixed frames, and collecting partials
-//! back over the same socket. Workers execute through their local PJRT
-//! runtime; Python never appears on either side.
+//! BashReduce connected map slots "through simple TCP pipes using the
+//! nc6 tool"; the first reproduction of that idea here was a separate
+//! leader/worker job path that pushed task data inline — and bypassed
+//! the DFS, the cache, prefetching, and recovery entirely. That path
+//! is retired: TCP is now just a transport under the one execution
+//! spine (`exec` / `serve` over `transport::WorkerLink`s), and this
+//! module keeps the wire-facing pieces:
 //!
-//! The in-process engine (`coordinator::run_job`) remains the primary
-//! data plane (it exercises the dfs layer); this module exists so the
-//! platform also runs as real separate processes (`bts leader` /
-//! `bts worker`) and to price the wire protocol in the benches.
+//! * [`protocol`] — the framed message grammar (magic + version +
+//!   length header; control plane [`crate::transport::Down`]/
+//!   [`crate::transport::Up`]; DFS block Get/Put/response messages),
+//!   hardened against malformed frames and fuzzed.
+//! * [`worker`] — the `bts worker --connect` entry point, a thin
+//!   shell over [`crate::transport::run_remote_worker`].
+//!
+//! Leaders accept remote workers via `--listen`/`--workers-remote` on
+//! `bts exec` and `bts serve` ([`crate::transport::RemoteWorkers`]).
 
-pub mod leader;
 pub mod protocol;
 pub mod worker;
 
-pub use leader::{serve_job, LeaderReport};
 pub use protocol::Message;
-pub use worker::{run_worker, serve_connection};
+pub use worker::run_worker;

@@ -2,46 +2,180 @@
 //! the format is small and stable, and the explicit encoding doubles as
 //! its own documentation).
 //!
-//! Frame: `u32 LE payload length ‖ payload`. Payload: `u8 tag ‖ body`.
+//! Frame: `b"BTS" ‖ u8 version ‖ u32 LE payload length ‖ payload`.
+//! Payload: `u8 tag ‖ body`. The magic + version prefix fails fast —
+//! and with a [`Error::Protocol`] that names the mismatch — when a
+//! socket is connected to the wrong service or to a build speaking an
+//! older grammar, instead of misparsing a garbage length.
+//!
+//! The grammar is the transport spine's (DESIGN.md §11): the control
+//! plane crosses as [`Down`]/[`Up`] wrapped in [`Message`], and the
+//! data plane as `DfsGet`/`DfsPut` → `DfsBlock`/`DfsMiss` — remote
+//! workers fetch blocks *through* the leader's replicated store
+//! rather than receiving task data inline, so replica selection, the
+//! shared block cache, and adaptive replication all still apply to
+//! them.
 
 use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use crate::data::block::Block;
+use crate::coordinator::assemble::TaskPartial;
 use crate::data::Workload;
 use crate::error::{Error, Result};
+use crate::kneepoint::PackedTask;
+use crate::scheduler::TaskSpec;
+use crate::transport::{Down, TaskDone, TaskEnvelope, Up};
+
+/// First bytes of every frame; rejects cross-protocol connections.
+pub const MAGIC: [u8; 3] = *b"BTS";
+
+/// Bumped on incompatible grammar changes. Version 1 was the retired
+/// inline-data leader/worker protocol; 2 is the transport spine.
+pub const PROTOCOL_VERSION: u8 = 2;
 
 /// Refuse frames beyond this size (a corrupt length prefix should fail
-/// fast, not allocate gigabytes). Large tasks ship many blocks but the
-/// packer keeps multi-sample tasks at kneepoint scale.
+/// fast, not allocate gigabytes). Large tasks ship many block keys but
+/// the packer keeps multi-sample tasks at kneepoint scale, and DFS
+/// blocks are single samples.
 pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
 
-const TAG_HELLO: u8 = 1;
-const TAG_TASK: u8 = 2;
-const TAG_PARTIAL: u8 = 3;
-const TAG_DONE: u8 = 4;
-const TAG_ERROR: u8 = 5;
+/// How long a handshake peer may stay silent before the connection is
+/// declared dead ([`Message::read_deadline`] at connect/accept sites).
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Everything that crosses the leader↔worker socket.
-#[derive(Debug, Clone, PartialEq)]
+/// How long a remote worker waits for a `DfsBlock`/`DfsMiss` answer.
+pub const DFS_FETCH_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long a leader waits for its remote workers to connect.
+pub const ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Remote workers send [`Message::Ping`] at this cadence from a
+/// dedicated timer thread, even while the worker body is deep in a
+/// long task — the leader-side liveness signal.
+pub const PING_INTERVAL: Duration = Duration::from_secs(5);
+
+/// A leader pump that has read nothing for this long (several missed
+/// pings) declares the worker silently partitioned and synthesizes
+/// `Up::Lost` — a dead peer behind a dropped network cannot wedge the
+/// leader even when no FIN/RST ever arrives.
+pub const PUMP_IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-stream read timeout: blocked reads wake at this cadence so
+/// idle deadlines can be enforced without losing frame sync (partial
+/// progress is preserved by [`read_full`]).
+const READ_POLL: Duration = Duration::from_millis(500);
+
+/// Per-stream write timeout: a frame write that cannot complete in
+/// this window marks the link dead.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Socket defaults for every connect/accept site: `TCP_NODELAY` (the
+/// control plane is many tiny frames — exactly what Nagle delays),
+/// plus read/write timeouts so a hung peer cannot wedge a blocking
+/// call forever.
+pub fn configure_stream(stream: &TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(READ_POLL))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes, tolerating read-timeout wakeups.
+/// Partial progress is kept across wakeups, so a slow frame never
+/// desynchronizes the stream. `idle` bounds the time spent with *no*
+/// forward progress (`None` = wait indefinitely; link death still
+/// surfaces as EOF/reset).
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    idle: Option<Duration>,
+) -> Result<()> {
+    let mut got = 0;
+    let mut last_progress = Instant::now();
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(Error::Protocol(
+                    "connection closed mid-frame".into(),
+                ))
+            }
+            Ok(n) => {
+                got += n;
+                last_progress = Instant::now();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if let Some(cap) = idle {
+                    if last_progress.elapsed() > cap {
+                        return Err(Error::Protocol(format!(
+                            "peer silent for {:.0?} (cap {:.0?})",
+                            last_progress.elapsed(),
+                            cap
+                        )));
+                    }
+                }
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_TASK: u8 = 3;
+const TAG_ABORT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+const TAG_DONE: u8 = 6;
+const TAG_TASK_FAILED: u8 = 7;
+const TAG_ABORTED: u8 = 8;
+const TAG_EXITED: u8 = 9;
+const TAG_DFS_GET: u8 = 10;
+const TAG_DFS_PUT: u8 = 11;
+const TAG_DFS_BLOCK: u8 = 12;
+const TAG_DFS_MISS: u8 = 13;
+const TAG_ERROR: u8 = 14;
+const TAG_PING: u8 = 15;
+
+/// Everything that crosses a leader↔worker socket. Control messages
+/// wrap the transport grammar verbatim; the leader-side pump and the
+/// worker-side reader translate between frames and the same channel
+/// messages the in-proc transport uses.
+#[derive(Debug)]
 pub enum Message {
+    /// Worker → leader: first frame after connect. `worker` is
+    /// advisory (a label for logs); the leader assigns the real slot.
     Hello { worker: u32 },
-    /// One map task with its input data inline (the leader "partitions
-    /// data and tasks access only the local file system" — here the
-    /// local side of that is the frame itself).
-    Task {
-        seq: u32,
-        workload: Workload,
-        seed: u64,
-        blocks: Vec<Block>,
-    },
-    /// Eaglet partial: mean ALOD + weight. Netflix partial: stat tensor.
-    Partial {
-        seq: u32,
-        weight: f32,
-        values: Vec<f32>,
-        netflix: bool,
-    },
-    Done,
+    /// Leader → worker: slot assignment completing the handshake.
+    Welcome { worker: u32 },
+    /// Leader → worker control plane.
+    Down(Down),
+    /// Worker → leader control plane ([`Up::Lost`] is leader-side
+    /// synthesized and never crosses the wire; encoding it is a bug).
+    Up(Up),
+    /// Worker → leader: fetch one block from the replicated store.
+    DfsGet { key: String },
+    /// Worker → leader: publish one block into the replicated store.
+    DfsPut { key: String, data: Vec<u8> },
+    /// Leader → worker: `DfsGet` answer. Carries the store's `Arc`
+    /// so serving a block to a remote worker never deep-copies it
+    /// before the unavoidable frame-buffer write.
+    DfsBlock { key: String, data: Arc<Vec<u8>> },
+    /// Leader → worker: `DfsGet` failure (missing key, store error).
+    DfsMiss { key: String, message: String },
+    /// Worker → leader: liveness heartbeat (no body; any frame
+    /// counts as progress for the pump's idle clock).
+    Ping,
+    /// Either direction: fatal protocol-level rejection.
     Error { message: String },
 }
 
@@ -51,6 +185,27 @@ fn put_u32(out: &mut Vec<u8>, v: u32) {
 
 fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
 }
 
 struct Cursor<'a> {
@@ -72,6 +227,16 @@ impl<'a> Cursor<'a> {
         Ok(self.take(1)?[0])
     }
 
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => {
+                Err(Error::Protocol(format!("bad bool byte {other}")))
+            }
+        }
+    }
+
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -82,6 +247,10 @@ impl<'a> Cursor<'a> {
 
     fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn remaining(&self) -> usize {
@@ -100,6 +269,27 @@ impl<'a> Cursor<'a> {
             )));
         }
         Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|_| {
+            Error::Protocol("non-utf8 string in frame".into())
+        })
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let mut vs = Vec::with_capacity(n);
+        for _ in 0..n {
+            vs.push(self.f32()?);
+        }
+        Ok(vs)
     }
 
     fn done(&self) -> Result<()> {
@@ -130,6 +320,34 @@ fn workload_from(tag: u8) -> Result<Workload> {
     }
 }
 
+fn encode_partial(out: &mut Vec<u8>, p: &TaskPartial) {
+    match p {
+        TaskPartial::Eaglet { alod, weight } => {
+            out.push(0);
+            out.extend_from_slice(&weight.to_le_bytes());
+            put_f32s(out, alod);
+        }
+        TaskPartial::Netflix { stats } => {
+            out.push(1);
+            put_f32s(out, stats);
+        }
+    }
+}
+
+fn decode_partial(c: &mut Cursor) -> Result<TaskPartial> {
+    match c.u8()? {
+        0 => {
+            let weight = c.f32()?;
+            let alod = c.f32s()?;
+            Ok(TaskPartial::Eaglet { alod, weight })
+        }
+        1 => Ok(TaskPartial::Netflix { stats: c.f32s()? }),
+        other => {
+            Err(Error::Protocol(format!("bad partial tag {other}")))
+        }
+    }
+}
+
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
@@ -138,32 +356,91 @@ impl Message {
                 out.push(TAG_HELLO);
                 put_u32(&mut out, *worker);
             }
-            Message::Task { seq, workload, seed, blocks } => {
+            Message::Welcome { worker } => {
+                out.push(TAG_WELCOME);
+                put_u32(&mut out, *worker);
+            }
+            Message::Down(Down::Task(t)) => {
                 out.push(TAG_TASK);
-                put_u32(&mut out, *seq);
-                out.push(workload_tag(*workload));
-                put_u64(&mut out, *seed);
-                put_u32(&mut out, blocks.len() as u32);
-                for b in blocks {
-                    let enc = b.encode();
-                    put_u32(&mut out, enc.len() as u32);
-                    out.extend_from_slice(&enc);
+                put_u64(&mut out, t.job);
+                put_u32(&mut out, t.attempt);
+                put_str(&mut out, &t.ns);
+                out.push(u8::from(t.poison));
+                put_u64(&mut out, t.spec.task.seq as u64);
+                put_u32(&mut out, t.spec.task.units);
+                put_u64(&mut out, t.spec.task.bytes as u64);
+                out.push(workload_tag(t.spec.workload));
+                put_u64(&mut out, t.spec.seed);
+                put_u32(&mut out, t.spec.task.sample_ids.len() as u32);
+                for &id in &t.spec.task.sample_ids {
+                    put_u64(&mut out, id);
                 }
             }
-            Message::Partial { seq, weight, values, netflix } => {
-                out.push(TAG_PARTIAL);
-                put_u32(&mut out, *seq);
-                out.push(u8::from(*netflix));
-                out.extend_from_slice(&weight.to_le_bytes());
-                put_u32(&mut out, values.len() as u32);
-                for v in values {
-                    out.extend_from_slice(&v.to_le_bytes());
-                }
+            Message::Down(Down::Abort { job, upto_attempt }) => {
+                out.push(TAG_ABORT);
+                put_u64(&mut out, *job);
+                put_u32(&mut out, *upto_attempt);
             }
-            Message::Done => out.push(TAG_DONE),
+            Message::Down(Down::Shutdown) => out.push(TAG_SHUTDOWN),
+            Message::Up(Up::Done { job, attempt, done }) => {
+                out.push(TAG_DONE);
+                put_u64(&mut out, *job);
+                put_u32(&mut out, *attempt);
+                put_u32(&mut out, done.worker as u32);
+                put_u64(&mut out, done.seq as u64);
+                encode_partial(&mut out, &done.partial);
+                put_f64(&mut out, done.fetch_s);
+                put_f64(&mut out, done.exec_s);
+                put_f64(&mut out, done.queue_wait_s);
+                put_u64(&mut out, done.prefetch_hits);
+                put_u64(&mut out, done.prefetch_misses);
+                put_u64(&mut out, done.cache_hits);
+                put_u64(&mut out, done.cache_misses);
+            }
+            Message::Up(Up::TaskFailed { job, attempt, worker, error }) => {
+                out.push(TAG_TASK_FAILED);
+                put_u64(&mut out, *job);
+                put_u32(&mut out, *attempt);
+                put_u32(&mut out, *worker as u32);
+                put_str(&mut out, &error.to_string());
+            }
+            Message::Up(Up::Aborted { worker, dropped }) => {
+                out.push(TAG_ABORTED);
+                put_u32(&mut out, *worker as u32);
+                put_u64(&mut out, *dropped);
+            }
+            Message::Up(Up::Exited { worker, executed, clean }) => {
+                out.push(TAG_EXITED);
+                put_u32(&mut out, *worker as u32);
+                put_u64(&mut out, *executed);
+                out.push(u8::from(*clean));
+            }
+            Message::Up(Up::Lost { .. }) => {
+                unreachable!("Up::Lost is leader-side only, never framed")
+            }
+            Message::DfsGet { key } => {
+                out.push(TAG_DFS_GET);
+                put_str(&mut out, key);
+            }
+            Message::DfsPut { key, data } => {
+                out.push(TAG_DFS_PUT);
+                put_str(&mut out, key);
+                put_bytes(&mut out, data);
+            }
+            Message::DfsBlock { key, data } => {
+                out.push(TAG_DFS_BLOCK);
+                put_str(&mut out, key);
+                put_bytes(&mut out, data);
+            }
+            Message::DfsMiss { key, message } => {
+                out.push(TAG_DFS_MISS);
+                put_str(&mut out, key);
+                put_str(&mut out, message);
+            }
+            Message::Ping => out.push(TAG_PING),
             Message::Error { message } => {
                 out.push(TAG_ERROR);
-                out.extend_from_slice(message.as_bytes());
+                put_str(&mut out, message);
             }
         }
         out
@@ -173,41 +450,89 @@ impl Message {
         let mut c = Cursor { buf: payload, off: 0 };
         let msg = match c.u8()? {
             TAG_HELLO => Message::Hello { worker: c.u32()? },
+            TAG_WELCOME => Message::Welcome { worker: c.u32()? },
             TAG_TASK => {
-                let seq = c.u32()?;
+                let job = c.u64()?;
+                let attempt = c.u32()?;
+                let ns: Arc<str> = c.str()?.into();
+                let poison = c.bool()?;
+                let seq = c.u64()? as usize;
+                let units = c.u32()?;
+                let bytes = c.u64()? as usize;
                 let workload = workload_from(c.u8()?)?;
                 let seed = c.u64()?;
-                // each block carries at least its u32 length prefix
-                let n = c.count(4)?;
-                // a decoded Block outweighs its 4-byte wire floor
-                // ~12x, so cap the pre-reservation too: a lying count
-                // should cost a few pages, not gigabytes, before the
-                // first truncated block errors out
-                let mut blocks = Vec::with_capacity(n.min(4096));
+                let n = c.count(8)?;
+                let mut sample_ids = Vec::with_capacity(n);
                 for _ in 0..n {
-                    let len = c.u32()? as usize;
-                    blocks.push(Block::decode(c.take(len)?)?);
+                    sample_ids.push(c.u64()?);
                 }
-                Message::Task { seq, workload, seed, blocks }
+                Message::Down(Down::Task(Box::new(TaskEnvelope {
+                    job,
+                    attempt,
+                    ns,
+                    spec: TaskSpec {
+                        task: PackedTask { seq, sample_ids, units, bytes },
+                        workload,
+                        seed,
+                    },
+                    poison,
+                })))
             }
-            TAG_PARTIAL => {
-                let seq = c.u32()?;
-                let netflix = c.u8()? != 0;
-                let weight = c.f32()?;
-                let n = c.count(4)?;
-                let mut values = Vec::with_capacity(n);
-                for _ in 0..n {
-                    values.push(c.f32()?);
-                }
-                Message::Partial { seq, weight, values, netflix }
+            TAG_ABORT => Message::Down(Down::Abort {
+                job: c.u64()?,
+                upto_attempt: c.u32()?,
+            }),
+            TAG_SHUTDOWN => Message::Down(Down::Shutdown),
+            TAG_DONE => {
+                let job = c.u64()?;
+                let attempt = c.u32()?;
+                let worker = c.u32()? as usize;
+                let seq = c.u64()? as usize;
+                let partial = decode_partial(&mut c)?;
+                let done = TaskDone {
+                    worker,
+                    seq,
+                    partial,
+                    fetch_s: c.f64()?,
+                    exec_s: c.f64()?,
+                    queue_wait_s: c.f64()?,
+                    prefetch_hits: c.u64()?,
+                    prefetch_misses: c.u64()?,
+                    cache_hits: c.u64()?,
+                    cache_misses: c.u64()?,
+                };
+                Message::Up(Up::Done { job, attempt, done: Box::new(done) })
             }
-            TAG_DONE => Message::Done,
-            TAG_ERROR => Message::Error {
-                message: String::from_utf8_lossy(
-                    c.take(payload.len() - 1)?,
-                )
-                .into_owned(),
+            TAG_TASK_FAILED => Message::Up(Up::TaskFailed {
+                job: c.u64()?,
+                attempt: c.u32()?,
+                worker: c.u32()? as usize,
+                // `Other` renders the message verbatim — the original
+                // variant's Display prefix is already baked in.
+                error: Error::Other(c.str()?),
+            }),
+            TAG_ABORTED => Message::Up(Up::Aborted {
+                worker: c.u32()? as usize,
+                dropped: c.u64()?,
+            }),
+            TAG_EXITED => Message::Up(Up::Exited {
+                worker: c.u32()? as usize,
+                executed: c.u64()?,
+                clean: c.bool()?,
+            }),
+            TAG_DFS_GET => Message::DfsGet { key: c.str()? },
+            TAG_DFS_PUT => {
+                Message::DfsPut { key: c.str()?, data: c.bytes()? }
+            }
+            TAG_DFS_BLOCK => Message::DfsBlock {
+                key: c.str()?,
+                data: Arc::new(c.bytes()?),
             },
+            TAG_DFS_MISS => {
+                Message::DfsMiss { key: c.str()?, message: c.str()? }
+            }
+            TAG_PING => Message::Ping,
+            TAG_ERROR => Message::Error { message: c.str()? },
             other => {
                 return Err(Error::Protocol(format!("unknown tag {other}")))
             }
@@ -216,27 +541,54 @@ impl Message {
         Ok(msg)
     }
 
-    /// Write one frame.
+    /// Write one frame (magic, version, length, payload) and flush.
     pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
         let payload = self.encode();
-        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        let mut header = [0u8; 8];
+        header[..3].copy_from_slice(&MAGIC);
+        header[3] = PROTOCOL_VERSION;
+        header[4..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        w.write_all(&header)?;
         w.write_all(&payload)?;
         w.flush()?;
         Ok(())
     }
 
-    /// Read one frame (blocking).
+    /// Read one frame, waiting as long as it takes (read-timeout
+    /// wakeups are absorbed; link death surfaces as an error).
     pub fn read_from(r: &mut impl Read) -> Result<Message> {
-        let mut len = [0u8; 4];
-        r.read_exact(&mut len)?;
-        let len = u32::from_le_bytes(len);
+        Self::read_deadline(r, None)
+    }
+
+    /// Read one frame, failing if the peer makes no progress for
+    /// `idle` (handshakes and response waits use this so a silent
+    /// peer cannot hang a connect/accept site forever).
+    pub fn read_deadline(
+        r: &mut impl Read,
+        idle: Option<Duration>,
+    ) -> Result<Message> {
+        let mut header = [0u8; 8];
+        read_full(r, &mut header, idle)?;
+        if header[..3] != MAGIC {
+            return Err(Error::Protocol(format!(
+                "bad frame magic {:?} (not a bts peer?)",
+                &header[..3]
+            )));
+        }
+        if header[3] != PROTOCOL_VERSION {
+            return Err(Error::Protocol(format!(
+                "peer speaks protocol version {}, this build speaks {}",
+                header[3], PROTOCOL_VERSION
+            )));
+        }
+        let len = u32::from_le_bytes(header[4..].try_into().unwrap());
         if len > MAX_FRAME {
             return Err(Error::Protocol(format!(
                 "frame of {len} bytes exceeds cap"
             )));
         }
         let mut payload = vec![0u8; len as usize];
-        r.read_exact(&mut payload)?;
+        read_full(r, &mut payload, idle)?;
         Message::decode(&payload)
     }
 }
@@ -244,53 +596,137 @@ impl Message {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::block::BlockId;
     use crate::util::rng::Rng;
 
+    /// Encode → frame → read back → encode again; byte equality is the
+    /// round-trip oracle (several bodies carry types without
+    /// `PartialEq`, e.g. `Error`).
     fn round_trip(m: &Message) {
         let mut buf = Vec::new();
         m.write_to(&mut buf).unwrap();
         let back = Message::read_from(&mut buf.as_slice()).unwrap();
-        assert_eq!(&back, m);
+        assert_eq!(back.encode(), m.encode(), "round trip changed {m:?}");
+    }
+
+    fn sample_task(workload: Workload) -> Message {
+        Message::Down(Down::Task(Box::new(TaskEnvelope {
+            job: 9,
+            attempt: 2,
+            ns: "j9/".into(),
+            spec: TaskSpec {
+                task: PackedTask {
+                    seq: 4,
+                    sample_ids: vec![1, 5, 9],
+                    units: 12,
+                    bytes: 4096,
+                },
+                workload,
+                seed: 0xDEAD_BEEF,
+            },
+            poison: true,
+        })))
+    }
+
+    fn sample_done() -> Message {
+        Message::Up(Up::Done {
+            job: 3,
+            attempt: 1,
+            done: Box::new(TaskDone {
+                worker: 2,
+                seq: 7,
+                partial: TaskPartial::Eaglet {
+                    alod: vec![0.25, -1.5, 3.0],
+                    weight: 4.0,
+                },
+                fetch_s: 0.002,
+                exec_s: 0.015,
+                queue_wait_s: 0.0005,
+                prefetch_hits: 3,
+                prefetch_misses: 1,
+                cache_hits: 2,
+                cache_misses: 2,
+            }),
+        })
     }
 
     #[test]
     fn all_messages_round_trip() {
         round_trip(&Message::Hello { worker: 3 });
-        round_trip(&Message::Done);
-        round_trip(&Message::Error { message: "boom: Ω".into() });
-        round_trip(&Message::Partial {
-            seq: 9,
-            weight: 2.5,
-            values: vec![1.0, -3.5, 0.0],
-            netflix: false,
+        round_trip(&Message::Welcome { worker: 7 });
+        round_trip(&sample_task(Workload::Eaglet));
+        round_trip(&sample_task(Workload::NetflixHi));
+        round_trip(&Message::Down(Down::Abort {
+            job: 12,
+            upto_attempt: 3,
+        }));
+        round_trip(&Message::Down(Down::Shutdown));
+        round_trip(&sample_done());
+        round_trip(&Message::Up(Up::Done {
+            job: 0,
+            attempt: 1,
+            done: Box::new(TaskDone {
+                worker: 0,
+                seq: 0,
+                partial: TaskPartial::Netflix { stats: vec![1.0; 9] },
+                fetch_s: 0.0,
+                exec_s: 0.0,
+                queue_wait_s: 0.0,
+                prefetch_hits: 0,
+                prefetch_misses: 0,
+                cache_hits: 0,
+                cache_misses: 0,
+            }),
+        }));
+        round_trip(&Message::Up(Up::TaskFailed {
+            job: 5,
+            attempt: 2,
+            worker: 1,
+            error: Error::Scheduler("boom: Ω".into()),
+        }));
+        round_trip(&Message::Up(Up::Aborted { worker: 1, dropped: 4 }));
+        round_trip(&Message::Up(Up::Exited {
+            worker: 2,
+            executed: 40,
+            clean: true,
+        }));
+        round_trip(&Message::DfsGet { key: "j1/eag/7".into() });
+        round_trip(&Message::DfsPut {
+            key: "j1/eag/8".into(),
+            data: vec![1, 2, 3, 4],
         });
-        let mut rng = Rng::new(1);
-        let blocks: Vec<Block> = (0..3)
-            .map(|i| Block {
-                id: BlockId { kind: 0, sample: i },
-                units: 2,
-                payload: (0..50).map(|_| rng.f32()).collect(),
-            })
-            .collect();
-        round_trip(&Message::Task {
-            seq: 1,
-            workload: Workload::Eaglet,
-            seed: 0xDEAD,
-            blocks,
+        round_trip(&Message::DfsBlock {
+            key: "j1/eag/7".into(),
+            data: Arc::new((0..200u8).collect()),
         });
-        round_trip(&Message::Task {
-            seq: 2,
-            workload: Workload::NetflixHi,
-            seed: 1,
-            blocks: vec![],
+        round_trip(&Message::DfsMiss {
+            key: "ghost".into(),
+            message: "no replicas".into(),
         });
+        round_trip(&Message::Ping);
+        round_trip(&Message::Error { message: "go away".into() });
+    }
+
+    #[test]
+    fn decoded_task_preserves_the_exact_seed_and_ids() {
+        // The determinism contract hangs on the seed and sample ids
+        // crossing untouched (never re-derived on the far side).
+        let m = sample_task(Workload::NetflixLo);
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let Message::Down(Down::Task(t)) =
+            Message::read_from(&mut buf.as_slice()).unwrap()
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!(t.spec.seed, 0xDEAD_BEEF);
+        assert_eq!(t.spec.task.sample_ids, vec![1, 5, 9]);
+        assert_eq!(&*t.ns, "j9/");
+        assert!(t.poison);
     }
 
     #[test]
     fn rejects_truncated_and_trailing() {
-        let m = Message::Hello { worker: 1 };
-        let payload = m.encode();
+        let payload = Message::Hello { worker: 1 }.encode();
         assert!(Message::decode(&payload[..payload.len() - 1]).is_err());
         let mut extra = payload.clone();
         extra.push(0);
@@ -298,30 +734,66 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut buf = Vec::new();
+        Message::Hello { worker: 1 }.write_to(&mut buf).unwrap();
+        // wrong magic
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        let err = Message::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // wrong version
+        let mut bad = buf.clone();
+        bad[3] = PROTOCOL_VERSION + 1;
+        let err = Message::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(
+            matches!(err, Error::Protocol(_))
+                && err.to_string().contains("version"),
+            "{err}"
+        );
+    }
+
+    #[test]
     fn rejects_bad_tags_and_oversize_frames() {
         assert!(Message::decode(&[99]).is_err());
         let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(PROTOCOL_VERSION);
         buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         assert!(Message::read_from(&mut buf.as_slice()).is_err());
     }
 
     #[test]
     fn lying_counts_error_before_allocating() {
-        // Partial frame claiming u32::MAX values with a 4-byte body:
-        // must be a Protocol error, not a multi-GB Vec::with_capacity.
-        let mut payload = vec![3u8]; // TAG_PARTIAL
-        payload.extend_from_slice(&9u32.to_le_bytes()); // seq
-        payload.push(0); // netflix=false
-        payload.extend_from_slice(&1.0f32.to_le_bytes()); // weight
-        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
+        // DfsBlock frame claiming u32::MAX data bytes with a 4-byte
+        // body: must be a Protocol error, not a huge allocation.
+        let mut payload = vec![TAG_DFS_BLOCK];
+        put_str(&mut payload, "k");
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
         payload.extend_from_slice(&[0u8; 4]);
         assert!(Message::decode(&payload).is_err());
-        // Task frame with a huge block count
-        let mut payload = vec![2u8]; // TAG_TASK
-        payload.extend_from_slice(&1u32.to_le_bytes()); // seq
-        payload.push(0); // workload tag
+        // Task frame with a huge sample-id count.
+        let mut payload = vec![TAG_TASK];
+        payload.extend_from_slice(&1u64.to_le_bytes()); // job
+        payload.extend_from_slice(&1u32.to_le_bytes()); // attempt
+        put_str(&mut payload, ""); // ns
+        payload.push(0); // poison
+        payload.extend_from_slice(&0u64.to_le_bytes()); // seq
+        payload.extend_from_slice(&1u32.to_le_bytes()); // units
+        payload.extend_from_slice(&64u64.to_le_bytes()); // bytes
+        payload.push(0); // workload
         payload.extend_from_slice(&7u64.to_le_bytes()); // seed
         payload.extend_from_slice(&0x00FF_FFFFu32.to_le_bytes());
+        assert!(Message::decode(&payload).is_err());
+        // Done frame with a lying partial length.
+        let mut payload = vec![TAG_DONE];
+        payload.extend_from_slice(&1u64.to_le_bytes()); // job
+        payload.extend_from_slice(&1u32.to_le_bytes()); // attempt
+        payload.extend_from_slice(&0u32.to_le_bytes()); // worker
+        payload.extend_from_slice(&0u64.to_le_bytes()); // seq
+        payload.push(0); // eaglet partial
+        payload.extend_from_slice(&1.0f32.to_le_bytes()); // weight
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
         assert!(Message::decode(&payload).is_err());
     }
 
@@ -330,35 +802,56 @@ mod tests {
         // Fuzz decode over random byte strings — errors are fine,
         // panics and aborts are not.
         let mut rng = Rng::new(0xFEED);
-        for _ in 0..2000 {
-            let len = rng.below(64) as usize;
+        for _ in 0..4000 {
+            let len = rng.below(96) as usize;
             let bytes: Vec<u8> =
                 (0..len).map(|_| rng.below(256) as u8).collect();
             let _ = Message::decode(&bytes);
         }
-        // and over mutated valid frames
-        let good = Message::Partial {
-            seq: 3,
-            weight: 1.5,
-            values: vec![0.5; 8],
-            netflix: true,
-        }
-        .encode();
-        for _ in 0..2000 {
-            let mut bad = good.clone();
-            let i = rng.below(bad.len() as u64) as usize;
-            bad[i] ^= 1 << rng.below(8);
-            let _ = Message::decode(&bad);
+        // …and over mutated valid frames of every new message kind,
+        // the DFS data-plane bodies included.
+        let goods: Vec<Vec<u8>> = vec![
+            sample_task(Workload::Eaglet).encode(),
+            sample_done().encode(),
+            Message::DfsGet { key: "j2/nfx_hi/41".into() }.encode(),
+            Message::DfsPut { key: "a".into(), data: vec![7; 32] }
+                .encode(),
+            Message::DfsBlock {
+                key: "j2/nfx_hi/41".into(),
+                data: Arc::new(vec![9; 64]),
+            }
+            .encode(),
+            Message::DfsMiss {
+                key: "j2/nfx_hi/41".into(),
+                message: "gone".into(),
+            }
+            .encode(),
+            Message::Up(Up::Exited {
+                worker: 1,
+                executed: 9,
+                clean: false,
+            })
+            .encode(),
+        ];
+        for good in goods {
+            for _ in 0..2000 {
+                let mut bad = good.clone();
+                let i = rng.below(bad.len() as u64) as usize;
+                bad[i] ^= 1 << rng.below(8);
+                let _ = Message::decode(&bad);
+            }
         }
     }
 
     #[test]
     fn truncated_header_is_an_error() {
-        // read_from with fewer than 4 length bytes
-        let two = [0u8, 1];
+        // read_from with fewer than 8 header bytes
+        let two = [b'B', b'T'];
         assert!(Message::read_from(&mut &two[..]).is_err());
         // declared length longer than the stream
         let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(PROTOCOL_VERSION);
         buf.extend_from_slice(&10u32.to_le_bytes());
         buf.extend_from_slice(&[1, 2, 3]);
         assert!(Message::read_from(&mut &buf[..]).is_err());

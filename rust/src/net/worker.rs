@@ -1,103 +1,26 @@
-//! Worker process: connect to the leader, execute every task pushed at
-//! it, stream partials back.
+//! `bts worker --connect`: a remote map slot as a separate process.
 //!
-//! The task loop is backend-agnostic ([`serve_connection`] is generic
-//! over [`Exec`]): `bts worker` runs it over a per-process PJRT
-//! [`Runtime`], and the native kernel backend (`exec::NativeExec` /
-//! `exec::Backend`) plugs into the same loop on hosts without XLA.
+//! This is deliberately a thin shell: all behavior lives in
+//! [`crate::transport::run_remote_worker`], which connects, handshakes
+//! (Hello → Welcome, slot assigned by the leader), and runs the same
+//! [`crate::transport::worker_body`] every in-proc map slot runs —
+//! two-step scheduler batches, prefetching through the leader-proxied
+//! DFS path, per-task metrics, and job-level recovery all come from
+//! the shared spine, not from anything TCP-specific here.
 
-use std::io::{BufReader, BufWriter};
-use std::net::TcpStream;
 use std::sync::Arc;
 
-use super::protocol::Message;
-use crate::coordinator::assemble::{execute_slices, MapTask, TaskPartial};
-use crate::error::{Error, Result};
-use crate::runtime::{Exec, Manifest, Runtime};
+use crate::error::Result;
+use crate::exec::Backend;
+use crate::transport::{run_remote_worker, RemoteWorkerOpts};
 
-/// Connect to `addr`, announce as `worker_id`, and serve until Done
-/// through a local PJRT runtime. Returns the number of tasks executed.
-///
-/// Connects (and sends Hello) *before* constructing the runtime: if
-/// runtime init fails — e.g. a build linking the vendored xla stub —
-/// the dropped stream surfaces as a read error at the leader, which
-/// fails the job fast instead of waiting forever in `accept()`.
+/// Connect to a leader at `addr` and serve one worker session through
+/// `backend`. Returns the number of tasks executed (the session ends
+/// when the leader sends `Shutdown` or the link dies).
 pub fn run_worker(
     addr: &str,
-    worker_id: u32,
-    manifest: Arc<Manifest>,
+    backend: Arc<Backend>,
+    opts: &RemoteWorkerOpts,
 ) -> Result<u64> {
-    let stream = TcpStream::connect(addr)?;
-    stream.set_nodelay(true).ok();
-    let mut rd = BufReader::new(stream.try_clone()?);
-    let mut wr = BufWriter::new(stream);
-    Message::Hello { worker: worker_id }.write_to(&mut wr)?;
-    let rt = Runtime::new(manifest)?;
-    serve_frames(&rt, &mut rd, &mut wr)
-}
-
-/// Connect to `addr`, announce as `worker_id`, and execute every pushed
-/// task through `rt` until the leader sends Done.
-pub fn serve_connection(
-    addr: &str,
-    worker_id: u32,
-    rt: &impl Exec,
-) -> Result<u64> {
-    let stream = TcpStream::connect(addr)?;
-    stream.set_nodelay(true).ok();
-    let mut rd = BufReader::new(stream.try_clone()?);
-    let mut wr = BufWriter::new(stream);
-    Message::Hello { worker: worker_id }.write_to(&mut wr)?;
-    serve_frames(rt, &mut rd, &mut wr)
-}
-
-/// The task loop proper, over any framed transport.
-fn serve_frames(
-    rt: &impl Exec,
-    mut rd: &mut impl std::io::Read,
-    mut wr: &mut impl std::io::Write,
-) -> Result<u64> {
-    let p = rt.manifest().params.clone();
-    let mut done: u64 = 0;
-    loop {
-        match Message::read_from(&mut rd)? {
-            Message::Task { seq, workload, seed, blocks } => {
-                let reply = (|| -> Result<Message> {
-                    let slices =
-                        MapTask::slices(&p, workload, &blocks, seed)?;
-                    Ok(match execute_slices(rt, &p, slices)? {
-                        TaskPartial::Eaglet { alod, weight } => {
-                            Message::Partial {
-                                seq,
-                                weight,
-                                values: alod,
-                                netflix: false,
-                            }
-                        }
-                        TaskPartial::Netflix { stats } => Message::Partial {
-                            seq,
-                            weight: 0.0,
-                            values: stats,
-                            netflix: true,
-                        },
-                    })
-                })();
-                match reply {
-                    Ok(msg) => msg.write_to(&mut wr)?,
-                    Err(e) => {
-                        Message::Error { message: e.to_string() }
-                            .write_to(&mut wr)?;
-                        return Err(e);
-                    }
-                }
-                done += 1;
-            }
-            Message::Done => return Ok(done),
-            other => {
-                return Err(Error::Protocol(format!(
-                    "worker expected Task/Done, got {other:?}"
-                )))
-            }
-        }
-    }
+    run_remote_worker(addr, backend, opts)
 }

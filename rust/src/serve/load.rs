@@ -42,6 +42,10 @@ pub struct LoadConfig {
     pub cache_mb: usize,
     /// Cache-affinity dispatch across the warm pool.
     pub affinity: bool,
+    /// Remote TCP map slots for the pool (`bts serve --listen
+    /// --workers-remote`): accepted once at pool start, serving every
+    /// tenant of the session.
+    pub remote: Option<crate::transport::RemoteWorkers>,
 }
 
 impl Default for LoadConfig {
@@ -56,6 +60,7 @@ impl Default for LoadConfig {
             infeasible_every: 5,
             cache_mb: 0,
             affinity: false,
+            remote: None,
         }
     }
 }
@@ -113,6 +118,7 @@ pub fn run_load(
                 workers: cfg.workers,
                 cache_mb: cfg.cache_mb,
                 affinity: cfg.affinity,
+                remote: cfg.remote.clone(),
                 ..Default::default()
             },
             max_active: cfg.max_active,

@@ -9,7 +9,9 @@
 //!
 //! * [`pool`] — a persistent worker pool: map slots, prefetchers, and
 //!   the replicated store outlive any job; tasks carry their job id
-//!   and key namespace.
+//!   and key namespace. Since the transport refactor the pool holds
+//!   [`crate::transport::WorkerLink`]s — local threads and remote
+//!   `bts worker --connect` processes are the same slots.
 //! * [`admission`] — [`JobRequest`]s enter through an SLO-aware gate:
 //!   the `slo` planner's time estimate rejects infeasible deadlines at
 //!   the door, and the queue orders by earliest deadline first

@@ -7,34 +7,46 @@
 //! 5–6 say must stay small. Pool workers are spawned once, serve tasks
 //! from *any* job (each task carries its job id, attempt, and key
 //! namespace), and exit only at service shutdown — the pool's
-//! `spawned` count never grows past `workers`, which the serve tests
-//! assert as the warm-pool invariant.
+//! `spawned` count never grows past its slot count, which the serve
+//! tests assert as the warm-pool invariant.
+//!
+//! Since the transport refactor the pool holds
+//! [`WorkerLink`]s, not join handles: local slots are threads running
+//! the shared [`crate::transport::worker_body`], and
+//! [`PoolConfig::remote`] slots are `bts worker --connect` processes
+//! adopted over framed TCP at pool start — same body, same message
+//! grammar, DFS-proxied data plane. The dispatcher above cannot tell
+//! them apart.
 //!
 //! Failure semantics differ from the solo executor on purpose: a task
-//! error is reported as [`PoolUp::TaskFailed`] and the worker *keeps
+//! error is reported as [`Up::TaskFailed`] and the worker *keeps
 //! running* — one tenant's bad job must not take map slots away from
 //! the others. The dispatcher aborts and restarts just that job
-//! (job-level recovery, scoped to the tenant).
+//! (job-level recovery, scoped to the tenant). A *link* death
+//! ([`Up::Lost`] — e.g. a remote worker dropping mid-job) retires the
+//! slot and restarts the jobs it may have been carrying.
 
-use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::thread;
 
 use crate::cache::{AffinityIndex, CacheLayer};
 use crate::data::ModelParams;
-use crate::dfs::{job_ns, Dfs, LatencyModel, Prefetcher};
+use crate::dfs::{Dfs, LatencyModel};
 use crate::error::{Error, Result};
-use crate::exec::cluster::{enqueue_keys, run_task, TaskDone};
 use crate::exec::Backend;
-use crate::metrics::Timer;
-use crate::scheduler::TaskSpec;
+use crate::transport::{
+    accept_links, teardown, BodyCfg, Down, RemoteWorkers, Up, WorkerLink,
+};
 
 /// Shape of the persistent pool backing a [`super::JobService`].
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
-    /// Worker threads (map slots shared by every in-flight job).
+    /// Local worker threads (map slots shared by every in-flight job).
     pub workers: usize,
+    /// Remote TCP map slots, accepted once at pool start and serving
+    /// every tenant until service shutdown (slot indices after the
+    /// local ones).
+    pub remote: Option<RemoteWorkers>,
     /// Data nodes backing the shared replicated store.
     pub data_nodes: usize,
     /// Replication factor for staged blocks (fixed for the pool's
@@ -55,6 +67,7 @@ impl Default for PoolConfig {
     fn default() -> Self {
         PoolConfig {
             workers: 4,
+            remote: None,
             data_nodes: 4,
             replication_factor: 2,
             latency: LatencyModel::none(),
@@ -65,63 +78,42 @@ impl Default for PoolConfig {
     }
 }
 
-/// One task routed through the pool: a [`TaskSpec`] tagged with its
-/// tenant. `ns` prefixes every block key; `attempt` lets the
-/// dispatcher discard results that straggle in after a job restart.
-pub(crate) struct PoolTask {
-    pub(crate) job: u64,
-    pub(crate) attempt: u32,
-    pub(crate) ns: Arc<str>,
-    pub(crate) spec: TaskSpec,
-    /// Injected fault: the worker reports failure instead of running
-    /// the task (recovery tests; modelled after `FailurePlan`).
-    pub(crate) poison: bool,
+impl PoolConfig {
+    /// Total map slots: local threads plus remote TCP workers.
+    pub fn slots(&self) -> usize {
+        self.workers + self.remote.as_ref().map_or(0, |r| r.count)
+    }
 }
 
-/// Dispatcher → worker messages.
-pub(crate) enum PoolMsg {
-    Task(Box<PoolTask>),
-    /// Drop every queued task of `job` with attempt ≤ `upto_attempt`
-    /// and purge the job's namespace from the prefetcher. The worker
-    /// acknowledges with [`PoolUp::Aborted`] so the dispatcher can
-    /// reconcile its in-flight accounting.
-    Abort { job: u64, upto_attempt: u32 },
-    Shutdown,
-}
-
-/// Worker → dispatcher messages.
-pub(crate) enum PoolUp {
-    Done { job: u64, attempt: u32, done: TaskDone },
-    TaskFailed { job: u64, attempt: u32, worker: usize, error: Error },
-    Aborted { worker: usize, dropped: u64 },
-    Exited { worker: usize, executed: u64 },
-}
-
-/// A spawned-once pool of workers over one shared store. `spawned`
-/// equals `workers` for the pool's whole life — there is no respawn
-/// path — and the serve report surfaces both so tests can assert the
-/// "zero respawns between jobs" warm-pool invariant.
+/// A spawned-once pool of worker links over one shared store.
+/// `spawned` equals the slot count for the pool's whole life — there
+/// is no respawn path — and the serve report surfaces both so tests
+/// can assert the "zero respawns between jobs" warm-pool invariant.
 pub(crate) struct WorkerPool {
     pub(crate) dfs: Arc<Dfs>,
+    /// Total map slots (local + remote).
     pub(crate) workers: usize,
     pub(crate) spawned: usize,
     /// Shared affinity registry (None unless `PoolConfig::affinity`).
     pub(crate) affinity: Option<Arc<AffinityIndex>>,
-    txs: Vec<mpsc::Sender<PoolMsg>>,
-    handles: Vec<thread::JoinHandle<()>>,
+    links: Vec<WorkerLink>,
 }
 
 impl WorkerPool {
-    /// Spawn the pool. `up` is the dispatcher's channel; every worker
-    /// reports completions, failures and its exit through it.
+    /// Stand the pool up: spawn the local slots, adopt the remote
+    /// ones. `up` is the dispatcher's channel; every worker reports
+    /// completions, failures and its exit through it.
     pub(crate) fn new(
         cfg: &PoolConfig,
         params: ModelParams,
         backend: Arc<Backend>,
-        up: mpsc::Sender<PoolUp>,
+        up: mpsc::Sender<Up>,
     ) -> Result<WorkerPool> {
-        if cfg.workers == 0 {
-            return Err(Error::Config("pool needs at least one worker".into()));
+        let slots = cfg.slots();
+        if slots == 0 {
+            return Err(Error::Config(
+                "pool needs at least one worker (local or remote)".into(),
+            ));
         }
         let dfs = Dfs::new(
             cfg.data_nodes.max(1),
@@ -129,205 +121,73 @@ impl WorkerPool {
             cfg.latency.clone(),
         );
         let layer = CacheLayer::build(&dfs, cfg.cache_mb, cfg.affinity);
-        let mut txs = Vec::with_capacity(cfg.workers);
-        let mut handles = Vec::with_capacity(cfg.workers);
-        let mut spawned = 0;
+        let mut links = Vec::with_capacity(slots);
         for w in 0..cfg.workers {
-            let (tx, rx) = mpsc::channel::<PoolMsg>();
-            txs.push(tx);
-            let wcfg = PoolWorkerCfg {
+            let body = BodyCfg {
                 worker: w,
                 prefetch_k: cfg.prefetch_k,
+                failure: None,
+                // Pool semantics: survive task errors, serve the next
+                // tenant.
+                survive_task_errors: true,
                 affinity: layer.affinity.clone(),
             };
-            let params = params.clone();
-            let backend = backend.clone();
-            let dfs = dfs.clone();
-            let up = up.clone();
-            handles.push(
-                thread::Builder::new()
-                    .name(format!("bts-serve-worker-{w}"))
-                    .spawn(move || {
-                        pool_worker_main(wcfg, params, backend, dfs, rx, up)
-                    })
-                    .map_err(|e| {
-                        Error::Scheduler(format!("spawn pool worker {w}: {e}"))
-                    })?,
-            );
-            spawned += 1;
+            links.push(WorkerLink::spawn_inproc(
+                body,
+                params.clone(),
+                backend.clone(),
+                dfs.clone(),
+                up.clone(),
+                "bts-serve-worker",
+            )?);
         }
+        if let Some(remote) = &cfg.remote {
+            match accept_links(remote, cfg.workers, &dfs, &up) {
+                Ok(remote_links) => links.extend(remote_links),
+                Err(e) => {
+                    teardown(links);
+                    return Err(e);
+                }
+            }
+        }
+        let spawned = links.len();
         Ok(WorkerPool {
             dfs,
-            workers: cfg.workers,
+            workers: slots,
             spawned,
             affinity: layer.affinity,
-            txs,
-            handles,
+            links,
         })
     }
 
-    /// Push a message to one worker. `false` means the worker's channel
-    /// is gone (it exited — only possible after shutdown began).
-    pub(crate) fn send(&self, worker: usize, msg: PoolMsg) -> bool {
-        self.txs[worker].send(msg).is_ok()
+    /// Push a message to one worker. `false` means the worker's link
+    /// is gone (its `Up::Lost`/`Exited` explains).
+    pub(crate) fn send(&self, worker: usize, msg: Down) -> bool {
+        self.links[worker].send(msg)
     }
 
     /// Broadcast a job abort to every worker.
     pub(crate) fn abort(&self, job: u64, upto_attempt: u32) {
-        for tx in &self.txs {
-            let _ = tx.send(PoolMsg::Abort { job, upto_attempt });
+        for l in &self.links {
+            let _ = l.send(Down::Abort { job, upto_attempt });
         }
     }
 
-    /// Tell every worker to exit and join them. The caller drains the
-    /// up-channel for [`PoolUp::Exited`] accounting.
+    /// Tell every worker to exit and join the links. The caller
+    /// drains the up-channel for [`Up::Exited`] accounting.
     pub(crate) fn shutdown(self) {
-        for tx in &self.txs {
-            let _ = tx.send(PoolMsg::Shutdown);
-        }
-        drop(self.txs);
-        for h in self.handles {
-            let _ = h.join();
-        }
+        teardown(self.links);
     }
-}
-
-/// Per-worker knobs handed to [`pool_worker_main`].
-struct PoolWorkerCfg {
-    worker: usize,
-    prefetch_k: usize,
-    affinity: Option<Arc<AffinityIndex>>,
-}
-
-/// One persistent pool worker: the same drain → wait → execute loop as
-/// the solo executor's workers, but job-tagged, namespace-aware, and
-/// immortal until `Shutdown` — task failures are reported and survived.
-fn pool_worker_main(
-    cfg: PoolWorkerCfg,
-    params: ModelParams,
-    backend: Arc<Backend>,
-    dfs: Arc<Dfs>,
-    rx: mpsc::Receiver<PoolMsg>,
-    up: mpsc::Sender<PoolUp>,
-) {
-    let worker = cfg.worker;
-    let mut pf = Prefetcher::new(dfs, cfg.prefetch_k);
-    if let Some(index) = cfg.affinity {
-        pf = pf.with_affinity(worker, index);
-    }
-    let mut queue: VecDeque<PoolTask> = VecDeque::new();
-    let mut executed = 0u64;
-    let handle_abort =
-        |queue: &mut VecDeque<PoolTask>,
-         pf: &mut Prefetcher,
-         job: u64,
-         upto: u32| {
-            let before = queue.len();
-            queue.retain(|t| !(t.job == job && t.attempt <= upto));
-            let dropped = (before - queue.len()) as u64;
-            // local-only: the job's staged blocks are unchanged across
-            // attempts, so its shared-cache entries stay coherent (and
-            // keep the restart warm); shared-structure invalidation
-            // happens once, at retirement
-            pf.purge_prefix_local(&job_ns(job));
-            let _ = up.send(PoolUp::Aborted { worker, dropped });
-        };
-    'outer: loop {
-        // Non-blocking drain: enqueue everything the dispatcher sent
-        // (feeding the prefetcher lookahead across jobs).
-        loop {
-            match rx.try_recv() {
-                Ok(PoolMsg::Task(t)) => {
-                    enqueue_keys(&mut pf, &t.spec, &t.ns);
-                    queue.push_back(*t);
-                }
-                Ok(PoolMsg::Abort { job, upto_attempt }) => {
-                    handle_abort(&mut queue, &mut pf, job, upto_attempt);
-                }
-                Ok(PoolMsg::Shutdown) => break 'outer,
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    if queue.is_empty() {
-                        break 'outer;
-                    }
-                    break;
-                }
-            }
-        }
-        // Idle: block for the next instruction, measuring queue wait.
-        let mut queue_wait_s = 0.0;
-        if queue.is_empty() {
-            let wait_t = Timer::start();
-            match rx.recv() {
-                Ok(PoolMsg::Task(t)) => {
-                    queue_wait_s = wait_t.secs();
-                    enqueue_keys(&mut pf, &t.spec, &t.ns);
-                    queue.push_back(*t);
-                }
-                Ok(PoolMsg::Abort { job, upto_attempt }) => {
-                    handle_abort(&mut queue, &mut pf, job, upto_attempt);
-                    continue;
-                }
-                Ok(PoolMsg::Shutdown) | Err(_) => break,
-            }
-        }
-        let Some(task) = queue.pop_front() else { continue };
-        if task.poison {
-            let _ = up.send(PoolUp::TaskFailed {
-                job: task.job,
-                attempt: task.attempt,
-                worker,
-                error: Error::Scheduler(format!(
-                    "injected task fault in job {} (attempt {}, task {})",
-                    task.job, task.attempt, task.spec.task.seq
-                )),
-            });
-            continue;
-        }
-        let (h0, m0) = (pf.hits, pf.misses);
-        let (ch0, cm0) = (pf.cache_hits, pf.cache_misses);
-        match run_task(&params, &backend, &mut pf, &task.spec, &task.ns) {
-            Ok((partial, fetch_s, exec_s)) => {
-                executed += 1;
-                let done = TaskDone {
-                    worker,
-                    seq: task.spec.task.seq,
-                    partial,
-                    fetch_s,
-                    exec_s,
-                    queue_wait_s,
-                    prefetch_hits: pf.hits - h0,
-                    prefetch_misses: pf.misses - m0,
-                    cache_hits: pf.cache_hits - ch0,
-                    cache_misses: pf.cache_misses - cm0,
-                };
-                let sent = up.send(PoolUp::Done {
-                    job: task.job,
-                    attempt: task.attempt,
-                    done,
-                });
-                if sent.is_err() {
-                    break;
-                }
-            }
-            Err(e) => {
-                let _ = up.send(PoolUp::TaskFailed {
-                    job: task.job,
-                    attempt: task.attempt,
-                    worker,
-                    error: e,
-                });
-            }
-        }
-    }
-    let _ = up.send(PoolUp::Exited { worker, executed });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::Workload;
+    use crate::dfs::job_ns;
     use crate::kneepoint::{pack, TaskSizing};
+    use crate::scheduler::TaskSpec;
+    use crate::transport::TaskEnvelope;
 
     #[test]
     fn zero_worker_pool_is_a_config_error() {
@@ -363,7 +223,7 @@ mod tests {
         for (i, spec) in specs.into_iter().enumerate() {
             pool.send(
                 0,
-                PoolMsg::Task(Box::new(PoolTask {
+                Down::Task(Box::new(TaskEnvelope {
                     job: 9,
                     attempt: 1,
                     ns: ns.clone(),
@@ -376,8 +236,8 @@ mod tests {
         let mut failed = 0;
         for _ in 0..3 {
             match rx.recv().unwrap() {
-                PoolUp::Done { job: 9, attempt: 1, .. } => done += 1,
-                PoolUp::TaskFailed { job: 9, attempt: 1, .. } => failed += 1,
+                Up::Done { job: 9, attempt: 1, .. } => done += 1,
+                Up::TaskFailed { job: 9, attempt: 1, .. } => failed += 1,
                 _ => panic!("unexpected pool message"),
             }
         }
@@ -387,7 +247,7 @@ mod tests {
         // Exited arrives with the executed count (poisoned task excluded).
         let exited = loop {
             match rx.recv().unwrap() {
-                PoolUp::Exited { executed, .. } => break executed,
+                Up::Exited { executed, .. } => break executed,
                 _ => continue,
             }
         };

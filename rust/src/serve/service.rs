@@ -27,7 +27,7 @@ use super::admission::{
     feasible, pop_index, AdmissionPolicy, InjectedFault, JobRequest,
     QueuedJob,
 };
-use super::pool::{PoolConfig, PoolMsg, PoolTask, PoolUp, WorkerPool};
+use super::pool::{PoolConfig, WorkerPool};
 use crate::cache::{AffinityHook, CacheStats};
 use crate::coordinator::JobOutput;
 use crate::data::ModelParams;
@@ -40,6 +40,7 @@ use crate::metrics::{JobReport, Timer};
 use crate::runtime::Exec as _;
 use crate::scheduler::{SchedConfig, TaskSpec};
 use crate::slo::estimate_job_s;
+use crate::transport::{Down, TaskEnvelope, Up};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::stats::{summarize, Summary};
 use crate::workloads::{build_small, default_compute_s_per_mib};
@@ -337,6 +338,7 @@ impl JobService {
             queue: Vec::new(),
             active: Vec::new(),
             inflight: vec![0; workers],
+            dead: vec![false; workers],
             rr: 0,
             draining: false,
             jobs_admitted: 0,
@@ -451,7 +453,7 @@ struct Dispatcher {
     backend: Arc<Backend>,
     params: ModelParams,
     pool: WorkerPool,
-    pool_rx: mpsc::Receiver<PoolUp>,
+    pool_rx: mpsc::Receiver<Up>,
     submit_rx: mpsc::Receiver<Cmd>,
     policy: AdmissionPolicy,
     max_active: usize,
@@ -461,6 +463,10 @@ struct Dispatcher {
     active: Vec<ActiveJob>,
     /// Tasks in flight per worker, across every job (dispatch window).
     inflight: Vec<usize>,
+    /// Slots whose link died ([`Up::Lost`]); never dispatched to
+    /// again. The warm pool has no respawn path — lost remote workers
+    /// shrink the pool for the rest of the session.
+    dead: Vec<bool>,
     /// Round-robin cursor over `active` (cross-job fairness).
     rr: usize,
     draining: bool,
@@ -545,7 +551,7 @@ impl Dispatcher {
         pool.shutdown();
         let mut worker_executed = vec![0u64; workers];
         while let Ok(m) = self.pool_rx.try_recv() {
-            if let PoolUp::Exited { worker, executed } = m {
+            if let Up::Exited { worker, executed, .. } = m {
                 worker_executed[worker] = executed;
             }
         }
@@ -593,6 +599,60 @@ impl Dispatcher {
         });
     }
 
+    fn all_dead(&self) -> bool {
+        self.dead.iter().all(|&d| d)
+    }
+
+    /// One slot's link is gone — pump-reported [`Up::Lost`], or a
+    /// failed send discovered it first (whichever wins the race; the
+    /// loser is a no-op via the `dead` guard). Retire the slot, then
+    /// restart every active job: any of them may have had tasks
+    /// queued or running there, and a restart is harmless for the
+    /// rest (same seeds ⇒ same statistics, tenant-scoped). Neighbour
+    /// slots keep their workers. If no live slot remains, fail every
+    /// active *and queued* job now — submitters must not block on a
+    /// quiescent dead pool.
+    fn on_worker_lost(&mut self, worker: usize, why: &str) {
+        if self.dead[worker] {
+            return;
+        }
+        self.dead[worker] = true;
+        self.inflight[worker] = 0;
+        let affected: Vec<(u64, u32)> =
+            self.active.iter().map(|a| (a.id, a.attempt)).collect();
+        for (job, attempt) in affected {
+            self.on_task_failed(
+                job,
+                attempt,
+                Error::Scheduler(format!(
+                    "worker {worker} link lost: {why}"
+                )),
+            );
+        }
+        if self.all_dead() {
+            while !self.active.is_empty() {
+                let a = self.retire_active(0);
+                let _ = a.reply.send(Err(Error::Scheduler(
+                    "every pool worker is lost".into(),
+                )));
+                self.jobs_failed += 1;
+            }
+            while let Some(qj) = self.queue.pop() {
+                let _ = qj.payload.reply.send(Err(Error::Scheduler(
+                    "every pool worker is lost".into(),
+                )));
+                self.jobs_failed += 1;
+            }
+        } else {
+            // Restarted jobs re-dispatch immediately on the surviving
+            // slots (their Dones would otherwise be the only refill
+            // trigger).
+            for w in 0..self.pool.workers {
+                self.top_up_worker(w);
+            }
+        }
+    }
+
     /// Promote the next queued job (EDF or FIFO): build its dataset,
     /// stage its blocks under its namespace, and hand it a fresh
     /// [`JobCtx`]. Returns false when the queue is empty.
@@ -602,6 +662,15 @@ impl Dispatcher {
         };
         let qj = self.queue.remove(i);
         let Pending { req, reply } = qj.payload;
+        if self.all_dead() {
+            // A dead pool cannot make progress; fail fast instead of
+            // staging work that will never run.
+            let _ = reply.send(Err(Error::Scheduler(
+                "every pool worker is lost".into(),
+            )));
+            self.jobs_failed += 1;
+            return true;
+        }
         let started = Instant::now();
         let stage_t = Timer::start();
         let ds = build_small(req.workload, &self.params, req.samples);
@@ -676,7 +745,7 @@ impl Dispatcher {
     /// Fill `w`'s dispatch window, interleaving tasks from every
     /// active job round-robin — the cross-tenant multiplexing step.
     fn top_up_worker(&mut self, w: usize) {
-        while self.inflight[w] < self.target_inflight {
+        while !self.dead[w] && self.inflight[w] < self.target_inflight {
             let n = self.active.len();
             if n == 0 {
                 return;
@@ -692,7 +761,7 @@ impl Dispatcher {
                     });
                     job.dispatched += 1;
                     let (jid, jattempt) = (job.id, job.attempt);
-                    let task = PoolTask {
+                    let task = TaskEnvelope {
                         job: jid,
                         attempt: jattempt,
                         ns: job.ns.clone(),
@@ -700,21 +769,18 @@ impl Dispatcher {
                         poison,
                     };
                     self.rr = (i + 1) % n;
-                    if self.pool.send(w, PoolMsg::Task(Box::new(task))) {
+                    if self.pool.send(w, Down::Task(Box::new(task))) {
                         self.inflight[w] += 1;
                         sent = true;
                         break;
                     }
-                    // Dead worker channel: the claimed spec just
-                    // vanished with the message. Abort/restart the job
-                    // so the task is re-dispatched, never leaked.
-                    self.on_task_failed(
-                        jid,
-                        jattempt,
-                        Error::Scheduler(format!(
-                            "worker {w} channel closed mid-dispatch"
-                        )),
-                    );
+                    // Dead worker link discovered on send: the
+                    // claimed spec just vanished with the message.
+                    // Run the full lost-slot handling here — it
+                    // restarts *every* affected tenant (this job
+                    // included), so the pump's own `Up::Lost`, which
+                    // may lose this race, can safely be a no-op.
+                    self.on_worker_lost(w, "link closed mid-dispatch");
                     return;
                 }
             }
@@ -724,9 +790,9 @@ impl Dispatcher {
         }
     }
 
-    fn handle_up(&mut self, msg: PoolUp) {
+    fn handle_up(&mut self, msg: Up) {
         match msg {
-            PoolUp::Done { job, attempt, done } => {
+            Up::Done { job, attempt, done } => {
                 let w = done.worker;
                 self.inflight[w] = self.inflight[w].saturating_sub(1);
                 // Route to the job iff it's still on this attempt —
@@ -739,27 +805,31 @@ impl Dispatcher {
                     if self.active[i].first_partial.is_none() {
                         self.active[i].first_partial = Some(Instant::now());
                     }
-                    self.active[i].ctx.on_done(done);
+                    self.active[i].ctx.on_done(*done);
                     if self.active[i].ctx.is_complete() {
                         self.finish_job(i);
                     }
                 }
                 self.top_up_worker(w);
             }
-            PoolUp::TaskFailed { job, attempt, worker, error } => {
+            Up::TaskFailed { job, attempt, worker, error } => {
                 self.inflight[worker] =
                     self.inflight[worker].saturating_sub(1);
                 self.on_task_failed(job, attempt, error);
                 self.top_up_worker(worker);
             }
-            PoolUp::Aborted { worker, dropped } => {
+            Up::Aborted { worker, dropped } => {
                 self.inflight[worker] = self.inflight[worker]
                     .saturating_sub(dropped as usize);
                 self.top_up_worker(worker);
             }
-            // Workers only exit during shutdown; the drain loop after
-            // the main loop collects these.
-            PoolUp::Exited { .. } => {}
+            Up::Lost { worker, error } => {
+                self.on_worker_lost(worker, &error.to_string());
+            }
+            // Workers only exit during shutdown (or right after a
+            // Lost, synthesized); the drain loop after the main loop
+            // collects the orderly ones.
+            Up::Exited { .. } => {}
         }
     }
 

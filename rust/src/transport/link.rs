@@ -1,0 +1,393 @@
+//! Leader-side worker links: the one handle a leader holds per map
+//! slot, whatever the transport underneath.
+//!
+//! * [`WorkerLink::spawn_inproc`] — a worker thread running
+//!   [`super::worker_body`] over mpsc channels (the historical
+//!   `exec`/`serve` transport).
+//! * [`accept_links`] — remote `bts worker --connect` processes over
+//!   framed TCP: each accepted connection gets a **pump** thread that
+//!   translates incoming frames into the same shared
+//!   `mpsc::Sender<Up>` the in-proc workers feed, and answers the
+//!   worker's `DfsGet`/`DfsPut` data-plane requests directly from the
+//!   leader's replicated [`Dfs`] — so remote fetches still pass
+//!   through response-time-aware replica selection and the shared
+//!   block cache, and the dispatcher never blocks on another
+//!   worker's I/O.
+//!
+//! A link that dies without an orderly `Exited` (reset, EOF mid-job,
+//! protocol garbage) is surfaced as [`Up::Lost`] followed by a
+//! synthesized unclean [`Up::Exited`], so leaders that wait for every
+//! slot's exit never hang on a vanished worker — the worker-failure
+//! path job-level recovery keys off.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use super::{BodyCfg, Down, InProcChannel, Up};
+use crate::data::ModelParams;
+use crate::dfs::{BlockSource, Dfs};
+use crate::error::{Error, Result};
+use crate::exec::Backend;
+use crate::net::protocol::{
+    configure_stream, Message, ACCEPT_TIMEOUT, HANDSHAKE_TIMEOUT,
+    PUMP_IDLE_TIMEOUT,
+};
+
+/// Remote map slots for a leader: a pre-bound listener plus how many
+/// workers to accept on it. Binding is the caller's job (so tests can
+/// bind port 0 and learn the address, and job-level recovery can
+/// reuse one listener across attempts — reconnecting workers land in
+/// the backlog and are adopted by the next attempt).
+#[derive(Debug, Clone)]
+pub struct RemoteWorkers {
+    pub listener: Arc<TcpListener>,
+    pub count: usize,
+}
+
+impl RemoteWorkers {
+    /// Bind `addr` and expect `count` workers to connect.
+    pub fn bind(addr: &str, count: usize) -> Result<RemoteWorkers> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(RemoteWorkers { listener: Arc::new(listener), count })
+    }
+
+    /// The bound address (`--listen 127.0.0.1:0` resolves here).
+    pub fn addr(&self) -> String {
+        self.listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_default()
+    }
+}
+
+enum LinkSender {
+    InProc(mpsc::Sender<Down>),
+    Tcp(Arc<Mutex<BufWriter<TcpStream>>>),
+}
+
+/// The leader's handle to one map slot. `send` is the entire control
+/// surface; above this type, in-proc and TCP workers are
+/// indistinguishable.
+pub struct WorkerLink {
+    worker: usize,
+    sender: LinkSender,
+    /// The worker thread (in-proc) or frame pump (TCP), joined at
+    /// teardown.
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl WorkerLink {
+    /// Spawn a local worker thread over [`super::worker_body`].
+    pub fn spawn_inproc(
+        cfg: BodyCfg,
+        params: ModelParams,
+        backend: Arc<Backend>,
+        source: Arc<dyn BlockSource>,
+        up: mpsc::Sender<Up>,
+        thread_label: &str,
+    ) -> Result<WorkerLink> {
+        let worker = cfg.worker;
+        let (tx, rx) = mpsc::channel::<Down>();
+        let handle = thread::Builder::new()
+            .name(format!("{thread_label}-{worker}"))
+            .spawn(move || {
+                let mut chan = InProcChannel { rx, tx: up };
+                super::worker_body(&cfg, &params, &backend, source, &mut chan);
+            })
+            .map_err(|e| {
+                Error::Scheduler(format!("spawn worker {worker}: {e}"))
+            })?;
+        Ok(WorkerLink {
+            worker,
+            sender: LinkSender::InProc(tx),
+            handle: Some(handle),
+        })
+    }
+
+    /// Adopt one accepted remote connection as map slot `worker`:
+    /// handshake (Hello → Welcome), then spawn the frame pump.
+    pub fn adopt_tcp(
+        stream: TcpStream,
+        worker: usize,
+        dfs: Arc<Dfs>,
+        up: mpsc::Sender<Up>,
+    ) -> Result<WorkerLink> {
+        configure_stream(&stream)?;
+        let mut rd = BufReader::new(stream.try_clone()?);
+        match Message::read_deadline(&mut rd, Some(HANDSHAKE_TIMEOUT))? {
+            Message::Hello { .. } => {}
+            other => {
+                return Err(Error::Protocol(format!(
+                    "expected Hello, got {other:?}"
+                )))
+            }
+        }
+        let wr = Arc::new(Mutex::new(BufWriter::new(stream)));
+        {
+            let mut g = wr.lock().unwrap();
+            Message::Welcome { worker: worker as u32 }.write_to(&mut *g)?;
+        }
+        let pump_wr = wr.clone();
+        let handle = thread::Builder::new()
+            .name(format!("bts-link-pump-{worker}"))
+            .spawn(move || pump(worker, rd, dfs, pump_wr, up))
+            .map_err(|e| {
+                Error::Scheduler(format!("spawn link pump {worker}: {e}"))
+            })?;
+        Ok(WorkerLink {
+            worker,
+            sender: LinkSender::Tcp(wr),
+            handle: Some(handle),
+        })
+    }
+
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    pub fn is_remote(&self) -> bool {
+        matches!(self.sender, LinkSender::Tcp(_))
+    }
+
+    /// Push one control message down the link. `false` means the link
+    /// is gone (its `Up::Lost`/`Exited` explains).
+    pub fn send(&self, msg: Down) -> bool {
+        match &self.sender {
+            LinkSender::InProc(tx) => tx.send(msg).is_ok(),
+            LinkSender::Tcp(wr) => {
+                let Ok(mut g) = wr.lock() else { return false };
+                Message::Down(msg).write_to(&mut *g).is_ok()
+            }
+        }
+    }
+
+    /// Join the worker thread / pump. Call after `Up::Exited` has
+    /// been collected (or after sending `Shutdown`). `false` means
+    /// the joined thread panicked.
+    pub fn join(mut self) -> bool {
+        match self.handle.take() {
+            Some(h) => h.join().is_ok(),
+            None => true,
+        }
+    }
+}
+
+/// The per-connection frame pump: forward the worker's control
+/// messages into the leader's shared up-channel (rewriting the worker
+/// id to this link's slot — accounting trusts the link, not the
+/// peer), and serve its DFS data-plane requests from the real store.
+fn pump(
+    worker: usize,
+    mut rd: BufReader<TcpStream>,
+    dfs: Arc<Dfs>,
+    wr: Arc<Mutex<BufWriter<TcpStream>>>,
+    up: mpsc::Sender<Up>,
+) {
+    let lost = |error: Error| {
+        let _ = up.send(Up::Lost { worker, error });
+        // Synthesized unclean exit: leaders waiting for every slot's
+        // Exited must not hang on a vanished worker.
+        let _ = up.send(Up::Exited { worker, executed: 0, clean: false });
+    };
+    loop {
+        // Idle-bounded read: workers heartbeat ([`Message::Ping`])
+        // even mid-task, so several missed intervals means a silently
+        // partitioned peer (no FIN/RST will ever come) — surface it
+        // as Lost instead of wedging the leader forever.
+        match Message::read_deadline(&mut rd, Some(PUMP_IDLE_TIMEOUT)) {
+            Ok(Message::Up(u)) => {
+                let exiting = matches!(u, Up::Exited { .. });
+                if up.send(rewrite_worker(u, worker)).is_err() || exiting {
+                    return;
+                }
+            }
+            Ok(Message::Ping) => {}
+            Ok(Message::DfsGet { key }) => {
+                let reply = match dfs.get_traced(&key) {
+                    // The store's Arc rides into the frame write
+                    // directly — no deep copy per served block.
+                    Ok((data, _wall, _lookup)) => {
+                        Message::DfsBlock { data, key }
+                    }
+                    Err(e) => {
+                        Message::DfsMiss { key, message: e.to_string() }
+                    }
+                };
+                let ok = match wr.lock() {
+                    Ok(mut g) => reply.write_to(&mut *g).is_ok(),
+                    Err(_) => false,
+                };
+                if !ok {
+                    lost(Error::Protocol(format!(
+                        "worker {worker}: data-plane write failed"
+                    )));
+                    return;
+                }
+            }
+            Ok(Message::DfsPut { key, data }) => {
+                dfs.put(&key, Arc::new(data));
+            }
+            Ok(other) => {
+                lost(Error::Protocol(format!(
+                    "worker {worker} sent unexpected {other:?}"
+                )));
+                return;
+            }
+            Err(e) => {
+                lost(e);
+                return;
+            }
+        }
+    }
+}
+
+/// Stamp the link's slot id over whatever the peer claimed.
+fn rewrite_worker(u: Up, worker: usize) -> Up {
+    match u {
+        Up::Done { job, attempt, mut done } => {
+            done.worker = worker;
+            Up::Done { job, attempt, done }
+        }
+        Up::TaskFailed { job, attempt, error, .. } => {
+            Up::TaskFailed { job, attempt, worker, error }
+        }
+        Up::Aborted { dropped, .. } => Up::Aborted { worker, dropped },
+        Up::Lost { error, .. } => Up::Lost { worker, error },
+        Up::Exited { executed, clean, .. } => {
+            Up::Exited { worker, executed, clean }
+        }
+    }
+}
+
+/// Orderly link teardown: `Shutdown` to every link, then join them
+/// all. Leaders use this on partial-standup failures (a remote worker
+/// that never arrived must not strand the slots that did).
+pub fn teardown(links: Vec<WorkerLink>) {
+    for l in &links {
+        let _ = l.send(Down::Shutdown);
+    }
+    for l in links {
+        l.join();
+    }
+}
+
+/// Accept `remote.count` workers, assigning slots `first_slot..`.
+/// Each accept + handshake is bounded ([`ACCEPT_TIMEOUT`] /
+/// [`HANDSHAKE_TIMEOUT`]), so a missing worker fails the run instead
+/// of wedging it.
+pub fn accept_links(
+    remote: &RemoteWorkers,
+    first_slot: usize,
+    dfs: &Arc<Dfs>,
+    up: &mpsc::Sender<Up>,
+) -> Result<Vec<WorkerLink>> {
+    let mut links = Vec::with_capacity(remote.count);
+    remote.listener.set_nonblocking(true)?;
+    for i in 0..remote.count {
+        let deadline = Instant::now() + ACCEPT_TIMEOUT;
+        let stream = loop {
+            match remote.listener.accept() {
+                Ok((stream, _addr)) => break stream,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    if Instant::now() > deadline {
+                        return Err(Error::Protocol(format!(
+                            "timed out waiting for remote worker {} of {}",
+                            i + 1,
+                            remote.count
+                        )));
+                    }
+                    thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::Io(e)),
+            }
+        };
+        links.push(WorkerLink::adopt_tcp(
+            stream,
+            first_slot + i,
+            dfs.clone(),
+            up.clone(),
+        )?);
+    }
+    Ok(links)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::LatencyModel;
+
+    #[test]
+    fn remote_workers_bind_reports_resolved_addr() {
+        let rw = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+        let addr = rw.addr();
+        assert!(addr.starts_with("127.0.0.1:"));
+        assert!(!addr.ends_with(":0"), "port should be resolved: {addr}");
+    }
+
+    #[test]
+    fn accept_rejects_non_hello_first_frame() {
+        let rw = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+        let addr = rw.addr();
+        let client = thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            configure_stream(&stream).unwrap();
+            let mut wr = BufWriter::new(stream);
+            Message::DfsGet { key: "x".into() }
+                .write_to(&mut wr)
+                .unwrap();
+            // keep the socket open until the leader judges the frame
+            thread::sleep(std::time::Duration::from_millis(200));
+        });
+        let dfs = Dfs::new(1, 1, LatencyModel::none());
+        let (up_tx, _up_rx) = mpsc::channel();
+        let err = accept_links(&rw, 0, &dfs, &up_tx).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn dead_tcp_link_surfaces_lost_and_unclean_exit() {
+        let rw = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+        let addr = rw.addr();
+        let client = thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            configure_stream(&stream).unwrap();
+            let mut rd = BufReader::new(stream.try_clone().unwrap());
+            let mut wr = BufWriter::new(stream);
+            Message::Hello { worker: 0 }.write_to(&mut wr).unwrap();
+            let Message::Welcome { worker } =
+                Message::read_from(&mut rd).unwrap()
+            else {
+                panic!("expected Welcome")
+            };
+            assert_eq!(worker, 4);
+            // vanish without an Exited — a crashed worker
+        });
+        let dfs = Dfs::new(1, 1, LatencyModel::none());
+        let (up_tx, up_rx) = mpsc::channel();
+        let links = accept_links(&rw, 4, &dfs, &up_tx).unwrap();
+        client.join().unwrap();
+        match up_rx.recv().unwrap() {
+            Up::Lost { worker: 4, .. } => {}
+            other => panic!("expected Lost, got {other:?}"),
+        }
+        match up_rx.recv().unwrap() {
+            Up::Exited { worker: 4, clean: false, .. } => {}
+            other => panic!("expected unclean Exited, got {other:?}"),
+        }
+        for l in links {
+            assert!(l.is_remote());
+            l.join();
+        }
+    }
+}

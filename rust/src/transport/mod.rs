@@ -1,0 +1,569 @@
+//! The pluggable transport spine: one control-plane message grammar,
+//! one worker body, two transports (DESIGN.md §11).
+//!
+//! Before this module, the platform had two execution paths: the real
+//! one (`exec::cluster` + `serve` over in-process mpsc channels, with
+//! the two-step scheduler, DFS, prefetching, cache and recovery) and a
+//! feature-poor TCP path (`net::serve_job`) that shipped data inline
+//! and bypassed all of it. The thesis's central trade — task-creation
+//! and data-distribution overhead vs cache-miss savings — was only
+//! measurable on the channel half. This module collapses both paths
+//! into one spine over a swappable transport:
+//!
+//! * **Control plane** — [`Down`] (leader → worker: tasks, aborts,
+//!   shutdown) and [`Up`] (worker → leader: completions, failures,
+//!   abort acks, exit). The leader holds one [`link::WorkerLink`] per
+//!   map slot; in-proc links are mpsc senders to a worker thread, TCP
+//!   links write frames ([`crate::net::Message`]) to a socket whose
+//!   read side is pumped back into the same shared `mpsc::Sender<Up>`
+//!   the in-proc workers use — above the links, the leader cannot
+//!   tell the transports apart.
+//! * **Data plane** — workers fetch blocks through
+//!   [`crate::dfs::BlockSource`]: in-proc workers hold the replicated
+//!   [`crate::dfs::Dfs`] directly; remote workers hold a
+//!   [`remote::RemoteDfs`] that proxies Get/Put over the same socket
+//!   (served by the leader's pump from the real store, so remote
+//!   fetches still go through response-time-aware replica selection
+//!   and the shared block cache) with an optional worker-local
+//!   [`crate::cache::BlockCache`] in front.
+//! * **One worker body** — [`worker_body`] is the drain → wait →
+//!   execute → report loop every map slot runs: solo `exec` worker
+//!   threads, warm `serve` pool workers, and `bts worker --connect`
+//!   processes. TCP workers get the two-step scheduler's probe/
+//!   feedback batches, prefetching, per-task metrics, and job-level
+//!   recovery for free, because those all live above (or below) this
+//!   loop, not inside the transport.
+//!
+//! **Determinism across transports**: a job's output is a function of
+//! its per-task seeds and the seq-ordered reduce, never of which
+//! worker ran a task, in what order tasks finished, or how their
+//! bytes travelled. Partials cross the wire as exact little-endian
+//! `f32` bits, so an in-proc run and a loopback-TCP run of the same
+//! seed produce bit-identical [`crate::coordinator::JobOutput`]s —
+//! `rust/tests/integration_transport.rs` holds that contract.
+
+pub mod link;
+pub mod remote;
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::cache::AffinityIndex;
+use crate::coordinator::assemble::{execute_slices, MapTask, TaskPartial};
+use crate::coordinator::recovery::FailurePlan;
+use crate::data::block::Block;
+use crate::data::ModelParams;
+use crate::dfs::{BlockSource, Prefetcher};
+use crate::error::{Error, Result};
+use crate::exec::Backend;
+use crate::metrics::Timer;
+use crate::scheduler::TaskSpec;
+
+pub use link::{accept_links, teardown, RemoteWorkers, WorkerLink};
+pub use remote::{run_remote_worker, RemoteWorkerOpts};
+
+/// One task routed to a map slot, tagged with its tenant. `ns`
+/// prefixes every block key (`""` for solo runs); `attempt` lets the
+/// leader discard results that straggle in after a job restart;
+/// `poison` is the serve layer's injected task fault.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskEnvelope {
+    pub job: u64,
+    pub attempt: u32,
+    pub ns: Arc<str>,
+    pub spec: TaskSpec,
+    pub poison: bool,
+}
+
+/// Leader → worker control messages, over any transport.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Down {
+    Task(Box<TaskEnvelope>),
+    /// Drop every queued task of `job` with attempt ≤ `upto_attempt`
+    /// and purge the job's namespace from worker-local caches. The
+    /// worker acknowledges with [`Up::Aborted`].
+    Abort { job: u64, upto_attempt: u32 },
+    Shutdown,
+}
+
+/// One finished task, reported up the shuffle path. Prefetch and
+/// cache counters are per-task deltas, so an accumulator can
+/// attribute them to the right job even when one worker serves many
+/// jobs.
+#[derive(Debug, Clone)]
+pub struct TaskDone {
+    pub worker: usize,
+    pub seq: usize,
+    pub partial: TaskPartial,
+    pub fetch_s: f64,
+    pub exec_s: f64,
+    /// Seconds the worker sat idle waiting for this task to arrive.
+    pub queue_wait_s: f64,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    /// Shared/worker-local block-cache outcomes for this task's
+    /// fetches (zero when no cache is attached anywhere).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Worker → leader control messages, over any transport.
+#[derive(Debug)]
+pub enum Up {
+    Done { job: u64, attempt: u32, done: Box<TaskDone> },
+    /// One task of `(job, attempt)` failed. Solo runs treat this as
+    /// fatal to the attempt; the serve dispatcher restarts just that
+    /// tenant's job.
+    TaskFailed { job: u64, attempt: u32, worker: usize, error: Error },
+    /// Ack for [`Down::Abort`]: `dropped` queued tasks discarded.
+    Aborted { worker: usize, dropped: u64 },
+    /// Transport-level loss: the worker's link died without an
+    /// orderly `Exited` (TCP reset, EOF mid-job, protocol error).
+    /// Synthesized by the leader-side pump, never sent by a worker.
+    Lost { worker: usize, error: Error },
+    Exited { worker: usize, executed: u64, clean: bool },
+}
+
+/// Non-blocking receive outcome for a worker's control channel.
+pub enum Poll {
+    Msg(Down),
+    Empty,
+    Closed,
+}
+
+/// The worker's end of a transport: receive [`Down`]s, send [`Up`]s.
+/// In-proc this is an mpsc pair; over TCP the receive side is fed by
+/// a socket-reader thread and sends are framed writes.
+pub trait WorkerChannel {
+    fn try_recv(&mut self) -> Poll;
+    /// Blocking receive; `None` means the link is gone.
+    fn recv(&mut self) -> Option<Down>;
+    /// `false` means the link is gone (the worker should wind down).
+    fn send(&mut self, up: Up) -> bool;
+}
+
+/// The in-process channel: what `exec` worker threads and the serve
+/// pool's warm workers run over.
+pub struct InProcChannel {
+    pub rx: mpsc::Receiver<Down>,
+    pub tx: mpsc::Sender<Up>,
+}
+
+impl WorkerChannel for InProcChannel {
+    fn try_recv(&mut self) -> Poll {
+        match self.rx.try_recv() {
+            Ok(d) => Poll::Msg(d),
+            Err(mpsc::TryRecvError::Empty) => Poll::Empty,
+            Err(mpsc::TryRecvError::Disconnected) => Poll::Closed,
+        }
+    }
+
+    fn recv(&mut self) -> Option<Down> {
+        self.rx.recv().ok()
+    }
+
+    fn send(&mut self, up: Up) -> bool {
+        self.tx.send(up).is_ok()
+    }
+}
+
+/// Per-slot knobs for [`worker_body`] — the superset of what the solo
+/// executor, the warm pool, and a remote worker process need.
+#[derive(Clone)]
+pub struct BodyCfg {
+    pub worker: usize,
+    /// Upper bound on the prefetch depth k.
+    pub prefetch_k: usize,
+    /// Solo-run injected failure: report a fatal task failure and die
+    /// after `after_tasks` completions on `on_attempt`.
+    pub failure: Option<FailurePlan>,
+    /// Pool semantics: report task errors ([`Up::TaskFailed`]) and
+    /// keep serving — one tenant's bad job must not take this map
+    /// slot away from the others. Solo semantics (`false`): a task
+    /// error is fatal and the worker exits uncleanly.
+    pub survive_task_errors: bool,
+    /// Shared affinity registry (cache-affinity dispatch), if enabled.
+    /// In-proc only: remote workers cannot reach the leader's
+    /// registry, so their fetches simply go unrecorded.
+    pub affinity: Option<Arc<AffinityIndex>>,
+}
+
+impl BodyCfg {
+    /// Defaults for map slot `worker`: pool semantics, no injected
+    /// failure, no affinity recording.
+    pub fn new(worker: usize) -> BodyCfg {
+        BodyCfg {
+            worker,
+            prefetch_k: 8,
+            failure: None,
+            survive_task_errors: true,
+            affinity: None,
+        }
+    }
+}
+
+/// Queue a task's block keys (under its namespace) for prefetch, in
+/// task order.
+pub(crate) fn enqueue_keys(pf: &mut Prefetcher, spec: &TaskSpec, ns: &str) {
+    pf.enqueue(
+        spec.task
+            .sample_ids
+            .iter()
+            .map(|&id| crate::data::block::block_key(ns, spec.workload, id)),
+    );
+}
+
+/// Fetch, assemble and execute one task under a key namespace;
+/// returns (partial, fetch seconds, exec seconds).
+pub(crate) fn run_task(
+    p: &ModelParams,
+    backend: &Backend,
+    pf: &mut Prefetcher,
+    spec: &TaskSpec,
+    ns: &str,
+) -> Result<(TaskPartial, f64, f64)> {
+    pf.pump()?;
+    let fetch_t = Timer::start();
+    let mut blocks = Vec::with_capacity(spec.task.sample_ids.len());
+    for &id in &spec.task.sample_ids {
+        let key = crate::data::block::block_key(ns, spec.workload, id);
+        let bytes = pf.take(&key)?;
+        blocks.push(Block::decode(&bytes)?);
+    }
+    let fetch_s = fetch_t.secs();
+
+    let exec_t = Timer::start();
+    let slices = MapTask::slices(p, spec.workload, &blocks, spec.seed)?;
+    let partial = execute_slices(backend, p, slices)?;
+    let exec_s = exec_t.secs();
+    pf.observe_exec(exec_s);
+    Ok((partial, fetch_s, exec_s))
+}
+
+/// Abort one job's queued tasks and worker-local cache entries, then
+/// ack. Local-only purge: the job's staged blocks are unchanged
+/// across attempts, so shared-cache entries stay coherent (and keep
+/// the restart warm); shared-structure invalidation happens once, at
+/// tenant retirement.
+fn handle_abort<C: WorkerChannel>(
+    queue: &mut VecDeque<TaskEnvelope>,
+    pf: &mut Prefetcher,
+    chan: &mut C,
+    worker: usize,
+    job: u64,
+    upto_attempt: u32,
+) {
+    let before = queue.len();
+    queue.retain(|t| !(t.job == job && t.attempt <= upto_attempt));
+    let dropped = (before - queue.len()) as u64;
+    pf.purge_prefix_local(&crate::dfs::job_ns(job));
+    let _ = chan.send(Up::Aborted { worker, dropped });
+}
+
+/// The one map-slot loop every transport runs: drain the control
+/// channel into a local queue (so the prefetcher sees upcoming block
+/// keys), execute front-of-queue tasks through the backend, report
+/// [`TaskDone`]s up. Exits on `Shutdown` (clean) or channel death,
+/// always announcing [`Up::Exited`] last. Returns the number of
+/// tasks executed.
+pub fn worker_body<C: WorkerChannel>(
+    cfg: &BodyCfg,
+    params: &ModelParams,
+    backend: &Backend,
+    source: Arc<dyn BlockSource>,
+    chan: &mut C,
+) -> u64 {
+    let mut pf = Prefetcher::new(source, cfg.prefetch_k);
+    if let Some(index) = cfg.affinity.clone() {
+        pf = pf.with_affinity(cfg.worker, index);
+    }
+    let mut queue: VecDeque<TaskEnvelope> = VecDeque::new();
+    let mut executed = 0u64;
+    let mut clean = false;
+    'outer: loop {
+        // Non-blocking drain: pick up everything the leader has queued
+        // (feeding the prefetcher lookahead, across jobs in serve mode).
+        loop {
+            match chan.try_recv() {
+                Poll::Msg(Down::Task(t)) => {
+                    enqueue_keys(&mut pf, &t.spec, &t.ns);
+                    queue.push_back(*t);
+                }
+                Poll::Msg(Down::Abort { job, upto_attempt }) => {
+                    handle_abort(
+                        &mut queue,
+                        &mut pf,
+                        chan,
+                        cfg.worker,
+                        job,
+                        upto_attempt,
+                    );
+                }
+                Poll::Msg(Down::Shutdown) => {
+                    clean = true;
+                    break 'outer;
+                }
+                Poll::Empty => break,
+                Poll::Closed => {
+                    if queue.is_empty() {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        // Idle: block for the next instruction, measuring queue wait.
+        let mut queue_wait_s = 0.0;
+        if queue.is_empty() {
+            let wait_t = Timer::start();
+            match chan.recv() {
+                Some(Down::Task(t)) => {
+                    queue_wait_s = wait_t.secs();
+                    enqueue_keys(&mut pf, &t.spec, &t.ns);
+                    queue.push_back(*t);
+                }
+                Some(Down::Abort { job, upto_attempt }) => {
+                    handle_abort(
+                        &mut queue,
+                        &mut pf,
+                        chan,
+                        cfg.worker,
+                        job,
+                        upto_attempt,
+                    );
+                    continue;
+                }
+                Some(Down::Shutdown) => {
+                    clean = true;
+                    break;
+                }
+                None => break,
+            }
+        }
+        let Some(task) = queue.pop_front() else { continue };
+        if task.poison {
+            let sent = chan.send(Up::TaskFailed {
+                job: task.job,
+                attempt: task.attempt,
+                worker: cfg.worker,
+                error: Error::Scheduler(format!(
+                    "injected task fault in job {} (attempt {}, task {})",
+                    task.job, task.attempt, task.spec.task.seq
+                )),
+            });
+            if !sent || !cfg.survive_task_errors {
+                break;
+            }
+            continue;
+        }
+        let (h0, m0) = (pf.hits, pf.misses);
+        let (ch0, cm0) = (pf.cache_hits, pf.cache_misses);
+        match run_task(params, backend, &mut pf, &task.spec, &task.ns) {
+            Ok((partial, fetch_s, exec_s)) => {
+                executed += 1;
+                let done = TaskDone {
+                    worker: cfg.worker,
+                    seq: task.spec.task.seq,
+                    partial,
+                    fetch_s,
+                    exec_s,
+                    queue_wait_s,
+                    prefetch_hits: pf.hits - h0,
+                    prefetch_misses: pf.misses - m0,
+                    cache_hits: pf.cache_hits - ch0,
+                    cache_misses: pf.cache_misses - cm0,
+                };
+                let sent = chan.send(Up::Done {
+                    job: task.job,
+                    attempt: task.attempt,
+                    done: Box::new(done),
+                });
+                if !sent {
+                    break;
+                }
+                if let Some(plan) = cfg.failure {
+                    if plan.worker == cfg.worker
+                        && task.attempt == plan.on_attempt
+                        && executed >= plan.after_tasks
+                    {
+                        let _ = chan.send(Up::TaskFailed {
+                            job: task.job,
+                            attempt: task.attempt,
+                            worker: cfg.worker,
+                            error: Error::Scheduler(format!(
+                                "injected node failure on worker {} after {executed} tasks",
+                                cfg.worker
+                            )),
+                        });
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                let sent = chan.send(Up::TaskFailed {
+                    job: task.job,
+                    attempt: task.attempt,
+                    worker: cfg.worker,
+                    error: e,
+                });
+                if !sent || !cfg.survive_task_errors {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = chan.send(Up::Exited {
+        worker: cfg.worker,
+        executed,
+        clean,
+    });
+    executed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Workload;
+    use crate::dfs::{Dfs, LatencyModel};
+    use crate::kneepoint::{pack, TaskSizing};
+
+    fn staged_job(
+        samples: usize,
+    ) -> (Arc<Dfs>, Vec<TaskSpec>, Arc<Backend>, ModelParams) {
+        let params = ModelParams::default();
+        let backend = Arc::new(Backend::native(params.clone()));
+        let ds =
+            crate::workloads::build_small(Workload::Eaglet, &params, samples);
+        let dfs = Dfs::new(2, 1, LatencyModel::none());
+        crate::exec::cluster::stage_dataset(ds.as_ref(), &dfs, "");
+        let specs: Vec<TaskSpec> = pack(ds.metas(), TaskSizing::Tiniest)
+            .into_iter()
+            .map(|t| TaskSpec::new(t, Workload::Eaglet, 7))
+            .collect();
+        (dfs, specs, backend, params)
+    }
+
+    fn envelope(spec: TaskSpec, poison: bool) -> Down {
+        Down::Task(Box::new(TaskEnvelope {
+            job: 0,
+            attempt: 1,
+            ns: "".into(),
+            spec,
+            poison,
+        }))
+    }
+
+    /// Run a body on its own thread, feed it `downs`, collect `want`
+    /// task outcomes (Done/TaskFailed), then shut it down. Mirrors a
+    /// real leader: Shutdown only goes out once the work is answered
+    /// (a Shutdown seen during the drain skips queued tasks — the
+    /// abort contract).
+    fn drive(
+        cfg: BodyCfg,
+        params: ModelParams,
+        backend: Arc<Backend>,
+        dfs: Arc<Dfs>,
+        downs: Vec<Down>,
+        want: usize,
+    ) -> (u64, Vec<Up>) {
+        let (down_tx, down_rx) = mpsc::channel();
+        let (up_tx, up_rx) = mpsc::channel();
+        let body = std::thread::spawn(move || {
+            let mut chan = InProcChannel { rx: down_rx, tx: up_tx };
+            worker_body(&cfg, &params, &backend, dfs, &mut chan)
+        });
+        for d in downs {
+            down_tx.send(d).unwrap();
+        }
+        let mut ups = Vec::new();
+        let mut outcomes = 0;
+        while outcomes < want {
+            let up = up_rx.recv().expect("body hung up early");
+            if matches!(up, Up::Done { .. } | Up::TaskFailed { .. }) {
+                outcomes += 1;
+            }
+            ups.push(up);
+        }
+        down_tx.send(Down::Shutdown).unwrap();
+        let executed = body.join().unwrap();
+        while let Ok(up) = up_rx.try_recv() {
+            ups.push(up);
+        }
+        (executed, ups)
+    }
+
+    #[test]
+    fn body_executes_then_exits_clean_on_shutdown() {
+        let (dfs, specs, backend, params) = staged_job(4);
+        let n = specs.len();
+        let downs: Vec<Down> =
+            specs.into_iter().map(|s| envelope(s, false)).collect();
+        let (executed, ups) =
+            drive(BodyCfg::new(0), params, backend, dfs, downs, n);
+        assert_eq!(executed, n as u64);
+        let dones = ups
+            .iter()
+            .filter(|u| matches!(u, Up::Done { job: 0, attempt: 1, .. }))
+            .count();
+        assert_eq!(dones, n);
+        assert!(ups.iter().any(|u| matches!(
+            u,
+            Up::Exited { executed: e, clean: true, .. } if *e == n as u64
+        )));
+    }
+
+    #[test]
+    fn poison_reports_failure_and_pool_worker_survives() {
+        let (dfs, specs, backend, params) = staged_job(3);
+        let n = specs.len();
+        let downs: Vec<Down> = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| envelope(s, i == 0))
+            .collect();
+        let (executed, ups) =
+            drive(BodyCfg::new(3), params, backend, dfs, downs, n);
+        assert_eq!(executed, 2, "poison must not kill a pool worker");
+        let failed = ups
+            .iter()
+            .filter(|u| matches!(u, Up::TaskFailed { worker: 3, .. }))
+            .count();
+        assert_eq!(failed, 1);
+    }
+
+    #[test]
+    fn abort_drops_queued_tasks_and_acks() {
+        let (dfs, specs, backend, params) = staged_job(3);
+        let n = specs.len() as u64;
+        let (down_tx, down_rx) = mpsc::channel();
+        let (up_tx, up_rx) = mpsc::channel();
+        for s in specs {
+            down_tx
+                .send(Down::Task(Box::new(TaskEnvelope {
+                    job: 9,
+                    attempt: 1,
+                    ns: crate::dfs::job_ns(9).into(),
+                    spec: s,
+                    poison: false,
+                })))
+                .unwrap();
+        }
+        down_tx.send(Down::Abort { job: 9, upto_attempt: 1 }).unwrap();
+        down_tx.send(Down::Shutdown).unwrap();
+        let mut chan = InProcChannel { rx: down_rx, tx: up_tx };
+        worker_body(&BodyCfg::new(0), &params, &backend, dfs, &mut chan);
+        // Everything the drain saw before the abort was dropped; the
+        // ack accounts for all of it (the drain enqueues all three
+        // tasks before the first execution begins, minus at most the
+        // one already popped).
+        let mut dropped = None;
+        while let Ok(up) = up_rx.try_recv() {
+            if let Up::Aborted { dropped: d, .. } = up {
+                dropped = Some(d);
+            }
+        }
+        let d = dropped.expect("abort must be acked");
+        assert!(d >= n - 1, "dropped {d} of {n}");
+    }
+}

@@ -1,0 +1,365 @@
+//! The remote worker session: what `bts worker --connect` runs.
+//!
+//! One TCP connection carries both planes. A **reader thread** splits
+//! incoming frames: control messages ([`Down`]) feed the same channel
+//! type the in-proc workers drain, and DFS answers feed the
+//! [`RemoteDfs`] response queue. Sends (task results up, block
+//! fetches out) share one framed writer behind a mutex. The worker
+//! body itself is [`super::worker_body`] — the identical loop the
+//! in-proc slots run, which is the whole point: a remote worker gets
+//! the two-step scheduler's batches, prefetching (the [`Prefetcher`]
+//! pumps ahead through [`RemoteDfs`] exactly as it does through a
+//! local [`crate::dfs::Dfs`]), per-task metrics, and job-level
+//! recovery without any TCP-specific logic.
+//!
+//! [`RemoteDfs`] fronts the leader-proxied fetch path with an
+//! optional worker-local [`BlockCache`]: re-fetched blocks (steals,
+//! multi-task samples, warm tenants in serve mode) are served from
+//! worker memory without touching the wire. Key-mapping coherence
+//! rides on the platform's key discipline — a job's namespaced keys
+//! are staged once and never rebound to different bytes within a
+//! leader session — and aborts purge the job's prefix locally.
+//!
+//! [`Prefetcher`]: crate::dfs::Prefetcher
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::{BodyCfg, Down, Poll, Up, WorkerChannel};
+use crate::cache::BlockCache;
+use crate::dfs::{BlockSource, CacheLookup};
+use crate::error::{Error, Result};
+use crate::exec::Backend;
+use crate::net::protocol::{
+    configure_stream, Message, DFS_FETCH_TIMEOUT, HANDSHAKE_TIMEOUT,
+    PING_INTERVAL,
+};
+use crate::runtime::Exec as _;
+
+/// Knobs for one remote worker session.
+#[derive(Debug, Clone)]
+pub struct RemoteWorkerOpts {
+    /// Upper bound on the prefetch depth k.
+    pub prefetch_k: usize,
+    /// Worker-local block cache budget in MiB (0 disables): re-used
+    /// blocks skip the wire entirely.
+    pub cache_mb: usize,
+    /// Keep retrying the initial connect for this long (the leader
+    /// may not have bound its listener yet).
+    pub connect_window: Duration,
+    /// Fault injection for disconnect tests: after this many task
+    /// completions the link is severed without an orderly goodbye,
+    /// simulating a crashed or partitioned worker.
+    pub drop_link_after: Option<u64>,
+}
+
+impl Default for RemoteWorkerOpts {
+    fn default() -> Self {
+        RemoteWorkerOpts {
+            prefetch_k: 8,
+            cache_mb: 0,
+            connect_window: Duration::from_secs(20),
+            drop_link_after: None,
+        }
+    }
+}
+
+/// A DFS answer routed off the socket by the reader thread.
+enum DfsReply {
+    Block { key: String, data: Arc<Vec<u8>> },
+    Miss { key: String, message: String },
+}
+
+/// Leader-proxied block fetches: `DfsGet` out, `DfsBlock`/`DfsMiss`
+/// back, with an optional local cache in front. The worker body is
+/// single-threaded, so at most one fetch is outstanding; stale
+/// replies (from an earlier timed-out request) are skipped by key.
+pub struct RemoteDfs {
+    wr: Arc<Mutex<BufWriter<TcpStream>>>,
+    resp: Mutex<mpsc::Receiver<DfsReply>>,
+    cache: Option<BlockCache>,
+}
+
+impl RemoteDfs {
+    fn new(
+        wr: Arc<Mutex<BufWriter<TcpStream>>>,
+        resp: mpsc::Receiver<DfsReply>,
+        cache_mb: usize,
+    ) -> RemoteDfs {
+        RemoteDfs {
+            wr,
+            resp: Mutex::new(resp),
+            cache: (cache_mb > 0).then(|| BlockCache::new(cache_mb << 20, 4)),
+        }
+    }
+
+    /// Publish a block into the leader's replicated store.
+    pub fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        let mut g = self
+            .wr
+            .lock()
+            .map_err(|_| Error::Dfs("writer poisoned".into()))?;
+        Message::DfsPut { key: key.to_string(), data: data.to_vec() }
+            .write_to(&mut *g)
+    }
+}
+
+impl BlockSource for RemoteDfs {
+    fn get_traced(
+        &self,
+        key: &str,
+    ) -> Result<(Arc<Vec<u8>>, f64, CacheLookup)> {
+        let t = Instant::now();
+        let epoch = if let Some(c) = &self.cache {
+            if let Some(data) = c.get(key) {
+                return Ok((
+                    data,
+                    t.elapsed().as_secs_f64(),
+                    CacheLookup::Hit,
+                ));
+            }
+            Some(c.key_epoch(key))
+        } else {
+            None
+        };
+        {
+            let mut g = self
+                .wr
+                .lock()
+                .map_err(|_| Error::Dfs("writer poisoned".into()))?;
+            Message::DfsGet { key: key.to_string() }.write_to(&mut *g)?;
+        }
+        let rx = self
+            .resp
+            .lock()
+            .map_err(|_| Error::Dfs("response channel poisoned".into()))?;
+        let deadline = Instant::now() + DFS_FETCH_TIMEOUT;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::Dfs(format!(
+                    "remote fetch of {key} timed out after {DFS_FETCH_TIMEOUT:?}"
+                )));
+            }
+            match rx.recv_timeout(left) {
+                Ok(DfsReply::Block { key: k, data }) if k == key => {
+                    let lookup = match (&self.cache, epoch) {
+                        (Some(c), Some(e)) => {
+                            c.fill(key, &data, e);
+                            CacheLookup::Miss
+                        }
+                        _ => CacheLookup::Unattached,
+                    };
+                    return Ok((data, t.elapsed().as_secs_f64(), lookup));
+                }
+                Ok(DfsReply::Miss { key: k, message }) if k == key => {
+                    return Err(Error::Dfs(message));
+                }
+                Ok(_) => continue, // stale answer to a timed-out fetch
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Dfs(format!(
+                        "link died while fetching {key}"
+                    )))
+                }
+            }
+        }
+    }
+
+    fn cache_purge_prefix(&self, prefix: &str) {
+        if let Some(c) = &self.cache {
+            c.purge_prefix(prefix);
+        }
+    }
+}
+
+/// The worker's end of a TCP link. Receives are fed by the reader
+/// thread; sends are framed writes through the shared writer.
+struct TcpWorkerChannel {
+    rx: mpsc::Receiver<Down>,
+    wr: Arc<Mutex<BufWriter<TcpStream>>>,
+    /// Raw handle for the disconnect fault injection.
+    stream: TcpStream,
+    dones_sent: u64,
+    drop_link_after: Option<u64>,
+}
+
+impl WorkerChannel for TcpWorkerChannel {
+    fn try_recv(&mut self) -> Poll {
+        match self.rx.try_recv() {
+            Ok(d) => Poll::Msg(d),
+            Err(mpsc::TryRecvError::Empty) => Poll::Empty,
+            Err(mpsc::TryRecvError::Disconnected) => Poll::Closed,
+        }
+    }
+
+    fn recv(&mut self) -> Option<Down> {
+        self.rx.recv().ok()
+    }
+
+    fn send(&mut self, up: Up) -> bool {
+        if let Up::Done { .. } = &up {
+            if let Some(cap) = self.drop_link_after {
+                if self.dones_sent >= cap {
+                    // Injected crash: sever the link instead of
+                    // reporting the result.
+                    let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                    return false;
+                }
+            }
+            self.dones_sent += 1;
+        }
+        let Ok(mut g) = self.wr.lock() else { return false };
+        Message::Up(up).write_to(&mut *g).is_ok()
+    }
+}
+
+fn connect_retry(addr: &str, window: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + window;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(Error::Io(e));
+                }
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Connect to a leader at `addr`, handshake, and serve one session of
+/// the shared worker body over the link. Returns the number of tasks
+/// executed (the session ends when the leader sends `Shutdown` or the
+/// link dies).
+pub fn run_remote_worker(
+    addr: &str,
+    backend: Arc<Backend>,
+    opts: &RemoteWorkerOpts,
+) -> Result<u64> {
+    let stream = connect_retry(addr, opts.connect_window)?;
+    configure_stream(&stream)?;
+    let mut rd = BufReader::new(stream.try_clone()?);
+    let wr = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
+    {
+        let mut g = wr.lock().unwrap();
+        Message::Hello { worker: 0 }.write_to(&mut *g)?;
+    }
+    let worker = match Message::read_deadline(
+        &mut rd,
+        Some(HANDSHAKE_TIMEOUT),
+    )? {
+        Message::Welcome { worker } => worker as usize,
+        Message::Error { message } => return Err(Error::Protocol(message)),
+        other => {
+            return Err(Error::Protocol(format!(
+                "expected Welcome, got {other:?}"
+            )))
+        }
+    };
+    let (down_tx, down_rx) = mpsc::channel::<Down>();
+    let (resp_tx, resp_rx) = mpsc::channel::<DfsReply>();
+    // Pinger: heartbeat on a dedicated timer thread, so the leader's
+    // idle clock keeps running even while the body is deep in a long
+    // task. Exits when the link dies (write failure). Detached — its
+    // next tick notices the closed socket after the session ends.
+    {
+        let ping_wr = wr.clone();
+        thread::Builder::new()
+            .name(format!("bts-remote-ping-{worker}"))
+            .spawn(move || loop {
+                thread::sleep(PING_INTERVAL);
+                let Ok(mut g) = ping_wr.lock() else { return };
+                if Message::Ping.write_to(&mut *g).is_err() {
+                    return;
+                }
+            })
+            .map_err(|e| {
+                Error::Scheduler(format!("spawn remote pinger: {e}"))
+            })?;
+    }
+    // Reader: split the socket into control and data-plane channels.
+    // Exits on link death or protocol garbage; dropping `down_tx`
+    // wakes the body out of its blocking recv. Detached on purpose —
+    // it unblocks only when the leader closes its end, which may be
+    // after the body has already returned on an error path.
+    thread::Builder::new()
+        .name(format!("bts-remote-reader-{worker}"))
+        .spawn(move || loop {
+            match Message::read_from(&mut rd) {
+                Ok(Message::Down(d)) => {
+                    if down_tx.send(d).is_err() {
+                        return;
+                    }
+                }
+                Ok(Message::DfsBlock { key, data }) => {
+                    if resp_tx.send(DfsReply::Block { key, data }).is_err() {
+                        return;
+                    }
+                }
+                Ok(Message::DfsMiss { key, message }) => {
+                    if resp_tx.send(DfsReply::Miss { key, message }).is_err()
+                    {
+                        return;
+                    }
+                }
+                Ok(Message::Ping) => {} // tolerated, though leaders don't ping
+                Ok(_) | Err(_) => return,
+            }
+        })
+        .map_err(|e| {
+            Error::Scheduler(format!("spawn remote reader: {e}"))
+        })?;
+    let source: Arc<dyn BlockSource> =
+        Arc::new(RemoteDfs::new(wr.clone(), resp_rx, opts.cache_mb));
+    let mut chan = TcpWorkerChannel {
+        rx: down_rx,
+        wr,
+        stream,
+        dones_sent: 0,
+        drop_link_after: opts.drop_link_after,
+    };
+    let cfg = BodyCfg {
+        worker,
+        prefetch_k: opts.prefetch_k,
+        failure: None,
+        survive_task_errors: true,
+        affinity: None,
+    };
+    let params = backend.manifest().params.clone();
+    Ok(super::worker_body(&cfg, &params, &backend, source, &mut chan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_opts_are_sane() {
+        let o = RemoteWorkerOpts::default();
+        assert!(o.prefetch_k >= 1);
+        assert_eq!(o.cache_mb, 0);
+        assert!(o.drop_link_after.is_none());
+        assert!(o.connect_window > Duration::ZERO);
+    }
+
+    #[test]
+    fn connect_retry_times_out_on_dead_addr() {
+        // Port 1 on loopback: nothing listens there in CI.
+        let err = connect_retry(
+            "127.0.0.1:1",
+            Duration::from_millis(50),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Io(_)), "{err}");
+    }
+
+    // Full-session behavior (handshake, task execution, DFS-proxied
+    // fetches, disconnect recovery) is covered end to end in
+    // rust/tests/integration_transport.rs.
+}

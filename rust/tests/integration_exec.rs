@@ -234,73 +234,6 @@ fn persistent_failure_exhausts_attempts() {
 }
 
 #[test]
-fn tcp_worker_loop_serves_native_backend() {
-    // Drive net::serve_connection — the backend-generic TCP worker
-    // loop — with the native backend, against a minimal hand-rolled
-    // leader: Hello → Task (blocks inline) → Partial → Done. Keeps
-    // the wire path covered on artifact-free hosts.
-    use bts::net::Message;
-    use std::io::{BufReader, BufWriter};
-    use std::net::TcpListener;
-
-    let backend = native();
-    let p = params();
-    let ds = build_small(Workload::Eaglet, &p, 6);
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
-
-    let (served, partials) = std::thread::scope(|sc| {
-        let worker = sc.spawn({
-            let backend = backend.clone();
-            let addr = addr.clone();
-            move || {
-                bts::net::serve_connection(&addr, 7, backend.as_ref())
-                    .unwrap()
-            }
-        });
-        // Leader side: accept, handshake, push every sample as a task.
-        let (stream, _) = listener.accept().unwrap();
-        let mut rd = BufReader::new(stream.try_clone().unwrap());
-        let mut wr = BufWriter::new(stream);
-        let Message::Hello { worker: id } =
-            Message::read_from(&mut rd).unwrap()
-        else {
-            panic!("expected Hello")
-        };
-        assert_eq!(id, 7);
-        let mut partials = Vec::new();
-        for (seq, meta) in ds.metas().iter().enumerate() {
-            Message::Task {
-                seq: seq as u32,
-                workload: Workload::Eaglet,
-                seed: 0xB75 ^ seq as u64,
-                blocks: vec![ds.encode_block(meta.id)],
-            }
-            .write_to(&mut wr)
-            .unwrap();
-            match Message::read_from(&mut rd).unwrap() {
-                Message::Partial { seq: got, weight, values, netflix } => {
-                    assert_eq!(got as usize, seq);
-                    assert!(!netflix);
-                    assert_eq!(values.len(), p.grid);
-                    assert!(weight > 0.0);
-                    partials.push((weight, values));
-                }
-                other => panic!("expected Partial, got {other:?}"),
-            }
-        }
-        Message::Done.write_to(&mut wr).unwrap();
-        (worker.join().unwrap(), partials)
-    });
-    assert_eq!(served, ds.metas().len() as u64);
-    assert_eq!(partials.len(), ds.metas().len());
-    // every partial's weight is that sample's chunk count
-    for ((w, _), meta) in partials.iter().zip(ds.metas()) {
-        assert!((w - meta.units as f32).abs() < 1e-3);
-    }
-}
-
-#[test]
 fn large_sn_and_fixed_sizing_also_run() {
     // Multi-slice tasks (a BLT-style partition spans several compiled
     // buckets) flow through the same channel path.

@@ -1,0 +1,336 @@
+//! Transport equivalence: the same job over in-proc channels and over
+//! loopback TCP must produce bit-identical [`JobOutput`]s — the
+//! determinism-across-transports contract (DESIGN.md §11). Native
+//! kernel backend on both ends, so these run on every host.
+//!
+//! Covers both workload families, cache-on runs (leader-side shared
+//! cache + worker-local cache), a mixed local+remote worker set,
+//! worker-disconnect recovery on the solo executor, and the serve
+//! pool with a remote map slot (including a mid-job disconnect that
+//! tenant-scoped recovery absorbs).
+
+use std::sync::Arc;
+use std::thread;
+
+use bts::data::{ModelParams, Workload};
+use bts::exec::{
+    run_cluster, run_cluster_with_recovery, Backend, ExecConfig,
+};
+use bts::kneepoint::TaskSizing;
+use bts::net::run_worker;
+use bts::serve::{
+    JobRequest, JobService, PoolConfig, ServeConfig,
+};
+use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
+use bts::workloads::build_small;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+fn params() -> ModelParams {
+    ModelParams::default()
+}
+
+const SIZING: TaskSizing = TaskSizing::Kneepoint(16 * 1024);
+const SEED: u64 = 0xB75;
+
+/// Spawn `n` remote worker sessions against `addr` on their own
+/// threads; each runs the full `bts worker` path (connect with retry,
+/// handshake, shared worker body over the DFS-proxied data plane).
+fn spawn_workers(
+    addr: String,
+    n: usize,
+    opts: RemoteWorkerOpts,
+) -> Vec<thread::JoinHandle<u64>> {
+    (0..n)
+        .map(|_| {
+            let addr = addr.clone();
+            let opts = opts.clone();
+            let backend = native();
+            thread::spawn(move || {
+                run_worker(&addr, backend, &opts).expect("worker session")
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_runs_match_inproc_bit_for_bit_on_both_workloads() {
+    for workload in [Workload::Eaglet, Workload::NetflixLo] {
+        let backend = native();
+        let ds = build_small(workload, &params(), 36);
+        let base = ExecConfig {
+            sizing: SIZING,
+            seed: SEED,
+            ..Default::default()
+        };
+
+        // In-proc reference: 3 local slots.
+        let reference = run_cluster(
+            ds.as_ref(),
+            backend.clone(),
+            &ExecConfig { workers: 3, ..base.clone() },
+        )
+        .unwrap();
+
+        // Mixed set: 1 local thread + 2 remote TCP workers.
+        let remote = RemoteWorkers::bind("127.0.0.1:0", 2).unwrap();
+        let addr = remote.addr();
+        let workers =
+            spawn_workers(addr, 2, RemoteWorkerOpts::default());
+        let tcp = run_cluster(
+            ds.as_ref(),
+            backend,
+            &ExecConfig { workers: 1, remote: Some(remote), ..base },
+        )
+        .unwrap();
+        let executed_remote: u64 =
+            workers.into_iter().map(|h| h.join().unwrap()).sum();
+
+        assert_eq!(
+            tcp.output, reference.output,
+            "{workload:?}: TCP output differs from in-proc"
+        );
+        assert_eq!(tcp.report.tasks, reference.report.tasks);
+        assert_eq!(tcp.workers.len(), 3, "1 local + 2 remote slots");
+        assert!(
+            tcp.workers.iter().all(|w| w.clean_shutdown),
+            "every slot (remote included) exits via orderly Shutdown: {:?}",
+            tcp.workers
+        );
+        let executed_total: u64 =
+            tcp.workers.iter().map(|w| w.executed).sum();
+        assert_eq!(executed_total, tcp.report.tasks as u64);
+        assert!(
+            executed_remote > 0,
+            "{workload:?}: remote workers never executed anything"
+        );
+        // Remote fetches went through the leader's replicated store.
+        assert!(tcp.dfs_bytes_served > 0);
+    }
+}
+
+#[test]
+fn caches_on_both_ends_leave_the_statistic_bit_identical() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 24);
+    let base = ExecConfig {
+        sizing: SIZING,
+        seed: SEED,
+        ..Default::default()
+    };
+    let plain = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig { workers: 2, ..base.clone() },
+    )
+    .unwrap();
+
+    // Leader-side shared cache + a worker-local cache in the remote.
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+    let addr = remote.addr();
+    let workers = spawn_workers(
+        addr,
+        1,
+        RemoteWorkerOpts { cache_mb: 8, ..Default::default() },
+    );
+    let cached = run_cluster(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            workers: 1,
+            remote: Some(remote),
+            cache_mb: 16,
+            ..base
+        },
+    )
+    .unwrap();
+    for h in workers {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        cached.output, plain.output,
+        "caching (either end) must never change the statistic"
+    );
+    assert!(cached.cache.is_some(), "leader cache was attached");
+}
+
+#[test]
+fn dropped_tcp_worker_recovers_deterministically() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 24);
+    let reference = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+    let addr = remote.addr();
+    // Worker supplier: session 1 drops the link after one completion
+    // (a crashed worker, no goodbye); session 2 reconnects clean for
+    // the recovery attempt. The dropping worker is the *only* map
+    // slot, so attempt 1 cannot complete without it — the failure is
+    // deterministic, not a race against faster neighbours.
+    let supplier = thread::spawn({
+        let addr = addr.clone();
+        move || {
+            let _ = run_worker(
+                &addr,
+                native(),
+                &RemoteWorkerOpts {
+                    drop_link_after: Some(1),
+                    ..Default::default()
+                },
+            );
+            run_worker(&addr, native(), &RemoteWorkerOpts::default())
+                .expect("replacement worker session")
+        }
+    });
+    let recovered = run_cluster_with_recovery(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 0,
+            remote: Some(remote),
+            ..Default::default()
+        },
+        3,
+    )
+    .unwrap();
+    supplier.join().unwrap();
+    assert_eq!(
+        recovered.report.restarts, 1,
+        "the dropped link must fail exactly one attempt"
+    );
+    assert_eq!(
+        recovered.output, reference.output,
+        "recovery after a dropped TCP worker must reproduce the statistic"
+    );
+}
+
+/// The serve-layer halves: a remote pool slot multiplexing tenants,
+/// and tenant-scoped recovery absorbing a mid-job disconnect.
+#[test]
+fn serve_pool_with_remote_slot_matches_solo_run() {
+    let backend = native();
+    // Solo oracle for the same (workload, samples, sizing, seed).
+    let ds = build_small(Workload::Eaglet, &params(), 20);
+    let solo = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig {
+            sizing: SIZING,
+            seed: SEED,
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+    let addr = remote.addr();
+    let workers = spawn_workers(addr, 1, RemoteWorkerOpts::default());
+    let svc = JobService::start(
+        backend,
+        ServeConfig {
+            pool: PoolConfig {
+                workers: 1,
+                remote: Some(remote),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let req = JobRequest::new(Workload::Eaglet, 20)
+        .with_seed(SEED)
+        .with_sizing(SIZING);
+    let r1 = svc.submit(req.clone()).unwrap().wait().unwrap();
+    let r2 = svc.submit(req).unwrap().wait().unwrap();
+    let report = svc.shutdown().unwrap();
+    for h in workers {
+        h.join().unwrap();
+    }
+    assert_eq!(r1.output, solo.output, "served ≠ solo");
+    assert_eq!(r2.output, solo.output, "second tenant ≠ solo");
+    assert_eq!(report.jobs_completed, 2);
+    assert_eq!(report.workers, 2, "1 local + 1 remote slot");
+    assert_eq!(report.workers_spawned, 2, "warm pool, no respawns");
+}
+
+#[test]
+fn serve_survives_remote_slot_disconnect_with_tenant_recovery() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 20);
+    let solo = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+    let addr = remote.addr();
+    // This slot crashes after one completed task and never comes
+    // back; the pool has no respawn path, so the session finishes on
+    // the local slot alone. The sleeping latency model paces the
+    // local slot (~1ms per fetch), so the remote slot reliably holds
+    // dispatched work when it vanishes.
+    let workers = spawn_workers(
+        addr,
+        1,
+        RemoteWorkerOpts { drop_link_after: Some(1), ..Default::default() },
+    );
+    let svc = JobService::start(
+        backend,
+        ServeConfig {
+            pool: PoolConfig {
+                workers: 1,
+                remote: Some(remote),
+                latency: bts::dfs::LatencyModel {
+                    base_s: 1e-3,
+                    per_mib_s: 0.0,
+                    per_inflight_s: 0.0,
+                    sleep: true,
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let req = JobRequest::new(Workload::Eaglet, 20)
+        .with_seed(SEED)
+        .with_sizing(TaskSizing::Tiniest);
+    let r = svc.submit(req).unwrap().wait().unwrap();
+    let report = svc.shutdown().unwrap();
+    for h in workers {
+        let _ = h.join();
+    }
+    assert_eq!(
+        r.output, solo.output,
+        "tenant-scoped recovery after a lost slot must reproduce the \
+         statistic"
+    );
+    assert!(
+        r.report.restarts >= 1,
+        "the lost slot must have forced at least one restart"
+    );
+    assert_eq!(report.jobs_completed, 1);
+    assert_eq!(report.jobs_failed, 0, "the tenant must not be failed");
+}
