@@ -10,11 +10,13 @@
 //! end-to-end latency percentiles from its own ServeReport.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use bts::exec::{run_cluster, Backend, ExecConfig};
 use bts::runtime::Exec as _;
 use bts::serve::{mixed_request, run_load, LoadConfig};
 use bts::util::bench::Bench;
+use bts::util::testutil::SERVE_JOB_DEADLINE;
 
 fn main() {
     let jobs = 12;
@@ -40,7 +42,15 @@ fn main() {
     let be = backend.clone();
     let lc = load.clone();
     b.measure(&format!("serve_warm_pool_{jobs}_jobs"), || {
+        // Bounded by the shared serve-layer deadline (the same
+        // constant the integration suite waits under): a wedged
+        // dispatcher fails the bench loudly instead of hanging CI.
+        let t = Instant::now();
         let out = run_load(be.clone(), &lc).expect("serve load");
+        assert!(
+            t.elapsed() < SERVE_JOB_DEADLINE,
+            "serve session exceeded the shared deadline"
+        );
         assert_eq!(out.report.jobs_completed, jobs);
         assert_eq!(out.report.worker_respawns(), 0);
     });

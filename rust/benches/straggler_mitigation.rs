@@ -1,0 +1,152 @@
+//! Straggler mitigation: response-time-aware dynamic scheduling plus
+//! speculative re-execution versus the plain two-step scheduler, under
+//! a deterministically injected slow worker.
+//!
+//!     cargo bench --bench straggler_mitigation
+//!
+//! One map slot runs ~10x slower than its peers via
+//! [`bts::util::testutil::Turbulence`] — slowness imposed *outside*
+//! the worker's own timers, the way node contention really presents.
+//! Two-step alone keeps the slot's dispatch window full and the job's
+//! tail stretches to everything stranded there (the eclipse effect the
+//! thesis warns tiny tasks about). Dynamic mode shrinks the slot's
+//! window from the leader-observed response times and clones its
+//! overdue tasks to idle fast slots; the first bit-identical result
+//! wins. The headline comparison — p99 task turnaround and job wall
+//! time, twostep vs dynamic+speculate — lands in
+//! `results/BENCH_straggler.json`, and the run asserts the ≥2x tail
+//! improvement the scheduler exists to deliver.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bts::data::{ModelParams, Workload};
+use bts::exec::{run_cluster, Backend, ExecConfig, ExecResult};
+use bts::kneepoint::TaskSizing;
+use bts::scheduler::SchedConfig;
+use bts::util::bench::Bench;
+use bts::util::json::{num, obj, s, Json};
+use bts::util::testutil::Turbulence;
+use bts::workloads::build_small;
+
+const WORKERS: usize = 4;
+const SLOW_WORKER: usize = 3;
+const SLOW_DELAY: Duration = Duration::from_millis(40);
+const SAMPLES: usize = 240;
+const SEED: u64 = 0xB75;
+const ITERS: usize = 3;
+
+fn run(backend: &Arc<Backend>, speculate: bool) -> ExecResult {
+    let params = ModelParams::default();
+    let ds = build_small(Workload::Eaglet, &params, SAMPLES);
+    let cfg = ExecConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: WORKERS,
+        seed: SEED,
+        sched: SchedConfig {
+            dynamic: speculate,
+            speculate,
+            straggler_pct: 95.0,
+            ..Default::default()
+        },
+        turbulence: Some(Arc::new(
+            Turbulence::new(SEED).slow_from(SLOW_WORKER, 0, SLOW_DELAY),
+        )),
+        ..Default::default()
+    };
+    run_cluster(ds.as_ref(), backend.clone(), &cfg).expect("cluster run")
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn record(mode: &str, r: &ExecResult) -> Json {
+    obj(vec![
+        ("mode", s(mode)),
+        ("tasks", num(r.report.tasks as f64)),
+        ("map_s", num(r.report.map_s)),
+        ("total_s", num(r.report.total_s)),
+        ("turnaround_p50_s", num(r.report.task_turnaround.p50)),
+        ("turnaround_p99_s", num(r.report.task_turnaround.p99)),
+        ("speculated", num(r.sched.speculated as f64)),
+        ("won_by_clone", num(r.sched.won_by_clone as f64)),
+    ])
+}
+
+fn main() {
+    let backend = Arc::new(Backend::native(ModelParams::default()));
+    let mut b = Bench::new("straggler_mitigation");
+
+    let mut records = Vec::new();
+    let mut base_p99 = Vec::new();
+    let mut base_wall = Vec::new();
+    let mut dyn_p99 = Vec::new();
+    let mut dyn_wall = Vec::new();
+    let mut outputs = Vec::new();
+
+    for i in 0..ITERS {
+        let base = run(&backend, false);
+        let dynm = run(&backend, true);
+        assert_eq!(
+            base.output, dynm.output,
+            "speculation changed the statistic"
+        );
+        base_p99.push(base.report.task_turnaround.p99);
+        base_wall.push(base.report.map_s);
+        dyn_p99.push(dynm.report.task_turnaround.p99);
+        dyn_wall.push(dynm.report.map_s);
+        assert!(
+            dynm.sched.speculated >= 1,
+            "the injected straggler was never speculated"
+        );
+        if i == 0 {
+            records.push(record("twostep", &base));
+            records.push(record("dynamic_speculate", &dynm));
+        }
+        outputs.push(dynm.output);
+    }
+    assert!(
+        outputs.windows(2).all(|w| w[0] == w[1]),
+        "speculative runs must be deterministic across repeats"
+    );
+
+    let base_p99 = median(base_p99);
+    let dyn_p99 = median(dyn_p99);
+    let base_wall = median(base_wall);
+    let dyn_wall = median(dyn_wall);
+    let p99_ratio = base_p99 / dyn_p99.max(1e-9);
+    let wall_ratio = base_wall / dyn_wall.max(1e-9);
+    b.record("twostep_p99_turnaround", base_p99, "s");
+    b.record("dynamic_p99_turnaround", dyn_p99, "s");
+    b.record("twostep_job_wall", base_wall, "s");
+    b.record("dynamic_job_wall", dyn_wall, "s");
+    b.record("p99_tail_ratio", p99_ratio, "x");
+    b.record("job_wall_ratio", wall_ratio, "x");
+    records.push(obj(vec![
+        ("mode", s("ratio")),
+        ("p99_tail_ratio", num(p99_ratio)),
+        ("job_wall_ratio", num(wall_ratio)),
+    ]));
+
+    let path = bts::util::bench_record::write("straggler", records)
+        .expect("write BENCH_straggler.json");
+    println!("wrote {path}");
+    b.finish();
+
+    // The acceptance bar: with a ~10x slow slot, dynamic + speculation
+    // must cut the p99 task tail by at least 2x vs two-step alone (and
+    // the job wall should move the same direction).
+    assert!(
+        p99_ratio >= 2.0,
+        "p99 tail improved only {p99_ratio:.2}x (twostep {:.1}ms vs \
+         dynamic {:.1}ms)",
+        base_p99 * 1e3,
+        dyn_p99 * 1e3,
+    );
+    assert!(
+        wall_ratio >= 1.2,
+        "job wall improved only {wall_ratio:.2}x"
+    );
+}

@@ -272,6 +272,12 @@ pub fn run_job(
         total_s: total_t.secs(),
         task_exec: metrics.exec_summary(),
         task_fetch: metrics.fetch_summary(),
+        // the coordinator engine has no leader-side dispatch registry
+        // (workers pull from a shared scheduler), so turnaround
+        // mirrors exec and speculation counters stay zero
+        task_turnaround: metrics.exec_summary(),
+        speculated: 0,
+        won_by_clone: 0,
         prefetch_hit_rate: metrics.hit_rate(),
         // the coordinator engine predates the cache layer; its store
         // runs uncached, so the rate is definitionally zero

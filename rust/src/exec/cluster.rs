@@ -66,13 +66,18 @@ use crate::error::{Error, Result};
 use crate::kneepoint::TaskSizing;
 use crate::metrics::{JobReport, Timer};
 use crate::runtime::Exec;
-use crate::scheduler::{SchedConfig, SchedSnapshot, TaskSpec, TwoStepScheduler};
+use crate::scheduler::{
+    inflight_target, placement_score, DoneKind, ResponseTimeTracker,
+    SchedConfig, SchedSnapshot, SpeculationState, TaskSpec,
+    TwoStepScheduler, SPECULATION_POLL,
+};
 use crate::transport::{
     accept_links, teardown, BodyCfg, Down, RemoteWorkers, TaskDone,
     TaskEnvelope, Up, WorkerLink,
 };
 use crate::util::json::{num, obj, Json};
 use crate::util::stats::{summarize, Summary};
+use crate::util::testutil::Turbulence;
 
 /// Everything one cluster run needs beyond the dataset and backend.
 #[derive(Debug, Clone)]
@@ -108,6 +113,10 @@ pub struct ExecConfig {
     pub seed: u64,
     /// Injected failure (shutdown-ordering and recovery tests).
     pub failure: Option<FailurePlan>,
+    /// Deterministic latency/fault turbulence for the in-proc workers
+    /// (scheduler tests and the straggler bench script slow slots
+    /// through this; see [`crate::util::testutil::Turbulence`]).
+    pub turbulence: Option<Arc<Turbulence>>,
     /// Attempt number, set by [`run_cluster_with_recovery`] (1-based).
     pub attempt: u32,
     /// Label for reports.
@@ -131,6 +140,7 @@ impl Default for ExecConfig {
             affinity: false,
             seed: 0xB75,
             failure: None,
+            turbulence: None,
             attempt: 1,
             platform: "bts-exec".into(),
         }
@@ -212,6 +222,8 @@ impl ExecResult {
             ("sched_steals", num(self.sched.steals as f64)),
             ("sched_refills", num(self.sched.refills as f64)),
             ("sched_affinity_routed", num(self.sched.affinity_routed as f64)),
+            ("sched_speculated", num(self.sched.speculated as f64)),
+            ("sched_won_by_clone", num(self.sched.won_by_clone as f64)),
             ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
             // disambiguates "cache off" from "cache on, zero hits" in
             // the cross-PR trajectory
@@ -332,6 +344,7 @@ pub(crate) struct JobCtx {
     fetch_times: Vec<f64>,
     exec_times: Vec<f64>,
     queue_waits: Vec<f64>,
+    turnarounds: Vec<f64>,
     hits: u64,
     misses: u64,
     rf_trajectory: Vec<usize>,
@@ -340,6 +353,15 @@ pub(crate) struct JobCtx {
     dispatch_calls: u64,
     cache_hits: u64,
     cache_misses: u64,
+    /// Leader-side speculation bookkeeping (also the source of the
+    /// dispatch → first-completion turnaround times).
+    spec: SpeculationState,
+    /// Response-time tracker (dynamic mode); shared pool-wide by the
+    /// serve layer, private to the run for solo exec.
+    tracker: Option<Arc<ResponseTimeTracker>>,
+    /// The affinity view the scheduler also holds — kept here so
+    /// speculative clone targets can be scored by placement.
+    affinity: Option<crate::cache::AffinityHook>,
 }
 
 impl JobCtx {
@@ -359,6 +381,7 @@ impl JobCtx {
         input_bytes: usize,
         startup_s: f64,
         affinity: Option<crate::cache::AffinityHook>,
+        tracker: Option<Arc<ResponseTimeTracker>>,
     ) -> Result<JobCtx> {
         let Some(first) = specs.first() else {
             return Err(Error::Data("job packed zero tasks".into()));
@@ -367,8 +390,11 @@ impl JobCtx {
         let n_tasks = specs.len();
         let mut sched =
             TwoStepScheduler::new(specs, pool_workers, cfg.sched.clone());
-        if let Some(hook) = affinity {
+        if let Some(hook) = affinity.clone() {
             sched.set_affinity(hook);
+        }
+        if let Some(t) = tracker.clone() {
+            sched.set_tracker(t);
         }
         let rf_trajectory = vec![dfs.replication_factor()];
         Ok(JobCtx {
@@ -386,6 +412,7 @@ impl JobCtx {
             fetch_times: Vec::with_capacity(n_tasks),
             exec_times: Vec::with_capacity(n_tasks),
             queue_waits: Vec::with_capacity(n_tasks),
+            turnarounds: Vec::with_capacity(n_tasks),
             hits: 0,
             misses: 0,
             rf_trajectory,
@@ -394,29 +421,68 @@ impl JobCtx {
             dispatch_calls: 0,
             cache_hits: 0,
             cache_misses: 0,
+            spec: SpeculationState::new(),
+            tracker,
+            affinity,
         })
     }
 
     /// Claim this job's next task for `worker`, timing the scheduler
-    /// interaction (the dispatch half of [`SchedOverhead`]).
+    /// interaction (the dispatch half of [`SchedOverhead`]) and
+    /// registering the dispatch with the speculation bookkeeping.
     pub(crate) fn next(&mut self, worker: usize) -> Option<TaskSpec> {
         let t = Timer::start();
         let next = self.sched.next(worker);
         self.dispatch_s += t.secs();
         self.dispatch_calls += 1;
+        if let Some(spec) = &next {
+            self.spec.on_dispatch(spec, worker, self.cfg.sched.speculate);
+        }
         next
     }
 
     /// Record one finished task: collect the partial, feed the
-    /// scheduler's feedback loop, and (if enabled) let the replication
-    /// controller react to the new fetch/exec balance.
-    pub(crate) fn on_done(&mut self, d: TaskDone) {
-        if self.partials[d.seq].replace(d.partial).is_none() {
-            self.remaining -= 1;
+    /// scheduler's feedback loop and the response-time tracker, and
+    /// (if enabled) let the replication controller react to the new
+    /// fetch/exec balance. Returns `false` for a late duplicate (a
+    /// dead speculative clone), which is dropped without touching the
+    /// partials or the job-local feedback — keyed on task id, so
+    /// arrival order never matters.
+    pub(crate) fn on_done(&mut self, d: TaskDone) -> bool {
+        let info = self.spec.on_done(d.seq, d.worker);
+        if info.kind == DoneKind::Duplicate || self.partials[d.seq].is_some()
+        {
+            // Dead-clone cleanup: the winner already landed. The
+            // tracker still learns this copy's own dispatch-relative
+            // latency — a slow slot's duplicates are exactly the
+            // evidence against it (its self-reported timers are not).
+            if let Some(t) = &self.tracker {
+                t.observe_task(d.worker, info.slot_latency_s);
+            }
+            return false;
         }
+        self.partials[d.seq] = Some(d.partial);
+        self.remaining -= 1;
         self.fetch_times.push(d.fetch_s);
         self.exec_times.push(d.exec_s);
         self.queue_waits.push(d.queue_wait_s);
+        self.turnarounds.push(info.turnaround_s);
+        if let Some(t) = &self.tracker {
+            // Charge the reporting slot only for its own copy's wait —
+            // a winning clone must not inherit the straggler's delay.
+            t.observe_task(d.worker, info.slot_latency_s);
+            // Mirror the DFS client's per-node response estimates at a
+            // sampled cadence — the diagnostics surface behind
+            // `slowest_node` — without paying a store lock plus a Vec
+            // per completion on the hot path. (Replica *selection*
+            // already reacts to these estimates inside the DFS client
+            // itself; slot placement reacts via the turnarounds above,
+            // which include fetch time.)
+            const NODE_MIRROR_EVERY: usize = 16;
+            if self.turnarounds.len() % NODE_MIRROR_EVERY == 1 {
+                t.ingest_node_responses(&self.dfs.per_node_response());
+            }
+        }
         self.hits += d.prefetch_hits;
         self.misses += d.prefetch_misses;
         self.cache_hits += d.cache_hits;
@@ -443,6 +509,94 @@ impl JobCtx {
                 }
             }
         }
+        true
+    }
+
+    /// Dispatch window for `slot` under this job's config: the base
+    /// lookahead normally, collapsing to one task for slots the
+    /// tracker has watched straggle.
+    pub(crate) fn inflight_target(&self, slot: usize, base: usize) -> usize {
+        inflight_target(self.tracker.as_deref(), slot, base)
+    }
+
+    /// Speculative re-execution step: among in-flight tasks older than
+    /// the straggler threshold (and never cloned before), pick for
+    /// each the best idle slot by [`placement_score`] — affinity
+    /// credit minus predicted completion — and return the
+    /// `(slot, spec)` clones to dispatch. Consumes each idle slot at
+    /// most once per call; returns nothing until the tracker has
+    /// enough samples for a threshold.
+    pub(crate) fn clone_candidates(
+        &mut self,
+        idle: &[usize],
+    ) -> Vec<(usize, TaskSpec)> {
+        if !self.cfg.sched.speculate || idle.is_empty() {
+            return Vec::new();
+        }
+        let Some(tracker) = self.tracker.clone() else {
+            return Vec::new();
+        };
+        let Some(threshold) =
+            tracker.straggler_threshold_s(self.cfg.sched.straggler_pct)
+        else {
+            return Vec::new();
+        };
+        let mut free: Vec<usize> = idle.to_vec();
+        let mut clones = Vec::new();
+        for seq in self.spec.overdue(threshold) {
+            if free.is_empty() {
+                break;
+            }
+            let Some(primary) = self.spec.primary_of(seq) else {
+                continue;
+            };
+            let Some(spec) = self.spec.spec_of(seq).cloned() else {
+                continue;
+            };
+            let target = free
+                .iter()
+                .copied()
+                .filter(|&w| w != primary)
+                .max_by(|&a, &b| {
+                    let score = |w: usize| {
+                        placement_score(
+                            self.affine_blocks(&spec, w),
+                            tracker.predicted_task_s(w),
+                        )
+                    };
+                    score(a)
+                        .partial_cmp(&score(b))
+                        .expect("placement scores are finite")
+                        // prefer the lower slot index on ties
+                        .then(b.cmp(&a))
+                });
+            let Some(w) = target else { continue };
+            if self.spec.mark_cloned(seq, w) {
+                free.retain(|&x| x != w);
+                clones.push((w, spec));
+            }
+        }
+        clones
+    }
+
+    /// A clone dispatch failed before it left the leader: make the
+    /// straggler cloneable again (see
+    /// [`SpeculationState::cancel_clone`]).
+    pub(crate) fn cancel_clone(&mut self, seq: usize) {
+        self.spec.cancel_clone(seq);
+    }
+
+    /// How many of `spec`'s blocks the affinity registry attributes to
+    /// `slot` (0 without affinity dispatch).
+    fn affine_blocks(&self, spec: &TaskSpec, slot: usize) -> usize {
+        let Some(hook) = &self.affinity else { return 0 };
+        hook.index.score(
+            slot,
+            spec.task
+                .sample_ids
+                .iter()
+                .map(|&id| block_key(&hook.ns, spec.workload, id)),
+        )
     }
 
     /// All partials collected — the job can reduce.
@@ -490,6 +644,13 @@ impl JobCtx {
             } else {
                 &self.fetch_times
             }),
+            task_turnaround: summarize(if self.turnarounds.is_empty() {
+                &[0.0]
+            } else {
+                &self.turnarounds
+            }),
+            speculated: self.spec.speculated(),
+            won_by_clone: self.spec.won_by_clone(),
             prefetch_hit_rate: if h + m == 0 {
                 0.0
             } else {
@@ -515,19 +676,26 @@ impl JobCtx {
                 &self.queue_waits
             }),
         };
+        let mut sched = self.sched.snapshot();
+        sched.speculated = self.spec.speculated();
+        sched.won_by_clone = self.spec.won_by_clone();
         Ok(FinishedJob {
             output,
             report,
-            sched: self.sched.snapshot(),
+            sched,
             overhead,
             rf_trajectory: self.rf_trajectory,
         })
     }
 }
 
-/// Keep `worker` topped up to `target` in-flight tasks. Sends
+/// Keep `worker` topped up to its dispatch-window target (the base
+/// lookahead, collapsed to 1 for tracker-flagged slow slots). Sends
 /// `Shutdown` (and retires the link) once the scheduler is dry for
-/// this worker and nothing is in flight.
+/// this worker and nothing is in flight — unless speculation is
+/// armed, in which case idle slots stay alive until the job completes
+/// so they can host straggler clones (the completion path shuts them
+/// down).
 #[allow(clippy::too_many_arguments)]
 fn top_up(
     ctx: &mut JobCtx,
@@ -535,10 +703,12 @@ fn top_up(
     retired: &mut [bool],
     inflight: &mut [usize],
     w: usize,
-    target: usize,
+    base_target: usize,
     attempt: u32,
     ns: &Arc<str>,
+    speculate: bool,
 ) {
+    let target = ctx.inflight_target(w, base_target);
     while !retired[w] && inflight[w] < target {
         match ctx.next(w) {
             Some(spec) => {
@@ -558,7 +728,7 @@ fn top_up(
                 }
             }
             None => {
-                if inflight[w] == 0 {
+                if inflight[w] == 0 && !speculate {
                     let _ = links[w].send(Down::Shutdown);
                     retired[w] = true;
                 }
@@ -610,6 +780,15 @@ pub fn run_cluster(
         .map(|t| TaskSpec::new(t, workload, cfg.seed))
         .collect();
     let startup_s = total_t.secs();
+    // Dynamic mode: one response-time tracker for the run, shared by
+    // the scheduler (refill sizing), the leader (dispatch windows and
+    // straggler thresholds), and the remote link pumps (heartbeat-gap
+    // overruns).
+    let tracker = cfg
+        .sched
+        .wants_tracker()
+        .then(|| Arc::new(ResponseTimeTracker::new()));
+    let speculate = cfg.sched.speculate;
     let mut ctx = JobCtx::new(
         specs,
         dfs.clone(),
@@ -619,6 +798,7 @@ pub fn run_cluster(
         input_bytes,
         startup_s,
         layer.hook("".into()),
+        tracker.clone(),
     )?;
 
     // ---- map phase: stand up the links, lead the job --------------------
@@ -632,6 +812,7 @@ pub fn run_cluster(
             // Solo semantics: a task error is fatal to the attempt.
             survive_task_errors: false,
             affinity: layer.affinity.clone(),
+            turbulence: cfg.turbulence.clone(),
         };
         links.push(WorkerLink::spawn_inproc(
             body,
@@ -643,7 +824,8 @@ pub fn run_cluster(
         )?);
     }
     if let Some(remote) = &cfg.remote {
-        match accept_links(remote, cfg.workers, &dfs, &up_tx) {
+        match accept_links(remote, cfg.workers, &dfs, &up_tx, tracker.clone())
+        {
             Ok(remote_links) => links.extend(remote_links),
             Err(e) => {
                 // Orderly teardown of whatever already stood up.
@@ -668,49 +850,112 @@ pub fn run_cluster(
             target,
             cfg.attempt,
             &ns,
+            speculate,
         );
     }
 
     let mut worker_stats: Vec<Option<WorkerStats>> = vec![None; slots];
     let mut first_err: Option<Error> = None;
 
+    // Shut every live worker down (orderly): a worker mid-task finishes
+    // it, then sees the Shutdown during its drain and abandons anything
+    // still queued — which is what reclaims dead speculative clones.
+    let shutdown_all = |links: &[WorkerLink], retired: &mut [bool]| {
+        for (w, link) in links.iter().enumerate() {
+            if !retired[w] {
+                let _ = link.send(Down::Shutdown);
+                retired[w] = true;
+            }
+        }
+    };
+
     while worker_stats.iter().any(|s| s.is_none()) {
-        let msg = match up_rx.recv() {
-            Ok(m) => m,
-            Err(_) => break, // every up-channel sender gone
+        // With speculation armed the leader wakes on a short timer to
+        // compare in-flight task ages against the straggler threshold;
+        // otherwise it blocks as before.
+        let msg = if speculate {
+            match up_rx.recv_timeout(SPECULATION_POLL) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            match up_rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break, // every up-channel sender gone
+            }
         };
         match msg {
-            Up::Done { done, .. } => {
+            None => {}
+            Some(Up::Done { done, .. }) => {
                 let w = done.worker;
                 inflight[w] = inflight[w].saturating_sub(1);
                 ctx.on_done(*done);
-                top_up(
-                    &mut ctx,
-                    &links,
-                    &mut retired,
-                    &mut inflight,
-                    w,
-                    target,
-                    cfg.attempt,
-                    &ns,
-                );
-            }
-            Up::TaskFailed { error, .. } | Up::Lost { error, .. } => {
-                first_err.get_or_insert(error);
-                // Orderly abort: every live worker drains its channel
-                // and stops at the Shutdown marker.
-                for (w, link) in links.iter().enumerate() {
-                    if !retired[w] {
-                        let _ = link.send(Down::Shutdown);
-                        retired[w] = true;
-                    }
+                if ctx.is_complete() {
+                    // The statistic is fully collected: release every
+                    // worker now instead of waiting out stragglers
+                    // that only dead clones still cover.
+                    shutdown_all(&links, &mut retired);
+                } else {
+                    top_up(
+                        &mut ctx,
+                        &links,
+                        &mut retired,
+                        &mut inflight,
+                        w,
+                        target,
+                        cfg.attempt,
+                        &ns,
+                        speculate,
+                    );
                 }
             }
+            Some(Up::TaskFailed { error, .. })
+            | Some(Up::Lost { error, .. }) => {
+                // A failure arriving after the statistic is fully
+                // collected can only come from a dead speculative copy
+                // (or a link dropping during the drain): the job's
+                // result is already in hand, so don't discard it.
+                if !ctx.is_complete() {
+                    first_err.get_or_insert(error);
+                }
+                // Orderly abort: every live worker drains its channel
+                // and stops at the Shutdown marker.
+                shutdown_all(&links, &mut retired);
+            }
             // Solo runs never send Abort, so acks cannot arrive.
-            Up::Aborted { .. } => {}
-            Up::Exited { worker, executed, clean } => {
-                worker_stats[worker] =
-                    Some(WorkerStats { worker, executed, clean_shutdown: clean });
+            Some(Up::Aborted { .. }) => {}
+            Some(Up::Exited { worker, executed, clean }) => {
+                worker_stats[worker] = Some(WorkerStats {
+                    worker,
+                    executed,
+                    clean_shutdown: clean,
+                });
+            }
+        }
+        // Speculative re-execution: clone overdue in-flight tasks to
+        // the best idle slots (first bit-identical result wins).
+        if speculate && first_err.is_none() && !ctx.is_complete() {
+            let idle: Vec<usize> = (0..slots)
+                .filter(|&w| !retired[w] && inflight[w] == 0)
+                .collect();
+            for (w, spec) in ctx.clone_candidates(&idle) {
+                let seq = spec.task.seq;
+                let env = TaskEnvelope {
+                    job: 0,
+                    attempt: cfg.attempt,
+                    ns: ns.clone(),
+                    spec,
+                    poison: false,
+                };
+                if links[w].send(Down::Task(Box::new(env))) {
+                    inflight[w] += 1;
+                } else {
+                    // The clone never left the leader: retire the dead
+                    // link and give the straggler its attempt back.
+                    retired[w] = true;
+                    ctx.cancel_clone(seq);
+                }
             }
         }
     }
@@ -852,6 +1097,7 @@ mod tests {
             bytes,
             0.0,
             None,
+            None,
         )
         .unwrap();
         let mut pf = Prefetcher::new(dfs, 4);
@@ -897,6 +1143,7 @@ mod tests {
             samples,
             bytes,
             0.0,
+            None,
             None,
         )
         .unwrap();

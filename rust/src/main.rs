@@ -79,16 +79,21 @@ commands:
   repro [--only IDs] [--out DIR]    regenerate every paper table/figure
   run [--config F] [--set k=v]...   run a real job (PJRT execution)
   exec [--workload W] [--workers N] [--samples N] [--sizing S]
-       [--cache-mb MB] [--affinity on|off] [--out-json FILE]
+       [--cache-mb MB] [--affinity on|off] [--speculate on|off]
+       [--straggler-pct P] [--out-json FILE]
        [--listen ADDR --workers-remote N]
                                     run a job through the cluster
                                     executor (native kernels when
                                     artifacts are unavailable); with
                                     --listen, accepts N `bts worker`
                                     processes as extra map slots;
+                                    --speculate clones straggling
+                                    tasks past the p<P> response-time
+                                    threshold (first result wins);
                                     writes results/BENCH_exec.json
   serve [--jobs N] [--workers N] [--rate R] [--max-active N]
         [--samples N] [--seed S] [--cache-mb MB] [--affinity on|off]
+        [--speculate on|off] [--straggler-pct P]
         [--listen ADDR --workers-remote N]
                                     sustained mixed load through the
                                     long-lived multi-tenant service;
@@ -125,6 +130,19 @@ fn on_off_flag(f: &Flags, name: &str, default: bool) -> Result<bool> {
             "bad {name} value {v}; want on|off"
         ))),
     }
+}
+
+/// `--speculate on|off` + `--straggler-pct P` (a percentile in
+/// (0, 100]), parsed strictly.
+fn speculation_flags(f: &Flags) -> Result<(bool, f64)> {
+    let speculate = on_off_flag(f, "--speculate", false)?;
+    let pct: f64 = f.num("--straggler-pct", 95.0)?;
+    if !pct.is_finite() || pct <= 0.0 || pct > 100.0 {
+        return Err(Error::Config(format!(
+            "bad --straggler-pct {pct}; want a percentile in (0, 100]"
+        )));
+    }
+    Ok((speculate, pct))
 }
 
 fn cmd_repro(args: &[String]) -> Result<()> {
@@ -288,6 +306,8 @@ fn cmd_exec(args: &[String]) -> Result<()> {
             "--sizing",
             "--cache-mb",
             "--affinity",
+            "--speculate",
+            "--straggler-pct",
             "--listen",
             "--workers-remote",
             "--out-json",
@@ -298,6 +318,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
     let samples: usize = f.num("--samples", 200)?;
     let cache_mb: usize = f.num("--cache-mb", 0)?;
     let affinity = on_off_flag(&f, "--affinity", false)?;
+    let (speculate, straggler_pct) = speculation_flags(&f)?;
     let remote = remote_flags(&f)?;
     let backend = Arc::new(Backend::auto());
     let params = backend.manifest().params.clone();
@@ -318,12 +339,18 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         remote,
         cache_mb,
         affinity,
+        sched: bts::scheduler::SchedConfig {
+            dynamic: speculate,
+            speculate,
+            straggler_pct,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let ds = bts::workloads::build_small(w, &params, samples);
     println!(
         "backend {}  workload {}  {} samples  sizing {:?}  {} workers \
-         (+{} remote)  cache {} MB  affinity {}",
+         (+{} remote)  cache {} MB  affinity {}  speculate {}",
         backend.name(),
         w.name(),
         samples,
@@ -331,14 +358,19 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         cfg.workers,
         cfg.remote.as_ref().map_or(0, |r| r.count),
         cfg.cache_mb,
-        if cfg.affinity { "on" } else { "off" }
+        if cfg.affinity { "on" } else { "off" },
+        if speculate {
+            format!("on (p{straggler_pct:.0})")
+        } else {
+            "off".into()
+        },
     );
     let r = run_cluster(ds.as_ref(), backend, &cfg)?;
     println!("{}", r.report.render());
     println!(
         "scheduler: dispatch {:.1} µs/call over {} calls; queue wait \
          p50 {:.3} ms p95 {:.3} ms; {} refills, {} steals, {} affine; \
-         rf {:?}; dfs served {:.2} MB",
+         {} speculated ({} won by clone); rf {:?}; dfs served {:.2} MB",
         r.overhead.dispatch_us_per_call(),
         r.overhead.dispatch_calls,
         r.overhead.queue_wait.p50 * 1e3,
@@ -346,6 +378,8 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         r.sched.refills,
         r.sched.steals,
         r.sched.affinity_routed,
+        r.sched.speculated,
+        r.sched.won_by_clone,
         r.rf_trajectory,
         r.dfs_bytes_served as f64 / 1048576.0
     );
@@ -379,10 +413,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--samples",
             "--cache-mb",
             "--affinity",
+            "--speculate",
+            "--straggler-pct",
             "--listen",
             "--workers-remote",
         ],
     )?;
+    let (speculate, straggler_pct) = speculation_flags(&f)?;
     let cfg = LoadConfig {
         jobs: f.num("--jobs", 20)?,
         workers: f.num("--workers", 4)?,
@@ -392,6 +429,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         base_samples: f.num("--samples", 40)?,
         cache_mb: f.num("--cache-mb", 0)?,
         affinity: on_off_flag(&f, "--affinity", false)?,
+        speculate,
+        straggler_pct,
         remote: remote_flags(&f)?,
         ..Default::default()
     };
@@ -611,5 +650,29 @@ mod tests {
         let f = Flags::parse(&argv(&["--affinity=maybe"]), &["--affinity"])
             .unwrap();
         assert!(on_off_flag(&f, "--affinity", false).is_err());
+    }
+
+    #[test]
+    fn speculation_flags_parse_and_reject() {
+        let names = &["--speculate", "--straggler-pct"][..];
+        let f = Flags::parse(&argv(&[]), names).unwrap();
+        assert_eq!(speculation_flags(&f).unwrap(), (false, 95.0));
+        let f = Flags::parse(
+            &argv(&["--speculate=on", "--straggler-pct", "99"]),
+            names,
+        )
+        .unwrap();
+        assert_eq!(speculation_flags(&f).unwrap(), (true, 99.0));
+        for bad in ["0", "-5", "101", "NaN"] {
+            let f = Flags::parse(
+                &argv(&["--straggler-pct", bad]),
+                names,
+            )
+            .unwrap();
+            assert!(
+                speculation_flags(&f).is_err(),
+                "--straggler-pct {bad} must be rejected"
+            );
+        }
     }
 }

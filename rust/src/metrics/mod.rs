@@ -55,6 +55,17 @@ pub struct JobReport {
     pub total_s: f64,
     pub task_exec: Summary,
     pub task_fetch: Summary,
+    /// Leader-observed task turnaround: dispatch → first completion.
+    /// Unlike `task_exec`/`task_fetch` (worker self-reports), this
+    /// includes queue drag and any slowness the worker's own timers
+    /// cannot see — the signal the dynamic scheduler reacts to, and
+    /// the one speculation improves (a straggler's turnaround is its
+    /// winning clone's, not the stuck original's).
+    pub task_turnaround: Summary,
+    /// Tasks cloned past the straggler threshold (speculation).
+    pub speculated: u64,
+    /// Speculated tasks whose clone beat the original.
+    pub won_by_clone: u64,
     pub prefetch_hit_rate: f64,
     /// Shared block-cache hit rate over this job's store fetches
     /// (0 when the executor ran without a cache attached).
@@ -90,6 +101,10 @@ impl JobReport {
             ("task_exec_p50_s", num(self.task_exec.p50)),
             ("task_exec_p95_s", num(self.task_exec.p95)),
             ("task_fetch_p50_s", num(self.task_fetch.p50)),
+            ("task_turnaround_p50_s", num(self.task_turnaround.p50)),
+            ("task_turnaround_p99_s", num(self.task_turnaround.p99)),
+            ("speculated", num(self.speculated as f64)),
+            ("won_by_clone", num(self.won_by_clone as f64)),
             ("prefetch_hit_rate", num(self.prefetch_hit_rate)),
             ("cache_hit_rate", num(self.cache_hit_rate)),
             ("final_rf", num(self.final_rf as f64)),
@@ -102,6 +117,7 @@ impl JobReport {
             "job[{} on {}] {} tasks / {} samples / {:.2} MB in {:.3}s \
              (startup {:.3}s, map {:.3}s, reduce {:.3}s) => {:.2} MB/s; \
              task exec p50 {:.1}ms p95 {:.1}ms; fetch p50 {:.2}ms; \
+             turnaround p99 {:.1}ms; speculated {} (clone won {}); \
              prefetch hits {:.0}%; cache hits {:.0}%; rf {}; restarts {}",
             self.workload,
             self.platform,
@@ -116,6 +132,9 @@ impl JobReport {
             self.task_exec.p50 * 1e3,
             self.task_exec.p95 * 1e3,
             self.task_fetch.p50 * 1e3,
+            self.task_turnaround.p99 * 1e3,
+            self.speculated,
+            self.won_by_clone,
             self.prefetch_hit_rate * 100.0,
             self.cache_hit_rate * 100.0,
             self.final_rf,
@@ -185,6 +204,9 @@ mod tests {
             total_s: 2.0,
             task_exec: summarize(&[0.01]),
             task_fetch: summarize(&[0.001]),
+            task_turnaround: summarize(&[0.02]),
+            speculated: 2,
+            won_by_clone: 1,
             prefetch_hit_rate: 0.9,
             cache_hit_rate: 0.5,
             final_rf: 3,
@@ -197,6 +219,9 @@ mod tests {
         assert_eq!(j.req_str("workload").unwrap(), "eaglet");
         assert_eq!(j.req_usize("tasks").unwrap(), 10);
         assert!((j.req_f64("throughput_mbs").unwrap() - 5.0).abs() < 1e-9);
+        assert_eq!(j.req_usize("speculated").unwrap(), 2);
+        assert_eq!(j.req_usize("won_by_clone").unwrap(), 1);
+        assert!(j.req_f64("task_turnaround_p99_s").is_ok());
     }
 
     #[test]

@@ -1,0 +1,683 @@
+//! Response-time-aware dynamic scheduling: the tracker, the placement
+//! score, and speculative tiny-task re-execution (DESIGN.md §12).
+//!
+//! The thesis's dynamic scheduler "schedules the tasks to worker nodes
+//! based on the availability and response times of the data nodes".
+//! The two-step scheduler already adapts batch *size* from worker
+//! self-reported timings, but self-reports miss exactly the failures
+//! that matter: a contended node sleeps *outside* its own timers, a
+//! partitioned TCP worker reports nothing at all. This module closes
+//! the loop from the leader's side:
+//!
+//! * [`ResponseTimeTracker`] — EWMAs of *leader-observed* response
+//!   time per map slot (dispatch → first completion, so queue drag and
+//!   invisible slowness count), the latest per-data-node fetch
+//!   response mirrored from [`crate::dfs::Dfs::get_traced`]'s internal
+//!   estimates, and heartbeat-gap overruns reported by the remote link
+//!   pumps. Shared as an `Arc`: the serve pool keeps one for its whole
+//!   life, so a new tenant's first task already knows which slots are
+//!   slow.
+//! * [`placement_score`] — combines cache affinity (blocks the slot
+//!   already holds) with predicted completion time into one comparable
+//!   score. Strictly monotone: a slower observed slot never gains
+//!   score (`prop_invariants.rs` holds this for arbitrary inputs).
+//! * [`SpeculationState`] — leader-side bookkeeping for speculative
+//!   re-execution: when a dispatched tiny task's age exceeds a
+//!   quantile-based straggler threshold, it is cloned to the
+//!   best-scoring idle slot, **exactly once**; the first completion
+//!   wins and late duplicates are dropped. Determinism holds because
+//!   a task's partial is a function of `(seed, seq)` alone — whichever
+//!   copy lands first carries bit-identical bytes, and the seq-ordered
+//!   reduce never sees arrival order.
+//!
+//! The straggler threshold comes from a [`LatencyHistogram`]:
+//! log-bucketed, bounded, and permutation-invariant, so the quantile a
+//! threshold is derived from does not depend on the order completions
+//! happened to arrive in — restarts and multiplexing reorder freely.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::scheduler::TaskSpec;
+use crate::util::stats::Ewma;
+
+/// Completions required before speculation may fire (a threshold from
+/// one probe is noise).
+pub const MIN_STRAGGLER_SAMPLES: u64 = 8;
+
+/// Floor on the straggler threshold: sub-millisecond jitter on healthy
+/// slots must not trigger clone churn.
+pub const MIN_STRAGGLER_S: f64 = 1e-3;
+
+/// A task is a straggler when its age exceeds this multiple of the
+/// `straggler_pct` quantile of observed response times.
+pub const STRAGGLER_MULT: f64 = 2.0;
+
+/// Seconds of predicted-completion credit per block a slot already
+/// holds (the affinity half of [`placement_score`]).
+pub const AFFINITY_CREDIT_S: f64 = 5e-4;
+
+/// Leader poll cadence while speculation is armed: how often in-flight
+/// task ages are checked against the straggler threshold. Shared by
+/// the solo executor and the serve dispatcher.
+pub const SPECULATION_POLL: Duration = Duration::from_millis(2);
+
+/// Below this relative speed (vs the fastest slot) a slot's dispatch
+/// window collapses to one task, so a slow slot can strand at most a
+/// single tiny task. 1/3 = sustained 3× slower than the best slot.
+pub const SLOW_SLOT_SPEED: f64 = 1.0 / 3.0;
+
+/// EWMA smoothing for the tracker's estimates.
+const TRACKER_ALPHA: f64 = 0.25;
+
+/// Log₂-bucketed latency histogram over microseconds: bounded,
+/// permutation-invariant, and cheap to quantile. Bucket `i` covers
+/// `(2^(i-1), 2^i]` µs; bucket 0 is everything ≤ 1 µs.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; 64],
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; 64], total: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(secs: f64) -> usize {
+        let us = secs * 1e6;
+        if us <= 1.0 {
+            return 0;
+        }
+        (us.log2().ceil() as usize).min(63)
+    }
+
+    /// Record one latency. Non-finite or negative observations are
+    /// ignored — the histogram can never be poisoned into NaN.
+    pub fn observe(&mut self, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        self.counts[Self::bucket(secs)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper bound of the bucket holding the `pct` (0–100) quantile.
+    /// `None` with no observations. Depends only on the multiset of
+    /// observations, never their order.
+    pub fn quantile(&self, pct: f64) -> Option<f64> {
+        if self.total == 0 {
+            return None;
+        }
+        let pct = if pct.is_finite() { pct.clamp(0.0, 100.0) } else { 100.0 };
+        let rank = ((pct / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(2f64.powi(i as i32) * 1e-6);
+            }
+        }
+        Some(2f64.powi(63) * 1e-6)
+    }
+}
+
+#[derive(Debug, Default)]
+struct TrackerInner {
+    /// Leader-observed response time (dispatch → first completion) per
+    /// map slot. Grown on demand — remote slots appear when they join.
+    slots: Vec<Ewma>,
+    /// Latest per-data-node response estimate, mirrored from the DFS
+    /// client's own replica-selection EWMAs.
+    nodes: Vec<Option<f64>>,
+    /// Heartbeat-gap overrun per slot (remote link pumps report how
+    /// late each Ping arrived past its interval; 0 for healthy links).
+    rtt: Vec<Ewma>,
+    hist: LatencyHistogram,
+}
+
+fn ensure(v: &mut Vec<Ewma>, slot: usize) {
+    while v.len() <= slot {
+        v.push(Ewma::new(TRACKER_ALPHA));
+    }
+}
+
+/// See module docs. One per solo run; one per serve pool, shared by
+/// every job the pool's warm slots carry.
+#[derive(Debug, Default)]
+pub struct ResponseTimeTracker {
+    inner: Mutex<TrackerInner>,
+}
+
+impl ResponseTimeTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One task's leader-observed response time on `slot`. Non-finite
+    /// or negative observations are dropped at the door.
+    pub fn observe_task(&self, slot: usize, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        ensure(&mut g.slots, slot);
+        g.slots[slot].observe(secs);
+        g.hist.observe(secs);
+    }
+
+    /// Heartbeat-gap overrun for `slot` (seconds past the expected
+    /// ping interval; clamped at 0 for early pings).
+    pub fn observe_rtt(&self, slot: usize, overrun_s: f64) {
+        if !overrun_s.is_finite() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        ensure(&mut g.rtt, slot);
+        g.rtt[slot].observe(overrun_s.max(0.0));
+    }
+
+    /// Mirror the DFS client's per-node response estimates (the
+    /// existing `get_traced` feedback) into the tracker.
+    pub fn ingest_node_responses(&self, responses: &[Option<f64>]) {
+        let mut g = self.inner.lock().unwrap();
+        g.nodes = responses
+            .iter()
+            .map(|r| (*r).filter(|v| v.is_finite() && *v >= 0.0))
+            .collect();
+    }
+
+    /// Latest response estimate for data node `node`, if any.
+    pub fn node_response_s(&self, node: usize) -> Option<f64> {
+        self.inner.lock().unwrap().nodes.get(node).copied().flatten()
+    }
+
+    /// The currently slowest data node `(node, secs)`, if any node has
+    /// served a fetch yet.
+    pub fn slowest_node(&self) -> Option<(usize, f64)> {
+        let g = self.inner.lock().unwrap();
+        g.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.map(|v| (i, v)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Completions observed so far.
+    pub fn samples(&self) -> u64 {
+        self.inner.lock().unwrap().hist.count()
+    }
+
+    /// Predicted response time for the next task on `slot`: the slot's
+    /// own EWMA (falling back to the cross-slot mean, then 0 with no
+    /// data at all) plus its heartbeat overrun. Always finite and
+    /// non-negative.
+    pub fn predicted_task_s(&self, slot: usize) -> f64 {
+        let g = self.inner.lock().unwrap();
+        let own = g.slots.get(slot).and_then(|e| e.get());
+        let base = own.unwrap_or_else(|| {
+            let known: Vec<f64> =
+                g.slots.iter().filter_map(|e| e.get()).collect();
+            if known.is_empty() {
+                0.0
+            } else {
+                known.iter().sum::<f64>() / known.len() as f64
+            }
+        });
+        let rtt = g.rtt.get(slot).and_then(|e| e.get()).unwrap_or(0.0);
+        (base + rtt).max(0.0)
+    }
+
+    /// Relative speed of `slot` against the *fastest* observed slot:
+    /// 1.0 means "as fast as the best", 0.1 means "ten times slower".
+    /// Benchmarked against the best rather than the mean so a single
+    /// slow slot in a small pool cannot drag the yardstick down and
+    /// hide itself. Clamped to `[0.05, 1.0]`; 1.0 with no data.
+    pub fn relative_speed(&self, slot: usize) -> f64 {
+        let g = self.inner.lock().unwrap();
+        let rtt =
+            |i: usize| g.rtt.get(i).and_then(|e| e.get()).unwrap_or(0.0);
+        let mine = match g.slots.get(slot).and_then(|e| e.get()) {
+            Some(v) if v + rtt(slot) > 0.0 => v + rtt(slot),
+            _ => return 1.0,
+        };
+        let fastest = g
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.get().map(|v| v + rtt(i)))
+            .filter(|v| *v > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        if !fastest.is_finite() {
+            return 1.0;
+        }
+        (fastest / mine).clamp(0.05, 1.0)
+    }
+
+    /// Age past which an in-flight task counts as a straggler, or
+    /// `None` until [`MIN_STRAGGLER_SAMPLES`] completions exist.
+    /// `pct` is the quantile in percent (`--straggler-pct`).
+    pub fn straggler_threshold_s(&self, pct: f64) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        if g.hist.count() < MIN_STRAGGLER_SAMPLES {
+            return None;
+        }
+        g.hist
+            .quantile(pct)
+            .map(|q| (q * STRAGGLER_MULT).max(MIN_STRAGGLER_S))
+    }
+}
+
+/// One comparable placement score for "run this task on that slot":
+/// affinity credit for blocks the slot already holds, minus the
+/// predicted completion time. Monotone by construction — more held
+/// blocks never hurts, a slower slot never helps — and total: bad
+/// inputs (NaN, negative predictions) sanitize to 0 rather than
+/// poisoning comparisons.
+pub fn placement_score(affine_blocks: usize, predicted_s: f64) -> f64 {
+    let p = if predicted_s.is_finite() && predicted_s > 0.0 {
+        predicted_s
+    } else {
+        0.0
+    };
+    affine_blocks as f64 * AFFINITY_CREDIT_S - p
+}
+
+/// Dispatch window for `slot`: `base` tasks normally, collapsing to 1
+/// when the tracker has seen the slot run slow — a straggling slot can
+/// then strand at most one tiny task instead of a whole window.
+pub fn inflight_target(
+    tracker: Option<&ResponseTimeTracker>,
+    slot: usize,
+    base: usize,
+) -> usize {
+    match tracker {
+        Some(t) if t.relative_speed(slot) < SLOW_SLOT_SPEED => 1,
+        _ => base.max(1),
+    }
+}
+
+#[derive(Debug)]
+struct TaskTimes {
+    /// The spec, retained while in flight (what a clone re-dispatches);
+    /// dropped at first completion to keep tombstones small.
+    spec: Option<TaskSpec>,
+    primary: usize,
+    primary_at: Instant,
+    /// The speculative copy, if one was dispatched: (slot, instant).
+    clone: Option<(usize, Instant)>,
+    done: bool,
+}
+
+impl TaskTimes {
+    /// Leader-observed latency of the copy running on `slot`, measured
+    /// from *that copy's own* dispatch — the rescuing slot must never
+    /// be charged for the time the straggler sat elsewhere.
+    fn slot_latency_s(&self, slot: usize) -> f64 {
+        match self.clone {
+            Some((w, at)) if w == slot => at.elapsed().as_secs_f64(),
+            _ => self.primary_at.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// What one completion meant to the speculation bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DoneKind {
+    /// First completion, by the slot the task was dispatched to.
+    Primary,
+    /// First completion, by the speculative clone — the clone won.
+    CloneWin,
+    /// A late copy of an already-completed task; drop it.
+    Duplicate,
+}
+
+/// One completion, resolved against the dispatch bookkeeping.
+#[derive(Debug, Clone, Copy)]
+pub struct DoneInfo {
+    pub kind: DoneKind,
+    /// Effective task latency: primary dispatch → first completion.
+    /// Meaningful only on the first completion (0 for duplicates) —
+    /// this is what `JobReport.task_turnaround` summarizes.
+    pub turnaround_s: f64,
+    /// Latency attributed to the *reporting slot*, measured from that
+    /// copy's own dispatch — what feeds the [`ResponseTimeTracker`].
+    pub slot_latency_s: f64,
+}
+
+/// Leader-side speculative re-execution bookkeeping for one job
+/// attempt: which tasks are in flight where and since when, which have
+/// been cloned (at most once each), and who won. Embedded in
+/// `exec::cluster::JobCtx`; also the source of the leader-observed
+/// latencies that feed the [`ResponseTimeTracker`]. Completed entries
+/// persist as tombstones so a losing copy's late arrival still yields
+/// the true latency of the slot that ran it.
+#[derive(Debug, Default)]
+pub struct SpeculationState {
+    tasks: HashMap<usize, TaskTimes>,
+    in_flight: usize,
+    speculated: u64,
+    won_by_clone: u64,
+}
+
+impl SpeculationState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A task left the scheduler for `slot` (the primary dispatch).
+    /// `retain_spec` keeps a copy for later cloning — pass the
+    /// speculation flag, so non-speculative runs don't pay a per-task
+    /// `TaskSpec` clone on the hot dispatch path just to record an
+    /// `Instant`.
+    pub fn on_dispatch(
+        &mut self,
+        spec: &TaskSpec,
+        slot: usize,
+        retain_spec: bool,
+    ) {
+        self.tasks.insert(
+            spec.task.seq,
+            TaskTimes {
+                spec: retain_spec.then(|| spec.clone()),
+                primary: slot,
+                primary_at: Instant::now(),
+                clone: None,
+                done: false,
+            },
+        );
+        self.in_flight += 1;
+    }
+
+    /// A completion for `seq` arrived from `slot`. The first
+    /// completion reports the turnaround and retires the task;
+    /// anything after that is a dead clone to clean up
+    /// ([`DoneKind::Duplicate`]) — still stamped with its own copy's
+    /// latency so the tracker learns how slow the loser really was.
+    pub fn on_done(&mut self, seq: usize, slot: usize) -> DoneInfo {
+        let Some(t) = self.tasks.get_mut(&seq) else {
+            // Untracked (e.g. a JobCtx rebuilt mid-flight): neutral.
+            return DoneInfo {
+                kind: DoneKind::Duplicate,
+                turnaround_s: 0.0,
+                slot_latency_s: 0.0,
+            };
+        };
+        let slot_latency_s = t.slot_latency_s(slot);
+        if t.done {
+            return DoneInfo {
+                kind: DoneKind::Duplicate,
+                turnaround_s: 0.0,
+                slot_latency_s,
+            };
+        }
+        t.done = true;
+        t.spec = None;
+        self.in_flight -= 1;
+        let kind = match t.clone {
+            Some((w, _)) if w == slot && slot != t.primary => {
+                self.won_by_clone += 1;
+                DoneKind::CloneWin
+            }
+            _ => DoneKind::Primary,
+        };
+        DoneInfo {
+            kind,
+            turnaround_s: t.primary_at.elapsed().as_secs_f64(),
+            slot_latency_s,
+        }
+    }
+
+    /// In-flight seqs older than `threshold_s` that have never been
+    /// cloned, oldest first. Cloned and completed tasks never appear,
+    /// so a straggler is offered for cloning at most once.
+    pub fn overdue(&self, threshold_s: f64) -> Vec<usize> {
+        let mut v: Vec<(usize, Duration)> = self
+            .tasks
+            .iter()
+            .filter(|(_, t)| !t.done && t.clone.is_none())
+            .filter_map(|(&seq, t)| {
+                let age = t.primary_at.elapsed();
+                (age.as_secs_f64() > threshold_s).then_some((seq, age))
+            })
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.into_iter().map(|(seq, _)| seq).collect()
+    }
+
+    /// The primary slot carrying `seq`, while it is still in flight
+    /// (clone targets must differ from it).
+    pub fn primary_of(&self, seq: usize) -> Option<usize> {
+        self.tasks.get(&seq).filter(|t| !t.done).map(|t| t.primary)
+    }
+
+    /// The spec of an in-flight task (what a clone re-dispatches).
+    pub fn spec_of(&self, seq: usize) -> Option<&TaskSpec> {
+        self.tasks.get(&seq).and_then(|t| t.spec.as_ref())
+    }
+
+    /// Record that `seq` was cloned to `slot` now. Returns false (and
+    /// records nothing) if the task is done or already cloned — the
+    /// exactly-once guarantee.
+    pub fn mark_cloned(&mut self, seq: usize, slot: usize) -> bool {
+        match self.tasks.get_mut(&seq) {
+            Some(t) if !t.done && t.clone.is_none() => {
+                t.clone = Some((slot, Instant::now()));
+                self.speculated += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Undo [`SpeculationState::mark_cloned`] for a clone that never
+    /// actually left the leader (its link died on send): the straggler
+    /// becomes cloneable again and the counter stays truthful.
+    pub fn cancel_clone(&mut self, seq: usize) {
+        if let Some(t) = self.tasks.get_mut(&seq) {
+            if !t.done && t.clone.take().is_some() {
+                self.speculated -= 1;
+            }
+        }
+    }
+
+    pub fn speculated(&self) -> u64 {
+        self.speculated
+    }
+
+    pub fn won_by_clone(&self) -> u64 {
+        self.won_by_clone
+    }
+
+    /// Tasks currently in flight (clones not double-counted).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Workload;
+    use crate::kneepoint::{pack, TaskSizing};
+    use crate::data::SampleMeta;
+
+    fn spec(seq: usize) -> TaskSpec {
+        let metas: Vec<SampleMeta> = (0..=seq as u64)
+            .map(|id| SampleMeta { id, bytes: 2304, units: 1 })
+            .collect();
+        pack(&metas, TaskSizing::Tiniest)
+            .into_iter()
+            .map(|t| TaskSpec::new(t, Workload::Eaglet, 42))
+            .nth(seq)
+            .expect("packed seq")
+    }
+
+    #[test]
+    fn histogram_quantile_is_monotone_and_order_free() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let xs = [0.001, 0.5, 0.002, 0.0001, 0.25, 0.004];
+        for &x in &xs {
+            a.observe(x);
+        }
+        for &x in xs.iter().rev() {
+            b.observe(x);
+        }
+        for pct in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(a.quantile(pct), b.quantile(pct));
+        }
+        assert!(a.quantile(99.0) >= a.quantile(50.0));
+        // bad observations are ignored, not propagated
+        a.observe(f64::NAN);
+        a.observe(f64::INFINITY);
+        a.observe(-1.0);
+        assert_eq!(a.count(), xs.len() as u64);
+    }
+
+    #[test]
+    fn tracker_predicts_and_ranks_slots() {
+        let t = ResponseTimeTracker::new();
+        assert_eq!(t.predicted_task_s(0), 0.0);
+        assert_eq!(t.relative_speed(0), 1.0);
+        for _ in 0..20 {
+            t.observe_task(0, 0.001);
+            t.observe_task(1, 0.050);
+        }
+        assert!(t.predicted_task_s(1) > t.predicted_task_s(0));
+        assert!((t.relative_speed(0) - 1.0).abs() < 1e-9);
+        assert!(t.relative_speed(1) < SLOW_SLOT_SPEED);
+        // an unknown slot predicts the cross-slot mean
+        let mean = t.predicted_task_s(7);
+        assert!(mean > 0.0 && mean.is_finite());
+        // rtt overrun makes a slot look slower
+        t.observe_rtt(0, 0.5);
+        assert!(t.predicted_task_s(0) > 0.4);
+    }
+
+    #[test]
+    fn straggler_threshold_needs_samples_and_has_a_floor() {
+        let t = ResponseTimeTracker::new();
+        for i in 0..MIN_STRAGGLER_SAMPLES - 1 {
+            t.observe_task(0, 1e-5 * (i + 1) as f64);
+        }
+        assert_eq!(t.straggler_threshold_s(95.0), None);
+        t.observe_task(0, 1e-5);
+        let th = t.straggler_threshold_s(95.0).unwrap();
+        assert!(th >= MIN_STRAGGLER_S, "floor violated: {th}");
+        assert!(th.is_finite());
+    }
+
+    #[test]
+    fn node_responses_mirror_and_rank() {
+        let t = ResponseTimeTracker::new();
+        assert!(t.slowest_node().is_none());
+        t.ingest_node_responses(&[Some(0.001), None, Some(0.2)]);
+        assert_eq!(t.node_response_s(0), Some(0.001));
+        assert_eq!(t.node_response_s(1), None);
+        assert_eq!(t.slowest_node(), Some((2, 0.2)));
+        // a poisoned estimate is dropped, never surfaced
+        t.ingest_node_responses(&[Some(f64::NAN)]);
+        assert_eq!(t.node_response_s(0), None);
+    }
+
+    #[test]
+    fn placement_score_is_sane() {
+        assert!(placement_score(1, 0.001) > placement_score(0, 0.001));
+        assert!(placement_score(0, 0.001) > placement_score(0, 0.1));
+        assert!(placement_score(0, f64::NAN).is_finite());
+        assert!(placement_score(3, f64::INFINITY).is_finite());
+    }
+
+    #[test]
+    fn speculation_clones_exactly_once_and_drops_dead_clones() {
+        let mut s = SpeculationState::new();
+        s.on_dispatch(&spec(0), 1, true);
+        std::thread::sleep(Duration::from_millis(2));
+        let over = s.overdue(1e-4);
+        assert_eq!(over, vec![0]);
+        assert_eq!(s.primary_of(0), Some(1));
+        assert!(s.mark_cloned(0, 0));
+        assert!(!s.mark_cloned(0, 2), "second clone must be refused");
+        assert_eq!(s.speculated(), 1);
+        // once cloned it is never offered again
+        assert!(s.overdue(0.0).is_empty());
+        // the clone wins; the primary's late copy is a dead clone
+        let win = s.on_done(0, 0);
+        assert_eq!(win.kind, DoneKind::CloneWin);
+        assert!(win.turnaround_s > 0.0);
+        // the winner's slot is charged only from its own dispatch, not
+        // for the time the task sat straggling at the primary
+        assert!(win.slot_latency_s <= win.turnaround_s);
+        assert_eq!(s.won_by_clone(), 1);
+        // the dead clone is dropped, but still reports how late the
+        // losing slot really was (primary-dispatch relative)
+        let dup = s.on_done(0, 1);
+        assert_eq!(dup.kind, DoneKind::Duplicate);
+        assert_eq!(dup.turnaround_s, 0.0);
+        assert!(
+            dup.slot_latency_s >= win.turnaround_s,
+            "loser latency {} < winner turnaround {}",
+            dup.slot_latency_s,
+            win.turnaround_s
+        );
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn primary_completion_beats_its_clone() {
+        let mut s = SpeculationState::new();
+        s.on_dispatch(&spec(3), 0, true);
+        assert!(s.mark_cloned(3, 1));
+        let first = s.on_done(3, 0);
+        assert_eq!(first.kind, DoneKind::Primary);
+        assert_eq!(s.won_by_clone(), 0);
+        assert_eq!(s.on_done(3, 1).kind, DoneKind::Duplicate);
+        // a completion for a task the state never saw is neutral
+        let ghost = s.on_done(99, 0);
+        assert_eq!(ghost.kind, DoneKind::Duplicate);
+        assert_eq!(ghost.slot_latency_s, 0.0);
+    }
+
+    #[test]
+    fn cancelled_clone_restores_the_attempt_and_the_counter() {
+        let mut s = SpeculationState::new();
+        s.on_dispatch(&spec(0), 1, true);
+        assert!(s.mark_cloned(0, 0));
+        assert_eq!(s.speculated(), 1);
+        // the dispatch failed: the straggler gets its attempt back
+        s.cancel_clone(0);
+        assert_eq!(s.speculated(), 0);
+        assert!(s.mark_cloned(0, 2), "cancelled clone must be retryable");
+        assert_eq!(s.speculated(), 1);
+        // after completion, cancel is a no-op
+        let _ = s.on_done(0, 2);
+        s.cancel_clone(0);
+        assert_eq!(s.speculated(), 1);
+    }
+
+    #[test]
+    fn inflight_target_collapses_for_slow_slots() {
+        let t = ResponseTimeTracker::new();
+        assert_eq!(inflight_target(None, 0, 4), 4);
+        assert_eq!(inflight_target(Some(&t), 0, 4), 4);
+        for _ in 0..20 {
+            t.observe_task(0, 0.001);
+            t.observe_task(1, 0.1);
+        }
+        assert_eq!(inflight_target(Some(&t), 1, 4), 1);
+        assert_eq!(inflight_target(Some(&t), 0, 4), 4);
+        assert_eq!(inflight_target(Some(&t), 0, 0), 1);
+    }
+}

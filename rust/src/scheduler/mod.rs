@@ -10,8 +10,21 @@
 //! idle workers steal from the longest queue once the pending pool
 //! drains (work stealing, refs [2],[39],[41]).
 
+//! Since PR 5, the **dynamic** layer (`dynamic`) closes the loop the
+//! thesis asks for — "schedules the tasks to worker nodes based on the
+//! availability and response times of the data nodes": a shared
+//! [`ResponseTimeTracker`] of leader-observed per-slot and per-data-
+//! node response times feeds refill sizing, dispatch-window collapse
+//! for slow slots, and quantile-thresholded speculative re-execution
+//! of straggling tiny tasks (first bit-identical result wins).
+
+pub mod dynamic;
 pub mod feedback;
 pub mod twostep;
 
+pub use dynamic::{
+    inflight_target, placement_score, DoneKind, LatencyHistogram,
+    ResponseTimeTracker, SpeculationState, SPECULATION_POLL,
+};
 pub use feedback::{batch_size, FeedbackStats};
 pub use twostep::{SchedConfig, SchedSnapshot, TaskSpec, TwoStepScheduler};

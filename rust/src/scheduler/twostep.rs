@@ -18,8 +18,9 @@
 //! untouched: affinity reorders refills, it never starves a worker.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use super::dynamic::ResponseTimeTracker;
 use super::feedback::{batch_size, FeedbackStats};
 use crate::cache::AffinityHook;
 use crate::data::block::block_key;
@@ -60,6 +61,17 @@ pub struct SchedConfig {
     pub steal: bool,
     /// EWMA smoothing for the feedback loop.
     pub alpha: f64,
+    /// Response-time-aware dynamic mode: attach a
+    /// [`ResponseTimeTracker`] so refill sizing and dispatch windows
+    /// react to leader-observed slot response times (not just worker
+    /// self-reports). Implied by `speculate`.
+    pub dynamic: bool,
+    /// Speculative re-execution: clone tasks that exceed the straggler
+    /// threshold to the best-scoring idle slot (first result wins).
+    pub speculate: bool,
+    /// Quantile (percent) of observed response times the straggler
+    /// threshold derives from (`--straggler-pct`).
+    pub straggler_pct: f64,
 }
 
 impl Default for SchedConfig {
@@ -70,7 +82,17 @@ impl Default for SchedConfig {
             max_queue: 64,
             steal: true,
             alpha: 0.3,
+            dynamic: false,
+            speculate: false,
+            straggler_pct: 95.0,
         }
+    }
+}
+
+impl SchedConfig {
+    /// Whether a response-time tracker should be attached at all.
+    pub fn wants_tracker(&self) -> bool {
+        self.dynamic || self.speculate
     }
 }
 
@@ -99,6 +121,11 @@ pub struct TwoStepScheduler {
     workers: usize,
     total: usize,
     affinity: Option<AffinityHook>,
+    /// Response-time tracker (dynamic mode): refill sizing consults
+    /// leader-observed slot response times alongside the job-local
+    /// feedback stats, so slowness only the leader can see still
+    /// shrinks a slot's refills.
+    tracker: Option<Arc<ResponseTimeTracker>>,
     inner: Mutex<Inner>,
 }
 
@@ -112,6 +139,13 @@ pub struct SchedSnapshot {
     pub steals: u64,
     pub refills: u64,
     pub affinity_routed: u64,
+    /// Tasks cloned to a second slot past the straggler threshold.
+    /// The scheduler itself reports 0 here; the owning `JobCtx` (which
+    /// runs the speculation loop) fills both counters into the
+    /// snapshot it publishes.
+    pub speculated: u64,
+    /// Speculated tasks whose clone finished before the original.
+    pub won_by_clone: u64,
 }
 
 impl TwoStepScheduler {
@@ -133,6 +167,7 @@ impl TwoStepScheduler {
                 affinity_routed: 0,
             }),
             affinity: None,
+            tracker: None,
             cfg,
         }
     }
@@ -142,6 +177,12 @@ impl TwoStepScheduler {
     /// already holds. Must be called before workers start claiming.
     pub fn set_affinity(&mut self, hook: AffinityHook) {
         self.affinity = Some(hook);
+    }
+
+    /// Attach the response-time tracker (dynamic mode). Must be called
+    /// before workers start claiming.
+    pub fn set_tracker(&mut self, tracker: Arc<ResponseTimeTracker>) {
+        self.tracker = Some(tracker);
     }
 
     pub fn total_tasks(&self) -> usize {
@@ -197,9 +238,16 @@ impl TwoStepScheduler {
         let avg = g.stats.exec_s.get();
         let base = batch_size(avg, self.cfg.lead_s, self.cfg.max_batch);
         // Busy-skip / hetero: scale the batch by the worker's relative
-        // speed so slow nodes hold less queued work to strand.
-        let scaled =
-            ((base as f64) * g.stats.relative_speed(worker)).round() as usize;
+        // speed so slow nodes hold less queued work to strand. In
+        // dynamic mode the leader-observed response-time view joins
+        // in: take the more pessimistic of the two, so slowness only
+        // the leader can see (node contention, link drag) still
+        // shrinks the slot's refill.
+        let mut speed = g.stats.relative_speed(worker);
+        if let Some(t) = &self.tracker {
+            speed = speed.min(t.relative_speed(worker));
+        }
+        let scaled = ((base as f64) * speed).round() as usize;
         // `clamp` panics when lo > hi: keep the refill headroom at ≥ 1
         // even if the queue is already at (or over) max_queue, e.g.
         // under a degenerate SchedConfig { max_queue: 0, .. }.
@@ -252,6 +300,12 @@ impl TwoStepScheduler {
             return g.pending.drain(..want).collect();
         }
         let window = g.pending.len().min(AFFINITY_WINDOW.max(want));
+        // Within one worker's refill the predicted completion time is
+        // a constant, so the full placement score would order exactly
+        // like the bare affinity count — the prediction term earns its
+        // keep where predictions differ across slots: refill *sizing*
+        // above, and speculative clone targeting
+        // ([`super::dynamic::placement_score`]).
         let mut scored: Vec<(usize, usize)> = (0..window)
             .map(|i| {
                 let spec = &g.pending[i];
@@ -312,6 +366,8 @@ impl TwoStepScheduler {
             steals: g.steals,
             refills: g.refills,
             affinity_routed: g.affinity_routed,
+            speculated: 0,
+            won_by_clone: 0,
         }
     }
 
@@ -453,6 +509,7 @@ mod tests {
                 max_queue: rng.range(4, 65) as usize,
                 steal: rng.below(2) == 0,
                 alpha: 0.3,
+                ..Default::default()
             };
             let s = TwoStepScheduler::new(specs(n), workers, cfg);
             let mut seen = std::collections::HashSet::new();
@@ -534,6 +591,39 @@ mod tests {
         assert_eq!(seqs, (0..103).collect::<Vec<_>>());
         assert_eq!(s.snapshot().pending, 0);
         assert_eq!(s.snapshot().queued, 0);
+    }
+
+    #[test]
+    fn tracker_shrinks_refills_for_leader_observed_slow_workers() {
+        let tracker = Arc::new(ResponseTimeTracker::new());
+        // the leader has watched slot 1 respond 100x slower than slot 0
+        for _ in 0..20 {
+            tracker.observe_task(0, 0.001);
+            tracker.observe_task(1, 0.1);
+        }
+        let cfg = SchedConfig {
+            lead_s: 10.0,
+            max_batch: 32,
+            dynamic: true,
+            ..Default::default()
+        };
+        let mut s = TwoStepScheduler::new(specs(400), 2, cfg);
+        s.set_tracker(tracker);
+        // fast worker: probe, fast self-report, full-size refill
+        let _ = s.next(0).unwrap();
+        s.report(0, 0.0, 0.001);
+        let _ = s.next(0).unwrap();
+        let after_fast = s.snapshot().assigned;
+        // slow worker self-reports *fast* (turbulence the worker can't
+        // see) — only the tracker knows better, and it must win
+        let _ = s.next(1).unwrap();
+        s.report(1, 0.0, 0.001);
+        let _ = s.next(1).unwrap();
+        let slow_delta = s.snapshot().assigned - after_fast;
+        assert!(
+            slow_delta * 2 < after_fast,
+            "slow slot refill not shrunk: fast={after_fast} slow_delta={slow_delta}"
+        );
     }
 
     #[test]

@@ -42,6 +42,11 @@ pub struct LoadConfig {
     pub cache_mb: usize,
     /// Cache-affinity dispatch across the warm pool.
     pub affinity: bool,
+    /// Speculative re-execution of straggling tasks (`--speculate`);
+    /// implies response-time-aware dynamic scheduling.
+    pub speculate: bool,
+    /// Straggler threshold quantile in percent (`--straggler-pct`).
+    pub straggler_pct: f64,
     /// Remote TCP map slots for the pool (`bts serve --listen
     /// --workers-remote`): accepted once at pool start, serving every
     /// tenant of the session.
@@ -60,6 +65,8 @@ impl Default for LoadConfig {
             infeasible_every: 5,
             cache_mb: 0,
             affinity: false,
+            speculate: false,
+            straggler_pct: 95.0,
             remote: None,
         }
     }
@@ -111,6 +118,12 @@ pub fn run_load(
     backend: Arc<Backend>,
     cfg: &LoadConfig,
 ) -> Result<LoadOutcome> {
+    let sched = crate::scheduler::SchedConfig {
+        dynamic: cfg.speculate,
+        speculate: cfg.speculate,
+        straggler_pct: cfg.straggler_pct,
+        ..Default::default()
+    };
     let svc = JobService::start(
         backend,
         ServeConfig {
@@ -122,6 +135,7 @@ pub fn run_load(
                 ..Default::default()
             },
             max_active: cfg.max_active,
+            sched,
             ..Default::default()
         },
     )?;
@@ -143,9 +157,12 @@ pub fn run_load(
             std::thread::sleep(Duration::from_secs_f64(gap.min(0.25)));
         }
     }
+    // Bounded waits: a wedged dispatcher surfaces as one failed job
+    // (naming the deadline) instead of hanging every caller of the
+    // harness — `bts serve`, the CI smoke example, and the benches.
     let results: Vec<JobResult> = handles
         .into_iter()
-        .map(|h| h.wait())
+        .map(|h| h.wait_timeout(crate::util::testutil::SERVE_JOB_DEADLINE))
         .collect::<Result<_>>()?;
     let report = svc.shutdown()?;
     Ok(LoadOutcome { report, results })

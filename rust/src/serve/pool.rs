@@ -34,9 +34,11 @@ use crate::data::ModelParams;
 use crate::dfs::{Dfs, LatencyModel};
 use crate::error::{Error, Result};
 use crate::exec::Backend;
+use crate::scheduler::ResponseTimeTracker;
 use crate::transport::{
     accept_links, teardown, BodyCfg, Down, RemoteWorkers, Up, WorkerLink,
 };
+use crate::util::testutil::Turbulence;
 
 /// Shape of the persistent pool backing a [`super::JobService`].
 #[derive(Debug, Clone)]
@@ -61,6 +63,9 @@ pub struct PoolConfig {
     pub cache_mb: usize,
     /// Cache-affinity dispatch across the warm pool.
     pub affinity: bool,
+    /// Deterministic latency/fault turbulence for the pool's in-proc
+    /// slots (scheduler/speculation tests).
+    pub turbulence: Option<Arc<Turbulence>>,
 }
 
 impl Default for PoolConfig {
@@ -74,6 +79,7 @@ impl Default for PoolConfig {
             prefetch_k: 8,
             cache_mb: 0,
             affinity: false,
+            turbulence: None,
         }
     }
 }
@@ -96,6 +102,11 @@ pub(crate) struct WorkerPool {
     pub(crate) spawned: usize,
     /// Shared affinity registry (None unless `PoolConfig::affinity`).
     pub(crate) affinity: Option<Arc<AffinityIndex>>,
+    /// Pool-lifetime response-time tracker: every tenant's `JobCtx`
+    /// shares it, so warm slots carry their observed speed (and remote
+    /// links their heartbeat drag) across jobs — a freshly admitted
+    /// job already knows which slot is the straggler.
+    pub(crate) tracker: Arc<ResponseTimeTracker>,
     links: Vec<WorkerLink>,
 }
 
@@ -121,6 +132,7 @@ impl WorkerPool {
             cfg.latency.clone(),
         );
         let layer = CacheLayer::build(&dfs, cfg.cache_mb, cfg.affinity);
+        let tracker = Arc::new(ResponseTimeTracker::new());
         let mut links = Vec::with_capacity(slots);
         for w in 0..cfg.workers {
             let body = BodyCfg {
@@ -131,6 +143,7 @@ impl WorkerPool {
                 // tenant.
                 survive_task_errors: true,
                 affinity: layer.affinity.clone(),
+                turbulence: cfg.turbulence.clone(),
             };
             links.push(WorkerLink::spawn_inproc(
                 body,
@@ -142,7 +155,13 @@ impl WorkerPool {
             )?);
         }
         if let Some(remote) = &cfg.remote {
-            match accept_links(remote, cfg.workers, &dfs, &up) {
+            match accept_links(
+                remote,
+                cfg.workers,
+                &dfs,
+                &up,
+                Some(tracker.clone()),
+            ) {
                 Ok(remote_links) => links.extend(remote_links),
                 Err(e) => {
                     teardown(links);
@@ -156,6 +175,7 @@ impl WorkerPool {
             workers: slots,
             spawned,
             affinity: layer.affinity,
+            tracker,
             links,
         })
     }

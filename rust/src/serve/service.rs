@@ -38,7 +38,7 @@ use crate::exec::{Backend, ExecConfig};
 use crate::kneepoint::pack;
 use crate::metrics::{JobReport, Timer};
 use crate::runtime::Exec as _;
-use crate::scheduler::{SchedConfig, TaskSpec};
+use crate::scheduler::{inflight_target, SchedConfig, TaskSpec, SPECULATION_POLL};
 use crate::slo::estimate_job_s;
 use crate::transport::{Down, TaskEnvelope, Up};
 use crate::util::json::{num, obj, s, Json};
@@ -116,6 +116,26 @@ impl JobHandle {
             Error::Scheduler("service dropped the job".into())
         })?
     }
+
+    /// Like [`JobHandle::wait`], but bounded: a dispatcher that has
+    /// wedged fails the caller with a message after `timeout` instead
+    /// of hanging it forever. Tests wait through this (with
+    /// [`crate::util::testutil::SERVE_JOB_DEADLINE`]) so a regression
+    /// surfaces as one failing assertion, not a stuck suite.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<JobResult> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(Error::Scheduler(format!(
+                    "job {} still unfinished after {timeout:?}",
+                    self.id
+                )))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Scheduler("service dropped the job".into()))
+            }
+        }
+    }
 }
 
 /// Service-level metrics over a full serve session, in the same flat
@@ -142,6 +162,11 @@ pub struct ServeReport {
     pub workers_spawned: usize,
     /// Tasks executed per worker over the whole session.
     pub worker_executed: Vec<u64>,
+    /// Tasks cloned past the straggler threshold, summed over every
+    /// completed job (speculative re-execution).
+    pub speculated: u64,
+    /// Speculated tasks whose clone beat the original.
+    pub won_by_clone: u64,
     pub dfs_bytes_served: u64,
     /// Shared block-cache counters over the whole session, when the
     /// pool ran with `cache_mb > 0` (hit rate, cross-tenant dedup).
@@ -185,6 +210,8 @@ impl ServeReport {
             ("workers", num(self.workers as f64)),
             ("workers_spawned", num(self.workers_spawned as f64)),
             ("worker_respawns", num(self.worker_respawns() as f64)),
+            ("speculated", num(self.speculated as f64)),
+            ("won_by_clone", num(self.won_by_clone as f64)),
             ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
             // disambiguates "cache off" from "cache on, zero hits" in
             // the cross-PR trajectory
@@ -231,7 +258,8 @@ impl ServeReport {
             "serve[{} workers, {} spawned] {} jobs in {:.2}s \
              ({} failed, {} rejected); {} tasks => {:.1} tasks/s; \
              queue wait p50 {:.1}ms p95 {:.1}ms; ttfp p50 {:.1}ms; \
-             e2e p50 {:.1}ms p95 {:.1}ms; dfs served {:.2} MB{}",
+             e2e p50 {:.1}ms p95 {:.1}ms; speculated {} (clone won {}); \
+             dfs served {:.2} MB{}",
             self.workers,
             self.workers_spawned,
             self.jobs_completed,
@@ -245,6 +273,8 @@ impl ServeReport {
             self.ttfp.p50 * 1e3,
             self.e2e.p50 * 1e3,
             self.e2e.p95 * 1e3,
+            self.speculated,
+            self.won_by_clone,
             self.dfs_bytes_served as f64 / 1048576.0,
             cache,
         )
@@ -340,10 +370,13 @@ impl JobService {
             inflight: vec![0; workers],
             dead: vec![false; workers],
             rr: 0,
+            clone_rr: 0,
             draining: false,
             jobs_admitted: 0,
             jobs_failed: 0,
             tasks_total: 0,
+            speculated: 0,
+            won_by_clone: 0,
             records: Vec::new(),
             completed_order: Vec::new(),
             first_submit: None,
@@ -469,10 +502,18 @@ struct Dispatcher {
     dead: Vec<bool>,
     /// Round-robin cursor over `active` (cross-job fairness).
     rr: usize,
+    /// Separate rotating cursor for clone dispatch: `rr` only moves
+    /// when regular tasks flow, which is exactly when clones don't —
+    /// without its own cursor one tenant would get first pick of the
+    /// scarce idle slots on every speculation tick.
+    clone_rr: usize,
     draining: bool,
     jobs_admitted: usize,
     jobs_failed: usize,
     tasks_total: u64,
+    /// Session-wide speculation counters (summed from finished jobs).
+    speculated: u64,
+    won_by_clone: u64,
     records: Vec<JobRecord>,
     completed_order: Vec<u64>,
     first_submit: Option<Instant>,
@@ -529,8 +570,9 @@ impl Dispatcher {
                 continue;
             }
             // 5. Route pool messages (timeout keeps the submission
-            //    poll responsive while jobs run).
-            match self.pool_rx.recv_timeout(Duration::from_millis(2)) {
+            //    poll responsive while jobs run — and doubles as the
+            //    straggler-age check cadence).
+            match self.pool_rx.recv_timeout(SPECULATION_POLL) {
                 Ok(m) => {
                     self.handle_up(m);
                     while let Ok(m) = self.pool_rx.try_recv() {
@@ -540,6 +582,11 @@ impl Dispatcher {
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
+            // 6. Speculative re-execution across every active tenant:
+            //    overdue in-flight tasks are cloned to idle slots
+            //    (first bit-identical result wins; dead clones are
+            //    dropped on arrival).
+            self.dispatch_clones();
         }
         // Orderly pool shutdown: every worker gets Shutdown, is joined,
         // and its lifetime task count is collected.
@@ -576,11 +623,59 @@ impl Dispatcher {
             workers,
             workers_spawned: spawned,
             worker_executed,
+            speculated: self.speculated,
+            won_by_clone: self.won_by_clone,
             dfs_bytes_served,
             cache,
             completed_order: self.completed_order,
         };
         let _ = report_tx.send(report);
+    }
+
+    /// Clone overdue in-flight tasks of every active job onto idle
+    /// live slots, round-robin across tenants so one job's stragglers
+    /// cannot monopolize the pool's spare capacity.
+    fn dispatch_clones(&mut self) {
+        if !self.sched_cfg.speculate || self.active.is_empty() {
+            return;
+        }
+        let workers = self.pool.workers;
+        let mut idle: Vec<usize> = (0..workers)
+            .filter(|&w| !self.dead[w] && self.inflight[w] == 0)
+            .collect();
+        if idle.is_empty() {
+            return;
+        }
+        let n = self.active.len();
+        let start = self.clone_rr % n;
+        self.clone_rr = (start + 1) % n;
+        for off in 0..n {
+            if idle.is_empty() {
+                return;
+            }
+            let i = (start + off) % n;
+            let (jid, jattempt, ns) = {
+                let a = &self.active[i];
+                (a.id, a.attempt, a.ns.clone())
+            };
+            let clones = self.active[i].ctx.clone_candidates(&idle);
+            for (w, spec) in clones {
+                let env = TaskEnvelope {
+                    job: jid,
+                    attempt: jattempt,
+                    ns: ns.clone(),
+                    spec,
+                    poison: false,
+                };
+                if self.pool.send(w, Down::Task(Box::new(env))) {
+                    self.inflight[w] += 1;
+                    idle.retain(|&x| x != w);
+                } else {
+                    self.on_worker_lost(w, "link closed mid-clone");
+                    return;
+                }
+            }
+        }
     }
 
     fn enqueue(&mut self, sub: Submission) {
@@ -699,6 +794,12 @@ impl Dispatcher {
             .affinity
             .as_ref()
             .map(|a| AffinityHook::new(a.clone(), ns.clone()));
+        // Dynamic mode: every tenant's JobCtx shares the pool-lifetime
+        // tracker, so cross-job slot knowledge survives job churn.
+        let tracker = self
+            .sched_cfg
+            .wants_tracker()
+            .then(|| self.pool.tracker.clone());
         match JobCtx::new(
             specs.clone(),
             self.pool.dfs.clone(),
@@ -708,6 +809,7 @@ impl Dispatcher {
             input_bytes,
             startup_s,
             hook,
+            tracker,
         ) {
             Ok(ctx) => {
                 self.active.push(ActiveJob {
@@ -744,8 +846,19 @@ impl Dispatcher {
 
     /// Fill `w`'s dispatch window, interleaving tasks from every
     /// active job round-robin — the cross-tenant multiplexing step.
+    /// In dynamic mode the window collapses to one task for slots the
+    /// pool tracker has watched straggle.
     fn top_up_worker(&mut self, w: usize) {
-        while !self.dead[w] && self.inflight[w] < self.target_inflight {
+        let target = if self.sched_cfg.wants_tracker() {
+            inflight_target(
+                Some(self.pool.tracker.as_ref()),
+                w,
+                self.target_inflight,
+            )
+        } else {
+            self.target_inflight
+        };
+        while !self.dead[w] && self.inflight[w] < target {
             let n = self.active.len();
             if n == 0 {
                 return;
@@ -907,6 +1020,10 @@ impl Dispatcher {
             .affinity
             .as_ref()
             .map(|a| AffinityHook::new(a.clone(), ns));
+        let tracker = self
+            .sched_cfg
+            .wants_tracker()
+            .then(|| self.pool.tracker.clone());
         match JobCtx::new(
             specs,
             dfs,
@@ -916,6 +1033,7 @@ impl Dispatcher {
             input_bytes,
             startup_s,
             hook,
+            tracker,
         ) {
             Ok(ctx) => self.active[i].ctx = ctx,
             Err(e) => {
@@ -930,6 +1048,15 @@ impl Dispatcher {
     /// answer the tenant.
     fn finish_job(&mut self, i: usize) {
         let a = self.retire_active(i);
+        // A speculatively-completed job can leave dead copies queued
+        // at (or executing on) pool slots — typically the slow slot
+        // the clones just rescued it from. Abort them so the slot
+        // doesn't burn its backlog fetching keys retire_active just
+        // removed; the executing copy can't be stopped, but its stale
+        // Done/TaskFailed is ignored (the job is no longer active).
+        if self.sched_cfg.speculate {
+            self.pool.abort(a.id, a.attempt);
+        }
         match a.ctx.finish(self.backend.as_ref()) {
             Ok(fin) => {
                 let e2e_s = a.submitted.elapsed().as_secs_f64();
@@ -940,6 +1067,8 @@ impl Dispatcher {
                     .map(|t| t.duration_since(a.submitted).as_secs_f64())
                     .unwrap_or(e2e_s);
                 self.tasks_total += fin.report.tasks as u64;
+                self.speculated += fin.sched.speculated;
+                self.won_by_clone += fin.sched.won_by_clone;
                 self.records.push(JobRecord { queue_wait_s, ttfp_s, e2e_s });
                 self.completed_order.push(a.id);
                 self.last_complete = Some(Instant::now());

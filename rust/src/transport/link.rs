@@ -34,8 +34,9 @@ use crate::error::{Error, Result};
 use crate::exec::Backend;
 use crate::net::protocol::{
     configure_stream, Message, ACCEPT_TIMEOUT, HANDSHAKE_TIMEOUT,
-    PUMP_IDLE_TIMEOUT,
+    PING_INTERVAL, PUMP_IDLE_TIMEOUT,
 };
+use crate::scheduler::ResponseTimeTracker;
 
 /// Remote map slots for a leader: a pre-bound listener plus how many
 /// workers to accept on it. Binding is the caller's job (so tests can
@@ -109,12 +110,17 @@ impl WorkerLink {
     }
 
     /// Adopt one accepted remote connection as map slot `worker`:
-    /// handshake (Hello → Welcome), then spawn the frame pump.
+    /// handshake (Hello → Welcome), then spawn the frame pump. When a
+    /// response-time `tracker` is supplied, the pump reports each
+    /// heartbeat's gap overrun into it — a congested or drifting link
+    /// makes its slot look slower to the dynamic scheduler even while
+    /// a long task keeps the control plane otherwise silent.
     pub fn adopt_tcp(
         stream: TcpStream,
         worker: usize,
         dfs: Arc<Dfs>,
         up: mpsc::Sender<Up>,
+        tracker: Option<Arc<ResponseTimeTracker>>,
     ) -> Result<WorkerLink> {
         configure_stream(&stream)?;
         let mut rd = BufReader::new(stream.try_clone()?);
@@ -134,7 +140,7 @@ impl WorkerLink {
         let pump_wr = wr.clone();
         let handle = thread::Builder::new()
             .name(format!("bts-link-pump-{worker}"))
-            .spawn(move || pump(worker, rd, dfs, pump_wr, up))
+            .spawn(move || pump(worker, rd, dfs, pump_wr, up, tracker))
             .map_err(|e| {
                 Error::Scheduler(format!("spawn link pump {worker}: {e}"))
             })?;
@@ -186,6 +192,7 @@ fn pump(
     dfs: Arc<Dfs>,
     wr: Arc<Mutex<BufWriter<TcpStream>>>,
     up: mpsc::Sender<Up>,
+    tracker: Option<Arc<ResponseTimeTracker>>,
 ) {
     let lost = |error: Error| {
         let _ = up.send(Up::Lost { worker, error });
@@ -193,6 +200,7 @@ fn pump(
         // Exited must not hang on a vanished worker.
         let _ = up.send(Up::Exited { worker, executed: 0, clean: false });
     };
+    let mut last_ping: Option<Instant> = None;
     loop {
         // Idle-bounded read: workers heartbeat ([`Message::Ping`])
         // even mid-task, so several missed intervals means a silently
@@ -205,7 +213,21 @@ fn pump(
                     return;
                 }
             }
-            Ok(Message::Ping) => {}
+            Ok(Message::Ping) => {
+                // Heartbeat-gap overrun → response-time tracker: a
+                // ping that arrives late past its interval is link (or
+                // peer) drag the slot's own timers never report.
+                if let Some(t) = &tracker {
+                    if let Some(prev) = last_ping {
+                        let overrun = prev
+                            .elapsed()
+                            .saturating_sub(PING_INTERVAL)
+                            .as_secs_f64();
+                        t.observe_rtt(worker, overrun);
+                    }
+                }
+                last_ping = Some(Instant::now());
+            }
             Ok(Message::DfsGet { key }) => {
                 let reply = match dfs.get_traced(&key) {
                     // The store's Arc rides into the frame write
@@ -278,12 +300,14 @@ pub fn teardown(links: Vec<WorkerLink>) {
 /// Accept `remote.count` workers, assigning slots `first_slot..`.
 /// Each accept + handshake is bounded ([`ACCEPT_TIMEOUT`] /
 /// [`HANDSHAKE_TIMEOUT`]), so a missing worker fails the run instead
-/// of wedging it.
+/// of wedging it. `tracker` (dynamic scheduling) receives each link's
+/// heartbeat-gap overruns.
 pub fn accept_links(
     remote: &RemoteWorkers,
     first_slot: usize,
     dfs: &Arc<Dfs>,
     up: &mpsc::Sender<Up>,
+    tracker: Option<Arc<ResponseTimeTracker>>,
 ) -> Result<Vec<WorkerLink>> {
     let mut links = Vec::with_capacity(remote.count);
     remote.listener.set_nonblocking(true)?;
@@ -316,6 +340,7 @@ pub fn accept_links(
             first_slot + i,
             dfs.clone(),
             up.clone(),
+            tracker.clone(),
         )?);
     }
     Ok(links)
@@ -350,7 +375,7 @@ mod tests {
         });
         let dfs = Dfs::new(1, 1, LatencyModel::none());
         let (up_tx, _up_rx) = mpsc::channel();
-        let err = accept_links(&rw, 0, &dfs, &up_tx).unwrap_err();
+        let err = accept_links(&rw, 0, &dfs, &up_tx, None).unwrap_err();
         assert!(matches!(err, Error::Protocol(_)), "{err}");
         client.join().unwrap();
     }
@@ -375,7 +400,7 @@ mod tests {
         });
         let dfs = Dfs::new(1, 1, LatencyModel::none());
         let (up_tx, up_rx) = mpsc::channel();
-        let links = accept_links(&rw, 4, &dfs, &up_tx).unwrap();
+        let links = accept_links(&rw, 4, &dfs, &up_tx, None).unwrap();
         client.join().unwrap();
         match up_rx.recv().unwrap() {
             Up::Lost { worker: 4, .. } => {}

@@ -59,6 +59,7 @@ use crate::error::{Error, Result};
 use crate::exec::Backend;
 use crate::metrics::Timer;
 use crate::scheduler::TaskSpec;
+use crate::util::testutil::Turbulence;
 
 pub use link::{accept_links, teardown, RemoteWorkers, WorkerLink};
 pub use remote::{run_remote_worker, RemoteWorkerOpts};
@@ -187,11 +188,18 @@ pub struct BodyCfg {
     /// In-proc only: remote workers cannot reach the leader's
     /// registry, so their fetches simply go unrecorded.
     pub affinity: Option<Arc<AffinityIndex>>,
+    /// Deterministic latency/fault injection for this slot
+    /// ([`crate::util::testutil::Turbulence`]): scheduler tests and
+    /// the straggler bench script "worker N is slow from task M"
+    /// without bespoke worker bodies. The injected delay lands
+    /// *outside* the task's own fetch/exec timers — externally-visible
+    /// slowness the response-time tracker must catch on its own.
+    pub turbulence: Option<Arc<Turbulence>>,
 }
 
 impl BodyCfg {
     /// Defaults for map slot `worker`: pool semantics, no injected
-    /// failure, no affinity recording.
+    /// failure, no affinity recording, no turbulence.
     pub fn new(worker: usize) -> BodyCfg {
         BodyCfg {
             worker,
@@ -199,6 +207,7 @@ impl BodyCfg {
             failure: None,
             survive_task_errors: true,
             affinity: None,
+            turbulence: None,
         }
     }
 }
@@ -280,6 +289,9 @@ pub fn worker_body<C: WorkerChannel>(
     }
     let mut queue: VecDeque<TaskEnvelope> = VecDeque::new();
     let mut executed = 0u64;
+    // Tasks popped for execution (turbulence indexes on this, not on
+    // `executed`, so an injected fault doesn't re-fire forever).
+    let mut seen = 0u64;
     let mut clean = false;
     'outer: loop {
         // Non-blocking drain: pick up everything the leader has queued
@@ -342,6 +354,31 @@ pub fn worker_body<C: WorkerChannel>(
             }
         }
         let Some(task) = queue.pop_front() else { continue };
+        // Scripted turbulence: impose the slot's deterministic extra
+        // latency (and/or fault) for its nth task before executing.
+        let nth = seen;
+        seen += 1;
+        if let Some(tb) = &cfg.turbulence {
+            let d = tb.disturbance(cfg.worker, nth);
+            if !d.delay.is_zero() {
+                std::thread::sleep(d.delay);
+            }
+            if d.fail {
+                let sent = chan.send(Up::TaskFailed {
+                    job: task.job,
+                    attempt: task.attempt,
+                    worker: cfg.worker,
+                    error: Error::Scheduler(format!(
+                        "turbulence fault on worker {} (task {})",
+                        cfg.worker, task.spec.task.seq
+                    )),
+                });
+                if !sent || !cfg.survive_task_errors {
+                    break;
+                }
+                continue;
+            }
+        }
         if task.poison {
             let sent = chan.send(Up::TaskFailed {
                 job: task.job,

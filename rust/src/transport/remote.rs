@@ -330,6 +330,7 @@ pub fn run_remote_worker(
         failure: None,
         survive_task_errors: true,
         affinity: None,
+        turbulence: None,
     };
     let params = backend.manifest().params.clone();
     Ok(super::worker_body(&cfg, &params, &backend, source, &mut chan))

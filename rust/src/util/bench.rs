@@ -59,6 +59,7 @@ impl Bench {
                 min: value,
                 p50: value,
                 p95: value,
+                p99: value,
                 max: value,
             },
             Some(unit.to_string()),

@@ -9,6 +9,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod testutil;
 
 /// Render an aligned text table (used by the figures harness).
 pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {

@@ -92,6 +92,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -117,6 +118,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         min: v[0],
         p50: q(0.50),
         p95: q(0.95),
+        p99: q(0.99),
         max: v[n - 1],
     }
 }
@@ -165,5 +167,7 @@ mod tests {
         assert_eq!(s.max, 100.0);
         assert!((s.p50 - 50.0).abs() <= 1.0);
         assert!((s.p95 - 95.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+        assert!(s.p99 >= s.p95);
     }
 }

@@ -1,0 +1,162 @@
+//! Deterministic test turbulence and shared test-timing policy.
+//!
+//! Two things live here, both consumed by integration tests and
+//! benches (and therefore compiled into the library rather than
+//! `rust/tests/common`, so `cargo bench` targets can reach them too):
+//!
+//! * [`Turbulence`] — a seedable, deterministic latency/fault injector
+//!   pluggable into in-proc worker links via
+//!   [`crate::transport::BodyCfg::turbulence`]. Scheduler tests script
+//!   scenarios like "worker 2 is 10× slow from its 40th task" with
+//!   millisecond-scale absolute delays, so straggler behaviour is
+//!   real wall-clock without real sleeps dominating CI time. The
+//!   injected delay happens *outside* the worker's own fetch/exec
+//!   timers on purpose: it models externally-visible slowness (node
+//!   contention, a sick NIC) that self-reported timings miss — exactly
+//!   what the response-time tracker exists to catch.
+//! * A shared wait bound — the serve-layer test/bench surfaces used
+//!   to wait unboundedly on job handles; [`SERVE_JOB_DEADLINE`] (via
+//!   `JobHandle::wait_timeout` and the load harness) replaces that
+//!   with one bounded policy, so a hung dispatcher fails fast with a
+//!   message instead of wedging the whole suite.
+
+use std::time::Duration;
+
+use crate::util::rng::fnv1a;
+
+/// Upper bound for any single serve-layer job (or whole small session)
+/// in tests and benches — generous for debug-build CI, but bounded.
+pub const SERVE_JOB_DEADLINE: Duration = Duration::from_secs(120);
+
+/// One scripted slowdown: from its `from_task`-th task onward (0-based,
+/// counted per worker), `worker` takes an extra `delay` per task.
+#[derive(Debug, Clone, Copy)]
+struct SlowRule {
+    worker: usize,
+    from_task: u64,
+    delay: Duration,
+}
+
+/// One scripted fault: `worker`'s `at_task`-th task fails.
+#[derive(Debug, Clone, Copy)]
+struct FaultRule {
+    worker: usize,
+    at_task: u64,
+}
+
+/// What the injector decided for one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Disturbance {
+    /// Extra wall-clock delay to impose before executing the task.
+    pub delay: Duration,
+    /// Report the task as failed instead of executing it.
+    pub fail: bool,
+}
+
+/// See module docs. Build one, wrap it in an `Arc`, and hand it to
+/// [`crate::exec::ExecConfig`] / [`crate::serve::PoolConfig`] (or a
+/// raw [`crate::transport::BodyCfg`]); every decision is a pure
+/// function of `(seed, worker, nth-task-on-that-worker)`, so reruns
+/// and recovery attempts see identical turbulence.
+#[derive(Debug, Default, Clone)]
+pub struct Turbulence {
+    seed: u64,
+    slow: Vec<SlowRule>,
+    faults: Vec<FaultRule>,
+    jitter_max: Duration,
+}
+
+impl Turbulence {
+    pub fn new(seed: u64) -> Turbulence {
+        Turbulence { seed, ..Default::default() }
+    }
+
+    /// From its `from_task`-th task onward, `worker` takes an extra
+    /// `delay` per task.
+    pub fn slow_from(
+        mut self,
+        worker: usize,
+        from_task: u64,
+        delay: Duration,
+    ) -> Turbulence {
+        self.slow.push(SlowRule { worker, from_task, delay });
+        self
+    }
+
+    /// `worker`'s `at_task`-th task (0-based) fails.
+    pub fn fail_at(mut self, worker: usize, at_task: u64) -> Turbulence {
+        self.faults.push(FaultRule { worker, at_task });
+        self
+    }
+
+    /// Add a seeded per-task jitter in `[0, max)` on top of every
+    /// scripted delay (deterministic in `(seed, worker, task)`).
+    pub fn with_jitter(mut self, max: Duration) -> Turbulence {
+        self.jitter_max = max;
+        self
+    }
+
+    /// The disturbance for `worker`'s `nth` task (0-based per-worker
+    /// execution count).
+    pub fn disturbance(&self, worker: usize, nth: u64) -> Disturbance {
+        let mut delay = Duration::ZERO;
+        for r in &self.slow {
+            if r.worker == worker && nth >= r.from_task {
+                delay += r.delay;
+            }
+        }
+        if !self.jitter_max.is_zero() && delay > Duration::ZERO {
+            let key = format!("{}:{worker}:{nth}", self.seed);
+            let h = fnv1a(key.as_bytes());
+            let frac = (h % 1024) as f64 / 1024.0;
+            delay += Duration::from_secs_f64(
+                self.jitter_max.as_secs_f64() * frac,
+            );
+        }
+        let fail = self
+            .faults
+            .iter()
+            .any(|f| f.worker == worker && f.at_task == nth);
+        Disturbance { delay, fail }
+    }
+
+    /// Whether any rule targets `worker` at all (cheap pre-check).
+    pub fn touches(&self, worker: usize) -> bool {
+        self.slow.iter().any(|r| r.worker == worker)
+            || self.faults.iter().any(|f| f.worker == worker)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn turbulence_is_deterministic_and_scoped() {
+        let t = Turbulence::new(7)
+            .slow_from(2, 40, Duration::from_millis(10))
+            .with_jitter(Duration::from_millis(1));
+        // untouched workers and early tasks are undisturbed
+        assert_eq!(
+            t.disturbance(0, 100),
+            Disturbance { delay: Duration::ZERO, fail: false }
+        );
+        assert_eq!(t.disturbance(2, 39).delay, Duration::ZERO);
+        // from task 40, worker 2 is slow — and identically so on replay
+        let a = t.disturbance(2, 40);
+        let b = t.disturbance(2, 40);
+        assert_eq!(a, b);
+        assert!(a.delay >= Duration::from_millis(10));
+        assert!(a.delay < Duration::from_millis(11));
+        assert!(t.touches(2) && !t.touches(0));
+    }
+
+    #[test]
+    fn faults_hit_exactly_their_task() {
+        let t = Turbulence::new(1).fail_at(1, 3);
+        assert!(!t.disturbance(1, 2).fail);
+        assert!(t.disturbance(1, 3).fail);
+        assert!(!t.disturbance(1, 4).fail);
+        assert!(!t.disturbance(0, 3).fail);
+    }
+}

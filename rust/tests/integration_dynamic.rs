@@ -1,0 +1,262 @@
+//! Response-time-aware dynamic scheduling + speculative re-execution,
+//! end to end (DESIGN.md §12): the statistic is bit-identical with
+//! speculation on vs off (both workloads, in-proc and loopback TCP),
+//! stragglers are cloned at most once and dead clones are cleaned up
+//! after the winner lands, and the injected-slow-worker tail actually
+//! improves. Native backend throughout — no artifacts needed.
+//!
+//! Slow workers are scripted with the deterministic
+//! [`Turbulence`] injector: the delay lands *outside* the worker's own
+//! timers (modelled node contention), so only the leader-observed
+//! response times can catch it — which is the point of the tracker.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use bts::data::{ModelParams, Workload};
+use bts::exec::{run_cluster, Backend, ExecConfig, ExecResult};
+use bts::kneepoint::TaskSizing;
+use bts::net::run_worker;
+use bts::scheduler::SchedConfig;
+use bts::serve::{JobRequest, JobService, PoolConfig, ServeConfig};
+use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
+use bts::util::testutil::{Turbulence, SERVE_JOB_DEADLINE};
+use bts::workloads::build_small;
+
+const SIZING: TaskSizing = TaskSizing::Tiniest;
+const SEED: u64 = 0xD1A;
+/// The scripted straggler delay: large enough to dwarf debug-build
+/// task times by an order of magnitude, so tail assertions have slack.
+const SLOW: Duration = Duration::from_millis(150);
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+fn sched(speculate: bool) -> SchedConfig {
+    SchedConfig {
+        dynamic: speculate,
+        speculate,
+        straggler_pct: 95.0,
+        ..Default::default()
+    }
+}
+
+/// Three local slots, slot 2 slowed by `SLOW` per task from its first
+/// task onward.
+fn turbulent_cfg(speculate: bool) -> ExecConfig {
+    ExecConfig {
+        sizing: SIZING,
+        workers: 3,
+        seed: SEED,
+        sched: sched(speculate),
+        turbulence: Some(Arc::new(Turbulence::new(SEED).slow_from(2, 0, SLOW))),
+        ..Default::default()
+    }
+}
+
+fn run(workload: Workload, samples: usize, cfg: &ExecConfig) -> ExecResult {
+    let ds = build_small(workload, &ModelParams::default(), samples);
+    run_cluster(ds.as_ref(), native(), cfg).unwrap()
+}
+
+#[test]
+fn speculation_is_bit_identical_on_both_workloads_in_proc() {
+    for workload in [Workload::Eaglet, Workload::NetflixHi] {
+        let off = run(workload, 30, &turbulent_cfg(false));
+        let on = run(workload, 30, &turbulent_cfg(true));
+        assert_eq!(
+            on.output, off.output,
+            "{workload:?}: speculation changed the statistic"
+        );
+        assert_eq!(on.report.tasks, off.report.tasks);
+        // the injected straggler was detected and cloned...
+        assert!(
+            on.sched.speculated >= 1,
+            "{workload:?}: no speculation despite a 150ms straggler: {:?}",
+            on.sched
+        );
+        // ...and a clone beat the stuck original at least once
+        assert!(
+            on.sched.won_by_clone >= 1,
+            "{workload:?}: clones never won: {:?}",
+            on.sched
+        );
+        assert!(on.sched.won_by_clone <= on.sched.speculated);
+        // baseline two-step never speculates
+        assert_eq!(off.sched.speculated, 0);
+        assert_eq!(off.sched.won_by_clone, 0);
+    }
+}
+
+#[test]
+fn stragglers_clone_at_most_once_and_dead_clones_are_reclaimed() {
+    let on = run(Workload::Eaglet, 30, &turbulent_cfg(true));
+    let tasks = on.report.tasks as u64;
+    // exactly-once speculation: every clone is one extra dispatch at
+    // most, so total executions can exceed the task count only by the
+    // number of speculated tasks (abandoned queued clones execute
+    // zero times — that is the dead-clone cleanup)
+    let executed: u64 = on.workers.iter().map(|w| w.executed).sum();
+    assert!(executed >= tasks, "{executed} executions < {tasks} tasks");
+    assert!(
+        executed - tasks <= on.sched.speculated,
+        "{} duplicate executions but only {} speculations — some task \
+         was cloned more than once",
+        executed - tasks,
+        on.sched.speculated
+    );
+    assert!(on.sched.speculated <= tasks);
+    // the early-release path still shuts every slot down cleanly (the
+    // straggling slot abandons its dead clones at the Shutdown marker
+    // rather than draining them)
+    assert!(
+        on.workers.iter().all(|w| w.clean_shutdown),
+        "unclean shutdown: {:?}",
+        on.workers
+    );
+}
+
+#[test]
+fn dynamic_speculation_beats_twostep_tail_under_a_slow_worker() {
+    let off = run(Workload::Eaglet, 30, &turbulent_cfg(false));
+    let on = run(Workload::Eaglet, 30, &turbulent_cfg(true));
+    assert_eq!(on.output, off.output);
+    let (off_p99, on_p99) =
+        (off.report.task_turnaround.p99, on.report.task_turnaround.p99);
+    // The baseline strands a dispatch window on the slow slot, so its
+    // p99 turnaround stacks several 150ms tasks; speculation caps a
+    // straggler's turnaround at roughly detection + one fast clone.
+    // The bench asserts the full 2x bar in release; here (debug, CI
+    // noise) we still demand a decisive improvement.
+    assert!(
+        on_p99 * 1.5 < off_p99,
+        "tail not improved: on p99 {:.1}ms vs off p99 {:.1}ms",
+        on_p99 * 1e3,
+        off_p99 * 1e3
+    );
+    assert!(
+        on.report.map_s < off.report.map_s,
+        "job wall not improved: on {:.1}ms vs off {:.1}ms",
+        on.report.map_s * 1e3,
+        off.report.map_s * 1e3
+    );
+}
+
+#[test]
+fn speculation_is_bit_identical_over_loopback_tcp() {
+    for workload in [Workload::Eaglet, Workload::NetflixLo] {
+        // In-proc, speculation off: the oracle.
+        let reference = run(
+            workload,
+            24,
+            &ExecConfig {
+                sizing: SIZING,
+                workers: 2,
+                seed: SEED,
+                ..Default::default()
+            },
+        );
+        // Mixed local+remote with dynamic scheduling + speculation on
+        // (the remote link's heartbeat feeds the same tracker).
+        let remote = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+        let addr = remote.addr();
+        let worker = thread::spawn({
+            let addr = addr.clone();
+            move || {
+                run_worker(&addr, native(), &RemoteWorkerOpts::default())
+                    .expect("worker session")
+            }
+        });
+        let ds = build_small(workload, &ModelParams::default(), 24);
+        let tcp = run_cluster(
+            ds.as_ref(),
+            native(),
+            &ExecConfig {
+                sizing: SIZING,
+                workers: 1,
+                remote: Some(remote),
+                seed: SEED,
+                sched: sched(true),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        worker.join().unwrap();
+        assert_eq!(
+            tcp.output, reference.output,
+            "{workload:?}: TCP + speculation diverged from the in-proc \
+             oracle"
+        );
+        assert!(
+            tcp.workers.iter().all(|w| w.clean_shutdown),
+            "{workload:?}: unclean shutdown: {:?}",
+            tcp.workers
+        );
+    }
+}
+
+#[test]
+fn serve_pool_speculates_and_keeps_tenants_bit_identical() {
+    // Solo oracles (no turbulence, no speculation).
+    let solo = |workload: Workload, seed: u64| {
+        run(
+            workload,
+            24,
+            &ExecConfig {
+                sizing: SIZING,
+                workers: 2,
+                seed,
+                ..Default::default()
+            },
+        )
+        .output
+    };
+    let svc = JobService::start(
+        native(),
+        ServeConfig {
+            pool: PoolConfig {
+                workers: 3,
+                turbulence: Some(Arc::new(
+                    Turbulence::new(SEED).slow_from(2, 0, SLOW),
+                )),
+                ..Default::default()
+            },
+            max_active: 2,
+            sched: sched(true),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let req = |workload: Workload, seed: u64| {
+        JobRequest::new(workload, 24)
+            .with_seed(seed)
+            .with_sizing(SIZING)
+    };
+    let ha = svc.submit(req(Workload::Eaglet, 41)).unwrap();
+    let hb = svc.submit(req(Workload::NetflixHi, 42)).unwrap();
+    let ra = ha.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
+    let rb = hb.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
+    assert_eq!(ra.output, solo(Workload::Eaglet, 41), "tenant A diverged");
+    assert_eq!(
+        rb.output,
+        solo(Workload::NetflixHi, 42),
+        "tenant B diverged"
+    );
+    let report = svc.shutdown().unwrap();
+    assert_eq!(report.jobs_completed, 2);
+    assert_eq!(report.jobs_failed, 0);
+    assert_eq!(report.worker_respawns(), 0);
+    // the slow pool slot forced at least one clone across the session,
+    // and per-job counters surfaced into the tenants' reports too
+    assert!(
+        report.speculated >= 1,
+        "pool never speculated despite a 150ms slot: {report:?}"
+    );
+    assert_eq!(
+        ra.report.speculated + rb.report.speculated,
+        report.speculated
+    );
+    assert!(report.won_by_clone <= report.speculated);
+}

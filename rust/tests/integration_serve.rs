@@ -1,6 +1,11 @@
 //! The serve layer end to end against the native backend: multi-tenant
 //! multiplexing with per-job determinism, warm-pool reuse, SLO-aware
 //! admission, and tenant-scoped recovery. No artifacts needed.
+//!
+//! Every job wait is bounded by the shared
+//! [`bts::util::testutil::SERVE_JOB_DEADLINE`] (the same constant the
+//! serve bench uses), so a wedged dispatcher fails one assertion fast
+//! instead of hanging the whole suite.
 
 use std::sync::Arc;
 
@@ -12,6 +17,7 @@ use bts::serve::{
     AdmissionPolicy, InjectedFault, JobRequest, JobService, PoolConfig,
     ServeConfig,
 };
+use bts::util::testutil::SERVE_JOB_DEADLINE;
 use bts::workloads::build_small;
 
 fn native() -> Arc<Backend> {
@@ -63,8 +69,10 @@ fn multiplexed_jobs_match_their_solo_runs_bit_for_bit() {
         .map(|r| svc.submit(r.clone()).unwrap())
         .collect();
     // all six run interleaved over the shared pool (3 at a time)
-    let results: Vec<_> =
-        handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    let results: Vec<_> = handles
+        .into_iter()
+        .map(|h| h.wait_timeout(SERVE_JOB_DEADLINE).unwrap())
+        .collect();
     for (req, res) in reqs.iter().zip(&results) {
         assert_eq!(
             res.output,
@@ -89,7 +97,7 @@ fn twenty_mixed_jobs_reuse_one_warm_pool() {
         .map(|i| svc.submit(mixed(i, 16)).unwrap())
         .collect();
     for h in handles {
-        h.wait().unwrap();
+        h.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
     }
     let report = svc.shutdown().unwrap();
     assert_eq!(report.jobs_completed, 20);
@@ -132,7 +140,7 @@ fn infeasible_deadlines_are_rejected_at_admission() {
     assert_eq!(svc.rejected(), 1);
     // a generous deadline passes the same gate and completes
     let h = svc.submit(mixed(0, 12).with_deadline(1e6)).unwrap();
-    let r = h.wait().unwrap();
+    let r = h.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
     assert_eq!(r.report.restarts, 0);
     let report = svc.shutdown().unwrap();
     assert_eq!(report.jobs_rejected, 1);
@@ -154,7 +162,7 @@ fn fifo_policy_never_rejects() {
     // under FIFO the same impossible deadline is admitted (and simply
     // missed) rather than rejected
     let h = svc.submit(mixed(0, 8).with_deadline(1e-6)).unwrap();
-    h.wait().unwrap();
+    h.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
     let report = svc.shutdown().unwrap();
     assert_eq!(report.jobs_rejected, 0);
     assert_eq!(report.jobs_completed, 1);
@@ -173,9 +181,9 @@ fn edf_promotes_urgent_jobs_first() {
         .submit(mixed(2, 12).with_seed(3).with_deadline(3_600.0))
         .unwrap();
     let (b_id, c_id) = (b.id, c.id);
-    a.wait().unwrap();
-    b.wait().unwrap();
-    c.wait().unwrap();
+    a.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
+    b.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
+    c.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
     let report = svc.shutdown().unwrap();
     let pos = |id: u64| {
         report
@@ -199,8 +207,8 @@ fn one_tenant_recovers_without_disturbing_the_other() {
     let clean = mixed(1, 20).with_seed(78);
     let hf = svc.submit(faulty.clone()).unwrap();
     let hc = svc.submit(clean.clone()).unwrap();
-    let rf = hf.wait().unwrap();
-    let rc = hc.wait().unwrap();
+    let rf = hf.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
+    let rc = hc.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
     // the faulty job restarted exactly once and still reproduced its
     // solo statistic; the clean one never restarted and matches too
     assert_eq!(rf.report.restarts, 1);
@@ -224,7 +232,7 @@ fn persistent_fault_exhausts_attempts_and_fails_only_that_job() {
     let neighbour = mixed(2, 12).with_seed(6);
     let hd = svc.submit(doomed).unwrap();
     let hn = svc.submit(neighbour.clone()).unwrap();
-    let err = hd.wait().unwrap_err();
+    let err = hd.wait_timeout(SERVE_JOB_DEADLINE).unwrap_err();
     match err {
         Error::JobFailed { attempts, cause } => {
             assert_eq!(attempts, 2);
@@ -233,9 +241,12 @@ fn persistent_fault_exhausts_attempts_and_fails_only_that_job() {
         other => panic!("expected JobFailed, got {other}"),
     }
     // the neighbour is untouched, and the service keeps serving
-    assert_eq!(hn.wait().unwrap().output, solo_output(&neighbour));
+    assert_eq!(
+        hn.wait_timeout(SERVE_JOB_DEADLINE).unwrap().output,
+        solo_output(&neighbour)
+    );
     let late = svc.submit(mixed(1, 10).with_seed(9)).unwrap();
-    assert!(late.wait().is_ok());
+    assert!(late.wait_timeout(SERVE_JOB_DEADLINE).is_ok());
     let report = svc.shutdown().unwrap();
     assert_eq!(report.jobs_failed, 1);
     assert_eq!(report.jobs_completed, 2);
@@ -248,7 +259,7 @@ fn serve_report_record_carries_the_percentiles() {
     for i in 0..4 {
         svc.submit(mixed(i, 10).with_seed(i as u64))
             .unwrap()
-            .wait()
+            .wait_timeout(SERVE_JOB_DEADLINE)
             .unwrap();
     }
     let report = svc.shutdown().unwrap();
@@ -266,6 +277,8 @@ fn serve_report_record_carries_the_percentiles() {
         "e2e_p95_s",
         "workers_spawned",
         "worker_respawns",
+        "speculated",
+        "won_by_clone",
     ] {
         assert!(
             j.req_f64(field).is_ok(),

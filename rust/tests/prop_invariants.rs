@@ -231,3 +231,132 @@ fn prop_netflix_stats_finite_under_any_seed() {
         Ok(())
     });
 }
+
+// ---- dynamic scheduler: tracker, placement score, quantile threshold ----
+
+use bts::scheduler::dynamic::MIN_STRAGGLER_S;
+use bts::scheduler::{placement_score, LatencyHistogram, ResponseTimeTracker};
+
+#[test]
+fn prop_placement_score_monotone_and_total() {
+    check("placement score monotone", 200, |rng: &mut Rng| {
+        let aff = rng.below(64) as usize;
+        let p = rng.f64() * 10.0;
+        let extra = rng.f64() * 10.0 + 1e-9;
+        let fast = placement_score(aff, p);
+        let slow = placement_score(aff, p + extra);
+        prop_assert!(
+            slow < fast,
+            "slower prediction gained score: {slow} vs {fast}"
+        );
+        let held = placement_score(aff + 1, p);
+        prop_assert!(
+            held > fast,
+            "an extra held block lowered the score: {held} vs {fast}"
+        );
+        // total on hostile inputs: never NaN, never poisoning a sort
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            prop_assert!(
+                placement_score(aff, bad).is_finite(),
+                "non-finite score for predicted={bad}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tracker_estimates_stay_finite_on_hostile_inputs() {
+    check("tracker sanitizes inputs", 100, |rng: &mut Rng| {
+        let t = ResponseTimeTracker::new();
+        for _ in 0..rng.below(80) {
+            let v = match rng.below(6) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => -1.0,
+                3 => 0.0,
+                4 => 1e300, // saturated but finite
+                _ => rng.f64() * 0.1,
+            };
+            t.observe_task(rng.below(8) as usize, v);
+            t.observe_rtt(rng.below(8) as usize, v);
+        }
+        for slot in 0..8 {
+            let p = t.predicted_task_s(slot);
+            prop_assert!(
+                p.is_finite() && p >= 0.0,
+                "slot {slot}: predicted {p} not a finite non-negative"
+            );
+            let r = t.relative_speed(slot);
+            prop_assert!(
+                r.is_finite() && r > 0.0 && r <= 1.0,
+                "slot {slot}: relative speed {r} out of (0, 1]"
+            );
+        }
+        // zero-sample and saturated cases both yield a sane threshold
+        // (or none at all), never NaN and never below the floor
+        if let Some(th) = t.straggler_threshold_s(rng.f64() * 100.0) {
+            prop_assert!(
+                th.is_finite() && th >= MIN_STRAGGLER_S,
+                "threshold {th} below floor or non-finite"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_straggler_quantile_stable_across_permuted_observations() {
+    check("quantile permutation stability", 100, |rng: &mut Rng| {
+        let n = rng.range(1, 200) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 0.5).collect();
+        let mut fwd = LatencyHistogram::new();
+        for &x in &xs {
+            fwd.observe(x);
+        }
+        // seeded Fisher–Yates: a genuinely different arrival order
+        let mut perm = xs.clone();
+        for i in (1..perm.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            perm.swap(i, j);
+        }
+        let mut shuf = LatencyHistogram::new();
+        for &x in &perm {
+            shuf.observe(x);
+        }
+        for pct in [10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            prop_assert!(
+                fwd.quantile(pct) == shuf.quantile(pct),
+                "quantile {pct} depends on arrival order"
+            );
+        }
+        prop_assert!(
+            fwd.quantile(99.0) >= fwd.quantile(50.0),
+            "quantile not monotone in pct"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slower_observations_never_raise_a_slots_score() {
+    check("slower slot never gains", 100, |rng: &mut Rng| {
+        let t = ResponseTimeTracker::new();
+        let base = rng.f64() * 0.01 + 1e-6;
+        for _ in 0..10 {
+            t.observe_task(0, base);
+            t.observe_task(1, base);
+        }
+        let before = placement_score(0, t.predicted_task_s(1));
+        // slot 1 turns strictly slower; its score must only fall
+        for _ in 0..5 {
+            t.observe_task(1, base * (2.0 + rng.f64() * 8.0));
+        }
+        let after = placement_score(0, t.predicted_task_s(1));
+        prop_assert!(
+            after < before,
+            "slower slot gained placement score: {after} vs {before}"
+        );
+        Ok(())
+    });
+}
