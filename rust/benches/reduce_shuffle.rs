@@ -1,0 +1,170 @@
+//! Executed shuffle + reduce: skew-aware vs hash partitioning under a
+//! Zipf-like (Pareto α=1.5) key-weight regime, plus a tiny end-to-end
+//! equivalence run of the executed stage.
+//!
+//!     cargo bench --bench reduce_shuffle
+//!
+//! Two batteries land in `results/BENCH_reduce.json`:
+//!
+//! 1. **Partitioner quality** — synthetic key populations drawn from
+//!    `Rng::pareto(1.5)` (the hot-key regime the thesis's Netflix
+//!    traces exhibit), partitioned by hash and by greedy least-loaded
+//!    skew placement. Recorded per configuration: imbalance factor
+//!    (max partition load over the balanced ideal) and the modeled
+//!    reduce tail (the max-loaded partition is the job's critical
+//!    path, so tail ∝ imbalance). Skew is never-worse by
+//!    construction; under heavy tails it should beat hash outright.
+//! 2. **Executed stage** — one small `run_cluster` job at r=4 (skew)
+//!    vs the r=1 map-side-only oracle: bit-identical output, measured
+//!    shuffle bytes, measured imbalance hash-vs-skew.
+
+use std::sync::Arc;
+
+use bts::data::{ModelParams, Workload};
+use bts::exec::{run_cluster, Backend, ExecConfig};
+use bts::kneepoint::TaskSizing;
+use bts::reduce::{build_plan, Partitioner};
+use bts::util::bench::Bench;
+use bts::util::json::{num, obj, s, Json};
+use bts::util::rng::Rng;
+use bts::workloads::build_small;
+
+const SEED: u64 = 0xB75;
+/// Pareto populations per (n_keys, partitions) configuration.
+const DRAWS: usize = 25;
+
+fn partitioner_battery(b: &mut Bench, records: &mut Vec<Json>) {
+    let configs: &[(usize, usize)] =
+        &[(12, 4), (32, 4), (64, 8), (256, 8)];
+    let mut rng = Rng::new(SEED);
+    for &(n_keys, partitions) in configs {
+        let mut hash_sum = 0.0;
+        let mut skew_sum = 0.0;
+        for _ in 0..DRAWS {
+            let weights: Vec<f64> =
+                (0..n_keys).map(|_| rng.pareto(1.5)).collect();
+            let hash =
+                build_plan(Partitioner::Hash, &weights, partitions);
+            let skew =
+                build_plan(Partitioner::Skew, &weights, partitions);
+            let hi = hash.imbalance_factor(&weights);
+            let si = skew.imbalance_factor(&weights);
+            assert!(
+                si <= hi + 1e-12,
+                "skew worse than hash on {n_keys} keys x \
+                 {partitions}: {si} > {hi}"
+            );
+            hash_sum += hi;
+            skew_sum += si;
+        }
+        let hash_imb = hash_sum / DRAWS as f64;
+        let skew_imb = skew_sum / DRAWS as f64;
+        let ratio = hash_imb / skew_imb.max(1e-12);
+        assert!(
+            ratio >= 1.0,
+            "mean skew imbalance must not exceed hash"
+        );
+        let name = format!("{n_keys}keys_{partitions}parts");
+        b.record(&format!("hash_imbalance_{name}"), hash_imb, "x");
+        b.record(&format!("skew_imbalance_{name}"), skew_imb, "x");
+        b.record(&format!("imbalance_ratio_{name}"), ratio, "x");
+        records.push(obj(vec![
+            ("mode", s("partitioner")),
+            ("n_keys", num(n_keys as f64)),
+            ("partitions", num(partitions as f64)),
+            ("hash_imbalance", num(hash_imb)),
+            ("skew_imbalance", num(skew_imb)),
+            // The max-loaded partition is the reduce phase's critical
+            // path, so the modeled job tail is the imbalance factor
+            // itself (1.0 = perfectly balanced tail).
+            ("hash_tail", num(hash_imb)),
+            ("skew_tail", num(skew_imb)),
+            ("tail_ratio", num(ratio)),
+        ]));
+    }
+}
+
+fn executed_battery(b: &mut Bench, records: &mut Vec<Json>) {
+    let params = ModelParams::default();
+    let backend = Arc::new(Backend::native(params.clone()));
+    let ds = build_small(Workload::NetflixLo, &params, 48);
+    let cfg = |r: usize, pt: Partitioner| ExecConfig {
+        sizing: TaskSizing::Kneepoint(16 * 1024),
+        workers: 3,
+        seed: SEED,
+        reduce_tasks: r,
+        partitioner: pt,
+        ..Default::default()
+    };
+    let oracle = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &cfg(1, Partitioner::Hash),
+    )
+    .expect("r=1 run");
+    let hash = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &cfg(4, Partitioner::Hash),
+    )
+    .expect("r=4 hash run");
+    let skew = run_cluster(
+        ds.as_ref(),
+        backend,
+        &cfg(4, Partitioner::Skew),
+    )
+    .expect("r=4 skew run");
+    assert_eq!(
+        hash.output, oracle.output,
+        "r=4 hash diverged from the map-side oracle"
+    );
+    assert_eq!(
+        skew.output, oracle.output,
+        "r=4 skew diverged from the map-side oracle"
+    );
+    assert!(
+        skew.report.shuffle_imbalance
+            <= hash.report.shuffle_imbalance + 1e-9,
+        "executed skew imbalance must not exceed hash"
+    );
+    b.record(
+        "executed_shuffle_mib",
+        skew.report.shuffle_bytes as f64 / 1048576.0,
+        "MiB",
+    );
+    b.record(
+        "executed_hash_imbalance",
+        hash.report.shuffle_imbalance,
+        "x",
+    );
+    b.record(
+        "executed_skew_imbalance",
+        skew.report.shuffle_imbalance,
+        "x",
+    );
+    for (mode, r) in [("hash", &hash), ("skew", &skew)] {
+        records.push(obj(vec![
+            ("mode", s("executed")),
+            ("partitioner", s(mode)),
+            ("reduce_tasks", num(r.report.reduce_tasks as f64)),
+            ("shuffle_bytes", num(r.report.shuffle_bytes as f64)),
+            ("shuffle_imbalance", num(r.report.shuffle_imbalance)),
+            (
+                "reduce_turnaround_p99_s",
+                num(r.report.reduce_turnaround.p99),
+            ),
+            ("total_s", num(r.report.total_s)),
+        ]));
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("reduce_shuffle");
+    let mut records = Vec::new();
+    partitioner_battery(&mut b, &mut records);
+    executed_battery(&mut b, &mut records);
+    let path = bts::util::bench_record::write("reduce", records)
+        .expect("write BENCH_reduce.json");
+    println!("wrote {path}");
+    b.finish();
+}

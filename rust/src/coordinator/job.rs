@@ -278,6 +278,12 @@ pub fn run_job(
         task_turnaround: metrics.exec_summary(),
         speculated: 0,
         won_by_clone: 0,
+        // the coordinator engine reduces on the leader only — no
+        // executed shuffle, so these stay at their r=1 identities
+        reduce_tasks: 1,
+        shuffle_bytes: 0,
+        shuffle_imbalance: 1.0,
+        reduce_turnaround: crate::util::stats::summarize(&[0.0]),
         prefetch_hit_rate: metrics.hit_rate(),
         // the coordinator engine predates the cache layer; its store
         // runs uncached, so the rate is definitionally zero

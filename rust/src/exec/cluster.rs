@@ -46,6 +46,7 @@
 //! latency and scheduler overhead (leader dispatch time + worker queue
 //! wait).
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -71,9 +72,10 @@ use crate::scheduler::{
     SchedConfig, SchedSnapshot, SpeculationState, TaskSpec,
     TwoStepScheduler, SPECULATION_POLL,
 };
+use crate::reduce::{PartitionPlan, Partitioner};
 use crate::transport::{
-    accept_links, teardown, BodyCfg, Down, RemoteWorkers, TaskDone,
-    TaskEnvelope, Up, WorkerLink,
+    accept_links, teardown, BodyCfg, Down, ReduceDone, ReduceEnvelope,
+    ReduceSpec, RemoteWorkers, TaskDone, TaskEnvelope, Up, WorkerLink,
 };
 use crate::util::json::{num, obj, Json};
 use crate::util::stats::{summarize, Summary};
@@ -121,6 +123,13 @@ pub struct ExecConfig {
     pub attempt: u32,
     /// Label for reports.
     pub platform: String,
+    /// Executed reduce partitions (`1` keeps the historical leader-side
+    /// seq-ordered reduce; `>1` shuffles map partials through the
+    /// replicated store and runs reducers on the worker pool).
+    pub reduce_tasks: usize,
+    /// Key → reduce-partition assignment policy (only consulted when
+    /// `reduce_tasks > 1`).
+    pub partitioner: Partitioner,
 }
 
 impl Default for ExecConfig {
@@ -143,6 +152,8 @@ impl Default for ExecConfig {
             turbulence: None,
             attempt: 1,
             platform: "bts-exec".into(),
+            reduce_tasks: 1,
+            partitioner: Partitioner::Hash,
         }
     }
 }
@@ -362,6 +373,33 @@ pub(crate) struct JobCtx {
     /// The affinity view the scheduler also holds — kept here so
     /// speculative clone targets can be scored by placement.
     affinity: Option<crate::cache::AffinityHook>,
+    /// This job's block-key namespace (`""` for solo runs) — shuffle
+    /// fragments are staged under it so concurrent jobs never collide.
+    ns: Arc<str>,
+    /// Reduce phase (only populated when `cfg.reduce_tasks > 1`): the
+    /// key → partition plan, built once every map partial is in.
+    rplan: Option<PartitionPlan>,
+    /// Reduce dispatches not yet claimed by a worker.
+    rqueue: VecDeque<ReduceSpec>,
+    /// Spec per partition, kept for speculative re-dispatch.
+    rspecs: Vec<Option<ReduceSpec>>,
+    /// Dispatch clock per partition (straggler detection).
+    rdispatch: Vec<Option<Timer>>,
+    /// First slot a partition was dispatched to (clones avoid it).
+    rprimary: Vec<Option<usize>>,
+    rcloned: Vec<bool>,
+    /// Collected reduce partials, indexed by partition — first
+    /// bit-identical result wins, duplicates are dropped.
+    reduced: Vec<Option<TaskPartial>>,
+    reduce_remaining: usize,
+    reduce_speculated: u64,
+    reduce_won_by_clone: u64,
+    /// Intermediate bytes staged into the store by the shuffle.
+    shuffle_bytes: u64,
+    /// Imbalance factor of the chosen plan (1.0 = perfect balance).
+    shuffle_imbalance: f64,
+    /// Dispatch → first-completion turnaround per reduce partition.
+    reduce_turnarounds: Vec<f64>,
 }
 
 impl JobCtx {
@@ -382,6 +420,7 @@ impl JobCtx {
         startup_s: f64,
         affinity: Option<crate::cache::AffinityHook>,
         tracker: Option<Arc<ResponseTimeTracker>>,
+        ns: Arc<str>,
     ) -> Result<JobCtx> {
         let Some(first) = specs.first() else {
             return Err(Error::Data("job packed zero tasks".into()));
@@ -424,6 +463,20 @@ impl JobCtx {
             spec: SpeculationState::new(),
             tracker,
             affinity,
+            ns,
+            rplan: None,
+            rqueue: VecDeque::new(),
+            rspecs: Vec::new(),
+            rdispatch: Vec::new(),
+            rprimary: Vec::new(),
+            rcloned: Vec::new(),
+            reduced: Vec::new(),
+            reduce_remaining: 0,
+            reduce_speculated: 0,
+            reduce_won_by_clone: 0,
+            shuffle_bytes: 0,
+            shuffle_imbalance: 1.0,
+            reduce_turnarounds: Vec::new(),
         })
     }
 
@@ -599,9 +652,191 @@ impl JobCtx {
         )
     }
 
-    /// All partials collected — the job can reduce.
+    /// Everything collected — map partials and, for `reduce_tasks > 1`,
+    /// every reduce partition — so the job can produce its output.
     pub(crate) fn is_complete(&self) -> bool {
         self.remaining == 0
+            && (self.cfg.reduce_tasks <= 1
+                || (self.rplan.is_some() && self.reduce_remaining == 0))
+    }
+
+    /// Whether the executed reduce phase still has (or will have) work
+    /// for the pool — drivers keep idle workers alive while this holds
+    /// instead of shutting them down at map-scheduler dryness.
+    pub(crate) fn expects_reduce_work(&self) -> bool {
+        self.cfg.reduce_tasks > 1 && !self.is_complete()
+    }
+
+    /// Once the last map partial lands (and `reduce_tasks > 1`): compute
+    /// observed key weights from the complete seq-ordered partial set,
+    /// build the partition plan, slice every partial into per-partition
+    /// fragments, and register them in the replicated store — shuffle
+    /// fetches then ride the exact same leader-proxied DFS path (and
+    /// block cache) as map-input blocks. Returns `true` when the
+    /// shuffle just started, so the driver can top every idle slot up
+    /// with reduce work. Idempotent; a no-op for `reduce_tasks <= 1`.
+    pub(crate) fn maybe_start_shuffle(
+        &mut self,
+        params: &ModelParams,
+    ) -> Result<bool> {
+        if self.cfg.reduce_tasks <= 1
+            || self.rplan.is_some()
+            || self.remaining != 0
+        {
+            return Ok(false);
+        }
+        let collected: Vec<TaskPartial> = self
+            .partials
+            .iter()
+            .map(|p| p.clone().expect("map phase complete"))
+            .collect();
+        let weights =
+            crate::reduce::key_weights(self.workload, params, &collected)?;
+        let plan = crate::reduce::build_plan(
+            self.cfg.partitioner,
+            &weights,
+            self.cfg.reduce_tasks,
+        );
+        self.shuffle_imbalance = plan.imbalance_factor(&weights);
+        let (blocks, staged) = crate::reduce::stage_fragments(
+            params,
+            &self.ns,
+            &plan,
+            &collected,
+        )?;
+        // Re-staging on a recovered attempt overwrites with identical
+        // bytes — the plan is a pure function of the seq-ordered
+        // partials, never of arrival order.
+        for (key, data) in blocks {
+            self.dfs.put(&key, data);
+        }
+        self.shuffle_bytes = staged;
+        let r = plan.partitions;
+        for partition in 0..r {
+            let spec = ReduceSpec {
+                partition,
+                partitions: r,
+                n_tasks: self.n_tasks as u32,
+                workload: self.workload,
+                keys: plan.keys_of(partition),
+            };
+            self.rspecs.push(Some(spec.clone()));
+            self.rqueue.push_back(spec);
+        }
+        self.rdispatch = vec![None; r as usize];
+        self.rprimary = vec![None; r as usize];
+        self.rcloned = vec![false; r as usize];
+        self.reduced = vec![None; r as usize];
+        self.reduce_remaining = r as usize;
+        self.rplan = Some(plan);
+        Ok(true)
+    }
+
+    /// Claim the next unclaimed reduce partition for `worker`, timing
+    /// the interaction like [`JobCtx::next`].
+    pub(crate) fn next_reduce(&mut self, worker: usize) -> Option<ReduceSpec> {
+        let t = Timer::start();
+        let next = self.rqueue.pop_front();
+        self.dispatch_s += t.secs();
+        self.dispatch_calls += 1;
+        if let Some(spec) = &next {
+            let p = spec.partition as usize;
+            self.rdispatch[p] = Some(Timer::start());
+            self.rprimary[p] = Some(worker);
+        }
+        next
+    }
+
+    /// Record one finished reduce partition. Returns `false` for a late
+    /// duplicate (the losing copy of a speculative pair), which is
+    /// dropped — results are keyed on partition id, never arrival
+    /// order, so whichever bit-identical copy lands first wins.
+    pub(crate) fn on_reduce_done(&mut self, d: ReduceDone) -> bool {
+        let p = d.partition as usize;
+        let latency = self.rdispatch[p].as_ref().map_or(0.0, |t| t.secs());
+        if let Some(t) = &self.tracker {
+            t.observe_task(d.worker, latency);
+        }
+        if p >= self.reduced.len() || self.reduced[p].is_some() {
+            return false;
+        }
+        if self.rcloned[p] && self.rprimary[p] != Some(d.worker) {
+            self.reduce_won_by_clone += 1;
+        }
+        self.reduced[p] = Some(d.partial);
+        self.reduce_remaining -= 1;
+        self.reduce_turnarounds.push(latency);
+        self.queue_waits.push(d.queue_wait_s);
+        true
+    }
+
+    /// Speculative re-execution for the reduce phase: overdue
+    /// partitions (dispatched, unfinished, never cloned) are re-sent to
+    /// the fastest-looking idle slot that is not the primary.
+    pub(crate) fn reduce_clone_candidates(
+        &mut self,
+        idle: &[usize],
+    ) -> Vec<(usize, ReduceSpec)> {
+        if !self.cfg.sched.speculate
+            || idle.is_empty()
+            || self.rplan.is_none()
+        {
+            return Vec::new();
+        }
+        let Some(tracker) = self.tracker.clone() else {
+            return Vec::new();
+        };
+        let Some(threshold) =
+            tracker.straggler_threshold_s(self.cfg.sched.straggler_pct)
+        else {
+            return Vec::new();
+        };
+        let mut free: Vec<usize> = idle.to_vec();
+        let mut clones = Vec::new();
+        for p in 0..self.reduced.len() {
+            if free.is_empty() {
+                break;
+            }
+            let overdue = self.reduced[p].is_none()
+                && !self.rcloned[p]
+                && self.rdispatch[p]
+                    .as_ref()
+                    .is_some_and(|t| t.secs() > threshold);
+            if !overdue {
+                continue;
+            }
+            let primary = self.rprimary[p];
+            let target = free
+                .iter()
+                .copied()
+                .filter(|&w| Some(w) != primary)
+                .min_by(|&a, &b| {
+                    tracker
+                        .predicted_task_s(a)
+                        .partial_cmp(&tracker.predicted_task_s(b))
+                        .expect("predictions are finite")
+                        .then(a.cmp(&b))
+                });
+            let Some(w) = target else { continue };
+            let Some(spec) = self.rspecs[p].clone() else {
+                continue;
+            };
+            self.rcloned[p] = true;
+            self.reduce_speculated += 1;
+            free.retain(|&x| x != w);
+            clones.push((w, spec));
+        }
+        clones
+    }
+
+    /// A reduce clone failed to leave the leader: make its partition
+    /// cloneable again.
+    pub(crate) fn cancel_reduce_clone(&mut self, partition: u32) {
+        let p = partition as usize;
+        if p < self.rcloned.len() {
+            self.rcloned[p] = false;
+            self.reduce_speculated = self.reduce_speculated.saturating_sub(1);
+        }
     }
 
     /// Seq-ordered reduce plus the job report. Errors if any task
@@ -620,8 +855,33 @@ impl JobCtx {
             .collect::<Result<_>>()?;
         let params = backend.manifest().params.clone();
         let reduce_t = Timer::start();
-        let output =
-            reduce_partials(backend, &params, self.workload, collected)?;
+        let output = match (&self.rplan, self.cfg.reduce_tasks) {
+            // Executed reduce: assemble each output lane from the
+            // partition that owns its key. Bit-identical to the r=1
+            // leader-side path by the zero-padded full-shape argument
+            // (DESIGN.md §13).
+            (Some(plan), r) if r > 1 => {
+                let reduced: Vec<TaskPartial> = self
+                    .reduced
+                    .into_iter()
+                    .enumerate()
+                    .map(|(p, out)| {
+                        out.ok_or_else(|| {
+                            Error::Scheduler(format!(
+                                "reduce partition {p} produced no partial"
+                            ))
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                crate::reduce::assemble_output(
+                    &params,
+                    self.workload,
+                    plan,
+                    &reduced,
+                )?
+            }
+            _ => reduce_partials(backend, &params, self.workload, collected)?,
+        };
         let reduce_s = reduce_t.secs();
         let (h, m) = (self.hits, self.misses);
         let report = JobReport {
@@ -649,8 +909,19 @@ impl JobCtx {
             } else {
                 &self.turnarounds
             }),
-            speculated: self.spec.speculated(),
-            won_by_clone: self.spec.won_by_clone(),
+            speculated: self.spec.speculated() + self.reduce_speculated,
+            won_by_clone: self.spec.won_by_clone()
+                + self.reduce_won_by_clone,
+            reduce_tasks: self.cfg.reduce_tasks.max(1),
+            shuffle_bytes: self.shuffle_bytes,
+            shuffle_imbalance: self.shuffle_imbalance,
+            reduce_turnaround: summarize(
+                if self.reduce_turnarounds.is_empty() {
+                    &[0.0]
+                } else {
+                    &self.reduce_turnarounds
+                },
+            ),
             prefetch_hit_rate: if h + m == 0 {
                 0.0
             } else {
@@ -677,8 +948,9 @@ impl JobCtx {
             }),
         };
         let mut sched = self.sched.snapshot();
-        sched.speculated = self.spec.speculated();
-        sched.won_by_clone = self.spec.won_by_clone();
+        sched.speculated = self.spec.speculated() + self.reduce_speculated;
+        sched.won_by_clone =
+            self.spec.won_by_clone() + self.reduce_won_by_clone;
         Ok(FinishedJob {
             output,
             report,
@@ -728,7 +1000,30 @@ fn top_up(
                 }
             }
             None => {
-                if inflight[w] == 0 && !speculate {
+                // Map scheduler dry for this slot: the reduce phase
+                // (if any) feeds it next — reducer slots refill
+                // through the same dispatch window as map slots.
+                if let Some(rspec) = ctx.next_reduce(w) {
+                    let env = ReduceEnvelope {
+                        job: 0,
+                        attempt,
+                        ns: ns.clone(),
+                        spec: rspec,
+                    };
+                    if links[w].send(Down::Reduce(Box::new(env))) {
+                        inflight[w] += 1;
+                        continue;
+                    }
+                    retired[w] = true;
+                    return;
+                }
+                // Keep idle slots alive while a reduce phase is still
+                // pending (its dispatches only exist once the last map
+                // partial lands) or speculation may still clone.
+                if inflight[w] == 0
+                    && !speculate
+                    && !ctx.expects_reduce_work()
+                {
                     let _ = links[w].send(Down::Shutdown);
                     retired[w] = true;
                 }
@@ -789,6 +1084,7 @@ pub fn run_cluster(
         .wants_tracker()
         .then(|| Arc::new(ResponseTimeTracker::new()));
     let speculate = cfg.sched.speculate;
+    let ns: Arc<str> = Arc::from("");
     let mut ctx = JobCtx::new(
         specs,
         dfs.clone(),
@@ -799,6 +1095,7 @@ pub fn run_cluster(
         startup_s,
         layer.hook("".into()),
         tracker.clone(),
+        ns.clone(),
     )?;
 
     // ---- map phase: stand up the links, lead the job --------------------
@@ -836,7 +1133,6 @@ pub fn run_cluster(
     }
     drop(up_tx);
 
-    let ns: Arc<str> = Arc::from("");
     let target = cfg.inflight.max(1);
     let mut inflight = vec![0usize; slots];
     let mut retired = vec![false; slots];
@@ -891,10 +1187,56 @@ pub fn run_cluster(
                 let w = done.worker;
                 inflight[w] = inflight[w].saturating_sub(1);
                 ctx.on_done(*done);
+                // The last map partial arms the shuffle: stage the
+                // fragments and refill *every* slot — idle workers are
+                // blocked waiting and must be handed reduce work.
+                let shuffle_started = match ctx.maybe_start_shuffle(&params)
+                {
+                    Ok(started) => started,
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                        shutdown_all(&links, &mut retired);
+                        continue;
+                    }
+                };
                 if ctx.is_complete() {
                     // The statistic is fully collected: release every
                     // worker now instead of waiting out stragglers
                     // that only dead clones still cover.
+                    shutdown_all(&links, &mut retired);
+                } else if shuffle_started {
+                    for slot in 0..slots {
+                        top_up(
+                            &mut ctx,
+                            &links,
+                            &mut retired,
+                            &mut inflight,
+                            slot,
+                            target,
+                            cfg.attempt,
+                            &ns,
+                            speculate,
+                        );
+                    }
+                } else {
+                    top_up(
+                        &mut ctx,
+                        &links,
+                        &mut retired,
+                        &mut inflight,
+                        w,
+                        target,
+                        cfg.attempt,
+                        &ns,
+                        speculate,
+                    );
+                }
+            }
+            Some(Up::ReduceDone { done, .. }) => {
+                let w = done.worker;
+                inflight[w] = inflight[w].saturating_sub(1);
+                ctx.on_reduce_done(*done);
+                if ctx.is_complete() {
                     shutdown_all(&links, &mut retired);
                 } else {
                     top_up(
@@ -955,6 +1297,26 @@ pub fn run_cluster(
                     // link and give the straggler its attempt back.
                     retired[w] = true;
                     ctx.cancel_clone(seq);
+                }
+            }
+            // Overdue reduce partitions get the same treatment: first
+            // bit-identical copy wins, the loser is dropped on arrival.
+            let idle: Vec<usize> = (0..slots)
+                .filter(|&w| !retired[w] && inflight[w] == 0)
+                .collect();
+            for (w, rspec) in ctx.reduce_clone_candidates(&idle) {
+                let partition = rspec.partition;
+                let env = ReduceEnvelope {
+                    job: 0,
+                    attempt: cfg.attempt,
+                    ns: ns.clone(),
+                    spec: rspec,
+                };
+                if links[w].send(Down::Reduce(Box::new(env))) {
+                    inflight[w] += 1;
+                } else {
+                    retired[w] = true;
+                    ctx.cancel_reduce_clone(partition);
                 }
             }
         }
@@ -1098,6 +1460,7 @@ mod tests {
             0.0,
             None,
             None,
+            "t/".into(),
         )
         .unwrap();
         let mut pf = Prefetcher::new(dfs, 4);
@@ -1125,6 +1488,94 @@ mod tests {
     }
 
     #[test]
+    fn job_ctx_two_phase_reduce_matches_leader_side_path() {
+        // Drive the same job through the historical r=1 leader-side
+        // reduce and the executed r=3 shuffle + reduce; the outputs
+        // must be bit-identical (the JobCtx half of the determinism
+        // contract — transports add nothing on top of this).
+        let backend = Backend::native(ModelParams::default());
+        let params = ModelParams::default();
+        let run = |reduce_tasks: usize| -> JobOutput {
+            let ds =
+                crate::workloads::build_small(Workload::NetflixLo, &params, 8);
+            let dfs = Dfs::new(2, 1, LatencyModel::none());
+            let (samples, bytes, _) = stage_dataset(ds.as_ref(), &dfs, "");
+            let specs: Vec<TaskSpec> =
+                crate::kneepoint::pack(ds.metas(), TaskSizing::Tiniest)
+                    .into_iter()
+                    .map(|t| TaskSpec::new(t, Workload::NetflixLo, 5))
+                    .collect();
+            let mut ctx = JobCtx::new(
+                specs,
+                dfs.clone(),
+                ExecConfig {
+                    adaptive_rf: false,
+                    reduce_tasks,
+                    partitioner: Partitioner::Skew,
+                    ..Default::default()
+                },
+                1,
+                samples,
+                bytes,
+                0.0,
+                None,
+                None,
+                "".into(),
+            )
+            .unwrap();
+            let mut pf = Prefetcher::new(dfs, 4);
+            while let Some(spec) = ctx.next(0) {
+                let (partial, fetch_s, exec_s) =
+                    run_task(&params, &backend, &mut pf, &spec, "").unwrap();
+                ctx.on_done(TaskDone {
+                    worker: 0,
+                    seq: spec.task.seq,
+                    partial,
+                    fetch_s,
+                    exec_s,
+                    queue_wait_s: 0.0,
+                    prefetch_hits: 0,
+                    prefetch_misses: 0,
+                    cache_hits: 0,
+                    cache_misses: 0,
+                });
+            }
+            let started = ctx.maybe_start_shuffle(&params).unwrap();
+            assert_eq!(started, reduce_tasks > 1);
+            while let Some(rspec) = ctx.next_reduce(0) {
+                assert!(!ctx.is_complete());
+                let (partial, fetch_s, exec_s, shuffle_bytes) =
+                    crate::transport::run_reduce_task(
+                        &params, &backend, &mut pf, &rspec, "",
+                    )
+                    .unwrap();
+                ctx.on_reduce_done(ReduceDone {
+                    worker: 0,
+                    partition: rspec.partition,
+                    partial,
+                    fetch_s,
+                    exec_s,
+                    queue_wait_s: 0.0,
+                    shuffle_bytes,
+                });
+            }
+            assert!(ctx.is_complete());
+            let fin = ctx.finish(&backend).unwrap();
+            assert_eq!(fin.report.reduce_tasks, reduce_tasks.max(1));
+            if reduce_tasks > 1 {
+                assert!(fin.report.shuffle_bytes > 0);
+                assert!(fin.report.shuffle_imbalance >= 1.0);
+            } else {
+                assert_eq!(fin.report.shuffle_bytes, 0);
+            }
+            fin.output
+        };
+        let solo = run(1);
+        let sharded = run(3);
+        assert_eq!(solo, sharded, "r=3 must equal r=1 bit for bit");
+    }
+
+    #[test]
     fn unfinished_job_refuses_to_reduce() {
         let params = ModelParams::default();
         let ds = crate::workloads::build_small(Workload::Eaglet, &params, 3);
@@ -1145,6 +1596,7 @@ mod tests {
             0.0,
             None,
             None,
+            "".into(),
         )
         .unwrap();
         let backend = Backend::native(params);

@@ -40,6 +40,7 @@ pub mod config;
 pub mod metrics;
 pub mod net;
 pub mod platforms;
+pub mod reduce;
 pub mod runtime;
 pub mod scheduler;
 pub mod serve;

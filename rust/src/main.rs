@@ -81,6 +81,7 @@ commands:
   exec [--workload W] [--workers N] [--samples N] [--sizing S]
        [--cache-mb MB] [--affinity on|off] [--speculate on|off]
        [--straggler-pct P] [--out-json FILE]
+       [--reduce-tasks R] [--partitioner hash|skew]
        [--listen ADDR --workers-remote N]
                                     run a job through the cluster
                                     executor (native kernels when
@@ -90,6 +91,9 @@ commands:
                                     --speculate clones straggling
                                     tasks past the p<P> response-time
                                     threshold (first result wins);
+                                    --reduce-tasks > 1 shuffles map
+                                    output into R executed reduce
+                                    partitions (bit-identical result);
                                     writes results/BENCH_exec.json
   serve [--jobs N] [--workers N] [--rate R] [--max-active N]
         [--samples N] [--seed S] [--cache-mb MB] [--affinity on|off]
@@ -99,6 +103,7 @@ commands:
                                     long-lived multi-tenant service;
                                     writes results/BENCH_serve.json
   submit [--workload W] [--samples N] [--workers N] [--deadline S]
+         [--reduce-tasks R] [--partitioner hash|skew]
                                     one job through the service
                                     (admission estimate + SLO gate)
   profile [--workload W]            offline task-size -> miss-rate profiling
@@ -130,6 +135,25 @@ fn on_off_flag(f: &Flags, name: &str, default: bool) -> Result<bool> {
             "bad {name} value {v}; want on|off"
         ))),
     }
+}
+
+/// `--reduce-tasks N` + `--partitioner hash|skew`, parsed strictly.
+/// N = 1 (the default) keeps the leader-side seq-ordered reduce; N > 1
+/// runs the executed shuffle + reduce phase on the worker pool.
+fn reduce_flags(f: &Flags) -> Result<(usize, bts::reduce::Partitioner)> {
+    let r: usize = f.num("--reduce-tasks", 1)?;
+    if r == 0 {
+        return Err(Error::Config(
+            "--reduce-tasks must be at least 1".into(),
+        ));
+    }
+    let p = match f.get("--partitioner") {
+        None => bts::reduce::Partitioner::Hash,
+        Some(v) => bts::reduce::Partitioner::parse(v).ok_or_else(|| {
+            Error::Config(format!("bad --partitioner {v}; want hash|skew"))
+        })?,
+    };
+    Ok((r, p))
 }
 
 /// `--speculate on|off` + `--straggler-pct P` (a percentile in
@@ -311,6 +335,8 @@ fn cmd_exec(args: &[String]) -> Result<()> {
             "--listen",
             "--workers-remote",
             "--out-json",
+            "--reduce-tasks",
+            "--partitioner",
         ],
     )?;
     let w = workload_flag(&f)?;
@@ -319,6 +345,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
     let cache_mb: usize = f.num("--cache-mb", 0)?;
     let affinity = on_off_flag(&f, "--affinity", false)?;
     let (speculate, straggler_pct) = speculation_flags(&f)?;
+    let (reduce_tasks, partitioner) = reduce_flags(&f)?;
     let remote = remote_flags(&f)?;
     let backend = Arc::new(Backend::auto());
     let params = backend.manifest().params.clone();
@@ -345,12 +372,15 @@ fn cmd_exec(args: &[String]) -> Result<()> {
             straggler_pct,
             ..Default::default()
         },
+        reduce_tasks,
+        partitioner,
         ..Default::default()
     };
     let ds = bts::workloads::build_small(w, &params, samples);
     println!(
         "backend {}  workload {}  {} samples  sizing {:?}  {} workers \
-         (+{} remote)  cache {} MB  affinity {}  speculate {}",
+         (+{} remote)  cache {} MB  affinity {}  speculate {}  \
+         reducers {} ({})",
         backend.name(),
         w.name(),
         samples,
@@ -364,6 +394,8 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         } else {
             "off".into()
         },
+        reduce_tasks,
+        partitioner.name(),
     );
     let r = run_cluster(ds.as_ref(), backend, &cfg)?;
     println!("{}", r.report.render());
@@ -467,13 +499,24 @@ fn cmd_submit(args: &[String]) -> Result<()> {
 
     let f = Flags::parse(
         args,
-        &["--workload", "--samples", "--workers", "--deadline", "--seed"],
+        &[
+            "--workload",
+            "--samples",
+            "--workers",
+            "--deadline",
+            "--seed",
+            "--reduce-tasks",
+            "--partitioner",
+        ],
     )?;
     let w = workload_flag(&f)?;
     let samples: usize = f.num("--samples", 40)?;
     let workers: usize = f.num("--workers", 4)?;
     let seed: u64 = f.num("--seed", 0xB75)?;
-    let mut req = JobRequest::new(w, samples).with_seed(seed);
+    let (reduce_tasks, partitioner) = reduce_flags(&f)?;
+    let mut req = JobRequest::new(w, samples)
+        .with_seed(seed)
+        .with_reduce(reduce_tasks, partitioner);
     if let Some(d) = f.get("--deadline") {
         req = req.with_deadline(d.parse().map_err(|_| {
             Error::Config(format!("bad --deadline value {d}"))
@@ -650,6 +693,25 @@ mod tests {
         let f = Flags::parse(&argv(&["--affinity=maybe"]), &["--affinity"])
             .unwrap();
         assert!(on_off_flag(&f, "--affinity", false).is_err());
+    }
+
+    #[test]
+    fn reduce_flags_parse_and_reject() {
+        use bts::reduce::Partitioner;
+        let names = &["--reduce-tasks", "--partitioner"][..];
+        let f = Flags::parse(&argv(&[]), names).unwrap();
+        assert_eq!(reduce_flags(&f).unwrap(), (1, Partitioner::Hash));
+        let f = Flags::parse(
+            &argv(&["--reduce-tasks=4", "--partitioner", "skew"]),
+            names,
+        )
+        .unwrap();
+        assert_eq!(reduce_flags(&f).unwrap(), (4, Partitioner::Skew));
+        let f =
+            Flags::parse(&argv(&["--reduce-tasks", "0"]), names).unwrap();
+        assert!(reduce_flags(&f).is_err(), "zero reducers must be rejected");
+        let f = Flags::parse(&argv(&["--partitioner=zipf"]), names).unwrap();
+        assert!(reduce_flags(&f).is_err(), "unknown partitioner rejected");
     }
 
     #[test]

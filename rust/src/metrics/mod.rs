@@ -66,6 +66,18 @@ pub struct JobReport {
     pub speculated: u64,
     /// Speculated tasks whose clone beat the original.
     pub won_by_clone: u64,
+    /// Executed reduce partitions (1 = the leader-side seq-ordered
+    /// reduce; >1 = a shuffled worker-pool reduce phase).
+    pub reduce_tasks: usize,
+    /// Intermediate bytes staged into the store by the shuffle
+    /// (0 when no shuffle ran).
+    pub shuffle_bytes: u64,
+    /// Max reduce-partition load over the balanced ideal (1.0 =
+    /// perfect balance; the partitioner quality signal).
+    pub shuffle_imbalance: f64,
+    /// Leader-observed reduce turnaround: dispatch → first completion
+    /// per partition (all-zero summary when no shuffle ran).
+    pub reduce_turnaround: Summary,
     pub prefetch_hit_rate: f64,
     /// Shared block-cache hit rate over this job's store fetches
     /// (0 when the executor ran without a cache attached).
@@ -105,6 +117,11 @@ impl JobReport {
             ("task_turnaround_p99_s", num(self.task_turnaround.p99)),
             ("speculated", num(self.speculated as f64)),
             ("won_by_clone", num(self.won_by_clone as f64)),
+            ("reduce_tasks", num(self.reduce_tasks as f64)),
+            ("shuffle_bytes", num(self.shuffle_bytes as f64)),
+            ("shuffle_imbalance", num(self.shuffle_imbalance)),
+            ("reduce_turnaround_p50_s", num(self.reduce_turnaround.p50)),
+            ("reduce_turnaround_p99_s", num(self.reduce_turnaround.p99)),
             ("prefetch_hit_rate", num(self.prefetch_hit_rate)),
             ("cache_hit_rate", num(self.cache_hit_rate)),
             ("final_rf", num(self.final_rf as f64)),
@@ -118,6 +135,7 @@ impl JobReport {
              (startup {:.3}s, map {:.3}s, reduce {:.3}s) => {:.2} MB/s; \
              task exec p50 {:.1}ms p95 {:.1}ms; fetch p50 {:.2}ms; \
              turnaround p99 {:.1}ms; speculated {} (clone won {}); \
+             reducers {} (shuffle {:.2} MB, imbalance {:.2}); \
              prefetch hits {:.0}%; cache hits {:.0}%; rf {}; restarts {}",
             self.workload,
             self.platform,
@@ -135,6 +153,9 @@ impl JobReport {
             self.task_turnaround.p99 * 1e3,
             self.speculated,
             self.won_by_clone,
+            self.reduce_tasks,
+            self.shuffle_bytes as f64 / (1024.0 * 1024.0),
+            self.shuffle_imbalance,
             self.prefetch_hit_rate * 100.0,
             self.cache_hit_rate * 100.0,
             self.final_rf,
@@ -207,6 +228,10 @@ mod tests {
             task_turnaround: summarize(&[0.02]),
             speculated: 2,
             won_by_clone: 1,
+            reduce_tasks: 4,
+            shuffle_bytes: 2048,
+            shuffle_imbalance: 1.25,
+            reduce_turnaround: summarize(&[0.03]),
             prefetch_hit_rate: 0.9,
             cache_hit_rate: 0.5,
             final_rf: 3,
@@ -222,6 +247,11 @@ mod tests {
         assert_eq!(j.req_usize("speculated").unwrap(), 2);
         assert_eq!(j.req_usize("won_by_clone").unwrap(), 1);
         assert!(j.req_f64("task_turnaround_p99_s").is_ok());
+        assert_eq!(j.req_usize("reduce_tasks").unwrap(), 4);
+        assert_eq!(j.req_usize("shuffle_bytes").unwrap(), 2048);
+        assert!((j.req_f64("shuffle_imbalance").unwrap() - 1.25).abs() < 1e-9);
+        assert!(j.req_f64("reduce_turnaround_p99_s").is_ok());
+        assert!(r.render().contains("reducers 4"));
     }
 
     #[test]

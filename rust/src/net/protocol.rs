@@ -26,7 +26,9 @@ use crate::data::Workload;
 use crate::error::{Error, Result};
 use crate::kneepoint::PackedTask;
 use crate::scheduler::TaskSpec;
-use crate::transport::{Down, TaskDone, TaskEnvelope, Up};
+use crate::transport::{
+    Down, ReduceDone, ReduceEnvelope, ReduceSpec, TaskDone, TaskEnvelope, Up,
+};
 
 /// First bytes of every frame; rejects cross-protocol connections.
 pub const MAGIC: [u8; 3] = *b"BTS";
@@ -145,6 +147,8 @@ const TAG_DFS_BLOCK: u8 = 12;
 const TAG_DFS_MISS: u8 = 13;
 const TAG_ERROR: u8 = 14;
 const TAG_PING: u8 = 15;
+const TAG_REDUCE_TASK: u8 = 16;
+const TAG_REDUCE_DONE: u8 = 17;
 
 /// Everything that crosses a leader↔worker socket. Control messages
 /// wrap the transport grammar verbatim; the leader-side pump and the
@@ -376,6 +380,20 @@ impl Message {
                     put_u64(&mut out, id);
                 }
             }
+            Message::Down(Down::Reduce(r)) => {
+                out.push(TAG_REDUCE_TASK);
+                put_u64(&mut out, r.job);
+                put_u32(&mut out, r.attempt);
+                put_str(&mut out, &r.ns);
+                put_u32(&mut out, r.spec.partition);
+                put_u32(&mut out, r.spec.partitions);
+                put_u32(&mut out, r.spec.n_tasks);
+                out.push(workload_tag(r.spec.workload));
+                put_u32(&mut out, r.spec.keys.len() as u32);
+                for &k in &r.spec.keys {
+                    put_u32(&mut out, k);
+                }
+            }
             Message::Down(Down::Abort { job, upto_attempt }) => {
                 out.push(TAG_ABORT);
                 put_u64(&mut out, *job);
@@ -396,6 +414,18 @@ impl Message {
                 put_u64(&mut out, done.prefetch_misses);
                 put_u64(&mut out, done.cache_hits);
                 put_u64(&mut out, done.cache_misses);
+            }
+            Message::Up(Up::ReduceDone { job, attempt, done }) => {
+                out.push(TAG_REDUCE_DONE);
+                put_u64(&mut out, *job);
+                put_u32(&mut out, *attempt);
+                put_u32(&mut out, done.worker as u32);
+                put_u32(&mut out, done.partition);
+                encode_partial(&mut out, &done.partial);
+                put_f64(&mut out, done.fetch_s);
+                put_f64(&mut out, done.exec_s);
+                put_f64(&mut out, done.queue_wait_s);
+                put_u64(&mut out, done.shuffle_bytes);
             }
             Message::Up(Up::TaskFailed { job, attempt, worker, error }) => {
                 out.push(TAG_TASK_FAILED);
@@ -478,6 +508,32 @@ impl Message {
                     poison,
                 })))
             }
+            TAG_REDUCE_TASK => {
+                let job = c.u64()?;
+                let attempt = c.u32()?;
+                let ns: Arc<str> = c.str()?.into();
+                let partition = c.u32()?;
+                let partitions = c.u32()?;
+                let n_tasks = c.u32()?;
+                let workload = workload_from(c.u8()?)?;
+                let n = c.count(4)?;
+                let mut keys = Vec::with_capacity(n);
+                for _ in 0..n {
+                    keys.push(c.u32()?);
+                }
+                Message::Down(Down::Reduce(Box::new(ReduceEnvelope {
+                    job,
+                    attempt,
+                    ns,
+                    spec: ReduceSpec {
+                        partition,
+                        partitions,
+                        n_tasks,
+                        workload,
+                        keys,
+                    },
+                })))
+            }
             TAG_ABORT => Message::Down(Down::Abort {
                 job: c.u64()?,
                 upto_attempt: c.u32()?,
@@ -502,6 +558,27 @@ impl Message {
                     cache_misses: c.u64()?,
                 };
                 Message::Up(Up::Done { job, attempt, done: Box::new(done) })
+            }
+            TAG_REDUCE_DONE => {
+                let job = c.u64()?;
+                let attempt = c.u32()?;
+                let worker = c.u32()? as usize;
+                let partition = c.u32()?;
+                let partial = decode_partial(&mut c)?;
+                let done = ReduceDone {
+                    worker,
+                    partition,
+                    partial,
+                    fetch_s: c.f64()?,
+                    exec_s: c.f64()?,
+                    queue_wait_s: c.f64()?,
+                    shuffle_bytes: c.u64()?,
+                };
+                Message::Up(Up::ReduceDone {
+                    job,
+                    attempt,
+                    done: Box::new(done),
+                })
             }
             TAG_TASK_FAILED => Message::Up(Up::TaskFailed {
                 job: c.u64()?,
@@ -649,6 +726,40 @@ mod tests {
         })
     }
 
+    fn sample_reduce_task(workload: Workload) -> Message {
+        Message::Down(Down::Reduce(Box::new(ReduceEnvelope {
+            job: 11,
+            attempt: 2,
+            ns: "j11/".into(),
+            spec: ReduceSpec {
+                partition: 1,
+                partitions: 4,
+                n_tasks: 6,
+                workload,
+                keys: vec![0, 3, 7, 11],
+            },
+        })))
+    }
+
+    fn sample_reduce_done() -> Message {
+        Message::Up(Up::ReduceDone {
+            job: 11,
+            attempt: 2,
+            done: Box::new(ReduceDone {
+                worker: 3,
+                partition: 1,
+                partial: TaskPartial::Eaglet {
+                    alod: vec![0.0, 2.5, -0.5],
+                    weight: 6.0,
+                },
+                fetch_s: 0.003,
+                exec_s: 0.009,
+                queue_wait_s: 0.0007,
+                shuffle_bytes: 4096,
+            }),
+        })
+    }
+
     #[test]
     fn all_messages_round_trip() {
         round_trip(&Message::Hello { worker: 3 });
@@ -660,6 +771,22 @@ mod tests {
             upto_attempt: 3,
         }));
         round_trip(&Message::Down(Down::Shutdown));
+        round_trip(&sample_reduce_task(Workload::Eaglet));
+        round_trip(&sample_reduce_task(Workload::NetflixLo));
+        round_trip(&sample_reduce_done());
+        round_trip(&Message::Up(Up::ReduceDone {
+            job: 0,
+            attempt: 1,
+            done: Box::new(ReduceDone {
+                worker: 0,
+                partition: 0,
+                partial: TaskPartial::Netflix { stats: vec![2.0; 36] },
+                fetch_s: 0.0,
+                exec_s: 0.0,
+                queue_wait_s: 0.0,
+                shuffle_bytes: 0,
+            }),
+        }));
         round_trip(&sample_done());
         round_trip(&Message::Up(Up::Done {
             job: 0,
@@ -785,6 +912,27 @@ mod tests {
         payload.extend_from_slice(&7u64.to_le_bytes()); // seed
         payload.extend_from_slice(&0x00FF_FFFFu32.to_le_bytes());
         assert!(Message::decode(&payload).is_err());
+        // Reduce-task frame with a lying key count.
+        let mut payload = vec![TAG_REDUCE_TASK];
+        payload.extend_from_slice(&1u64.to_le_bytes()); // job
+        payload.extend_from_slice(&1u32.to_le_bytes()); // attempt
+        put_str(&mut payload, "j1/"); // ns
+        payload.extend_from_slice(&0u32.to_le_bytes()); // partition
+        payload.extend_from_slice(&4u32.to_le_bytes()); // partitions
+        payload.extend_from_slice(&2u32.to_le_bytes()); // n_tasks
+        payload.push(0); // workload
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // key count lie
+        assert!(Message::decode(&payload).is_err());
+        // ReduceDone frame with a lying partial length.
+        let mut payload = vec![TAG_REDUCE_DONE];
+        payload.extend_from_slice(&1u64.to_le_bytes()); // job
+        payload.extend_from_slice(&1u32.to_le_bytes()); // attempt
+        payload.extend_from_slice(&0u32.to_le_bytes()); // worker
+        payload.extend_from_slice(&0u32.to_le_bytes()); // partition
+        payload.push(0); // eaglet partial
+        payload.extend_from_slice(&1.0f32.to_le_bytes()); // weight
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
+        assert!(Message::decode(&payload).is_err());
         // Done frame with a lying partial length.
         let mut payload = vec![TAG_DONE];
         payload.extend_from_slice(&1u64.to_le_bytes()); // job
@@ -813,6 +961,8 @@ mod tests {
         let goods: Vec<Vec<u8>> = vec![
             sample_task(Workload::Eaglet).encode(),
             sample_done().encode(),
+            sample_reduce_task(Workload::NetflixHi).encode(),
+            sample_reduce_done().encode(),
             Message::DfsGet { key: "j2/nfx_hi/41".into() }.encode(),
             Message::DfsPut { key: "a".into(), data: vec![7; 32] }
                 .encode(),

@@ -1,0 +1,856 @@
+//! Executed shuffle + reduce stage (thesis §4.2.4 / Fig 16, made real).
+//!
+//! Until PR 6 the platform executed only the map side; the reduce
+//! phase lived as the analytical model in [`crate::sim::reduce_model`].
+//! This module is the *execution* half of that pair: map partials are
+//! sliced into per-partition **fragments** keyed by the workload's
+//! reduce keys (EAGLET: LOD grid bins; Netflix: months), staged in the
+//! leader's replicated store under shuffle keys, and streaming-merged
+//! by reducer tasks that run in the same `worker_body` loop as map
+//! slots. `sim::reduce_model` stays the model counterpart —
+//! `rust/tests/integration_reduce.rs` cross-validates the two.
+//!
+//! **Skew-aware partitioning.** Netflix months under hot-key skew are
+//! exactly the shape the thesis worries about ("BashReduce does not
+//! support multiple reduce slots gracefully"): naive hash partitioning
+//! can serialize the hot keys on one reducer. [`Partitioner::Skew`]
+//! sorts keys by observed weight (descending, key id as tie-break) and
+//! places each on the least-loaded partition — the classic LPT greedy,
+//! the same move as SaSPartitioner's greedy balancer — with
+//! zero-weight (cold) keys falling back to the hash placement. Because
+//! LPT can occasionally lose to a lucky hash on tiny key sets, the
+//! skew plan is computed *alongside* the hash plan and the one with
+//! the lower imbalance factor wins (ties prefer greedy): "skew is
+//! never worse than hash" holds by construction, and
+//! `prop_invariants.rs` pins it.
+//!
+//! **Why determinism holds.** Both reduce kernels are elementwise per
+//! output lane: the EAGLET tree computes each grid lane's weighted sum
+//! independently (`wsum[lane] = Σ alod[lane]·w`, identical scalar
+//! weights in `seq` order), the Netflix tree is an elementwise sum.
+//! A reducer rebuilds zero-padded full-shape partials from its
+//! fragments (owned lanes filled, every other lane 0.0, the *real*
+//! scalar weights) and runs the *identical* `seq`-ordered,
+//! `reduce_fan`-chunked tree as the r=1 path — so its owned-lane
+//! values are bit-identical to the single-reducer result, which in
+//! turn is the map-side-only aggregation of PRs 1–5. Assembly reads
+//! each output lane from its owner partition only. Key→partition
+//! assignment is a pure function of the key id and the seq-ordered
+//! weight multiset, never of arrival order.
+
+use std::sync::Arc;
+
+use crate::coordinator::reduce::{
+    finalize_netflix, reduce_eaglet, reduce_netflix,
+};
+use crate::coordinator::{JobOutput, TaskPartial};
+use crate::data::{ModelParams, Workload};
+use crate::error::{Error, Result};
+use crate::runtime::Exec;
+use crate::util::rng::mix64;
+
+/// How reduce keys map onto reduce partitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Partitioner {
+    /// `mix64(key) % partitions` — the naive baseline.
+    #[default]
+    Hash,
+    /// Greedy least-loaded placement of weight-sorted keys (cold keys
+    /// hash), kept only if it beats the hash plan on imbalance.
+    Skew,
+}
+
+impl Partitioner {
+    pub fn parse(s: &str) -> Option<Partitioner> {
+        match s {
+            "hash" => Some(Partitioner::Hash),
+            "skew" => Some(Partitioner::Skew),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Partitioner::Hash => "hash",
+            Partitioner::Skew => "skew",
+        }
+    }
+}
+
+/// A total, disjoint assignment of the key space `0..assign.len()`
+/// onto `partitions` reduce partitions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionPlan {
+    pub partitions: u32,
+    /// `assign[key] = partition` for every key id.
+    pub assign: Vec<u32>,
+}
+
+impl PartitionPlan {
+    pub fn partition_of(&self, key: u32) -> u32 {
+        self.assign[key as usize]
+    }
+
+    /// Keys owned by `partition`, ascending.
+    pub fn keys_of(&self, partition: u32) -> Vec<u32> {
+        (0..self.assign.len() as u32)
+            .filter(|&k| self.assign[k as usize] == partition)
+            .collect()
+    }
+
+    /// Max partition load over the balanced-ideal load (`total /
+    /// partitions`); 1.0 is perfect balance, `partitions` is fully
+    /// serialized. Degenerate (zero-total) key sets report 1.0.
+    pub fn imbalance_factor(&self, weights: &[f64]) -> f64 {
+        let mut loads = vec![0.0f64; self.partitions as usize];
+        for (k, &w) in weights.iter().enumerate() {
+            loads[self.assign[k] as usize] += w.max(0.0);
+        }
+        let total: f64 = loads.iter().sum();
+        if total <= 0.0 || self.partitions == 0 {
+            return 1.0;
+        }
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        max / (total / self.partitions as f64)
+    }
+}
+
+fn hash_assign(n_keys: usize, partitions: u32) -> Vec<u32> {
+    (0..n_keys as u64)
+        .map(|k| (mix64(k) % partitions as u64) as u32)
+        .collect()
+}
+
+/// LPT greedy: keys sorted by (weight desc, key asc) each go to the
+/// least-loaded partition (lowest id on ties); cold (zero-weight)
+/// keys keep their hash placement so the fallback is deterministic.
+fn greedy_assign(weights: &[f64], partitions: u32) -> Vec<u32> {
+    let mut assign = hash_assign(weights.len(), partitions);
+    let mut hot: Vec<usize> = (0..weights.len())
+        .filter(|&k| weights[k] > 0.0)
+        .collect();
+    hot.sort_by(|&a, &b| {
+        weights[b]
+            .partial_cmp(&weights[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut loads = vec![0.0f64; partitions as usize];
+    for k in hot {
+        let (mut best, mut best_load) = (0usize, f64::INFINITY);
+        for (p, &load) in loads.iter().enumerate() {
+            if load < best_load {
+                best = p;
+                best_load = load;
+            }
+        }
+        assign[k] = best as u32;
+        loads[best] += weights[k];
+    }
+    assign
+}
+
+/// Build the key→partition plan. Total and disjoint by construction;
+/// a pure function of `(partitioner, weights, partitions)` — key
+/// arrival order never enters (weights are computed from the complete
+/// `seq`-ordered map-partial set).
+pub fn build_plan(
+    partitioner: Partitioner,
+    weights: &[f64],
+    partitions: usize,
+) -> PartitionPlan {
+    let partitions = partitions.max(1) as u32;
+    let hash = PartitionPlan {
+        partitions,
+        assign: hash_assign(weights.len(), partitions),
+    };
+    match partitioner {
+        Partitioner::Hash => hash,
+        Partitioner::Skew => {
+            let greedy = PartitionPlan {
+                partitions,
+                assign: greedy_assign(weights, partitions),
+            };
+            // never worse than hash, by construction
+            if greedy.imbalance_factor(weights)
+                <= hash.imbalance_factor(weights)
+            {
+                greedy
+            } else {
+                hash
+            }
+        }
+    }
+}
+
+/// Number of reduce keys for a workload: EAGLET reduces over the LOD
+/// grid, Netflix over months.
+pub fn n_keys(workload: Workload, p: &ModelParams) -> usize {
+    match workload {
+        Workload::Eaglet => p.grid,
+        Workload::NetflixHi | Workload::NetflixLo => p.months,
+    }
+}
+
+/// Output lanes per key (EAGLET: one ALOD value; Netflix: the
+/// `(sum, sumsq, count)` stat fields).
+pub fn lanes_per_key(workload: Workload, p: &ModelParams) -> usize {
+    match workload {
+        Workload::Eaglet => 1,
+        Workload::NetflixHi | Workload::NetflixLo => p.stat_fields,
+    }
+}
+
+/// Observed per-key weights from the complete map-partial set, in
+/// `seq` order. EAGLET grid bins carry uniform weight (every partial
+/// touches every bin — skew degenerates to balanced greedy, which is
+/// why EAGLET stays flat in Fig 16); Netflix months are weighted by
+/// their rating counts, the real hot-key signal.
+pub fn key_weights(
+    workload: Workload,
+    p: &ModelParams,
+    partials: &[TaskPartial],
+) -> Result<Vec<f64>> {
+    match workload {
+        Workload::Eaglet => Ok(vec![1.0; p.grid]),
+        Workload::NetflixHi | Workload::NetflixLo => {
+            let f = p.stat_fields;
+            let mut w = vec![0.0f64; p.months];
+            for t in partials {
+                let TaskPartial::Netflix { stats } = t else {
+                    return Err(Error::Scheduler(
+                        "netflix job produced a non-netflix partial"
+                            .into(),
+                    ));
+                };
+                if stats.len() != p.months * f {
+                    return Err(Error::Scheduler(format!(
+                        "partial stats {} != {}×{f}",
+                        stats.len(),
+                        p.months
+                    )));
+                }
+                for (m, wm) in w.iter_mut().enumerate() {
+                    *wm += stats[m * f + 2] as f64; // count lane
+                }
+            }
+            Ok(w)
+        }
+    }
+}
+
+/// Shuffle block key for `partition`'s slice of map task `seq`, under
+/// the job namespace. Disjoint from data-block keys (those never use
+/// the `sh:` prefix) and from other jobs (the `ns` prefix).
+pub fn shuffle_key(ns: &str, partition: u32, seq: usize) -> String {
+    format!("{ns}sh:{partition}:{seq}")
+}
+
+/// One partition's slice of one map partial, as staged in the store.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fragment {
+    /// Owned grid lanes of one EAGLET partial + its real chunk weight
+    /// (the scalar every reducer needs in full to keep the tree's
+    /// weight arithmetic bit-identical).
+    Eaglet { weight: f32, entries: Vec<(u32, f32)> },
+    /// Owned months of one Netflix partial (each with its
+    /// `stat_fields` lanes).
+    Netflix { entries: Vec<(u32, Vec<f32>)> },
+}
+
+const FRAG_EAGLET: u8 = 0;
+const FRAG_NETFLIX: u8 = 1;
+
+/// Encode a fragment: `tag u8`, `[weight f32]` (EAGLET), `n u32`,
+/// then `n × (key u32, lanes × f32)` — all little-endian. The codec
+/// is self-contained (the net-layer frame helpers are private to
+/// `net::protocol`); fragments travel inside `DfsBlock` payloads, so
+/// this is a storage format, not a new frame type.
+pub fn encode_fragment(frag: &Fragment) -> Vec<u8> {
+    let mut out = Vec::new();
+    match frag {
+        Fragment::Eaglet { weight, entries } => {
+            out.push(FRAG_EAGLET);
+            out.extend_from_slice(&weight.to_le_bytes());
+            out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+            for (k, v) in entries {
+                out.extend_from_slice(&k.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Fragment::Netflix { entries } => {
+            out.push(FRAG_NETFLIX);
+            out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+            for (k, lanes) in entries {
+                out.extend_from_slice(&k.to_le_bytes());
+                for v in lanes {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+struct FragCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FragCursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(Error::Protocol("truncated shuffle fragment".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Alloc guard: a declared count may not promise more bytes than
+    /// the fragment actually carries.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.buf.len() - self.pos {
+            return Err(Error::Protocol(format!(
+                "fragment count {n} exceeds remaining bytes"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Protocol(
+                "trailing bytes after shuffle fragment".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Decode a fragment. `stat_fields` sizes the Netflix lane vectors;
+/// counts are alloc-guarded against the bytes actually present and
+/// trailing bytes are an error — hostile store contents surface as
+/// `Error::Protocol`, never a panic or oversized allocation.
+pub fn decode_fragment(bytes: &[u8], stat_fields: usize) -> Result<Fragment> {
+    let mut c = FragCursor { buf: bytes, pos: 0 };
+    let frag = match c.u8()? {
+        FRAG_EAGLET => {
+            let weight = c.f32()?;
+            let n = c.count(8)?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                entries.push((c.u32()?, c.f32()?));
+            }
+            Fragment::Eaglet { weight, entries }
+        }
+        FRAG_NETFLIX => {
+            let lane_bytes = 4 + 4 * stat_fields.max(1);
+            let n = c.count(lane_bytes)?;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let k = c.u32()?;
+                let mut lanes = Vec::with_capacity(stat_fields);
+                for _ in 0..stat_fields {
+                    lanes.push(c.f32()?);
+                }
+                entries.push((k, lanes));
+            }
+            Fragment::Netflix { entries }
+        }
+        other => {
+            return Err(Error::Protocol(format!(
+                "unknown fragment tag {other}"
+            )))
+        }
+    };
+    c.done()?;
+    Ok(frag)
+}
+
+/// Slice one map partial down to `partition`'s owned keys (ascending
+/// key order — deterministic bytes for deterministic re-staging).
+pub fn slice_partial(
+    p: &ModelParams,
+    plan: &PartitionPlan,
+    partial: &TaskPartial,
+    partition: u32,
+) -> Result<Fragment> {
+    match partial {
+        TaskPartial::Eaglet { alod, weight } => {
+            if alod.len() != p.grid || plan.assign.len() != p.grid {
+                return Err(Error::Scheduler(format!(
+                    "eaglet partial/plan {} / {} != grid {}",
+                    alod.len(),
+                    plan.assign.len(),
+                    p.grid
+                )));
+            }
+            Ok(Fragment::Eaglet {
+                weight: *weight,
+                entries: plan
+                    .keys_of(partition)
+                    .into_iter()
+                    .map(|k| (k, alod[k as usize]))
+                    .collect(),
+            })
+        }
+        TaskPartial::Netflix { stats } => {
+            let f = p.stat_fields;
+            if stats.len() != p.months * f || plan.assign.len() != p.months
+            {
+                return Err(Error::Scheduler(format!(
+                    "netflix partial/plan {} / {} != {}×{f}",
+                    stats.len(),
+                    plan.assign.len(),
+                    p.months
+                )));
+            }
+            Ok(Fragment::Netflix {
+                entries: plan
+                    .keys_of(partition)
+                    .into_iter()
+                    .map(|k| {
+                        let k = k as usize;
+                        (k as u32, stats[k * f..(k + 1) * f].to_vec())
+                    })
+                    .collect(),
+            })
+        }
+    }
+}
+
+/// Reducer-side merge: rebuild zero-padded full-shape partials from
+/// this partition's fragments (one per map task, `seq` order) and run
+/// the *same* `seq`-ordered reduce tree the r=1 path runs. Owned
+/// lanes of the returned partial are bit-identical to the
+/// single-reducer result; unowned lanes are meaningless and must
+/// never be read (assembly doesn't).
+pub fn run_reduce(
+    rt: &impl Exec,
+    p: &ModelParams,
+    workload: Workload,
+    fragments: &[Fragment],
+) -> Result<TaskPartial> {
+    match workload {
+        Workload::Eaglet => {
+            let mut partials = Vec::with_capacity(fragments.len());
+            for frag in fragments {
+                let Fragment::Eaglet { weight, entries } = frag else {
+                    return Err(Error::Scheduler(
+                        "eaglet reduce got a netflix fragment".into(),
+                    ));
+                };
+                let mut alod = vec![0.0f32; p.grid];
+                for &(k, v) in entries {
+                    let lane = alod.get_mut(k as usize).ok_or_else(|| {
+                        Error::Protocol(format!(
+                            "fragment key {k} outside grid {}",
+                            p.grid
+                        ))
+                    })?;
+                    *lane = v;
+                }
+                partials.push((alod, *weight));
+            }
+            let (alod, weight) = reduce_eaglet(rt, p, partials)?;
+            Ok(TaskPartial::Eaglet { alod, weight })
+        }
+        Workload::NetflixHi | Workload::NetflixLo => {
+            let f = p.stat_fields;
+            let mut partials = Vec::with_capacity(fragments.len());
+            for frag in fragments {
+                let Fragment::Netflix { entries } = frag else {
+                    return Err(Error::Scheduler(
+                        "netflix reduce got an eaglet fragment".into(),
+                    ));
+                };
+                let mut stats = vec![0.0f32; p.months * f];
+                for (k, lanes) in entries {
+                    let k = *k as usize;
+                    if k >= p.months || lanes.len() != f {
+                        return Err(Error::Protocol(format!(
+                            "fragment month {k} / {} lanes outside \
+                             {}×{f}",
+                            lanes.len(),
+                            p.months
+                        )));
+                    }
+                    stats[k * f..(k + 1) * f].copy_from_slice(lanes);
+                }
+                partials.push(stats);
+            }
+            let stats = reduce_netflix(rt, p, partials)?;
+            Ok(TaskPartial::Netflix { stats })
+        }
+    }
+}
+
+/// Leader-side assembly: take each output lane from its owner
+/// partition's reduced partial (EAGLET's total weight comes from
+/// partition 0 — every partition computes the identical weight sum).
+pub fn assemble_output(
+    p: &ModelParams,
+    workload: Workload,
+    plan: &PartitionPlan,
+    reduced: &[TaskPartial],
+) -> Result<JobOutput> {
+    if reduced.len() != plan.partitions as usize {
+        return Err(Error::Scheduler(format!(
+            "assemble got {} reduce partials for {} partitions",
+            reduced.len(),
+            plan.partitions
+        )));
+    }
+    match workload {
+        Workload::Eaglet => {
+            let mut alod = vec![0.0f32; p.grid];
+            let mut weight = None;
+            for (k, lane) in alod.iter_mut().enumerate() {
+                let TaskPartial::Eaglet { alod: part, weight: w } =
+                    &reduced[plan.assign[k] as usize]
+                else {
+                    return Err(Error::Scheduler(
+                        "eaglet assembly over a netflix partial".into(),
+                    ));
+                };
+                *lane = part[k];
+                weight.get_or_insert(*w);
+            }
+            let TaskPartial::Eaglet { weight: w0, .. } = &reduced[0]
+            else {
+                return Err(Error::Scheduler(
+                    "eaglet assembly over a netflix partial".into(),
+                ));
+            };
+            Ok(JobOutput::Eaglet {
+                alod,
+                weight: weight.unwrap_or(*w0),
+            })
+        }
+        Workload::NetflixHi | Workload::NetflixLo => {
+            let f = p.stat_fields;
+            let mut stats = vec![0.0f32; p.months * f];
+            for m in 0..p.months {
+                let TaskPartial::Netflix { stats: part } =
+                    &reduced[plan.assign[m] as usize]
+                else {
+                    return Err(Error::Scheduler(
+                        "netflix assembly over an eaglet partial".into(),
+                    ));
+                };
+                stats[m * f..(m + 1) * f]
+                    .copy_from_slice(&part[m * f..(m + 1) * f]);
+            }
+            Ok(JobOutput::Netflix(finalize_netflix(p, &stats)?))
+        }
+    }
+}
+
+/// Convenience for the leader: slice + encode every map partial into
+/// its per-partition shuffle blocks, returning `(key, bytes)` pairs
+/// and the total staged shuffle bytes. Deterministic: re-staging on a
+/// recovery attempt overwrites each key with identical bytes.
+pub fn stage_fragments(
+    p: &ModelParams,
+    ns: &str,
+    plan: &PartitionPlan,
+    partials: &[TaskPartial],
+) -> Result<(Vec<(String, Arc<Vec<u8>>)>, u64)> {
+    let mut out = Vec::with_capacity(
+        partials.len() * plan.partitions as usize,
+    );
+    let mut bytes = 0u64;
+    for partition in 0..plan.partitions {
+        for (seq, partial) in partials.iter().enumerate() {
+            let frag = slice_partial(p, plan, partial, partition)?;
+            let enc = encode_fragment(&frag);
+            bytes += enc.len() as u64;
+            out.push((shuffle_key(ns, partition, seq), Arc::new(enc)));
+        }
+    }
+    Ok((out, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Backend;
+    use crate::util::rng::Rng;
+
+    fn params() -> ModelParams {
+        ModelParams::default()
+    }
+
+    #[test]
+    fn partitioner_parses_and_names() {
+        assert_eq!(Partitioner::parse("hash"), Some(Partitioner::Hash));
+        assert_eq!(Partitioner::parse("skew"), Some(Partitioner::Skew));
+        assert_eq!(Partitioner::parse("zipf"), None);
+        assert_eq!(Partitioner::Hash.name(), "hash");
+        assert_eq!(Partitioner::Skew.name(), "skew");
+    }
+
+    #[test]
+    fn plans_are_total_disjoint_covers() {
+        for partitioner in [Partitioner::Hash, Partitioner::Skew] {
+            let weights: Vec<f64> =
+                (0..13).map(|k| (k % 5) as f64).collect();
+            let plan = build_plan(partitioner, &weights, 4);
+            assert_eq!(plan.assign.len(), 13);
+            assert!(plan.assign.iter().all(|&p| p < 4));
+            // keys_of partitions the key space exactly once
+            let mut seen = vec![0u32; 13];
+            for part in 0..4 {
+                for k in plan.keys_of(part) {
+                    assert_eq!(plan.partition_of(k), part);
+                    seen[k as usize] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "not a disjoint cover");
+        }
+    }
+
+    #[test]
+    fn skew_never_loses_to_hash_and_beats_it_on_zipf() {
+        let mut rng = Rng::new(0x5EED);
+        let mut skew_won_strictly = 0;
+        for _ in 0..50 {
+            let n = rng.range(4, 40) as usize;
+            let r = rng.range(2, 7) as usize;
+            let weights: Vec<f64> =
+                (0..n).map(|_| rng.pareto(1.5)).collect();
+            let hash = build_plan(Partitioner::Hash, &weights, r);
+            let skew = build_plan(Partitioner::Skew, &weights, r);
+            let (hi, si) = (
+                hash.imbalance_factor(&weights),
+                skew.imbalance_factor(&weights),
+            );
+            assert!(si <= hi + 1e-12, "skew {si} worse than hash {hi}");
+            if si < hi - 1e-9 {
+                skew_won_strictly += 1;
+            }
+        }
+        assert!(
+            skew_won_strictly > 25,
+            "skew strictly beat hash only {skew_won_strictly}/50 times \
+             under Zipf-like weights"
+        );
+    }
+
+    #[test]
+    fn imbalance_factor_degenerate_cases() {
+        let plan = build_plan(Partitioner::Hash, &[0.0; 6], 3);
+        assert_eq!(plan.imbalance_factor(&[0.0; 6]), 1.0);
+        // one partition gets everything → factor = partitions
+        let plan = PartitionPlan { partitions: 3, assign: vec![0, 0] };
+        assert!((plan.imbalance_factor(&[1.0, 2.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fragment_codec_round_trips() {
+        let p = params();
+        let frags = [
+            Fragment::Eaglet {
+                weight: 7.5,
+                entries: vec![(0, 1.25), (31, -2.5)],
+            },
+            Fragment::Eaglet { weight: 1.0, entries: vec![] },
+            Fragment::Netflix {
+                entries: vec![
+                    (3, vec![1.0, 2.0, 3.0]),
+                    (11, vec![-1.0, 0.5, 9.0]),
+                ],
+            },
+            Fragment::Netflix { entries: vec![] },
+        ];
+        for f in &frags {
+            let enc = encode_fragment(f);
+            let back = decode_fragment(&enc, p.stat_fields).unwrap();
+            assert_eq!(&back, f, "codec changed the fragment");
+        }
+    }
+
+    #[test]
+    fn fragment_decode_rejects_hostile_bytes() {
+        let p = params();
+        // truncated, bad tag, lying count, trailing bytes
+        assert!(decode_fragment(&[], p.stat_fields).is_err());
+        assert!(decode_fragment(&[9, 0, 0, 0, 0], p.stat_fields).is_err());
+        let mut lying = vec![FRAG_EAGLET];
+        lying.extend_from_slice(&1.0f32.to_le_bytes());
+        lying.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_fragment(&lying, p.stat_fields).is_err());
+        let mut trailing =
+            encode_fragment(&Fragment::Eaglet { weight: 1.0, entries: vec![] });
+        trailing.push(0);
+        assert!(decode_fragment(&trailing, p.stat_fields).is_err());
+        // never panics on garbage
+        let mut rng = Rng::new(0xFEED);
+        for _ in 0..2000 {
+            let n = rng.below(64) as usize;
+            let bytes: Vec<u8> =
+                (0..n).map(|_| rng.below(256) as u8).collect();
+            let _ = decode_fragment(&bytes, p.stat_fields);
+        }
+    }
+
+    #[test]
+    fn shuffle_keys_are_namespace_and_partition_disjoint() {
+        assert_eq!(shuffle_key("j1/", 2, 7), "j1/sh:2:7");
+        assert_ne!(shuffle_key("j1/", 0, 1), shuffle_key("j2/", 0, 1));
+        assert_ne!(shuffle_key("", 0, 1), shuffle_key("", 1, 0));
+    }
+
+    /// The determinism theorem, in miniature: slicing synthetic map
+    /// partials by any plan, reducing each partition with the same
+    /// tree, and assembling owned lanes reproduces the r=1 reduce
+    /// bit for bit — for both workloads and both partitioners.
+    #[test]
+    fn sliced_reduce_matches_single_reducer_bit_for_bit() {
+        let p = params();
+        let backend = Backend::native(p.clone());
+        let mut rng = Rng::new(0xB75);
+
+        // EAGLET: 9 partials with varied weights
+        let partials: Vec<TaskPartial> = (0..9)
+            .map(|_| TaskPartial::Eaglet {
+                alod: (0..p.grid).map(|_| rng.f32() * 4.0).collect(),
+                weight: rng.range(1, 6) as f32,
+            })
+            .collect();
+        let single =
+            run_reduce_all(&backend, &p, Workload::Eaglet, &partials, 1);
+        for partitioner in [Partitioner::Hash, Partitioner::Skew] {
+            for r in [2usize, 4] {
+                let got = run_reduce_all_with(
+                    &backend,
+                    &p,
+                    Workload::Eaglet,
+                    &partials,
+                    r,
+                    partitioner,
+                );
+                assert_eq!(got, single, "eaglet r={r} {partitioner:?}");
+            }
+        }
+
+        // Netflix: 7 partials with skewed month counts
+        let f = p.stat_fields;
+        let partials: Vec<TaskPartial> = (0..7)
+            .map(|_| {
+                let mut stats = vec![0.0f32; p.months * f];
+                for m in 0..p.months {
+                    let n = if m == 0 {
+                        rng.range(50, 90)
+                    } else {
+                        rng.below(5)
+                    } as f32;
+                    stats[m * f] = n * 3.0;
+                    stats[m * f + 1] = n * 10.0;
+                    stats[m * f + 2] = n;
+                }
+                TaskPartial::Netflix { stats }
+            })
+            .collect();
+        let single = run_reduce_all(
+            &backend,
+            &p,
+            Workload::NetflixLo,
+            &partials,
+            1,
+        );
+        for partitioner in [Partitioner::Hash, Partitioner::Skew] {
+            for r in [2usize, 4] {
+                let got = run_reduce_all_with(
+                    &backend,
+                    &p,
+                    Workload::NetflixLo,
+                    &partials,
+                    r,
+                    partitioner,
+                );
+                assert_eq!(got, single, "netflix r={r} {partitioner:?}");
+            }
+        }
+    }
+
+    fn run_reduce_all(
+        backend: &Backend,
+        p: &ModelParams,
+        w: Workload,
+        partials: &[TaskPartial],
+        r: usize,
+    ) -> JobOutput {
+        run_reduce_all_with(backend, p, w, partials, r, Partitioner::Hash)
+    }
+
+    /// Shuffle + reduce entirely in memory (no store): the compute
+    /// contract the executed path must reproduce.
+    fn run_reduce_all_with(
+        backend: &Backend,
+        p: &ModelParams,
+        w: Workload,
+        partials: &[TaskPartial],
+        r: usize,
+        partitioner: Partitioner,
+    ) -> JobOutput {
+        let weights = key_weights(w, p, partials).unwrap();
+        let plan = build_plan(partitioner, &weights, r);
+        let reduced: Vec<TaskPartial> = (0..plan.partitions)
+            .map(|part| {
+                let frags: Vec<Fragment> = partials
+                    .iter()
+                    .map(|t| {
+                        let enc = encode_fragment(
+                            &slice_partial(p, &plan, t, part).unwrap(),
+                        );
+                        decode_fragment(&enc, p.stat_fields).unwrap()
+                    })
+                    .collect();
+                run_reduce(backend, p, w, &frags).unwrap()
+            })
+            .collect();
+        assemble_output(p, w, &plan, &reduced).unwrap()
+    }
+
+    #[test]
+    fn staged_fragments_are_deterministic_and_counted() {
+        let p = params();
+        let partials: Vec<TaskPartial> = (0..3)
+            .map(|i| TaskPartial::Eaglet {
+                alod: vec![i as f32; p.grid],
+                weight: 1.0 + i as f32,
+            })
+            .collect();
+        let weights =
+            key_weights(Workload::Eaglet, &p, &partials).unwrap();
+        let plan = build_plan(Partitioner::Skew, &weights, 4);
+        let (a, bytes_a) =
+            stage_fragments(&p, "j9/", &plan, &partials).unwrap();
+        let (b, bytes_b) =
+            stage_fragments(&p, "j9/", &plan, &partials).unwrap();
+        assert_eq!(bytes_a, bytes_b);
+        assert_eq!(a.len(), 12, "r × tasks shuffle blocks");
+        for ((ka, va), (kb, vb)) in a.iter().zip(&b) {
+            assert_eq!(ka, kb);
+            assert_eq!(va, vb, "re-staging changed bytes for {ka}");
+        }
+        let total: usize = a.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total as u64, bytes_a);
+        assert!(a.iter().all(|(k, _)| k.starts_with("j9/sh:")));
+    }
+}

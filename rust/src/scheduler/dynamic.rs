@@ -308,6 +308,27 @@ pub fn inflight_target(
     }
 }
 
+/// Order idle slots fastest-predicted first (ties by slot id, so the
+/// ranking is total and deterministic); identity order without a
+/// tracker. Reduce partitions are few and long, so which slot gets one
+/// matters more than it does for tiny map tasks — drivers hand the
+/// heaviest remaining partition to the best-ranked slot.
+pub fn rank_idle_slots(
+    tracker: Option<&ResponseTimeTracker>,
+    idle: &[usize],
+) -> Vec<usize> {
+    let mut v = idle.to_vec();
+    if let Some(t) = tracker {
+        v.sort_by(|&a, &b| {
+            t.predicted_task_s(a)
+                .partial_cmp(&t.predicted_task_s(b))
+                .expect("predictions are finite")
+                .then(a.cmp(&b))
+        });
+    }
+    v
+}
+
 #[derive(Debug)]
 struct TaskTimes {
     /// The spec, retained while in flight (what a clone re-dispatches);
@@ -665,6 +686,23 @@ mod tests {
         let _ = s.on_done(0, 2);
         s.cancel_clone(0);
         assert_eq!(s.speculated(), 1);
+    }
+
+    #[test]
+    fn rank_idle_slots_orders_by_prediction() {
+        let idle = vec![3, 1, 2];
+        // no tracker: identity order (a stable, deterministic default)
+        assert_eq!(rank_idle_slots(None, &idle), vec![3, 1, 2]);
+        let t = ResponseTimeTracker::new();
+        // no observations yet: every prediction ties at the mean, so
+        // slot id breaks the tie
+        assert_eq!(rank_idle_slots(Some(&t), &idle), vec![1, 2, 3]);
+        for _ in 0..20 {
+            t.observe_task(1, 0.1);
+            t.observe_task(2, 0.001);
+            t.observe_task(3, 0.01);
+        }
+        assert_eq!(rank_idle_slots(Some(&t), &idle), vec![2, 3, 1]);
     }
 
     #[test]

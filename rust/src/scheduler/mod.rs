@@ -23,8 +23,9 @@ pub mod feedback;
 pub mod twostep;
 
 pub use dynamic::{
-    inflight_target, placement_score, DoneKind, LatencyHistogram,
-    ResponseTimeTracker, SpeculationState, SPECULATION_POLL,
+    inflight_target, placement_score, rank_idle_slots, DoneKind,
+    LatencyHistogram, ResponseTimeTracker, SpeculationState,
+    SPECULATION_POLL,
 };
 pub use feedback::{batch_size, FeedbackStats};
 pub use twostep::{SchedConfig, SchedSnapshot, TaskSpec, TwoStepScheduler};

@@ -20,6 +20,7 @@ use std::time::Instant;
 
 use crate::data::Workload;
 use crate::kneepoint::TaskSizing;
+use crate::reduce::Partitioner;
 
 /// Per-sample size the admission estimator assumes, matching the
 /// thesis-scale constants `sim::default_params` is calibrated with
@@ -68,6 +69,12 @@ pub struct JobRequest {
     /// Job-level recovery budget (attempts, ≥ 1).
     pub max_attempts: u32,
     pub fault: Option<InjectedFault>,
+    /// Executed reduce partitions: 1 (default) keeps the leader-side
+    /// seq-ordered reduce; >1 runs a shuffled worker-pool reduce phase.
+    pub reduce_tasks: usize,
+    /// Key → reduce-partition assignment policy (only consulted when
+    /// `reduce_tasks > 1`).
+    pub partitioner: Partitioner,
 }
 
 impl JobRequest {
@@ -80,6 +87,8 @@ impl JobRequest {
             deadline_s: None,
             max_attempts: 3,
             fault: None,
+            reduce_tasks: 1,
+            partitioner: Partitioner::Hash,
         }
     }
 
@@ -95,6 +104,17 @@ impl JobRequest {
 
     pub fn with_deadline(mut self, deadline_s: f64) -> JobRequest {
         self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Opt into the executed shuffle + reduce phase.
+    pub fn with_reduce(
+        mut self,
+        reduce_tasks: usize,
+        partitioner: Partitioner,
+    ) -> JobRequest {
+        self.reduce_tasks = reduce_tasks.max(1);
+        self.partitioner = partitioner;
         self
     }
 
@@ -231,5 +251,17 @@ mod tests {
         assert_eq!(r.deadline_s, Some(60.0));
         assert!(r.max_attempts >= 1);
         assert_eq!(r.nominal_bytes(), 40 * 576 * 1024);
+        assert_eq!(r.reduce_tasks, 1);
+        assert_eq!(r.partitioner, Partitioner::Hash);
+    }
+
+    #[test]
+    fn reduce_builder_clamps_and_sets() {
+        let r = JobRequest::new(Workload::NetflixLo, 8)
+            .with_reduce(0, Partitioner::Skew);
+        assert_eq!(r.reduce_tasks, 1); // 0 clamps up to the r=1 path
+        let r = r.with_reduce(4, Partitioner::Skew);
+        assert_eq!(r.reduce_tasks, 4);
+        assert_eq!(r.partitioner, Partitioner::Skew);
     }
 }

@@ -40,7 +40,7 @@ use crate::metrics::{JobReport, Timer};
 use crate::runtime::Exec as _;
 use crate::scheduler::{inflight_target, SchedConfig, TaskSpec, SPECULATION_POLL};
 use crate::slo::estimate_job_s;
-use crate::transport::{Down, TaskEnvelope, Up};
+use crate::transport::{Down, ReduceEnvelope, TaskEnvelope, Up};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::stats::{summarize, Summary};
 use crate::workloads::{build_small, default_compute_s_per_mib};
@@ -167,6 +167,10 @@ pub struct ServeReport {
     pub speculated: u64,
     /// Speculated tasks whose clone beat the original.
     pub won_by_clone: u64,
+    /// Intermediate bytes staged by executed shuffles, summed over
+    /// every completed job (0 when no tenant asked for `reduce_tasks
+    /// > 1`).
+    pub shuffle_bytes: u64,
     pub dfs_bytes_served: u64,
     /// Shared block-cache counters over the whole session, when the
     /// pool ran with `cache_mb > 0` (hit rate, cross-tenant dedup).
@@ -212,6 +216,7 @@ impl ServeReport {
             ("worker_respawns", num(self.worker_respawns() as f64)),
             ("speculated", num(self.speculated as f64)),
             ("won_by_clone", num(self.won_by_clone as f64)),
+            ("shuffle_bytes", num(self.shuffle_bytes as f64)),
             ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
             // disambiguates "cache off" from "cache on, zero hits" in
             // the cross-PR trajectory
@@ -259,7 +264,7 @@ impl ServeReport {
              ({} failed, {} rejected); {} tasks => {:.1} tasks/s; \
              queue wait p50 {:.1}ms p95 {:.1}ms; ttfp p50 {:.1}ms; \
              e2e p50 {:.1}ms p95 {:.1}ms; speculated {} (clone won {}); \
-             dfs served {:.2} MB{}",
+             shuffled {:.2} MB; dfs served {:.2} MB{}",
             self.workers,
             self.workers_spawned,
             self.jobs_completed,
@@ -275,6 +280,7 @@ impl ServeReport {
             self.e2e.p95 * 1e3,
             self.speculated,
             self.won_by_clone,
+            self.shuffle_bytes as f64 / 1048576.0,
             self.dfs_bytes_served as f64 / 1048576.0,
             cache,
         )
@@ -377,6 +383,7 @@ impl JobService {
             tasks_total: 0,
             speculated: 0,
             won_by_clone: 0,
+            shuffle_bytes: 0,
             records: Vec::new(),
             completed_order: Vec::new(),
             first_submit: None,
@@ -514,6 +521,8 @@ struct Dispatcher {
     /// Session-wide speculation counters (summed from finished jobs).
     speculated: u64,
     won_by_clone: u64,
+    /// Session-wide shuffle bytes (summed from finished jobs).
+    shuffle_bytes: u64,
     records: Vec<JobRecord>,
     completed_order: Vec<u64>,
     first_submit: Option<Instant>,
@@ -625,6 +634,7 @@ impl Dispatcher {
             worker_executed,
             speculated: self.speculated,
             won_by_clone: self.won_by_clone,
+            shuffle_bytes: self.shuffle_bytes,
             dfs_bytes_served,
             cache,
             completed_order: self.completed_order,
@@ -671,6 +681,26 @@ impl Dispatcher {
                     self.inflight[w] += 1;
                     idle.retain(|&x| x != w);
                 } else {
+                    self.on_worker_lost(w, "link closed mid-clone");
+                    return;
+                }
+            }
+            // Overdue reduce partitions speculate the same way.
+            let rclones =
+                self.active[i].ctx.reduce_clone_candidates(&idle);
+            for (w, spec) in rclones {
+                let partition = spec.partition;
+                let env = ReduceEnvelope {
+                    job: jid,
+                    attempt: jattempt,
+                    ns: ns.clone(),
+                    spec,
+                };
+                if self.pool.send(w, Down::Reduce(Box::new(env))) {
+                    self.inflight[w] += 1;
+                    idle.retain(|&x| x != w);
+                } else {
+                    self.active[i].ctx.cancel_reduce_clone(partition);
                     self.on_worker_lost(w, "link closed mid-clone");
                     return;
                 }
@@ -787,6 +817,8 @@ impl Dispatcher {
             seed: req.seed,
             attempt: 1,
             platform: "bts-serve".into(),
+            reduce_tasks: req.reduce_tasks.max(1),
+            partitioner: req.partitioner,
             ..ExecConfig::default()
         };
         let hook = self
@@ -810,6 +842,7 @@ impl Dispatcher {
             startup_s,
             hook,
             tracker,
+            ns.clone(),
         ) {
             Ok(ctx) => {
                 self.active.push(ActiveJob {
@@ -896,6 +929,25 @@ impl Dispatcher {
                     self.on_worker_lost(w, "link closed mid-dispatch");
                     return;
                 }
+                // Map scheduler dry for this job: claim a shuffled
+                // reduce partition instead (present only once its last
+                // map partial landed and `reduce_tasks > 1`).
+                if let Some(rspec) = job.ctx.next_reduce(w) {
+                    let env = ReduceEnvelope {
+                        job: job.id,
+                        attempt: job.attempt,
+                        ns: job.ns.clone(),
+                        spec: rspec,
+                    };
+                    self.rr = (i + 1) % n;
+                    if self.pool.send(w, Down::Reduce(Box::new(env))) {
+                        self.inflight[w] += 1;
+                        sent = true;
+                        break;
+                    }
+                    self.on_worker_lost(w, "link closed mid-dispatch");
+                    return;
+                }
             }
             if !sent {
                 return;
@@ -919,6 +971,45 @@ impl Dispatcher {
                         self.active[i].first_partial = Some(Instant::now());
                     }
                     self.active[i].ctx.on_done(*done);
+                    // Last map partial in (and reduce_tasks > 1): the
+                    // shuffle stages fragments and queues partitions.
+                    let shuffled = match self.active[i]
+                        .ctx
+                        .maybe_start_shuffle(&self.params)
+                    {
+                        Ok(s) => s,
+                        Err(e) => {
+                            let (jid, jattempt) =
+                                (self.active[i].id, self.active[i].attempt);
+                            self.on_task_failed(jid, jattempt, e);
+                            self.top_up_worker(w);
+                            return;
+                        }
+                    };
+                    if self.active[i].ctx.is_complete() {
+                        self.finish_job(i);
+                    } else if shuffled {
+                        // Top every live slot up, not only `w`: idle
+                        // slots have no Done of their own to wake them
+                        // into the reduce phase.
+                        for x in 0..self.pool.workers {
+                            self.top_up_worker(x);
+                        }
+                    }
+                }
+                self.top_up_worker(w);
+            }
+            Up::ReduceDone { job, attempt, done } => {
+                let w = done.worker;
+                self.inflight[w] = self.inflight[w].saturating_sub(1);
+                // Same staleness gate as map results: only the current
+                // attempt's partitions count.
+                if let Some(i) = self
+                    .active
+                    .iter()
+                    .position(|a| a.id == job && a.attempt == attempt)
+                {
+                    self.active[i].ctx.on_reduce_done(*done);
                     if self.active[i].ctx.is_complete() {
                         self.finish_job(i);
                     }
@@ -960,6 +1051,18 @@ impl Dispatcher {
             // (the content stays resident as dedup fodder for later
             // identical tenants until the byte budget reclaims it)
             self.pool.dfs.remove(k);
+        }
+        // Shuffle fragments live in the same shared store under the
+        // job's namespace; unstage them too (no-op keys are fine — a
+        // job retired before its shuffle staged nothing).
+        if a.cfg.reduce_tasks > 1 {
+            for p in 0..a.cfg.reduce_tasks as u32 {
+                for seq in 0..a.specs.len() {
+                    self.pool
+                        .dfs
+                        .remove(&crate::reduce::shuffle_key(&a.ns, p, seq));
+                }
+            }
         }
         if let Some(aff) = &self.pool.affinity {
             aff.forget_prefix(&a.ns);
@@ -1019,7 +1122,7 @@ impl Dispatcher {
             .pool
             .affinity
             .as_ref()
-            .map(|a| AffinityHook::new(a.clone(), ns));
+            .map(|a| AffinityHook::new(a.clone(), ns.clone()));
         let tracker = self
             .sched_cfg
             .wants_tracker()
@@ -1034,6 +1137,7 @@ impl Dispatcher {
             startup_s,
             hook,
             tracker,
+            ns,
         ) {
             Ok(ctx) => self.active[i].ctx = ctx,
             Err(e) => {
@@ -1069,6 +1173,7 @@ impl Dispatcher {
                 self.tasks_total += fin.report.tasks as u64;
                 self.speculated += fin.sched.speculated;
                 self.won_by_clone += fin.sched.won_by_clone;
+                self.shuffle_bytes += fin.report.shuffle_bytes;
                 self.records.push(JobRecord { queue_wait_s, ttfp_s, e2e_s });
                 self.completed_order.push(a.id);
                 self.last_complete = Some(Instant::now());
@@ -1126,6 +1231,41 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, Error::Config(_)));
         svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn reduce_jobs_round_trip_bit_identical() {
+        use crate::reduce::Partitioner;
+        use crate::util::testutil::SERVE_JOB_DEADLINE;
+        let run = |reduce_tasks: usize| -> JobOutput {
+            let svc = native_service(3, 2);
+            let h = svc
+                .submit(
+                    JobRequest::new(Workload::NetflixLo, 10)
+                        .with_seed(11)
+                        .with_reduce(reduce_tasks, Partitioner::Skew),
+                )
+                .unwrap();
+            let r = h.wait_timeout(SERVE_JOB_DEADLINE).unwrap();
+            assert_eq!(r.report.reduce_tasks, reduce_tasks.max(1));
+            if reduce_tasks > 1 {
+                assert!(r.report.shuffle_bytes > 0);
+                assert!(r.report.shuffle_imbalance >= 1.0);
+            } else {
+                assert_eq!(r.report.shuffle_bytes, 0);
+            }
+            let report = svc.shutdown().unwrap();
+            assert_eq!(report.jobs_completed, 1);
+            assert_eq!(
+                report.shuffle_bytes > 0,
+                reduce_tasks > 1,
+                "session shuffle bytes track the tenant's reduce mode"
+            );
+            r.output
+        };
+        // The multiplexed worker-pool reduce must be bit-identical to
+        // the leader-side seq-ordered reduce.
+        assert_eq!(run(1), run(4));
     }
 
     #[test]

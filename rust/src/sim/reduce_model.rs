@@ -12,6 +12,15 @@
 //! EAGLET is compute-heavy (intermediate data small ⇒ diminishing
 //! returns immediately); Netflix moves real intermediate volume and
 //! benefits from parallel reduce before communication wins.
+//!
+//! Since PR 6 this model is the *analytical counterpart of an
+//! executed stage*: `crate::reduce` + `ExecConfig::reduce_tasks` run
+//! the shuffle and the reduce partitions for real on the worker pool.
+//! `rust/tests/integration_reduce.rs` cross-validates the two in
+//! direction (zero network demand at r=1, shuffle bytes
+//! non-decreasing in r); DESIGN.md §13 documents why absolute
+//! seconds/bytes are deliberately not compared (thesis-era hardware
+//! constants here vs real in-memory fragment movement there).
 
 use super::cluster::Cluster;
 use crate::platforms::PlatformSpec;

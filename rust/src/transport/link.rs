@@ -274,6 +274,10 @@ fn rewrite_worker(u: Up, worker: usize) -> Up {
             done.worker = worker;
             Up::Done { job, attempt, done }
         }
+        Up::ReduceDone { job, attempt, mut done } => {
+            done.worker = worker;
+            Up::ReduceDone { job, attempt, done }
+        }
         Up::TaskFailed { job, attempt, error, .. } => {
             Up::TaskFailed { job, attempt, worker, error }
         }

@@ -53,7 +53,7 @@ use crate::cache::AffinityIndex;
 use crate::coordinator::assemble::{execute_slices, MapTask, TaskPartial};
 use crate::coordinator::recovery::FailurePlan;
 use crate::data::block::Block;
-use crate::data::ModelParams;
+use crate::data::{ModelParams, Workload};
 use crate::dfs::{BlockSource, Prefetcher};
 use crate::error::{Error, Result};
 use crate::exec::Backend;
@@ -77,10 +77,40 @@ pub struct TaskEnvelope {
     pub poison: bool,
 }
 
+/// One reduce partition assignment (the shuffle's receiving end). The
+/// worker streams partition `partition`'s fragment of every map task
+/// (`seq 0..n_tasks`, staged by the leader under
+/// [`crate::reduce::shuffle_key`]s) through its prefetcher and runs
+/// the seq-ordered reduce tree over them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReduceSpec {
+    pub partition: u32,
+    pub partitions: u32,
+    /// Map tasks whose fragments to fetch (one shuffle block each).
+    pub n_tasks: u32,
+    pub workload: Workload,
+    /// Reduce keys this partition owns (ascending; informational —
+    /// fragments carry their keys inline).
+    pub keys: Vec<u32>,
+}
+
+/// A reduce task routed to a slot, tagged with its tenant — the
+/// reduce-phase sibling of [`TaskEnvelope`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReduceEnvelope {
+    pub job: u64,
+    pub attempt: u32,
+    pub ns: Arc<str>,
+    pub spec: ReduceSpec,
+}
+
 /// Leader → worker control messages, over any transport.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Down {
     Task(Box<TaskEnvelope>),
+    /// A reduce partition to fetch, merge and report. Map and reduce
+    /// tasks share the slot: the worker drains its map queue first.
+    Reduce(Box<ReduceEnvelope>),
     /// Drop every queued task of `job` with attempt ≤ `upto_attempt`
     /// and purge the job's namespace from worker-local caches. The
     /// worker acknowledges with [`Up::Aborted`].
@@ -109,10 +139,27 @@ pub struct TaskDone {
     pub cache_misses: u64,
 }
 
+/// One finished reduce partition, reported up. The partial's owned
+/// lanes are bit-identical to the single-reducer tree; `shuffle_bytes`
+/// is what this reducer actually pulled over the data plane.
+#[derive(Debug, Clone)]
+pub struct ReduceDone {
+    pub worker: usize,
+    pub partition: u32,
+    pub partial: TaskPartial,
+    pub fetch_s: f64,
+    pub exec_s: f64,
+    pub queue_wait_s: f64,
+    pub shuffle_bytes: u64,
+}
+
 /// Worker → leader control messages, over any transport.
 #[derive(Debug)]
 pub enum Up {
     Done { job: u64, attempt: u32, done: Box<TaskDone> },
+    /// A reduce partition completed (first report per partition wins;
+    /// duplicates from speculative clones are dropped by the leader).
+    ReduceDone { job: u64, attempt: u32, done: Box<ReduceDone> },
     /// One task of `(job, attempt)` failed. Solo runs treat this as
     /// fatal to the attempt; the serve dispatcher restarts just that
     /// tenant's job.
@@ -223,6 +270,49 @@ pub(crate) fn enqueue_keys(pf: &mut Prefetcher, spec: &TaskSpec, ns: &str) {
     );
 }
 
+/// Queue a reduce partition's shuffle-block keys for prefetch, in
+/// map-task (`seq`) order.
+pub(crate) fn enqueue_reduce_keys(
+    pf: &mut Prefetcher,
+    spec: &ReduceSpec,
+    ns: &str,
+) {
+    pf.enqueue((0..spec.n_tasks as usize).map(|seq| {
+        crate::reduce::shuffle_key(ns, spec.partition, seq)
+    }));
+}
+
+/// Fetch this partition's fragment of every map task, decode, and run
+/// the seq-ordered reduce tree; returns (partial, fetch seconds, exec
+/// seconds, shuffle bytes fetched).
+pub(crate) fn run_reduce_task(
+    p: &ModelParams,
+    backend: &Backend,
+    pf: &mut Prefetcher,
+    spec: &ReduceSpec,
+    ns: &str,
+) -> Result<(TaskPartial, f64, f64, u64)> {
+    pf.pump()?;
+    let fetch_t = Timer::start();
+    let mut fragments = Vec::with_capacity(spec.n_tasks as usize);
+    let mut shuffle_bytes = 0u64;
+    for seq in 0..spec.n_tasks as usize {
+        let key = crate::reduce::shuffle_key(ns, spec.partition, seq);
+        let bytes = pf.take(&key)?;
+        shuffle_bytes += bytes.len() as u64;
+        fragments
+            .push(crate::reduce::decode_fragment(&bytes, p.stat_fields)?);
+    }
+    let fetch_s = fetch_t.secs();
+
+    let exec_t = Timer::start();
+    let partial =
+        crate::reduce::run_reduce(backend, p, spec.workload, &fragments)?;
+    let exec_s = exec_t.secs();
+    pf.observe_exec(exec_s);
+    Ok((partial, fetch_s, exec_s, shuffle_bytes))
+}
+
 /// Fetch, assemble and execute one task under a key namespace;
 /// returns (partial, fetch seconds, exec seconds).
 pub(crate) fn run_task(
@@ -257,15 +347,17 @@ pub(crate) fn run_task(
 /// tenant retirement.
 fn handle_abort<C: WorkerChannel>(
     queue: &mut VecDeque<TaskEnvelope>,
+    rqueue: &mut VecDeque<ReduceEnvelope>,
     pf: &mut Prefetcher,
     chan: &mut C,
     worker: usize,
     job: u64,
     upto_attempt: u32,
 ) {
-    let before = queue.len();
+    let before = queue.len() + rqueue.len();
     queue.retain(|t| !(t.job == job && t.attempt <= upto_attempt));
-    let dropped = (before - queue.len()) as u64;
+    rqueue.retain(|t| !(t.job == job && t.attempt <= upto_attempt));
+    let dropped = (before - queue.len() - rqueue.len()) as u64;
     pf.purge_prefix_local(&crate::dfs::job_ns(job));
     let _ = chan.send(Up::Aborted { worker, dropped });
 }
@@ -288,6 +380,7 @@ pub fn worker_body<C: WorkerChannel>(
         pf = pf.with_affinity(cfg.worker, index);
     }
     let mut queue: VecDeque<TaskEnvelope> = VecDeque::new();
+    let mut rqueue: VecDeque<ReduceEnvelope> = VecDeque::new();
     let mut executed = 0u64;
     // Tasks popped for execution (turbulence indexes on this, not on
     // `executed`, so an injected fault doesn't re-fire forever).
@@ -302,9 +395,14 @@ pub fn worker_body<C: WorkerChannel>(
                     enqueue_keys(&mut pf, &t.spec, &t.ns);
                     queue.push_back(*t);
                 }
+                Poll::Msg(Down::Reduce(r)) => {
+                    enqueue_reduce_keys(&mut pf, &r.spec, &r.ns);
+                    rqueue.push_back(*r);
+                }
                 Poll::Msg(Down::Abort { job, upto_attempt }) => {
                     handle_abort(
                         &mut queue,
+                        &mut rqueue,
                         &mut pf,
                         chan,
                         cfg.worker,
@@ -318,7 +416,7 @@ pub fn worker_body<C: WorkerChannel>(
                 }
                 Poll::Empty => break,
                 Poll::Closed => {
-                    if queue.is_empty() {
+                    if queue.is_empty() && rqueue.is_empty() {
                         break 'outer;
                     }
                     break;
@@ -327,7 +425,7 @@ pub fn worker_body<C: WorkerChannel>(
         }
         // Idle: block for the next instruction, measuring queue wait.
         let mut queue_wait_s = 0.0;
-        if queue.is_empty() {
+        if queue.is_empty() && rqueue.is_empty() {
             let wait_t = Timer::start();
             match chan.recv() {
                 Some(Down::Task(t)) => {
@@ -335,9 +433,15 @@ pub fn worker_body<C: WorkerChannel>(
                     enqueue_keys(&mut pf, &t.spec, &t.ns);
                     queue.push_back(*t);
                 }
+                Some(Down::Reduce(r)) => {
+                    queue_wait_s = wait_t.secs();
+                    enqueue_reduce_keys(&mut pf, &r.spec, &r.ns);
+                    rqueue.push_back(*r);
+                }
                 Some(Down::Abort { job, upto_attempt }) => {
                     handle_abort(
                         &mut queue,
+                        &mut rqueue,
                         &mut pf,
                         chan,
                         cfg.worker,
@@ -353,7 +457,68 @@ pub fn worker_body<C: WorkerChannel>(
                 None => break,
             }
         }
-        let Some(task) = queue.pop_front() else { continue };
+        let Some(task) = queue.pop_front() else {
+            // No map task queued: run a reduce partition if one is
+            // pending. Reduce slots share the worker loop (and its
+            // turbulence schedule) with map slots — ISSUE 6 tentpole.
+            let Some(r) = rqueue.pop_front() else { continue };
+            let nth = seen;
+            seen += 1;
+            if let Some(tb) = &cfg.turbulence {
+                let d = tb.disturbance(cfg.worker, nth);
+                if !d.delay.is_zero() {
+                    std::thread::sleep(d.delay);
+                }
+                if d.fail {
+                    let sent = chan.send(Up::TaskFailed {
+                        job: r.job,
+                        attempt: r.attempt,
+                        worker: cfg.worker,
+                        error: Error::Scheduler(format!(
+                            "turbulence fault on worker {} (reduce partition {})",
+                            cfg.worker, r.spec.partition
+                        )),
+                    });
+                    if !sent || !cfg.survive_task_errors {
+                        break;
+                    }
+                    continue;
+                }
+            }
+            match run_reduce_task(params, backend, &mut pf, &r.spec, &r.ns) {
+                Ok((partial, fetch_s, exec_s, shuffle_bytes)) => {
+                    executed += 1;
+                    let sent = chan.send(Up::ReduceDone {
+                        job: r.job,
+                        attempt: r.attempt,
+                        done: Box::new(ReduceDone {
+                            worker: cfg.worker,
+                            partition: r.spec.partition,
+                            partial,
+                            fetch_s,
+                            exec_s,
+                            queue_wait_s,
+                            shuffle_bytes,
+                        }),
+                    });
+                    if !sent {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let sent = chan.send(Up::TaskFailed {
+                        job: r.job,
+                        attempt: r.attempt,
+                        worker: cfg.worker,
+                        error: e,
+                    });
+                    if !sent || !cfg.survive_task_errors {
+                        break;
+                    }
+                }
+            }
+            continue;
+        };
         // Scripted turbulence: impose the slot's deterministic extra
         // latency (and/or fault) for its nth task before executing.
         let nth = seen;
@@ -567,6 +732,178 @@ mod tests {
             .filter(|u| matches!(u, Up::TaskFailed { worker: 3, .. }))
             .count();
         assert_eq!(failed, 1);
+    }
+
+    #[test]
+    fn body_runs_reduce_partitions_bit_identical() {
+        use crate::coordinator::JobOutput;
+        use crate::reduce::{self, Partitioner};
+        let params = ModelParams::default();
+        let backend = Arc::new(Backend::native(params.clone()));
+        let dfs = Dfs::new(2, 1, LatencyModel::none());
+        let partials: Vec<TaskPartial> = (0..3)
+            .map(|i| TaskPartial::Eaglet {
+                alod: (0..params.grid)
+                    .map(|k| (k as f32) * 0.25 + i as f32)
+                    .collect(),
+                weight: 1.0 + i as f32,
+            })
+            .collect();
+        let weights =
+            reduce::key_weights(Workload::Eaglet, &params, &partials)
+                .unwrap();
+        let plan = reduce::build_plan(Partitioner::Skew, &weights, 2);
+        let (blocks, staged_bytes) =
+            reduce::stage_fragments(&params, "", &plan, &partials).unwrap();
+        for (k, b) in blocks {
+            dfs.put(&k, b);
+        }
+        let (down_tx, down_rx) = mpsc::channel();
+        let (up_tx, up_rx) = mpsc::channel();
+        let body = {
+            let backend = Arc::clone(&backend);
+            let params = params.clone();
+            let dfs = Arc::clone(&dfs);
+            std::thread::spawn(move || {
+                let mut chan = InProcChannel { rx: down_rx, tx: up_tx };
+                worker_body(&BodyCfg::new(0), &params, &backend, dfs, &mut chan)
+            })
+        };
+        for partition in 0..plan.partitions {
+            down_tx
+                .send(Down::Reduce(Box::new(ReduceEnvelope {
+                    job: 0,
+                    attempt: 1,
+                    ns: "".into(),
+                    spec: ReduceSpec {
+                        partition,
+                        partitions: plan.partitions,
+                        n_tasks: partials.len() as u32,
+                        workload: Workload::Eaglet,
+                        keys: plan.keys_of(partition),
+                    },
+                })))
+                .unwrap();
+        }
+        let mut reduced: Vec<Option<TaskPartial>> =
+            vec![None; plan.partitions as usize];
+        let mut fetched_bytes = 0u64;
+        let mut got = 0;
+        while got < plan.partitions {
+            match up_rx.recv().expect("body hung up early") {
+                Up::ReduceDone { job: 0, attempt: 1, done } => {
+                    assert!(done.shuffle_bytes > 0);
+                    fetched_bytes += done.shuffle_bytes;
+                    reduced[done.partition as usize] = Some(done.partial);
+                    got += 1;
+                }
+                up => panic!("unexpected message: {up:?}"),
+            }
+        }
+        down_tx.send(Down::Shutdown).unwrap();
+        let executed = body.join().unwrap();
+        assert_eq!(executed, plan.partitions as u64);
+        assert_eq!(fetched_bytes, staged_bytes);
+        let reduced: Vec<TaskPartial> =
+            reduced.into_iter().map(|p| p.unwrap()).collect();
+        let out = reduce::assemble_output(
+            &params,
+            Workload::Eaglet,
+            &plan,
+            &reduced,
+        )
+        .unwrap();
+        // Oracle: the map-side-only aggregation over the same partials.
+        let pairs: Vec<(Vec<f32>, f32)> = partials
+            .iter()
+            .map(|p| match p {
+                TaskPartial::Eaglet { alod, weight } => {
+                    (alod.clone(), *weight)
+                }
+                _ => unreachable!(),
+            })
+            .collect();
+        let (oracle_alod, oracle_w) =
+            crate::coordinator::reduce_eaglet(&*backend, &params, pairs)
+                .unwrap();
+        match out {
+            JobOutput::Eaglet { alod, weight } => {
+                assert_eq!(alod, oracle_alod, "lanes must be bit-identical");
+                assert_eq!(weight, oracle_w);
+            }
+            other => panic!("wrong output kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn turbulence_fault_on_reduce_keeps_pool_slot_alive() {
+        use crate::reduce::{self, Partitioner};
+        use crate::util::testutil::Turbulence;
+        let params = ModelParams::default();
+        let backend = Arc::new(Backend::native(params.clone()));
+        let dfs = Dfs::new(2, 1, LatencyModel::none());
+        let partials: Vec<TaskPartial> = (0..2)
+            .map(|i| TaskPartial::Eaglet {
+                alod: vec![0.5 + i as f32; params.grid],
+                weight: 1.0,
+            })
+            .collect();
+        let weights =
+            reduce::key_weights(Workload::Eaglet, &params, &partials)
+                .unwrap();
+        let plan = reduce::build_plan(Partitioner::Hash, &weights, 1);
+        let (blocks, _) =
+            reduce::stage_fragments(&params, "", &plan, &partials).unwrap();
+        for (k, b) in blocks {
+            dfs.put(&k, b);
+        }
+        let (down_tx, down_rx) = mpsc::channel();
+        let (up_tx, up_rx) = mpsc::channel();
+        let cfg = BodyCfg {
+            turbulence: Some(Arc::new(Turbulence::new(7).fail_at(0, 0))),
+            ..BodyCfg::new(0)
+        };
+        let body = {
+            let backend = Arc::clone(&backend);
+            let params = params.clone();
+            let dfs = Arc::clone(&dfs);
+            std::thread::spawn(move || {
+                let mut chan = InProcChannel { rx: down_rx, tx: up_tx };
+                worker_body(&cfg, &params, &backend, dfs, &mut chan)
+            })
+        };
+        let envelope = || {
+            Down::Reduce(Box::new(ReduceEnvelope {
+                job: 0,
+                attempt: 1,
+                ns: "".into(),
+                spec: ReduceSpec {
+                    partition: 0,
+                    partitions: 1,
+                    n_tasks: partials.len() as u32,
+                    workload: Workload::Eaglet,
+                    keys: plan.keys_of(0),
+                },
+            }))
+        };
+        // First dispatch hits the injected fault; the slot must
+        // report it and keep serving (pool semantics).
+        down_tx.send(envelope()).unwrap();
+        match up_rx.recv().expect("body hung up early") {
+            Up::TaskFailed { job: 0, attempt: 1, worker: 0, .. } => {}
+            up => panic!("expected reduce fault, got {up:?}"),
+        }
+        // The leader's recovery re-dispatches the partition; the
+        // retry lands past the fault window and succeeds.
+        down_tx.send(envelope()).unwrap();
+        match up_rx.recv().expect("slot died after the fault") {
+            Up::ReduceDone { job: 0, attempt: 1, done } => {
+                assert_eq!(done.partition, 0);
+            }
+            up => panic!("expected reduce completion, got {up:?}"),
+        }
+        down_tx.send(Down::Shutdown).unwrap();
+        assert_eq!(body.join().unwrap(), 1, "only the retry executed");
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Executed shuffle + reduce oracle suite (DESIGN.md §13).
+//!
+//! The contract under test: for any reduce fan-out `r` and either
+//! partitioner, the final [`JobOutput`] must be **bit-identical** to
+//! the map-side-only aggregation the platform has always produced at
+//! `r = 1` — across transports (in-proc vs loopback TCP), caches,
+//! speculative re-execution, and a worker lost right at the shuffle
+//! boundary. A second battery cross-validates the measured shuffle
+//! against the Fig-16 analytical model (`sim::reduce_model`): network
+//! demand must be zero at `r = 1` and non-decreasing in `r`, in both
+//! the executed stage and the model.
+
+use std::sync::Arc;
+use std::thread;
+
+use bts::coordinator::FailurePlan;
+use bts::data::{ModelParams, Workload};
+use bts::exec::{
+    run_cluster, run_cluster_with_recovery, Backend, ExecConfig,
+};
+use bts::kneepoint::TaskSizing;
+use bts::net::run_worker;
+use bts::platforms::PlatformSpec;
+use bts::reduce::Partitioner;
+use bts::scheduler::SchedConfig;
+use bts::sim::cluster::{Cluster, HardwareType};
+use bts::sim::reduce_model::{sweep_reduce_tasks, ReduceParams};
+use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
+use bts::workloads::build_small;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+fn params() -> ModelParams {
+    ModelParams::default()
+}
+
+const SIZING: TaskSizing = TaskSizing::Kneepoint(16 * 1024);
+const SEED: u64 = 0xB75;
+
+fn cfg(workers: usize, r: usize, pt: Partitioner) -> ExecConfig {
+    ExecConfig {
+        sizing: SIZING,
+        seed: SEED,
+        workers,
+        reduce_tasks: r,
+        partitioner: pt,
+        ..Default::default()
+    }
+}
+
+/// Spawn `n` remote worker sessions against `addr`, each running the
+/// full `bts worker` path on its own thread.
+fn spawn_workers(
+    addr: String,
+    n: usize,
+    opts: RemoteWorkerOpts,
+) -> Vec<thread::JoinHandle<u64>> {
+    (0..n)
+        .map(|_| {
+            let addr = addr.clone();
+            let opts = opts.clone();
+            let backend = native();
+            thread::spawn(move || {
+                run_worker(&addr, backend, &opts).expect("worker session")
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn reduce_fanout_and_partitioner_never_change_the_statistic() {
+    for workload in [Workload::Eaglet, Workload::NetflixLo] {
+        let backend = native();
+        let ds = build_small(workload, &params(), 36);
+
+        // Oracle: map-side-only aggregation, the historical r=1 path.
+        let reference = run_cluster(
+            ds.as_ref(),
+            backend.clone(),
+            &cfg(3, 1, Partitioner::Hash),
+        )
+        .unwrap();
+        assert_eq!(reference.report.reduce_tasks, 1);
+        assert_eq!(
+            reference.report.shuffle_bytes, 0,
+            "r=1 must not shuffle"
+        );
+
+        for pt in [Partitioner::Hash, Partitioner::Skew] {
+            for r in [2usize, 4] {
+                let out = run_cluster(
+                    ds.as_ref(),
+                    backend.clone(),
+                    &cfg(3, r, pt),
+                )
+                .unwrap();
+                assert_eq!(
+                    out.output,
+                    reference.output,
+                    "{workload:?} r={r} {} diverged from r=1",
+                    pt.name()
+                );
+                assert_eq!(out.report.reduce_tasks, r);
+                assert!(
+                    out.report.shuffle_bytes > 0,
+                    "executed shuffle must move bytes at r={r}"
+                );
+                assert!(out.report.shuffle_imbalance >= 1.0);
+                assert_eq!(
+                    out.report.reduce_turnaround.n, r,
+                    "one turnaround sample per reduce partition"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tcp_reduce_matches_inproc_bit_for_bit() {
+    let backend = native();
+    let ds = build_small(Workload::NetflixLo, &params(), 30);
+    let reference = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &cfg(3, 1, Partitioner::Hash),
+    )
+    .unwrap();
+
+    let inproc = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &cfg(3, 4, Partitioner::Skew),
+    )
+    .unwrap();
+
+    // 1 local slot + 2 remote TCP workers fetching shuffle fragments
+    // through the DFS proxy.
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 2).unwrap();
+    let addr = remote.addr();
+    let workers =
+        spawn_workers(addr, 2, RemoteWorkerOpts::default());
+    let tcp = run_cluster(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            remote: Some(remote),
+            ..cfg(1, 4, Partitioner::Skew)
+        },
+    )
+    .unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    assert_eq!(inproc.output, reference.output);
+    assert_eq!(tcp.output, reference.output, "TCP reduce diverged");
+    assert!(tcp.report.shuffle_bytes > 0);
+    assert_eq!(
+        tcp.report.shuffle_bytes, inproc.report.shuffle_bytes,
+        "staged shuffle bytes must not depend on the transport"
+    );
+}
+
+#[test]
+fn caches_leave_reduce_bit_identical() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 30);
+    let reference = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &cfg(3, 1, Partitioner::Hash),
+    )
+    .unwrap();
+    let cached = run_cluster(
+        ds.as_ref(),
+        backend,
+        &ExecConfig { cache_mb: 16, ..cfg(3, 4, Partitioner::Skew) },
+    )
+    .unwrap();
+    assert_eq!(cached.output, reference.output);
+    assert!(cached.cache.is_some(), "cache stats should be reported");
+}
+
+#[test]
+fn speculation_leaves_reduce_bit_identical() {
+    let backend = native();
+    let ds = build_small(Workload::NetflixLo, &params(), 30);
+    let reference = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &cfg(3, 1, Partitioner::Hash),
+    )
+    .unwrap();
+    let spec = run_cluster(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            sched: SchedConfig {
+                dynamic: true,
+                speculate: true,
+                straggler_pct: 95.0,
+                ..Default::default()
+            },
+            ..cfg(3, 4, Partitioner::Skew)
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        spec.output, reference.output,
+        "speculative reduce clones must not change the result"
+    );
+}
+
+/// Worker 0 (the only slot) completes every map task, then dies before
+/// it can execute any reduce partition — the leader has already staged
+/// the shuffle, so the loss lands exactly at the map/reduce boundary.
+/// Attempt 2 re-runs map + shuffle + reduce clean and must still match
+/// the r=1 oracle bit for bit.
+#[test]
+fn worker_loss_at_the_shuffle_boundary_recovers_bit_identically() {
+    let backend = native();
+    let ds = build_small(Workload::NetflixLo, &params(), 24);
+    let reference = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &cfg(1, 1, Partitioner::Hash),
+    )
+    .unwrap();
+    let map_tasks = reference.report.tasks as u64;
+
+    let recovered = run_cluster_with_recovery(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            failure: Some(FailurePlan {
+                worker: 0,
+                after_tasks: map_tasks,
+                on_attempt: 1,
+            }),
+            ..cfg(1, 4, Partitioner::Skew)
+        },
+        3,
+    )
+    .unwrap();
+    assert_eq!(recovered.report.restarts, 1, "one lost attempt");
+    assert_eq!(
+        recovered.output, reference.output,
+        "post-recovery reduce diverged from the oracle"
+    );
+    assert!(recovered.report.shuffle_bytes > 0);
+}
+
+/// Cross-validation against the Fig-16 analytical model: the executed
+/// stage and `sim::reduce_model` must agree in *direction* — no
+/// network demand at r=1, non-decreasing shuffle bytes in r — and the
+/// skew partitioner must never report worse imbalance than hash on the
+/// same job. (Wall-clock is not compared: the native backend is not
+/// thesis-scale hardware; DESIGN.md §13 documents the calibration
+/// gap.)
+#[test]
+fn measured_shuffle_trends_match_the_fig16_model() {
+    let rs = [1usize, 2, 4];
+    let cluster = Cluster::homogeneous(HardwareType::TypeII, 6);
+    let platform = PlatformSpec::bts();
+
+    for (workload, model) in [
+        (Workload::Eaglet, ReduceParams::eaglet_like()),
+        (Workload::NetflixLo, ReduceParams::netflix_like()),
+    ] {
+        let backend = native();
+        let ds = build_small(workload, &params(), 30);
+
+        let mut measured = Vec::new();
+        let mut job_bytes = 0usize;
+        for &r in &rs {
+            let out = run_cluster(
+                ds.as_ref(),
+                backend.clone(),
+                &cfg(3, r, Partitioner::Hash),
+            )
+            .unwrap();
+            job_bytes = out.report.input_bytes;
+            measured.push(out.report.shuffle_bytes);
+        }
+        assert_eq!(measured[0], 0, "{workload:?}: no shuffle at r=1");
+        for w in measured.windows(2) {
+            assert!(
+                w[1] >= w[0],
+                "{workload:?}: measured shuffle bytes must be \
+                 non-decreasing in r: {measured:?}"
+            );
+        }
+
+        let sweep = sweep_reduce_tasks(
+            &model, job_bytes, &cluster, &platform, &rs,
+        );
+        for w in sweep.windows(2) {
+            assert!(
+                w[1].2 >= w[0].2,
+                "model shuffle bytes must be non-decreasing in r"
+            );
+        }
+
+        // Skew never reports worse imbalance than hash on the same job.
+        let hash = run_cluster(
+            ds.as_ref(),
+            backend.clone(),
+            &cfg(3, 4, Partitioner::Hash),
+        )
+        .unwrap();
+        let skew = run_cluster(
+            ds.as_ref(),
+            backend,
+            &cfg(3, 4, Partitioner::Skew),
+        )
+        .unwrap();
+        assert!(
+            skew.report.shuffle_imbalance
+                <= hash.report.shuffle_imbalance + 1e-9,
+            "{workload:?}: skew {} > hash {}",
+            skew.report.shuffle_imbalance,
+            hash.report.shuffle_imbalance
+        );
+        assert_eq!(hash.output, skew.output);
+    }
+}

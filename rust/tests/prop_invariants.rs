@@ -338,6 +338,145 @@ fn prop_straggler_quantile_stable_across_permuted_observations() {
     });
 }
 
+// ---- reduce partitioner: total, deterministic, skew-resistant ----
+
+use bts::coordinator::TaskPartial;
+use bts::reduce::{build_plan, key_weights, Partitioner};
+
+#[test]
+fn prop_partition_plan_total_disjoint_deterministic() {
+    check("partition plan covers the key space", 200, |rng: &mut Rng| {
+        let n_keys = rng.range(1, 300) as usize;
+        let partitions = rng.range(1, 17) as usize;
+        let weights: Vec<f64> =
+            (0..n_keys).map(|_| rng.pareto(1.5)).collect();
+        for pt in [Partitioner::Hash, Partitioner::Skew] {
+            let plan = build_plan(pt, &weights, partitions);
+            // total: every key assigned, every assignment in range
+            prop_assert!(
+                plan.assign.len() == n_keys,
+                "{}: {} assignments for {} keys",
+                pt.name(),
+                plan.assign.len(),
+                n_keys
+            );
+            prop_assert!(
+                plan.assign.iter().all(|&p| p < plan.partitions),
+                "{}: assignment out of range",
+                pt.name()
+            );
+            // disjoint cover: keys_of partitions the key space exactly
+            let mut seen = vec![false; n_keys];
+            for p in 0..plan.partitions {
+                for k in plan.keys_of(p) {
+                    prop_assert!(
+                        !seen[k as usize],
+                        "{}: key {k} owned by two partitions",
+                        pt.name()
+                    );
+                    seen[k as usize] = true;
+                    prop_assert!(
+                        plan.partition_of(k) == p,
+                        "{}: keys_of/partition_of disagree on {k}",
+                        pt.name()
+                    );
+                }
+            }
+            prop_assert!(
+                seen.iter().all(|&s| s),
+                "{}: some key unowned",
+                pt.name()
+            );
+            // deterministic: same inputs, same plan
+            prop_assert!(
+                build_plan(pt, &weights, partitions) == plan,
+                "{}: plan not deterministic",
+                pt.name()
+            );
+            prop_assert!(
+                plan.imbalance_factor(&weights) >= 1.0 - 1e-9,
+                "{}: imbalance below the balanced ideal",
+                pt.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_skew_partitioner_never_worse_than_hash() {
+    check("skew imbalance <= hash under Zipf 1.5", 200, |rng: &mut Rng| {
+        let n_keys = rng.range(2, 200) as usize;
+        let partitions = rng.range(2, 13) as usize;
+        // heavy-tailed key weights — the hot-key regime the skew
+        // partitioner exists for
+        let weights: Vec<f64> =
+            (0..n_keys).map(|_| rng.pareto(1.5)).collect();
+        let skew = build_plan(Partitioner::Skew, &weights, partitions)
+            .imbalance_factor(&weights);
+        let hash = build_plan(Partitioner::Hash, &weights, partitions)
+            .imbalance_factor(&weights);
+        prop_assert!(
+            skew <= hash + 1e-12,
+            "skew {skew} worse than hash {hash} on the same multiset"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_plan_ignores_arrival_order() {
+    check("plan invariant under arrival order", 50, |rng: &mut Rng| {
+        let p = ModelParams::default();
+        let n = rng.range(2, 12) as usize;
+        // synthetic Netflix partials with skewed month traffic
+        let partials: Vec<TaskPartial> = (0..n)
+            .map(|_| {
+                let mut stats =
+                    vec![0.0f32; p.months * p.stat_fields];
+                for m in 0..p.months {
+                    let c = rng.pareto(1.5) as f32;
+                    stats[m * p.stat_fields] = c * 3.5;
+                    stats[m * p.stat_fields + 1] = c * 13.0;
+                    stats[m * p.stat_fields + 2] = c;
+                }
+                TaskPartial::Netflix { stats }
+            })
+            .collect();
+        // the executed path collects partials into seq-indexed slots,
+        // so whatever order results *arrive* in, the weights (and the
+        // plan) are computed from the same seq-ordered vector
+        let mut slots: Vec<Option<TaskPartial>> = vec![None; n];
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        for &seq in &order {
+            slots[seq] = Some(partials[seq].clone());
+        }
+        let collected: Vec<TaskPartial> =
+            slots.into_iter().map(|s| s.unwrap()).collect();
+        let w_seq =
+            key_weights(Workload::NetflixLo, &p, &partials)
+                .map_err(|e| e.to_string())?;
+        let w_arr =
+            key_weights(Workload::NetflixLo, &p, &collected)
+                .map_err(|e| e.to_string())?;
+        prop_assert!(w_seq == w_arr, "weights depend on arrival order");
+        for pt in [Partitioner::Hash, Partitioner::Skew] {
+            let a = build_plan(pt, &w_seq, 4);
+            let b = build_plan(pt, &w_arr, 4);
+            prop_assert!(
+                a == b,
+                "{}: assignment depends on arrival order",
+                pt.name()
+            );
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_slower_observations_never_raise_a_slots_score() {
     check("slower slot never gains", 100, |rng: &mut Rng| {
