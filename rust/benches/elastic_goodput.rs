@@ -1,0 +1,220 @@
+//! Elastic membership vs restart-based recovery under a seeded
+//! kill/add schedule (DESIGN.md §14).
+//!
+//!     cargo bench --bench elastic_goodput
+//!
+//! Both arms run the same job through the same deterministic
+//! [`Turbulence`]: worker 2 crashes (unclean exit, no goodbye) at its
+//! 20th task. The restart arm is the historical semantics — the loss
+//! aborts the attempt and `run_cluster_with_recovery` replays the
+//! whole job. The elastic arm absorbs the loss live: the membership
+//! ledger re-dispatches only the dead slot's in-flight window, the
+//! survivors keep going, and a late `bts worker --connect` joins
+//! mid-job to replace the lost capacity.
+//!
+//! The headline metric is goodput — distinct completed tiny tasks per
+//! wall-clock second, failed-attempt time included — written to
+//! `results/BENCH_elastic.json`. The run asserts the thesis-level
+//! claims: identical statistics on every arm, zero restarts on the
+//! elastic arm, re-dispatch bounded by the lost in-flight window (not
+//! the whole job), and elastic goodput at or above the restart
+//! baseline's.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bts::data::{ModelParams, Workload};
+use bts::dfs::LatencyModel;
+use bts::exec::{
+    run_cluster, run_cluster_with_recovery, Backend, ExecConfig,
+    ExecResult,
+};
+use bts::kneepoint::TaskSizing;
+use bts::net::run_worker;
+use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
+use bts::util::bench::Bench;
+use bts::util::json::{num, obj, s, Json};
+use bts::util::testutil::Turbulence;
+use bts::workloads::build_small;
+
+const WORKERS: usize = 4;
+const KILLED_WORKER: usize = 2;
+const KILL_AT_TASK: u64 = 20;
+const SAMPLES: usize = 160;
+const SEED: u64 = 0xB75;
+const ITERS: usize = 3;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+/// Base config shared by both arms: tiny tasks over a data plane with
+/// a real (slept) per-fetch latency, so wall-clock goodput measures
+/// pipeline behaviour rather than pure in-memory dispatch.
+fn base_cfg() -> ExecConfig {
+    ExecConfig {
+        sizing: TaskSizing::Tiniest,
+        workers: WORKERS,
+        seed: SEED,
+        latency: LatencyModel {
+            base_s: 1e-3,
+            per_mib_s: 0.0,
+            per_inflight_s: 0.0,
+            sleep: true,
+        },
+        ..Default::default()
+    }
+}
+
+/// Each run arms a fresh kill — the rule fires once per Turbulence
+/// instance, which is exactly what the restart arm needs (attempt 2
+/// replays clean) but would leave later iterations undisturbed.
+fn kill_schedule() -> Arc<Turbulence> {
+    Arc::new(Turbulence::new(SEED).kill_at(KILLED_WORKER, KILL_AT_TASK))
+}
+
+struct Arm {
+    result: ExecResult,
+    wall_s: f64,
+}
+
+/// Restart-based recovery (the historical baseline): the kill aborts
+/// attempt 1, attempt 2 replays the whole job.
+fn run_restart(backend: &Arc<Backend>) -> Arm {
+    let ds = build_small(Workload::Eaglet, &ModelParams::default(), SAMPLES);
+    let cfg = ExecConfig {
+        turbulence: Some(kill_schedule()),
+        ..base_cfg()
+    };
+    let t = Instant::now();
+    let result =
+        run_cluster_with_recovery(ds.as_ref(), backend.clone(), &cfg, 3)
+            .expect("restart arm");
+    Arm { result, wall_s: t.elapsed().as_secs_f64() }
+}
+
+/// Elastic absorption: the same kill is a ledger re-dispatch, and a
+/// late TCP joiner replaces the lost slot mid-job.
+fn run_elastic(backend: &Arc<Backend>) -> Arm {
+    let ds = build_small(Workload::Eaglet, &ModelParams::default(), SAMPLES);
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 0).expect("bind");
+    let addr = remote.addr();
+    let joiner = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(5));
+        run_worker(&addr, native(), &RemoteWorkerOpts::default())
+    });
+    let cfg = ExecConfig {
+        elastic: true,
+        remote: Some(remote),
+        turbulence: Some(kill_schedule()),
+        ..base_cfg()
+    };
+    let t = Instant::now();
+    let result =
+        run_cluster(ds.as_ref(), backend.clone(), &cfg).expect("elastic arm");
+    let wall_s = t.elapsed().as_secs_f64();
+    joiner
+        .join()
+        .unwrap()
+        .expect("the mid-job joiner must be admitted");
+    Arm { result, wall_s }
+}
+
+fn goodput(arm: &Arm) -> f64 {
+    arm.result.report.tasks as f64 / arm.wall_s.max(1e-9)
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn record(mode: &str, arm: &Arm) -> Json {
+    obj(vec![
+        ("mode", s(mode)),
+        ("tasks", num(arm.result.report.tasks as f64)),
+        ("wall_s", num(arm.wall_s)),
+        ("goodput_tasks_per_s", num(goodput(arm))),
+        ("restarts", num(arm.result.report.restarts as f64)),
+        ("re_dispatched", num(arm.result.re_dispatched as f64)),
+    ])
+}
+
+fn main() {
+    let backend = native();
+    let mut b = Bench::new("elastic_goodput");
+    let inflight_window = base_cfg().inflight as u64;
+
+    let mut records = Vec::new();
+    let mut restart_goodput = Vec::new();
+    let mut elastic_goodput = Vec::new();
+    let mut outputs = Vec::new();
+
+    for i in 0..ITERS {
+        let restart = run_restart(&backend);
+        let elastic = run_elastic(&backend);
+        assert_eq!(
+            restart.result.output, elastic.result.output,
+            "recovery strategy changed the statistic"
+        );
+        assert_eq!(
+            restart.result.report.restarts, 1,
+            "the kill must cost the restart arm exactly one attempt"
+        );
+        assert_eq!(
+            elastic.result.report.restarts, 0,
+            "the elastic arm must absorb the kill without restarting"
+        );
+        assert!(
+            elastic.result.re_dispatched >= 1,
+            "the dead slot held in-flight work; the ledger must \
+             re-dispatch it"
+        );
+        assert!(
+            elastic.result.re_dispatched <= inflight_window,
+            "re-executed {} tasks — more than the lost slot's \
+             in-flight window of {} (whole-job re-execution?)",
+            elastic.result.re_dispatched,
+            inflight_window
+        );
+        restart_goodput.push(goodput(&restart));
+        elastic_goodput.push(goodput(&elastic));
+        if i == 0 {
+            records.push(record("restart_recovery", &restart));
+            records.push(record("elastic_ledger", &elastic));
+        }
+        outputs.push(elastic.result.output);
+    }
+    assert!(
+        outputs.windows(2).all(|w| w[0] == w[1]),
+        "elastic runs must be deterministic across repeats"
+    );
+
+    let restart_med = median(restart_goodput);
+    let elastic_med = median(elastic_goodput);
+    let ratio = elastic_med / restart_med.max(1e-9);
+    b.record("restart_goodput", restart_med, "tasks/s");
+    b.record("elastic_goodput", elastic_med, "tasks/s");
+    b.record("goodput_ratio", ratio, "x");
+    records.push(obj(vec![
+        ("mode", s("ratio")),
+        ("restart_goodput_tasks_per_s", num(restart_med)),
+        ("elastic_goodput_tasks_per_s", num(elastic_med)),
+        ("goodput_ratio", num(ratio)),
+    ]));
+
+    let path = bts::util::bench_record::write("elastic", records)
+        .expect("write BENCH_elastic.json");
+    println!("wrote {path}");
+    b.finish();
+
+    // The acceptance bar: task-level checkpointing must beat paying a
+    // whole extra attempt. The restart arm replays every tiny task;
+    // the elastic arm re-executes at most one in-flight window.
+    assert!(
+        ratio >= 1.0,
+        "elastic goodput ({elastic_med:.1} tasks/s) fell below the \
+         restart baseline ({restart_med:.1} tasks/s)"
+    );
+}

@@ -293,6 +293,15 @@ impl Dfs {
             .map(|n| n.bytes_served.load(Ordering::Relaxed))
             .sum()
     }
+
+    /// Total bytes resident across every data node, replicas included
+    /// — the store's live footprint. Leak tests snapshot this before a
+    /// job and assert it returns there after unstaging (blocks *and*
+    /// shuffle fragments), including runs that lost a worker mid-
+    /// shuffle.
+    pub fn stored_bytes(&self) -> usize {
+        self.nodes.iter().map(|n| n.stored_bytes()).sum()
+    }
 }
 
 #[cfg(test)]

@@ -73,6 +73,16 @@ impl Ring {
     pub fn grow(&self) -> Ring {
         Ring::new(self.nodes + 1, self.vnodes)
     }
+
+    /// Drop the highest-numbered node (elastic membership shrink).
+    /// Vnode positions are per-node and independent of the node count,
+    /// so survivors keep every key they already own — only the
+    /// departed node's ~1/n share re-homes, without refetching
+    /// anything the survivors have cached.
+    pub fn shrink(&self) -> Ring {
+        assert!(self.nodes > 1, "cannot shrink a one-node ring");
+        Ring::new(self.nodes - 1, self.vnodes)
+    }
 }
 
 #[cfg(test)]
@@ -159,7 +169,7 @@ mod tests {
         check("ring shrink monotone", 20, |rng| {
             let n = rng.range(4, 11) as usize;
             let big = Ring::new(n, 48);
-            let small = Ring::new(n - 1, 48);
+            let small = big.shrink();
             let total = 2000;
             let mut moved = 0;
             for k in 0..total {
@@ -217,6 +227,12 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot shrink")]
+    fn shrink_below_one_node_panics() {
+        let _ = Ring::new(1, 8).shrink();
     }
 
     #[test]

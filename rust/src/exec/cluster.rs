@@ -49,6 +49,7 @@
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::backend::Backend;
 use crate::cache::{CacheLayer, CacheStats};
@@ -65,16 +66,18 @@ use crate::dfs::{
 };
 use crate::error::{Error, Result};
 use crate::kneepoint::TaskSizing;
+use crate::membership::{Acceptor, Ledger, MemberEvent, TaskKind};
 use crate::metrics::{JobReport, Timer};
+use crate::net::protocol::{ACCEPT_TIMEOUT, PING_INTERVAL};
 use crate::runtime::Exec;
 use crate::scheduler::{
     inflight_target, placement_score, DoneKind, ResponseTimeTracker,
     SchedConfig, SchedSnapshot, SpeculationState, TaskSpec,
-    TwoStepScheduler, SPECULATION_POLL,
+    TwoStepScheduler,
 };
 use crate::reduce::{PartitionPlan, Partitioner};
 use crate::transport::{
-    accept_links, teardown, BodyCfg, Down, ReduceDone, ReduceEnvelope,
+    teardown, BodyCfg, Down, PumpCfg, ReduceDone, ReduceEnvelope,
     ReduceSpec, RemoteWorkers, TaskDone, TaskEnvelope, Up, WorkerLink,
 };
 use crate::util::json::{num, obj, Json};
@@ -130,6 +133,16 @@ pub struct ExecConfig {
     /// Key → reduce-partition assignment policy (only consulted when
     /// `reduce_tasks > 1`).
     pub partitioner: Partitioner,
+    /// Elastic membership (DESIGN.md §14): admit late `bts worker
+    /// --connect` joins mid-job, absorb `bts drain` departures, and
+    /// turn worker loss into a ledger re-dispatch of the dead slot's
+    /// in-flight window instead of a job-level restart. Off, the
+    /// membership is frozen at startup and loss aborts the attempt
+    /// (the historical recovery semantics).
+    pub elastic: bool,
+    /// Remote-link heartbeat interval in milliseconds: the worker's
+    /// ping cadence, and (×6) the leader pump's silent-peer threshold.
+    pub heartbeat_ms: u64,
 }
 
 impl Default for ExecConfig {
@@ -154,6 +167,8 @@ impl Default for ExecConfig {
             platform: "bts-exec".into(),
             reduce_tasks: 1,
             partitioner: Partitioner::Hash,
+            elastic: false,
+            heartbeat_ms: PING_INTERVAL.as_millis() as u64,
         }
     }
 }
@@ -214,6 +229,9 @@ pub struct ExecResult {
     /// Shared block-cache counters, when `cache_mb > 0`.
     pub cache: Option<CacheStats>,
     pub workers: Vec<WorkerStats>,
+    /// Units re-dispatched after membership loss (drain or crash) —
+    /// the task-level-checkpoint alternative to `report.restarts`.
+    pub re_dispatched: u64,
 }
 
 impl ExecResult {
@@ -235,6 +253,7 @@ impl ExecResult {
             ("sched_affinity_routed", num(self.sched.affinity_routed as f64)),
             ("sched_speculated", num(self.sched.speculated as f64)),
             ("sched_won_by_clone", num(self.sched.won_by_clone as f64)),
+            ("membership_re_dispatched", num(self.re_dispatched as f64)),
             ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
             // disambiguates "cache off" from "cache on, zero hits" in
             // the cross-PR trajectory
@@ -331,6 +350,7 @@ pub(crate) struct FinishedJob {
     pub(crate) sched: SchedSnapshot,
     pub(crate) overhead: SchedOverhead,
     pub(crate) rf_trajectory: Vec<usize>,
+    pub(crate) re_dispatched: u64,
 }
 
 /// The per-job half of the leader: owns this job's scheduler and
@@ -367,6 +387,11 @@ pub(crate) struct JobCtx {
     /// Leader-side speculation bookkeeping (also the source of the
     /// dispatch → first-completion turnaround times).
     spec: SpeculationState,
+    /// Task-level checkpoint index (DESIGN.md §14): which `(kind, seq,
+    /// attempt)` units are riding on which slots, so a membership loss
+    /// re-dispatches exactly the dead slot's sole-carrier in-flight
+    /// window — everything completed stays completed.
+    ledger: Ledger,
     /// Response-time tracker (dynamic mode); shared pool-wide by the
     /// serve layer, private to the run for solo exec.
     tracker: Option<Arc<ResponseTimeTracker>>,
@@ -461,6 +486,7 @@ impl JobCtx {
             cache_hits: 0,
             cache_misses: 0,
             spec: SpeculationState::new(),
+            ledger: Ledger::new(ns.clone()),
             tracker,
             affinity,
             ns,
@@ -489,7 +515,19 @@ impl JobCtx {
         self.dispatch_s += t.secs();
         self.dispatch_calls += 1;
         if let Some(spec) = &next {
-            self.spec.on_dispatch(spec, worker, self.cfg.sched.speculate);
+            // Elastic runs retain specs too: a lost slot's in-flight
+            // window re-dispatches from these instead of restarting.
+            self.spec.on_dispatch(
+                spec,
+                worker,
+                self.cfg.sched.speculate || self.cfg.elastic,
+            );
+            self.ledger.dispatched(
+                TaskKind::Map,
+                spec.task.seq,
+                self.cfg.attempt,
+                worker,
+            );
         }
         next
     }
@@ -502,6 +540,7 @@ impl JobCtx {
     /// partials or the job-local feedback — keyed on task id, so
     /// arrival order never matters.
     pub(crate) fn on_done(&mut self, d: TaskDone) -> bool {
+        self.ledger.completed(TaskKind::Map, d.seq);
         let info = self.spec.on_done(d.seq, d.worker);
         if info.kind == DoneKind::Duplicate || self.partials[d.seq].is_some()
         {
@@ -625,6 +664,12 @@ impl JobCtx {
                 });
             let Some(w) = target else { continue };
             if self.spec.mark_cloned(seq, w) {
+                self.ledger.dispatched(
+                    TaskKind::Map,
+                    seq,
+                    self.cfg.attempt,
+                    w,
+                );
                 free.retain(|&x| x != w);
                 clones.push((w, spec));
             }
@@ -637,6 +682,77 @@ impl JobCtx {
     /// [`SpeculationState::cancel_clone`]).
     pub(crate) fn cancel_clone(&mut self, seq: usize) {
         self.spec.cancel_clone(seq);
+    }
+
+    /// Absorb a joining slot (elastic membership): grow the scheduler
+    /// (fresh queue, probe step pending, feedback lane) and give the
+    /// newcomer a pessimistic response-time prior so dynamic placement
+    /// ramps it up instead of trusting it blindly. Returns the new
+    /// slot index.
+    pub(crate) fn add_worker(&mut self) -> usize {
+        let slot = self.sched.add_worker();
+        if let Some(t) = &self.tracker {
+            t.seed_pessimistic(slot);
+        }
+        slot
+    }
+
+    /// A slot left the membership (drained or lost): reclaim its
+    /// queued-but-unclaimed tasks into the pending pool, and re-dispatch
+    /// exactly the ledger's sole-carrier in-flight units — map specs
+    /// re-enter the scheduler, reduce partitions re-enter the reduce
+    /// queue. Durable outputs (collected partials, staged shuffle
+    /// fragments) are untouched, which is the task-level-checkpoint
+    /// claim. Errs only when a stranded unit's spec cannot be
+    /// recovered — the caller falls back to job-level recovery.
+    /// Returns how many units were re-dispatched.
+    pub(crate) fn on_member_lost(&mut self, worker: usize) -> Result<usize> {
+        let t = Timer::start();
+        self.sched.retire_worker(worker);
+        let stranded = self.ledger.inflight_of(worker);
+        let mut map_specs = Vec::new();
+        let mut redispatched = 0u64;
+        for (kind, seq) in stranded {
+            match kind {
+                TaskKind::Map => {
+                    if self.partials[seq].is_some() {
+                        continue;
+                    }
+                    let Some(spec) = self.spec.abandon(seq) else {
+                        return Err(Error::Scheduler(format!(
+                            "worker {worker} left with map task {seq} in \
+                             flight and no retained spec; falling back to \
+                             job-level recovery"
+                        )));
+                    };
+                    map_specs.push(spec);
+                    redispatched += 1;
+                }
+                TaskKind::Reduce => {
+                    if self.reduced[seq].is_some() {
+                        continue;
+                    }
+                    let Some(spec) = self.rspecs[seq].clone() else {
+                        return Err(Error::Scheduler(format!(
+                            "worker {worker} left with reduce partition \
+                             {seq} in flight and no retained spec; falling \
+                             back to job-level recovery"
+                        )));
+                    };
+                    self.rqueue.push_back(spec);
+                    self.rdispatch[seq] = None;
+                    self.rprimary[seq] = None;
+                    self.rcloned[seq] = false;
+                    redispatched += 1;
+                }
+            }
+        }
+        self.sched.requeue(map_specs);
+        self.ledger.forget_worker(worker);
+        self.ledger.note_redispatch(redispatched);
+        self.dispatch_s += t.secs();
+        self.dispatch_calls += 1;
+        Ok(redispatched as usize)
     }
 
     /// How many of `spec`'s blocks the affinity registry attributes to
@@ -743,6 +859,12 @@ impl JobCtx {
             let p = spec.partition as usize;
             self.rdispatch[p] = Some(Timer::start());
             self.rprimary[p] = Some(worker);
+            self.ledger.dispatched(
+                TaskKind::Reduce,
+                p,
+                self.cfg.attempt,
+                worker,
+            );
         }
         next
     }
@@ -753,6 +875,7 @@ impl JobCtx {
     /// order, so whichever bit-identical copy lands first wins.
     pub(crate) fn on_reduce_done(&mut self, d: ReduceDone) -> bool {
         let p = d.partition as usize;
+        self.ledger.completed(TaskKind::Reduce, p);
         let latency = self.rdispatch[p].as_ref().map_or(0.0, |t| t.secs());
         if let Some(t) = &self.tracker {
             t.observe_task(d.worker, latency);
@@ -823,6 +946,7 @@ impl JobCtx {
             };
             self.rcloned[p] = true;
             self.reduce_speculated += 1;
+            self.ledger.dispatched(TaskKind::Reduce, p, self.cfg.attempt, w);
             free.retain(|&x| x != w);
             clones.push((w, spec));
         }
@@ -957,6 +1081,7 @@ impl JobCtx {
             sched,
             overhead,
             rf_trajectory: self.rf_trajectory,
+            re_dispatched: self.ledger.re_dispatched(),
         })
     }
 }
@@ -1033,9 +1158,42 @@ fn top_up(
     }
 }
 
+/// Absorb a joining worker into a running attempt (elastic
+/// membership): grow every per-slot vector, register the slot with the
+/// scheduler and tracker via [`JobCtx::add_worker`], and immediately
+/// top the newcomer up — the refill's busy-skip sweep and steal path
+/// rebalance queued work onto it from there.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    ctx: &mut JobCtx,
+    links: &mut Vec<WorkerLink>,
+    retired: &mut Vec<bool>,
+    inflight: &mut Vec<usize>,
+    worker_stats: &mut Vec<Option<WorkerStats>>,
+    link: WorkerLink,
+    base_target: usize,
+    attempt: u32,
+    ns: &Arc<str>,
+    speculate: bool,
+) {
+    let slot = ctx.add_worker();
+    debug_assert_eq!(slot, links.len(), "acceptor slots are sequential");
+    links.push(link);
+    retired.push(false);
+    inflight.push(0);
+    worker_stats.push(None);
+    top_up(
+        ctx, links, retired, inflight, slot, base_target, attempt, ns,
+        speculate,
+    );
+}
+
 /// Run one cluster attempt. A worker failure — injected, real, or a
 /// dropped remote link — surfaces as `Err` after an orderly abort;
-/// job-level recovery restarts the whole job, never a task.
+/// job-level recovery restarts the whole job, never a task. With
+/// [`ExecConfig::elastic`] on, membership changes (joins, drains,
+/// crashes) are absorbed live instead: the ledger re-dispatches only
+/// the departed slot's in-flight window.
 pub fn run_cluster(
     dataset: &dyn Dataset,
     backend: Arc<Backend>,
@@ -1120,18 +1278,53 @@ pub fn run_cluster(
             "bts-exec-worker",
         )?);
     }
+    // The membership acceptor replaces the one-shot accept loop: it
+    // keeps admitting for the whole attempt, so late `bts worker
+    // --connect`s join mid-job (elastic) or get a versioned refusal
+    // frame (frozen) instead of silently rotting in the backlog.
+    let mut acceptor: Option<Acceptor> = None;
+    let mut pending_drains: Vec<usize> = Vec::new();
     if let Some(remote) = &cfg.remote {
-        match accept_links(remote, cfg.workers, &dfs, &up_tx, tracker.clone())
-        {
-            Ok(remote_links) => links.extend(remote_links),
+        let acc = match Acceptor::spawn(
+            remote.listener.clone(),
+            cfg.workers,
+            remote.count,
+            cfg.elastic,
+            dfs.clone(),
+            up_tx.clone(),
+            tracker.clone(),
+            PumpCfg::from_heartbeat_ms(cfg.heartbeat_ms),
+        ) {
+            Ok(a) => a,
             Err(e) => {
                 // Orderly teardown of whatever already stood up.
                 teardown(links);
                 return Err(e);
             }
+        };
+        // Initial quota: the statically requested --workers-remote set,
+        // with the same per-worker patience as before.
+        while links.len() < cfg.workers + remote.count {
+            match acc.wait_event(ACCEPT_TIMEOUT) {
+                Some(MemberEvent::Joined(link)) => links.push(link),
+                Some(MemberEvent::DrainRequested(w)) => {
+                    pending_drains.push(w);
+                }
+                None => {
+                    acc.stop();
+                    teardown(links);
+                    return Err(Error::Protocol(format!(
+                        "timed out waiting for the initial {} remote \
+                         worker(s)",
+                        remote.count
+                    )));
+                }
+            }
         }
+        acceptor = Some(acc);
     }
     drop(up_tx);
+    let elastic = cfg.elastic;
 
     let target = cfg.inflight.max(1);
     let mut inflight = vec![0usize; slots];
@@ -1153,6 +1346,14 @@ pub fn run_cluster(
     let mut worker_stats: Vec<Option<WorkerStats>> = vec![None; slots];
     let mut first_err: Option<Error> = None;
 
+    // Drain requests that raced the standup apply now that every
+    // initial slot is live.
+    for w in pending_drains {
+        if w < links.len() && !retired[w] {
+            let _ = links[w].send(Down::Drain);
+        }
+    }
+
     // Shut every live worker down (orderly): a worker mid-task finishes
     // it, then sees the Shutdown during its drain and abandons anything
     // still queued — which is what reclaims dead speculative clones.
@@ -1165,12 +1366,19 @@ pub fn run_cluster(
         }
     };
 
-    while worker_stats.iter().any(|s| s.is_none()) {
-        // With speculation armed the leader wakes on a short timer to
-        // compare in-flight task ages against the straggler threshold;
-        // otherwise it blocks as before.
-        let msg = if speculate {
-            match up_rx.recv_timeout(SPECULATION_POLL) {
+    // Speculation and the membership plane both need the leader to
+    // wake on a timer — the former to age in-flight tasks, the latter
+    // to poll acceptor events; a purely static run blocks as before.
+    let poll = speculate || elastic || acceptor.is_some();
+    let poll_interval = cfg.sched.straggler_poll();
+    while worker_stats.iter().any(|s| s.is_none())
+        || (elastic
+            && acceptor.is_some()
+            && first_err.is_none()
+            && !ctx.is_complete())
+    {
+        let msg = if poll {
+            match up_rx.recv_timeout(poll_interval) {
                 Ok(m) => Some(m),
                 Err(mpsc::RecvTimeoutError::Timeout) => None,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -1205,7 +1413,7 @@ pub fn run_cluster(
                     // that only dead clones still cover.
                     shutdown_all(&links, &mut retired);
                 } else if shuffle_started {
-                    for slot in 0..slots {
+                    for slot in 0..links.len() {
                         top_up(
                             &mut ctx,
                             &links,
@@ -1252,6 +1460,38 @@ pub fn run_cluster(
                     );
                 }
             }
+            Some(Up::Lost { worker, error: _ })
+                if elastic && !ctx.is_complete() =>
+            {
+                // Elastic loss absorption: the dead slot's queued work
+                // folds back into the pool and its sole-carrier
+                // in-flight units re-dispatch; survivors keep going.
+                retired[worker] = true;
+                inflight[worker] = 0;
+                match ctx.on_member_lost(worker) {
+                    Ok(_) => {
+                        for slot in 0..links.len() {
+                            if !retired[slot] {
+                                top_up(
+                                    &mut ctx,
+                                    &links,
+                                    &mut retired,
+                                    &mut inflight,
+                                    slot,
+                                    target,
+                                    cfg.attempt,
+                                    &ns,
+                                    speculate,
+                                );
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                        shutdown_all(&links, &mut retired);
+                    }
+                }
+            }
             Some(Up::TaskFailed { error, .. })
             | Some(Up::Lost { error, .. }) => {
                 // A failure arriving after the statistic is fully
@@ -1265,20 +1505,176 @@ pub fn run_cluster(
                 // and stops at the Shutdown marker.
                 shutdown_all(&links, &mut retired);
             }
+            Some(Up::Drained { worker, returned: _ }) => {
+                // Graceful departure (`bts drain` or a SIGTERMed
+                // worker): its returned queue and sole-carrier
+                // in-flight units redistribute over the survivors. The
+                // worker follows up with a clean Exited.
+                retired[worker] = true;
+                inflight[worker] = 0;
+                match ctx.on_member_lost(worker) {
+                    Ok(_) => {
+                        for slot in 0..links.len() {
+                            if !retired[slot] {
+                                top_up(
+                                    &mut ctx,
+                                    &links,
+                                    &mut retired,
+                                    &mut inflight,
+                                    slot,
+                                    target,
+                                    cfg.attempt,
+                                    &ns,
+                                    speculate,
+                                );
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // No retained spec to re-dispatch from: fall
+                        // back to job-level recovery.
+                        if !ctx.is_complete() {
+                            first_err.get_or_insert(e);
+                        }
+                        shutdown_all(&links, &mut retired);
+                    }
+                }
+            }
             // Solo runs never send Abort, so acks cannot arrive.
             Some(Up::Aborted { .. }) => {}
             Some(Up::Exited { worker, executed, clean }) => {
+                let lost_mid_job = !clean
+                    && worker_stats[worker].is_none()
+                    && !ctx.is_complete();
                 worker_stats[worker] = Some(WorkerStats {
                     worker,
                     executed,
                     clean_shutdown: clean,
                 });
+                if lost_mid_job {
+                    // A crash with no goodbye (in-proc kill, or the
+                    // pump's synthesized exit after a Lost).
+                    retired[worker] = true;
+                    inflight[worker] = 0;
+                    if elastic {
+                        match ctx.on_member_lost(worker) {
+                            Ok(_) => {
+                                for slot in 0..links.len() {
+                                    if !retired[slot] {
+                                        top_up(
+                                            &mut ctx,
+                                            &links,
+                                            &mut retired,
+                                            &mut inflight,
+                                            slot,
+                                            target,
+                                            cfg.attempt,
+                                            &ns,
+                                            speculate,
+                                        );
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                first_err.get_or_insert(e);
+                                shutdown_all(&links, &mut retired);
+                            }
+                        }
+                    } else {
+                        first_err.get_or_insert(Error::Scheduler(format!(
+                            "worker {worker} exited uncleanly mid-job"
+                        )));
+                        shutdown_all(&links, &mut retired);
+                    }
+                }
+            }
+        }
+        // Membership plane: absorb joins, route drain requests. A
+        // joiner arriving after the outcome is settled is dismissed
+        // politely instead of being grown into a finished job.
+        if let Some(acc) = &acceptor {
+            while let Some(ev) = acc.try_event() {
+                match ev {
+                    MemberEvent::Joined(link) => {
+                        if first_err.is_some() || ctx.is_complete() {
+                            let _ = link.send(Down::Shutdown);
+                            link.join();
+                        } else {
+                            admit(
+                                &mut ctx,
+                                &mut links,
+                                &mut retired,
+                                &mut inflight,
+                                &mut worker_stats,
+                                link,
+                                target,
+                                cfg.attempt,
+                                &ns,
+                                speculate,
+                            );
+                        }
+                    }
+                    MemberEvent::DrainRequested(w) => {
+                        if w < links.len() && !retired[w] {
+                            let _ = links[w].send(Down::Drain);
+                        }
+                    }
+                }
+            }
+        }
+        // Membership stall: every slot has left with the job
+        // incomplete. An elastic leader waits (bounded by the accept
+        // patience) for a rescuing joiner; anyone else hands the
+        // attempt to job-level recovery.
+        if first_err.is_none()
+            && !ctx.is_complete()
+            && (0..links.len()).all(|w| retired[w])
+        {
+            let mut rescued = false;
+            if elastic {
+                if let Some(acc) = &acceptor {
+                    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+                    loop {
+                        let left =
+                            deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match acc.wait_event(left) {
+                            Some(MemberEvent::Joined(link)) => {
+                                admit(
+                                    &mut ctx,
+                                    &mut links,
+                                    &mut retired,
+                                    &mut inflight,
+                                    &mut worker_stats,
+                                    link,
+                                    target,
+                                    cfg.attempt,
+                                    &ns,
+                                    speculate,
+                                );
+                                rescued = true;
+                                break;
+                            }
+                            Some(MemberEvent::DrainRequested(_)) => {}
+                            None => break,
+                        }
+                    }
+                }
+            }
+            if !rescued {
+                first_err.get_or_insert(Error::Scheduler(
+                    "every worker left the membership mid-job and no \
+                     replacement joined"
+                        .into(),
+                ));
             }
         }
         // Speculative re-execution: clone overdue in-flight tasks to
         // the best idle slots (first bit-identical result wins).
         if speculate && first_err.is_none() && !ctx.is_complete() {
-            let idle: Vec<usize> = (0..slots)
+            let idle: Vec<usize> = (0..links.len())
                 .filter(|&w| !retired[w] && inflight[w] == 0)
                 .collect();
             for (w, spec) in ctx.clone_candidates(&idle) {
@@ -1301,7 +1697,7 @@ pub fn run_cluster(
             }
             // Overdue reduce partitions get the same treatment: first
             // bit-identical copy wins, the loser is dropped on arrival.
-            let idle: Vec<usize> = (0..slots)
+            let idle: Vec<usize> = (0..links.len())
                 .filter(|&w| !retired[w] && inflight[w] == 0)
                 .collect();
             for (w, rspec) in ctx.reduce_clone_candidates(&idle) {
@@ -1320,6 +1716,13 @@ pub fn run_cluster(
                 }
             }
         }
+    }
+
+    // The membership plane closes before the links do: queued joiners
+    // are dismissed with a clean Shutdown, late connects get a closed
+    // port instead of a wedged backlog.
+    if let Some(acc) = acceptor.take() {
+        acc.stop();
     }
 
     // Leader joins every link before touching the partials — the
@@ -1342,6 +1745,7 @@ pub fn run_cluster(
         sched: fin.sched,
         overhead: fin.overhead,
         rf_trajectory: fin.rf_trajectory,
+        re_dispatched: fin.re_dispatched,
         dfs_bytes_served: dfs.bytes_served(),
         cache: dfs.cache_stats(),
         workers: worker_stats

@@ -37,6 +37,7 @@ pub mod exec;
 pub mod figures;
 pub mod kneepoint;
 pub mod config;
+pub mod membership;
 pub mod metrics;
 pub mod net;
 pub mod platforms;

@@ -12,6 +12,7 @@
 //! bts calibrate                                 measure sim constants from PJRT
 //! bts plan --slo SECONDS [--workload W]         SLO planner (Fig 13 machinery)
 //! bts worker --connect ADDR [--cache-mb MB]     serve as a remote map slot
+//! bts drain WORKER --connect ADDR               ask a leader to drain a slot
 //! bts list                                      list figure ids
 //! ```
 //!
@@ -55,6 +56,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         Some("plan") => cmd_plan(&args[1..]),
         Some("worker") => cmd_worker(&args[1..]),
+        Some("drain") => cmd_drain(&args[1..]),
         Some("list") => {
             Flags::parse(&args[1..], &[])?;
             for f in all() {
@@ -82,12 +84,19 @@ commands:
        [--cache-mb MB] [--affinity on|off] [--speculate on|off]
        [--straggler-pct P] [--out-json FILE]
        [--reduce-tasks R] [--partitioner hash|skew]
-       [--listen ADDR --workers-remote N]
+       [--listen ADDR --workers-remote N] [--elastic on|off]
+       [--heartbeat-ms MS] [--straggler-poll-ms MS]
                                     run a job through the cluster
                                     executor (native kernels when
                                     artifacts are unavailable); with
                                     --listen, accepts N `bts worker`
                                     processes as extra map slots;
+                                    --elastic keeps the listener open
+                                    for the whole job: late workers
+                                    join mid-job, drained/lost ones
+                                    leave with only their in-flight
+                                    tasks re-dispatched (task-level
+                                    checkpointing, no job restart);
                                     --speculate clones straggling
                                     tasks past the p<P> response-time
                                     threshold (first result wins);
@@ -98,9 +107,12 @@ commands:
   serve [--jobs N] [--workers N] [--rate R] [--max-active N]
         [--samples N] [--seed S] [--cache-mb MB] [--affinity on|off]
         [--speculate on|off] [--straggler-pct P]
-        [--listen ADDR --workers-remote N]
+        [--listen ADDR --workers-remote N] [--elastic on|off]
+        [--heartbeat-ms MS] [--straggler-poll-ms MS]
                                     sustained mixed load through the
                                     long-lived multi-tenant service;
+                                    with --elastic, workers join and
+                                    leave the warm pool mid-session;
                                     writes results/BENCH_serve.json
   submit [--workload W] [--samples N] [--workers N] [--deadline S]
          [--reduce-tasks R] [--partitioner hash|skew]
@@ -110,9 +122,17 @@ commands:
   calibrate                         measure compute s/MiB from artifacts
   plan --slo S [--workload W]       best configuration under an SLO
   worker --connect A [--cache-mb MB] [--prefetch-k N]
+         [--heartbeat-ms MS]
                                     join a leader as a remote map slot
                                     (serves until the leader shuts the
-                                    session down)
+                                    session down, it is drained, or it
+                                    gets SIGTERM — which drains too);
+                                    an elastic leader admits it
+                                    mid-job, a static one refuses it
+                                    with a versioned error
+  drain WORKER --connect A          ask the leader to drain map slot
+                                    WORKER: it finishes its running
+                                    task, returns queued work, exits
   list                              list figure ids
 
 flags take `--name value` or `--name=value`; unknown flags are errors.
@@ -260,25 +280,68 @@ fn print_output(output: &bts::coordinator::JobOutput) {
     }
 }
 
+/// `--elastic on|off` + `--heartbeat-ms MS` + `--straggler-poll-ms MS`,
+/// parsed strictly. The defaults are the protocol's ping interval and
+/// the scheduler's speculation poll — the values that were hard-coded
+/// before they became flags.
+fn elastic_flags(f: &Flags) -> Result<(bool, u64, u64)> {
+    let elastic = on_off_flag(f, "--elastic", false)?;
+    let heartbeat_ms: u64 = f.num(
+        "--heartbeat-ms",
+        bts::net::protocol::PING_INTERVAL.as_millis() as u64,
+    )?;
+    if heartbeat_ms == 0 {
+        return Err(Error::Config(
+            "--heartbeat-ms must be at least 1".into(),
+        ));
+    }
+    let straggler_poll_ms: u64 = f.num(
+        "--straggler-poll-ms",
+        bts::scheduler::SPECULATION_POLL.as_millis() as u64,
+    )?;
+    if straggler_poll_ms == 0 {
+        return Err(Error::Config(
+            "--straggler-poll-ms must be at least 1".into(),
+        ));
+    }
+    Ok((elastic, heartbeat_ms, straggler_poll_ms))
+}
+
 /// `--listen ADDR` + `--workers-remote N` → remote map slots, parsed
-/// strictly (each flag requires the other).
-fn remote_flags(f: &Flags) -> Result<Option<bts::transport::RemoteWorkers>> {
+/// strictly. Statically, each flag requires the other; with elastic
+/// membership on, `--listen` alone is legal — the leader starts with
+/// its local slots and admits workers as they connect.
+fn remote_flags(
+    f: &Flags,
+    elastic: bool,
+) -> Result<Option<bts::transport::RemoteWorkers>> {
     let count: usize = f.num("--workers-remote", 0)?;
     match (f.get("--listen"), count) {
-        (Some(addr), n) if n > 0 => {
+        (Some(addr), n) if n > 0 || elastic => {
             let remote = bts::transport::RemoteWorkers::bind(addr, n)?;
-            println!(
-                "listening on {} for {} remote worker{} \
-                 (`bts worker --connect {}`)",
-                remote.addr(),
-                n,
-                if n == 1 { "" } else { "s" },
-                remote.addr()
-            );
+            if n > 0 {
+                println!(
+                    "listening on {} for {} remote worker{} \
+                     (`bts worker --connect {}`)",
+                    remote.addr(),
+                    n,
+                    if n == 1 { "" } else { "s" },
+                    remote.addr()
+                );
+            } else {
+                println!(
+                    "listening on {} for elastic joiners \
+                     (`bts worker --connect {}`)",
+                    remote.addr(),
+                    remote.addr()
+                );
+            }
             Ok(Some(remote))
         }
         (Some(_), _) => Err(Error::Config(
-            "--listen needs --workers-remote N (how many to accept)".into(),
+            "--listen needs --workers-remote N (how many to accept) \
+             or --elastic on"
+                .into(),
         )),
         (None, n) if n > 0 => Err(Error::Config(
             "--workers-remote needs --listen ADDR".into(),
@@ -337,6 +400,9 @@ fn cmd_exec(args: &[String]) -> Result<()> {
             "--out-json",
             "--reduce-tasks",
             "--partitioner",
+            "--elastic",
+            "--heartbeat-ms",
+            "--straggler-poll-ms",
         ],
     )?;
     let w = workload_flag(&f)?;
@@ -346,7 +412,8 @@ fn cmd_exec(args: &[String]) -> Result<()> {
     let affinity = on_off_flag(&f, "--affinity", false)?;
     let (speculate, straggler_pct) = speculation_flags(&f)?;
     let (reduce_tasks, partitioner) = reduce_flags(&f)?;
-    let remote = remote_flags(&f)?;
+    let (elastic, heartbeat_ms, straggler_poll_ms) = elastic_flags(&f)?;
+    let remote = remote_flags(&f, elastic)?;
     let backend = Arc::new(Backend::auto());
     let params = backend.manifest().params.clone();
     let knee = kneepoint_bytes(w, &CacheConfig::sandy_bridge());
@@ -370,16 +437,19 @@ fn cmd_exec(args: &[String]) -> Result<()> {
             dynamic: speculate,
             speculate,
             straggler_pct,
+            straggler_poll_ms,
             ..Default::default()
         },
         reduce_tasks,
         partitioner,
+        elastic,
+        heartbeat_ms,
         ..Default::default()
     };
     let ds = bts::workloads::build_small(w, &params, samples);
     println!(
         "backend {}  workload {}  {} samples  sizing {:?}  {} workers \
-         (+{} remote)  cache {} MB  affinity {}  speculate {}  \
+         (+{} remote{})  cache {} MB  affinity {}  speculate {}  \
          reducers {} ({})",
         backend.name(),
         w.name(),
@@ -387,6 +457,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         cfg.sizing,
         cfg.workers,
         cfg.remote.as_ref().map_or(0, |r| r.count),
+        if cfg.elastic { ", elastic" } else { "" },
         cfg.cache_mb,
         if cfg.affinity { "on" } else { "off" },
         if speculate {
@@ -449,9 +520,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--straggler-pct",
             "--listen",
             "--workers-remote",
+            "--elastic",
+            "--heartbeat-ms",
+            "--straggler-poll-ms",
         ],
     )?;
     let (speculate, straggler_pct) = speculation_flags(&f)?;
+    let (elastic, heartbeat_ms, straggler_poll_ms) = elastic_flags(&f)?;
     let cfg = LoadConfig {
         jobs: f.num("--jobs", 20)?,
         workers: f.num("--workers", 4)?,
@@ -463,16 +538,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         affinity: on_off_flag(&f, "--affinity", false)?,
         speculate,
         straggler_pct,
-        remote: remote_flags(&f)?,
+        remote: remote_flags(&f, elastic)?,
+        elastic,
+        heartbeat_ms,
+        straggler_poll_ms,
         ..Default::default()
     };
     let backend = Arc::new(Backend::auto());
     println!(
-        "serving {} mixed jobs over {} warm workers (+{} remote, max {} \
+        "serving {} mixed jobs over {} warm workers (+{} remote{}, max {} \
          multiplexed, ~{:.0} arrivals/s)",
         cfg.jobs,
         cfg.workers,
         cfg.remote.as_ref().map_or(0, |r| r.count),
+        if cfg.elastic { ", elastic" } else { "" },
         cfg.max_active,
         cfg.arrival_rate_per_s
     );
@@ -636,12 +715,24 @@ fn cmd_worker(args: &[String]) -> Result<()> {
     use bts::exec::Backend;
     use bts::transport::RemoteWorkerOpts;
 
-    let f =
-        Flags::parse(args, &["--connect", "--cache-mb", "--prefetch-k"])?;
+    let f = Flags::parse(
+        args,
+        &["--connect", "--cache-mb", "--prefetch-k", "--heartbeat-ms"],
+    )?;
     let addr = f.get("--connect").unwrap_or("127.0.0.1:7462");
+    let heartbeat_ms: u64 = f.num(
+        "--heartbeat-ms",
+        bts::net::protocol::PING_INTERVAL.as_millis() as u64,
+    )?;
+    if heartbeat_ms == 0 {
+        return Err(Error::Config(
+            "--heartbeat-ms must be at least 1".into(),
+        ));
+    }
     let opts = RemoteWorkerOpts {
         cache_mb: f.num("--cache-mb", 0)?,
         prefetch_k: f.num("--prefetch-k", 8)?,
+        heartbeat: std::time::Duration::from_millis(heartbeat_ms),
         ..Default::default()
     };
     let backend = Arc::new(Backend::auto());
@@ -652,6 +743,29 @@ fn cmd_worker(args: &[String]) -> Result<()> {
     );
     let n = bts::net::run_worker(addr, backend, &opts)?;
     println!("worker session done: executed {n} tasks");
+    Ok(())
+}
+
+/// `bts drain WORKER --connect ADDR` — the graceful-departure control
+/// plane: ask the leader's membership acceptor to send slot WORKER a
+/// drain. The ack is the echoed frame; the worker itself finishes its
+/// running task, hands queued work back, and exits.
+fn cmd_drain(args: &[String]) -> Result<()> {
+    let (worker, rest) = match args.first() {
+        Some(w) if !w.starts_with("--") => (w.as_str(), &args[1..]),
+        _ => {
+            return Err(Error::Config(
+                "usage: bts drain WORKER --connect ADDR".into(),
+            ))
+        }
+    };
+    let worker: u32 = worker.parse().map_err(|_| {
+        Error::Config(format!("bad worker index {worker}; want a number"))
+    })?;
+    let f = Flags::parse(rest, &["--connect"])?;
+    let addr = f.get("--connect").unwrap_or("127.0.0.1:7462");
+    bts::net::request_drain(addr, worker)?;
+    println!("drain of worker {worker} acknowledged by leader {addr}");
     Ok(())
 }
 
@@ -712,6 +826,50 @@ mod tests {
         assert!(reduce_flags(&f).is_err(), "zero reducers must be rejected");
         let f = Flags::parse(&argv(&["--partitioner=zipf"]), names).unwrap();
         assert!(reduce_flags(&f).is_err(), "unknown partitioner rejected");
+    }
+
+    #[test]
+    fn elastic_flags_parse_and_reject() {
+        let names =
+            &["--elastic", "--heartbeat-ms", "--straggler-poll-ms"][..];
+        let f = Flags::parse(&argv(&[]), names).unwrap();
+        let (elastic, hb, poll) = elastic_flags(&f).unwrap();
+        assert!(!elastic);
+        assert_eq!(
+            hb,
+            bts::net::protocol::PING_INTERVAL.as_millis() as u64
+        );
+        assert_eq!(
+            poll,
+            bts::scheduler::SPECULATION_POLL.as_millis() as u64
+        );
+        let f = Flags::parse(
+            &argv(&[
+                "--elastic=on",
+                "--heartbeat-ms",
+                "250",
+                "--straggler-poll-ms=7",
+            ]),
+            names,
+        )
+        .unwrap();
+        assert_eq!(elastic_flags(&f).unwrap(), (true, 250, 7));
+        for bad in
+            [&["--heartbeat-ms", "0"][..], &["--straggler-poll-ms", "0"][..]]
+        {
+            let f = Flags::parse(&argv(bad), names).unwrap();
+            assert!(
+                elastic_flags(&f).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn drain_requires_a_worker_index() {
+        assert!(cmd_drain(&argv(&[])).is_err());
+        assert!(cmd_drain(&argv(&["--connect", "x"])).is_err());
+        assert!(cmd_drain(&argv(&["two"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! The membership acceptor: a pool-lifetime accept loop that makes
+//! worker arrival an *event*, not a startup phase.
+//!
+//! Before this module, the transport listener was drained by
+//! [`crate::transport::accept_links`] exactly `remote.count` times at
+//! job (or pool) start and then never polled again — a late
+//! `bts worker --connect` sat in the backlog until its handshake timed
+//! out, which is the "silently stops admitting connections" failure
+//! mode this PR's satellite fixes. The [`Acceptor`] keeps accepting
+//! for its whole life and classifies each first frame:
+//!
+//! * `Hello` within the initial quota, or any time when elastic
+//!   membership is on → the connection is adopted as a fresh map slot
+//!   ([`crate::transport::WorkerLink::adopt_handshaken`]) and
+//!   surfaced as [`MemberEvent::Joined`] for the leader to absorb.
+//! * `Hello` past the quota with elastic off → a versioned
+//!   `Message::Error` frame is written back and the connection is
+//!   dropped — the worker sees a clean `Error::Protocol`, never a
+//!   hang.
+//! * `DrainWorker { worker }` (the `bts drain` control plane) → the
+//!   frame is echoed back as the ack and surfaced as
+//!   [`MemberEvent::DrainRequested`].
+//!
+//! The leader owns the policy; the acceptor owns only the socket
+//! lifecycle. [`Acceptor::stop`] shuts the loop down and politely
+//! dismisses any adopted-but-unclaimed joiners.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use crate::dfs::Dfs;
+use crate::error::{Error, Result};
+use crate::net::protocol::{
+    configure_stream, Message, HANDSHAKE_TIMEOUT, PROTOCOL_VERSION,
+};
+use crate::scheduler::ResponseTimeTracker;
+use crate::transport::{Down, PumpCfg, Up, WorkerLink};
+
+/// One membership-plane event, in arrival order.
+pub enum MemberEvent {
+    /// A worker connected and was adopted: its link is live and its
+    /// slot index is [`WorkerLink::worker`]. The leader must absorb it
+    /// (grow scheduler/tracker/in-flight state) or dismiss it.
+    Joined(WorkerLink),
+    /// A `bts drain <worker>` client asked for slot `worker` to leave
+    /// gracefully. The leader sends [`Down::Drain`] if the slot exists.
+    DrainRequested(usize),
+}
+
+/// See module docs. One per `run_cluster` attempt or serve pool.
+pub struct Acceptor {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+    events: mpsc::Receiver<MemberEvent>,
+}
+
+impl Acceptor {
+    /// Start the accept loop on `listener`. Slots are assigned
+    /// sequentially from `first_slot`; the first `initial_quota`
+    /// Hellos are always admitted (they are the statically requested
+    /// `--workers-remote` set), later ones only when `elastic`.
+    pub fn spawn(
+        listener: Arc<TcpListener>,
+        first_slot: usize,
+        initial_quota: usize,
+        elastic: bool,
+        dfs: Arc<Dfs>,
+        up: mpsc::Sender<Up>,
+        tracker: Option<Arc<ResponseTimeTracker>>,
+        pump: PumpCfg,
+    ) -> Result<Acceptor> {
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (ev_tx, ev_rx) = mpsc::channel();
+        let loop_stop = stop.clone();
+        let handle = thread::Builder::new()
+            .name("bts-membership-acceptor".into())
+            .spawn(move || {
+                accept_loop(
+                    &listener,
+                    first_slot,
+                    initial_quota,
+                    elastic,
+                    dfs,
+                    up,
+                    tracker,
+                    pump,
+                    &ev_tx,
+                    &loop_stop,
+                );
+            })
+            .map_err(|e| {
+                Error::Scheduler(format!("spawn membership acceptor: {e}"))
+            })?;
+        Ok(Acceptor { stop, handle: Some(handle), events: ev_rx })
+    }
+
+    /// Next queued event, if any (the leader's per-iteration poll).
+    pub fn try_event(&self) -> Option<MemberEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Block up to `timeout` for an event — how a leader with every
+    /// slot gone waits for a rescuing joiner before giving up.
+    pub fn wait_event(&self, timeout: Duration) -> Option<MemberEvent> {
+        self.events.recv_timeout(timeout).ok()
+    }
+
+    /// Stop accepting and join the loop. Already-adopted joiners still
+    /// queued as events are dismissed with a clean `Shutdown` — their
+    /// processes exit instead of waiting on a dead leader.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        while let Ok(ev) = self.events.try_recv() {
+            if let MemberEvent::Joined(link) = ev {
+                let _ = link.send(Down::Shutdown);
+                link.join();
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: &TcpListener,
+    first_slot: usize,
+    initial_quota: usize,
+    elastic: bool,
+    dfs: Arc<Dfs>,
+    up: mpsc::Sender<Up>,
+    tracker: Option<Arc<ResponseTimeTracker>>,
+    pump: PumpCfg,
+    events: &mpsc::Sender<MemberEvent>,
+    stop: &AtomicBool,
+) {
+    let mut admitted = 0usize;
+    while !stop.load(Ordering::SeqCst) {
+        let stream = match listener.accept() {
+            Ok((stream, _addr)) => stream,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(_) => {
+                // Listener-level hiccup: stay alive — the loop dying
+                // silently is exactly the bug this module fixes.
+                thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+        };
+        if configure_stream(&stream).is_err() {
+            continue;
+        }
+        let Ok(clone) = stream.try_clone() else { continue };
+        let mut rd = BufReader::new(clone);
+        match Message::read_deadline(&mut rd, Some(HANDSHAKE_TIMEOUT)) {
+            Ok(Message::Hello { .. }) => {
+                if admitted < initial_quota || elastic {
+                    let slot = first_slot + admitted;
+                    match WorkerLink::adopt_handshaken(
+                        stream,
+                        rd,
+                        slot,
+                        dfs.clone(),
+                        up.clone(),
+                        tracker.clone(),
+                        pump,
+                    ) {
+                        Ok(link) => {
+                            admitted += 1;
+                            if events.send(MemberEvent::Joined(link)).is_err()
+                            {
+                                return; // leader gone
+                            }
+                        }
+                        Err(_) => {} // handshake write failed: drop
+                    }
+                } else {
+                    refuse(stream);
+                }
+            }
+            Ok(Message::DrainWorker { worker }) => {
+                // Echo the frame back as the ack, then surface the
+                // request; the short-lived client disconnects itself.
+                let mut wr = BufWriter::new(stream);
+                let _ = Message::DrainWorker { worker }.write_to(&mut wr);
+                if events
+                    .send(MemberEvent::DrainRequested(worker as usize))
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            Ok(other) => {
+                let mut wr = BufWriter::new(stream);
+                let _ = Message::Error {
+                    message: format!(
+                        "membership plane (protocol v{PROTOCOL_VERSION}) \
+                         expected Hello or DrainWorker, got {other:?}"
+                    ),
+                }
+                .write_to(&mut wr);
+            }
+            Err(_) => {} // garbage or handshake timeout: drop
+        }
+    }
+}
+
+/// Politely refuse a late joiner on a frozen (non-elastic) membership:
+/// a versioned error frame, then drop — the peer surfaces it as
+/// `Error::Protocol`, never a hang.
+fn refuse(stream: TcpStream) {
+    let mut wr = BufWriter::new(stream);
+    let _ = Message::Error {
+        message: format!(
+            "membership is frozen (elastic off, protocol \
+             v{PROTOCOL_VERSION}): late worker refused — start the \
+             leader with --elastic on to admit mid-job joins"
+        ),
+    }
+    .write_to(&mut wr);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::LatencyModel;
+    use crate::transport::RemoteWorkers;
+
+    fn hello(addr: &str) -> (BufReader<TcpStream>, BufWriter<TcpStream>) {
+        let stream = TcpStream::connect(addr).unwrap();
+        configure_stream(&stream).unwrap();
+        let rd = BufReader::new(stream.try_clone().unwrap());
+        let mut wr = BufWriter::new(stream);
+        Message::Hello { worker: 0 }.write_to(&mut wr).unwrap();
+        (rd, wr)
+    }
+
+    #[test]
+    fn admits_quota_then_refuses_when_not_elastic() {
+        let rw = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+        let addr = rw.addr();
+        let dfs = Dfs::new(1, 1, LatencyModel::none());
+        let (up_tx, _up_rx) = mpsc::channel();
+        let acceptor = Acceptor::spawn(
+            rw.listener.clone(),
+            3,
+            1,
+            false,
+            dfs,
+            up_tx,
+            None,
+            PumpCfg::default(),
+        )
+        .unwrap();
+        // First Hello: inside the quota — welcomed as slot 3.
+        let (mut rd1, _wr1) = hello(&addr);
+        match Message::read_deadline(&mut rd1, Some(HANDSHAKE_TIMEOUT))
+            .unwrap()
+        {
+            Message::Welcome { worker: 3 } => {}
+            other => panic!("expected Welcome 3, got {other:?}"),
+        }
+        match acceptor.wait_event(Duration::from_secs(10)) {
+            Some(MemberEvent::Joined(link)) => {
+                assert_eq!(link.worker(), 3);
+                let _ = link.send(Down::Shutdown);
+                link.join();
+            }
+            _ => panic!("expected Joined"),
+        }
+        // Second Hello: past the quota, elastic off — refused with a
+        // versioned error frame, not a hang.
+        let (mut rd2, _wr2) = hello(&addr);
+        match Message::read_deadline(&mut rd2, Some(HANDSHAKE_TIMEOUT))
+            .unwrap()
+        {
+            Message::Error { message } => {
+                assert!(message.contains("frozen"), "{message}");
+                assert!(
+                    message.contains(&format!("v{PROTOCOL_VERSION}")),
+                    "refusal must be versioned: {message}"
+                );
+            }
+            other => panic!("expected Error frame, got {other:?}"),
+        }
+        acceptor.stop();
+    }
+
+    #[test]
+    fn elastic_admits_past_quota_and_routes_drain_requests() {
+        let rw = RemoteWorkers::bind("127.0.0.1:0", 0).unwrap();
+        let addr = rw.addr();
+        let dfs = Dfs::new(1, 1, LatencyModel::none());
+        let (up_tx, _up_rx) = mpsc::channel();
+        let acceptor = Acceptor::spawn(
+            rw.listener.clone(),
+            0,
+            0,
+            true,
+            dfs,
+            up_tx,
+            None,
+            PumpCfg::default(),
+        )
+        .unwrap();
+        // Quota is zero, but elastic admits anyway.
+        let (mut rd, _wr) = hello(&addr);
+        match Message::read_deadline(&mut rd, Some(HANDSHAKE_TIMEOUT))
+            .unwrap()
+        {
+            Message::Welcome { worker: 0 } => {}
+            other => panic!("expected Welcome 0, got {other:?}"),
+        }
+        let joined = match acceptor.wait_event(Duration::from_secs(10)) {
+            Some(MemberEvent::Joined(link)) => link,
+            _ => panic!("expected Joined"),
+        };
+        // A drain client asks for slot 0; the ack is the echoed frame.
+        let stream = TcpStream::connect(&addr).unwrap();
+        configure_stream(&stream).unwrap();
+        let mut drd = BufReader::new(stream.try_clone().unwrap());
+        let mut dwr = BufWriter::new(stream);
+        Message::DrainWorker { worker: 0 }.write_to(&mut dwr).unwrap();
+        match Message::read_deadline(&mut drd, Some(HANDSHAKE_TIMEOUT))
+            .unwrap()
+        {
+            Message::DrainWorker { worker: 0 } => {}
+            other => panic!("expected echoed ack, got {other:?}"),
+        }
+        match acceptor.wait_event(Duration::from_secs(10)) {
+            Some(MemberEvent::DrainRequested(0)) => {}
+            _ => panic!("expected DrainRequested(0)"),
+        }
+        let _ = joined.send(Down::Shutdown);
+        joined.join();
+        acceptor.stop();
+    }
+}

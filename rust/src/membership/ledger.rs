@@ -1,0 +1,186 @@
+//! The task ledger: per-task durability bookkeeping that turns a
+//! worker loss into a re-dispatch of *that worker's in-flight window*
+//! instead of a job-level restart.
+//!
+//! PR 6 already made completed outputs durable: map partials live in
+//! the leader's seq-ordered `partials` vector, and shuffle fragments
+//! are staged in the replicated store under
+//! [`crate::reduce::shuffle_key`]. What was missing is the *indexing*
+//! — when slot `w` vanishes, which `(kind, seq)` units were riding on
+//! it and nowhere else? The [`Ledger`] answers that in O(entries):
+//! every dispatch (primary or speculative clone) records the carrying
+//! slot under `(ns, seq, attempt)`, every first completion retires the
+//! entry, and [`Ledger::inflight_of`] lists exactly the units a dead
+//! slot strands. Everything completed stays completed — determinism
+//! holds because a task's output is a function of `(seed, seq)` alone,
+//! so a re-dispatched unit produces bit-identical bytes wherever it
+//! lands.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Which phase a ledger unit belongs to. Map seqs and reduce
+/// partitions are separate key spaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Map,
+    Reduce,
+}
+
+#[derive(Debug)]
+struct Entry {
+    attempt: u32,
+    /// Slots carrying a live copy (primary first, clones appended).
+    workers: Vec<usize>,
+    done: bool,
+}
+
+/// See module docs. One per job attempt, owned by the leader's
+/// `JobCtx` next to the `SpeculationState` that retains the specs a
+/// re-dispatch needs.
+#[derive(Debug, Default)]
+pub struct Ledger {
+    /// The job namespace the durable outputs live under (`""` solo) —
+    /// with `seq` and `attempt` in the entries, the full durability
+    /// key the ISSUE prescribes.
+    ns: Arc<str>,
+    entries: HashMap<(TaskKind, usize), Entry>,
+    re_dispatched: u64,
+}
+
+impl Ledger {
+    pub fn new(ns: Arc<str>) -> Ledger {
+        Ledger { ns, entries: HashMap::new(), re_dispatched: 0 }
+    }
+
+    pub fn ns(&self) -> &str {
+        &self.ns
+    }
+
+    /// Record that a copy of `(kind, seq)` left for `worker`. Called
+    /// for the primary dispatch, every speculative clone, and every
+    /// membership re-dispatch; duplicate `(entry, worker)` pairs
+    /// collapse.
+    pub fn dispatched(
+        &mut self,
+        kind: TaskKind,
+        seq: usize,
+        attempt: u32,
+        worker: usize,
+    ) {
+        let e = self.entries.entry((kind, seq)).or_insert(Entry {
+            attempt,
+            workers: Vec::with_capacity(1),
+            done: false,
+        });
+        e.attempt = attempt;
+        if !e.workers.contains(&worker) {
+            e.workers.push(worker);
+        }
+    }
+
+    /// First completion retires the unit; returns `false` for
+    /// duplicates (a dead clone, or a copy finishing after a
+    /// membership re-dispatch already covered it).
+    pub fn completed(&mut self, kind: TaskKind, seq: usize) -> bool {
+        match self.entries.get_mut(&(kind, seq)) {
+            Some(e) if !e.done => {
+                e.done = true;
+                e.workers.clear();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The units stranded if `worker` disappears right now: in flight,
+    /// and carried by no *other* live slot (a cloned straggler whose
+    /// twin survives needs no re-dispatch). Seq-sorted, map before
+    /// reduce, so requeues re-dispatch deterministically.
+    pub fn inflight_of(&self, worker: usize) -> Vec<(TaskKind, usize)> {
+        let mut v: Vec<(TaskKind, usize)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                !e.done
+                    && e.workers.contains(&worker)
+                    && e.workers.iter().all(|&w| w == worker)
+            })
+            .map(|(&k, _)| k)
+            .collect();
+        v.sort_by_key(|&(kind, seq)| (kind != TaskKind::Map, seq));
+        v
+    }
+
+    /// Drop `worker` from every live entry (it left the membership).
+    /// Call after [`Ledger::inflight_of`] has been acted on.
+    pub fn forget_worker(&mut self, worker: usize) {
+        for e in self.entries.values_mut() {
+            e.workers.retain(|&w| w != worker);
+        }
+    }
+
+    /// Count units re-dispatched after membership loss (the bench's
+    /// "only the in-flight window re-executes" assertion reads this).
+    pub fn note_redispatch(&mut self, n: u64) {
+        self.re_dispatched += n;
+    }
+
+    pub fn re_dispatched(&self) -> u64 {
+        self.re_dispatched
+    }
+
+    /// Live (dispatched, not yet completed) units.
+    pub fn in_flight(&self) -> usize {
+        self.entries.values().filter(|e| !e.done).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_strands_only_sole_carrier_units() {
+        let mut l = Ledger::new("j7/".into());
+        assert_eq!(l.ns(), "j7/");
+        l.dispatched(TaskKind::Map, 0, 1, 0);
+        l.dispatched(TaskKind::Map, 1, 1, 1);
+        l.dispatched(TaskKind::Map, 2, 1, 1);
+        l.dispatched(TaskKind::Reduce, 0, 1, 1);
+        // seq 2 was also cloned to slot 0 — a surviving twin covers it
+        l.dispatched(TaskKind::Map, 2, 1, 0);
+        // seq 1 completed before the loss
+        assert!(l.completed(TaskKind::Map, 1));
+        assert!(!l.completed(TaskKind::Map, 1), "duplicate dropped");
+        // slot 1 dies: only its sole-carrier, unfinished units strand —
+        // map seqs before reduce partitions, seq-sorted
+        assert_eq!(l.inflight_of(1), vec![(TaskKind::Reduce, 0)]);
+        l.forget_worker(1);
+        assert_eq!(l.inflight_of(1), vec![]);
+        // the re-dispatch lands on slot 0 and completes
+        l.dispatched(TaskKind::Reduce, 0, 1, 0);
+        l.note_redispatch(1);
+        assert!(l.completed(TaskKind::Reduce, 0));
+        assert_eq!(l.re_dispatched(), 1);
+        assert_eq!(l.in_flight(), 2, "map 0 and map 2 still flying");
+    }
+
+    #[test]
+    fn inflight_ordering_is_deterministic() {
+        let mut l = Ledger::new("".into());
+        l.dispatched(TaskKind::Reduce, 1, 1, 3);
+        l.dispatched(TaskKind::Map, 9, 1, 3);
+        l.dispatched(TaskKind::Map, 2, 1, 3);
+        l.dispatched(TaskKind::Reduce, 0, 1, 3);
+        assert_eq!(
+            l.inflight_of(3),
+            vec![
+                (TaskKind::Map, 2),
+                (TaskKind::Map, 9),
+                (TaskKind::Reduce, 0),
+                (TaskKind::Reduce, 1),
+            ]
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! Elastic cluster membership (DESIGN.md §14): live worker join and
+//! leave, queue rebalancing on membership change, and the task-level
+//! checkpoint ledger that makes worker loss a re-dispatch instead of a
+//! job restart.
+//!
+//! Three pieces, layered on the transport and scheduler rather than
+//! inside them:
+//!
+//! * [`acceptor::Acceptor`] — a pool-lifetime accept loop on the
+//!   leader's listener. New `bts worker --connect` processes become
+//!   [`acceptor::MemberEvent::Joined`] links mid-job (elastic on) or
+//!   are refused with a versioned error frame (elastic off); `bts
+//!   drain` requests become [`acceptor::MemberEvent::DrainRequested`].
+//! * **Rebalancing** lives in the pieces that already own placement:
+//!   [`crate::scheduler::TwoStepScheduler::add_worker`] /
+//!   [`crate::scheduler::TwoStepScheduler::retire_worker`] move queued
+//!   tiny tasks through the pending pool (affinity scoring and
+//!   collapsed windows intact), a joining slot gets a pessimistic
+//!   [`crate::scheduler::ResponseTimeTracker`] prior, and
+//!   [`crate::dfs::Ring::shrink`] re-homes replica responsibility
+//!   without refetching survivors' cached blocks.
+//! * [`ledger::Ledger`] — the `(ns, seq, attempt)` index over durable
+//!   per-task outputs (map partials in the leader's seq vector,
+//!   shuffle fragments under [`crate::reduce::shuffle_key`]): on a
+//!   loss, exactly the dead slot's sole-carrier in-flight units
+//!   re-dispatch. `coordinator::recovery`'s job-level restart remains
+//!   as the fallback for non-membership failures.
+//!
+//! Determinism survives every membership change by construction: a
+//! task's output is a function of `(job_seed, seq)` and the reduce is
+//! seq-ordered, so who ran what, when they joined, and who died
+//! mid-job never reach the output bytes — the elastic oracle suite
+//! (`rust/tests/integration_elastic.rs`) diffs elastic runs
+//! bit-for-bit against static baselines.
+
+pub mod acceptor;
+pub mod ledger;
+
+pub use acceptor::{Acceptor, MemberEvent};
+pub use ledger::{Ledger, TaskKind};

@@ -23,3 +23,33 @@ pub mod worker;
 
 pub use protocol::Message;
 pub use worker::run_worker;
+
+use crate::error::{Error, Result};
+
+/// The `bts drain <worker>` client: ask the leader at `addr` to drain
+/// map slot `worker` gracefully (finish its running task, hand queued
+/// work back, exit). The leader's membership acceptor echoes the frame
+/// back as the ack; a non-elastic leader still acks and routes the
+/// request — draining shrinks a membership, it never grows one.
+pub fn request_drain(addr: &str, worker: u32) -> Result<()> {
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpStream;
+
+    let stream = TcpStream::connect(addr).map_err(|e| {
+        Error::Protocol(format!("connect to leader {addr}: {e}"))
+    })?;
+    protocol::configure_stream(&stream)?;
+    let mut rd = BufReader::new(stream.try_clone()?);
+    let mut wr = BufWriter::new(stream);
+    Message::DrainWorker { worker }.write_to(&mut wr)?;
+    match Message::read_deadline(
+        &mut rd,
+        Some(protocol::HANDSHAKE_TIMEOUT),
+    )? {
+        Message::DrainWorker { worker: w } if w == worker => Ok(()),
+        Message::Error { message } => Err(Error::Protocol(message)),
+        other => Err(Error::Protocol(format!(
+            "unexpected drain ack: {other:?}"
+        ))),
+    }
+}

@@ -149,6 +149,9 @@ const TAG_ERROR: u8 = 14;
 const TAG_PING: u8 = 15;
 const TAG_REDUCE_TASK: u8 = 16;
 const TAG_REDUCE_DONE: u8 = 17;
+const TAG_DRAIN: u8 = 18;
+const TAG_DRAINED: u8 = 19;
+const TAG_DRAIN_REQ: u8 = 20;
 
 /// Everything that crosses a leader↔worker socket. Control messages
 /// wrap the transport grammar verbatim; the leader-side pump and the
@@ -181,6 +184,9 @@ pub enum Message {
     Ping,
     /// Either direction: fatal protocol-level rejection.
     Error { message: String },
+    /// Client → leader (membership plane): ask the leader to drain
+    /// slot `worker`. The leader echoes the frame back as the ack.
+    DrainWorker { worker: u32 },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -400,6 +406,7 @@ impl Message {
                 put_u32(&mut out, *upto_attempt);
             }
             Message::Down(Down::Shutdown) => out.push(TAG_SHUTDOWN),
+            Message::Down(Down::Drain) => out.push(TAG_DRAIN),
             Message::Up(Up::Done { job, attempt, done }) => {
                 out.push(TAG_DONE);
                 put_u64(&mut out, *job);
@@ -445,6 +452,11 @@ impl Message {
                 put_u64(&mut out, *executed);
                 out.push(u8::from(*clean));
             }
+            Message::Up(Up::Drained { worker, returned }) => {
+                out.push(TAG_DRAINED);
+                put_u32(&mut out, *worker as u32);
+                put_u64(&mut out, *returned);
+            }
             Message::Up(Up::Lost { .. }) => {
                 unreachable!("Up::Lost is leader-side only, never framed")
             }
@@ -471,6 +483,10 @@ impl Message {
             Message::Error { message } => {
                 out.push(TAG_ERROR);
                 put_str(&mut out, message);
+            }
+            Message::DrainWorker { worker } => {
+                out.push(TAG_DRAIN_REQ);
+                put_u32(&mut out, *worker);
             }
         }
         out
@@ -539,6 +555,12 @@ impl Message {
                 upto_attempt: c.u32()?,
             }),
             TAG_SHUTDOWN => Message::Down(Down::Shutdown),
+            TAG_DRAIN => Message::Down(Down::Drain),
+            TAG_DRAINED => Message::Up(Up::Drained {
+                worker: c.u32()? as usize,
+                returned: c.u64()?,
+            }),
+            TAG_DRAIN_REQ => Message::DrainWorker { worker: c.u32()? },
             TAG_DONE => {
                 let job = c.u64()?;
                 let attempt = c.u32()?;
@@ -831,6 +853,9 @@ mod tests {
         });
         round_trip(&Message::Ping);
         round_trip(&Message::Error { message: "go away".into() });
+        round_trip(&Message::Down(Down::Drain));
+        round_trip(&Message::Up(Up::Drained { worker: 3, returned: 5 }));
+        round_trip(&Message::DrainWorker { worker: 2 });
     }
 
     #[test]
@@ -982,6 +1007,8 @@ mod tests {
                 clean: false,
             })
             .encode(),
+            Message::Up(Up::Drained { worker: 2, returned: 7 }).encode(),
+            Message::DrainWorker { worker: 1 }.encode(),
         ];
         for good in goods {
             for _ in 0..2000 {

@@ -265,6 +265,29 @@ impl ResponseTimeTracker {
         (fastest / mine).clamp(0.05, 1.0)
     }
 
+    /// Pessimistic prior for a slot that just joined (elastic
+    /// membership): seed its EWMA at several times the *slowest* known
+    /// slot, so the two-step refill starts it probe-sized and clone
+    /// placement avoids it until real completions talk it down
+    /// (`TRACKER_ALPHA` converges in a handful of tasks). The straggler
+    /// histogram is deliberately not seeded — a prior is not an
+    /// observation and must not move the quantile threshold. No-op
+    /// when nothing has been observed yet: with no yardstick, the
+    /// joiner is as unknown as everyone else.
+    pub fn seed_pessimistic(&self, slot: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let worst = g
+            .slots
+            .iter()
+            .filter_map(|e| e.get())
+            .fold(0.0f64, f64::max);
+        if worst <= 0.0 {
+            return;
+        }
+        ensure(&mut g.slots, slot);
+        g.slots[slot].observe(worst * 4.0);
+    }
+
     /// Age past which an in-flight task counts as a straggler, or
     /// `None` until [`MIN_STRAGGLER_SAMPLES`] completions exist.
     /// `pct` is the quantile in percent (`--straggler-pct`).
@@ -419,6 +442,26 @@ impl SpeculationState {
             },
         );
         self.in_flight += 1;
+    }
+
+    /// Drop the in-flight record for `seq` without completing it: its
+    /// carrier left the membership and the unit is being requeued, so
+    /// the next dispatch re-registers it fresh. Returns the retained
+    /// spec (what the re-dispatch sends), or `None` if the task is
+    /// done, untracked, or its spec was not retained. Done tombstones
+    /// are kept — duplicate detection must survive the departure.
+    pub fn abandon(&mut self, seq: usize) -> Option<TaskSpec> {
+        match self.tasks.remove(&seq) {
+            Some(t) if !t.done => {
+                self.in_flight -= 1;
+                t.spec
+            }
+            Some(t) => {
+                self.tasks.insert(seq, t);
+                None
+            }
+            None => None,
+        }
     }
 
     /// A completion for `seq` arrived from `slot`. The first
@@ -585,6 +628,32 @@ mod tests {
         // rtt overrun makes a slot look slower
         t.observe_rtt(0, 0.5);
         assert!(t.predicted_task_s(0) > 0.4);
+    }
+
+    #[test]
+    fn pessimistic_prior_slows_a_joiner_without_moving_the_quantile() {
+        let t = ResponseTimeTracker::new();
+        // no observations yet: seeding is a no-op
+        t.seed_pessimistic(5);
+        assert_eq!(t.predicted_task_s(5), 0.0);
+        for _ in 0..20 {
+            t.observe_task(0, 0.001);
+            t.observe_task(1, 0.010);
+        }
+        let samples = t.samples();
+        t.seed_pessimistic(2);
+        // the joiner predicts worse than the worst incumbent and its
+        // dispatch window collapses to a probe
+        assert!(t.predicted_task_s(2) > t.predicted_task_s(1));
+        assert!(t.relative_speed(2) < SLOW_SLOT_SPEED);
+        assert_eq!(inflight_target(Some(&t), 2, 4), 1);
+        // the prior is not an observation: quantile basis unchanged
+        assert_eq!(t.samples(), samples);
+        // real completions talk the prior down
+        for _ in 0..30 {
+            t.observe_task(2, 0.001);
+        }
+        assert!(t.relative_speed(2) > SLOW_SLOT_SPEED);
     }
 
     #[test]

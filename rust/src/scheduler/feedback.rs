@@ -30,6 +30,13 @@ impl FeedbackStats {
         }
     }
 
+    /// Grow the per-worker view for a slot that joined mid-job
+    /// (elastic membership). The joiner starts with no history, so
+    /// [`FeedbackStats::relative_speed`] reports 1.0 until it observes.
+    pub fn add_worker(&mut self, alpha: f64) {
+        self.worker_exec_s.push(Ewma::new(alpha));
+    }
+
     pub fn observe(&mut self, worker: usize, fetch_s: f64, exec_s: f64) {
         self.exec_s.observe(exec_s);
         self.fetch_s.observe(fetch_s);

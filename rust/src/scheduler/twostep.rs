@@ -72,6 +72,10 @@ pub struct SchedConfig {
     /// Quantile (percent) of observed response times the straggler
     /// threshold derives from (`--straggler-pct`).
     pub straggler_pct: f64,
+    /// Leader poll cadence (milliseconds) while speculation or elastic
+    /// membership keeps the event loop time-bounded
+    /// (`--straggler-poll-ms`; 0 is clamped to 1ms).
+    pub straggler_poll_ms: u64,
 }
 
 impl Default for SchedConfig {
@@ -85,6 +89,7 @@ impl Default for SchedConfig {
             dynamic: false,
             speculate: false,
             straggler_pct: 95.0,
+            straggler_poll_ms: super::SPECULATION_POLL.as_millis() as u64,
         }
     }
 }
@@ -93,6 +98,11 @@ impl SchedConfig {
     /// Whether a response-time tracker should be attached at all.
     pub fn wants_tracker(&self) -> bool {
         self.dynamic || self.speculate
+    }
+
+    /// [`SchedConfig::straggler_poll_ms`] as a bounded `Duration`.
+    pub fn straggler_poll(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.straggler_poll_ms.max(1))
     }
 }
 
@@ -104,6 +114,9 @@ struct Inner {
     queues: Vec<VecDeque<TaskSpec>>,
     /// Whether each worker has received its step-1 probe task.
     probed: Vec<bool>,
+    /// Slots that left the membership (drained or lost): the refill
+    /// sweep must not park tasks on a queue nobody will ever claim.
+    retired: Vec<bool>,
     stats: FeedbackStats,
     /// Round-robin cursor for refill fairness.
     rr: usize,
@@ -159,6 +172,7 @@ impl TwoStepScheduler {
                 pending: tasks.into(),
                 queues: (0..workers).map(|_| VecDeque::new()).collect(),
                 probed: vec![false; workers],
+                retired: vec![false; workers],
                 stats: FeedbackStats::new(workers, cfg.alpha),
                 rr: 0,
                 assigned: 0,
@@ -232,6 +246,55 @@ impl TwoStepScheduler {
         }
     }
 
+    /// Register a freshly joined map slot (elastic membership) and
+    /// return its index. The new slot starts unprobed — its first
+    /// claim is a step-1 probe, exactly like a job-start worker — and
+    /// with no timing history, so refills stay conservative until it
+    /// reports.
+    pub fn add_worker(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        g.queues.push(VecDeque::new());
+        g.probed.push(false);
+        g.retired.push(false);
+        g.stats.add_worker(self.cfg.alpha);
+        g.queues.len() - 1
+    }
+
+    /// Retire a slot that left the membership (drained or lost): its
+    /// queued-but-unclaimed tasks return to the front of the pending
+    /// pool in seq order (the next refills redistribute them with
+    /// affinity scoring intact), and the busy-skip sweep stops feeding
+    /// it. Returns how many tasks were reclaimed. Idempotent.
+    pub fn retire_worker(&self, worker: usize) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        if worker >= g.queues.len() || g.retired[worker] {
+            return 0;
+        }
+        g.retired[worker] = true;
+        let mut reclaimed: Vec<TaskSpec> =
+            g.queues[worker].drain(..).collect();
+        let n = reclaimed.len();
+        reclaimed.sort_by_key(|t| t.task.seq);
+        for t in reclaimed.into_iter().rev() {
+            g.pending.push_front(t);
+        }
+        n
+    }
+
+    /// Return already-dispatched specs (a lost or drained slot's
+    /// in-flight window) to the front of the pending pool, seq-ordered,
+    /// so they re-dispatch ahead of untouched work.
+    pub fn requeue(&self, mut specs: Vec<TaskSpec>) {
+        if specs.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        specs.sort_by_key(|t| t.task.seq);
+        for t in specs.into_iter().rev() {
+            g.pending.push_front(t);
+        }
+    }
+
     /// Feedback-sized refill for `worker`, with busy-skip round-robin
     /// top-ups for other starved workers while we hold the lock.
     fn refill(&self, g: &mut Inner, worker: usize) {
@@ -261,9 +324,16 @@ impl TwoStepScheduler {
         g.refills += 1;
         // Round-robin sweep: give one task to each other worker whose
         // queue is empty (cheap starvation guard while the lock is hot).
-        for off in 0..self.workers {
-            let w = (g.rr + off) % self.workers;
-            if w != worker && g.queues[w].is_empty() && g.probed[w] {
+        // Sweeps `queues.len()`, not the construction-time worker
+        // count: elastic joins grow the slot set mid-job.
+        let n = g.queues.len();
+        for off in 0..n {
+            let w = (g.rr + off) % n;
+            if w != worker
+                && g.queues[w].is_empty()
+                && g.probed[w]
+                && !g.retired[w]
+            {
                 if let Some(t) = g.pending.pop_front() {
                     g.queues[w].push_back(t);
                     g.assigned += 1;
@@ -272,7 +342,7 @@ impl TwoStepScheduler {
                 }
             }
         }
-        g.rr = (g.rr + 1) % self.workers;
+        g.rr = (g.rr + 1) % n;
     }
 
     /// Take up to `want` tasks from the pending pool for `worker`.
@@ -624,6 +694,76 @@ mod tests {
             slow_delta * 2 < after_fast,
             "slow slot refill not shrunk: fast={after_fast} slow_delta={slow_delta}"
         );
+    }
+
+    #[test]
+    fn added_worker_probes_then_joins_the_refill_sweep() {
+        let s = TwoStepScheduler::new(specs(60), 2, SchedConfig::default());
+        let _ = s.next(0).unwrap();
+        s.report(0, 0.001, 0.01);
+        // a third slot joins mid-job: its first claim is a probe, and
+        // from then on it drains like any other worker
+        let w = s.add_worker();
+        assert_eq!(w, 2);
+        let probe = s.next(w).expect("joined slot gets work");
+        s.report(w, 0.001, 0.01);
+        let _ = probe;
+        let got = drain_all(&s, 3);
+        let mut seqs: Vec<usize> = got.into_iter().flatten().collect();
+        assert!(!seqs.is_empty());
+        seqs.sort_unstable();
+        let snap = s.snapshot();
+        assert_eq!(snap.pending, 0);
+        assert_eq!(snap.queued, 0);
+    }
+
+    #[test]
+    fn retired_worker_returns_queue_and_conservation_holds() {
+        let cfg = SchedConfig { lead_s: 10.0, ..Default::default() };
+        let s = TwoStepScheduler::new(specs(80), 3, cfg);
+        // worker 1 probes, reports fast, and hoards a refill batch
+        let first = s.next(1).unwrap();
+        s.report(1, 0.0, 0.001);
+        let second = s.next(1).unwrap();
+        assert!(s.snapshot().queued > 0, "need a hoarded queue to retire");
+        // worker 1 leaves: its queue returns to pending, and the two
+        // claimed-but-unfinished specs are requeued by the leader
+        let reclaimed = s.retire_worker(1);
+        assert!(reclaimed > 0);
+        assert_eq!(s.retire_worker(1), 0, "retire must be idempotent");
+        s.requeue(vec![first, second]);
+        // survivors drain everything exactly once
+        let mut seen = std::collections::HashSet::new();
+        loop {
+            let mut any = false;
+            for w in [0usize, 2] {
+                if let Some(t) = s.next(w) {
+                    assert!(seen.insert(t.task.seq), "double-assigned");
+                    s.report(w, 0.0, 0.001);
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        assert_eq!(seen.len(), 80);
+        assert_eq!(s.snapshot().pending, 0);
+        assert_eq!(s.snapshot().queued, 0);
+    }
+
+    #[test]
+    fn requeued_specs_redispatch_first_in_seq_order() {
+        let s = TwoStepScheduler::new(specs(10), 1, SchedConfig::default());
+        let a = s.next(0).unwrap(); // seq 0 (probe)
+        s.report(0, 0.0, 0.001);
+        let b = s.next(0).unwrap();
+        let (sa, sb) = (a.task.seq, b.task.seq);
+        s.requeue(vec![b, a]);
+        // the lost window comes back before untouched work, low seq
+        // first regardless of the order the caller collected it in
+        let w = s.add_worker();
+        assert_eq!(s.next(w).unwrap().task.seq, sa.min(sb));
     }
 
     #[test]

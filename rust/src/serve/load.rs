@@ -51,6 +51,13 @@ pub struct LoadConfig {
     /// --workers-remote`): accepted once at pool start, serving every
     /// tenant of the session.
     pub remote: Option<crate::transport::RemoteWorkers>,
+    /// Elastic membership (`--elastic`): admit late joiners for the
+    /// whole session and absorb drains/losses via the task ledger.
+    pub elastic: bool,
+    /// Remote-link heartbeat cadence in ms (`--heartbeat-ms`).
+    pub heartbeat_ms: u64,
+    /// Dispatcher poll cadence in ms (`--straggler-poll-ms`).
+    pub straggler_poll_ms: u64,
 }
 
 impl Default for LoadConfig {
@@ -68,6 +75,11 @@ impl Default for LoadConfig {
             speculate: false,
             straggler_pct: 95.0,
             remote: None,
+            elastic: false,
+            heartbeat_ms: crate::net::protocol::PING_INTERVAL.as_millis()
+                as u64,
+            straggler_poll_ms: crate::scheduler::SPECULATION_POLL
+                .as_millis() as u64,
         }
     }
 }
@@ -122,6 +134,7 @@ pub fn run_load(
         dynamic: cfg.speculate,
         speculate: cfg.speculate,
         straggler_pct: cfg.straggler_pct,
+        straggler_poll_ms: cfg.straggler_poll_ms,
         ..Default::default()
     };
     let svc = JobService::start(
@@ -132,6 +145,8 @@ pub fn run_load(
                 cache_mb: cfg.cache_mb,
                 affinity: cfg.affinity,
                 remote: cfg.remote.clone(),
+                elastic: cfg.elastic,
+                heartbeat_ms: cfg.heartbeat_ms,
                 ..Default::default()
             },
             max_active: cfg.max_active,

@@ -34,9 +34,11 @@ use crate::data::ModelParams;
 use crate::dfs::{Dfs, LatencyModel};
 use crate::error::{Error, Result};
 use crate::exec::Backend;
+use crate::membership::{Acceptor, MemberEvent};
+use crate::net::protocol::{ACCEPT_TIMEOUT, PING_INTERVAL};
 use crate::scheduler::ResponseTimeTracker;
 use crate::transport::{
-    accept_links, teardown, BodyCfg, Down, RemoteWorkers, Up, WorkerLink,
+    teardown, BodyCfg, Down, PumpCfg, RemoteWorkers, Up, WorkerLink,
 };
 use crate::util::testutil::Turbulence;
 
@@ -66,6 +68,16 @@ pub struct PoolConfig {
     /// Deterministic latency/fault turbulence for the pool's in-proc
     /// slots (scheduler/speculation tests).
     pub turbulence: Option<Arc<Turbulence>>,
+    /// Elastic membership (DESIGN.md §14): keep admitting late `bts
+    /// worker --connect`s for the pool's whole life, absorb `bts
+    /// drain` departures, and turn worker loss into a per-tenant
+    /// ledger re-dispatch instead of tenant restarts. Off, the
+    /// membership freezes at pool start and late joiners get a
+    /// versioned refusal frame.
+    pub elastic: bool,
+    /// Remote-link heartbeat interval in milliseconds (ping cadence;
+    /// ×6 is the pump's silent-peer threshold).
+    pub heartbeat_ms: u64,
 }
 
 impl Default for PoolConfig {
@@ -80,6 +92,8 @@ impl Default for PoolConfig {
             cache_mb: 0,
             affinity: false,
             turbulence: None,
+            elastic: false,
+            heartbeat_ms: PING_INTERVAL.as_millis() as u64,
         }
     }
 }
@@ -107,7 +121,16 @@ pub(crate) struct WorkerPool {
     /// links their heartbeat drag) across jobs — a freshly admitted
     /// job already knows which slot is the straggler.
     pub(crate) tracker: Arc<ResponseTimeTracker>,
+    /// Elastic membership policy (from [`PoolConfig::elastic`]): with
+    /// it on, worker departures take the per-tenant ledger re-dispatch
+    /// path instead of tenant restarts.
+    pub(crate) elastic: bool,
     links: Vec<WorkerLink>,
+    /// Pool-lifetime accept loop (remote pools only). Holds the
+    /// listener open past the initial quota so late joiners are
+    /// admitted (elastic) or refused with a versioned frame (static)
+    /// instead of hanging in `connect`.
+    acceptor: Option<Acceptor>,
 }
 
 impl WorkerPool {
@@ -154,20 +177,43 @@ impl WorkerPool {
                 "bts-serve-worker",
             )?);
         }
+        let mut acceptor = None;
         if let Some(remote) = &cfg.remote {
-            match accept_links(
-                remote,
+            let acc = match Acceptor::spawn(
+                remote.listener.clone(),
                 cfg.workers,
-                &dfs,
-                &up,
+                remote.count,
+                cfg.elastic,
+                dfs.clone(),
+                up.clone(),
                 Some(tracker.clone()),
+                PumpCfg::from_heartbeat_ms(cfg.heartbeat_ms),
             ) {
-                Ok(remote_links) => links.extend(remote_links),
+                Ok(acc) => acc,
                 Err(e) => {
                     teardown(links);
                     return Err(e);
                 }
+            };
+            // The initial quota is still a synchronous barrier: the
+            // pool is not up until every promised remote slot is.
+            while links.len() < cfg.workers + remote.count {
+                match acc.wait_event(ACCEPT_TIMEOUT) {
+                    Some(MemberEvent::Joined(link)) => links.push(link),
+                    // No tenants yet, nothing to drain.
+                    Some(MemberEvent::DrainRequested(_)) => {}
+                    None => {
+                        acc.stop();
+                        teardown(links);
+                        return Err(Error::Protocol(format!(
+                            "timed out waiting for the initial {} remote \
+                             worker(s)",
+                            remote.count
+                        )));
+                    }
+                }
             }
+            acceptor = Some(acc);
         }
         let spawned = links.len();
         Ok(WorkerPool {
@@ -176,8 +222,36 @@ impl WorkerPool {
             spawned,
             affinity: layer.affinity,
             tracker,
+            elastic: cfg.elastic,
             links,
+            acceptor,
         })
+    }
+
+    /// Next queued membership event, if any (non-blocking). `None`
+    /// when the pool has no listener or nothing is waiting.
+    pub(crate) fn try_member_event(&self) -> Option<MemberEvent> {
+        self.acceptor.as_ref().and_then(|a| a.try_event())
+    }
+
+    /// Whether a departed slot can ever be replaced: elastic policy
+    /// with a live accept loop. When `false`, an all-dead pool is
+    /// terminal and the dispatcher fails its tenants immediately.
+    pub(crate) fn can_rejoin(&self) -> bool {
+        self.elastic && self.acceptor.is_some()
+    }
+
+    /// Absorb an already-handshaken joiner as the next slot. The
+    /// acceptor hands out slot indices sequentially, so the link's
+    /// slot is exactly `links.len()`. `spawned` grows with it — a
+    /// join is a new worker, not a respawn, and the warm-pool
+    /// invariant (`spawned - workers == 0`) still holds.
+    pub(crate) fn admit(&mut self, link: WorkerLink) -> usize {
+        let w = self.links.len();
+        self.links.push(link);
+        self.workers += 1;
+        self.spawned += 1;
+        w
     }
 
     /// Push a message to one worker. `false` means the worker's link
@@ -194,8 +268,13 @@ impl WorkerPool {
     }
 
     /// Tell every worker to exit and join the links. The caller
-    /// drains the up-channel for [`Up::Exited`] accounting.
+    /// drains the up-channel for [`Up::Exited`] accounting. The
+    /// accept loop stops first so no joiner is adopted into a pool
+    /// that is tearing down.
     pub(crate) fn shutdown(self) {
+        if let Some(acc) = self.acceptor {
+            acc.stop();
+        }
         teardown(self.links);
     }
 }

@@ -36,9 +36,11 @@ use crate::error::{Error, Result};
 use crate::exec::cluster::{stage_dataset, JobCtx};
 use crate::exec::{Backend, ExecConfig};
 use crate::kneepoint::pack;
+use crate::membership::MemberEvent;
 use crate::metrics::{JobReport, Timer};
+use crate::net::protocol::ACCEPT_TIMEOUT;
 use crate::runtime::Exec as _;
-use crate::scheduler::{inflight_target, SchedConfig, TaskSpec, SPECULATION_POLL};
+use crate::scheduler::{inflight_target, SchedConfig, TaskSpec};
 use crate::slo::estimate_job_s;
 use crate::transport::{Down, ReduceEnvelope, TaskEnvelope, Up};
 use crate::util::json::{num, obj, s, Json};
@@ -172,6 +174,12 @@ pub struct ServeReport {
     /// > 1`).
     pub shuffle_bytes: u64,
     pub dfs_bytes_served: u64,
+    /// Payload bytes still resident in the shared replicated store at
+    /// shutdown. Every retired job unstages its sample blocks and
+    /// shuffle fragments, so a drained session ends at its pre-job
+    /// footprint (0 for a fresh pool) — leaked `shuffle_key` entries
+    /// show up here.
+    pub dfs_stored_bytes: u64,
     /// Shared block-cache counters over the whole session, when the
     /// pool ran with `cache_mb > 0` (hit rate, cross-tenant dedup).
     pub cache: Option<CacheStats>,
@@ -389,6 +397,8 @@ impl JobService {
             first_submit: None,
             last_complete: None,
             epoch: Instant::now(),
+            exited_executed: Vec::new(),
+            starved_since: None,
         };
         let dispatcher = thread::Builder::new()
             .name("bts-serve-dispatcher".into())
@@ -528,6 +538,14 @@ struct Dispatcher {
     first_submit: Option<Instant>,
     last_complete: Option<Instant>,
     epoch: Instant,
+    /// Lifetime task counts of workers that exited *before* shutdown
+    /// (drained or lost); the post-loop drain only sees the survivors'
+    /// `Up::Exited`.
+    exited_executed: Vec<(usize, u64)>,
+    /// When an elastic pool went all-dead with work still waiting; a
+    /// rescuing joiner clears it, [`ACCEPT_TIMEOUT`] of starvation
+    /// fails the tenants instead of hanging them forever.
+    starved_since: Option<Instant>,
 }
 
 impl Dispatcher {
@@ -572,16 +590,35 @@ impl Dispatcher {
                 while let Ok(m) = self.pool_rx.try_recv() {
                     self.handle_up(m);
                 }
-                match self.submit_rx.recv() {
-                    Ok(Cmd::Submit(sub)) => self.enqueue(*sub),
-                    Ok(Cmd::Drain) | Err(_) => self.draining = true,
+                self.poll_membership();
+                if self.pool.can_rejoin() {
+                    // An elastic pool keeps its membership plane
+                    // moving while idle: joiners between jobs must be
+                    // admitted, not parked until the next submission.
+                    match self
+                        .submit_rx
+                        .recv_timeout(Duration::from_millis(50))
+                    {
+                        Ok(Cmd::Submit(sub)) => self.enqueue(*sub),
+                        Ok(Cmd::Drain) => self.draining = true,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            self.draining = true;
+                        }
+                    }
+                } else {
+                    match self.submit_rx.recv() {
+                        Ok(Cmd::Submit(sub)) => self.enqueue(*sub),
+                        Ok(Cmd::Drain) | Err(_) => self.draining = true,
+                    }
                 }
                 continue;
             }
             // 5. Route pool messages (timeout keeps the submission
             //    poll responsive while jobs run — and doubles as the
             //    straggler-age check cadence).
-            match self.pool_rx.recv_timeout(SPECULATION_POLL) {
+            match self.pool_rx.recv_timeout(self.sched_cfg.straggler_poll())
+            {
                 Ok(m) => {
                     self.handle_up(m);
                     while let Ok(m) = self.pool_rx.try_recv() {
@@ -591,7 +628,12 @@ impl Dispatcher {
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
-            // 6. Speculative re-execution across every active tenant:
+            // 6. Membership plane: admit joiners into fresh slots,
+            //    route drain requests, and bound how long an all-dead
+            //    elastic pool may starve its tenants.
+            self.poll_membership();
+            self.check_starvation();
+            // 7. Speculative re-execution across every active tenant:
             //    overdue in-flight tasks are cloned to idle slots
             //    (first bit-identical result wins; dead clones are
             //    dropped on arrival).
@@ -602,13 +644,23 @@ impl Dispatcher {
         let workers = self.pool.workers;
         let spawned = self.pool.spawned;
         let dfs_bytes_served = self.pool.dfs.bytes_served();
+        let dfs_stored_bytes = self.pool.dfs.stored_bytes() as u64;
         let cache = self.pool.dfs.cache_stats();
         let pool = self.pool;
         pool.shutdown();
         let mut worker_executed = vec![0u64; workers];
+        // Drained and lost workers exited before shutdown; their counts
+        // were collected as the events arrived.
+        for (w, n) in &self.exited_executed {
+            if let Some(slot) = worker_executed.get_mut(*w) {
+                *slot = *n;
+            }
+        }
         while let Ok(m) = self.pool_rx.try_recv() {
             if let Up::Exited { worker, executed, .. } = m {
-                worker_executed[worker] = executed;
+                if let Some(slot) = worker_executed.get_mut(worker) {
+                    *slot = executed;
+                }
             }
         }
         let wall_s = match (self.first_submit, self.last_complete) {
@@ -636,6 +688,7 @@ impl Dispatcher {
             won_by_clone: self.won_by_clone,
             shuffle_bytes: self.shuffle_bytes,
             dfs_bytes_served,
+            dfs_stored_bytes,
             cache,
             completed_order: self.completed_order,
         };
@@ -743,6 +796,12 @@ impl Dispatcher {
         }
         self.dead[worker] = true;
         self.inflight[worker] = 0;
+        if self.pool.elastic {
+            // Elastic policy: the ledger knows which units the slot
+            // solely carried — re-dispatch those, restart nothing.
+            self.on_member_departed(worker);
+            return;
+        }
         let affected: Vec<(u64, u32)> =
             self.active.iter().map(|a| (a.id, a.attempt)).collect();
         for (job, attempt) in affected {
@@ -755,19 +814,7 @@ impl Dispatcher {
             );
         }
         if self.all_dead() {
-            while !self.active.is_empty() {
-                let a = self.retire_active(0);
-                let _ = a.reply.send(Err(Error::Scheduler(
-                    "every pool worker is lost".into(),
-                )));
-                self.jobs_failed += 1;
-            }
-            while let Some(qj) = self.queue.pop() {
-                let _ = qj.payload.reply.send(Err(Error::Scheduler(
-                    "every pool worker is lost".into(),
-                )));
-                self.jobs_failed += 1;
-            }
+            self.fail_everything("every pool worker is lost");
         } else {
             // Restarted jobs re-dispatch immediately on the surviving
             // slots (their Dones would otherwise be the only refill
@@ -775,6 +822,110 @@ impl Dispatcher {
             for w in 0..self.pool.workers {
                 self.top_up_worker(w);
             }
+        }
+    }
+
+    /// A slot left the membership — drained gracefully or lost — and
+    /// the pool is elastic (or the departure was a drain). Instead of
+    /// restarting every tenant, consult each tenant's checkpoint
+    /// ledger (DESIGN.md §14): completed units are durable in the
+    /// shared store, so only the units the departed slot was the sole
+    /// carrier of re-dispatch on the survivors. A tenant whose
+    /// stranded spec cannot be recovered falls back to its job-level
+    /// restart, alone; its neighbours are untouched.
+    fn on_member_departed(&mut self, worker: usize) {
+        let affected: Vec<(u64, u32)> =
+            self.active.iter().map(|a| (a.id, a.attempt)).collect();
+        for (job, attempt) in affected {
+            let Some(i) = self
+                .active
+                .iter()
+                .position(|a| a.id == job && a.attempt == attempt)
+            else {
+                continue;
+            };
+            if let Err(e) = self.active[i].ctx.on_member_lost(worker) {
+                self.on_task_failed(job, attempt, e);
+            }
+        }
+        if self.all_dead() && !self.pool.can_rejoin() {
+            self.fail_everything("every pool worker is lost");
+        } else {
+            // Re-queued units re-dispatch immediately on the
+            // survivors (their Dones would otherwise be the only
+            // refill trigger).
+            for w in 0..self.pool.workers {
+                self.top_up_worker(w);
+            }
+        }
+    }
+
+    /// Fail every active and queued job now — submitters must not
+    /// block on a pool that cannot make progress.
+    fn fail_everything(&mut self, why: &str) {
+        while !self.active.is_empty() {
+            let a = self.retire_active(0);
+            let _ = a.reply.send(Err(Error::Scheduler(why.into())));
+            self.jobs_failed += 1;
+        }
+        while let Some(qj) = self.queue.pop() {
+            let _ =
+                qj.payload.reply.send(Err(Error::Scheduler(why.into())));
+            self.jobs_failed += 1;
+        }
+    }
+
+    /// Drain the pool's membership events: a joiner becomes the next
+    /// slot (pessimistic response-time prior, every active tenant's
+    /// scheduler widened, dispatch window topped up) and a `bts drain`
+    /// request becomes a [`Down::Drain`] to the slot — the worker's
+    /// own `Up::Drained`, sent once its running task finishes, does
+    /// the departure bookkeeping.
+    fn poll_membership(&mut self) {
+        while let Some(ev) = self.pool.try_member_event() {
+            match ev {
+                MemberEvent::Joined(link) => {
+                    let w = self.pool.admit(link);
+                    self.inflight.push(0);
+                    self.dead.push(false);
+                    self.starved_since = None;
+                    self.pool.tracker.seed_pessimistic(w);
+                    for a in &mut self.active {
+                        a.ctx.add_worker();
+                    }
+                    self.top_up_worker(w);
+                }
+                MemberEvent::DrainRequested(w) => {
+                    if w < self.dead.len() && !self.dead[w] {
+                        let _ = self.pool.send(w, Down::Drain);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bound how long an all-dead elastic pool may starve its waiting
+    /// tenants: a rescuing joiner clears the clock, [`ACCEPT_TIMEOUT`]
+    /// without one fails the work instead of hanging it forever.
+    /// (Static pools never get here — they fail everything the moment
+    /// the last slot dies.)
+    fn check_starvation(&mut self) {
+        let starved = self.all_dead()
+            && (!self.active.is_empty() || !self.queue.is_empty());
+        if !starved {
+            self.starved_since = None;
+            return;
+        }
+        if !self.pool.can_rejoin() {
+            return;
+        }
+        let since = *self.starved_since.get_or_insert_with(Instant::now);
+        if since.elapsed() >= ACCEPT_TIMEOUT {
+            self.fail_everything(
+                "every worker left the membership and no replacement \
+                 joined",
+            );
+            self.starved_since = None;
         }
     }
 
@@ -787,9 +938,11 @@ impl Dispatcher {
         };
         let qj = self.queue.remove(i);
         let Pending { req, reply } = qj.payload;
-        if self.all_dead() {
-            // A dead pool cannot make progress; fail fast instead of
-            // staging work that will never run.
+        if self.all_dead() && !self.pool.can_rejoin() {
+            // A dead pool that can never grow back cannot make
+            // progress; fail fast instead of staging work that will
+            // never run. (An elastic pool stages and waits for a
+            // joiner, bounded by the starvation clock.)
             let _ = reply.send(Err(Error::Scheduler(
                 "every pool worker is lost".into(),
             )));
@@ -819,6 +972,9 @@ impl Dispatcher {
             platform: "bts-serve".into(),
             reduce_tasks: req.reduce_tasks.max(1),
             partitioner: req.partitioner,
+            // Elastic pools need every tenant's in-flight specs
+            // retained so a departure can re-dispatch them.
+            elastic: self.pool.elastic,
             ..ExecConfig::default()
         };
         let hook = self
@@ -1030,10 +1186,25 @@ impl Dispatcher {
             Up::Lost { worker, error } => {
                 self.on_worker_lost(worker, &error.to_string());
             }
-            // Workers only exit during shutdown (or right after a
-            // Lost, synthesized); the drain loop after the main loop
-            // collects the orderly ones.
-            Up::Exited { .. } => {}
+            Up::Drained { worker, returned: _ } => {
+                // Graceful departure: the worker finished its running
+                // task, handed back its queue, and is exiting. Same
+                // membership bookkeeping as a loss — the ledger path
+                // re-dispatches whatever it still solely carried (for
+                // a static pool, the tenant-restart fallback runs).
+                if worker < self.dead.len() && !self.dead[worker] {
+                    self.dead[worker] = true;
+                    self.inflight[worker] = 0;
+                    self.on_member_departed(worker);
+                }
+            }
+            // Workers exit at shutdown (collected by the post-loop
+            // drain) or right after a drain/loss — record the early
+            // ones' lifetime counts here so the session report keeps
+            // them.
+            Up::Exited { worker, executed, .. } => {
+                self.exited_executed.push((worker, executed));
+            }
         }
     }
 

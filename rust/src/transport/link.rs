@@ -25,7 +25,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::{BodyCfg, Down, InProcChannel, Up};
 use crate::data::ModelParams;
@@ -62,6 +62,38 @@ impl RemoteWorkers {
             .local_addr()
             .map(|a| a.to_string())
             .unwrap_or_default()
+    }
+}
+
+/// Timing knobs for a TCP link's leader-side pump (satellite of the
+/// elastic-membership work: turbulence tests tighten these instead of
+/// sleeping wall-clock seconds). `idle_timeout` should be several
+/// heartbeat intervals — one missed ping is jitter, six is a
+/// partition.
+#[derive(Debug, Clone, Copy)]
+pub struct PumpCfg {
+    /// The heartbeat interval the *worker* was asked to ping at; gaps
+    /// beyond this feed the response-time tracker as link drag.
+    pub ping_interval: Duration,
+    /// Reads idle longer than this surface the peer as [`Up::Lost`].
+    pub idle_timeout: Duration,
+}
+
+impl Default for PumpCfg {
+    fn default() -> Self {
+        PumpCfg {
+            ping_interval: PING_INTERVAL,
+            idle_timeout: PUMP_IDLE_TIMEOUT,
+        }
+    }
+}
+
+impl PumpCfg {
+    /// Derive both knobs from one `--heartbeat-ms` value, keeping the
+    /// default 6:1 idle-to-ping ratio.
+    pub fn from_heartbeat_ms(ms: u64) -> PumpCfg {
+        let ping = Duration::from_millis(ms.max(1));
+        PumpCfg { ping_interval: ping, idle_timeout: ping * 6 }
     }
 }
 
@@ -132,6 +164,31 @@ impl WorkerLink {
                 )))
             }
         }
+        WorkerLink::adopt_handshaken(
+            stream,
+            rd,
+            worker,
+            dfs,
+            up,
+            tracker,
+            PumpCfg::default(),
+        )
+    }
+
+    /// The post-handshake half of [`WorkerLink::adopt_tcp`]: the
+    /// caller has already configured the stream and consumed the
+    /// peer's `Hello` from `rd` (the membership acceptor does this to
+    /// decide admit-vs-refuse before committing a slot). Sends
+    /// `Welcome` and spawns the frame pump with the given timing.
+    pub fn adopt_handshaken(
+        stream: TcpStream,
+        rd: BufReader<TcpStream>,
+        worker: usize,
+        dfs: Arc<Dfs>,
+        up: mpsc::Sender<Up>,
+        tracker: Option<Arc<ResponseTimeTracker>>,
+        pump_cfg: PumpCfg,
+    ) -> Result<WorkerLink> {
         let wr = Arc::new(Mutex::new(BufWriter::new(stream)));
         {
             let mut g = wr.lock().unwrap();
@@ -140,7 +197,9 @@ impl WorkerLink {
         let pump_wr = wr.clone();
         let handle = thread::Builder::new()
             .name(format!("bts-link-pump-{worker}"))
-            .spawn(move || pump(worker, rd, dfs, pump_wr, up, tracker))
+            .spawn(move || {
+                pump(worker, rd, dfs, pump_wr, up, tracker, pump_cfg)
+            })
             .map_err(|e| {
                 Error::Scheduler(format!("spawn link pump {worker}: {e}"))
             })?;
@@ -193,6 +252,7 @@ fn pump(
     wr: Arc<Mutex<BufWriter<TcpStream>>>,
     up: mpsc::Sender<Up>,
     tracker: Option<Arc<ResponseTimeTracker>>,
+    cfg: PumpCfg,
 ) {
     let lost = |error: Error| {
         let _ = up.send(Up::Lost { worker, error });
@@ -206,7 +266,7 @@ fn pump(
         // even mid-task, so several missed intervals means a silently
         // partitioned peer (no FIN/RST will ever come) — surface it
         // as Lost instead of wedging the leader forever.
-        match Message::read_deadline(&mut rd, Some(PUMP_IDLE_TIMEOUT)) {
+        match Message::read_deadline(&mut rd, Some(cfg.idle_timeout)) {
             Ok(Message::Up(u)) => {
                 let exiting = matches!(u, Up::Exited { .. });
                 if up.send(rewrite_worker(u, worker)).is_err() || exiting {
@@ -221,7 +281,7 @@ fn pump(
                     if let Some(prev) = last_ping {
                         let overrun = prev
                             .elapsed()
-                            .saturating_sub(PING_INTERVAL)
+                            .saturating_sub(cfg.ping_interval)
                             .as_secs_f64();
                         t.observe_rtt(worker, overrun);
                     }

@@ -61,7 +61,7 @@ use crate::metrics::Timer;
 use crate::scheduler::TaskSpec;
 use crate::util::testutil::Turbulence;
 
-pub use link::{accept_links, teardown, RemoteWorkers, WorkerLink};
+pub use link::{accept_links, teardown, PumpCfg, RemoteWorkers, WorkerLink};
 pub use remote::{run_remote_worker, RemoteWorkerOpts};
 
 /// One task routed to a map slot, tagged with its tenant. `ns`
@@ -115,6 +115,11 @@ pub enum Down {
     /// and purge the job's namespace from worker-local caches. The
     /// worker acknowledges with [`Up::Aborted`].
     Abort { job: u64, upto_attempt: u32 },
+    /// Graceful leave (elastic membership): finish the in-flight task,
+    /// return every queued task to the leader via [`Up::Drained`], and
+    /// exit cleanly. Messages are handled between tasks, so the task
+    /// under execution always completes and reports first.
+    Drain,
     Shutdown,
 }
 
@@ -166,6 +171,12 @@ pub enum Up {
     TaskFailed { job: u64, attempt: u32, worker: usize, error: Error },
     /// Ack for [`Down::Abort`]: `dropped` queued tasks discarded.
     Aborted { worker: usize, dropped: u64 },
+    /// Ack for [`Down::Drain`]: the slot returned `returned` queued
+    /// (never-started) tasks and is about to exit cleanly. Link FIFO
+    /// ordering guarantees every `Done` the slot produced has already
+    /// arrived when the leader reads this, so requeueing the slot's
+    /// in-flight window re-dispatches exactly the unfinished work.
+    Drained { worker: usize, returned: u64 },
     /// Transport-level loss: the worker's link died without an
     /// orderly `Exited` (TCP reset, EOF mid-job, protocol error).
     /// Synthesized by the leader-side pump, never sent by a worker.
@@ -410,6 +421,17 @@ pub fn worker_body<C: WorkerChannel>(
                         upto_attempt,
                     );
                 }
+                Poll::Msg(Down::Drain) => {
+                    let returned = (queue.len() + rqueue.len()) as u64;
+                    queue.clear();
+                    rqueue.clear();
+                    let _ = chan.send(Up::Drained {
+                        worker: cfg.worker,
+                        returned,
+                    });
+                    clean = true;
+                    break 'outer;
+                }
                 Poll::Msg(Down::Shutdown) => {
                     clean = true;
                     break 'outer;
@@ -450,6 +472,15 @@ pub fn worker_body<C: WorkerChannel>(
                     );
                     continue;
                 }
+                Some(Down::Drain) => {
+                    // Idle slot: nothing queued, nothing in flight.
+                    let _ = chan.send(Up::Drained {
+                        worker: cfg.worker,
+                        returned: 0,
+                    });
+                    clean = true;
+                    break;
+                }
                 Some(Down::Shutdown) => {
                     clean = true;
                     break;
@@ -468,6 +499,12 @@ pub fn worker_body<C: WorkerChannel>(
                 let d = tb.disturbance(cfg.worker, nth);
                 if !d.delay.is_zero() {
                     std::thread::sleep(d.delay);
+                }
+                if d.kill {
+                    // Scripted crash: die without executing, without a
+                    // goodbye. The unclean `Exited` is the membership
+                    // plane's loss signal.
+                    break 'outer;
                 }
                 if d.fail {
                     let sent = chan.send(Up::TaskFailed {
@@ -527,6 +564,10 @@ pub fn worker_body<C: WorkerChannel>(
             let d = tb.disturbance(cfg.worker, nth);
             if !d.delay.is_zero() {
                 std::thread::sleep(d.delay);
+            }
+            if d.kill {
+                // Scripted crash (see the reduce path above).
+                break 'outer;
             }
             if d.fail {
                 let sent = chan.send(Up::TaskFailed {

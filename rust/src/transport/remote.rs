@@ -55,6 +55,11 @@ pub struct RemoteWorkerOpts {
     /// completions the link is severed without an orderly goodbye,
     /// simulating a crashed or partitioned worker.
     pub drop_link_after: Option<u64>,
+    /// Heartbeat ping interval (`--heartbeat-ms`). Must match the
+    /// leader's expectation: the leader treats gaps beyond its own
+    /// configured interval as link drag, and several missed intervals
+    /// as a partition.
+    pub heartbeat: Duration,
 }
 
 impl Default for RemoteWorkerOpts {
@@ -64,7 +69,50 @@ impl Default for RemoteWorkerOpts {
             cache_mb: 0,
             connect_window: Duration::from_secs(20),
             drop_link_after: None,
+            heartbeat: PING_INTERVAL,
         }
+    }
+}
+
+/// SIGTERM → graceful drain. The handler only flips a flag; the
+/// worker channel notices between tasks and synthesizes
+/// [`Down::Drain`], so a `kill <pid>` (or an orchestrator's stop)
+/// finishes the in-flight task, returns queued work to the leader,
+/// and exits clean — the CLI-less half of the `bts drain` path.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static DRAIN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_sig: i32) {
+        DRAIN.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            // libc's `signal(2)` — the crate has no libc dependency,
+            // so bind the symbol directly (fn pointers are word-sized
+            // on every supported target).
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+        }
+    }
+
+    pub fn requested() -> bool {
+        DRAIN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
     }
 }
 
@@ -186,10 +234,27 @@ struct TcpWorkerChannel {
     stream: TcpStream,
     dones_sent: u64,
     drop_link_after: Option<u64>,
+    /// SIGTERM drain already synthesized (once is enough — the body
+    /// exits on it).
+    drain_sent: bool,
+}
+
+impl TcpWorkerChannel {
+    /// A pending SIGTERM becomes one synthesized [`Down::Drain`].
+    fn take_signal(&mut self) -> Option<Down> {
+        if sig::requested() && !self.drain_sent {
+            self.drain_sent = true;
+            return Some(Down::Drain);
+        }
+        None
+    }
 }
 
 impl WorkerChannel for TcpWorkerChannel {
     fn try_recv(&mut self) -> Poll {
+        if let Some(d) = self.take_signal() {
+            return Poll::Msg(d);
+        }
         match self.rx.try_recv() {
             Ok(d) => Poll::Msg(d),
             Err(mpsc::TryRecvError::Empty) => Poll::Empty,
@@ -198,7 +263,18 @@ impl WorkerChannel for TcpWorkerChannel {
     }
 
     fn recv(&mut self) -> Option<Down> {
-        self.rx.recv().ok()
+        // Poll-bounded block so a SIGTERM that lands while the slot is
+        // idle still drains promptly.
+        loop {
+            if let Some(d) = self.take_signal() {
+                return Some(d);
+            }
+            match self.rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(d) => return Some(d),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return None,
+            }
+        }
     }
 
     fn send(&mut self, up: Up) -> bool {
@@ -242,6 +318,7 @@ pub fn run_remote_worker(
     backend: Arc<Backend>,
     opts: &RemoteWorkerOpts,
 ) -> Result<u64> {
+    sig::install();
     let stream = connect_retry(addr, opts.connect_window)?;
     configure_stream(&stream)?;
     let mut rd = BufReader::new(stream.try_clone()?);
@@ -270,10 +347,11 @@ pub fn run_remote_worker(
     // next tick notices the closed socket after the session ends.
     {
         let ping_wr = wr.clone();
+        let heartbeat = opts.heartbeat;
         thread::Builder::new()
             .name(format!("bts-remote-ping-{worker}"))
             .spawn(move || loop {
-                thread::sleep(PING_INTERVAL);
+                thread::sleep(heartbeat);
                 let Ok(mut g) = ping_wr.lock() else { return };
                 if Message::Ping.write_to(&mut *g).is_err() {
                     return;
@@ -323,6 +401,7 @@ pub fn run_remote_worker(
         stream,
         dones_sent: 0,
         drop_link_after: opts.drop_link_after,
+        drain_sent: false,
     };
     let cfg = BodyCfg {
         worker,

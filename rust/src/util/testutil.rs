@@ -20,6 +20,7 @@
 //!   with one bounded policy, so a hung dispatcher fails fast with a
 //!   message instead of wedging the whole suite.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 use crate::util::rng::fnv1a;
@@ -44,6 +45,28 @@ struct FaultRule {
     at_task: u64,
 }
 
+/// One scripted crash: `worker` dies (unclean exit, no goodbye) at its
+/// `at_task`-th task. Fires **once** per process: a restart-based
+/// recovery attempt re-runs the same worker indices through the same
+/// schedule, and a kill that re-fired forever would make the restart
+/// baseline unfinishable.
+#[derive(Debug)]
+struct KillRule {
+    worker: usize,
+    at_task: u64,
+    fired: AtomicBool,
+}
+
+impl Clone for KillRule {
+    fn clone(&self) -> Self {
+        KillRule {
+            worker: self.worker,
+            at_task: self.at_task,
+            fired: AtomicBool::new(self.fired.load(Ordering::SeqCst)),
+        }
+    }
+}
+
 /// What the injector decided for one task.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Disturbance {
@@ -51,6 +74,8 @@ pub struct Disturbance {
     pub delay: Duration,
     /// Report the task as failed instead of executing it.
     pub fail: bool,
+    /// Crash the worker (unclean exit) instead of executing it.
+    pub kill: bool,
 }
 
 /// See module docs. Build one, wrap it in an `Arc`, and hand it to
@@ -63,6 +88,7 @@ pub struct Turbulence {
     seed: u64,
     slow: Vec<SlowRule>,
     faults: Vec<FaultRule>,
+    kills: Vec<KillRule>,
     jitter_max: Duration,
 }
 
@@ -86,6 +112,19 @@ impl Turbulence {
     /// `worker`'s `at_task`-th task (0-based) fails.
     pub fn fail_at(mut self, worker: usize, at_task: u64) -> Turbulence {
         self.faults.push(FaultRule { worker, at_task });
+        self
+    }
+
+    /// `worker` crashes (unclean exit, as if the process died) when it
+    /// reaches its `at_task`-th task (0-based). Fires once: clones made
+    /// *before* the kill fires share the armed state, so a restart
+    /// attempt driven by the same `Arc<Turbulence>` runs clean.
+    pub fn kill_at(mut self, worker: usize, at_task: u64) -> Turbulence {
+        self.kills.push(KillRule {
+            worker,
+            at_task,
+            fired: AtomicBool::new(false),
+        });
         self
     }
 
@@ -117,13 +156,19 @@ impl Turbulence {
             .faults
             .iter()
             .any(|f| f.worker == worker && f.at_task == nth);
-        Disturbance { delay, fail }
+        let kill = self.kills.iter().any(|k| {
+            k.worker == worker
+                && nth >= k.at_task
+                && !k.fired.swap(true, Ordering::SeqCst)
+        });
+        Disturbance { delay, fail, kill }
     }
 
     /// Whether any rule targets `worker` at all (cheap pre-check).
     pub fn touches(&self, worker: usize) -> bool {
         self.slow.iter().any(|r| r.worker == worker)
             || self.faults.iter().any(|f| f.worker == worker)
+            || self.kills.iter().any(|k| k.worker == worker)
     }
 }
 
@@ -139,7 +184,7 @@ mod tests {
         // untouched workers and early tasks are undisturbed
         assert_eq!(
             t.disturbance(0, 100),
-            Disturbance { delay: Duration::ZERO, fail: false }
+            Disturbance { delay: Duration::ZERO, fail: false, kill: false }
         );
         assert_eq!(t.disturbance(2, 39).delay, Duration::ZERO);
         // from task 40, worker 2 is slow — and identically so on replay
@@ -158,5 +203,18 @@ mod tests {
         assert!(t.disturbance(1, 3).fail);
         assert!(!t.disturbance(1, 4).fail);
         assert!(!t.disturbance(0, 3).fail);
+    }
+
+    #[test]
+    fn kills_fire_once_from_their_task() {
+        let t = Turbulence::new(1).kill_at(1, 2);
+        assert!(t.touches(1) && !t.touches(0));
+        assert!(!t.disturbance(1, 1).kill);
+        assert!(!t.disturbance(0, 2).kill);
+        // fires at (or after) its task — then never again, even on the
+        // same (worker, nth): a restarted worker 1 replays clean.
+        assert!(t.disturbance(1, 2).kill);
+        assert!(!t.disturbance(1, 2).kill);
+        assert!(!t.disturbance(1, 3).kill);
     }
 }

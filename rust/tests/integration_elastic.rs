@@ -1,0 +1,517 @@
+//! Elastic membership oracle suite (DESIGN.md §14).
+//!
+//! The contract under test: membership churn — a worker joining
+//! mid-job, draining mid-job, or dying mid-job (map phase and shuffle
+//! boundary) — must never change the [`JobOutput`]. Every elastic run
+//! is diffed bit-for-bit against a static in-proc baseline, with
+//! `report.restarts == 0` (the ledger re-dispatches in-flight work,
+//! it does not restart the job) and the re-dispatch volume bounded by
+//! the lost slot's in-flight window.
+//!
+//! Also covered here, as regression tests for the listener-lifecycle
+//! fix: a late `bts worker --connect` is admitted when the membership
+//! is elastic and refused with a versioned error frame when it is
+//! frozen — never left hanging in the backlog. And the
+//! shuffle-fragment unstaging contract: the shared replicated store's
+//! byte footprint returns to its pre-job level after reduce jobs
+//! retire, including after a mid-shuffle worker loss (no leaked
+//! `shuffle_key` entries).
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use bts::data::{ModelParams, Workload};
+use bts::dfs::LatencyModel;
+use bts::exec::{run_cluster, Backend, ExecConfig};
+use bts::kneepoint::TaskSizing;
+use bts::net::{request_drain, run_worker};
+use bts::reduce::Partitioner;
+use bts::scheduler::SchedConfig;
+use bts::serve::{JobRequest, JobService, PoolConfig, ServeConfig};
+use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
+use bts::util::testutil::{Turbulence, SERVE_JOB_DEADLINE};
+use bts::workloads::build_small;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+fn params() -> ModelParams {
+    ModelParams::default()
+}
+
+const SEED: u64 = 0xB75;
+
+/// A slow-but-real data plane: paces the job so membership events
+/// scripted in wall-clock (drains, late joins) reliably land mid-job.
+fn paced() -> LatencyModel {
+    LatencyModel {
+        base_s: 2e-3,
+        per_mib_s: 0.0,
+        per_inflight_s: 1e-3,
+        sleep: true,
+    }
+}
+
+/// A worker killed mid-map must cost a ledger re-dispatch of its
+/// in-flight window — never a restart, never a different statistic.
+#[test]
+fn killed_worker_mid_map_matches_static_baseline_on_both_workloads() {
+    for workload in [Workload::Eaglet, Workload::NetflixLo] {
+        let backend = native();
+        let ds = build_small(workload, &params(), 30);
+        let base = ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 3,
+            ..Default::default()
+        };
+        let reference =
+            run_cluster(ds.as_ref(), backend.clone(), &base).unwrap();
+
+        // Worker 1 starts with a full dispatch window, so its third
+        // task deterministically exists: the kill always fires.
+        let killed = run_cluster(
+            ds.as_ref(),
+            backend,
+            &ExecConfig {
+                elastic: true,
+                turbulence: Some(Arc::new(
+                    Turbulence::new(SEED).kill_at(1, 2),
+                )),
+                ..base.clone()
+            },
+        )
+        .unwrap();
+
+        assert_eq!(
+            killed.output, reference.output,
+            "{workload:?}: elastic loss absorption changed the statistic"
+        );
+        assert_eq!(
+            killed.report.restarts, 0,
+            "{workload:?}: worker loss must not cost a job-level restart"
+        );
+        assert!(
+            killed.re_dispatched >= 1,
+            "{workload:?}: the dead slot held in-flight work; the \
+             ledger must re-dispatch it"
+        );
+        assert!(
+            killed.re_dispatched <= base.inflight as u64,
+            "{workload:?}: re-dispatch must cover only the lost \
+             in-flight window, got {} > {}",
+            killed.re_dispatched,
+            base.inflight
+        );
+        assert!(
+            !killed.workers[1].clean_shutdown,
+            "{workload:?}: the killed slot must be recorded as unclean"
+        );
+    }
+}
+
+/// Same contract at the shuffle boundary: a reduce-heavy job loses a
+/// worker around the map→shuffle handoff and still reproduces the
+/// executed-reduce statistic.
+#[test]
+fn killed_worker_at_shuffle_boundary_matches_reduce_baseline() {
+    let backend = native();
+    let ds = build_small(Workload::NetflixLo, &params(), 12);
+    let base = ExecConfig {
+        sizing: TaskSizing::Tiniest,
+        seed: SEED,
+        workers: 3,
+        reduce_tasks: 6,
+        partitioner: Partitioner::Hash,
+        ..Default::default()
+    };
+    let reference =
+        run_cluster(ds.as_ref(), backend.clone(), &base).unwrap();
+
+    // 12 map tasks over 3 slots fill each initial window exactly;
+    // worker 2's fifth unit (nth = 4) arrives with the refill at the
+    // shuffle handoff.
+    let killed = run_cluster(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            elastic: true,
+            turbulence: Some(Arc::new(Turbulence::new(SEED).kill_at(2, 4))),
+            ..base.clone()
+        },
+    )
+    .unwrap();
+
+    assert_eq!(
+        killed.output, reference.output,
+        "loss at the shuffle boundary changed the reduced statistic"
+    );
+    assert_eq!(killed.report.restarts, 0);
+    assert!(
+        killed.re_dispatched <= base.inflight as u64,
+        "re-dispatch exceeded the lost in-flight window: {}",
+        killed.re_dispatched
+    );
+}
+
+/// Cache and speculation layered on top of a mid-job loss must leave
+/// the statistic bit-identical to the plain static baseline.
+#[test]
+fn cache_and_speculation_on_elastic_loss_stay_bit_identical() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 24);
+    let reference = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 3,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let fancy = run_cluster(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 3,
+            elastic: true,
+            cache_mb: 16,
+            sched: SchedConfig {
+                dynamic: true,
+                speculate: true,
+                straggler_pct: 95.0,
+                ..Default::default()
+            },
+            turbulence: Some(Arc::new(Turbulence::new(SEED).kill_at(0, 3))),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    assert_eq!(
+        fancy.output, reference.output,
+        "cache + speculation + elastic loss changed the statistic"
+    );
+    assert_eq!(fancy.report.restarts, 0);
+    assert!(fancy.cache.is_some(), "the cache was attached");
+}
+
+/// A late `bts worker --connect` against an elastic leader is admitted
+/// mid-job, executes real work, and the grown membership still
+/// reproduces the static baseline bit-for-bit.
+#[test]
+fn late_tcp_joiner_is_admitted_into_an_elastic_job() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 24);
+    let reference = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Zero initial remote workers: the listener is open purely for
+    // late joiners. The lone local slot is paced at 5ms/task so the
+    // job is still deep in its map phase when the joiner connects.
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 0).unwrap();
+    let addr = remote.addr();
+    let joiner = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(15));
+        run_worker(&addr, native(), &RemoteWorkerOpts::default())
+    });
+    let elastic = run_cluster(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 1,
+            remote: Some(remote),
+            elastic: true,
+            turbulence: Some(Arc::new(Turbulence::new(SEED).slow_from(
+                0,
+                0,
+                Duration::from_millis(5),
+            ))),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let executed = joiner
+        .join()
+        .unwrap()
+        .expect("the late joiner must be admitted, not refused or hung");
+    assert!(
+        executed > 0,
+        "the admitted joiner never executed anything"
+    );
+    assert_eq!(
+        elastic.workers.len(),
+        2,
+        "the membership must have grown by the joiner"
+    );
+    assert_eq!(
+        elastic.output, reference.output,
+        "a mid-job join changed the statistic"
+    );
+    assert_eq!(elastic.report.restarts, 0);
+}
+
+/// A frozen (non-elastic) membership refuses a late connect with the
+/// versioned error frame — promptly, and without disturbing the pool,
+/// which keeps serving afterwards.
+#[test]
+fn late_connect_to_frozen_membership_is_refused_not_hung() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 16);
+    let solo = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 1).unwrap();
+    let addr = remote.addr();
+    let initial = thread::spawn({
+        let addr = addr.clone();
+        move || {
+            run_worker(&addr, native(), &RemoteWorkerOpts::default())
+                .expect("initial remote worker session")
+        }
+    });
+    // elastic stays off: the membership freezes once the initial
+    // quota (1 remote slot) is filled.
+    let svc = JobService::start(
+        backend,
+        ServeConfig {
+            pool: PoolConfig {
+                workers: 1,
+                remote: Some(remote),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // The pool outlives this call, so there is no shutdown race: the
+    // refusal below is the acceptor's answer, not a closed port.
+    let err = run_worker(&addr, native(), &RemoteWorkerOpts::default())
+        .expect_err("a frozen membership must refuse the late connect");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("frozen") && msg.contains("protocol v"),
+        "refusal must be the versioned membership frame, got: {msg}"
+    );
+
+    // The refusal must not have cost the pool anything.
+    let r = svc
+        .submit(
+            JobRequest::new(Workload::Eaglet, 16)
+                .with_seed(SEED)
+                .with_sizing(TaskSizing::Tiniest),
+        )
+        .unwrap()
+        .wait_timeout(SERVE_JOB_DEADLINE)
+        .unwrap();
+    let report = svc.shutdown().unwrap();
+    initial.join().unwrap();
+    assert_eq!(r.output, solo.output, "pool output diverged after refusal");
+    assert_eq!(report.workers, 2, "1 local + 1 remote slot, no growth");
+    assert_eq!(report.jobs_failed, 0);
+}
+
+/// `bts drain <worker>` against a live elastic leader: the drained
+/// slot hands its queue back and exits clean, survivors absorb the
+/// work, and the statistic is unchanged.
+#[test]
+fn drained_tcp_worker_mid_job_matches_baseline() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 40);
+    let reference = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 3,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let remote = RemoteWorkers::bind("127.0.0.1:0", 2).unwrap();
+    let addr = remote.addr();
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                run_worker(&addr, native(), &RemoteWorkerOpts::default())
+                    .expect("remote worker session")
+            })
+        })
+        .collect();
+    // Ask the leader to drain slot 2 (the second remote) once the job
+    // is under way; the paced data plane keeps it running well past
+    // the request.
+    let drainer = thread::spawn({
+        let addr = addr.clone();
+        move || {
+            thread::sleep(Duration::from_millis(15));
+            request_drain(&addr, 2)
+        }
+    });
+    let elastic = run_cluster(
+        ds.as_ref(),
+        backend,
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 1,
+            remote: Some(remote),
+            elastic: true,
+            latency: paced(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    drainer
+        .join()
+        .unwrap()
+        .expect("the leader must ack the drain request");
+    for h in workers {
+        h.join().unwrap();
+    }
+
+    assert_eq!(
+        elastic.output, reference.output,
+        "a mid-job drain changed the statistic"
+    );
+    assert_eq!(
+        elastic.report.restarts, 0,
+        "a graceful drain must never cost a restart"
+    );
+}
+
+/// Serve-layer half of the loss contract: an elastic pool absorbs a
+/// killed slot with a per-tenant ledger re-dispatch (no tenant
+/// restart), and the job's sample blocks *and* shuffle fragments are
+/// unstaged at retirement — the store footprint returns to its
+/// pre-job level even after a mid-shuffle worker loss.
+#[test]
+fn elastic_pool_absorbs_loss_and_unstages_the_store() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 20);
+    let solo = run_cluster(
+        ds.as_ref(),
+        backend.clone(),
+        &ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            seed: SEED,
+            workers: 2,
+            reduce_tasks: 4,
+            partitioner: Partitioner::Hash,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let svc = JobService::start(
+        backend,
+        ServeConfig {
+            pool: PoolConfig {
+                workers: 2,
+                elastic: true,
+                // Pace the slots so both share the job and the kill
+                // reliably fires mid-run.
+                latency: LatencyModel {
+                    base_s: 1e-3,
+                    per_mib_s: 0.0,
+                    per_inflight_s: 0.0,
+                    sleep: true,
+                },
+                turbulence: Some(Arc::new(
+                    Turbulence::new(SEED).kill_at(1, 3),
+                )),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let req = JobRequest::new(Workload::Eaglet, 20)
+        .with_seed(SEED)
+        .with_sizing(TaskSizing::Tiniest)
+        .with_reduce(4, Partitioner::Hash);
+    let r = svc.submit(req).unwrap().wait_timeout(SERVE_JOB_DEADLINE).unwrap();
+    let report = svc.shutdown().unwrap();
+
+    assert_eq!(
+        r.output, solo.output,
+        "ledger re-dispatch in the pool changed the statistic"
+    );
+    assert_eq!(
+        r.report.restarts, 0,
+        "elastic loss must be absorbed without a tenant restart"
+    );
+    assert_eq!(report.jobs_failed, 0);
+    assert_eq!(
+        report.dfs_stored_bytes, 0,
+        "worker loss leaked staged blocks or shuffle_key entries"
+    );
+}
+
+/// Clean-path half of the unstaging contract: back-to-back reduce
+/// jobs each stage shuffle fragments, each retirement removes them,
+/// and the session ends at the pre-job footprint.
+#[test]
+fn store_footprint_returns_to_pre_job_level_after_reduce_jobs() {
+    let backend = native();
+    let svc = JobService::start(
+        backend,
+        ServeConfig {
+            pool: PoolConfig { workers: 2, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for i in 0..2u64 {
+        let req = JobRequest::new(Workload::NetflixLo, 18)
+            .with_seed(SEED ^ i)
+            .with_sizing(TaskSizing::Tiniest)
+            .with_reduce(4, Partitioner::Skew);
+        svc.submit(req)
+            .unwrap()
+            .wait_timeout(SERVE_JOB_DEADLINE)
+            .unwrap();
+    }
+    let report = svc.shutdown().unwrap();
+    assert_eq!(report.jobs_completed, 2);
+    assert!(
+        report.shuffle_bytes > 0,
+        "the reduce jobs must have staged shuffle fragments"
+    );
+    assert_eq!(
+        report.dfs_stored_bytes, 0,
+        "retired jobs left blocks in the shared store"
+    );
+}
