@@ -1,0 +1,254 @@
+//! Federation scaling, shedding, and many-tenant placement
+//! (DESIGN.md §15).
+//!
+//!     cargo bench --bench federation_scale
+//!
+//! Three segments, all written to `results/BENCH_federation.json`:
+//!
+//! * **scaling** — the identical 24-job mixed-tenant set through a
+//!   1-leader and a 2-leader federation of the same per-shard shape.
+//!   Each shard runs one job at a time, so the serial chain halves
+//!   when a second leader joins; the run asserts ≥ 1.6x wall-clock
+//!   speedup at an unchanged SLO-miss rate, and that fleet size never
+//!   changes a single statistic (the determinism contract).
+//! * **overload** — a 40-job burst into a backlog cap of 4: the
+//!   front-door must shed the overflow fast with positive Retry-After
+//!   hints instead of queueing it, then drain what it admitted.
+//! * **tenant_spread** — thousands of synthetic tenants over the
+//!   placement ring (Jain-balanced shards) and a 2048-tenant DRF
+//!   allocation against a 256-slot federation.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Instant;
+
+use bts::coordinator::JobOutput;
+use bts::data::{ModelParams, Workload};
+use bts::dfs::Ring;
+use bts::error::Error;
+use bts::exec::Backend;
+use bts::federation::{
+    allocate, Capacity, Demand, Federation, FederationConfig, TenantDemand,
+};
+use bts::metrics::{jain_index, FederationReport};
+use bts::serve::JobRequest;
+use bts::util::bench::Bench;
+use bts::util::json::{num, obj, s, Json};
+use bts::util::rng::Rng;
+use bts::util::testutil::SERVE_JOB_DEADLINE;
+
+const SCALE_JOBS: usize = 24;
+const SCALE_TENANTS: usize = 12;
+const SCALE_SAMPLES: usize = 32;
+const BURST_JOBS: u64 = 40;
+const BURST_CAP: usize = 4;
+const RING_TENANTS: usize = 4096;
+const DRF_TENANTS: usize = 2048;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+/// One-shard-shape config: every leader runs one job at a time, so
+/// adding leaders is the *only* source of concurrency and the scaling
+/// segment measures exactly the front-door's fan-out.
+fn scale_cfg(leaders: usize) -> FederationConfig {
+    FederationConfig {
+        leaders,
+        workers_per_leader: 1,
+        max_active_per_leader: 1,
+        leader_outstanding_cap: 1,
+        backlog_cap: 1024,
+        ..FederationConfig::default()
+    }
+}
+
+struct ScaleArm {
+    report: FederationReport,
+    wall_s: f64,
+    /// seed → statistic, for the cross-arm determinism check.
+    outputs: BTreeMap<u64, JobOutput>,
+}
+
+fn run_scale_arm(leaders: usize) -> ScaleArm {
+    let mut fed = Federation::start(native(), scale_cfg(leaders))
+        .expect("start federation");
+    let mut seed_of: HashMap<u64, u64> = HashMap::new();
+    let t = Instant::now();
+    for j in 0..SCALE_JOBS {
+        let tenant = format!("tenant-{:02}", j % SCALE_TENANTS);
+        let seed = 0xFED5_0000 + j as u64;
+        let req = JobRequest::new(Workload::Eaglet, SCALE_SAMPLES)
+            .with_seed(seed)
+            // generous but real: every job passes the same admission
+            // gate, so both arms report a comparable SLO-miss rate
+            .with_deadline(1e6);
+        let id = fed.submit(&tenant, req).expect("admit scale job");
+        seed_of.insert(id, seed);
+    }
+    fed.pump_until_idle(SERVE_JOB_DEADLINE).expect("drain scale arm");
+    let wall_s = t.elapsed().as_secs_f64();
+    let done = fed.drain_completions();
+    assert_eq!(done.len(), SCALE_JOBS);
+    let mut outputs = BTreeMap::new();
+    for c in done {
+        let res = c.result.expect("scale job");
+        outputs.insert(seed_of[&c.id], res.output);
+    }
+    let report = fed.shutdown().expect("shutdown scale arm");
+    ScaleArm { report, wall_s, outputs }
+}
+
+fn scale_record(leaders: usize, arm: &ScaleArm) -> Json {
+    obj(vec![
+        ("segment", s("scaling")),
+        ("leaders", num(leaders as f64)),
+        ("jobs", num(SCALE_JOBS as f64)),
+        ("wall_s", num(arm.wall_s)),
+        ("jobs_per_s", num(SCALE_JOBS as f64 / arm.wall_s.max(1e-9))),
+        ("slo_miss_rate", num(arm.report.slo_miss_rate())),
+        ("shed", num(arm.report.shed as f64)),
+        ("spilled", num(arm.report.spilled as f64)),
+        ("fairness", num(arm.report.fairness)),
+    ])
+}
+
+fn main() {
+    let mut b = Bench::new("federation_scale");
+    let mut records = Vec::new();
+
+    // -- scaling: 1 leader vs 2 leaders on the identical job set ----
+    // Best of two runs per arm damps scheduler noise; the determinism
+    // check uses the first run of each.
+    let solo = run_scale_arm(1);
+    let duo = run_scale_arm(2);
+    assert_eq!(
+        solo.outputs, duo.outputs,
+        "fleet size must never change a statistic"
+    );
+    let solo_wall = solo.wall_s.min(run_scale_arm(1).wall_s);
+    let duo_wall = duo.wall_s.min(run_scale_arm(2).wall_s);
+    let speedup = solo_wall / duo_wall.max(1e-9);
+    assert_eq!(
+        solo.report.slo_miss_rate(),
+        duo.report.slo_miss_rate(),
+        "scaling must not move the SLO-miss rate"
+    );
+    assert_eq!(solo.report.shed, 0, "the scaling set fits the backlog");
+    assert_eq!(duo.report.shed, 0);
+    records.push(scale_record(1, &solo));
+    records.push(scale_record(2, &duo));
+    records.push(obj(vec![
+        ("segment", s("scaling_ratio")),
+        ("speedup_1_to_2", num(speedup)),
+        ("solo_wall_s", num(solo_wall)),
+        ("duo_wall_s", num(duo_wall)),
+    ]));
+    b.record("speedup_1_to_2", speedup, "x");
+    b.record("solo_wall", solo_wall, "s");
+    b.record("duo_wall", duo_wall, "s");
+
+    // -- overload: a burst far past the backlog cap ------------------
+    let cfg = FederationConfig {
+        backlog_cap: BURST_CAP,
+        ..scale_cfg(2)
+    };
+    let mut fed = Federation::start(native(), cfg).expect("start burst");
+    let mut accepted = 0u64;
+    let mut first_hint = None;
+    for j in 0..BURST_JOBS {
+        let req = JobRequest::new(Workload::NetflixLo, 8)
+            .with_seed(0x0BAD_0000 + j);
+        match fed.submit(&format!("burst-{}", j % 8), req) {
+            Ok(_) => accepted += 1,
+            Err(Error::Shed { retry_after_s, .. }) => {
+                assert!(
+                    retry_after_s > 0.0,
+                    "a shed must carry a positive Retry-After hint"
+                );
+                if first_hint.is_none() {
+                    first_hint = Some(retry_after_s);
+                }
+            }
+            Err(e) => panic!("unexpected refusal: {e}"),
+        }
+    }
+    fed.pump_until_idle(SERVE_JOB_DEADLINE).expect("drain burst");
+    let done = fed.drain_completions();
+    assert_eq!(done.len() as u64, accepted, "every admitted job finishes");
+    assert!(done.iter().all(|c| c.result.is_ok()));
+    let report = fed.shutdown().expect("shutdown burst");
+    assert!(report.shed > 0, "overload must shed, not queue unboundedly");
+    assert_eq!(report.shed + accepted, BURST_JOBS);
+    records.push(obj(vec![
+        ("segment", s("overload")),
+        ("submitted", num(BURST_JOBS as f64)),
+        ("accepted", num(accepted as f64)),
+        ("shed", num(report.shed as f64)),
+        ("shed_rate", num(report.shed_rate())),
+        ("retry_after_hint_s", num(first_hint.expect("≥1 shed"))),
+    ]));
+    b.record("overload_shed", report.shed as f64, "jobs");
+
+    // -- tenant_spread: thousands of tenants over ring + DRF ---------
+    // The same `Ring::new(leaders, vnodes)` the front-door shards
+    // with, at ops-scale vnode density.
+    let ring = Ring::new(4, 128);
+    let mut counts = [0.0f64; 4];
+    for i in 0..RING_TENANTS {
+        counts[ring.primary(&format!("tenant-{i:05}"))] += 1.0;
+    }
+    let placement_fairness = jain_index(&counts);
+    assert!(
+        placement_fairness > 0.85,
+        "ring placement too skewed: {counts:?}"
+    );
+    let mut rng = Rng::new(0xD2F);
+    let demands: Vec<TenantDemand> = (0..DRF_TENANTS)
+        .map(|i| TenantDemand {
+            tenant: format!("d{i:04}"),
+            per_job: Demand { slots: rng.range(1, 4), cache_bytes: 0 },
+            jobs: rng.range(1, 8),
+        })
+        .collect();
+    let cap = Capacity { slots: 256, cache_bytes: 0 };
+    let t = Instant::now();
+    let grants = allocate(cap, &demands);
+    let drf_alloc_s = t.elapsed().as_secs_f64();
+    let slots_granted: u64 = demands
+        .iter()
+        .zip(&grants)
+        .map(|(d, &g)| d.per_job.slots * g)
+        .sum();
+    assert!(slots_granted <= cap.slots, "DRF overcommitted the slots");
+    let served = grants.iter().filter(|&&g| g > 0).count();
+    assert!(
+        served >= 64,
+        "only {served} of {DRF_TENANTS} tenants progressed on 256 slots"
+    );
+    records.push(obj(vec![
+        ("segment", s("tenant_spread")),
+        ("ring_tenants", num(RING_TENANTS as f64)),
+        ("ring_leaders", num(4.0)),
+        ("placement_fairness", num(placement_fairness)),
+        ("drf_tenants", num(DRF_TENANTS as f64)),
+        ("drf_alloc_s", num(drf_alloc_s)),
+        ("drf_slots_granted", num(slots_granted as f64)),
+        ("drf_tenants_served", num(served as f64)),
+    ]));
+    b.record("placement_fairness", placement_fairness, "jain");
+    b.record("drf_alloc", drf_alloc_s * 1e3, "ms");
+
+    let path = bts::util::bench_record::write("federation", records)
+        .expect("write BENCH_federation.json");
+    println!("wrote {path}");
+    b.finish();
+
+    // The acceptance bar: a second leader must buy most of its
+    // theoretical 2x on a strictly-serialized shard shape.
+    assert!(
+        speedup >= 1.6,
+        "1→2 leader speedup {speedup:.2}x fell below 1.6x \
+         (solo {solo_wall:.3}s, duo {duo_wall:.3}s)"
+    );
+}

@@ -68,6 +68,29 @@ impl Ring {
         out
     }
 
+    /// The hash arcs `node` owns, as half-open `(from, to]` intervals
+    /// on the ring (with `from > to` marking the single wrap-around
+    /// arc through `u64::MAX`/0). A key hashing into one of these arcs
+    /// has `node` as its [`Ring::primary`]. Used by the front-door's
+    /// shard map display and for cache-footprint accounting: summing
+    /// arc widths over `u64::MAX` approximates the node's key share.
+    pub fn owned(&self, node: usize) -> Vec<(u64, u64)> {
+        assert!(node < self.nodes, "node {node} out of range");
+        let len = self.points.len();
+        let mut arcs = Vec::new();
+        for i in 0..len {
+            let (h, n) = self.points[i];
+            if n != node {
+                continue;
+            }
+            let prev = self.points[(i + len - 1) % len].0;
+            // prev == h only in a one-point ring: that node owns
+            // everything, represented as the full wrap arc.
+            arcs.push((prev, h));
+        }
+        arcs
+    }
+
     /// Add a node (used by the adaptive replication controller when it
     /// widens the data-node set).
     pub fn grow(&self) -> Ring {
@@ -233,6 +256,74 @@ mod tests {
     #[should_panic(expected = "cannot shrink")]
     fn shrink_below_one_node_panics() {
         let _ = Ring::new(1, 8).shrink();
+    }
+
+    /// membership test against the `(from, to]`-with-wrap encoding
+    fn arc_contains(arcs: &[(u64, u64)], h: u64) -> bool {
+        arcs.iter().any(|&(from, to)| {
+            if from < to {
+                h > from && h <= to
+            } else {
+                // wrap-around arc through u64::MAX/0
+                h > from || h <= to
+            }
+        })
+    }
+
+    #[test]
+    fn prop_owned_arcs_agree_with_primary() {
+        check("ring owned arcs", 20, |rng| {
+            let n = rng.range(2, 8) as usize;
+            let r = Ring::new(n, 32);
+            let per_node: Vec<Vec<(u64, u64)>> =
+                (0..n).map(|node| r.owned(node)).collect();
+            for k in 0..500 {
+                let key = format!("own{k}");
+                let h = ring_hash(key.as_bytes());
+                let p = r.primary(&key);
+                prop_assert!(
+                    arc_contains(&per_node[p], h),
+                    "primary {p} of key {key} not in its owned arcs"
+                );
+                for (node, arcs) in per_node.iter().enumerate() {
+                    if node != p {
+                        prop_assert!(
+                            !arc_contains(arcs, h),
+                            "key {key} in arcs of non-primary {node}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn owned_arcs_cover_the_whole_ring_exactly_once() {
+        let r = Ring::new(5, 48);
+        let mut all: Vec<(u64, u64)> =
+            (0..5).flat_map(|n| r.owned(n)).collect();
+        // exactly one wrap arc, and sorted by endpoint the arcs chain:
+        // each arc starts where the previous one ended
+        let wraps = all.iter().filter(|&&(f, t)| f >= t).count();
+        assert_eq!(wraps, 1, "expected one wrap-around arc");
+        all.sort_unstable_by_key(|&(_, to)| to);
+        for w in all.windows(2) {
+            assert_eq!(
+                w[1].0, w[0].1,
+                "gap or overlap between arcs {:?} and {:?}",
+                w[0], w[1]
+            );
+        }
+        let last = all.last().unwrap();
+        let first = all.first().unwrap();
+        assert_eq!(first.0, last.1, "ring does not close");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn owned_rejects_unknown_node() {
+        let _ = Ring::new(3, 8).owned(3);
     }
 
     #[test]

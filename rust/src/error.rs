@@ -21,6 +21,9 @@ pub enum Error {
     Scheduler(String),
     /// A job was refused at service admission (deadline infeasible).
     Admission(String),
+    /// A job was load-shed by the federation front-door; carries the
+    /// Retry-After backoff hint from the `Shed` wire frame.
+    Shed { retry_after_s: f64, reason: String },
     Dfs(String),
     JobFailed { attempts: u32, cause: String },
     Protocol(String),
@@ -38,6 +41,10 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Scheduler(m) => write!(f, "scheduler error: {m}"),
             Error::Admission(m) => write!(f, "admission rejected: {m}"),
+            Error::Shed { retry_after_s, reason } => write!(
+                f,
+                "load shed: {reason} (retry after {retry_after_s:.1}s)"
+            ),
             Error::Dfs(m) => write!(f, "dfs error: {m}"),
             Error::JobFailed { attempts, cause } => {
                 write!(f, "job failed after {attempts} attempts: {cause}")
@@ -88,6 +95,14 @@ mod tests {
         assert_eq!(e.to_string(), "config error: bad cluster");
         let e = Error::JobFailed { attempts: 3, cause: "node died".into() };
         assert!(e.to_string().contains("3 attempts"));
+        let e = Error::Shed {
+            retry_after_s: 2.25,
+            reason: "shard 0 saturated".into(),
+        };
+        assert_eq!(
+            e.to_string(),
+            "load shed: shard 0 saturated (retry after 2.2s)"
+        );
     }
 
     #[test]

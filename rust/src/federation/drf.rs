@@ -1,0 +1,239 @@
+//! Dominant-resource fairness (DRF) over the federation's two shared
+//! resources: worker slots and cache bytes.
+//!
+//! Tenants at the front-door compete for map slots across every live
+//! leader and for the shared block-cache budget. A tenant's *dominant
+//! share* is the larger of its two resource fractions; DRF's
+//! progressive-filling rule repeatedly grants one job to the tenant
+//! with the smallest dominant share that still fits. The classic
+//! guarantees carry over at job granularity:
+//!
+//! * **work conservation** — allocation only stops when no remaining
+//!   demand fits in the leftover capacity;
+//! * **envy-freeness within one job's rounding** — a tenant with unmet
+//!   demand never trails another tenant by more than that tenant's
+//!   single-job dominant increment (for demand shapes it could have
+//!   taken itself);
+//! * **arrival-order independence** — ties break on the tenant name,
+//!   never on input position, so shuffling the submission order cannot
+//!   change anyone's grant.
+//!
+//! `prop_invariants.rs` checks all three properties over random tenant
+//! mixes; the live front-door uses the same [`Capacity::dominant_share`]
+//! comparator to pick which tenant's queue dispatches next.
+
+/// Resources one job (or one tenant's dispatched set) holds: map slots
+/// plus nominal cache bytes. A job always occupies at least one slot —
+/// [`allocate`] normalizes zero-slot demands up to 1 so progressive
+/// filling terminates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Demand {
+    pub slots: u64,
+    pub cache_bytes: u64,
+}
+
+impl Demand {
+    pub fn plus(self, other: Demand) -> Demand {
+        Demand {
+            slots: self.slots + other.slots,
+            cache_bytes: self.cache_bytes + other.cache_bytes,
+        }
+    }
+
+    /// Release `other` (saturating: a release can never go negative).
+    pub fn minus(self, other: Demand) -> Demand {
+        Demand {
+            slots: self.slots.saturating_sub(other.slots),
+            cache_bytes: self.cache_bytes.saturating_sub(other.cache_bytes),
+        }
+    }
+}
+
+/// Total divisible capacity of the federation (live leaders × workers,
+/// live leaders × cache budget). `cache_bytes == 0` means the cache
+/// dimension is unconfigured: it neither constrains fitting nor
+/// contributes to dominant shares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capacity {
+    pub slots: u64,
+    pub cache_bytes: u64,
+}
+
+impl Capacity {
+    /// Would granting `extra` on top of `used` still fit?
+    pub fn fits(&self, used: Demand, extra: Demand) -> bool {
+        used.slots + extra.slots <= self.slots
+            && (self.cache_bytes == 0
+                || used.cache_bytes + extra.cache_bytes <= self.cache_bytes)
+    }
+
+    /// max(slot fraction, cache fraction) — the DRF comparator. An
+    /// unconfigured dimension (capacity 0) contributes 0.
+    pub fn dominant_share(&self, used: Demand) -> f64 {
+        let s = if self.slots == 0 {
+            0.0
+        } else {
+            used.slots as f64 / self.slots as f64
+        };
+        let c = if self.cache_bytes == 0 {
+            0.0
+        } else {
+            used.cache_bytes as f64 / self.cache_bytes as f64
+        };
+        s.max(c)
+    }
+}
+
+/// One tenant's queue as the allocator sees it: a per-job demand
+/// vector and how many jobs it wants. Tenant names must be distinct —
+/// the name is the deterministic tie-breaker.
+#[derive(Debug, Clone)]
+pub struct TenantDemand {
+    pub tenant: String,
+    pub per_job: Demand,
+    pub jobs: u64,
+}
+
+/// Progressive-filling DRF: repeatedly grant one job to the tenant
+/// with the smallest dominant share whose next job still fits, ties
+/// broken by tenant name. Returns jobs granted per tenant, aligned
+/// with the input order (the *answer* is input-order aligned; the
+/// *decision* never depends on input order).
+pub fn allocate(cap: Capacity, tenants: &[TenantDemand]) -> Vec<u64> {
+    let n = tenants.len();
+    // Normalized per-job demands: every job holds ≥ 1 slot.
+    let per_job: Vec<Demand> = tenants
+        .iter()
+        .map(|t| Demand {
+            slots: t.per_job.slots.max(1),
+            cache_bytes: t.per_job.cache_bytes,
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| tenants[a].tenant.cmp(&tenants[b].tenant));
+    let mut granted = vec![0u64; n];
+    let mut used = vec![Demand::default(); n];
+    let mut total = Demand::default();
+    loop {
+        // Strict `<` while scanning in name order keeps ties on the
+        // lexicographically-smallest tenant — the permutation-
+        // invariance anchor.
+        let mut best: Option<(f64, usize)> = None;
+        for &i in &order {
+            if granted[i] >= tenants[i].jobs {
+                continue;
+            }
+            if !cap.fits(total, per_job[i]) {
+                continue;
+            }
+            let share = cap.dominant_share(used[i]);
+            let better = match best {
+                None => true,
+                Some((bs, _)) => share < bs,
+            };
+            if better {
+                best = Some((share, i));
+            }
+        }
+        let Some((_, i)) = best else { break };
+        granted[i] += 1;
+        used[i] = used[i].plus(per_job[i]);
+        total = total.plus(per_job[i]);
+    }
+    granted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(name: &str, slots: u64, cache: u64, jobs: u64) -> TenantDemand {
+        TenantDemand {
+            tenant: name.into(),
+            per_job: Demand { slots, cache_bytes: cache },
+            jobs,
+        }
+    }
+
+    #[test]
+    fn splits_identical_tenants_evenly() {
+        let cap = Capacity { slots: 8, cache_bytes: 0 };
+        let g = allocate(cap, &[t("a", 1, 0, 100), t("b", 1, 0, 100)]);
+        assert_eq!(g, vec![4, 4]);
+    }
+
+    #[test]
+    fn classic_drf_example_balances_dominant_shares() {
+        // The DRF paper's shape: tenant A dominant in CPU (slots),
+        // tenant B dominant in memory (cache). Equalizing dominant
+        // shares gives A 3 jobs (3/9 slots) and B 2 jobs (2/6 cache
+        // units ≈ 0.33 each).
+        let cap = Capacity { slots: 9, cache_bytes: 18 };
+        let g = allocate(
+            cap,
+            &[t("a", 1, 4, 100), t("b", 3, 1, 100)],
+        );
+        let share_a = cap.dominant_share(Demand {
+            slots: g[0],
+            cache_bytes: g[0] * 4,
+        });
+        let share_b = cap.dominant_share(Demand {
+            slots: g[1] * 3,
+            cache_bytes: g[1],
+        });
+        assert!(g[0] >= 1 && g[1] >= 1, "both make progress: {g:?}");
+        assert!(
+            (share_a - share_b).abs() <= 4.0 / 18.0 + 1e-12,
+            "dominant shares within one increment: {share_a} vs {share_b}"
+        );
+    }
+
+    #[test]
+    fn stops_exactly_at_capacity() {
+        let cap = Capacity { slots: 5, cache_bytes: 0 };
+        let g = allocate(cap, &[t("a", 2, 0, 10), t("b", 2, 0, 10)]);
+        // 2+2 slots granted; the fifth slot fits nobody's 2-slot job.
+        assert_eq!(g.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn grants_everything_under_light_load() {
+        let cap = Capacity { slots: 100, cache_bytes: 1 << 30 };
+        let demands = [t("a", 1, 1024, 3), t("b", 2, 2048, 5)];
+        let g = allocate(cap, &demands);
+        assert_eq!(g, vec![3, 5], "no contention ⇒ full grants");
+    }
+
+    #[test]
+    fn zero_slot_demand_still_terminates() {
+        let cap = Capacity { slots: 4, cache_bytes: 0 };
+        let g = allocate(cap, &[t("a", 0, 0, 1_000_000)]);
+        assert_eq!(g, vec![4], "normalized to 1 slot per job");
+    }
+
+    #[test]
+    fn ignores_cache_dimension_when_unconfigured() {
+        let cap = Capacity { slots: 2, cache_bytes: 0 };
+        let g = allocate(cap, &[t("a", 1, u64::MAX / 2, 2)]);
+        assert_eq!(g, vec![2]);
+        assert_eq!(
+            cap.dominant_share(Demand { slots: 1, cache_bytes: 99 }),
+            0.5
+        );
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let cap = Capacity { slots: 4, cache_bytes: 0 };
+        assert!(allocate(cap, &[]).is_empty());
+        assert_eq!(allocate(cap, &[t("a", 1, 0, 0)]), vec![0]);
+    }
+
+    #[test]
+    fn demand_arithmetic_saturates() {
+        let a = Demand { slots: 1, cache_bytes: 10 };
+        let b = Demand { slots: 2, cache_bytes: 3 };
+        assert_eq!(b.plus(a), Demand { slots: 3, cache_bytes: 13 });
+        assert_eq!(a.minus(b), Demand { slots: 0, cache_bytes: 7 });
+    }
+}

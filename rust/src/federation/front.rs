@@ -1,0 +1,782 @@
+//! The front-door core: N independent leaders behind one sharding,
+//! fair-queueing, load-shedding admission point (DESIGN.md §15).
+//!
+//! A [`Federation`] owns its leaders in-process — each one a full
+//! [`JobService`] with its own dispatcher, worker pool, and replicated
+//! store — and routes tenants onto them with the same consistent-hash
+//! ring the data layer uses for blocks. The routing pipeline per
+//! submission:
+//!
+//! 1. **admission** — the SLO planner estimate (memoized in an
+//!    [`EstimateCache`]) gates infeasible deadlines *before* the job
+//!    reaches any leader;
+//! 2. **shed** — past the front-door backlog cap the job is refused
+//!    with [`Error::Shed`] carrying a deterministic Retry-After hint,
+//!    so overload degrades into fast, honest refusals instead of
+//!    unbounded queueing;
+//! 3. **fair queue** — admitted jobs wait in per-tenant FIFOs; the
+//!    dispatch sweep releases them in DRF order (smallest dominant
+//!    share over slots + cache bytes first), so a tenant spraying
+//!    hundreds of jobs cannot starve a light one;
+//! 4. **route** — the tenant's home shard is its first *live* ring
+//!    replica; a saturated home spills the whole job to the
+//!    least-loaded live sibling (counted, deterministic: the spill
+//!    decision reads only the front-door's own outstanding ledger);
+//! 5. **re-home** — when a leader is killed its pending and in-flight
+//!    tenants re-route to the surviving ring order. The determinism
+//!    contract (same seed ⇒ same statistic on any leader) makes
+//!    re-homing invisible in the outputs.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::drf::{Capacity, Demand};
+use crate::dfs::Ring;
+use crate::error::{Error, Result};
+use crate::exec::Backend;
+use crate::metrics::{jain_index, FederationReport};
+use crate::net::protocol::LeaderStat;
+use crate::serve::{
+    feasible, JobHandle, JobRequest, JobResult, JobService, PoolConfig,
+    ServeConfig,
+};
+use crate::slo::EstimateCache;
+use crate::workloads::default_compute_s_per_mib;
+
+/// Shape of a federation: how many leaders, how big each one is, and
+/// where the overload thresholds sit.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// Independent leader instances (shards).
+    pub leaders: usize,
+    /// Map slots per leader's pool.
+    pub workers_per_leader: usize,
+    /// Jobs each leader multiplexes at once.
+    pub max_active_per_leader: usize,
+    /// Per-leader shared block-cache budget in MiB (0 disables; also
+    /// turns off the DRF cache dimension).
+    pub cache_mb_per_leader: usize,
+    /// Outstanding (dispatched, unfinished) jobs the front-door lets
+    /// one leader carry before routing around it. This is front-door
+    /// ledger accounting — not a racy gauge read — so spill decisions
+    /// are deterministic given the dispatch/completion sequence.
+    pub leader_outstanding_cap: usize,
+    /// Admitted-but-undispatched jobs the front-door holds across all
+    /// tenants before shedding new submissions.
+    pub backlog_cap: usize,
+    /// Virtual nodes per leader on the tenant ring.
+    pub vnodes: usize,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            leaders: 2,
+            workers_per_leader: 2,
+            max_active_per_leader: 2,
+            cache_mb_per_leader: 0,
+            leader_outstanding_cap: 4,
+            backlog_cap: 64,
+            vnodes: 32,
+        }
+    }
+}
+
+impl FederationConfig {
+    /// The [`ServeConfig`] each leader starts with.
+    pub fn serve_config(&self) -> ServeConfig {
+        ServeConfig {
+            pool: PoolConfig {
+                workers: self.workers_per_leader.max(1),
+                cache_mb: self.cache_mb_per_leader,
+                ..PoolConfig::default()
+            },
+            max_active: self.max_active_per_leader.max(1),
+            ..ServeConfig::default()
+        }
+    }
+}
+
+/// One admitted job waiting in its tenant's FIFO.
+struct PendingJob {
+    id: u64,
+    req: JobRequest,
+}
+
+/// One dispatched, unfinished job.
+struct Inflight {
+    id: u64,
+    tenant: String,
+    leader: usize,
+    spilled: bool,
+    req: JobRequest,
+    handle: JobHandle,
+}
+
+/// A finished federation job: where it ran and what came back.
+#[derive(Debug)]
+pub struct CompletedJob {
+    pub id: u64,
+    pub tenant: String,
+    pub leader: usize,
+    pub spilled: bool,
+    pub result: Result<JobResult>,
+}
+
+/// The federation front-door (see module docs for the pipeline).
+/// Single-threaded by design: `submit` enqueues, [`Federation::pump`]
+/// sweeps completions and dispatches in DRF order. The TCP server
+/// wraps this in a mutex with a pump thread.
+pub struct Federation {
+    cfg: FederationConfig,
+    /// `None` marks a killed leader; indices are stable shard ids.
+    leaders: Vec<Option<JobService>>,
+    ring: Ring,
+    est: EstimateCache,
+    next_id: u64,
+    /// Per-tenant FIFOs of admitted jobs (BTreeMap: deterministic
+    /// name-order iteration is the DRF tie-breaker).
+    pending: BTreeMap<String, VecDeque<PendingJob>>,
+    pending_total: usize,
+    /// Resources each tenant's dispatched jobs currently hold.
+    held: HashMap<String, Demand>,
+    inflight: Vec<Inflight>,
+    /// Dispatched-minus-completed per leader (the spill ledger).
+    outstanding: Vec<usize>,
+    completed: Vec<CompletedJob>,
+    // session accounting
+    submitted: u64,
+    admission_rejected: u64,
+    shed: u64,
+    spilled: u64,
+    rehomed: u64,
+    completed_ok: u64,
+    failed: u64,
+    tenant_jobs: HashMap<String, u64>,
+    tenant_completed: HashMap<String, u64>,
+    leader_completed: Vec<u64>,
+    busy_polls: Vec<u64>,
+    total_polls: u64,
+    started: Instant,
+}
+
+impl Federation {
+    /// Start `cfg.leaders` independent leader services over one shared
+    /// backend.
+    pub fn start(
+        backend: Arc<Backend>,
+        cfg: FederationConfig,
+    ) -> Result<Federation> {
+        if cfg.leaders == 0 {
+            return Err(Error::Config(
+                "federation needs at least one leader".into(),
+            ));
+        }
+        let mut leaders = Vec::with_capacity(cfg.leaders);
+        for _ in 0..cfg.leaders {
+            leaders.push(Some(JobService::start(
+                backend.clone(),
+                cfg.serve_config(),
+            )?));
+        }
+        let n = cfg.leaders;
+        Ok(Federation {
+            ring: Ring::new(n, cfg.vnodes.max(1)),
+            leaders,
+            est: EstimateCache::new(),
+            next_id: 1,
+            pending: BTreeMap::new(),
+            pending_total: 0,
+            held: HashMap::new(),
+            inflight: Vec::new(),
+            outstanding: vec![0; n],
+            completed: Vec::new(),
+            submitted: 0,
+            admission_rejected: 0,
+            shed: 0,
+            spilled: 0,
+            rehomed: 0,
+            completed_ok: 0,
+            failed: 0,
+            tenant_jobs: HashMap::new(),
+            tenant_completed: HashMap::new(),
+            leader_completed: vec![0; n],
+            busy_polls: vec![0; n],
+            total_polls: 0,
+            started: Instant::now(),
+            cfg,
+        })
+    }
+
+    /// The tenant's home shard with every leader alive (its ring
+    /// primary).
+    pub fn home_leader(&self, tenant: &str) -> usize {
+        self.ring.primary(tenant)
+    }
+
+    fn live_leaders(&self) -> usize {
+        self.leaders.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Total divisible capacity over live leaders (the DRF
+    /// denominator).
+    fn capacity(&self) -> Capacity {
+        let live = self.live_leaders() as u64;
+        Capacity {
+            slots: live * self.cfg.workers_per_leader.max(1) as u64,
+            cache_bytes: live
+                * self.cfg.cache_mb_per_leader as u64
+                * 1024
+                * 1024,
+        }
+    }
+
+    /// Resources one dispatched job of `req` holds against the DRF
+    /// capacity.
+    fn demand_of(&self, req: &JobRequest) -> Demand {
+        Demand {
+            slots: 1,
+            cache_bytes: if self.cfg.cache_mb_per_leader > 0 {
+                req.nominal_bytes() as u64
+            } else {
+                0
+            },
+        }
+    }
+
+    /// Planner estimate for `req` on one leader's pool (memoized).
+    pub fn estimate_s(&self, req: &JobRequest) -> f64 {
+        self.est.estimate_s(
+            req.workload,
+            req.nominal_bytes(),
+            self.cfg.workers_per_leader.max(1),
+            default_compute_s_per_mib(req.workload),
+        )
+    }
+
+    /// Admit one job for `tenant`, or refuse it: `Error::Admission`
+    /// when its deadline is infeasible under the planner estimate
+    /// (checked here, before any leader sees the job), `Error::Shed`
+    /// with a Retry-After hint when the front-door backlog is at cap.
+    pub fn submit(&mut self, tenant: &str, req: JobRequest) -> Result<u64> {
+        self.submitted += 1;
+        if self.live_leaders() == 0 {
+            return Err(Error::Scheduler(
+                "every leader in the federation is dead".into(),
+            ));
+        }
+        if req.samples == 0 {
+            return Err(Error::Config("job needs at least one sample".into()));
+        }
+        if let Some(d) = req.deadline_s {
+            if !d.is_finite() || d < 0.0 {
+                return Err(Error::Config(format!(
+                    "deadline must be a finite non-negative number of \
+                     seconds, got {d}"
+                )));
+            }
+            let est = self.estimate_s(&req);
+            if !feasible(est, req.deadline_s) {
+                self.admission_rejected += 1;
+                return Err(Error::Admission(format!(
+                    "planner estimates {est:.1}s for {} samples of {}, \
+                     beyond the {:.3}s deadline",
+                    req.samples,
+                    req.workload.name(),
+                    d,
+                )));
+            }
+        }
+        if self.pending_total >= self.cfg.backlog_cap.max(1) {
+            self.shed += 1;
+            let est = self.estimate_s(&req);
+            let slots = self.capacity().slots.max(1) as f64;
+            // One backlog's worth of estimated work per available slot:
+            // the earliest a retry could plausibly be dispatched.
+            let retry_after_s =
+                est * (1.0 + self.pending_total as f64 / slots);
+            return Err(Error::Shed {
+                retry_after_s,
+                reason: format!(
+                    "front-door backlog {} at cap {} for tenant {tenant}",
+                    self.pending_total, self.cfg.backlog_cap
+                ),
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        *self.tenant_jobs.entry(tenant.to_string()).or_insert(0) += 1;
+        self.pending
+            .entry(tenant.to_string())
+            .or_default()
+            .push_back(PendingJob { id, req });
+        self.pending_total += 1;
+        Ok(id)
+    }
+
+    /// Pick where `tenant`'s next job should run, reading only the
+    /// front-door ledger: the live home shard if it has headroom, else
+    /// the least-loaded live sibling (a *spill*), else nowhere.
+    /// Returns `(leader, spilled, rehomed)`.
+    fn route(&self, tenant: &str) -> Option<(usize, bool, bool)> {
+        let reps = self.ring.replicas(tenant, self.leaders.len());
+        let primary = reps[0];
+        let home = *reps.iter().find(|&&l| self.leaders[l].is_some())?;
+        let cap = self.cfg.leader_outstanding_cap.max(1);
+        if self.outstanding[home] < cap {
+            return Some((home, false, home != primary));
+        }
+        let sibling = (0..self.leaders.len())
+            .filter(|&l| {
+                l != home
+                    && self.leaders[l].is_some()
+                    && self.outstanding[l] < cap
+            })
+            .min_by_key(|&l| (self.outstanding[l], l))?;
+        Some((sibling, true, false))
+    }
+
+    /// One sweep: collect finished jobs (re-homing any stranded by a
+    /// killed leader), then dispatch pending jobs in DRF order while
+    /// leaders have headroom. Returns completions collected this sweep.
+    pub fn pump(&mut self) -> usize {
+        let mut collected = 0;
+        // 1. completions
+        let inflight = std::mem::take(&mut self.inflight);
+        for inf in inflight {
+            let Some(result) = inf.handle.try_wait() else {
+                self.inflight.push(inf);
+                continue;
+            };
+            collected += 1;
+            self.outstanding[inf.leader] =
+                self.outstanding[inf.leader].saturating_sub(1);
+            let d = self.demand_of(&inf.req);
+            if let Some(h) = self.held.get_mut(&inf.tenant) {
+                *h = h.minus(d);
+            }
+            match result {
+                Ok(res) => {
+                    self.completed_ok += 1;
+                    self.leader_completed[inf.leader] += 1;
+                    *self
+                        .tenant_completed
+                        .entry(inf.tenant.clone())
+                        .or_insert(0) += 1;
+                    self.completed.push(CompletedJob {
+                        id: inf.id,
+                        tenant: inf.tenant,
+                        leader: inf.leader,
+                        spilled: inf.spilled,
+                        result: Ok(res),
+                    });
+                }
+                Err(_) if self.leaders[inf.leader].is_none() => {
+                    // The leader died under this job: re-home it. Same
+                    // request, same seed ⇒ same statistic on the
+                    // surviving shard.
+                    self.rehomed += 1;
+                    self.pending
+                        .entry(inf.tenant.clone())
+                        .or_default()
+                        .push_back(PendingJob { id: inf.id, req: inf.req });
+                    self.pending_total += 1;
+                }
+                Err(e) => {
+                    self.failed += 1;
+                    self.completed.push(CompletedJob {
+                        id: inf.id,
+                        tenant: inf.tenant,
+                        leader: inf.leader,
+                        spilled: inf.spilled,
+                        result: Err(e),
+                    });
+                }
+            }
+        }
+        // 2. DRF dispatch
+        loop {
+            if self.live_leaders() == 0 {
+                // Nothing can run anywhere: fail the backlog loudly
+                // rather than hold it forever.
+                let pending = std::mem::take(&mut self.pending);
+                for (tenant, q) in pending {
+                    for pj in q {
+                        self.failed += 1;
+                        self.completed.push(CompletedJob {
+                            id: pj.id,
+                            tenant: tenant.clone(),
+                            leader: 0,
+                            spilled: false,
+                            result: Err(Error::Scheduler(
+                                "every leader in the federation is dead"
+                                    .into(),
+                            )),
+                        });
+                    }
+                }
+                self.pending_total = 0;
+                break;
+            }
+            let cap = self.capacity();
+            let mut order: Vec<(f64, String)> = self
+                .pending
+                .iter()
+                .filter(|(_, q)| !q.is_empty())
+                .map(|(t, _)| {
+                    let held =
+                        self.held.get(t).copied().unwrap_or_default();
+                    (cap.dominant_share(held), t.clone())
+                })
+                .collect();
+            order.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
+            });
+            let mut dispatched = false;
+            for (_, tenant) in order {
+                let Some((leader, spill, rehome)) = self.route(&tenant)
+                else {
+                    continue;
+                };
+                let queue = self.pending.get_mut(&tenant).unwrap();
+                let pj = queue.pop_front().unwrap();
+                if queue.is_empty() {
+                    self.pending.remove(&tenant);
+                }
+                self.pending_total -= 1;
+                let svc = self.leaders[leader].as_ref().unwrap();
+                match svc.submit(pj.req.clone()) {
+                    Ok(handle) => {
+                        self.outstanding[leader] += 1;
+                        let d = self.demand_of(&pj.req);
+                        let h = self
+                            .held
+                            .entry(tenant.clone())
+                            .or_default();
+                        *h = h.plus(d);
+                        if spill {
+                            self.spilled += 1;
+                        }
+                        if rehome {
+                            self.rehomed += 1;
+                        }
+                        self.inflight.push(Inflight {
+                            id: pj.id,
+                            tenant,
+                            leader,
+                            spilled: spill,
+                            req: pj.req,
+                            handle,
+                        });
+                    }
+                    Err(e) => {
+                        self.failed += 1;
+                        self.completed.push(CompletedJob {
+                            id: pj.id,
+                            tenant,
+                            leader,
+                            spilled: spill,
+                            result: Err(e),
+                        });
+                    }
+                }
+                dispatched = true;
+                break;
+            }
+            if !dispatched {
+                break;
+            }
+        }
+        // 3. utilization sampling
+        self.total_polls += 1;
+        for (i, &o) in self.outstanding.iter().enumerate() {
+            if self.leaders[i].is_some() && o > 0 {
+                self.busy_polls[i] += 1;
+            }
+        }
+        collected
+    }
+
+    /// No admitted job is waiting or running.
+    pub fn idle(&self) -> bool {
+        self.pending_total == 0 && self.inflight.is_empty()
+    }
+
+    /// Pump until idle or `timeout`, sleeping briefly between sweeps.
+    pub fn pump_until_idle(&mut self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        while !self.idle() {
+            self.pump();
+            if self.idle() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Scheduler(format!(
+                    "federation still busy after {timeout:?}: {} pending, \
+                     {} in flight",
+                    self.pending_total,
+                    self.inflight.len()
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    }
+
+    /// Take every completion collected so far.
+    pub fn drain_completions(&mut self) -> Vec<CompletedJob> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Take the completion for one job id, if it finished.
+    pub fn take_result(&mut self, id: u64) -> Option<CompletedJob> {
+        let idx = self.completed.iter().position(|c| c.id == id)?;
+        Some(self.completed.remove(idx))
+    }
+
+    /// Kill leader `i`: drain its service and mark the shard dead.
+    /// In-flight jobs finish during the drain; jobs still queued at
+    /// the front-door re-route to the surviving ring order on the next
+    /// pump.
+    pub fn kill_leader(&mut self, i: usize) -> Result<()> {
+        if i >= self.leaders.len() {
+            return Err(Error::Config(format!(
+                "no leader {i} in a {}-leader federation",
+                self.leaders.len()
+            )));
+        }
+        let svc = self.leaders[i].take().ok_or_else(|| {
+            Error::Config(format!("leader {i} is already dead"))
+        })?;
+        svc.shutdown()?;
+        Ok(())
+    }
+
+    /// Per-shard wire stats (alive flag, live gauge, completions).
+    pub fn leader_stats(&self) -> Vec<LeaderStat> {
+        self.leaders
+            .iter()
+            .enumerate()
+            .map(|(i, svc)| match svc {
+                Some(svc) => {
+                    let d = svc.load();
+                    LeaderStat {
+                        leader: i as u32,
+                        alive: true,
+                        active: d.active as u32,
+                        queued: d.queued as u32,
+                        completed: self.leader_completed[i],
+                    }
+                }
+                None => LeaderStat {
+                    leader: i as u32,
+                    alive: false,
+                    active: 0,
+                    queued: 0,
+                    completed: self.leader_completed[i],
+                },
+            })
+            .collect()
+    }
+
+    /// Session report so far (final when taken at shutdown).
+    pub fn report(&self) -> FederationReport {
+        let polls = self.total_polls.max(1) as f64;
+        let completions: Vec<f64> = self
+            .tenant_jobs
+            .keys()
+            .map(|t| {
+                self.tenant_completed.get(t).copied().unwrap_or(0) as f64
+            })
+            .collect();
+        FederationReport {
+            leaders: self.cfg.leaders,
+            jobs_submitted: self.submitted,
+            jobs_completed: self.completed_ok,
+            jobs_failed: self.failed,
+            admission_rejected: self.admission_rejected,
+            shed: self.shed,
+            spilled: self.spilled,
+            rehomed: self.rehomed,
+            wall_s: self.started.elapsed().as_secs_f64(),
+            leader_completed: self.leader_completed.clone(),
+            leader_utilization: self
+                .busy_polls
+                .iter()
+                .map(|&b| b as f64 / polls)
+                .collect(),
+            tenants: self.tenant_jobs.len(),
+            fairness: jain_index(&completions),
+        }
+    }
+
+    /// Shut down every surviving leader and return the final report.
+    /// Call [`Federation::pump_until_idle`] first if queued work should
+    /// finish.
+    pub fn shutdown(mut self) -> Result<FederationReport> {
+        let report = self.report();
+        for slot in self.leaders.iter_mut() {
+            if let Some(svc) = slot.take() {
+                svc.shutdown()?;
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ModelParams, Workload};
+    use crate::util::testutil::SERVE_JOB_DEADLINE;
+
+    fn native_fed(cfg: FederationConfig) -> Federation {
+        let backend = Arc::new(Backend::native(ModelParams::default()));
+        Federation::start(backend, cfg).unwrap()
+    }
+
+    fn small_cfg() -> FederationConfig {
+        FederationConfig {
+            leaders: 2,
+            workers_per_leader: 2,
+            max_active_per_leader: 2,
+            leader_outstanding_cap: 2,
+            ..FederationConfig::default()
+        }
+    }
+
+    fn req(samples: usize, seed: u64) -> JobRequest {
+        JobRequest::new(Workload::NetflixLo, samples).with_seed(seed)
+    }
+
+    #[test]
+    fn drains_multi_tenant_load_and_reports() {
+        let mut fed = native_fed(small_cfg());
+        for (i, tenant) in ["alpha", "beta", "gamma"].iter().enumerate() {
+            for j in 0..2 {
+                fed.submit(tenant, req(6, 100 + (i * 10 + j) as u64))
+                    .unwrap();
+            }
+        }
+        fed.pump_until_idle(SERVE_JOB_DEADLINE).unwrap();
+        let done = fed.drain_completions();
+        assert_eq!(done.len(), 6);
+        assert!(done.iter().all(|c| c.result.is_ok()));
+        let report = fed.shutdown().unwrap();
+        assert_eq!(report.jobs_submitted, 6);
+        assert_eq!(report.jobs_completed, 6);
+        assert_eq!(report.jobs_failed, 0);
+        assert_eq!(report.tenants, 3);
+        assert_eq!(
+            report.leader_completed.iter().sum::<u64>(),
+            6,
+            "every completion lands on some shard"
+        );
+        // equal per-tenant loads drained fully ⇒ perfectly fair
+        assert!(
+            report.fairness > 0.999,
+            "fairness {} for equal loads",
+            report.fairness
+        );
+    }
+
+    #[test]
+    fn sheds_past_backlog_cap_with_retry_hint() {
+        let cfg = FederationConfig {
+            backlog_cap: 2,
+            ..small_cfg()
+        };
+        let mut fed = native_fed(cfg);
+        fed.submit("t", req(4, 1)).unwrap();
+        fed.submit("t", req(4, 2)).unwrap();
+        let err = fed.submit("t", req(4, 3)).unwrap_err();
+        match err {
+            Error::Shed { retry_after_s, reason } => {
+                assert!(retry_after_s > 0.0);
+                assert!(reason.contains("backlog 2 at cap 2"), "{reason}");
+            }
+            other => panic!("expected Shed, got {other}"),
+        }
+        assert_eq!(fed.report().shed, 1);
+        fed.pump_until_idle(SERVE_JOB_DEADLINE).unwrap();
+        fed.shutdown().unwrap();
+    }
+
+    #[test]
+    fn admission_gate_rejects_before_any_leader() {
+        let mut fed = native_fed(small_cfg());
+        let err = fed
+            .submit("t", req(64, 1).with_deadline(1e-9))
+            .unwrap_err();
+        assert!(matches!(err, Error::Admission(_)), "got {err}");
+        let report = fed.report();
+        assert_eq!(report.admission_rejected, 1);
+        // the job never reached a leader
+        assert!(fed.idle());
+        fed.shutdown().unwrap();
+    }
+
+    #[test]
+    fn saturated_home_spills_to_sibling() {
+        let cfg = FederationConfig {
+            leader_outstanding_cap: 1,
+            ..small_cfg()
+        };
+        let mut fed = native_fed(cfg);
+        let home = fed.home_leader("tenant-x");
+        for seed in 0..3 {
+            fed.submit("tenant-x", req(8, seed)).unwrap();
+        }
+        // One dispatch sweep before anything completes: job 1 goes
+        // home, job 2 spills to the sibling, job 3 waits its turn.
+        fed.pump();
+        assert_eq!(fed.outstanding[home], 1);
+        assert_eq!(fed.outstanding[1 - home], 1);
+        assert_eq!(fed.pending_total, 1);
+        assert_eq!(fed.report().spilled, 1);
+        fed.pump_until_idle(SERVE_JOB_DEADLINE).unwrap();
+        let done = fed.drain_completions();
+        assert_eq!(done.len(), 3);
+        assert!(done.iter().all(|c| c.result.is_ok()));
+        assert_eq!(done.iter().filter(|c| c.spilled).count(), 1);
+        fed.shutdown().unwrap();
+    }
+
+    #[test]
+    fn killed_leader_rehomes_tenants_to_survivor() {
+        let mut fed = native_fed(small_cfg());
+        let home = fed.home_leader("victim");
+        fed.kill_leader(home).unwrap();
+        assert!(fed.kill_leader(home).is_err(), "double kill refused");
+        fed.submit("victim", req(6, 7)).unwrap();
+        fed.pump_until_idle(SERVE_JOB_DEADLINE).unwrap();
+        let done = fed.drain_completions();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].leader, 1 - home, "ran on the survivor");
+        assert!(done[0].result.is_ok());
+        let report = fed.report();
+        assert_eq!(report.rehomed, 1);
+        let stats = fed.leader_stats();
+        assert!(!stats[home].alive && stats[1 - home].alive);
+        assert_eq!(stats[1 - home].completed, 1);
+        fed.shutdown().unwrap();
+    }
+
+    #[test]
+    fn all_leaders_dead_fails_fast() {
+        let mut fed = native_fed(small_cfg());
+        fed.submit("t", req(4, 1)).unwrap();
+        fed.kill_leader(0).unwrap();
+        fed.kill_leader(1).unwrap();
+        fed.pump();
+        let done = fed.drain_completions();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].result.is_err());
+        assert!(matches!(
+            fed.submit("t", req(4, 2)),
+            Err(Error::Scheduler(_))
+        ));
+        fed.shutdown().unwrap();
+    }
+}

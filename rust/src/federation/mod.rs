@@ -1,0 +1,33 @@
+//! Front-door federation: sharded multi-leader serving with fair
+//! queueing and load shedding (DESIGN.md §15).
+//!
+//! One leader's dispatcher thread is the serve layer's scaling
+//! ceiling: every tenant's tasks, partials, and reduce steps funnel
+//! through it. The federation stands N *independent* leaders — each a
+//! full [`crate::serve::JobService`] with its own pool and store —
+//! behind one `bts frontdoor` admission point, and leans on the
+//! determinism contract (same seed ⇒ same statistic, wherever the job
+//! runs) to make placement a pure performance decision:
+//!
+//! * [`drf`] — dominant-resource fair allocation over worker slots +
+//!   cache bytes (progressive filling; permutation-invariant,
+//!   work-conserving, envy-free within one job's rounding);
+//! * [`front`] — the [`Federation`] core: ring-sharded tenant → home
+//!   leader placement, SLO admission before any leader is touched,
+//!   per-tenant DRF fair queueing, deterministic spillover to the
+//!   least-loaded sibling, Retry-After load shedding, and kill /
+//!   re-home;
+//! * [`server`] — the framed-TCP face (`SubmitJob` → `JobRouted` +
+//!   `JobDone`, `StatsReq`/`KillLeader` → `LeaderStats`) plus the
+//!   client calls behind `bts submit --frontdoor` and `bts fedctl`.
+
+pub mod drf;
+pub mod front;
+pub mod server;
+
+pub use drf::{allocate, Capacity, Demand, TenantDemand};
+pub use front::{CompletedJob, Federation, FederationConfig};
+pub use server::{
+    frontdoor_kill, frontdoor_shutdown, frontdoor_stats, serve_frontdoor,
+    submit_via_frontdoor, FrontDoorOutcome,
+};

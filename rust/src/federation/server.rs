@@ -1,0 +1,409 @@
+//! The front-door's TCP face: `bts frontdoor` serving, and the client
+//! calls behind `bts submit --frontdoor` / `bts fedctl`.
+//!
+//! One connection carries one request. A `SubmitJob` frame answers
+//! with `JobRouted` + `JobDone` (or a versioned `Shed` / `Error`
+//! refusal); `StatsReq` and `KillLeader` answer with the shard map;
+//! a transport `Down::Shutdown` frame is echoed as the ack, then the
+//! server drains and returns its [`FederationReport`]. Submissions are
+//! handled on their own threads so slow jobs never block the accept
+//! loop — concurrent tenants are what the fair queue exists for.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::front::Federation;
+use crate::coordinator::JobOutput;
+use crate::error::{Error, Result};
+use crate::metrics::FederationReport;
+use crate::net::protocol::{self, LeaderStat, Message};
+use crate::serve::JobRequest;
+use crate::transport::Down;
+use crate::util::testutil::SERVE_JOB_DEADLINE;
+
+fn split(
+    stream: TcpStream,
+) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>)> {
+    protocol::configure_stream(&stream)?;
+    let rd = BufReader::new(stream.try_clone()?);
+    let wr = BufWriter::new(stream);
+    Ok((rd, wr))
+}
+
+fn connect(
+    addr: &str,
+) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>)> {
+    let stream = TcpStream::connect(addr).map_err(|e| {
+        Error::Protocol(format!("connect to front-door {addr}: {e}"))
+    })?;
+    split(stream)
+}
+
+/// The front-door stringifies refusals for the wire; re-structure the
+/// admission case so callers (and `bts submit --frontdoor`) get the
+/// same [`Error::Admission`] a direct submission would.
+fn decode_error(message: String) -> Error {
+    match message.strip_prefix("admission rejected: ") {
+        Some(rest) => Error::Admission(rest.to_string()),
+        None => Error::Protocol(message),
+    }
+}
+
+/// Serve one [`Federation`] on `listener` until a `Down::Shutdown`
+/// frame arrives; drains queued work and returns the final report.
+pub fn serve_frontdoor(
+    listener: TcpListener,
+    fed: Federation,
+) -> Result<FederationReport> {
+    let fed = Arc::new(Mutex::new(fed));
+    let stop = Arc::new(AtomicBool::new(false));
+    let pump = {
+        let fed = fed.clone();
+        let stop = stop.clone();
+        thread::Builder::new()
+            .name("bts-frontdoor-pump".into())
+            .spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    fed.lock().unwrap().pump();
+                    thread::sleep(Duration::from_millis(2));
+                }
+            })
+            .map_err(|e| Error::Scheduler(format!("spawn pump: {e}")))?
+    };
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let Ok((mut rd, mut wr)) = split(stream) else { continue };
+        let Ok(first) = Message::read_deadline(
+            &mut rd,
+            Some(protocol::HANDSHAKE_TIMEOUT),
+        ) else {
+            continue;
+        };
+        match first {
+            Message::Down(Down::Shutdown) => {
+                let _ = Message::Down(Down::Shutdown).write_to(&mut wr);
+                break;
+            }
+            Message::StatsReq => {
+                let stats = fed.lock().unwrap().leader_stats();
+                let _ = Message::LeaderStats { stats }.write_to(&mut wr);
+            }
+            Message::KillLeader { leader } => {
+                let mut guard = fed.lock().unwrap();
+                match guard.kill_leader(leader as usize) {
+                    Ok(()) => {
+                        let stats = guard.leader_stats();
+                        drop(guard);
+                        let _ = Message::LeaderStats { stats }
+                            .write_to(&mut wr);
+                    }
+                    Err(e) => {
+                        drop(guard);
+                        let _ = Message::Error {
+                            message: e.to_string(),
+                        }
+                        .write_to(&mut wr);
+                    }
+                }
+            }
+            Message::SubmitJob {
+                tenant,
+                workload,
+                samples,
+                seed,
+                deadline_s,
+                reduce_tasks,
+                partitioner,
+            } => {
+                let fed = fed.clone();
+                conns.push(thread::spawn(move || {
+                    let mut req =
+                        JobRequest::new(workload, samples as usize)
+                            .with_seed(seed)
+                            .with_reduce(
+                                reduce_tasks as usize,
+                                partitioner,
+                            );
+                    if let Some(d) = deadline_s {
+                        req = req.with_deadline(d);
+                    }
+                    handle_submit(&fed, &tenant, req, &mut wr);
+                }));
+            }
+            other => {
+                let _ = Message::Error {
+                    message: format!(
+                        "front-door cannot handle {other:?}"
+                    ),
+                }
+                .write_to(&mut wr);
+            }
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    stop.store(true, Ordering::Relaxed);
+    pump.join()
+        .map_err(|_| Error::Scheduler("pump thread panicked".into()))?;
+    let mut fed = Arc::try_unwrap(fed)
+        .map_err(|_| {
+            Error::Scheduler(
+                "a connection still holds the federation".into(),
+            )
+        })?
+        .into_inner()
+        .map_err(|_| {
+            Error::Scheduler("federation mutex poisoned".into())
+        })?;
+    fed.pump_until_idle(SERVE_JOB_DEADLINE)?;
+    fed.shutdown()
+}
+
+/// One submission, end to end, on its own thread: admit (refusals go
+/// straight back on the wire), then wait for the pump to finish the
+/// job and send the routed/terminal frames.
+fn handle_submit(
+    fed: &Mutex<Federation>,
+    tenant: &str,
+    req: JobRequest,
+    wr: &mut BufWriter<TcpStream>,
+) {
+    let id = match fed.lock().unwrap().submit(tenant, req) {
+        Ok(id) => id,
+        Err(Error::Shed { retry_after_s, reason }) => {
+            let _ = Message::Shed { retry_after_s, reason }.write_to(wr);
+            return;
+        }
+        Err(e) => {
+            let _ = Message::Error { message: e.to_string() }.write_to(wr);
+            return;
+        }
+    };
+    let deadline = Instant::now() + SERVE_JOB_DEADLINE;
+    let done = loop {
+        if let Some(done) = fed.lock().unwrap().take_result(id) {
+            break done;
+        }
+        if Instant::now() >= deadline {
+            let _ = Message::Error {
+                message: format!(
+                    "job {id} still unfinished after {SERVE_JOB_DEADLINE:?}"
+                ),
+            }
+            .write_to(wr);
+            return;
+        }
+        thread::sleep(Duration::from_millis(2));
+    };
+    match done.result {
+        Ok(res) => {
+            let _ = Message::JobRouted {
+                job: id,
+                leader: done.leader as u32,
+                spilled: done.spilled,
+            }
+            .write_to(wr);
+            let _ = Message::JobDone { job: id, output: res.output }
+                .write_to(wr);
+        }
+        Err(e) => {
+            let _ = Message::Error { message: e.to_string() }.write_to(wr);
+        }
+    }
+}
+
+/// What the front-door reports back for one routed job.
+#[derive(Debug, Clone)]
+pub struct FrontDoorOutcome {
+    pub job: u64,
+    pub leader: u32,
+    pub spilled: bool,
+    pub output: JobOutput,
+}
+
+/// Submit one job through the front-door at `addr` and block for its
+/// output. Shed refusals come back as [`Error::Shed`] (with the
+/// Retry-After hint), admission refusals as [`Error::Admission`].
+pub fn submit_via_frontdoor(
+    addr: &str,
+    tenant: &str,
+    req: &JobRequest,
+) -> Result<FrontDoorOutcome> {
+    let (mut rd, mut wr) = connect(addr)?;
+    Message::SubmitJob {
+        tenant: tenant.to_string(),
+        workload: req.workload,
+        samples: req.samples as u64,
+        seed: req.seed,
+        deadline_s: req.deadline_s,
+        reduce_tasks: req.reduce_tasks as u32,
+        partitioner: req.partitioner,
+    }
+    .write_to(&mut wr)?;
+    let (job, leader, spilled) =
+        match Message::read_deadline(&mut rd, Some(SERVE_JOB_DEADLINE))? {
+            Message::JobRouted { job, leader, spilled } => {
+                (job, leader, spilled)
+            }
+            Message::Shed { retry_after_s, reason } => {
+                return Err(Error::Shed { retry_after_s, reason })
+            }
+            Message::Error { message } => {
+                return Err(decode_error(message))
+            }
+            other => {
+                return Err(Error::Protocol(format!(
+                    "unexpected reply to submit: {other:?}"
+                )))
+            }
+        };
+    match Message::read_deadline(&mut rd, Some(SERVE_JOB_DEADLINE))? {
+        Message::JobDone { job: j, output } if j == job => {
+            Ok(FrontDoorOutcome { job, leader, spilled, output })
+        }
+        Message::Error { message } => Err(decode_error(message)),
+        other => Err(Error::Protocol(format!(
+            "unexpected terminal frame: {other:?}"
+        ))),
+    }
+}
+
+/// Fetch the shard map (per-leader liveness and load digests).
+pub fn frontdoor_stats(addr: &str) -> Result<Vec<LeaderStat>> {
+    let (mut rd, mut wr) = connect(addr)?;
+    Message::StatsReq.write_to(&mut wr)?;
+    match Message::read_deadline(
+        &mut rd,
+        Some(protocol::HANDSHAKE_TIMEOUT),
+    )? {
+        Message::LeaderStats { stats } => Ok(stats),
+        Message::Error { message } => Err(decode_error(message)),
+        other => Err(Error::Protocol(format!(
+            "unexpected stats reply: {other:?}"
+        ))),
+    }
+}
+
+/// Kill leader `leader` (fault injection / ops drill); returns the
+/// post-kill shard map. The reply waits out the victim's drain.
+pub fn frontdoor_kill(addr: &str, leader: u32) -> Result<Vec<LeaderStat>> {
+    let (mut rd, mut wr) = connect(addr)?;
+    Message::KillLeader { leader }.write_to(&mut wr)?;
+    match Message::read_deadline(&mut rd, Some(SERVE_JOB_DEADLINE))? {
+        Message::LeaderStats { stats } => Ok(stats),
+        Message::Error { message } => Err(decode_error(message)),
+        other => Err(Error::Protocol(format!(
+            "unexpected kill reply: {other:?}"
+        ))),
+    }
+}
+
+/// Ask the front-door to drain and exit; the echoed frame is the ack.
+pub fn frontdoor_shutdown(addr: &str) -> Result<()> {
+    let (mut rd, mut wr) = connect(addr)?;
+    Message::Down(Down::Shutdown).write_to(&mut wr)?;
+    match Message::read_deadline(
+        &mut rd,
+        Some(protocol::HANDSHAKE_TIMEOUT),
+    )? {
+        Message::Down(Down::Shutdown) => Ok(()),
+        Message::Error { message } => Err(Error::Protocol(message)),
+        other => Err(Error::Protocol(format!(
+            "unexpected shutdown ack: {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ModelParams, Workload};
+    use crate::exec::Backend;
+    use crate::federation::front::FederationConfig;
+
+    fn spawn_frontdoor(
+        cfg: FederationConfig,
+    ) -> (String, thread::JoinHandle<Result<FederationReport>>) {
+        let backend = Arc::new(Backend::native(ModelParams::default()));
+        let fed = Federation::start(backend, cfg).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = thread::spawn(move || serve_frontdoor(listener, fed));
+        (addr, h)
+    }
+
+    #[test]
+    fn frontdoor_serves_stats_submit_and_shutdown() {
+        let (addr, h) = spawn_frontdoor(FederationConfig {
+            leaders: 2,
+            workers_per_leader: 2,
+            ..FederationConfig::default()
+        });
+        let stats = frontdoor_stats(&addr).unwrap();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|s| s.alive));
+        let req = JobRequest::new(Workload::NetflixLo, 6).with_seed(0xFED);
+        let out = submit_via_frontdoor(&addr, "tenant-a", &req).unwrap();
+        assert!(out.leader < 2);
+        assert!(!out.spilled);
+        let stats = frontdoor_stats(&addr).unwrap();
+        assert_eq!(
+            stats.iter().map(|s| s.completed).sum::<u64>(),
+            1,
+            "the completion shows up in the shard map"
+        );
+        frontdoor_shutdown(&addr).unwrap();
+        let report = h.join().unwrap().unwrap();
+        assert_eq!(report.jobs_completed, 1);
+        assert_eq!(report.jobs_failed, 0);
+        assert_eq!(report.tenants, 1);
+    }
+
+    #[test]
+    fn frontdoor_rejects_infeasible_deadline_with_structure() {
+        let (addr, h) = spawn_frontdoor(FederationConfig {
+            leaders: 1,
+            workers_per_leader: 2,
+            ..FederationConfig::default()
+        });
+        let req = JobRequest::new(Workload::Eaglet, 64)
+            .with_seed(1)
+            .with_deadline(1e-9);
+        let err = submit_via_frontdoor(&addr, "t", &req).unwrap_err();
+        assert!(
+            matches!(err, Error::Admission(_)),
+            "wire round trip keeps the admission structure: {err}"
+        );
+        frontdoor_shutdown(&addr).unwrap();
+        let report = h.join().unwrap().unwrap();
+        assert_eq!(report.admission_rejected, 1);
+    }
+
+    #[test]
+    fn frontdoor_kill_rehomes_over_tcp() {
+        let (addr, h) = spawn_frontdoor(FederationConfig {
+            leaders: 2,
+            workers_per_leader: 2,
+            ..FederationConfig::default()
+        });
+        let stats = frontdoor_kill(&addr, 0).unwrap();
+        assert!(!stats[0].alive && stats[1].alive);
+        assert!(
+            frontdoor_kill(&addr, 0).is_err(),
+            "double kill is refused"
+        );
+        // any tenant now lands on the survivor
+        let req = JobRequest::new(Workload::NetflixLo, 6).with_seed(9);
+        let out = submit_via_frontdoor(&addr, "whoever", &req).unwrap();
+        assert_eq!(out.leader, 1);
+        frontdoor_shutdown(&addr).unwrap();
+        let report = h.join().unwrap().unwrap();
+        assert_eq!(report.jobs_completed, 1);
+    }
+}

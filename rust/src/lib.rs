@@ -34,6 +34,7 @@ pub mod data;
 pub mod dfs;
 pub mod error;
 pub mod exec;
+pub mod federation;
 pub mod figures;
 pub mod kneepoint;
 pub mod config;

@@ -7,7 +7,10 @@
 //!     [--listen ADDR --workers-remote N] [...]  run via the cluster executor
 //! bts serve [--jobs N] [--workers N]
 //!     [--listen ADDR --workers-remote N] [...]  sustained multi-tenant load
-//! bts submit [--workload W] [--deadline S]      one job through the service
+//! bts submit [--workload W] [--deadline S]
+//!     [--frontdoor ADDR --tenant T]             one job through the service
+//! bts frontdoor [--listen ADDR --leaders N]     sharded multi-leader serving
+//! bts fedctl stats|kill N|shutdown              control a running front-door
 //! bts profile [--workload W]                    offline kneepoint profiling
 //! bts calibrate                                 measure sim constants from PJRT
 //! bts plan --slo SECONDS [--workload W]         SLO planner (Fig 13 machinery)
@@ -49,6 +52,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("exec") => cmd_exec(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("submit") => cmd_submit(&args[1..]),
+        Some("frontdoor") => cmd_frontdoor(&args[1..]),
+        Some("fedctl") => cmd_fedctl(&args[1..]),
         Some("profile") => cmd_profile(&args[1..]),
         Some("calibrate") => {
             Flags::parse(&args[1..], &[])?;
@@ -116,8 +121,27 @@ commands:
                                     writes results/BENCH_serve.json
   submit [--workload W] [--samples N] [--workers N] [--deadline S]
          [--reduce-tasks R] [--partitioner hash|skew]
+         [--frontdoor ADDR] [--tenant T] [--out-json FILE]
                                     one job through the service
-                                    (admission estimate + SLO gate)
+                                    (admission estimate + SLO gate);
+                                    with --frontdoor, routes through a
+                                    running federation front-door
+                                    instead of a private service;
+                                    refusals are structured — the
+                                    admission/shed reason and a
+                                    retry-after hint go to stderr and
+                                    to --out-json
+  frontdoor [--listen ADDR] [--leaders N] [--workers N]
+            [--max-active N] [--cache-mb MB] [--backlog-cap N]
+            [--outstanding-cap N] [--vnodes N]
+                                    run N independent leader instances
+                                    behind one sharding, DRF fair-
+                                    queueing, load-shedding admission
+                                    point (`bts submit --frontdoor`)
+  fedctl stats|kill N|shutdown [--frontdoor ADDR]
+                                    inspect the shard map, kill a
+                                    leader (tenants re-home), or drain
+                                    and stop a running front-door
   profile [--workload W]            offline task-size -> miss-rate profiling
   calibrate                         measure compute s/MiB from artifacts
   plan --slo S [--workload W]       best configuration under an SLO
@@ -572,6 +596,67 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Write `record` to `path`, creating parent directories.
+fn write_json_file(path: &str, record: &bts::util::json::Json) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, record.to_string_pretty())?;
+    Ok(())
+}
+
+/// Surface a structured refusal: the admission/shed reason plus a
+/// retry hint on stderr, and (when `--out-json` was given) the same
+/// verdict as a machine-readable record. Errors that are not
+/// submission refusals pass through untouched.
+fn report_rejection(
+    e: &Error,
+    estimate_s: Option<f64>,
+    out_json: Option<&str>,
+) -> Result<()> {
+    use bts::util::json::{num, obj, s, Json};
+    let record = match e {
+        Error::Admission(reason) => {
+            eprintln!("submission rejected (admission): {reason}");
+            if let Some(est) = estimate_s {
+                eprintln!(
+                    "hint: the planner needs {est:.1}s of model time; \
+                     retry with --deadline at least that"
+                );
+            }
+            obj(vec![
+                ("rejected", s("admission")),
+                ("reason", s(reason)),
+                ("estimate_s", estimate_s.map_or(Json::Null, num)),
+                // retrying the identical request cannot succeed; only
+                // a looser deadline can
+                ("retry_after_s", Json::Null),
+            ])
+        }
+        Error::Shed { retry_after_s, reason } => {
+            eprintln!("submission rejected (shed): {reason}");
+            eprintln!(
+                "hint: the front-door is overloaded; retry after \
+                 {retry_after_s:.1}s"
+            );
+            obj(vec![
+                ("rejected", s("shed")),
+                ("reason", s(reason)),
+                ("estimate_s", estimate_s.map_or(Json::Null, num)),
+                ("retry_after_s", num(*retry_after_s)),
+            ])
+        }
+        _ => return Ok(()),
+    };
+    if let Some(path) = out_json {
+        write_json_file(path, &record)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_submit(args: &[String]) -> Result<()> {
     use bts::exec::Backend;
     use bts::serve::{JobRequest, JobService, PoolConfig, ServeConfig};
@@ -586,6 +671,9 @@ fn cmd_submit(args: &[String]) -> Result<()> {
             "--seed",
             "--reduce-tasks",
             "--partitioner",
+            "--frontdoor",
+            "--tenant",
+            "--out-json",
         ],
     )?;
     let w = workload_flag(&f)?;
@@ -593,6 +681,7 @@ fn cmd_submit(args: &[String]) -> Result<()> {
     let workers: usize = f.num("--workers", 4)?;
     let seed: u64 = f.num("--seed", 0xB75)?;
     let (reduce_tasks, partitioner) = reduce_flags(&f)?;
+    let out_json = f.get("--out-json");
     let mut req = JobRequest::new(w, samples)
         .with_seed(seed)
         .with_reduce(reduce_tasks, partitioner);
@@ -601,6 +690,36 @@ fn cmd_submit(args: &[String]) -> Result<()> {
             Error::Config(format!("bad --deadline value {d}"))
         })?);
     }
+
+    if let Some(addr) = f.get("--frontdoor") {
+        // route through a running federation front-door; the output is
+        // bit-identical to the private-service path below by the
+        // determinism contract (the integration oracle diffs the two).
+        let tenant = f.get("--tenant").unwrap_or("cli");
+        let out = match bts::federation::submit_via_frontdoor(
+            addr, tenant, &req,
+        ) {
+            Ok(out) => out,
+            Err(e) => {
+                report_rejection(&e, None, out_json)?;
+                return Err(e);
+            }
+        };
+        println!(
+            "front-door {addr} routed job {} for tenant {tenant} to \
+             leader {}{}",
+            out.job,
+            out.leader,
+            if out.spilled { " (spilled)" } else { "" }
+        );
+        print_output(&out.output);
+        if let Some(path) = out_json {
+            write_json_file(path, &output_json(&out.output))?;
+            println!("wrote {path}");
+        }
+        return Ok(());
+    }
+
     let backend = Arc::new(Backend::auto());
     let svc = JobService::start(
         backend,
@@ -609,10 +728,10 @@ fn cmd_submit(args: &[String]) -> Result<()> {
             ..Default::default()
         },
     )?;
+    let est = svc.estimate_s(&req);
     println!(
-        "planner estimate: {:.1}s (model seconds) for {} samples of {}",
-        svc.estimate_s(&req),
-        samples,
+        "planner estimate: {est:.1}s (model seconds) for {samples} \
+         samples of {}",
         w.name()
     );
     let result = match svc.submit(req) {
@@ -621,6 +740,7 @@ fn cmd_submit(args: &[String]) -> Result<()> {
             // surface the admission verdict; a shutdown hiccup must
             // not mask it
             let _ = svc.shutdown();
+            report_rejection(&e, Some(est), out_json)?;
             return Err(e);
         }
     };
@@ -632,8 +752,129 @@ fn cmd_submit(args: &[String]) -> Result<()> {
         result.e2e_s * 1e3
     );
     print_output(&result.output);
+    if let Some(path) = out_json {
+        write_json_file(path, &output_json(&result.output))?;
+        println!("wrote {path}");
+    }
     svc.shutdown()?;
     Ok(())
+}
+
+/// Default front-door address (`bts frontdoor` listener and the
+/// `fedctl` client side).
+const DEFAULT_FRONTDOOR: &str = "127.0.0.1:7470";
+
+fn cmd_frontdoor(args: &[String]) -> Result<()> {
+    use bts::exec::Backend;
+    use bts::federation::{serve_frontdoor, Federation, FederationConfig};
+
+    let f = Flags::parse(
+        args,
+        &[
+            "--listen",
+            "--leaders",
+            "--workers",
+            "--max-active",
+            "--cache-mb",
+            "--backlog-cap",
+            "--outstanding-cap",
+            "--vnodes",
+        ],
+    )?;
+    let addr = f.get("--listen").unwrap_or(DEFAULT_FRONTDOOR);
+    let cfg = FederationConfig {
+        leaders: f.num("--leaders", 2)?,
+        workers_per_leader: f.num("--workers", 2)?,
+        max_active_per_leader: f.num("--max-active", 2)?,
+        cache_mb_per_leader: f.num("--cache-mb", 0)?,
+        leader_outstanding_cap: f.num("--outstanding-cap", 4)?,
+        backlog_cap: f.num("--backlog-cap", 64)?,
+        vnodes: f.num("--vnodes", 32)?,
+    };
+    let listener = std::net::TcpListener::bind(addr).map_err(|e| {
+        Error::Protocol(format!("bind front-door {addr}: {e}"))
+    })?;
+    let local = listener.local_addr()?;
+    let backend = Arc::new(Backend::auto());
+    println!(
+        "front-door on {local}: {} leaders x {} workers each \
+         (backend {}; `bts submit --frontdoor {local}`)",
+        cfg.leaders,
+        cfg.workers_per_leader,
+        backend.name()
+    );
+    let fed = Federation::start(backend, cfg)?;
+    let report = serve_frontdoor(listener, fed)?;
+    println!("{}", report.render());
+    let path = bts::util::bench_record::write(
+        "frontdoor",
+        vec![report.metrics_json()],
+    )?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn print_shard_map(stats: &[bts::net::protocol::LeaderStat]) {
+    for st in stats {
+        println!(
+            "  leader {} {}  active {}  queued {}  completed {}",
+            st.leader,
+            if st.alive { "alive" } else { "dead " },
+            st.active,
+            st.queued,
+            st.completed
+        );
+    }
+}
+
+/// `bts fedctl stats|kill N|shutdown --frontdoor ADDR` — the
+/// front-door control plane.
+fn cmd_fedctl(args: &[String]) -> Result<()> {
+    const USAGE: &str =
+        "usage: bts fedctl stats|kill N|shutdown [--frontdoor ADDR]";
+    let verb = match args.first() {
+        Some(v) if !v.starts_with("--") => v.as_str(),
+        _ => return Err(Error::Config(USAGE.into())),
+    };
+    match verb {
+        "stats" => {
+            let f = Flags::parse(&args[1..], &["--frontdoor"])?;
+            let addr = f.get("--frontdoor").unwrap_or(DEFAULT_FRONTDOOR);
+            println!("shard map of front-door {addr}:");
+            print_shard_map(&bts::federation::frontdoor_stats(addr)?);
+            Ok(())
+        }
+        "kill" => {
+            let idx = match args.get(1) {
+                Some(v) if !v.starts_with("--") => v.as_str(),
+                _ => return Err(Error::Config(USAGE.into())),
+            };
+            let leader: u32 = idx.parse().map_err(|_| {
+                Error::Config(format!(
+                    "bad leader index {idx}; want a number"
+                ))
+            })?;
+            let f = Flags::parse(&args[2..], &["--frontdoor"])?;
+            let addr = f.get("--frontdoor").unwrap_or(DEFAULT_FRONTDOOR);
+            let stats = bts::federation::frontdoor_kill(addr, leader)?;
+            println!(
+                "leader {leader} killed; its tenants re-home to the \
+                 surviving shard map:"
+            );
+            print_shard_map(&stats);
+            Ok(())
+        }
+        "shutdown" => {
+            let f = Flags::parse(&args[1..], &["--frontdoor"])?;
+            let addr = f.get("--frontdoor").unwrap_or(DEFAULT_FRONTDOOR);
+            bts::federation::frontdoor_shutdown(addr)?;
+            println!("front-door {addr} acknowledged shutdown; draining");
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown fedctl verb {other}; {USAGE}"
+        ))),
+    }
 }
 
 fn cmd_profile(args: &[String]) -> Result<()> {
@@ -863,6 +1104,15 @@ mod tests {
                 "{bad:?} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn fedctl_requires_a_verb_and_kill_an_index() {
+        assert!(cmd_fedctl(&argv(&[])).is_err());
+        assert!(cmd_fedctl(&argv(&["--frontdoor", "x"])).is_err());
+        assert!(cmd_fedctl(&argv(&["reboot"])).is_err());
+        assert!(cmd_fedctl(&argv(&["kill"])).is_err());
+        assert!(cmd_fedctl(&argv(&["kill", "two"])).is_err());
     }
 
     #[test]

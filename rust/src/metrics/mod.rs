@@ -164,6 +164,153 @@ impl JobReport {
     }
 }
 
+/// Jain's fairness index over non-negative allocations:
+/// `(Σx)² / (n·Σx²)`. 1.0 = perfectly even, `1/n` = one tenant got
+/// everything. An empty or all-zero slice reports 1.0 (nothing was
+/// allocated, so nothing was unfair).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+    if n == 0.0 || sumsq == 0.0 {
+        1.0
+    } else {
+        (sum * sum) / (n * sumsq)
+    }
+}
+
+/// What a federation session reports (DESIGN.md §15): per-leader
+/// utilization, shedding, deterministic spillover accounting, and the
+/// per-tenant fairness index the DRF queue is gated on.
+#[derive(Debug, Clone)]
+pub struct FederationReport {
+    /// Leader instances the federation started with.
+    pub leaders: usize,
+    /// Submissions that reached the front-door (before admission).
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    /// Rejected by the front-door's SLO admission gate.
+    pub admission_rejected: u64,
+    /// Load-shed with a `Shed` retry-after frame.
+    pub shed: u64,
+    /// Jobs routed to a sibling leader because the home shard was
+    /// saturated (deterministic: counted at routing decision time).
+    pub spilled: u64,
+    /// Jobs re-homed after their leader was killed.
+    pub rehomed: u64,
+    pub wall_s: f64,
+    /// Jobs completed per leader (index = leader id).
+    pub leader_completed: Vec<u64>,
+    /// Busy fraction per leader: share of front-door sweeps that saw
+    /// the leader with at least one active job.
+    pub leader_utilization: Vec<f64>,
+    /// Distinct tenants seen.
+    pub tenants: usize,
+    /// Jain's index over per-tenant completed jobs.
+    pub fairness: f64,
+}
+
+impl FederationReport {
+    /// Shed events as a fraction of everything that arrived.
+    pub fn shed_rate(&self) -> f64 {
+        if self.jobs_submitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.jobs_submitted as f64
+        }
+    }
+
+    /// SLO misses as the admission gate saw them (rejected at the
+    /// door; the fixed-miss-rate axis of `BENCH_federation.json`).
+    pub fn slo_miss_rate(&self) -> f64 {
+        if self.jobs_submitted == 0 {
+            0.0
+        } else {
+            self.admission_rejected as f64 / self.jobs_submitted as f64
+        }
+    }
+
+    /// Aggregate completed-job throughput over the session.
+    pub fn jobs_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.jobs_completed as f64 / self.wall_s
+        }
+    }
+
+    /// Flat JSON record for `results/BENCH_federation.json`.
+    pub fn metrics_json(&self) -> Json {
+        obj(vec![
+            ("platform", s("bts-federation")),
+            ("leaders", num(self.leaders as f64)),
+            ("jobs_submitted", num(self.jobs_submitted as f64)),
+            ("jobs_completed", num(self.jobs_completed as f64)),
+            ("jobs_failed", num(self.jobs_failed as f64)),
+            ("admission_rejected", num(self.admission_rejected as f64)),
+            ("shed", num(self.shed as f64)),
+            ("shed_rate", num(self.shed_rate())),
+            ("slo_miss_rate", num(self.slo_miss_rate())),
+            ("spilled", num(self.spilled as f64)),
+            ("rehomed", num(self.rehomed as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("jobs_per_s", num(self.jobs_per_s())),
+            ("tenants", num(self.tenants as f64)),
+            ("fairness", num(self.fairness)),
+            (
+                "leader_completed",
+                Json::Arr(
+                    self.leader_completed
+                        .iter()
+                        .map(|&c| num(c as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "leader_utilization",
+                Json::Arr(
+                    self.leader_utilization
+                        .iter()
+                        .map(|&u| num(u))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let util: Vec<String> = self
+            .leader_utilization
+            .iter()
+            .map(|u| format!("{:.0}%", u * 100.0))
+            .collect();
+        format!(
+            "federation[{} leaders] {} submitted, {} completed \
+             ({} failed) in {:.2}s => {:.1} jobs/s; rejected {} \
+             ({:.0}% miss), shed {} ({:.0}%), spilled {}, rehomed {}; \
+             {} tenants, fairness {:.3}; per-leader done {:?}, \
+             busy [{}]",
+            self.leaders,
+            self.jobs_submitted,
+            self.jobs_completed,
+            self.jobs_failed,
+            self.wall_s,
+            self.jobs_per_s(),
+            self.admission_rejected,
+            self.slo_miss_rate() * 100.0,
+            self.shed,
+            self.shed_rate() * 100.0,
+            self.spilled,
+            self.rehomed,
+            self.tenants,
+            self.fairness,
+            self.leader_completed,
+            util.join(", "),
+        )
+    }
+}
+
 /// Builder used by the coordinator while a job runs.
 #[derive(Default)]
 pub struct JobMetrics {
@@ -272,5 +419,47 @@ mod tests {
         c.add(0.25);
         c.add(0.25);
         assert!((c.get() - 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn jain_index_bounds_and_extremes() {
+        assert!((jain_index(&[1.0, 1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        // one tenant got everything: index = 1/n
+        assert!((jain_index(&[8.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        // empty / all-zero: nothing allocated, reported as fair
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        let mixed = jain_index(&[3.0, 1.0, 2.0]);
+        assert!(mixed > 1.0 / 3.0 && mixed < 1.0);
+    }
+
+    #[test]
+    fn federation_report_math_and_json() {
+        let r = FederationReport {
+            leaders: 2,
+            jobs_submitted: 20,
+            jobs_completed: 14,
+            jobs_failed: 1,
+            admission_rejected: 2,
+            shed: 3,
+            spilled: 4,
+            rehomed: 2,
+            wall_s: 7.0,
+            leader_completed: vec![9, 5],
+            leader_utilization: vec![0.8, 0.5],
+            tenants: 6,
+            fairness: 0.91,
+        };
+        assert!((r.shed_rate() - 0.15).abs() < 1e-12);
+        assert!((r.slo_miss_rate() - 0.1).abs() < 1e-12);
+        assert!((r.jobs_per_s() - 2.0).abs() < 1e-12);
+        let j = Json::parse(&r.metrics_json().to_string_pretty()).unwrap();
+        assert_eq!(j.req_usize("leaders").unwrap(), 2);
+        assert_eq!(j.req_usize("spilled").unwrap(), 4);
+        assert!((j.req_f64("shed_rate").unwrap() - 0.15).abs() < 1e-12);
+        assert!((j.req_f64("fairness").unwrap() - 0.91).abs() < 1e-12);
+        assert_eq!(j.req_arr("leader_completed").unwrap().len(), 2);
+        assert!(r.render().contains("2 leaders"));
+        assert!(r.render().contains("spilled 4"));
     }
 }

@@ -22,9 +22,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::assemble::TaskPartial;
+use crate::coordinator::{JobOutput, NetflixStats};
 use crate::data::Workload;
 use crate::error::{Error, Result};
 use crate::kneepoint::PackedTask;
+use crate::reduce::Partitioner;
 use crate::scheduler::TaskSpec;
 use crate::transport::{
     Down, ReduceDone, ReduceEnvelope, ReduceSpec, TaskDone, TaskEnvelope, Up,
@@ -152,6 +154,28 @@ const TAG_REDUCE_DONE: u8 = 17;
 const TAG_DRAIN: u8 = 18;
 const TAG_DRAINED: u8 = 19;
 const TAG_DRAIN_REQ: u8 = 20;
+const TAG_SUBMIT_JOB: u8 = 21;
+const TAG_JOB_ROUTED: u8 = 22;
+const TAG_SHED: u8 = 23;
+const TAG_LEADER_STATS: u8 = 24;
+const TAG_JOB_DONE: u8 = 25;
+const TAG_STATS_REQ: u8 = 26;
+const TAG_KILL_LEADER: u8 = 27;
+
+/// One leader's load digest as carried by [`Message::LeaderStats`]:
+/// the front-door's shard map row (DESIGN.md §15).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeaderStat {
+    pub leader: u32,
+    /// `false` once the leader has been killed / drained out.
+    pub alive: bool,
+    /// Jobs currently multiplexed on the leader's pool.
+    pub active: u32,
+    /// Jobs queued at the front-door for this leader.
+    pub queued: u32,
+    /// Jobs completed by this leader since the federation started.
+    pub completed: u64,
+}
 
 /// Everything that crosses a leader↔worker socket. Control messages
 /// wrap the transport grammar verbatim; the leader-side pump and the
@@ -187,6 +211,38 @@ pub enum Message {
     /// Client → leader (membership plane): ask the leader to drain
     /// slot `worker`. The leader echoes the frame back as the ack.
     DrainWorker { worker: u32 },
+    /// Client → front-door: submit one job on behalf of `tenant`.
+    /// Carries the full determinism tuple (workload, samples, seed,
+    /// reduce shape) so the routed execution is bit-identical to a
+    /// direct `bts submit` of the same request.
+    SubmitJob {
+        tenant: String,
+        workload: Workload,
+        samples: u64,
+        seed: u64,
+        deadline_s: Option<f64>,
+        reduce_tasks: u32,
+        partitioner: Partitioner,
+    },
+    /// Front-door → client: the job was admitted and routed. `spilled`
+    /// marks cross-leader spillover away from the tenant's home shard.
+    JobRouted { job: u64, leader: u32, spilled: bool },
+    /// Front-door → client: load-shed rejection. The frame header is
+    /// versioned like every frame; `retry_after_s` is the backoff
+    /// hint (Retry-After semantics), `reason` the structured verdict.
+    Shed { retry_after_s: f64, reason: String },
+    /// Front-door → client: per-leader load digests (shard map).
+    LeaderStats { stats: Vec<LeaderStat> },
+    /// Front-door → client: terminal frame carrying the job's output
+    /// verbatim (exact f32/f64 bit patterns — the bit-identity oracle
+    /// diffs this against direct submission).
+    JobDone { job: u64, output: JobOutput },
+    /// Client → front-door: ask for the current shard map.
+    StatsReq,
+    /// Client → front-door (fault injection / ops): kill leader by
+    /// index; its tenants re-home to survivors. Answered with the
+    /// post-kill [`Message::LeaderStats`].
+    KillLeader { leader: u32 },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -212,6 +268,13 @@ fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
 }
 
 fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
     put_u32(out, vs.len() as u32);
     for v in vs {
         out.extend_from_slice(&v.to_le_bytes());
@@ -302,6 +365,15 @@ impl<'a> Cursor<'a> {
         Ok(vs)
     }
 
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(8)?;
+        let mut vs = Vec::with_capacity(n);
+        for _ in 0..n {
+            vs.push(self.f64()?);
+        }
+        Ok(vs)
+    }
+
     fn done(&self) -> Result<()> {
         if self.off != self.buf.len() {
             return Err(Error::Protocol(format!(
@@ -330,6 +402,23 @@ fn workload_from(tag: u8) -> Result<Workload> {
     }
 }
 
+fn partitioner_tag(p: Partitioner) -> u8 {
+    match p {
+        Partitioner::Hash => 0,
+        Partitioner::Skew => 1,
+    }
+}
+
+fn partitioner_from(tag: u8) -> Result<Partitioner> {
+    match tag {
+        0 => Ok(Partitioner::Hash),
+        1 => Ok(Partitioner::Skew),
+        other => {
+            Err(Error::Protocol(format!("bad partitioner tag {other}")))
+        }
+    }
+}
+
 fn encode_partial(out: &mut Vec<u8>, p: &TaskPartial) {
     match p {
         TaskPartial::Eaglet { alod, weight } => {
@@ -355,6 +444,41 @@ fn decode_partial(c: &mut Cursor) -> Result<TaskPartial> {
         other => {
             Err(Error::Protocol(format!("bad partial tag {other}")))
         }
+    }
+}
+
+/// [`JobOutput`] crosses the front-door wire with exact `to_le_bytes`
+/// bit patterns — the federation bit-identity oracle depends on the
+/// decode reconstructing the same floats, not a formatted copy.
+fn encode_output(out: &mut Vec<u8>, o: &JobOutput) {
+    match o {
+        JobOutput::Eaglet { alod, weight } => {
+            out.push(0);
+            out.extend_from_slice(&weight.to_le_bytes());
+            put_f32s(out, alod);
+        }
+        JobOutput::Netflix(s) => {
+            out.push(1);
+            put_f64s(out, &s.mean);
+            put_f64s(out, &s.ci_half);
+            put_f64s(out, &s.count);
+        }
+    }
+}
+
+fn decode_output(c: &mut Cursor) -> Result<JobOutput> {
+    match c.u8()? {
+        0 => {
+            let weight = c.f32()?;
+            let alod = c.f32s()?;
+            Ok(JobOutput::Eaglet { alod, weight })
+        }
+        1 => Ok(JobOutput::Netflix(NetflixStats {
+            mean: c.f64s()?,
+            ci_half: c.f64s()?,
+            count: c.f64s()?,
+        })),
+        other => Err(Error::Protocol(format!("bad output tag {other}"))),
     }
 }
 
@@ -487,6 +611,62 @@ impl Message {
             Message::DrainWorker { worker } => {
                 out.push(TAG_DRAIN_REQ);
                 put_u32(&mut out, *worker);
+            }
+            Message::SubmitJob {
+                tenant,
+                workload,
+                samples,
+                seed,
+                deadline_s,
+                reduce_tasks,
+                partitioner,
+            } => {
+                out.push(TAG_SUBMIT_JOB);
+                put_str(&mut out, tenant);
+                out.push(workload_tag(*workload));
+                put_u64(&mut out, *samples);
+                put_u64(&mut out, *seed);
+                match deadline_s {
+                    Some(d) => {
+                        out.push(1);
+                        put_f64(&mut out, *d);
+                    }
+                    None => out.push(0),
+                }
+                put_u32(&mut out, *reduce_tasks);
+                out.push(partitioner_tag(*partitioner));
+            }
+            Message::JobRouted { job, leader, spilled } => {
+                out.push(TAG_JOB_ROUTED);
+                put_u64(&mut out, *job);
+                put_u32(&mut out, *leader);
+                out.push(u8::from(*spilled));
+            }
+            Message::Shed { retry_after_s, reason } => {
+                out.push(TAG_SHED);
+                put_f64(&mut out, *retry_after_s);
+                put_str(&mut out, reason);
+            }
+            Message::LeaderStats { stats } => {
+                out.push(TAG_LEADER_STATS);
+                put_u32(&mut out, stats.len() as u32);
+                for s in stats {
+                    put_u32(&mut out, s.leader);
+                    out.push(u8::from(s.alive));
+                    put_u32(&mut out, s.active);
+                    put_u32(&mut out, s.queued);
+                    put_u64(&mut out, s.completed);
+                }
+            }
+            Message::JobDone { job, output } => {
+                out.push(TAG_JOB_DONE);
+                put_u64(&mut out, *job);
+                encode_output(&mut out, output);
+            }
+            Message::StatsReq => out.push(TAG_STATS_REQ),
+            Message::KillLeader { leader } => {
+                out.push(TAG_KILL_LEADER);
+                put_u32(&mut out, *leader);
             }
         }
         out
@@ -632,6 +812,53 @@ impl Message {
             }
             TAG_PING => Message::Ping,
             TAG_ERROR => Message::Error { message: c.str()? },
+            TAG_SUBMIT_JOB => {
+                let tenant = c.str()?;
+                let workload = workload_from(c.u8()?)?;
+                let samples = c.u64()?;
+                let seed = c.u64()?;
+                let deadline_s =
+                    if c.bool()? { Some(c.f64()?) } else { None };
+                Message::SubmitJob {
+                    tenant,
+                    workload,
+                    samples,
+                    seed,
+                    deadline_s,
+                    reduce_tasks: c.u32()?,
+                    partitioner: partitioner_from(c.u8()?)?,
+                }
+            }
+            TAG_JOB_ROUTED => Message::JobRouted {
+                job: c.u64()?,
+                leader: c.u32()?,
+                spilled: c.bool()?,
+            },
+            TAG_SHED => Message::Shed {
+                retry_after_s: c.f64()?,
+                reason: c.str()?,
+            },
+            TAG_LEADER_STATS => {
+                let n = c.count(21)?;
+                let mut stats = Vec::with_capacity(n);
+                for _ in 0..n {
+                    stats.push(LeaderStat {
+                        leader: c.u32()?,
+                        alive: c.bool()?,
+                        active: c.u32()?,
+                        queued: c.u32()?,
+                        completed: c.u64()?,
+                    });
+                }
+                Message::LeaderStats { stats }
+            }
+            TAG_JOB_DONE => {
+                let job = c.u64()?;
+                let output = decode_output(&mut c)?;
+                Message::JobDone { job, output }
+            }
+            TAG_STATS_REQ => Message::StatsReq,
+            TAG_KILL_LEADER => Message::KillLeader { leader: c.u32()? },
             other => {
                 return Err(Error::Protocol(format!("unknown tag {other}")))
             }
@@ -782,6 +1009,60 @@ mod tests {
         })
     }
 
+    fn sample_submit() -> Message {
+        Message::SubmitJob {
+            tenant: "tenant-7".into(),
+            workload: Workload::NetflixLo,
+            samples: 48,
+            seed: 0xB75,
+            deadline_s: Some(12.5),
+            reduce_tasks: 4,
+            partitioner: Partitioner::Skew,
+        }
+    }
+
+    fn sample_leader_stats() -> Message {
+        Message::LeaderStats {
+            stats: vec![
+                LeaderStat {
+                    leader: 0,
+                    alive: true,
+                    active: 3,
+                    queued: 7,
+                    completed: 120,
+                },
+                LeaderStat {
+                    leader: 1,
+                    alive: false,
+                    active: 0,
+                    queued: 0,
+                    completed: 44,
+                },
+            ],
+        }
+    }
+
+    fn sample_job_done_eaglet() -> Message {
+        Message::JobDone {
+            job: 17,
+            output: JobOutput::Eaglet {
+                alod: vec![0.5, -2.25, f32::MIN_POSITIVE],
+                weight: 9.0,
+            },
+        }
+    }
+
+    fn sample_job_done_netflix() -> Message {
+        Message::JobDone {
+            job: 18,
+            output: JobOutput::Netflix(NetflixStats {
+                mean: vec![1.5, 2.5, 3.5],
+                ci_half: vec![0.25, 0.125, 0.0625],
+                count: vec![10.0, 20.0, 30.0],
+            }),
+        }
+    }
+
     #[test]
     fn all_messages_round_trip() {
         round_trip(&Message::Hello { worker: 3 });
@@ -856,6 +1137,31 @@ mod tests {
         round_trip(&Message::Down(Down::Drain));
         round_trip(&Message::Up(Up::Drained { worker: 3, returned: 5 }));
         round_trip(&Message::DrainWorker { worker: 2 });
+        round_trip(&sample_submit());
+        round_trip(&Message::SubmitJob {
+            tenant: "t-θ".into(),
+            workload: Workload::Eaglet,
+            samples: 12,
+            seed: 1,
+            deadline_s: None,
+            reduce_tasks: 1,
+            partitioner: Partitioner::Hash,
+        });
+        round_trip(&Message::JobRouted {
+            job: 41,
+            leader: 2,
+            spilled: true,
+        });
+        round_trip(&Message::Shed {
+            retry_after_s: 2.5,
+            reason: "shard 1 backlog beyond cap".into(),
+        });
+        round_trip(&sample_leader_stats());
+        round_trip(&Message::LeaderStats { stats: vec![] });
+        round_trip(&sample_job_done_eaglet());
+        round_trip(&sample_job_done_netflix());
+        round_trip(&Message::StatsReq);
+        round_trip(&Message::KillLeader { leader: 1 });
     }
 
     #[test]
@@ -968,6 +1274,22 @@ mod tests {
         payload.extend_from_slice(&1.0f32.to_le_bytes()); // weight
         payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
         assert!(Message::decode(&payload).is_err());
+        // LeaderStats frame with a lying digest count.
+        let mut payload = vec![TAG_LEADER_STATS];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
+        payload.extend_from_slice(&[0u8; 21]); // one real digest
+        assert!(Message::decode(&payload).is_err());
+        // JobDone frame with a lying netflix vector length.
+        let mut payload = vec![TAG_JOB_DONE];
+        payload.extend_from_slice(&1u64.to_le_bytes()); // job
+        payload.push(1); // netflix output
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // mean lie
+        assert!(Message::decode(&payload).is_err());
+        // SubmitJob frame with a lying tenant length.
+        let mut payload = vec![TAG_SUBMIT_JOB];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // str lie
+        payload.push(b't');
+        assert!(Message::decode(&payload).is_err());
     }
 
     #[test]
@@ -1009,6 +1331,18 @@ mod tests {
             .encode(),
             Message::Up(Up::Drained { worker: 2, returned: 7 }).encode(),
             Message::DrainWorker { worker: 1 }.encode(),
+            sample_submit().encode(),
+            Message::JobRouted { job: 3, leader: 0, spilled: false }
+                .encode(),
+            Message::Shed {
+                retry_after_s: 1.0,
+                reason: "overloaded".into(),
+            }
+            .encode(),
+            sample_leader_stats().encode(),
+            sample_job_done_eaglet().encode(),
+            sample_job_done_netflix().encode(),
+            Message::KillLeader { leader: 0 }.encode(),
         ];
         for good in goods {
             for _ in 0..2000 {
@@ -1041,5 +1375,34 @@ mod tests {
             assert_eq!(workload_from(workload_tag(w)).unwrap(), w);
         }
         assert!(workload_from(7).is_err());
+    }
+
+    #[test]
+    fn partitioner_tags_round_trip() {
+        for p in [Partitioner::Hash, Partitioner::Skew] {
+            assert_eq!(partitioner_from(partitioner_tag(p)).unwrap(), p);
+        }
+        assert!(partitioner_from(9).is_err());
+    }
+
+    #[test]
+    fn job_done_preserves_exact_float_bits() {
+        // The federation oracle compares decoded outputs with `==`;
+        // the wire must carry exact bit patterns, including values
+        // that do not survive a decimal print-and-parse cycle.
+        let out = JobOutput::Netflix(NetflixStats {
+            mean: vec![f64::from_bits(0.1f64.to_bits() + 1), f64::MIN_POSITIVE],
+            ci_half: vec![1.0 / 3.0],
+            count: vec![7.0],
+        });
+        let m = Message::JobDone { job: 1, output: out.clone() };
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let Message::JobDone { output: back, .. } =
+            Message::read_from(&mut buf.as_slice()).unwrap()
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!(back, out);
     }
 }

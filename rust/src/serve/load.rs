@@ -121,6 +121,8 @@ pub fn mixed_request(cfg: &LoadConfig, i: usize) -> JobRequest {
         deadline_s,
         max_attempts: 3,
         fault: None,
+        reduce_tasks: 1,
+        partitioner: crate::reduce::Partitioner::Hash,
     }
 }
 

@@ -38,5 +38,6 @@ pub use admission::{
 pub use load::{mixed_request, run_load, LoadConfig, LoadOutcome};
 pub use pool::PoolConfig;
 pub use service::{
-    JobHandle, JobResult, JobService, ServeConfig, ServeReport,
+    JobHandle, JobResult, JobService, LoadDigest, ServeConfig,
+    ServeReport,
 };

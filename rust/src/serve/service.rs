@@ -138,6 +138,56 @@ impl JobHandle {
             }
         }
     }
+
+    /// Non-blocking poll: `None` while the job is still running. The
+    /// federation front-door sweeps many outstanding handles on one
+    /// thread, so it must never park on any single tenant's job.
+    pub fn try_wait(&self) -> Option<Result<JobResult>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(
+                Error::Scheduler("service dropped the job".into()),
+            )),
+        }
+    }
+}
+
+/// Lock-free load digest a running service keeps current — the
+/// federation front-door reads this to build its shard map without a
+/// round trip through the dispatcher thread.
+#[derive(Debug, Default)]
+pub struct LoadGauge {
+    active: AtomicU64,
+    queued: AtomicU64,
+    completed: AtomicU64,
+}
+
+impl LoadGauge {
+    fn publish(&self, active: usize, queued: usize, completed: usize) {
+        self.active.store(active as u64, Ordering::Relaxed);
+        self.queued.store(queued as u64, Ordering::Relaxed);
+        self.completed.store(completed as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LoadDigest {
+        LoadDigest {
+            active: self.active.load(Ordering::Relaxed) as usize,
+            queued: self.queued.load(Ordering::Relaxed) as usize,
+            completed: self.completed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One point-in-time reading of a [`LoadGauge`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LoadDigest {
+    /// Jobs currently multiplexed on the pool.
+    pub active: usize,
+    /// Admitted jobs waiting for a multiplex slot.
+    pub queued: usize,
+    /// Jobs completed since the service started.
+    pub completed: u64,
 }
 
 /// Service-level metrics over a full serve session, in the same flat
@@ -355,6 +405,7 @@ pub struct JobService {
     rejected: AtomicU64,
     workers: usize,
     policy: AdmissionPolicy,
+    gauge: Arc<LoadGauge>,
 }
 
 impl JobService {
@@ -369,12 +420,14 @@ impl JobService {
         let workers = pool.workers;
         let (submit_tx, submit_rx) = mpsc::channel();
         let (report_tx, report_rx) = mpsc::channel();
+        let gauge = Arc::new(LoadGauge::default());
         let disp = Dispatcher {
             backend,
             params,
             pool,
             pool_rx: up_rx,
             submit_rx,
+            gauge: gauge.clone(),
             policy: cfg.policy,
             max_active: cfg.max_active.max(1),
             target_inflight: cfg.inflight.max(1),
@@ -414,7 +467,19 @@ impl JobService {
             rejected: AtomicU64::new(0),
             workers,
             policy: cfg.policy,
+            gauge,
         })
+    }
+
+    /// Map slots this service's pool started with.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The dispatcher's current load digest (lock-free; at most one
+    /// poll interval stale).
+    pub fn load(&self) -> LoadDigest {
+        self.gauge.snapshot()
     }
 
     /// The admission controller's time estimate for `req` on this
@@ -505,6 +570,8 @@ struct Dispatcher {
     pool: WorkerPool,
     pool_rx: mpsc::Receiver<Up>,
     submit_rx: mpsc::Receiver<Cmd>,
+    /// Load digest shared with [`JobService::load`] readers.
+    gauge: Arc<LoadGauge>,
     policy: AdmissionPolicy,
     max_active: usize,
     target_inflight: usize,
@@ -574,6 +641,11 @@ impl Dispatcher {
                     self.top_up_worker(w);
                 }
             }
+            self.gauge.publish(
+                self.active.len(),
+                self.queue.len(),
+                self.records.len(),
+            );
             // 3. Drained and idle: stop.
             if self.draining
                 && self.active.is_empty()

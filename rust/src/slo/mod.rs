@@ -3,6 +3,9 @@
 //! and advise scale-out only "until additional cores provide diminishing
 //! returns and no further" (Fig 12's management takeaway).
 
+use std::collections::HashMap;
+use std::sync::Mutex;
+
 use crate::data::Workload;
 use crate::platforms::PlatformSpec;
 use crate::sim::{default_params, simulate, Cluster, HardwareType};
@@ -86,6 +89,53 @@ pub fn estimate_job_s(
 ) -> f64 {
     let p = default_params(workload, job_bytes, compute_s_per_mib);
     simulate(&PlatformSpec::bts(), &cluster_of(cores.max(1)), &p).total_s
+}
+
+/// Memoizing wrapper over [`estimate_job_s`] for admission at
+/// federation scale. The platform simulation is deterministic in its
+/// inputs, and a front-door fielding thousands of tenants sees only a
+/// handful of distinct `(workload, job_bytes, cores)` shapes — so the
+/// per-submission admission check amortizes to a map lookup instead
+/// of a fresh simulation per tenant.
+#[derive(Debug, Default)]
+pub struct EstimateCache {
+    map: Mutex<HashMap<(Workload, usize, usize, u64), f64>>,
+}
+
+impl EstimateCache {
+    pub fn new() -> EstimateCache {
+        EstimateCache::default()
+    }
+
+    /// [`estimate_job_s`], memoized on the full input tuple
+    /// (`compute_s_per_mib` keyed by its exact bits).
+    pub fn estimate_s(
+        &self,
+        workload: Workload,
+        job_bytes: usize,
+        cores: usize,
+        compute_s_per_mib: f64,
+    ) -> f64 {
+        let key =
+            (workload, job_bytes, cores, compute_s_per_mib.to_bits());
+        if let Some(&v) = self.map.lock().unwrap().get(&key) {
+            return v;
+        }
+        // Simulate outside the lock: a cold key must not serialize
+        // every other submitter behind the simulation.
+        let v = estimate_job_s(workload, job_bytes, cores, compute_s_per_mib);
+        self.map.lock().unwrap().insert(key, v);
+        v
+    }
+
+    /// Distinct job shapes estimated so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// Smallest core count achieving ≥ `frac` of the best simulated
@@ -188,6 +238,27 @@ mod tests {
         assert!(big > small, "more data must cost more time");
         // zero cores clamps rather than dividing by zero
         assert!(estimate_job_s(Workload::Eaglet, 1024, 0, 0.06) > 0.0);
+    }
+
+    #[test]
+    fn estimate_cache_matches_uncached_and_dedups() {
+        let cache = EstimateCache::new();
+        assert!(cache.is_empty());
+        let direct =
+            estimate_job_s(Workload::Eaglet, 16 * 1024 * 1024, 4, 0.06);
+        for _ in 0..3 {
+            let cached =
+                cache.estimate_s(Workload::Eaglet, 16 * 1024 * 1024, 4, 0.06);
+            assert_eq!(cached, direct, "cache must not change the answer");
+        }
+        assert_eq!(cache.len(), 1, "identical shapes share one entry");
+        let other =
+            cache.estimate_s(Workload::NetflixHi, 16 * 1024 * 1024, 4, 0.06);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(
+            other,
+            estimate_job_s(Workload::NetflixHi, 16 * 1024 * 1024, 4, 0.06)
+        );
     }
 
     #[test]

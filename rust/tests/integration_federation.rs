@@ -1,0 +1,216 @@
+//! The federation front-door end to end against the native backend.
+//!
+//! The load-bearing oracle: a job routed through the front-door — home
+//! shard, spilled to a sibling, or re-homed after a leader kill — must
+//! produce the **bit-identical** `JobOutput` a direct `JobService`
+//! submission produces. The determinism contract (same seed, samples,
+//! workload, reduce config ⇒ same statistic anywhere) is what makes
+//! federation placement a pure performance decision; these tests pin
+//! it across every routing path, including the framed-TCP wire.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+
+use bts::coordinator::JobOutput;
+use bts::data::{ModelParams, Workload};
+use bts::exec::Backend;
+use bts::federation::{
+    frontdoor_shutdown, serve_frontdoor, submit_via_frontdoor, Federation,
+    FederationConfig,
+};
+use bts::serve::{JobRequest, JobService};
+use bts::util::testutil::SERVE_JOB_DEADLINE;
+
+fn native() -> Arc<Backend> {
+    Arc::new(Backend::native(ModelParams::default()))
+}
+
+fn fed_cfg() -> FederationConfig {
+    FederationConfig {
+        leaders: 2,
+        workers_per_leader: 2,
+        max_active_per_leader: 2,
+        ..FederationConfig::default()
+    }
+}
+
+/// Run `req` directly on one standalone leader with the exact pool
+/// shape the federation gives each shard — the oracle every federated
+/// job must match bit for bit.
+fn direct_output(cfg: &FederationConfig, req: &JobRequest) -> JobOutput {
+    let svc = JobService::start(native(), cfg.serve_config()).unwrap();
+    let out = svc
+        .submit(req.clone())
+        .unwrap()
+        .wait_timeout(SERVE_JOB_DEADLINE)
+        .unwrap()
+        .output;
+    svc.shutdown().unwrap();
+    out
+}
+
+fn mixed(i: usize, samples: usize) -> JobRequest {
+    let workload = match i % 3 {
+        0 => Workload::Eaglet,
+        1 => Workload::NetflixHi,
+        _ => Workload::NetflixLo,
+    };
+    JobRequest::new(workload, samples).with_seed(0xFED0 ^ (i as u64))
+}
+
+/// The first tenant name (within `prefix`0..) whose home shard is
+/// `leader` — lets a test pin load onto a chosen shard.
+fn tenant_homed_on(fed: &Federation, prefix: &str, leader: usize) -> String {
+    (0u32..)
+        .map(|i| format!("{prefix}{i}"))
+        .find(|t| fed.home_leader(t) == leader)
+        .unwrap()
+}
+
+#[test]
+fn home_routed_jobs_match_direct_submission_bit_for_bit() {
+    let cfg = fed_cfg();
+    let mut fed = Federation::start(native(), cfg.clone()).unwrap();
+    let mut ids: HashMap<u64, JobRequest> = HashMap::new();
+    for i in 0..4 {
+        let req = mixed(i, 12);
+        let id = fed.submit(&format!("tenant-{i}"), req.clone()).unwrap();
+        ids.insert(id, req);
+    }
+    fed.pump_until_idle(SERVE_JOB_DEADLINE).unwrap();
+    let done = fed.drain_completions();
+    assert_eq!(done.len(), 4);
+    for c in done {
+        let req = &ids[&c.id];
+        let res = c.result.unwrap();
+        assert_eq!(
+            res.output,
+            direct_output(&cfg, req),
+            "job {} ({}) on leader {} diverged from its direct run",
+            c.id,
+            req.workload.name(),
+            c.leader
+        );
+    }
+    let report = fed.shutdown().unwrap();
+    // 4 jobs against a per-leader outstanding cap of 4: every one of
+    // them fit its home shard, so bit-identity above covered the pure
+    // home-routed path
+    assert_eq!(report.spilled, 0);
+    assert_eq!(report.jobs_completed, 4);
+    assert_eq!(report.jobs_failed, 0);
+}
+
+#[test]
+fn spilled_jobs_match_direct_submission_bit_for_bit() {
+    // Cap each shard at one outstanding job: a single tenant's burst
+    // must overflow its home and spill to the sibling within the very
+    // first dispatch sweep.
+    let cfg = FederationConfig {
+        leader_outstanding_cap: 1,
+        ..fed_cfg()
+    };
+    let mut fed = Federation::start(native(), cfg.clone()).unwrap();
+    let mut ids: HashMap<u64, JobRequest> = HashMap::new();
+    for i in 0..4 {
+        let req = JobRequest::new(Workload::NetflixLo, 10)
+            .with_seed(0x5011 + i as u64);
+        let id = fed.submit("spiller", req.clone()).unwrap();
+        ids.insert(id, req);
+    }
+    fed.pump_until_idle(SERVE_JOB_DEADLINE).unwrap();
+    let done = fed.drain_completions();
+    assert_eq!(done.len(), 4);
+    assert!(
+        done.iter().any(|c| c.spilled),
+        "a saturated home must spill, not queue forever"
+    );
+    for c in done {
+        let req = &ids[&c.id];
+        let res = c.result.unwrap();
+        assert_eq!(
+            res.output,
+            direct_output(&cfg, req),
+            "job {} (spilled={}, leader {}) diverged from its direct run",
+            c.id,
+            c.spilled,
+            c.leader
+        );
+    }
+    let report = fed.shutdown().unwrap();
+    assert!(report.spilled >= 1);
+    assert_eq!(report.jobs_failed, 0);
+}
+
+#[test]
+fn tcp_frontdoor_output_matches_direct_submission() {
+    let cfg = fed_cfg();
+    let fed = Federation::start(native(), cfg.clone()).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = thread::spawn(move || serve_frontdoor(listener, fed));
+    let req = JobRequest::new(Workload::Eaglet, 16).with_seed(0x7CB);
+    let out = submit_via_frontdoor(&addr, "wire-tenant", &req).unwrap();
+    assert_eq!(
+        out.output,
+        direct_output(&cfg, &req),
+        "the framed-TCP round trip must not perturb the statistic"
+    );
+    frontdoor_shutdown(&addr).unwrap();
+    let report = server.join().unwrap().unwrap();
+    assert_eq!(report.jobs_completed, 1);
+    assert_eq!(report.jobs_failed, 0);
+}
+
+#[test]
+fn killing_a_leader_rehomes_without_corrupting_survivors() {
+    let cfg = fed_cfg();
+    let mut fed = Federation::start(native(), cfg.clone()).unwrap();
+    // one tenant homed on each shard, so the kill hits exactly one of
+    // them and the other doubles as the untouched control
+    let victim = tenant_homed_on(&fed, "a", 0);
+    let control = tenant_homed_on(&fed, "b", 1);
+    let mk = |seed: u64| {
+        JobRequest::new(Workload::NetflixHi, 10).with_seed(seed)
+    };
+    let mut ids: HashMap<u64, JobRequest> = HashMap::new();
+    for (tenant, seed) in [(&victim, 1u64), (&control, 2)] {
+        let req = mk(seed);
+        ids.insert(fed.submit(tenant, req.clone()).unwrap(), req);
+    }
+    fed.pump_until_idle(SERVE_JOB_DEADLINE).unwrap();
+    fed.kill_leader(0).unwrap();
+    for (tenant, seed) in [(&victim, 3u64), (&control, 4)] {
+        let req = mk(seed);
+        ids.insert(fed.submit(tenant, req.clone()).unwrap(), req);
+    }
+    fed.pump_until_idle(SERVE_JOB_DEADLINE).unwrap();
+    let done = fed.drain_completions();
+    assert_eq!(done.len(), 4);
+    for c in &done {
+        let req = &ids[&c.id];
+        let output = match &c.result {
+            Ok(res) => &res.output,
+            Err(e) => panic!("job {} for {} failed: {e}", c.id, c.tenant),
+        };
+        assert_eq!(
+            output,
+            &direct_output(&cfg, req),
+            "job {} for {} (leader {}) diverged after the kill",
+            c.id,
+            c.tenant,
+            c.leader
+        );
+    }
+    // every post-kill job — the victim's re-homed one *and* the
+    // control's — ran on the surviving shard
+    let post_kill: Vec<_> = done.iter().filter(|c| c.id > 2).collect();
+    assert_eq!(post_kill.len(), 2);
+    assert!(post_kill.iter().all(|c| c.leader == 1));
+    let report = fed.shutdown().unwrap();
+    assert!(report.rehomed >= 1, "the victim's job re-homed");
+    assert_eq!(report.jobs_completed, 4);
+    assert_eq!(report.jobs_failed, 0);
+}

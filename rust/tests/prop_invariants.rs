@@ -499,3 +499,155 @@ fn prop_slower_observations_never_raise_a_slots_score() {
         Ok(())
     });
 }
+
+// ---- DRF fair allocation (federation front-door) --------------------
+
+use bts::federation::{allocate, Capacity, Demand, TenantDemand};
+
+/// Random federation capacity + tenant mix. Tenant names are distinct
+/// by construction (the name is the allocator's tie-breaker).
+fn random_drf_case(rng: &mut Rng) -> (Capacity, Vec<TenantDemand>) {
+    let cap = Capacity {
+        slots: rng.range(1, 64),
+        cache_bytes: if rng.below(2) == 0 {
+            0
+        } else {
+            rng.range(1, 1 << 20)
+        },
+    };
+    let n = rng.range(1, 8) as usize;
+    let tenants = (0..n)
+        .map(|i| TenantDemand {
+            tenant: format!("t{i:02}"),
+            per_job: Demand {
+                slots: rng.range(1, 5),
+                cache_bytes: if cap.cache_bytes == 0 {
+                    0
+                } else {
+                    rng.range(0, cap.cache_bytes / 2 + 1)
+                },
+            },
+            jobs: rng.range(0, 12),
+        })
+        .collect();
+    (cap, tenants)
+}
+
+/// `per_job` with the allocator's ≥1-slot normalization applied.
+fn norm(d: Demand) -> Demand {
+    Demand { slots: d.slots.max(1), cache_bytes: d.cache_bytes }
+}
+
+fn tenant_usage(t: &TenantDemand, granted: u64) -> Demand {
+    let p = norm(t.per_job);
+    Demand {
+        slots: p.slots * granted,
+        cache_bytes: p.cache_bytes * granted,
+    }
+}
+
+#[test]
+fn prop_drf_is_work_conserving_and_bounded() {
+    check("drf work conservation", 300, |rng: &mut Rng| {
+        let (cap, tenants) = random_drf_case(rng);
+        let granted = allocate(cap, &tenants);
+        let mut total = Demand::default();
+        for (i, t) in tenants.iter().enumerate() {
+            prop_assert!(
+                granted[i] <= t.jobs,
+                "tenant {} granted {} > requested {}",
+                t.tenant,
+                granted[i],
+                t.jobs
+            );
+            total = total.plus(tenant_usage(t, granted[i]));
+        }
+        prop_assert!(
+            cap.fits(total, Demand::default()),
+            "allocation exceeds capacity: {total:?} vs {cap:?}"
+        );
+        // work conservation: any tenant left wanting must genuinely
+        // not fit in the leftover capacity
+        for (i, t) in tenants.iter().enumerate() {
+            if granted[i] < t.jobs {
+                prop_assert!(
+                    !cap.fits(total, norm(t.per_job)),
+                    "tenant {} starved with room to spare",
+                    t.tenant
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drf_envy_free_within_one_job_rounding() {
+    check("drf envy-freeness", 300, |rng: &mut Rng| {
+        let (cap, tenants) = random_drf_case(rng);
+        let granted = allocate(cap, &tenants);
+        for (a, ta) in tenants.iter().enumerate() {
+            if granted[a] >= ta.jobs {
+                continue; // satisfied tenants envy nobody
+            }
+            for (b, tb) in tenants.iter().enumerate() {
+                if a == b {
+                    continue;
+                }
+                // Only comparable pairs: whenever b's job fit the
+                // leftover capacity, a's would have fit too — so a was
+                // eligible at b's every grant.
+                let na = norm(ta.per_job);
+                let nb = norm(tb.per_job);
+                let comparable = na.slots <= nb.slots
+                    && (cap.cache_bytes == 0
+                        || na.cache_bytes <= nb.cache_bytes);
+                if !comparable {
+                    continue;
+                }
+                let share_a =
+                    cap.dominant_share(tenant_usage(ta, granted[a]));
+                let share_b =
+                    cap.dominant_share(tenant_usage(tb, granted[b]));
+                let one_job_b = cap.dominant_share(nb);
+                prop_assert!(
+                    share_b <= share_a + one_job_b + 1e-9,
+                    "{} (share {share_b}) envied by unmet {} \
+                     (share {share_a}, b's increment {one_job_b})",
+                    tb.tenant,
+                    ta.tenant
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drf_invariant_under_arrival_order() {
+    check("drf permutation invariance", 300, |rng: &mut Rng| {
+        let (cap, tenants) = random_drf_case(rng);
+        let baseline: std::collections::HashMap<String, u64> = tenants
+            .iter()
+            .zip(allocate(cap, &tenants))
+            .map(|(t, g)| (t.tenant.clone(), g))
+            .collect();
+        // Fisher–Yates over the same tenants: the *arrival order*
+        // changes, nothing else
+        let mut shuffled = tenants.clone();
+        for i in (1..shuffled.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            shuffled.swap(i, j);
+        }
+        for (t, g) in shuffled.iter().zip(allocate(cap, &shuffled)) {
+            prop_assert!(
+                baseline[&t.tenant] == g,
+                "tenant {} got {} after shuffle, {} before",
+                t.tenant,
+                g,
+                baseline[&t.tenant]
+            );
+        }
+        Ok(())
+    });
+}
