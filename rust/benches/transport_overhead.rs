@@ -2,17 +2,25 @@
 //! trade, now a measured, swappable axis.
 //!
 //!     cargo bench --bench transport_overhead
+//!     cargo bench --bench transport_overhead --features alloc-count
 //!
-//! Runs the same job (same seed, same packing) over the two
-//! transports and prices what changed:
+//! Runs the same job (same seed, same packing) over the transports and
+//! prices what changed:
 //!
 //! * **per-task dispatch** — leader-side scheduler claim + link send
-//!   (`SchedOverhead::dispatch_us_per_call`), mpsc channel vs framed
-//!   loopback TCP;
+//!   (`SchedOverhead.dispatch_s / tasks`), mpsc channel vs framed
+//!   loopback TCP, with dispatch batching on vs off. Batched, every
+//!   refill window leaves as one `TaskBatch` frame with one flush;
+//!   unbatched reproduces the historical frame-and-flush-per-task
+//!   path. **Gate:** at 1k+ tiny tasks over loopback TCP, batching
+//!   must cut per-task dispatch overhead by at least 2x.
 //! * **data distribution** — per-task fetch time with blocks served
 //!   from the local replicated store (in-proc) vs leader-proxied
 //!   `DfsGet` over the socket, with and without a worker-local block
 //!   cache in front of the wire.
+//! * **allocation discipline** (`--features alloc-count`) — a warm
+//!   cache-hit block fetch must perform **zero** heap allocations:
+//!   intrusive-LRU touch plus an `Arc` clone, nothing else.
 //!
 //! Outputs are asserted bit-identical across all configurations
 //! before anything is recorded (a perf number for a wrong answer is
@@ -30,15 +38,32 @@ use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
 use bts::util::bench::Bench;
 use bts::util::json::{num, obj, s, Json};
 
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static ALLOC: bts::util::alloc_counter::CountingAlloc =
+    bts::util::alloc_counter::CountingAlloc;
+
 const SEED: u64 = 0xB75;
-const SAMPLES: usize = 96;
+/// Tiniest sizing → one task per sample: the 1k+ tiny-task regime the
+/// dispatch-overhead gate is defined over.
+const SAMPLES: usize = 1024;
 
 fn base_cfg() -> ExecConfig {
     ExecConfig {
-        sizing: TaskSizing::Kneepoint(16 * 1024),
+        sizing: TaskSizing::Tiniest,
         seed: SEED,
+        // A deeper dispatch window means wider refill bursts — the
+        // batch window IS the refill window, so this is the one knob
+        // that shapes TaskBatch sizes.
+        inflight: 8,
         ..Default::default()
     }
+}
+
+/// Leader wall time in the dispatch path (claim + link send + report)
+/// amortized per task — the overhead the tiny-task trade pays.
+fn dispatch_us_per_task(r: &ExecResult) -> f64 {
+    r.overhead.dispatch_s * 1e6 / r.report.tasks.max(1) as f64
 }
 
 /// One TCP run: bind, stand up `n` remote worker sessions, run the
@@ -49,6 +74,7 @@ fn run_tcp(
     local: usize,
     n_remote: usize,
     worker_cache_mb: usize,
+    batch: bool,
 ) -> ExecResult {
     let remote = RemoteWorkers::bind("127.0.0.1:0", n_remote)
         .expect("bind loopback");
@@ -76,6 +102,7 @@ fn run_tcp(
         &ExecConfig {
             workers: local,
             remote: Some(remote),
+            batch_dispatch: batch,
             ..base_cfg()
         },
     )
@@ -90,8 +117,9 @@ fn flat(name: &str, r: &ExecResult) -> Json {
     obj(vec![
         ("config", s(name)),
         ("tasks", num(r.report.tasks as f64)),
+        ("dispatch_us_per_task", num(dispatch_us_per_task(r))),
         (
-            "dispatch_us_per_task",
+            "dispatch_us_per_call",
             num(r.overhead.dispatch_us_per_call()),
         ),
         ("queue_wait_p50_s", num(r.overhead.queue_wait.p50)),
@@ -104,14 +132,50 @@ fn flat(name: &str, r: &ExecResult) -> Json {
         ("dfs_bytes_served", num(r.dfs_bytes_served as f64)),
         ("prefetch_hit_rate", num(r.report.prefetch_hit_rate)),
         ("cache_hit_rate", num(r.report.cache_hit_rate)),
+        ("frames_sent", num(r.report.frames_sent as f64)),
+        ("frames_batched", num(r.report.frames_batched as f64)),
+        ("wire_bytes", num(r.report.wire_bytes as f64)),
+        ("blocks_zero_copy", num(r.report.blocks_zero_copy as f64)),
     ])
+}
+
+/// Warm cache-hit allocation audit: a hit on protected content is an
+/// index lookup, an intrusive-list touch, and an `Arc` clone — zero
+/// heap traffic. Only meaningful when this binary owns the global
+/// allocator, hence the feature gate.
+#[cfg(feature = "alloc-count")]
+fn assert_warm_hit_allocates_nothing() {
+    use bts::cache::BlockCache;
+    use bts::util::alloc_counter;
+
+    let cache = BlockCache::new(1 << 20, 2);
+    let data = Arc::new(vec![7u8; 4096]);
+    cache.insert("bench/warm", &data);
+    // First hit promotes probation → protected (still alloc-free, but
+    // the contract under test is the steady warm state).
+    let first = cache.get("bench/warm").expect("resident");
+    drop(first);
+
+    alloc_counter::reset();
+    let hit = cache.get("bench/warm").expect("warm hit");
+    let n = alloc_counter::allocations();
+    assert_eq!(
+        n, 0,
+        "warm cache-hit fetch allocated {n} times; the zero-copy \
+         contract says an intrusive-LRU touch + Arc clone only"
+    );
+    drop(hit);
+    println!("alloc-count: warm cache hit performed 0 heap allocations");
 }
 
 fn main() {
     let backend = Arc::new(Backend::native(ModelParams::default()));
     let mut b = Bench::new("transport_overhead").with_iters(0, 1);
-    let ds =
-        bts::workloads::build_small(Workload::Eaglet, &ModelParams::default(), SAMPLES);
+    let ds = bts::workloads::build_small(
+        Workload::Eaglet,
+        &ModelParams::default(),
+        SAMPLES,
+    );
 
     // ---- in-proc channels: the baseline spine -----------------------
     let inproc = run_cluster(
@@ -122,29 +186,41 @@ fn main() {
     .expect("inproc run");
 
     // ---- loopback TCP: same slot count, framed transport ------------
-    let tcp = run_tcp(&backend, ds.as_ref(), 0, 2, 0);
+    let tcp = run_tcp(&backend, ds.as_ref(), 0, 2, 0, true);
+    // ---- same wire, batching off: one frame + flush per task --------
+    let tcp_unbatched = run_tcp(&backend, ds.as_ref(), 0, 2, 0, false);
     // ---- loopback TCP + worker-local cache over the data plane ------
-    let tcp_cached = run_tcp(&backend, ds.as_ref(), 0, 2, 32);
+    let tcp_cached = run_tcp(&backend, ds.as_ref(), 0, 2, 32, true);
     // ---- mixed: one local slot, one remote --------------------------
-    let mixed = run_tcp(&backend, ds.as_ref(), 1, 1, 0);
+    let mixed = run_tcp(&backend, ds.as_ref(), 1, 1, 0, true);
 
     // A perf number for a wrong answer is noise: equivalence first.
     assert_eq!(inproc.output, tcp.output, "tcp changed the statistic");
+    assert_eq!(
+        inproc.output, tcp_unbatched.output,
+        "batching changed the statistic"
+    );
     assert_eq!(
         inproc.output, tcp_cached.output,
         "worker cache changed the statistic"
     );
     assert_eq!(inproc.output, mixed.output, "mixed set changed the statistic");
+    assert!(
+        inproc.report.tasks >= 1024,
+        "gate regime needs 1k+ tiny tasks, got {}",
+        inproc.report.tasks
+    );
 
     for (name, r) in [
         ("inproc", &inproc),
         ("tcp", &tcp),
+        ("tcp_unbatched", &tcp_unbatched),
         ("tcp_worker_cache", &tcp_cached),
         ("mixed", &mixed),
     ] {
         b.record(
             &format!("{name}_dispatch_us_per_task"),
-            r.overhead.dispatch_us_per_call(),
+            dispatch_us_per_task(r),
             "us",
         );
         b.record(
@@ -154,20 +230,46 @@ fn main() {
         );
         b.record(&format!("{name}_map"), r.report.map_s, "s");
         println!(
-            "{name:>18}: dispatch {:6.1} us/task  fetch p50 {:8.6}s  \
-             queue-wait p50 {:8.6}s  map {:.3}s  ({} tasks, {:.2} MB served)",
-            r.overhead.dispatch_us_per_call(),
+            "{name:>16}: dispatch {:6.2} us/task  fetch p50 {:8.6}s  \
+             queue-wait p50 {:8.6}s  map {:.3}s  ({} tasks, {} frames, \
+             {} batched, {:.2} MB wire)",
+            dispatch_us_per_task(r),
             r.report.task_fetch.p50,
             r.overhead.queue_wait.p50,
             r.report.map_s,
             r.report.tasks,
-            r.dfs_bytes_served as f64 / 1048576.0,
+            r.report.frames_sent,
+            r.report.frames_batched,
+            r.report.wire_bytes as f64 / 1048576.0,
         );
     }
+
+    // ---- the gate: batching must at least halve per-task dispatch ---
+    let batched_us = dispatch_us_per_task(&tcp);
+    let unbatched_us = dispatch_us_per_task(&tcp_unbatched);
+    println!(
+        "gate: unbatched {unbatched_us:.2} us/task vs batched \
+         {batched_us:.2} us/task ({:.2}x)",
+        unbatched_us / batched_us.max(1e-9)
+    );
+    assert!(
+        unbatched_us >= 2.0 * batched_us,
+        "batched dispatch must be >= 2x cheaper per task over loopback \
+         TCP: unbatched {unbatched_us:.2} us/task, batched \
+         {batched_us:.2} us/task"
+    );
+    assert!(
+        tcp.report.frames_batched > 0,
+        "batched run sent no TaskBatch/DoneBatch members"
+    );
+
+    #[cfg(feature = "alloc-count")]
+    assert_warm_hit_allocates_nothing();
 
     let records = vec![
         flat("inproc", &inproc),
         flat("tcp", &tcp),
+        flat("tcp_unbatched", &tcp_unbatched),
         flat("tcp_worker_cache", &tcp_cached),
         flat("mixed_local_remote", &mixed),
     ];

@@ -24,7 +24,7 @@
 //! content itself stays resident until the byte budget evicts it,
 //! which is what keeps a *later* identical tenant warm.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -36,11 +36,17 @@ pub fn content_hash(bytes: &[u8]) -> u64 {
     mix64(fnv1a(bytes))
 }
 
-/// One resident content entry plus every key aliasing it.
+/// One resident content entry plus every key aliasing it. The
+/// `newer`/`older` fields are intrusive recency-list links (neighbor
+/// content hashes), so a touch is pointer surgery on entries already
+/// in the map — the warm cache-hit path allocates nothing.
 struct Entry {
     data: Arc<Vec<u8>>,
     keys: Vec<String>,
-    tick: u64,
+    /// Next-more-recent entry's content hash (`None` = recency head).
+    newer: Option<u64>,
+    /// Next-less-recent entry's content hash (`None` = recency tail).
+    older: Option<u64>,
     /// 2Q state: false = probation (first touch), true = protected.
     protected: bool,
 }
@@ -55,57 +61,97 @@ struct IxShard {
     epoch: u64,
 }
 
-/// One content shard: entries plus a tick-ordered recency map.
+/// One content shard: entries threaded onto an intrusive recency list
+/// (`head` = most recent, `tail` = least recent). No side structure
+/// orders the entries, so touching one on a hit is alloc-free.
 struct Shard {
     entries: HashMap<u64, Entry>,
-    /// recency tick → content hash, oldest first.
-    by_tick: BTreeMap<u64, u64>,
-    tick: u64,
+    head: Option<u64>,
+    tail: Option<u64>,
     bytes: usize,
 }
 
 impl Shard {
     fn new() -> Shard {
-        Shard {
-            entries: HashMap::new(),
-            by_tick: BTreeMap::new(),
-            tick: 0,
-            bytes: 0,
+        Shard { entries: HashMap::new(), head: None, tail: None, bytes: 0 }
+    }
+
+    /// Detach `h` from the recency list: neighbors (or the list ends)
+    /// are patched around it. `h`'s own links are left stale — the
+    /// caller either relinks it ([`Shard::push_front`]) or removes it.
+    fn unlink(&mut self, h: u64) {
+        let (newer, older) = match self.entries.get(&h) {
+            Some(e) => (e.newer, e.older),
+            None => return,
+        };
+        match newer {
+            Some(n) => {
+                if let Some(e) = self.entries.get_mut(&n) {
+                    e.older = older;
+                }
+            }
+            None => self.head = older,
+        }
+        match older {
+            Some(o) => {
+                if let Some(e) = self.entries.get_mut(&o) {
+                    e.newer = newer;
+                }
+            }
+            None => self.tail = newer,
         }
     }
 
-    /// Move `h` to the recency front.
-    fn touch(&mut self, h: u64) {
-        let Some(old) = self.entries.get(&h).map(|e| e.tick) else {
-            return;
-        };
-        self.by_tick.remove(&old);
-        self.tick += 1;
-        let t = self.tick;
-        if let Some(e) = self.entries.get_mut(&h) {
-            e.tick = t;
+    /// Link a detached `h` in at the most-recent end.
+    fn push_front(&mut self, h: u64) {
+        let old_head = self.head;
+        match self.entries.get_mut(&h) {
+            Some(e) => {
+                e.newer = None;
+                e.older = old_head;
+            }
+            None => return,
         }
-        self.by_tick.insert(t, h);
+        match old_head {
+            Some(o) => {
+                if let Some(e) = self.entries.get_mut(&o) {
+                    e.newer = Some(h);
+                }
+            }
+            None => self.tail = Some(h),
+        }
+        self.head = Some(h);
+    }
+
+    /// Move `h` to the recency front — pure pointer surgery on the
+    /// intrusive links, the zero-allocation half of the warm-hit
+    /// guarantee `benches/transport_overhead.rs` asserts.
+    fn touch(&mut self, h: u64) {
+        if self.head == Some(h) || !self.entries.contains_key(&h) {
+            return;
+        }
+        self.unlink(h);
+        self.push_front(h);
     }
 
     /// Eviction victim, oldest-first within class: unreferenced
     /// content goes before probation, probation before protected.
+    /// Walks the recency list tail → head.
     fn victim(&self) -> Option<u64> {
-        let mut first_any = None;
         let mut first_probation = None;
-        for &h in self.by_tick.values() {
+        let mut cur = self.tail;
+        while let Some(h) = cur {
             let e = &self.entries[&h];
             if e.keys.is_empty() {
                 return Some(h);
             }
-            if first_any.is_none() {
-                first_any = Some(h);
-            }
             if first_probation.is_none() && !e.protected {
                 first_probation = Some(h);
             }
+            cur = e.newer;
         }
-        first_probation.or(first_any)
+        // No unreferenced, no probation: the oldest entry overall.
+        first_probation.or(self.tail)
     }
 
     /// Evict until the shard fits `budget`; returns the keys of every
@@ -114,8 +160,8 @@ impl Shard {
         let mut out = Vec::new();
         while self.bytes > budget {
             let Some(h) = self.victim() else { break };
+            self.unlink(h);
             if let Some(e) = self.entries.remove(&h) {
-                self.by_tick.remove(&e.tick);
                 self.bytes -= e.data.len();
                 out.push((h, e.keys));
             }
@@ -301,19 +347,18 @@ impl BlockCache {
                 s.touch(h);
                 Vec::new()
             } else {
-                s.tick += 1;
-                let t = s.tick;
-                s.by_tick.insert(t, h);
                 s.bytes += data.len();
                 s.entries.insert(
                     h,
                     Entry {
                         data: data.clone(),
                         keys: vec![key.to_string()],
-                        tick: t,
+                        newer: None,
+                        older: None,
                         protected: false,
                     },
                 );
+                s.push_front(h);
                 self.inserted.fetch_add(1, Ordering::Relaxed);
                 s.evict_to(self.shard_budget)
             }

@@ -290,6 +290,11 @@ pub fn run_job(
         cache_hit_rate: 0.0,
         final_rf: dfs.replication_factor(),
         restarts: cfg.attempt - 1,
+        // single-process engine: no wire, no frames
+        frames_sent: 0,
+        frames_batched: 0,
+        wire_bytes: 0,
+        blocks_zero_copy: 0,
     };
     Ok(JobResult {
         output,

@@ -68,7 +68,7 @@ use crate::error::{Error, Result};
 use crate::kneepoint::TaskSizing;
 use crate::membership::{Acceptor, Ledger, MemberEvent, TaskKind};
 use crate::metrics::{JobReport, Timer};
-use crate::net::protocol::{ACCEPT_TIMEOUT, PING_INTERVAL};
+use crate::net::protocol::{NetCounters, ACCEPT_TIMEOUT, PING_INTERVAL};
 use crate::runtime::Exec;
 use crate::scheduler::{
     inflight_target, placement_score, DoneKind, ResponseTimeTracker,
@@ -143,6 +143,12 @@ pub struct ExecConfig {
     /// Remote-link heartbeat interval in milliseconds: the worker's
     /// ping cadence, and (×6) the leader pump's silent-peer threshold.
     pub heartbeat_ms: u64,
+    /// Coalesce each refill window's dispatches into one
+    /// `Down::TaskBatch` frame (and let workers ack completions as
+    /// `Up::DoneBatch`). The batch window is the scheduler-refill
+    /// window — there is no separate size knob. Off reproduces the
+    /// historical one-frame-per-task wire behavior (`--batch off`).
+    pub batch_dispatch: bool,
 }
 
 impl Default for ExecConfig {
@@ -169,6 +175,7 @@ impl Default for ExecConfig {
             partitioner: Partitioner::Hash,
             elastic: false,
             heartbeat_ms: PING_INTERVAL.as_millis() as u64,
+            batch_dispatch: true,
         }
     }
 }
@@ -602,6 +609,21 @@ impl JobCtx {
             }
         }
         true
+    }
+
+    /// Fold link-send time into the dispatch half of
+    /// [`SchedOverhead`] — the wire cost of getting a refill window
+    /// onto a link is dispatch overhead exactly like the scheduler
+    /// claim that produced it (one call per frame, so batching shows
+    /// up as fewer, slightly larger calls).
+    pub(crate) fn note_dispatch(&mut self, secs: f64) {
+        self.dispatch_s += secs;
+        self.dispatch_calls += 1;
+    }
+
+    /// Whether dispatches should coalesce into `TaskBatch` frames.
+    pub(crate) fn batch_dispatch(&self) -> bool {
+        self.cfg.batch_dispatch
     }
 
     /// Dispatch window for `slot` under this job's config: the base
@@ -1061,6 +1083,13 @@ impl JobCtx {
             },
             final_rf: self.dfs.replication_factor(),
             restarts: self.cfg.attempt - 1,
+            // Wire counters are pool-owned; the driver fills them in
+            // (run_cluster from its run-local counters, the serve
+            // dispatcher from the pool's).
+            frames_sent: 0,
+            frames_batched: 0,
+            wire_bytes: 0,
+            blocks_zero_copy: 0,
         };
         let overhead = SchedOverhead {
             dispatch_s: self.dispatch_s,
@@ -1106,55 +1135,73 @@ fn top_up(
     speculate: bool,
 ) {
     let target = ctx.inflight_target(w, base_target);
+    let batch = ctx.batch_dispatch();
     while !retired[w] && inflight[w] < target {
-        match ctx.next(w) {
-            Some(spec) => {
-                let env = TaskEnvelope {
-                    job: 0,
-                    attempt,
-                    ns: ns.clone(),
-                    spec,
-                    poison: false,
-                };
-                if links[w].send(Down::Task(Box::new(env))) {
-                    inflight[w] += 1;
-                } else {
-                    // Link gone; its Lost/Exited message explains.
-                    retired[w] = true;
-                    return;
-                }
-            }
-            None => {
-                // Map scheduler dry for this slot: the reduce phase
-                // (if any) feeds it next — reducer slots refill
-                // through the same dispatch window as map slots.
-                if let Some(rspec) = ctx.next_reduce(w) {
-                    let env = ReduceEnvelope {
+        // Collect this wakeup's refill window for the slot. Batched,
+        // the whole window leaves as one `TaskBatch` frame — the
+        // window size *is* the batch size, no separate knob; unbatched
+        // reproduces the historical one-frame-per-task path.
+        let mut burst: Vec<TaskEnvelope> = Vec::new();
+        while inflight[w] + burst.len() < target {
+            match ctx.next(w) {
+                Some(spec) => {
+                    burst.push(TaskEnvelope {
                         job: 0,
                         attempt,
                         ns: ns.clone(),
-                        spec: rspec,
-                    };
-                    if links[w].send(Down::Reduce(Box::new(env))) {
-                        inflight[w] += 1;
-                        continue;
+                        spec,
+                        poison: false,
+                    });
+                    if !batch {
+                        break;
                     }
-                    retired[w] = true;
-                    return;
                 }
-                // Keep idle slots alive while a reduce phase is still
-                // pending (its dispatches only exist once the last map
-                // partial lands) or speculation may still clone.
-                if inflight[w] == 0
-                    && !speculate
-                    && !ctx.expects_reduce_work()
-                {
-                    let _ = links[w].send(Down::Shutdown);
-                    retired[w] = true;
-                }
-                return;
+                None => break,
             }
         }
+        if !burst.is_empty() {
+            let n = burst.len();
+            let t = Timer::start();
+            let sent = if n == 1 {
+                let env = burst.pop().expect("len checked");
+                links[w].send(Down::Task(Box::new(env)))
+            } else {
+                links[w].send(Down::TaskBatch(burst))
+            };
+            ctx.note_dispatch(t.secs());
+            if sent {
+                inflight[w] += n;
+                continue;
+            }
+            // Link gone; its Lost/Exited message explains.
+            retired[w] = true;
+            return;
+        }
+        // Map scheduler dry for this slot: the reduce phase (if any)
+        // feeds it next — reducer slots refill through the same
+        // dispatch window as map slots.
+        if let Some(rspec) = ctx.next_reduce(w) {
+            let env = ReduceEnvelope {
+                job: 0,
+                attempt,
+                ns: ns.clone(),
+                spec: rspec,
+            };
+            if links[w].send(Down::Reduce(Box::new(env))) {
+                inflight[w] += 1;
+                continue;
+            }
+            retired[w] = true;
+            return;
+        }
+        // Keep idle slots alive while a reduce phase is still pending
+        // (its dispatches only exist once the last map partial lands)
+        // or speculation may still clone.
+        if inflight[w] == 0 && !speculate && !ctx.expects_reduce_work() {
+            let _ = links[w].send(Down::Shutdown);
+            retired[w] = true;
+        }
+        return;
     }
 }
 
@@ -1284,6 +1331,10 @@ pub fn run_cluster(
     // frame (frozen) instead of silently rotting in the backlog.
     let mut acceptor: Option<Acceptor> = None;
     let mut pending_drains: Vec<usize> = Vec::new();
+    // One wire-counter instance per run (never a global static — a
+    // process can lead several jobs at once through the serve layer,
+    // and each must report its own traffic).
+    let net = Arc::new(NetCounters::default());
     if let Some(remote) = &cfg.remote {
         let acc = match Acceptor::spawn(
             remote.listener.clone(),
@@ -1294,6 +1345,7 @@ pub fn run_cluster(
             up_tx.clone(),
             tracker.clone(),
             PumpCfg::from_heartbeat_ms(cfg.heartbeat_ms),
+            net.clone(),
         ) {
             Ok(a) => a,
             Err(e) => {
@@ -1389,9 +1441,30 @@ pub fn run_cluster(
                 Err(_) => break, // every up-channel sender gone
             }
         };
-        match msg {
-            None => {}
-            Some(Up::Done { done, .. }) => {
+        // A `DoneBatch` frame is several completions in one message:
+        // unpack it into the per-completion events the arms below
+        // already handle — batching changes the wire, not the leader's
+        // bookkeeping.
+        let events: Vec<Up> = match msg {
+            None => Vec::new(),
+            Some(Up::DoneBatch(items)) => items
+                .into_iter()
+                .map(|it| Up::Done {
+                    job: it.job,
+                    attempt: it.attempt,
+                    done: Box::new(it.done),
+                })
+                .collect(),
+            Some(m) => vec![m],
+        };
+        // Completion refills are deferred past the event loop: a
+        // DoneBatch freeing several of a worker's slots must refill
+        // them as ONE TaskBatch burst, not per-completion singles.
+        let mut refill: Vec<usize> = Vec::new();
+        let mut refill_all = false;
+        for ev in events {
+            match ev {
+            Up::Done { done, .. } => {
                 let w = done.worker;
                 inflight[w] = inflight[w].saturating_sub(1);
                 ctx.on_done(*done);
@@ -1413,54 +1486,25 @@ pub fn run_cluster(
                     // that only dead clones still cover.
                     shutdown_all(&links, &mut retired);
                 } else if shuffle_started {
-                    for slot in 0..links.len() {
-                        top_up(
-                            &mut ctx,
-                            &links,
-                            &mut retired,
-                            &mut inflight,
-                            slot,
-                            target,
-                            cfg.attempt,
-                            &ns,
-                            speculate,
-                        );
-                    }
+                    // The last map partial armed the shuffle: idle
+                    // workers are blocked waiting and must be handed
+                    // reduce work.
+                    refill_all = true;
                 } else {
-                    top_up(
-                        &mut ctx,
-                        &links,
-                        &mut retired,
-                        &mut inflight,
-                        w,
-                        target,
-                        cfg.attempt,
-                        &ns,
-                        speculate,
-                    );
+                    refill.push(w);
                 }
             }
-            Some(Up::ReduceDone { done, .. }) => {
+            Up::ReduceDone { done, .. } => {
                 let w = done.worker;
                 inflight[w] = inflight[w].saturating_sub(1);
                 ctx.on_reduce_done(*done);
                 if ctx.is_complete() {
                     shutdown_all(&links, &mut retired);
                 } else {
-                    top_up(
-                        &mut ctx,
-                        &links,
-                        &mut retired,
-                        &mut inflight,
-                        w,
-                        target,
-                        cfg.attempt,
-                        &ns,
-                        speculate,
-                    );
+                    refill.push(w);
                 }
             }
-            Some(Up::Lost { worker, error: _ })
+            Up::Lost { worker, error: _ }
                 if elastic && !ctx.is_complete() =>
             {
                 // Elastic loss absorption: the dead slot's queued work
@@ -1492,8 +1536,7 @@ pub fn run_cluster(
                     }
                 }
             }
-            Some(Up::TaskFailed { error, .. })
-            | Some(Up::Lost { error, .. }) => {
+            Up::TaskFailed { error, .. } | Up::Lost { error, .. } => {
                 // A failure arriving after the statistic is fully
                 // collected can only come from a dead speculative copy
                 // (or a link dropping during the drain): the job's
@@ -1505,7 +1548,7 @@ pub fn run_cluster(
                 // and stops at the Shutdown marker.
                 shutdown_all(&links, &mut retired);
             }
-            Some(Up::Drained { worker, returned: _ }) => {
+            Up::Drained { worker, returned: _ } => {
                 // Graceful departure (`bts drain` or a SIGTERMed
                 // worker): its returned queue and sole-carrier
                 // in-flight units redistribute over the survivors. The
@@ -1541,8 +1584,10 @@ pub fn run_cluster(
                 }
             }
             // Solo runs never send Abort, so acks cannot arrive.
-            Some(Up::Aborted { .. }) => {}
-            Some(Up::Exited { worker, executed, clean }) => {
+            Up::Aborted { .. } => {}
+            // Batches were unpacked into the events vector above.
+            Up::DoneBatch(_) => unreachable!("batches unpack above"),
+            Up::Exited { worker, executed, clean } => {
                 let lost_mid_job = !clean
                     && worker_stats[worker].is_none()
                     && !ctx.is_complete();
@@ -1587,6 +1632,40 @@ pub fn run_cluster(
                         shutdown_all(&links, &mut retired);
                     }
                 }
+            }
+            }
+        }
+        // Deferred refill pass: one top_up per worker that freed
+        // slots this wakeup (top_up skips retired/complete slots).
+        if refill_all {
+            for slot in 0..links.len() {
+                top_up(
+                    &mut ctx,
+                    &links,
+                    &mut retired,
+                    &mut inflight,
+                    slot,
+                    target,
+                    cfg.attempt,
+                    &ns,
+                    speculate,
+                );
+            }
+        } else if !refill.is_empty() {
+            refill.sort_unstable();
+            refill.dedup();
+            for w in refill {
+                top_up(
+                    &mut ctx,
+                    &links,
+                    &mut retired,
+                    &mut inflight,
+                    w,
+                    target,
+                    cfg.attempt,
+                    &ns,
+                    speculate,
+                );
             }
         }
         // Membership plane: absorb joins, route drain requests. A
@@ -1738,7 +1817,15 @@ pub fn run_cluster(
     }
 
     // ---- shuffle sanity + reduce (on the leader, via the backend) -------
-    let fin = ctx.finish(backend.as_ref())?;
+    let mut fin = ctx.finish(backend.as_ref())?;
+    // The wire counters live with the run, not the job context — the
+    // pumps kept writing (acks, pings) while the context was blind to
+    // the transport. Zero for purely in-proc runs (mpsc is not a wire).
+    let wire = net.totals();
+    fin.report.frames_sent = wire.frames_sent;
+    fin.report.frames_batched = wire.frames_batched;
+    fin.report.wire_bytes = wire.wire_bytes;
+    fin.report.blocks_zero_copy = wire.blocks_zero_copy;
     Ok(ExecResult {
         output: fin.output,
         report: fin.report,

@@ -87,7 +87,7 @@ commands:
   run [--config F] [--set k=v]...   run a real job (PJRT execution)
   exec [--workload W] [--workers N] [--samples N] [--sizing S]
        [--cache-mb MB] [--affinity on|off] [--speculate on|off]
-       [--straggler-pct P] [--out-json FILE]
+       [--straggler-pct P] [--out-json FILE] [--batch on|off]
        [--reduce-tasks R] [--partitioner hash|skew]
        [--listen ADDR --workers-remote N] [--elastic on|off]
        [--heartbeat-ms MS] [--straggler-poll-ms MS]
@@ -427,6 +427,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
             "--elastic",
             "--heartbeat-ms",
             "--straggler-poll-ms",
+            "--batch",
         ],
     )?;
     let w = workload_flag(&f)?;
@@ -437,6 +438,10 @@ fn cmd_exec(args: &[String]) -> Result<()> {
     let (speculate, straggler_pct) = speculation_flags(&f)?;
     let (reduce_tasks, partitioner) = reduce_flags(&f)?;
     let (elastic, heartbeat_ms, straggler_poll_ms) = elastic_flags(&f)?;
+    // --batch off reproduces the historical one-frame-per-task wire
+    // behaviour (the CI equivalence gate diffs the two). The window
+    // itself is the scheduler refill window — there is no size knob.
+    let batch = on_off_flag(&f, "--batch", true)?;
     let remote = remote_flags(&f, elastic)?;
     let backend = Arc::new(Backend::auto());
     let params = backend.manifest().params.clone();
@@ -468,6 +473,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         partitioner,
         elastic,
         heartbeat_ms,
+        batch_dispatch: batch,
         ..Default::default()
     };
     let ds = bts::workloads::build_small(w, &params, samples);
@@ -512,12 +518,32 @@ fn cmd_exec(args: &[String]) -> Result<()> {
     );
     print_output(&r.output);
     if let Some(out) = f.get("--out-json") {
+        use bts::util::json::{num, obj};
         if let Some(dir) = std::path::Path::new(out).parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        std::fs::write(out, output_json(&r.output).to_string_pretty())?;
+        // Two subtrees: "output" is the deterministic job statistic
+        // (what equivalence gates diff), "data_plane" the wire
+        // counters (which legitimately differ between batched and
+        // unbatched runs).
+        let rec = obj(vec![
+            ("output", output_json(&r.output)),
+            (
+                "data_plane",
+                obj(vec![
+                    ("frames_sent", num(r.report.frames_sent as f64)),
+                    ("frames_batched", num(r.report.frames_batched as f64)),
+                    ("wire_bytes", num(r.report.wire_bytes as f64)),
+                    (
+                        "blocks_zero_copy",
+                        num(r.report.blocks_zero_copy as f64),
+                    ),
+                ]),
+            ),
+        ]);
+        std::fs::write(out, rec.to_string_pretty())?;
         println!("wrote {out}");
     }
     let path = bts::util::bench_record::write("exec", vec![r.metrics_json()])?;

@@ -35,7 +35,8 @@ use std::time::Duration;
 use crate::dfs::Dfs;
 use crate::error::{Error, Result};
 use crate::net::protocol::{
-    configure_stream, Message, HANDSHAKE_TIMEOUT, PROTOCOL_VERSION,
+    configure_stream, Message, NetCounters, HANDSHAKE_TIMEOUT,
+    PROTOCOL_VERSION,
 };
 use crate::scheduler::ResponseTimeTracker;
 use crate::transport::{Down, PumpCfg, Up, WorkerLink};
@@ -63,6 +64,9 @@ impl Acceptor {
     /// sequentially from `first_slot`; the first `initial_quota`
     /// Hellos are always admitted (they are the statically requested
     /// `--workers-remote` set), later ones only when `elastic`.
+    /// Every adopted link's pump reports its wire traffic into
+    /// `counters` (one instance per leader, not a global).
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         listener: Arc<TcpListener>,
         first_slot: usize,
@@ -72,6 +76,7 @@ impl Acceptor {
         up: mpsc::Sender<Up>,
         tracker: Option<Arc<ResponseTimeTracker>>,
         pump: PumpCfg,
+        counters: Arc<NetCounters>,
     ) -> Result<Acceptor> {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -89,6 +94,7 @@ impl Acceptor {
                     up,
                     tracker,
                     pump,
+                    counters,
                     &ev_tx,
                     &loop_stop,
                 );
@@ -137,6 +143,7 @@ fn accept_loop(
     up: mpsc::Sender<Up>,
     tracker: Option<Arc<ResponseTimeTracker>>,
     pump: PumpCfg,
+    counters: Arc<NetCounters>,
     events: &mpsc::Sender<MemberEvent>,
     stop: &AtomicBool,
 ) {
@@ -178,6 +185,7 @@ fn accept_loop(
                         up.clone(),
                         tracker.clone(),
                         pump,
+                        counters.clone(),
                     ) {
                         Ok(link) => {
                             admitted += 1;
@@ -264,6 +272,7 @@ mod tests {
             up_tx,
             None,
             PumpCfg::default(),
+            Arc::new(NetCounters::default()),
         )
         .unwrap();
         // First Hello: inside the quota — welcomed as slot 3.
@@ -315,6 +324,7 @@ mod tests {
             up_tx,
             None,
             PumpCfg::default(),
+            Arc::new(NetCounters::default()),
         )
         .unwrap();
         // Quota is zero, but elastic admits anyway.

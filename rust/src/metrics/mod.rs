@@ -84,6 +84,16 @@ pub struct JobReport {
     pub cache_hit_rate: f64,
     pub final_rf: usize,
     pub restarts: u32,
+    /// Data-plane wire counters (see `net::protocol::NetCounters`).
+    /// All four stay 0 for in-proc runs — mpsc links are not a wire.
+    pub frames_sent: u64,
+    /// Tasks/completions that rode a TaskBatch/DoneBatch frame instead
+    /// of paying their own frame + flush.
+    pub frames_batched: u64,
+    pub wire_bytes: u64,
+    /// DfsBlock/DfsPut payloads written vectored straight from the
+    /// shared `Arc<Vec<u8>>` — no staging copy.
+    pub blocks_zero_copy: u64,
 }
 
 impl JobReport {
@@ -126,6 +136,10 @@ impl JobReport {
             ("cache_hit_rate", num(self.cache_hit_rate)),
             ("final_rf", num(self.final_rf as f64)),
             ("restarts", num(self.restarts as f64)),
+            ("frames_sent", num(self.frames_sent as f64)),
+            ("frames_batched", num(self.frames_batched as f64)),
+            ("wire_bytes", num(self.wire_bytes as f64)),
+            ("blocks_zero_copy", num(self.blocks_zero_copy as f64)),
         ])
     }
 
@@ -383,6 +397,10 @@ mod tests {
             cache_hit_rate: 0.5,
             final_rf: 3,
             restarts: 0,
+            frames_sent: 0,
+            frames_batched: 0,
+            wire_bytes: 0,
+            blocks_zero_copy: 0,
         };
         assert!((r.throughput_mbs() - 5.0).abs() < 1e-9);
         assert!(r.render().contains("5.00 MB/s"));

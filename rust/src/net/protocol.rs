@@ -16,8 +16,9 @@
 //! shared block cache, and adaptive replication all still apply to
 //! them.
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -29,7 +30,8 @@ use crate::kneepoint::PackedTask;
 use crate::reduce::Partitioner;
 use crate::scheduler::TaskSpec;
 use crate::transport::{
-    Down, ReduceDone, ReduceEnvelope, ReduceSpec, TaskDone, TaskEnvelope, Up,
+    DoneItem, Down, ReduceDone, ReduceEnvelope, ReduceSpec, TaskDone,
+    TaskEnvelope, Up,
 };
 
 /// First bytes of every frame; rejects cross-protocol connections.
@@ -161,6 +163,19 @@ const TAG_LEADER_STATS: u8 = 24;
 const TAG_JOB_DONE: u8 = 25;
 const TAG_STATS_REQ: u8 = 26;
 const TAG_KILL_LEADER: u8 = 27;
+const TAG_TASK_BATCH: u8 = 28;
+const TAG_DONE_BATCH: u8 = 29;
+
+/// Smallest possible encoded [`TaskEnvelope`] (empty ns, no sample
+/// ids); used to guard batch counts against lying frames. Kept
+/// conservatively below the true minimum so a future field removal
+/// cannot silently turn valid frames into rejects.
+const TASK_ENV_MIN_BYTES: usize = 32;
+
+/// Smallest possible encoded [`DoneItem`] (netflix partial with an
+/// empty stats vector); same conservative-guard role as
+/// [`TASK_ENV_MIN_BYTES`].
+const DONE_ITEM_MIN_BYTES: usize = 64;
 
 /// One leader's load digest as carried by [`Message::LeaderStats`]:
 /// the front-door's shard map row (DESIGN.md §15).
@@ -196,7 +211,11 @@ pub enum Message {
     /// Worker → leader: fetch one block from the replicated store.
     DfsGet { key: String },
     /// Worker → leader: publish one block into the replicated store.
-    DfsPut { key: String, data: Vec<u8> },
+    /// Carries an `Arc` for the same reason as `DfsBlock`: the encode
+    /// side writes straight from the shared buffer, and the decode
+    /// side hands the single received allocation to `Dfs::put`
+    /// without re-owning the bytes.
+    DfsPut { key: String, data: Arc<Vec<u8>> },
     /// Leader → worker: `DfsGet` answer. Carries the store's `Arc`
     /// so serving a block to a remote worker never deep-copies it
     /// before the unavoidable frame-buffer write.
@@ -482,135 +501,219 @@ fn decode_output(c: &mut Cursor) -> Result<JobOutput> {
     }
 }
 
+/// Body of one [`TaskEnvelope`] — shared by the single-task frame and
+/// the batched frame so the two grammars cannot drift.
+fn encode_task_env(out: &mut Vec<u8>, t: &TaskEnvelope) {
+    put_u64(out, t.job);
+    put_u32(out, t.attempt);
+    put_str(out, &t.ns);
+    out.push(u8::from(t.poison));
+    put_u64(out, t.spec.task.seq as u64);
+    put_u32(out, t.spec.task.units);
+    put_u64(out, t.spec.task.bytes as u64);
+    out.push(workload_tag(t.spec.workload));
+    put_u64(out, t.spec.seed);
+    put_u32(out, t.spec.task.sample_ids.len() as u32);
+    for &id in &t.spec.task.sample_ids {
+        put_u64(out, id);
+    }
+}
+
+fn decode_task_env(c: &mut Cursor) -> Result<TaskEnvelope> {
+    let job = c.u64()?;
+    let attempt = c.u32()?;
+    let ns: Arc<str> = c.str()?.into();
+    let poison = c.bool()?;
+    let seq = c.u64()? as usize;
+    let units = c.u32()?;
+    let bytes = c.u64()? as usize;
+    let workload = workload_from(c.u8()?)?;
+    let seed = c.u64()?;
+    let n = c.count(8)?;
+    let mut sample_ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        sample_ids.push(c.u64()?);
+    }
+    Ok(TaskEnvelope {
+        job,
+        attempt,
+        ns,
+        spec: TaskSpec {
+            task: PackedTask { seq, sample_ids, units, bytes },
+            workload,
+            seed,
+        },
+        poison,
+    })
+}
+
+/// Body of one completed-task ack (job, attempt, [`TaskDone`]) —
+/// shared by `TAG_DONE` and `TAG_DONE_BATCH`.
+fn encode_done_item(out: &mut Vec<u8>, job: u64, attempt: u32, d: &TaskDone) {
+    put_u64(out, job);
+    put_u32(out, attempt);
+    put_u32(out, d.worker as u32);
+    put_u64(out, d.seq as u64);
+    encode_partial(out, &d.partial);
+    put_f64(out, d.fetch_s);
+    put_f64(out, d.exec_s);
+    put_f64(out, d.queue_wait_s);
+    put_u64(out, d.prefetch_hits);
+    put_u64(out, d.prefetch_misses);
+    put_u64(out, d.cache_hits);
+    put_u64(out, d.cache_misses);
+}
+
+fn decode_done_item(c: &mut Cursor) -> Result<DoneItem> {
+    let job = c.u64()?;
+    let attempt = c.u32()?;
+    let worker = c.u32()? as usize;
+    let seq = c.u64()? as usize;
+    let partial = decode_partial(c)?;
+    let done = TaskDone {
+        worker,
+        seq,
+        partial,
+        fetch_s: c.f64()?,
+        exec_s: c.f64()?,
+        queue_wait_s: c.f64()?,
+        prefetch_hits: c.u64()?,
+        prefetch_misses: c.u64()?,
+        cache_hits: c.u64()?,
+        cache_misses: c.u64()?,
+    };
+    Ok(DoneItem { job, attempt, done })
+}
+
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode the payload (tag + body) into `out`, which is cleared
+    /// first — the send path reuses one scratch buffer per link
+    /// instead of allocating a fresh `Vec` per frame.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         match self {
             Message::Hello { worker } => {
                 out.push(TAG_HELLO);
-                put_u32(&mut out, *worker);
+                put_u32(out, *worker);
             }
             Message::Welcome { worker } => {
                 out.push(TAG_WELCOME);
-                put_u32(&mut out, *worker);
+                put_u32(out, *worker);
             }
             Message::Down(Down::Task(t)) => {
                 out.push(TAG_TASK);
-                put_u64(&mut out, t.job);
-                put_u32(&mut out, t.attempt);
-                put_str(&mut out, &t.ns);
-                out.push(u8::from(t.poison));
-                put_u64(&mut out, t.spec.task.seq as u64);
-                put_u32(&mut out, t.spec.task.units);
-                put_u64(&mut out, t.spec.task.bytes as u64);
-                out.push(workload_tag(t.spec.workload));
-                put_u64(&mut out, t.spec.seed);
-                put_u32(&mut out, t.spec.task.sample_ids.len() as u32);
-                for &id in &t.spec.task.sample_ids {
-                    put_u64(&mut out, id);
+                encode_task_env(out, t);
+            }
+            Message::Down(Down::TaskBatch(ts)) => {
+                out.push(TAG_TASK_BATCH);
+                put_u32(out, ts.len() as u32);
+                for t in ts {
+                    encode_task_env(out, t);
+                }
+            }
+            Message::Up(Up::DoneBatch(items)) => {
+                out.push(TAG_DONE_BATCH);
+                put_u32(out, items.len() as u32);
+                for it in items {
+                    encode_done_item(out, it.job, it.attempt, &it.done);
                 }
             }
             Message::Down(Down::Reduce(r)) => {
                 out.push(TAG_REDUCE_TASK);
-                put_u64(&mut out, r.job);
-                put_u32(&mut out, r.attempt);
-                put_str(&mut out, &r.ns);
-                put_u32(&mut out, r.spec.partition);
-                put_u32(&mut out, r.spec.partitions);
-                put_u32(&mut out, r.spec.n_tasks);
+                put_u64(out, r.job);
+                put_u32(out, r.attempt);
+                put_str(out, &r.ns);
+                put_u32(out, r.spec.partition);
+                put_u32(out, r.spec.partitions);
+                put_u32(out, r.spec.n_tasks);
                 out.push(workload_tag(r.spec.workload));
-                put_u32(&mut out, r.spec.keys.len() as u32);
+                put_u32(out, r.spec.keys.len() as u32);
                 for &k in &r.spec.keys {
-                    put_u32(&mut out, k);
+                    put_u32(out, k);
                 }
             }
             Message::Down(Down::Abort { job, upto_attempt }) => {
                 out.push(TAG_ABORT);
-                put_u64(&mut out, *job);
-                put_u32(&mut out, *upto_attempt);
+                put_u64(out, *job);
+                put_u32(out, *upto_attempt);
             }
             Message::Down(Down::Shutdown) => out.push(TAG_SHUTDOWN),
             Message::Down(Down::Drain) => out.push(TAG_DRAIN),
             Message::Up(Up::Done { job, attempt, done }) => {
                 out.push(TAG_DONE);
-                put_u64(&mut out, *job);
-                put_u32(&mut out, *attempt);
-                put_u32(&mut out, done.worker as u32);
-                put_u64(&mut out, done.seq as u64);
-                encode_partial(&mut out, &done.partial);
-                put_f64(&mut out, done.fetch_s);
-                put_f64(&mut out, done.exec_s);
-                put_f64(&mut out, done.queue_wait_s);
-                put_u64(&mut out, done.prefetch_hits);
-                put_u64(&mut out, done.prefetch_misses);
-                put_u64(&mut out, done.cache_hits);
-                put_u64(&mut out, done.cache_misses);
+                encode_done_item(out, *job, *attempt, done);
             }
             Message::Up(Up::ReduceDone { job, attempt, done }) => {
                 out.push(TAG_REDUCE_DONE);
-                put_u64(&mut out, *job);
-                put_u32(&mut out, *attempt);
-                put_u32(&mut out, done.worker as u32);
-                put_u32(&mut out, done.partition);
-                encode_partial(&mut out, &done.partial);
-                put_f64(&mut out, done.fetch_s);
-                put_f64(&mut out, done.exec_s);
-                put_f64(&mut out, done.queue_wait_s);
-                put_u64(&mut out, done.shuffle_bytes);
+                put_u64(out, *job);
+                put_u32(out, *attempt);
+                put_u32(out, done.worker as u32);
+                put_u32(out, done.partition);
+                encode_partial(out, &done.partial);
+                put_f64(out, done.fetch_s);
+                put_f64(out, done.exec_s);
+                put_f64(out, done.queue_wait_s);
+                put_u64(out, done.shuffle_bytes);
             }
             Message::Up(Up::TaskFailed { job, attempt, worker, error }) => {
                 out.push(TAG_TASK_FAILED);
-                put_u64(&mut out, *job);
-                put_u32(&mut out, *attempt);
-                put_u32(&mut out, *worker as u32);
-                put_str(&mut out, &error.to_string());
+                put_u64(out, *job);
+                put_u32(out, *attempt);
+                put_u32(out, *worker as u32);
+                put_str(out, &error.to_string());
             }
             Message::Up(Up::Aborted { worker, dropped }) => {
                 out.push(TAG_ABORTED);
-                put_u32(&mut out, *worker as u32);
-                put_u64(&mut out, *dropped);
+                put_u32(out, *worker as u32);
+                put_u64(out, *dropped);
             }
             Message::Up(Up::Exited { worker, executed, clean }) => {
                 out.push(TAG_EXITED);
-                put_u32(&mut out, *worker as u32);
-                put_u64(&mut out, *executed);
+                put_u32(out, *worker as u32);
+                put_u64(out, *executed);
                 out.push(u8::from(*clean));
             }
             Message::Up(Up::Drained { worker, returned }) => {
                 out.push(TAG_DRAINED);
-                put_u32(&mut out, *worker as u32);
-                put_u64(&mut out, *returned);
+                put_u32(out, *worker as u32);
+                put_u64(out, *returned);
             }
             Message::Up(Up::Lost { .. }) => {
                 unreachable!("Up::Lost is leader-side only, never framed")
             }
             Message::DfsGet { key } => {
                 out.push(TAG_DFS_GET);
-                put_str(&mut out, key);
+                put_str(out, key);
             }
             Message::DfsPut { key, data } => {
                 out.push(TAG_DFS_PUT);
-                put_str(&mut out, key);
-                put_bytes(&mut out, data);
+                put_str(out, key);
+                put_bytes(out, data);
             }
             Message::DfsBlock { key, data } => {
                 out.push(TAG_DFS_BLOCK);
-                put_str(&mut out, key);
-                put_bytes(&mut out, data);
+                put_str(out, key);
+                put_bytes(out, data);
             }
             Message::DfsMiss { key, message } => {
                 out.push(TAG_DFS_MISS);
-                put_str(&mut out, key);
-                put_str(&mut out, message);
+                put_str(out, key);
+                put_str(out, message);
             }
             Message::Ping => out.push(TAG_PING),
             Message::Error { message } => {
                 out.push(TAG_ERROR);
-                put_str(&mut out, message);
+                put_str(out, message);
             }
             Message::DrainWorker { worker } => {
                 out.push(TAG_DRAIN_REQ);
-                put_u32(&mut out, *worker);
+                put_u32(out, *worker);
             }
             Message::SubmitJob {
                 tenant,
@@ -622,87 +725,89 @@ impl Message {
                 partitioner,
             } => {
                 out.push(TAG_SUBMIT_JOB);
-                put_str(&mut out, tenant);
+                put_str(out, tenant);
                 out.push(workload_tag(*workload));
-                put_u64(&mut out, *samples);
-                put_u64(&mut out, *seed);
+                put_u64(out, *samples);
+                put_u64(out, *seed);
                 match deadline_s {
                     Some(d) => {
                         out.push(1);
-                        put_f64(&mut out, *d);
+                        put_f64(out, *d);
                     }
                     None => out.push(0),
                 }
-                put_u32(&mut out, *reduce_tasks);
+                put_u32(out, *reduce_tasks);
                 out.push(partitioner_tag(*partitioner));
             }
             Message::JobRouted { job, leader, spilled } => {
                 out.push(TAG_JOB_ROUTED);
-                put_u64(&mut out, *job);
-                put_u32(&mut out, *leader);
+                put_u64(out, *job);
+                put_u32(out, *leader);
                 out.push(u8::from(*spilled));
             }
             Message::Shed { retry_after_s, reason } => {
                 out.push(TAG_SHED);
-                put_f64(&mut out, *retry_after_s);
-                put_str(&mut out, reason);
+                put_f64(out, *retry_after_s);
+                put_str(out, reason);
             }
             Message::LeaderStats { stats } => {
                 out.push(TAG_LEADER_STATS);
-                put_u32(&mut out, stats.len() as u32);
+                put_u32(out, stats.len() as u32);
                 for s in stats {
-                    put_u32(&mut out, s.leader);
+                    put_u32(out, s.leader);
                     out.push(u8::from(s.alive));
-                    put_u32(&mut out, s.active);
-                    put_u32(&mut out, s.queued);
-                    put_u64(&mut out, s.completed);
+                    put_u32(out, s.active);
+                    put_u32(out, s.queued);
+                    put_u64(out, s.completed);
                 }
             }
             Message::JobDone { job, output } => {
                 out.push(TAG_JOB_DONE);
-                put_u64(&mut out, *job);
-                encode_output(&mut out, output);
+                put_u64(out, *job);
+                encode_output(out, output);
             }
             Message::StatsReq => out.push(TAG_STATS_REQ),
             Message::KillLeader { leader } => {
                 out.push(TAG_KILL_LEADER);
-                put_u32(&mut out, *leader);
+                put_u32(out, *leader);
             }
         }
-        out
     }
 
     pub fn decode(payload: &[u8]) -> Result<Message> {
         let mut c = Cursor { buf: payload, off: 0 };
-        let msg = match c.u8()? {
+        let tag = c.u8()?;
+        let msg = Self::decode_body(tag, &mut c)?;
+        c.done()?;
+        Ok(msg)
+    }
+
+    /// Decode one payload body given its already-consumed tag — the
+    /// shared core of [`Message::decode`] and [`FrameReader::read`]
+    /// (which peels the tag off the stream so data-plane payloads can
+    /// bypass the scratch buffer).
+    fn decode_body(tag: u8, c: &mut Cursor) -> Result<Message> {
+        let msg = match tag {
             TAG_HELLO => Message::Hello { worker: c.u32()? },
             TAG_WELCOME => Message::Welcome { worker: c.u32()? },
             TAG_TASK => {
-                let job = c.u64()?;
-                let attempt = c.u32()?;
-                let ns: Arc<str> = c.str()?.into();
-                let poison = c.bool()?;
-                let seq = c.u64()? as usize;
-                let units = c.u32()?;
-                let bytes = c.u64()? as usize;
-                let workload = workload_from(c.u8()?)?;
-                let seed = c.u64()?;
-                let n = c.count(8)?;
-                let mut sample_ids = Vec::with_capacity(n);
+                Message::Down(Down::Task(Box::new(decode_task_env(c)?)))
+            }
+            TAG_TASK_BATCH => {
+                let n = c.count(TASK_ENV_MIN_BYTES)?;
+                let mut ts = Vec::with_capacity(n);
                 for _ in 0..n {
-                    sample_ids.push(c.u64()?);
+                    ts.push(decode_task_env(c)?);
                 }
-                Message::Down(Down::Task(Box::new(TaskEnvelope {
-                    job,
-                    attempt,
-                    ns,
-                    spec: TaskSpec {
-                        task: PackedTask { seq, sample_ids, units, bytes },
-                        workload,
-                        seed,
-                    },
-                    poison,
-                })))
+                Message::Down(Down::TaskBatch(ts))
+            }
+            TAG_DONE_BATCH => {
+                let n = c.count(DONE_ITEM_MIN_BYTES)?;
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    items.push(decode_done_item(c)?);
+                }
+                Message::Up(Up::DoneBatch(items))
             }
             TAG_REDUCE_TASK => {
                 let job = c.u64()?;
@@ -742,31 +847,19 @@ impl Message {
             }),
             TAG_DRAIN_REQ => Message::DrainWorker { worker: c.u32()? },
             TAG_DONE => {
-                let job = c.u64()?;
-                let attempt = c.u32()?;
-                let worker = c.u32()? as usize;
-                let seq = c.u64()? as usize;
-                let partial = decode_partial(&mut c)?;
-                let done = TaskDone {
-                    worker,
-                    seq,
-                    partial,
-                    fetch_s: c.f64()?,
-                    exec_s: c.f64()?,
-                    queue_wait_s: c.f64()?,
-                    prefetch_hits: c.u64()?,
-                    prefetch_misses: c.u64()?,
-                    cache_hits: c.u64()?,
-                    cache_misses: c.u64()?,
-                };
-                Message::Up(Up::Done { job, attempt, done: Box::new(done) })
+                let it = decode_done_item(c)?;
+                Message::Up(Up::Done {
+                    job: it.job,
+                    attempt: it.attempt,
+                    done: Box::new(it.done),
+                })
             }
             TAG_REDUCE_DONE => {
                 let job = c.u64()?;
                 let attempt = c.u32()?;
                 let worker = c.u32()? as usize;
                 let partition = c.u32()?;
-                let partial = decode_partial(&mut c)?;
+                let partial = decode_partial(c)?;
                 let done = ReduceDone {
                     worker,
                     partition,
@@ -800,9 +893,10 @@ impl Message {
                 clean: c.bool()?,
             }),
             TAG_DFS_GET => Message::DfsGet { key: c.str()? },
-            TAG_DFS_PUT => {
-                Message::DfsPut { key: c.str()?, data: c.bytes()? }
-            }
+            TAG_DFS_PUT => Message::DfsPut {
+                key: c.str()?,
+                data: Arc::new(c.bytes()?),
+            },
             TAG_DFS_BLOCK => Message::DfsBlock {
                 key: c.str()?,
                 data: Arc::new(c.bytes()?),
@@ -854,7 +948,7 @@ impl Message {
             }
             TAG_JOB_DONE => {
                 let job = c.u64()?;
-                let output = decode_output(&mut c)?;
+                let output = decode_output(c)?;
                 Message::JobDone { job, output }
             }
             TAG_STATS_REQ => Message::StatsReq,
@@ -863,7 +957,6 @@ impl Message {
                 return Err(Error::Protocol(format!("unknown tag {other}")))
             }
         };
-        c.done()?;
         Ok(msg)
     }
 
@@ -895,27 +988,279 @@ impl Message {
     ) -> Result<Message> {
         let mut header = [0u8; 8];
         read_full(r, &mut header, idle)?;
-        if header[..3] != MAGIC {
-            return Err(Error::Protocol(format!(
-                "bad frame magic {:?} (not a bts peer?)",
-                &header[..3]
-            )));
-        }
-        if header[3] != PROTOCOL_VERSION {
-            return Err(Error::Protocol(format!(
-                "peer speaks protocol version {}, this build speaks {}",
-                header[3], PROTOCOL_VERSION
-            )));
-        }
-        let len = u32::from_le_bytes(header[4..].try_into().unwrap());
-        if len > MAX_FRAME {
-            return Err(Error::Protocol(format!(
-                "frame of {len} bytes exceeds cap"
-            )));
-        }
+        let len = check_header(&header)?;
         let mut payload = vec![0u8; len as usize];
         read_full(r, &mut payload, idle)?;
         Message::decode(&payload)
+    }
+}
+
+/// Validate a frame header (magic, version, length cap) and return
+/// the declared payload length.
+fn check_header(header: &[u8; 8]) -> Result<u32> {
+    if header[..3] != MAGIC {
+        return Err(Error::Protocol(format!(
+            "bad frame magic {:?} (not a bts peer?)",
+            &header[..3]
+        )));
+    }
+    if header[3] != PROTOCOL_VERSION {
+        return Err(Error::Protocol(format!(
+            "peer speaks protocol version {}, this build speaks {}",
+            header[3], PROTOCOL_VERSION
+        )));
+    }
+    let len = u32::from_le_bytes(header[4..].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(Error::Protocol(format!(
+            "frame of {len} bytes exceeds cap"
+        )));
+    }
+    Ok(len)
+}
+
+/// Data-plane counters for one endpoint (a leader's link set, or one
+/// remote worker process). Shared as an `Arc` and bumped by
+/// [`FramedWriter`]; a leader folds the totals into `JobReport` /
+/// `ServeReport` after the run. Deliberately *not* a global static:
+/// parallel jobs in one process (tests, the serve pool, federation
+/// leaders) each get their own instance.
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    /// Frames written (batch frames count once).
+    pub frames_sent: AtomicU64,
+    /// Control messages that crossed inside a batch frame (sum of
+    /// batch lengths) — the dispatch volume that skipped per-message
+    /// framing.
+    pub frames_batched: AtomicU64,
+    /// Total bytes written, headers included.
+    pub wire_bytes: AtomicU64,
+    /// Data-plane frames (`DfsBlock`/`DfsPut`) whose payload bytes
+    /// were emitted straight from the shared `Arc` via vectored
+    /// writes, with no copy into a frame buffer.
+    pub blocks_zero_copy: AtomicU64,
+}
+
+/// One consistent snapshot of [`NetCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetTotals {
+    pub frames_sent: u64,
+    pub frames_batched: u64,
+    pub wire_bytes: u64,
+    pub blocks_zero_copy: u64,
+}
+
+impl NetCounters {
+    pub fn totals(&self) -> NetTotals {
+        NetTotals {
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            frames_batched: self.frames_batched.load(Ordering::Relaxed),
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            blocks_zero_copy: self.blocks_zero_copy.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Write `head` then `body` as one logical frame using vectored I/O,
+/// tolerating partial writes. `IoSlice::advance_slices` is not on the
+/// MSRV, so the advance is done by re-slicing.
+fn write_all_vectored2(
+    w: &mut impl Write,
+    mut head: &[u8],
+    mut body: &[u8],
+) -> Result<()> {
+    while !head.is_empty() || !body.is_empty() {
+        let n = if head.is_empty() {
+            w.write(body)?
+        } else if body.is_empty() {
+            w.write(head)?
+        } else {
+            w.write_vectored(&[IoSlice::new(head), IoSlice::new(body)])?
+        };
+        if n == 0 {
+            return Err(Error::Protocol(
+                "connection closed mid-frame write".into(),
+            ));
+        }
+        let from_head = n.min(head.len());
+        head = &head[from_head..];
+        body = &body[n - from_head..];
+    }
+    Ok(())
+}
+
+/// Owning frame writer for one socket: reuses a single scratch buffer
+/// across sends (no per-frame `Vec`), emits `DfsBlock`/`DfsPut`
+/// payload bytes straight from their shared `Arc<Vec<u8>>` via
+/// [`Write::write_vectored`], and bumps the endpoint's
+/// [`NetCounters`]. Control frames still pay one encode into the
+/// scratch buffer — they are tiny; the data plane is where copies
+/// cost.
+pub struct FramedWriter<W: Write> {
+    w: W,
+    scratch: Vec<u8>,
+    counters: Arc<NetCounters>,
+}
+
+impl<W: Write> FramedWriter<W> {
+    pub fn new(w: W, counters: Arc<NetCounters>) -> Self {
+        FramedWriter { w, scratch: Vec::new(), counters }
+    }
+
+    /// Write one frame and flush. Flushing per send keeps reply
+    /// latency flat; the caller-side batching (one `TaskBatch` /
+    /// `DoneBatch` frame per wakeup) is what collapses flush counts,
+    /// not buffering here.
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        match msg {
+            Message::DfsBlock { key, data } => {
+                self.send_data(TAG_DFS_BLOCK, key, data)
+            }
+            Message::DfsPut { key, data } => {
+                self.send_data(TAG_DFS_PUT, key, data)
+            }
+            _ => {
+                msg.encode_into(&mut self.scratch);
+                let mut header = [0u8; 8];
+                header[..3].copy_from_slice(&MAGIC);
+                header[3] = PROTOCOL_VERSION;
+                header[4..].copy_from_slice(
+                    &(self.scratch.len() as u32).to_le_bytes(),
+                );
+                self.w.write_all(&header)?;
+                self.w.write_all(&self.scratch)?;
+                self.w.flush()?;
+                let coalesced = match msg {
+                    Message::Down(Down::TaskBatch(ts)) => ts.len() as u64,
+                    Message::Up(Up::DoneBatch(items)) => items.len() as u64,
+                    _ => 0,
+                };
+                self.note_sent(8 + self.scratch.len() as u64, coalesced);
+                Ok(())
+            }
+        }
+    }
+
+    /// Zero-copy data-plane send: header + tag + key + data length go
+    /// into the scratch buffer, the block bytes are emitted from the
+    /// `Arc` itself.
+    fn send_data(&mut self, tag: u8, key: &str, data: &[u8]) -> Result<()> {
+        let payload_len = 1 + 4 + key.len() + 4 + data.len();
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&MAGIC);
+        self.scratch.push(PROTOCOL_VERSION);
+        self.scratch
+            .extend_from_slice(&(payload_len as u32).to_le_bytes());
+        self.scratch.push(tag);
+        put_str(&mut self.scratch, key);
+        put_u32(&mut self.scratch, data.len() as u32);
+        write_all_vectored2(&mut self.w, &self.scratch, data)?;
+        self.w.flush()?;
+        self.counters.blocks_zero_copy.fetch_add(1, Ordering::Relaxed);
+        self.note_sent((self.scratch.len() + data.len()) as u64, 0);
+        Ok(())
+    }
+
+    fn note_sent(&self, bytes: u64, coalesced: u64) {
+        self.counters.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.counters.wire_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if coalesced > 0 {
+            self.counters
+                .frames_batched
+                .fetch_add(coalesced, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Owning frame reader for one socket: reuses a single scratch
+/// buffer for control payloads, and reads `DfsBlock`/`DfsPut` block
+/// bytes *once*, directly into the allocation that becomes the final
+/// `Arc<Vec<u8>>` handed to the cache/store — no decode-side copy.
+#[derive(Default)]
+pub struct FrameReader {
+    scratch: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Read one frame with the same idle semantics as
+    /// [`Message::read_deadline`].
+    pub fn read(
+        &mut self,
+        r: &mut impl Read,
+        idle: Option<Duration>,
+    ) -> Result<Message> {
+        let mut header = [0u8; 8];
+        read_full(r, &mut header, idle)?;
+        let len = check_header(&header)? as usize;
+        if len == 0 {
+            return Err(Error::Protocol("empty frame (no tag)".into()));
+        }
+        let mut tag = [0u8; 1];
+        read_full(r, &mut tag, idle)?;
+        let body_len = len - 1;
+        match tag[0] {
+            t @ (TAG_DFS_BLOCK | TAG_DFS_PUT) => {
+                self.read_data_body(r, t, body_len, idle)
+            }
+            t => {
+                self.scratch.resize(body_len, 0);
+                read_full(r, &mut self.scratch, idle)?;
+                let mut c = Cursor { buf: &self.scratch, off: 0 };
+                let msg = Message::decode_body(t, &mut c)?;
+                c.done()?;
+                Ok(msg)
+            }
+        }
+    }
+
+    /// Decode a data-plane body incrementally off the stream: key via
+    /// the scratch buffer, then the block bytes straight into their
+    /// final allocation. Lengths are validated against the frame
+    /// length before any allocation is sized from them.
+    fn read_data_body(
+        &mut self,
+        r: &mut impl Read,
+        tag: u8,
+        body_len: usize,
+        idle: Option<Duration>,
+    ) -> Result<Message> {
+        if body_len < 8 {
+            return Err(Error::Protocol("truncated frame".into()));
+        }
+        let mut lenbuf = [0u8; 4];
+        read_full(r, &mut lenbuf, idle)?;
+        let key_len = u32::from_le_bytes(lenbuf) as usize;
+        if key_len + 8 > body_len {
+            return Err(Error::Protocol(format!(
+                "key of {key_len} bytes exceeds frame"
+            )));
+        }
+        self.scratch.resize(key_len, 0);
+        read_full(r, &mut self.scratch, idle)?;
+        let key = std::str::from_utf8(&self.scratch)
+            .map_err(|_| {
+                Error::Protocol("non-utf8 string in frame".into())
+            })?
+            .to_string();
+        read_full(r, &mut lenbuf, idle)?;
+        let data_len = u32::from_le_bytes(lenbuf) as usize;
+        if data_len != body_len - 8 - key_len {
+            return Err(Error::Protocol(format!(
+                "data length {data_len} disagrees with frame length"
+            )));
+        }
+        let mut data = vec![0u8; data_len];
+        read_full(r, &mut data, idle)?;
+        let data = Arc::new(data);
+        Ok(if tag == TAG_DFS_BLOCK {
+            Message::DfsBlock { key, data }
+        } else {
+            Message::DfsPut { key, data }
+        })
     }
 }
 
@@ -1007,6 +1352,38 @@ mod tests {
                 shuffle_bytes: 4096,
             }),
         })
+    }
+
+    fn sample_task_batch() -> Message {
+        let envs: Vec<TaskEnvelope> = (0..3)
+            .map(|i| {
+                let Message::Down(Down::Task(t)) =
+                    sample_task(Workload::Eaglet)
+                else {
+                    unreachable!()
+                };
+                let mut t = *t;
+                t.spec.task.seq = i;
+                t
+            })
+            .collect();
+        Message::Down(Down::TaskBatch(envs))
+    }
+
+    fn sample_done_batch() -> Message {
+        let items: Vec<DoneItem> = (0..3)
+            .map(|i| {
+                let Message::Up(Up::Done { job, attempt, done }) =
+                    sample_done()
+                else {
+                    unreachable!()
+                };
+                let mut done = *done;
+                done.seq = i;
+                DoneItem { job, attempt, done }
+            })
+            .collect();
+        Message::Up(Up::DoneBatch(items))
     }
 
     fn sample_submit() -> Message {
@@ -1122,7 +1499,7 @@ mod tests {
         round_trip(&Message::DfsGet { key: "j1/eag/7".into() });
         round_trip(&Message::DfsPut {
             key: "j1/eag/8".into(),
-            data: vec![1, 2, 3, 4],
+            data: Arc::new(vec![1, 2, 3, 4]),
         });
         round_trip(&Message::DfsBlock {
             key: "j1/eag/7".into(),
@@ -1162,6 +1539,78 @@ mod tests {
         round_trip(&sample_job_done_netflix());
         round_trip(&Message::StatsReq);
         round_trip(&Message::KillLeader { leader: 1 });
+        round_trip(&sample_task_batch());
+        round_trip(&sample_done_batch());
+        round_trip(&Message::Down(Down::TaskBatch(vec![])));
+        round_trip(&Message::Up(Up::DoneBatch(vec![])));
+    }
+
+    #[test]
+    fn batch_of_one_matches_single_frame_body() {
+        // A 1-element batch and the single-message frame share the
+        // same body encoder; only tag and count differ. Decoding the
+        // batch must reconstruct the identical envelope.
+        let m = sample_task(Workload::NetflixHi);
+        let Message::Down(Down::Task(t)) = &m else { unreachable!() };
+        let batch = Message::Down(Down::TaskBatch(vec![(**t).clone()]));
+        let Message::Down(Down::TaskBatch(back)) =
+            Message::decode(&batch.encode()).unwrap()
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!(back.len(), 1);
+        let single =
+            Message::Down(Down::Task(Box::new(back[0].clone()))).encode();
+        assert_eq!(single, m.encode());
+    }
+
+    #[test]
+    fn framed_writer_and_frame_reader_agree_with_the_vec_path() {
+        // Every message must produce byte-identical frames through
+        // the scratch/vectored writer and decode identically through
+        // the incremental reader — the zero-copy path is an encoding
+        // of the same grammar, not a second grammar.
+        let msgs = vec![
+            Message::Hello { worker: 3 },
+            sample_task(Workload::Eaglet),
+            sample_task_batch(),
+            sample_done(),
+            sample_done_batch(),
+            Message::DfsGet { key: "j1/eag/7".into() },
+            Message::DfsPut {
+                key: "j1/eag/8".into(),
+                data: Arc::new((0..255u8).collect()),
+            },
+            Message::DfsBlock {
+                key: "j1/eag/7".into(),
+                data: Arc::new(vec![42; 4096]),
+            },
+            Message::DfsBlock {
+                key: "empty".into(),
+                data: Arc::new(vec![]),
+            },
+            Message::Ping,
+        ];
+        let counters = Arc::new(NetCounters::default());
+        let mut fw = FramedWriter::new(Vec::new(), counters.clone());
+        let mut classic = Vec::new();
+        for m in &msgs {
+            fw.send(m).unwrap();
+            m.write_to(&mut classic).unwrap();
+        }
+        assert_eq!(fw.w, classic, "writer paths diverged");
+        let mut rd = FrameReader::new();
+        let mut stream = fw.w.as_slice();
+        for m in &msgs {
+            let back = rd.read(&mut stream, None).unwrap();
+            assert_eq!(back.encode(), m.encode(), "reader changed {m:?}");
+        }
+        assert!(stream.is_empty());
+        let t = counters.totals();
+        assert_eq!(t.frames_sent, msgs.len() as u64);
+        assert_eq!(t.wire_bytes, classic.len() as u64);
+        assert_eq!(t.blocks_zero_copy, 3, "DfsPut + 2 DfsBlock");
+        assert_eq!(t.frames_batched, 6, "3 tasks + 3 dones coalesced");
     }
 
     #[test]
@@ -1274,6 +1723,29 @@ mod tests {
         payload.extend_from_slice(&1.0f32.to_le_bytes()); // weight
         payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
         assert!(Message::decode(&payload).is_err());
+        // TaskBatch frame with a lying envelope count.
+        let mut payload = vec![TAG_TASK_BATCH];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
+        assert!(Message::decode(&payload).is_err());
+        // DoneBatch frame with a lying item count.
+        let mut payload = vec![TAG_DONE_BATCH];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
+        payload.extend_from_slice(&[0u8; 64]); // one item's worth
+        assert!(Message::decode(&payload).is_err());
+        // TaskBatch whose inner envelope lies about its id count.
+        let mut payload = vec![TAG_TASK_BATCH];
+        payload.extend_from_slice(&1u32.to_le_bytes()); // one envelope
+        payload.extend_from_slice(&1u64.to_le_bytes()); // job
+        payload.extend_from_slice(&1u32.to_le_bytes()); // attempt
+        put_str(&mut payload, ""); // ns
+        payload.push(0); // poison
+        payload.extend_from_slice(&0u64.to_le_bytes()); // seq
+        payload.extend_from_slice(&1u32.to_le_bytes()); // units
+        payload.extend_from_slice(&64u64.to_le_bytes()); // bytes
+        payload.push(0); // workload
+        payload.extend_from_slice(&7u64.to_le_bytes()); // seed
+        payload.extend_from_slice(&0x00FF_FFFFu32.to_le_bytes()); // lie
+        assert!(Message::decode(&payload).is_err());
         // LeaderStats frame with a lying digest count.
         let mut payload = vec![TAG_LEADER_STATS];
         payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
@@ -1311,8 +1783,13 @@ mod tests {
             sample_reduce_task(Workload::NetflixHi).encode(),
             sample_reduce_done().encode(),
             Message::DfsGet { key: "j2/nfx_hi/41".into() }.encode(),
-            Message::DfsPut { key: "a".into(), data: vec![7; 32] }
-                .encode(),
+            Message::DfsPut {
+                key: "a".into(),
+                data: Arc::new(vec![7; 32]),
+            }
+            .encode(),
+            sample_task_batch().encode(),
+            sample_done_batch().encode(),
             Message::DfsBlock {
                 key: "j2/nfx_hi/41".into(),
                 data: Arc::new(vec![9; 64]),
@@ -1352,6 +1829,34 @@ mod tests {
                 let _ = Message::decode(&bad);
             }
         }
+    }
+
+    #[test]
+    fn frame_reader_rejects_lying_data_plane_lengths() {
+        // Key length claiming more bytes than the frame holds: must
+        // fail before sizing any allocation from it.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(PROTOCOL_VERSION);
+        buf.extend_from_slice(&9u32.to_le_bytes());
+        buf.push(TAG_DFS_BLOCK);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // key len lie
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let err =
+            FrameReader::new().read(&mut buf.as_slice(), None).unwrap_err();
+        assert!(err.to_string().contains("exceeds frame"), "{err}");
+        // Data length disagreeing with the frame length.
+        let good = Message::DfsBlock {
+            key: "k".into(),
+            data: Arc::new(vec![1, 2, 3]),
+        };
+        let mut buf = Vec::new();
+        good.write_to(&mut buf).unwrap();
+        // layout: header(8) tag(1) keylen(4) key(1) datalen(4) data(3)
+        buf[14] ^= 1;
+        let err =
+            FrameReader::new().read(&mut buf.as_slice(), None).unwrap_err();
+        assert!(err.to_string().contains("disagrees"), "{err}");
     }
 
     #[test]

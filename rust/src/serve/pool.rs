@@ -35,7 +35,9 @@ use crate::dfs::{Dfs, LatencyModel};
 use crate::error::{Error, Result};
 use crate::exec::Backend;
 use crate::membership::{Acceptor, MemberEvent};
-use crate::net::protocol::{ACCEPT_TIMEOUT, PING_INTERVAL};
+use crate::net::protocol::{
+    NetCounters, NetTotals, ACCEPT_TIMEOUT, PING_INTERVAL,
+};
 use crate::scheduler::ResponseTimeTracker;
 use crate::transport::{
     teardown, BodyCfg, Down, PumpCfg, RemoteWorkers, Up, WorkerLink,
@@ -125,6 +127,10 @@ pub(crate) struct WorkerPool {
     /// it on, worker departures take the per-tenant ledger re-dispatch
     /// path instead of tenant restarts.
     pub(crate) elastic: bool,
+    /// Pool-lifetime wire counters: every adopted link's pump reports
+    /// into them, so the serve report can surface data-plane volume
+    /// (zero for purely in-proc pools — mpsc is not a wire).
+    net: Arc<NetCounters>,
     links: Vec<WorkerLink>,
     /// Pool-lifetime accept loop (remote pools only). Holds the
     /// listener open past the initial quota so late joiners are
@@ -178,6 +184,7 @@ impl WorkerPool {
             )?);
         }
         let mut acceptor = None;
+        let net = Arc::new(NetCounters::default());
         if let Some(remote) = &cfg.remote {
             let acc = match Acceptor::spawn(
                 remote.listener.clone(),
@@ -188,6 +195,7 @@ impl WorkerPool {
                 up.clone(),
                 Some(tracker.clone()),
                 PumpCfg::from_heartbeat_ms(cfg.heartbeat_ms),
+                net.clone(),
             ) {
                 Ok(acc) => acc,
                 Err(e) => {
@@ -223,9 +231,15 @@ impl WorkerPool {
             affinity: layer.affinity,
             tracker,
             elastic: cfg.elastic,
+            net,
             links,
             acceptor,
         })
+    }
+
+    /// Snapshot of the pool's wire counters (service-lifetime totals).
+    pub(crate) fn net_totals(&self) -> NetTotals {
+        self.net.totals()
     }
 
     /// Next queued membership event, if any (non-blocking). `None`
@@ -333,9 +347,16 @@ mod tests {
         }
         let mut done = 0;
         let mut failed = 0;
-        for _ in 0..3 {
+        while done + failed < 3 {
             match rx.recv().unwrap() {
                 Up::Done { job: 9, attempt: 1, .. } => done += 1,
+                // The worker's ack batcher may coalesce completions.
+                Up::DoneBatch(items) => {
+                    for it in &items {
+                        assert_eq!((it.job, it.attempt), (9, 1));
+                    }
+                    done += items.len();
+                }
                 Up::TaskFailed { job: 9, attempt: 1, .. } => failed += 1,
                 _ => panic!("unexpected pool message"),
             }

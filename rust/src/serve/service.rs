@@ -233,6 +233,17 @@ pub struct ServeReport {
     /// Shared block-cache counters over the whole session, when the
     /// pool ran with `cache_mb > 0` (hit rate, cross-tenant dedup).
     pub cache: Option<CacheStats>,
+    /// Wire frames written by the pool's link pumps over the session
+    /// (zero for purely in-proc pools — mpsc is not a wire).
+    pub frames_sent: u64,
+    /// Control messages that crossed inside `TaskBatch`/`DoneBatch`
+    /// frames (sum of batch lengths).
+    pub frames_batched: u64,
+    /// Total bytes written to worker links, headers included.
+    pub wire_bytes: u64,
+    /// `DfsBlock`/`DfsPut` payloads written vectored straight from
+    /// their shared `Arc` — the copy-free block path.
+    pub blocks_zero_copy: u64,
     /// Job ids in completion order (EDF tests read this).
     pub completed_order: Vec<u64>,
 }
@@ -276,6 +287,10 @@ impl ServeReport {
             ("won_by_clone", num(self.won_by_clone as f64)),
             ("shuffle_bytes", num(self.shuffle_bytes as f64)),
             ("dfs_bytes_served", num(self.dfs_bytes_served as f64)),
+            ("frames_sent", num(self.frames_sent as f64)),
+            ("frames_batched", num(self.frames_batched as f64)),
+            ("wire_bytes", num(self.wire_bytes as f64)),
+            ("blocks_zero_copy", num(self.blocks_zero_copy as f64)),
             // disambiguates "cache off" from "cache on, zero hits" in
             // the cross-PR trajectory
             (
@@ -718,6 +733,7 @@ impl Dispatcher {
         let dfs_bytes_served = self.pool.dfs.bytes_served();
         let dfs_stored_bytes = self.pool.dfs.stored_bytes() as u64;
         let cache = self.pool.dfs.cache_stats();
+        let wire = self.pool.net_totals();
         let pool = self.pool;
         pool.shutdown();
         let mut worker_executed = vec![0u64; workers];
@@ -762,6 +778,10 @@ impl Dispatcher {
             dfs_bytes_served,
             dfs_stored_bytes,
             cache,
+            frames_sent: wire.frames_sent,
+            frames_batched: wire.frames_batched,
+            wire_bytes: wire.wire_bytes,
+            blocks_zero_copy: wire.blocks_zero_copy,
             completed_order: self.completed_order,
         };
         let _ = report_tx.send(report);
@@ -1119,12 +1139,18 @@ impl Dispatcher {
         } else {
             self.target_inflight
         };
-        while !self.dead[w] && self.inflight[w] < target {
+        // Map claims accumulate into one burst — a `TaskBatch` frame
+        // may interleave tenants, since every envelope carries its own
+        // job id and namespace. Reduce dispatches flush the pending
+        // burst first so per-link FIFO order is what a single-frame
+        // dispatcher would have produced.
+        let mut burst: Vec<TaskEnvelope> = Vec::new();
+        while !self.dead[w] && self.inflight[w] + burst.len() < target {
             let n = self.active.len();
             if n == 0 {
-                return;
+                break;
             }
-            let mut sent = false;
+            let mut claimed = false;
             for off in 0..n {
                 let i = (self.rr + off) % n;
                 let job = &mut self.active[i];
@@ -1135,27 +1161,16 @@ impl Dispatcher {
                     });
                     job.dispatched += 1;
                     let (jid, jattempt) = (job.id, job.attempt);
-                    let task = TaskEnvelope {
+                    burst.push(TaskEnvelope {
                         job: jid,
                         attempt: jattempt,
                         ns: job.ns.clone(),
                         spec,
                         poison,
-                    };
+                    });
                     self.rr = (i + 1) % n;
-                    if self.pool.send(w, Down::Task(Box::new(task))) {
-                        self.inflight[w] += 1;
-                        sent = true;
-                        break;
-                    }
-                    // Dead worker link discovered on send: the
-                    // claimed spec just vanished with the message.
-                    // Run the full lost-slot handling here — it
-                    // restarts *every* affected tenant (this job
-                    // included), so the pump's own `Up::Lost`, which
-                    // may lose this race, can safely be a no-op.
-                    self.on_worker_lost(w, "link closed mid-dispatch");
-                    return;
+                    claimed = true;
+                    break;
                 }
                 // Map scheduler dry for this job: claim a shuffled
                 // reduce partition instead (present only once its last
@@ -1168,23 +1183,68 @@ impl Dispatcher {
                         spec: rspec,
                     };
                     self.rr = (i + 1) % n;
+                    if !self.flush_burst(w, &mut burst) {
+                        return;
+                    }
                     if self.pool.send(w, Down::Reduce(Box::new(env))) {
                         self.inflight[w] += 1;
-                        sent = true;
+                        claimed = true;
                         break;
                     }
                     self.on_worker_lost(w, "link closed mid-dispatch");
                     return;
                 }
             }
-            if !sent {
-                return;
+            if !claimed {
+                break;
             }
+        }
+        let _ = self.flush_burst(w, &mut burst);
+    }
+
+    /// Send `w`'s collected map burst as one frame (a plain `Task` for
+    /// a single claim, `TaskBatch` for more). Returns `false` when the
+    /// link died — the claimed specs vanished with the frame, and the
+    /// full lost-slot handling has already run: it restarts *every*
+    /// affected tenant, so the pump's own `Up::Lost`, which may lose
+    /// this race, can safely be a no-op.
+    fn flush_burst(
+        &mut self,
+        w: usize,
+        burst: &mut Vec<TaskEnvelope>,
+    ) -> bool {
+        if burst.is_empty() {
+            return true;
+        }
+        let n = burst.len();
+        let msg = if n == 1 {
+            Down::Task(Box::new(burst.pop().expect("len checked")))
+        } else {
+            Down::TaskBatch(std::mem::take(burst))
+        };
+        if self.pool.send(w, msg) {
+            self.inflight[w] += n;
+            true
+        } else {
+            self.on_worker_lost(w, "link closed mid-dispatch");
+            false
         }
     }
 
     fn handle_up(&mut self, msg: Up) {
         match msg {
+            // A worker's ack batcher coalesced several completions
+            // into one frame: unpack in order — batching changes the
+            // wire, not the dispatcher's bookkeeping.
+            Up::DoneBatch(items) => {
+                for it in items {
+                    self.handle_up(Up::Done {
+                        job: it.job,
+                        attempt: it.attempt,
+                        done: Box::new(it.done),
+                    });
+                }
+            }
             Up::Done { job, attempt, done } => {
                 let w = done.worker;
                 self.inflight[w] = self.inflight[w].saturating_sub(1);

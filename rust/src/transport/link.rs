@@ -33,10 +33,15 @@ use crate::dfs::{BlockSource, Dfs};
 use crate::error::{Error, Result};
 use crate::exec::Backend;
 use crate::net::protocol::{
-    configure_stream, Message, ACCEPT_TIMEOUT, HANDSHAKE_TIMEOUT,
-    PING_INTERVAL, PUMP_IDLE_TIMEOUT,
+    configure_stream, FrameReader, FramedWriter, Message, NetCounters,
+    ACCEPT_TIMEOUT, HANDSHAKE_TIMEOUT, PING_INTERVAL, PUMP_IDLE_TIMEOUT,
 };
 use crate::scheduler::ResponseTimeTracker;
+
+/// The leader-side frame writer for one TCP link: scratch-buffer
+/// encode, vectored data-plane writes, shared between the dispatcher
+/// (Down frames) and the pump (DfsBlock replies) under one lock.
+type LinkWriter = Arc<Mutex<FramedWriter<BufWriter<TcpStream>>>>;
 
 /// Remote map slots for a leader: a pre-bound listener plus how many
 /// workers to accept on it. Binding is the caller's job (so tests can
@@ -99,7 +104,7 @@ impl PumpCfg {
 
 enum LinkSender {
     InProc(mpsc::Sender<Down>),
-    Tcp(Arc<Mutex<BufWriter<TcpStream>>>),
+    Tcp(LinkWriter),
 }
 
 /// The leader's handle to one map slot. `send` is the entire control
@@ -153,6 +158,7 @@ impl WorkerLink {
         dfs: Arc<Dfs>,
         up: mpsc::Sender<Up>,
         tracker: Option<Arc<ResponseTimeTracker>>,
+        counters: Arc<NetCounters>,
     ) -> Result<WorkerLink> {
         configure_stream(&stream)?;
         let mut rd = BufReader::new(stream.try_clone()?);
@@ -172,6 +178,7 @@ impl WorkerLink {
             up,
             tracker,
             PumpCfg::default(),
+            counters,
         )
     }
 
@@ -180,6 +187,9 @@ impl WorkerLink {
     /// peer's `Hello` from `rd` (the membership acceptor does this to
     /// decide admit-vs-refuse before committing a slot). Sends
     /// `Welcome` and spawns the frame pump with the given timing.
+    /// `counters` is the leader endpoint's shared data-plane tally —
+    /// every frame this link writes is accounted there.
+    #[allow(clippy::too_many_arguments)]
     pub fn adopt_handshaken(
         stream: TcpStream,
         rd: BufReader<TcpStream>,
@@ -188,11 +198,15 @@ impl WorkerLink {
         up: mpsc::Sender<Up>,
         tracker: Option<Arc<ResponseTimeTracker>>,
         pump_cfg: PumpCfg,
+        counters: Arc<NetCounters>,
     ) -> Result<WorkerLink> {
-        let wr = Arc::new(Mutex::new(BufWriter::new(stream)));
+        let wr: LinkWriter = Arc::new(Mutex::new(FramedWriter::new(
+            BufWriter::new(stream),
+            counters,
+        )));
         {
             let mut g = wr.lock().unwrap();
-            Message::Welcome { worker: worker as u32 }.write_to(&mut *g)?;
+            g.send(&Message::Welcome { worker: worker as u32 })?;
         }
         let pump_wr = wr.clone();
         let handle = thread::Builder::new()
@@ -225,7 +239,7 @@ impl WorkerLink {
             LinkSender::InProc(tx) => tx.send(msg).is_ok(),
             LinkSender::Tcp(wr) => {
                 let Ok(mut g) = wr.lock() else { return false };
-                Message::Down(msg).write_to(&mut *g).is_ok()
+                g.send(&Message::Down(msg)).is_ok()
             }
         }
     }
@@ -249,7 +263,7 @@ fn pump(
     worker: usize,
     mut rd: BufReader<TcpStream>,
     dfs: Arc<Dfs>,
-    wr: Arc<Mutex<BufWriter<TcpStream>>>,
+    wr: LinkWriter,
     up: mpsc::Sender<Up>,
     tracker: Option<Arc<ResponseTimeTracker>>,
     cfg: PumpCfg,
@@ -261,12 +275,16 @@ fn pump(
         let _ = up.send(Up::Exited { worker, executed: 0, clean: false });
     };
     let mut last_ping: Option<Instant> = None;
+    // Per-pump frame reader: one scratch buffer reused across every
+    // control frame this link ever receives, and DfsPut payloads read
+    // straight into their final Arc.
+    let mut frames = FrameReader::new();
     loop {
         // Idle-bounded read: workers heartbeat ([`Message::Ping`])
         // even mid-task, so several missed intervals means a silently
         // partitioned peer (no FIN/RST will ever come) — surface it
         // as Lost instead of wedging the leader forever.
-        match Message::read_deadline(&mut rd, Some(cfg.idle_timeout)) {
+        match frames.read(&mut rd, Some(cfg.idle_timeout)) {
             Ok(Message::Up(u)) => {
                 let exiting = matches!(u, Up::Exited { .. });
                 if up.send(rewrite_worker(u, worker)).is_err() || exiting {
@@ -300,7 +318,7 @@ fn pump(
                     }
                 };
                 let ok = match wr.lock() {
-                    Ok(mut g) => reply.write_to(&mut *g).is_ok(),
+                    Ok(mut g) => g.send(&reply).is_ok(),
                     Err(_) => false,
                 };
                 if !ok {
@@ -311,7 +329,10 @@ fn pump(
                 }
             }
             Ok(Message::DfsPut { key, data }) => {
-                dfs.put(&key, Arc::new(data));
+                // The Arc built by the frame reader goes into the
+                // store as-is — a remote put is now one allocation
+                // end-to-end (socket read → replica store).
+                dfs.put(&key, data);
             }
             Ok(other) => {
                 lost(Error::Protocol(format!(
@@ -333,6 +354,12 @@ fn rewrite_worker(u: Up, worker: usize) -> Up {
         Up::Done { job, attempt, mut done } => {
             done.worker = worker;
             Up::Done { job, attempt, done }
+        }
+        Up::DoneBatch(mut items) => {
+            for it in &mut items {
+                it.done.worker = worker;
+            }
+            Up::DoneBatch(items)
         }
         Up::ReduceDone { job, attempt, mut done } => {
             done.worker = worker;
@@ -372,6 +399,7 @@ pub fn accept_links(
     dfs: &Arc<Dfs>,
     up: &mpsc::Sender<Up>,
     tracker: Option<Arc<ResponseTimeTracker>>,
+    counters: Arc<NetCounters>,
 ) -> Result<Vec<WorkerLink>> {
     let mut links = Vec::with_capacity(remote.count);
     remote.listener.set_nonblocking(true)?;
@@ -405,6 +433,7 @@ pub fn accept_links(
             dfs.clone(),
             up.clone(),
             tracker.clone(),
+            counters.clone(),
         )?);
     }
     Ok(links)
@@ -439,7 +468,15 @@ mod tests {
         });
         let dfs = Dfs::new(1, 1, LatencyModel::none());
         let (up_tx, _up_rx) = mpsc::channel();
-        let err = accept_links(&rw, 0, &dfs, &up_tx, None).unwrap_err();
+        let err = accept_links(
+            &rw,
+            0,
+            &dfs,
+            &up_tx,
+            None,
+            Arc::new(NetCounters::default()),
+        )
+        .unwrap_err();
         assert!(matches!(err, Error::Protocol(_)), "{err}");
         client.join().unwrap();
     }
@@ -464,7 +501,15 @@ mod tests {
         });
         let dfs = Dfs::new(1, 1, LatencyModel::none());
         let (up_tx, up_rx) = mpsc::channel();
-        let links = accept_links(&rw, 4, &dfs, &up_tx, None).unwrap();
+        let links = accept_links(
+            &rw,
+            4,
+            &dfs,
+            &up_tx,
+            None,
+            Arc::new(NetCounters::default()),
+        )
+        .unwrap();
         client.join().unwrap();
         match up_rx.recv().unwrap() {
             Up::Lost { worker: 4, .. } => {}

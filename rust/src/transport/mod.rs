@@ -108,6 +108,12 @@ pub struct ReduceEnvelope {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Down {
     Task(Box<TaskEnvelope>),
+    /// One scheduler refill window's worth of tasks, dispatched as a
+    /// single message (one frame over TCP, one mpsc send in-proc).
+    /// Semantically identical to the same envelopes sent as
+    /// individual [`Down::Task`]s in order — batching is a transport
+    /// optimization, never a scheduling decision.
+    TaskBatch(Vec<TaskEnvelope>),
     /// A reduce partition to fetch, merge and report. Map and reduce
     /// tasks share the slot: the worker drains its map queue first.
     Reduce(Box<ReduceEnvelope>),
@@ -158,10 +164,25 @@ pub struct ReduceDone {
     pub shuffle_bytes: u64,
 }
 
+/// One completed task inside an [`Up::DoneBatch`] — the fields of
+/// [`Up::Done`] flattened so a batch is a plain vector.
+#[derive(Debug, Clone)]
+pub struct DoneItem {
+    pub job: u64,
+    pub attempt: u32,
+    pub done: TaskDone,
+}
+
 /// Worker → leader control messages, over any transport.
 #[derive(Debug)]
 pub enum Up {
     Done { job: u64, attempt: u32, done: Box<TaskDone> },
+    /// Several completions coalesced into one message by the worker's
+    /// ack batcher. Ordering contract: a worker flushes its pending
+    /// batch before sending *any* other `Up`, so the leader's FIFO
+    /// assumptions (every `Done` precedes the slot's `Drained` /
+    /// `Exited`) hold exactly as they do for singles.
+    DoneBatch(Vec<DoneItem>),
     /// A reduce partition completed (first report per partition wins;
     /// duplicates from speculative clones are dropped by the leader).
     ReduceDone { job: u64, attempt: u32, done: Box<ReduceDone> },
@@ -373,6 +394,65 @@ fn handle_abort<C: WorkerChannel>(
     let _ = chan.send(Up::Aborted { worker, dropped });
 }
 
+/// Worker-side completion batcher: buffers [`TaskDone`]s so a burst
+/// of tiny tasks acks as one [`Up::DoneBatch`] frame instead of one
+/// frame each. Flush points preserve the transport's FIFO semantics:
+/// before any non-`Done` send (so `Drained`/`Exited`/`TaskFailed`
+/// never overtake a buffered completion), before blocking on an
+/// empty queue (no completion is ever held while the slot idles),
+/// and at [`FLUSH_AT`](UpBatcher::FLUSH_AT) pending to bound leader-
+/// visible latency while the queue is deep.
+struct UpBatcher {
+    pending: Vec<DoneItem>,
+}
+
+impl UpBatcher {
+    /// Pending completions that force a flush mid-queue. Matches the
+    /// scheduler's typical refill burst for tiny tasks: deep enough
+    /// to amortize framing, shallow enough that the leader's
+    /// response-time tracker still sees per-burst progress.
+    const FLUSH_AT: usize = 4;
+
+    fn new() -> UpBatcher {
+        UpBatcher { pending: Vec::new() }
+    }
+
+    /// Buffer one completion, flushing if the batch is full. Returns
+    /// `false` when the link is gone.
+    fn push<C: WorkerChannel>(
+        &mut self,
+        chan: &mut C,
+        job: u64,
+        attempt: u32,
+        done: TaskDone,
+    ) -> bool {
+        self.pending.push(DoneItem { job, attempt, done });
+        if self.pending.len() >= Self::FLUSH_AT {
+            self.flush(chan)
+        } else {
+            true
+        }
+    }
+
+    /// Send everything pending: a single completion goes as a plain
+    /// [`Up::Done`] (no batch framing overhead for the common
+    /// trickle), two or more as one [`Up::DoneBatch`].
+    fn flush<C: WorkerChannel>(&mut self, chan: &mut C) -> bool {
+        match self.pending.len() {
+            0 => true,
+            1 => {
+                let it = self.pending.pop().expect("len checked");
+                chan.send(Up::Done {
+                    job: it.job,
+                    attempt: it.attempt,
+                    done: Box::new(it.done),
+                })
+            }
+            _ => chan.send(Up::DoneBatch(std::mem::take(&mut self.pending))),
+        }
+    }
+}
+
 /// The one map-slot loop every transport runs: drain the control
 /// channel into a local queue (so the prefetcher sees upcoming block
 /// keys), execute front-of-queue tasks through the backend, report
@@ -392,6 +472,7 @@ pub fn worker_body<C: WorkerChannel>(
     }
     let mut queue: VecDeque<TaskEnvelope> = VecDeque::new();
     let mut rqueue: VecDeque<ReduceEnvelope> = VecDeque::new();
+    let mut acks = UpBatcher::new();
     let mut executed = 0u64;
     // Tasks popped for execution (turbulence indexes on this, not on
     // `executed`, so an injected fault doesn't re-fire forever).
@@ -406,11 +487,21 @@ pub fn worker_body<C: WorkerChannel>(
                     enqueue_keys(&mut pf, &t.spec, &t.ns);
                     queue.push_back(*t);
                 }
+                Poll::Msg(Down::TaskBatch(ts)) => {
+                    for t in ts {
+                        enqueue_keys(&mut pf, &t.spec, &t.ns);
+                        queue.push_back(t);
+                    }
+                }
                 Poll::Msg(Down::Reduce(r)) => {
                     enqueue_reduce_keys(&mut pf, &r.spec, &r.ns);
                     rqueue.push_back(*r);
                 }
                 Poll::Msg(Down::Abort { job, upto_attempt }) => {
+                    // Completions must precede the abort ack (FIFO).
+                    if !acks.flush(chan) {
+                        break 'outer;
+                    }
                     handle_abort(
                         &mut queue,
                         &mut rqueue,
@@ -425,6 +516,10 @@ pub fn worker_body<C: WorkerChannel>(
                     let returned = (queue.len() + rqueue.len()) as u64;
                     queue.clear();
                     rqueue.clear();
+                    // Every completion this slot produced must reach
+                    // the leader before `Drained` — the ledger
+                    // re-dispatches exactly what isn't acked.
+                    let _ = acks.flush(chan);
                     let _ = chan.send(Up::Drained {
                         worker: cfg.worker,
                         returned,
@@ -446,14 +541,27 @@ pub fn worker_body<C: WorkerChannel>(
             }
         }
         // Idle: block for the next instruction, measuring queue wait.
+        // Nothing queued means nothing left to batch with — flush any
+        // pending completions before sleeping so the leader is never
+        // waiting on acks this slot is sitting on.
         let mut queue_wait_s = 0.0;
         if queue.is_empty() && rqueue.is_empty() {
+            if !acks.flush(chan) {
+                break;
+            }
             let wait_t = Timer::start();
             match chan.recv() {
                 Some(Down::Task(t)) => {
                     queue_wait_s = wait_t.secs();
                     enqueue_keys(&mut pf, &t.spec, &t.ns);
                     queue.push_back(*t);
+                }
+                Some(Down::TaskBatch(ts)) => {
+                    queue_wait_s = wait_t.secs();
+                    for t in ts {
+                        enqueue_keys(&mut pf, &t.spec, &t.ns);
+                        queue.push_back(t);
+                    }
                 }
                 Some(Down::Reduce(r)) => {
                     queue_wait_s = wait_t.secs();
@@ -507,15 +615,16 @@ pub fn worker_body<C: WorkerChannel>(
                     break 'outer;
                 }
                 if d.fail {
-                    let sent = chan.send(Up::TaskFailed {
-                        job: r.job,
-                        attempt: r.attempt,
-                        worker: cfg.worker,
-                        error: Error::Scheduler(format!(
-                            "turbulence fault on worker {} (reduce partition {})",
-                            cfg.worker, r.spec.partition
-                        )),
-                    });
+                    let sent = acks.flush(chan)
+                        && chan.send(Up::TaskFailed {
+                            job: r.job,
+                            attempt: r.attempt,
+                            worker: cfg.worker,
+                            error: Error::Scheduler(format!(
+                                "turbulence fault on worker {} (reduce partition {})",
+                                cfg.worker, r.spec.partition
+                            )),
+                        });
                     if !sent || !cfg.survive_task_errors {
                         break;
                     }
@@ -525,30 +634,32 @@ pub fn worker_body<C: WorkerChannel>(
             match run_reduce_task(params, backend, &mut pf, &r.spec, &r.ns) {
                 Ok((partial, fetch_s, exec_s, shuffle_bytes)) => {
                     executed += 1;
-                    let sent = chan.send(Up::ReduceDone {
-                        job: r.job,
-                        attempt: r.attempt,
-                        done: Box::new(ReduceDone {
-                            worker: cfg.worker,
-                            partition: r.spec.partition,
-                            partial,
-                            fetch_s,
-                            exec_s,
-                            queue_wait_s,
-                            shuffle_bytes,
-                        }),
-                    });
+                    let sent = acks.flush(chan)
+                        && chan.send(Up::ReduceDone {
+                            job: r.job,
+                            attempt: r.attempt,
+                            done: Box::new(ReduceDone {
+                                worker: cfg.worker,
+                                partition: r.spec.partition,
+                                partial,
+                                fetch_s,
+                                exec_s,
+                                queue_wait_s,
+                                shuffle_bytes,
+                            }),
+                        });
                     if !sent {
                         break;
                     }
                 }
                 Err(e) => {
-                    let sent = chan.send(Up::TaskFailed {
-                        job: r.job,
-                        attempt: r.attempt,
-                        worker: cfg.worker,
-                        error: e,
-                    });
+                    let sent = acks.flush(chan)
+                        && chan.send(Up::TaskFailed {
+                            job: r.job,
+                            attempt: r.attempt,
+                            worker: cfg.worker,
+                            error: e,
+                        });
                     if !sent || !cfg.survive_task_errors {
                         break;
                     }
@@ -570,15 +681,16 @@ pub fn worker_body<C: WorkerChannel>(
                 break 'outer;
             }
             if d.fail {
-                let sent = chan.send(Up::TaskFailed {
-                    job: task.job,
-                    attempt: task.attempt,
-                    worker: cfg.worker,
-                    error: Error::Scheduler(format!(
-                        "turbulence fault on worker {} (task {})",
-                        cfg.worker, task.spec.task.seq
-                    )),
-                });
+                let sent = acks.flush(chan)
+                    && chan.send(Up::TaskFailed {
+                        job: task.job,
+                        attempt: task.attempt,
+                        worker: cfg.worker,
+                        error: Error::Scheduler(format!(
+                            "turbulence fault on worker {} (task {})",
+                            cfg.worker, task.spec.task.seq
+                        )),
+                    });
                 if !sent || !cfg.survive_task_errors {
                     break;
                 }
@@ -586,15 +698,16 @@ pub fn worker_body<C: WorkerChannel>(
             }
         }
         if task.poison {
-            let sent = chan.send(Up::TaskFailed {
-                job: task.job,
-                attempt: task.attempt,
-                worker: cfg.worker,
-                error: Error::Scheduler(format!(
-                    "injected task fault in job {} (attempt {}, task {})",
-                    task.job, task.attempt, task.spec.task.seq
-                )),
-            });
+            let sent = acks.flush(chan)
+                && chan.send(Up::TaskFailed {
+                    job: task.job,
+                    attempt: task.attempt,
+                    worker: cfg.worker,
+                    error: Error::Scheduler(format!(
+                        "injected task fault in job {} (attempt {}, task {})",
+                        task.job, task.attempt, task.spec.task.seq
+                    )),
+                });
             if !sent || !cfg.survive_task_errors {
                 break;
             }
@@ -617,11 +730,8 @@ pub fn worker_body<C: WorkerChannel>(
                     cache_hits: pf.cache_hits - ch0,
                     cache_misses: pf.cache_misses - cm0,
                 };
-                let sent = chan.send(Up::Done {
-                    job: task.job,
-                    attempt: task.attempt,
-                    done: Box::new(done),
-                });
+                let sent =
+                    acks.push(chan, task.job, task.attempt, done);
                 if !sent {
                     break;
                 }
@@ -630,32 +740,37 @@ pub fn worker_body<C: WorkerChannel>(
                         && task.attempt == plan.on_attempt
                         && executed >= plan.after_tasks
                     {
-                        let _ = chan.send(Up::TaskFailed {
-                            job: task.job,
-                            attempt: task.attempt,
-                            worker: cfg.worker,
-                            error: Error::Scheduler(format!(
-                                "injected node failure on worker {} after {executed} tasks",
-                                cfg.worker
-                            )),
-                        });
+                        // The buffered `Done` for this task must land
+                        // before the failure report.
+                        let _ = acks.flush(chan)
+                            && chan.send(Up::TaskFailed {
+                                job: task.job,
+                                attempt: task.attempt,
+                                worker: cfg.worker,
+                                error: Error::Scheduler(format!(
+                                    "injected node failure on worker {} after {executed} tasks",
+                                    cfg.worker
+                                )),
+                            });
                         break;
                     }
                 }
             }
             Err(e) => {
-                let sent = chan.send(Up::TaskFailed {
-                    job: task.job,
-                    attempt: task.attempt,
-                    worker: cfg.worker,
-                    error: e,
-                });
+                let sent = acks.flush(chan)
+                    && chan.send(Up::TaskFailed {
+                        job: task.job,
+                        attempt: task.attempt,
+                        worker: cfg.worker,
+                        error: e,
+                    });
                 if !sent || !cfg.survive_task_errors {
                     break;
                 }
             }
         }
     }
+    let _ = acks.flush(chan);
     let _ = chan.send(Up::Exited {
         worker: cfg.worker,
         executed,
@@ -723,9 +838,11 @@ mod tests {
         let mut outcomes = 0;
         while outcomes < want {
             let up = up_rx.recv().expect("body hung up early");
-            if matches!(up, Up::Done { .. } | Up::TaskFailed { .. }) {
-                outcomes += 1;
-            }
+            outcomes += match &up {
+                Up::Done { .. } | Up::TaskFailed { .. } => 1,
+                Up::DoneBatch(items) => items.len(),
+                _ => 0,
+            };
             ups.push(up);
         }
         down_tx.send(Down::Shutdown).unwrap();
@@ -745,10 +862,17 @@ mod tests {
         let (executed, ups) =
             drive(BodyCfg::new(0), params, backend, dfs, downs, n);
         assert_eq!(executed, n as u64);
-        let dones = ups
+        let dones: usize = ups
             .iter()
-            .filter(|u| matches!(u, Up::Done { job: 0, attempt: 1, .. }))
-            .count();
+            .map(|u| match u {
+                Up::Done { job: 0, attempt: 1, .. } => 1,
+                Up::DoneBatch(items) => items
+                    .iter()
+                    .filter(|it| it.job == 0 && it.attempt == 1)
+                    .count(),
+                _ => 0,
+            })
+            .sum();
         assert_eq!(dones, n);
         assert!(ups.iter().any(|u| matches!(
             u,
@@ -773,6 +897,50 @@ mod tests {
             .filter(|u| matches!(u, Up::TaskFailed { worker: 3, .. }))
             .count();
         assert_eq!(failed, 1);
+    }
+
+    #[test]
+    fn task_batch_executes_like_singles_and_acks_in_batches() {
+        let (dfs, specs, backend, params) = staged_job(4);
+        let n = specs.len();
+        let envs: Vec<TaskEnvelope> = specs
+            .into_iter()
+            .map(|s| TaskEnvelope {
+                job: 0,
+                attempt: 1,
+                ns: "".into(),
+                spec: s,
+                poison: false,
+            })
+            .collect();
+        let (executed, ups) = drive(
+            BodyCfg::new(0),
+            params,
+            backend,
+            dfs,
+            vec![Down::TaskBatch(envs)],
+            n,
+        );
+        assert_eq!(executed, n as u64);
+        // A queue at least FLUSH_AT deep must coalesce some acks.
+        if n >= UpBatcher::FLUSH_AT {
+            assert!(
+                ups.iter().any(|u| matches!(u, Up::DoneBatch(_))),
+                "expected at least one batched ack from {n} tasks"
+            );
+        }
+        // And the batch must land before the slot's exit frame.
+        let exit_at = ups
+            .iter()
+            .position(|u| matches!(u, Up::Exited { .. }))
+            .expect("missing Exited");
+        let last_done = ups
+            .iter()
+            .rposition(|u| {
+                matches!(u, Up::Done { .. } | Up::DoneBatch(_))
+            })
+            .expect("missing completions");
+        assert!(last_done < exit_at, "completion after Exited");
     }
 
     #[test]

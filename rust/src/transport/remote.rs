@@ -35,8 +35,8 @@ use crate::dfs::{BlockSource, CacheLookup};
 use crate::error::{Error, Result};
 use crate::exec::Backend;
 use crate::net::protocol::{
-    configure_stream, Message, DFS_FETCH_TIMEOUT, HANDSHAKE_TIMEOUT,
-    PING_INTERVAL,
+    configure_stream, FrameReader, FramedWriter, Message, NetCounters,
+    DFS_FETCH_TIMEOUT, HANDSHAKE_TIMEOUT, PING_INTERVAL,
 };
 use crate::runtime::Exec as _;
 
@@ -116,6 +116,12 @@ mod sig {
     }
 }
 
+/// The session's shared framed writer: both planes (task results up,
+/// DFS traffic out) funnel through it, so payload frames ride the
+/// vectored zero-copy path and the worker-side [`NetCounters`] see
+/// every byte.
+type SessionWriter = Arc<Mutex<FramedWriter<BufWriter<TcpStream>>>>;
+
 /// A DFS answer routed off the socket by the reader thread.
 enum DfsReply {
     Block { key: String, data: Arc<Vec<u8>> },
@@ -127,14 +133,14 @@ enum DfsReply {
 /// single-threaded, so at most one fetch is outstanding; stale
 /// replies (from an earlier timed-out request) are skipped by key.
 pub struct RemoteDfs {
-    wr: Arc<Mutex<BufWriter<TcpStream>>>,
+    wr: SessionWriter,
     resp: Mutex<mpsc::Receiver<DfsReply>>,
     cache: Option<BlockCache>,
 }
 
 impl RemoteDfs {
     fn new(
-        wr: Arc<Mutex<BufWriter<TcpStream>>>,
+        wr: SessionWriter,
         resp: mpsc::Receiver<DfsReply>,
         cache_mb: usize,
     ) -> RemoteDfs {
@@ -145,14 +151,15 @@ impl RemoteDfs {
         }
     }
 
-    /// Publish a block into the leader's replicated store.
-    pub fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+    /// Publish a block into the leader's replicated store. The caller
+    /// keeps its `Arc`; the bytes go onto the wire vectored, straight
+    /// from the shared buffer — no staging copy.
+    pub fn put(&self, key: &str, data: Arc<Vec<u8>>) -> Result<()> {
         let mut g = self
             .wr
             .lock()
             .map_err(|_| Error::Dfs("writer poisoned".into()))?;
-        Message::DfsPut { key: key.to_string(), data: data.to_vec() }
-            .write_to(&mut *g)
+        g.send(&Message::DfsPut { key: key.to_string(), data })
     }
 }
 
@@ -179,7 +186,7 @@ impl BlockSource for RemoteDfs {
                 .wr
                 .lock()
                 .map_err(|_| Error::Dfs("writer poisoned".into()))?;
-            Message::DfsGet { key: key.to_string() }.write_to(&mut *g)?;
+            g.send(&Message::DfsGet { key: key.to_string() })?;
         }
         let rx = self
             .resp
@@ -229,7 +236,7 @@ impl BlockSource for RemoteDfs {
 /// thread; sends are framed writes through the shared writer.
 struct TcpWorkerChannel {
     rx: mpsc::Receiver<Down>,
-    wr: Arc<Mutex<BufWriter<TcpStream>>>,
+    wr: SessionWriter,
     /// Raw handle for the disconnect fault injection.
     stream: TcpStream,
     dones_sent: u64,
@@ -278,19 +285,27 @@ impl WorkerChannel for TcpWorkerChannel {
     }
 
     fn send(&mut self, up: Up) -> bool {
-        if let Up::Done { .. } = &up {
+        // Batched acks count every item inside the frame, so the
+        // fault-injection cap means the same thing with batching on:
+        // at most `cap` completions ever reach the leader.
+        let dones = match &up {
+            Up::Done { .. } => 1,
+            Up::DoneBatch(items) => items.len() as u64,
+            _ => 0,
+        };
+        if dones > 0 {
             if let Some(cap) = self.drop_link_after {
-                if self.dones_sent >= cap {
+                if self.dones_sent + dones > cap {
                     // Injected crash: sever the link instead of
-                    // reporting the result.
+                    // reporting the result(s).
                     let _ = self.stream.shutdown(std::net::Shutdown::Both);
                     return false;
                 }
             }
-            self.dones_sent += 1;
+            self.dones_sent += dones;
         }
         let Ok(mut g) = self.wr.lock() else { return false };
-        Message::Up(up).write_to(&mut *g).is_ok()
+        g.send(&Message::Up(up)).is_ok()
     }
 }
 
@@ -322,10 +337,17 @@ pub fn run_remote_worker(
     let stream = connect_retry(addr, opts.connect_window)?;
     configure_stream(&stream)?;
     let mut rd = BufReader::new(stream.try_clone()?);
-    let wr = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
+    // The worker keeps its own wire counters — they feed nothing
+    // today (reports are leader-side) but keep the writer honest and
+    // debuggable without a global static.
+    let counters = Arc::new(NetCounters::default());
+    let wr: SessionWriter = Arc::new(Mutex::new(FramedWriter::new(
+        BufWriter::new(stream.try_clone()?),
+        counters,
+    )));
     {
         let mut g = wr.lock().unwrap();
-        Message::Hello { worker: 0 }.write_to(&mut *g)?;
+        g.send(&Message::Hello { worker: 0 })?;
     }
     let worker = match Message::read_deadline(
         &mut rd,
@@ -353,7 +375,7 @@ pub fn run_remote_worker(
             .spawn(move || loop {
                 thread::sleep(heartbeat);
                 let Ok(mut g) = ping_wr.lock() else { return };
-                if Message::Ping.write_to(&mut *g).is_err() {
+                if g.send(&Message::Ping).is_err() {
                     return;
                 }
             })
@@ -368,26 +390,38 @@ pub fn run_remote_worker(
     // after the body has already returned on an error path.
     thread::Builder::new()
         .name(format!("bts-remote-reader-{worker}"))
-        .spawn(move || loop {
-            match Message::read_from(&mut rd) {
-                Ok(Message::Down(d)) => {
-                    if down_tx.send(d).is_err() {
-                        return;
+        .spawn(move || {
+            // Per-session frame reader: control payloads decode into a
+            // reused scratch buffer; DFS block bytes land once in the
+            // `Arc` that the cache and kernel will share.
+            let mut frames = FrameReader::new();
+            loop {
+                match frames.read(&mut rd, None) {
+                    Ok(Message::Down(d)) => {
+                        if down_tx.send(d).is_err() {
+                            return;
+                        }
                     }
-                }
-                Ok(Message::DfsBlock { key, data }) => {
-                    if resp_tx.send(DfsReply::Block { key, data }).is_err() {
-                        return;
+                    Ok(Message::DfsBlock { key, data }) => {
+                        if resp_tx
+                            .send(DfsReply::Block { key, data })
+                            .is_err()
+                        {
+                            return;
+                        }
                     }
-                }
-                Ok(Message::DfsMiss { key, message }) => {
-                    if resp_tx.send(DfsReply::Miss { key, message }).is_err()
-                    {
-                        return;
+                    Ok(Message::DfsMiss { key, message }) => {
+                        if resp_tx
+                            .send(DfsReply::Miss { key, message })
+                            .is_err()
+                        {
+                            return;
+                        }
                     }
+                    // Tolerated, though leaders don't ping.
+                    Ok(Message::Ping) => {}
+                    Ok(_) | Err(_) => return,
                 }
-                Ok(Message::Ping) => {} // tolerated, though leaders don't ping
-                Ok(_) | Err(_) => return,
             }
         })
         .map_err(|e| {

@@ -2,6 +2,8 @@
 //! bench/property harnesses that stand in for criterion/proptest in this
 //! offline build (see DESIGN.md §2).
 
+#[cfg(feature = "alloc-count")]
+pub mod alloc_counter;
 pub mod bench;
 pub mod bench_record;
 pub mod cli;

@@ -24,6 +24,15 @@ use bts::serve::{
 use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
 use bts::workloads::build_small;
 
+// With `--features alloc-count` this binary owns the global allocator,
+// so the warm-hit test below can assert the data plane's allocation
+// contract. The counter is thread-local: concurrently running tests
+// don't pollute the measurement window.
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static ALLOC: bts::util::alloc_counter::CountingAlloc =
+    bts::util::alloc_counter::CountingAlloc;
+
 fn native() -> Arc<Backend> {
     Arc::new(Backend::native(ModelParams::default()))
 }
@@ -154,6 +163,87 @@ fn caches_on_both_ends_leave_the_statistic_bit_identical() {
         "caching (either end) must never change the statistic"
     );
     assert!(cached.cache.is_some(), "leader cache was attached");
+}
+
+/// Batched dispatch changes the wire shape only: the same job with
+/// `TaskBatch` coalescing on and off must produce bit-identical
+/// outputs, and the leader-side wire counters must show the frames
+/// actually collapsing.
+#[test]
+fn batched_dispatch_is_bit_identical_to_unbatched_over_tcp() {
+    let backend = native();
+    let ds = build_small(Workload::Eaglet, &params(), 24);
+    let mut results = Vec::new();
+    for batch in [true, false] {
+        let remote = RemoteWorkers::bind("127.0.0.1:0", 2).unwrap();
+        let addr = remote.addr();
+        let workers = spawn_workers(addr, 2, RemoteWorkerOpts::default());
+        let r = run_cluster(
+            ds.as_ref(),
+            backend.clone(),
+            &ExecConfig {
+                sizing: TaskSizing::Tiniest,
+                seed: SEED,
+                workers: 0,
+                remote: Some(remote),
+                batch_dispatch: batch,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for h in workers {
+            h.join().unwrap();
+        }
+        results.push(r);
+    }
+    let (batched, unbatched) = (&results[0], &results[1]);
+    assert_eq!(
+        batched.output, unbatched.output,
+        "batching must never change the statistic"
+    );
+    assert!(
+        batched.report.frames_batched > 0,
+        "batched run never coalesced a refill window"
+    );
+    assert_eq!(
+        unbatched.report.frames_batched, 0,
+        "unbatched leader must not write TaskBatch frames"
+    );
+    assert!(
+        batched.report.frames_sent < unbatched.report.frames_sent,
+        "batching must collapse Down frames: {} (batched) vs {} \
+         (unbatched)",
+        batched.report.frames_sent,
+        unbatched.report.frames_sent
+    );
+    assert!(batched.report.wire_bytes > 0, "wire counters not threaded");
+}
+
+/// The allocation half of the zero-copy contract: a warm cache-hit
+/// block fetch is an index lookup, an intrusive-LRU touch, and an
+/// `Arc` clone — zero heap allocations. Needs the counting allocator
+/// installed, hence the feature gate.
+#[cfg(feature = "alloc-count")]
+#[test]
+fn warm_cache_hit_block_fetch_allocates_nothing() {
+    use bts::cache::BlockCache;
+    use bts::util::alloc_counter;
+
+    let cache = BlockCache::new(1 << 20, 2);
+    let data = Arc::new(vec![42u8; 8192]);
+    cache.insert("t/acme/blk:0", &data);
+    // First hit promotes probation → protected; the contract under
+    // test is the steady warm state after it.
+    drop(cache.get("t/acme/blk:0").expect("resident"));
+
+    alloc_counter::reset();
+    let hit = cache.get("t/acme/blk:0").expect("warm hit");
+    let n = alloc_counter::allocations();
+    assert_eq!(
+        n, 0,
+        "warm cache-hit fetch allocated {n} times; expected none"
+    );
+    assert_eq!(hit.len(), 8192);
 }
 
 #[test]

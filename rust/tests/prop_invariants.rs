@@ -651,3 +651,82 @@ fn prop_drf_invariant_under_arrival_order() {
         Ok(())
     });
 }
+
+/// Batching is a wire-shape optimization, never a semantic one: for
+/// any (workload, sample count, seed, cache, speculation, transport)
+/// shape, dispatching a refill window as one `TaskBatch` frame must
+/// leave the `JobOutput` bit-identical to dispatching the same tasks
+/// as singles.
+#[test]
+fn prop_task_batches_bit_identical_to_singles() {
+    use bts::exec::{run_cluster, Backend, ExecConfig};
+    use bts::net::run_worker;
+    use bts::transport::{RemoteWorkerOpts, RemoteWorkers};
+    use std::thread;
+
+    check("batched == unbatched JobOutput", 6, |rng: &mut Rng| {
+        let workload = if rng.below(2) == 0 {
+            Workload::Eaglet
+        } else {
+            Workload::NetflixLo
+        };
+        let samples = rng.range(8, 24) as usize;
+        let seed = rng.next_u64();
+        let cache_mb = if rng.below(2) == 0 { 0 } else { 8 };
+        let speculate = rng.below(2) == 0;
+        let tcp = rng.below(2) == 0;
+        let p = ModelParams::default();
+        let ds = bts::workloads::build_small(workload, &p, samples);
+        let backend = Arc::new(Backend::native(p.clone()));
+        let mut outs = Vec::new();
+        for batch in [true, false] {
+            let base = ExecConfig {
+                sizing: TaskSizing::Tiniest,
+                seed,
+                cache_mb,
+                sched: SchedConfig {
+                    dynamic: speculate,
+                    speculate,
+                    ..Default::default()
+                },
+                batch_dispatch: batch,
+                ..Default::default()
+            };
+            let r = if tcp {
+                let remote = RemoteWorkers::bind("127.0.0.1:0", 1)
+                    .map_err(|e| e.to_string())?;
+                let addr = remote.addr();
+                let b2 = backend.clone();
+                let h = thread::spawn(move || {
+                    run_worker(&addr, b2, &RemoteWorkerOpts::default())
+                });
+                let r = run_cluster(
+                    ds.as_ref(),
+                    backend.clone(),
+                    &ExecConfig {
+                        workers: 1,
+                        remote: Some(remote),
+                        ..base
+                    },
+                )
+                .map_err(|e| e.to_string())?;
+                let _ = h.join();
+                r
+            } else {
+                run_cluster(
+                    ds.as_ref(),
+                    backend.clone(),
+                    &ExecConfig { workers: 2, ..base },
+                )
+                .map_err(|e| e.to_string())?
+            };
+            outs.push(r.output);
+        }
+        prop_assert!(
+            outs[0] == outs[1],
+            "batched != unbatched ({workload:?}, tcp={tcp}, \
+             cache_mb={cache_mb}, speculate={speculate})"
+        );
+        Ok(())
+    });
+}
