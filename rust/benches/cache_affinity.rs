@@ -113,7 +113,7 @@ fn main() {
 
     // ---- trajectory record ------------------------------------------
     let record = obj(vec![
-        ("bench", s("cache_affinity")),
+        ("label", s("cache_affinity")),
         ("serve_cold_e2e_s", num(cold.e2e_s)),
         ("serve_warm_e2e_s", num(warm.e2e_s)),
         (

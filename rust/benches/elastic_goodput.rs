@@ -132,7 +132,7 @@ fn median(mut xs: Vec<f64>) -> f64 {
 
 fn record(mode: &str, arm: &Arm) -> Json {
     obj(vec![
-        ("mode", s(mode)),
+        ("label", s(mode)),
         ("tasks", num(arm.result.report.tasks as f64)),
         ("wall_s", num(arm.wall_s)),
         ("goodput_tasks_per_s", num(goodput(arm))),
@@ -198,7 +198,7 @@ fn main() {
     b.record("elastic_goodput", elastic_med, "tasks/s");
     b.record("goodput_ratio", ratio, "x");
     records.push(obj(vec![
-        ("mode", s("ratio")),
+        ("label", s("ratio")),
         ("restart_goodput_tasks_per_s", num(restart_med)),
         ("elastic_goodput_tasks_per_s", num(elastic_med)),
         ("goodput_ratio", num(ratio)),

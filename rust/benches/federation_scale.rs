@@ -101,7 +101,7 @@ fn run_scale_arm(leaders: usize) -> ScaleArm {
 
 fn scale_record(leaders: usize, arm: &ScaleArm) -> Json {
     obj(vec![
-        ("segment", s("scaling")),
+        ("label", s("scaling")),
         ("leaders", num(leaders as f64)),
         ("jobs", num(SCALE_JOBS as f64)),
         ("wall_s", num(arm.wall_s)),
@@ -139,7 +139,7 @@ fn main() {
     records.push(scale_record(1, &solo));
     records.push(scale_record(2, &duo));
     records.push(obj(vec![
-        ("segment", s("scaling_ratio")),
+        ("label", s("scaling_ratio")),
         ("speedup_1_to_2", num(speedup)),
         ("solo_wall_s", num(solo_wall)),
         ("duo_wall_s", num(duo_wall)),
@@ -181,7 +181,7 @@ fn main() {
     assert!(report.shed > 0, "overload must shed, not queue unboundedly");
     assert_eq!(report.shed + accepted, BURST_JOBS);
     records.push(obj(vec![
-        ("segment", s("overload")),
+        ("label", s("overload")),
         ("submitted", num(BURST_JOBS as f64)),
         ("accepted", num(accepted as f64)),
         ("shed", num(report.shed as f64)),
@@ -227,7 +227,7 @@ fn main() {
         "only {served} of {DRF_TENANTS} tenants progressed on 256 slots"
     );
     records.push(obj(vec![
-        ("segment", s("tenant_spread")),
+        ("label", s("tenant_spread")),
         ("ring_tenants", num(RING_TENANTS as f64)),
         ("ring_leaders", num(4.0)),
         ("placement_fairness", num(placement_fairness)),

@@ -69,7 +69,7 @@ fn partitioner_battery(b: &mut Bench, records: &mut Vec<Json>) {
         b.record(&format!("skew_imbalance_{name}"), skew_imb, "x");
         b.record(&format!("imbalance_ratio_{name}"), ratio, "x");
         records.push(obj(vec![
-            ("mode", s("partitioner")),
+            ("label", s("partitioner")),
             ("n_keys", num(n_keys as f64)),
             ("partitions", num(partitions as f64)),
             ("hash_imbalance", num(hash_imb)),
@@ -144,7 +144,7 @@ fn executed_battery(b: &mut Bench, records: &mut Vec<Json>) {
     );
     for (mode, r) in [("hash", &hash), ("skew", &skew)] {
         records.push(obj(vec![
-            ("mode", s("executed")),
+            ("label", s("executed")),
             ("partitioner", s(mode)),
             ("reduce_tasks", num(r.report.reduce_tasks as f64)),
             ("shuffle_bytes", num(r.report.shuffle_bytes as f64)),

@@ -64,7 +64,7 @@ fn median(mut xs: Vec<f64>) -> f64 {
 
 fn record(mode: &str, r: &ExecResult) -> Json {
     obj(vec![
-        ("mode", s(mode)),
+        ("label", s(mode)),
         ("tasks", num(r.report.tasks as f64)),
         ("map_s", num(r.report.map_s)),
         ("total_s", num(r.report.total_s)),
@@ -125,7 +125,7 @@ fn main() {
     b.record("p99_tail_ratio", p99_ratio, "x");
     b.record("job_wall_ratio", wall_ratio, "x");
     records.push(obj(vec![
-        ("mode", s("ratio")),
+        ("label", s("ratio")),
         ("p99_tail_ratio", num(p99_ratio)),
         ("job_wall_ratio", num(wall_ratio)),
     ]));

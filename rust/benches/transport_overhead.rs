@@ -115,7 +115,7 @@ fn run_tcp(
 
 fn flat(name: &str, r: &ExecResult) -> Json {
     obj(vec![
-        ("config", s(name)),
+        ("label", s(name)),
         ("tasks", num(r.report.tasks as f64)),
         ("dispatch_us_per_task", num(dispatch_us_per_task(r))),
         (

@@ -7,7 +7,9 @@
 //! the `idx` input, and identical seeds reproduce identical statistics
 //! (the job-level-recovery determinism guarantee).
 
-use crate::data::block::{Block, KIND_EAGLET, KIND_NETFLIX};
+use crate::data::block::{
+    Block, KIND_EAGLET, KIND_NETFLIX, KIND_SEQADDR, KIND_SSAG,
+};
 use crate::data::{ModelParams, Workload};
 use crate::error::{Error, Result};
 use crate::runtime::{Exec, HostTensor};
@@ -39,6 +41,19 @@ pub fn draw_netflix_idx(p: &ModelParams, s: usize, seed: u64) -> HostTensor {
     HostTensor::I32(idx, vec![s])
 }
 
+/// Draw sequential-addressing window start offsets: `sa_rounds` draws
+/// (with replacement) over the valid starts `[0, sa_len - sa_window]`.
+/// One draw is shared by every row in the batch — sequential
+/// addressing reads the *same* window of each series, which is what
+/// keeps the access pattern contiguous (Pan et al. 2021).
+pub fn draw_seqaddr_idx(p: &ModelParams, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed);
+    let starts = (p.sa_len - p.sa_window + 1) as u64;
+    let idx: Vec<i32> =
+        (0..p.sa_rounds).map(|_| rng.below(starts) as i32).collect();
+    HostTensor::I32(idx, vec![p.sa_rounds])
+}
+
 /// The common LOD grid all EAGLET partials are combined over.
 pub fn lod_grid_points(p: &ModelParams) -> Vec<f32> {
     (0..p.grid).map(|g| g as f32 / p.grid as f32).collect()
@@ -47,7 +62,8 @@ pub fn lod_grid_points(p: &ModelParams) -> Vec<f32> {
 /// A fully-assembled map task: inputs ready for `Runtime::execute`, plus
 /// the bookkeeping needed to interpret the padded output.
 pub struct MapTask {
-    /// Manifest entry kind (eaglet_map / netflix_map_hi / netflix_map_lo).
+    /// Manifest entry kind (eaglet_map / netflix_map_hi /
+    /// netflix_map_lo / seqaddr_map / ssag_map).
     pub kind: &'static str,
     /// Bucket rows actually backed by data (≤ compiled bucket).
     pub real_rows: usize,
@@ -95,6 +111,8 @@ impl MapTask {
             Workload::NetflixLo => {
                 Self::netflix_slices(p, blocks, seed, false)
             }
+            Workload::SeqAddr => Self::seqaddr_slices(p, blocks, seed),
+            Workload::Ssag => Self::ssag_slices(p, blocks),
         }
     }
 
@@ -209,6 +227,75 @@ impl MapTask {
             })
             .collect()
     }
+
+    /// Shared shell for the series workloads: one sample per row, the
+    /// payload is the bare series.
+    fn series_slices(
+        p: &ModelParams,
+        blocks: &[Block],
+        want_kind: u32,
+        len: usize,
+        kind: &'static str,
+        extra: impl Fn() -> Vec<HostTensor>,
+    ) -> Result<Vec<MapTask>> {
+        blocks
+            .chunks(p.max_bucket())
+            .map(|slice| {
+                let rows = slice.len();
+                let bucket = p.bucket_for(rows).expect("≤ max bucket");
+                let mut series = vec![0.0f32; bucket * len];
+                for (row, b) in slice.iter().enumerate() {
+                    if b.id.kind != want_kind {
+                        return Err(Error::Data(format!(
+                            "{kind} task got block kind {}",
+                            b.id.kind
+                        )));
+                    }
+                    if b.payload.len() != len {
+                        return Err(Error::Data(format!(
+                            "series block {} payload {} != {len}",
+                            b.id.sample,
+                            b.payload.len()
+                        )));
+                    }
+                    series[row * len..(row + 1) * len]
+                        .copy_from_slice(&b.payload);
+                }
+                let mut inputs =
+                    vec![HostTensor::F32(series, vec![bucket, len])];
+                inputs.extend(extra());
+                Ok(MapTask { kind, real_rows: rows, bucket, inputs })
+            })
+            .collect()
+    }
+
+    fn seqaddr_slices(
+        p: &ModelParams,
+        blocks: &[Block],
+        seed: u64,
+    ) -> Result<Vec<MapTask>> {
+        Self::series_slices(
+            p,
+            blocks,
+            KIND_SEQADDR,
+            p.sa_len,
+            "seqaddr_map",
+            || vec![draw_seqaddr_idx(p, seed)],
+        )
+    }
+
+    /// Politis's scalable subsampling is deterministic — the blocks ARE
+    /// the subsamples — so there is no idx input to draw.
+    fn ssag_slices(p: &ModelParams, blocks: &[Block]) -> Result<Vec<MapTask>> {
+        Self::series_slices(
+            p,
+            blocks,
+            KIND_SSAG,
+            p.ssag_len,
+            "ssag_map",
+            Vec::new,
+        )
+    }
 }
 
 /// Execute assembled slices through any backend and merge them into
@@ -295,49 +382,61 @@ impl TaskPartial {
         task: &MapTask,
         out0: &[f32],
     ) -> Result<TaskPartial> {
+        // Two shapes only: a weighted-mean curve (Eaglet algebra) or a
+        // summed stats vector (Netflix algebra). Each kernel kind maps
+        // onto one of them with its own lane count.
+        let mean_curve = |g: usize| -> Result<TaskPartial> {
+            if out0.len() != task.bucket * g {
+                return Err(Error::Artifact(format!(
+                    "{} output {} != {}×{g}",
+                    task.kind,
+                    out0.len(),
+                    task.bucket
+                )));
+            }
+            let mut alod = vec![0.0f32; g];
+            for row in 0..task.real_rows {
+                for (a, v) in
+                    alod.iter_mut().zip(&out0[row * g..(row + 1) * g])
+                {
+                    *a += v;
+                }
+            }
+            let w = task.real_rows as f32;
+            for a in &mut alod {
+                *a /= w;
+            }
+            Ok(TaskPartial::Eaglet { alod, weight: w })
+        };
+        let summed_stats = |f: usize| -> Result<TaskPartial> {
+            if out0.len() != task.bucket * f {
+                return Err(Error::Artifact(format!(
+                    "{} output {} != {}×{f}",
+                    task.kind,
+                    out0.len(),
+                    task.bucket
+                )));
+            }
+            let mut stats = vec![0.0f32; f];
+            for row in 0..task.real_rows {
+                for (a, v) in
+                    stats.iter_mut().zip(&out0[row * f..(row + 1) * f])
+                {
+                    *a += v;
+                }
+            }
+            Ok(TaskPartial::Netflix { stats })
+        };
         match task.kind {
-            "eaglet_map" => {
-                let g = p.grid;
-                if out0.len() != task.bucket * g {
-                    return Err(Error::Artifact(format!(
-                        "eaglet map output {} != {}×{g}",
-                        out0.len(),
-                        task.bucket
-                    )));
-                }
-                let mut alod = vec![0.0f32; g];
-                for row in 0..task.real_rows {
-                    for (a, v) in
-                        alod.iter_mut().zip(&out0[row * g..(row + 1) * g])
-                    {
-                        *a += v;
-                    }
-                }
-                let w = task.real_rows as f32;
-                for a in &mut alod {
-                    *a /= w;
-                }
-                Ok(TaskPartial::Eaglet { alod, weight: w })
+            "eaglet_map" => mean_curve(p.grid),
+            "ssag_map" => mean_curve(p.ssag_points),
+            "netflix_map_hi" | "netflix_map_lo" => {
+                summed_stats(p.months * p.stat_fields)
             }
-            _ => {
-                let f = p.months * p.stat_fields;
-                if out0.len() != task.bucket * f {
-                    return Err(Error::Artifact(format!(
-                        "netflix map output {} != {}×{f}",
-                        out0.len(),
-                        task.bucket
-                    )));
-                }
-                let mut stats = vec![0.0f32; f];
-                for row in 0..task.real_rows {
-                    for (a, v) in
-                        stats.iter_mut().zip(&out0[row * f..(row + 1) * f])
-                    {
-                        *a += v;
-                    }
-                }
-                Ok(TaskPartial::Netflix { stats })
-            }
+            "seqaddr_map" => summed_stats(p.sa_bins * p.stat_fields),
+            other => Err(Error::Artifact(format!(
+                "unknown map kind {other}"
+            ))),
         }
     }
 }
@@ -423,6 +522,55 @@ mod tests {
         assert_eq!(t.bucket, 16);
         assert_eq!(t.kind, "netflix_map_lo");
         assert_eq!(t.inputs[3].shape(), &[p.s_lo]);
+    }
+
+    #[test]
+    fn seqaddr_idx_deterministic_and_in_range() {
+        let p = params();
+        let a = draw_seqaddr_idx(&p, 7);
+        assert_eq!(a, draw_seqaddr_idx(&p, 7));
+        assert_ne!(a, draw_seqaddr_idx(&p, 8));
+        if let HostTensor::I32(v, shape) = &a {
+            assert_eq!(shape, &[p.sa_rounds]);
+            let hi = (p.sa_len - p.sa_window) as i32;
+            assert!(v.iter().all(|&x| (0..=hi).contains(&x)));
+        } else {
+            panic!("expected i32 tensor");
+        }
+    }
+
+    #[test]
+    fn assemble_series_workloads() {
+        use crate::data::seqaddr::{SeqAddrConfig, SeqAddrDataset};
+        use crate::data::ssag::{SsagConfig, SsagDataset};
+        let p = params();
+        let d = SeqAddrDataset::generate(
+            &p,
+            SeqAddrConfig { series: 6, ..Default::default() },
+        );
+        let blocks: Vec<Block> = (0..5).map(|i| d.encode_block(i)).collect();
+        let t =
+            MapTask::assemble(&p, Workload::SeqAddr, &blocks, 9).unwrap();
+        assert_eq!(t.kind, "seqaddr_map");
+        assert_eq!(t.real_rows, 5);
+        assert_eq!(t.bucket, 16);
+        assert_eq!(t.inputs[0].shape(), &[t.bucket, p.sa_len]);
+        assert_eq!(t.inputs[1].shape(), &[p.sa_rounds]);
+
+        let d = SsagDataset::generate(
+            &p,
+            SsagConfig { series: 6, ..Default::default() },
+        );
+        let blocks: Vec<Block> = (0..3).map(|i| d.encode_block(i)).collect();
+        let t = MapTask::assemble(&p, Workload::Ssag, &blocks, 9).unwrap();
+        assert_eq!(t.kind, "ssag_map");
+        assert_eq!(t.real_rows, 3);
+        assert_eq!(t.bucket, 4);
+        assert_eq!(t.inputs.len(), 1);
+        assert_eq!(t.inputs[0].shape(), &[t.bucket, p.ssag_len]);
+        // wrong-kind blocks are rejected, both directions
+        assert!(MapTask::assemble(&p, Workload::SeqAddr, &blocks, 0)
+            .is_err());
     }
 
     #[test]

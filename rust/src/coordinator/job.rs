@@ -19,7 +19,8 @@ use super::assemble::{MapTask, TaskPartial};
 use super::monitor::MonitorSink;
 use super::recovery::FailurePlan;
 use super::reduce::{
-    finalize_netflix, reduce_eaglet, reduce_netflix, NetflixStats,
+    finalize_netflix, finalize_seqaddr, reduce_eaglet, reduce_netflix,
+    reduce_seqaddr, reduce_ssag, NetflixStats,
 };
 use crate::data::{BlockId, Dataset, Workload};
 use crate::data::block::Block;
@@ -80,12 +81,50 @@ impl Default for JobConfig {
     }
 }
 
-/// The job's statistical output.
+///// The job's statistical output. Two shapes cover all four workloads:
+/// SSAG jobs finalize as `Eaglet` (a weighted mean curve — the
+/// variance ladder), SeqAddr jobs as `Netflix` (per-key mean/CI —
+/// keyed by address bin instead of month).
 #[derive(Debug, Clone, PartialEq)]
 pub enum JobOutput {
-    /// Final ALOD curve over the common grid + total chunk weight.
+    /// Final weighted mean curve (EAGLET ALOD grid / SSAG variance
+    /// ladder) + total row weight.
     Eaglet { alod: Vec<f32>, weight: f32 },
     Netflix(NetflixStats),
+}
+
+impl JobOutput {
+    /// The statistic as deterministic JSON — what equivalence gates
+    /// (the CI transport/suite smokes, `bts exec --out-json`) diff
+    /// between runs: bit-identical outputs ⇒ byte-identical subtrees.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, obj, s};
+        match self {
+            JobOutput::Eaglet { alod, weight } => obj(vec![
+                ("workload", s("eaglet")),
+                ("weight", num(*weight as f64)),
+                (
+                    "alod",
+                    arr(alod.iter().map(|&v| num(v as f64)).collect()),
+                ),
+            ]),
+            JobOutput::Netflix(stats) => obj(vec![
+                ("workload", s("netflix")),
+                (
+                    "mean",
+                    arr(stats.mean.iter().map(|&v| num(v)).collect()),
+                ),
+                (
+                    "ci_half",
+                    arr(stats.ci_half.iter().map(|&v| num(v)).collect()),
+                ),
+                (
+                    "count",
+                    arr(stats.count.iter().map(|&v| num(v)).collect()),
+                ),
+            ]),
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -131,10 +170,7 @@ pub fn run_job(
     )
     .min(cfg.data_nodes);
     let dfs = Dfs::new(cfg.data_nodes, rf0, cfg.latency.clone());
-    let kind = match workload {
-        Workload::Eaglet => crate::data::block::KIND_EAGLET,
-        _ => crate::data::block::KIND_NETFLIX,
-    };
+    let kind = crate::data::block::kind_of(workload);
     for meta in metas {
         let block = dataset.encode_block(meta.id);
         let key = BlockId { kind, sample: meta.id }.key();
@@ -234,28 +270,44 @@ pub fn run_job(
         .collect::<Result<_>>()?;
     let reduce_t = Timer::start();
     let pool = ExecutorPool::global(&manifest)?;
+    let weighted = |collected: Vec<TaskPartial>| -> Vec<(Vec<f32>, f32)> {
+        collected
+            .into_iter()
+            .map(|pt| match pt {
+                TaskPartial::Eaglet { alod, weight } => (alod, weight),
+                _ => unreachable!("workload-homogeneous job"),
+            })
+            .collect()
+    };
+    let summed = |collected: Vec<TaskPartial>| -> Vec<Vec<f32>> {
+        collected
+            .into_iter()
+            .map(|pt| match pt {
+                TaskPartial::Netflix { stats } => stats,
+                _ => unreachable!("workload-homogeneous job"),
+            })
+            .collect()
+    };
     let output = match workload {
         Workload::Eaglet => {
-            let parts: Vec<(Vec<f32>, f32)> = collected
-                .into_iter()
-                .map(|p| match p {
-                    TaskPartial::Eaglet { alod, weight } => (alod, weight),
-                    _ => unreachable!("workload-homogeneous job"),
-                })
-                .collect();
-            let (alod, weight) = reduce_eaglet(pool.as_ref(), &p, parts)?;
+            let (alod, weight) =
+                reduce_eaglet(pool.as_ref(), &p, weighted(collected))?;
+            JobOutput::Eaglet { alod, weight }
+        }
+        Workload::Ssag => {
+            let (alod, weight) =
+                reduce_ssag(pool.as_ref(), &p, weighted(collected))?;
             JobOutput::Eaglet { alod, weight }
         }
         Workload::NetflixHi | Workload::NetflixLo => {
-            let parts: Vec<Vec<f32>> = collected
-                .into_iter()
-                .map(|pt| match pt {
-                    TaskPartial::Netflix { stats } => stats,
-                    _ => unreachable!("workload-homogeneous job"),
-                })
-                .collect();
-            let stats = reduce_netflix(pool.as_ref(), &p, parts)?;
+            let stats =
+                reduce_netflix(pool.as_ref(), &p, summed(collected))?;
             JobOutput::Netflix(finalize_netflix(&p, &stats)?)
+        }
+        Workload::SeqAddr => {
+            let stats =
+                reduce_seqaddr(pool.as_ref(), &p, summed(collected))?;
+            JobOutput::Netflix(finalize_seqaddr(&p, &stats)?)
         }
     };
     let reduce_s = reduce_t.secs();
@@ -339,10 +391,7 @@ fn worker_loop(
         while lookahead.len() < want {
             match sched.next(w) {
                 Some(spec) => {
-                    let kind = match spec.workload {
-                        Workload::Eaglet => crate::data::block::KIND_EAGLET,
-                        _ => crate::data::block::KIND_NETFLIX,
-                    };
+                    let kind = crate::data::block::kind_of(spec.workload);
                     pf.enqueue(spec.task.sample_ids.iter().map(|&id| {
                         BlockId { kind, sample: id }.key()
                     }));
@@ -358,10 +407,7 @@ fn worker_loop(
 
         // Fetch + decode this task's blocks.
         let fetch_t = Timer::start();
-        let kind = match spec.workload {
-            Workload::Eaglet => crate::data::block::KIND_EAGLET,
-            _ => crate::data::block::KIND_NETFLIX,
-        };
+        let kind = crate::data::block::kind_of(spec.workload);
         let mut blocks = Vec::with_capacity(spec.task.sample_ids.len());
         for &id in &spec.task.sample_ids {
             let key = BlockId { kind, sample: id }.key();

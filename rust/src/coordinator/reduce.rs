@@ -5,41 +5,49 @@
 //! compiled artifacts, `reduce_fan` partials per call, repeating until
 //! one partial remains. Partials are combined in `seq` order so results
 //! are bit-identical across runs and across job-level restarts.
+//!
+//! Two merge algebras cover all four workloads: a weighted-mean curve
+//! (EAGLET's ALOD grid, SSAG's variance ladder) and an elementwise sum
+//! of `(sum, sumsq, count)` moment lanes (Netflix's months, SeqAddr's
+//! address bins).
 
 use crate::data::ModelParams;
 use crate::error::{Error, Result};
 use crate::runtime::{Exec, HostTensor};
 
-/// Reduce EAGLET `(alod, weight)` partials to the final `(alod, total
-/// weight)` via the `eaglet_reduce` artifact (weighted combine).
-pub fn reduce_eaglet(
+/// Tree-reduce weighted `(curve, weight)` partials through the named
+/// reduce artifact; `g` is the curve length. Each call re-normalizes
+/// `wsum / wtot` so the invariant "a partial is a weighted mean" holds
+/// at every tree level.
+fn reduce_weighted_curve(
     rt: &impl Exec,
     p: &ModelParams,
     mut partials: Vec<(Vec<f32>, f32)>,
+    kind: &str,
+    g: usize,
 ) -> Result<(Vec<f32>, f32)> {
     if partials.is_empty() {
         return Err(Error::Scheduler("reduce over zero partials".into()));
     }
-    let g = p.grid;
     let k = p.reduce_fan;
     let entry = rt
         .manifest()
-        .entry("eaglet_reduce", k)
-        .ok_or_else(|| Error::Artifact("missing eaglet_reduce".into()))?
+        .entry(kind, k)
+        .ok_or_else(|| Error::Artifact(format!("missing {kind}")))?
         .clone();
     while partials.len() > 1 {
         let mut next = Vec::with_capacity(partials.len().div_ceil(k));
         for group in partials.chunks(k) {
             let mut parts = vec![0.0f32; k * g];
             let mut weights = vec![0.0f32; k];
-            for (i, (alod, w)) in group.iter().enumerate() {
-                if alod.len() != g {
+            for (i, (curve, w)) in group.iter().enumerate() {
+                if curve.len() != g {
                     return Err(Error::Artifact(format!(
-                        "partial grid {} != {g}",
-                        alod.len()
+                        "partial curve {} != {g}",
+                        curve.len()
                     )));
                 }
-                parts[i * g..(i + 1) * g].copy_from_slice(alod);
+                parts[i * g..(i + 1) * g].copy_from_slice(curve);
                 weights[i] = *w;
             }
             let out = rt.run(
@@ -63,21 +71,24 @@ pub fn reduce_eaglet(
     Ok(partials.pop().expect("non-empty"))
 }
 
-/// Reduce Netflix `[months × fields]` partial stat tensors to one.
-pub fn reduce_netflix(
+/// Tree-reduce summed stat tensors through the named reduce artifact;
+/// `dims` is the per-partial tensor shape (lane count = product).
+fn reduce_summed_stats(
     rt: &impl Exec,
     p: &ModelParams,
     mut partials: Vec<Vec<f32>>,
+    kind: &str,
+    dims: &[usize],
 ) -> Result<Vec<f32>> {
     if partials.is_empty() {
         return Err(Error::Scheduler("reduce over zero partials".into()));
     }
-    let f = p.months * p.stat_fields;
+    let f: usize = dims.iter().product();
     let k = p.reduce_fan;
     let entry = rt
         .manifest()
-        .entry("netflix_reduce", k)
-        .ok_or_else(|| Error::Artifact("missing netflix_reduce".into()))?
+        .entry(kind, k)
+        .ok_or_else(|| Error::Artifact(format!("missing {kind}")))?
         .clone();
     while partials.len() > 1 {
         let mut next = Vec::with_capacity(partials.len().div_ceil(k));
@@ -92,10 +103,11 @@ pub fn reduce_netflix(
                 }
                 parts[i * f..(i + 1) * f].copy_from_slice(s);
             }
-            let out = rt.run(
-                &entry,
-                vec![HostTensor::F32(parts, vec![k, p.months, p.stat_fields])],
-            )?;
+            let mut shape = Vec::with_capacity(dims.len() + 1);
+            shape.push(k);
+            shape.extend_from_slice(dims);
+            let out =
+                rt.run(&entry, vec![HostTensor::F32(parts, shape)])?;
             next.push(out[0].clone());
         }
         partials = next;
@@ -103,33 +115,88 @@ pub fn reduce_netflix(
     Ok(partials.pop().expect("non-empty"))
 }
 
-/// Final per-month estimates (the quantity §4.1.1.2 reports: "typical
-/// user ratings by month", with a confidence interval).
+/// Reduce EAGLET `(alod, weight)` partials to the final `(alod, total
+/// weight)` via the `eaglet_reduce` artifact (weighted combine).
+pub fn reduce_eaglet(
+    rt: &impl Exec,
+    p: &ModelParams,
+    partials: Vec<(Vec<f32>, f32)>,
+) -> Result<(Vec<f32>, f32)> {
+    reduce_weighted_curve(rt, p, partials, "eaglet_reduce", p.grid)
+}
+
+/// Reduce SSAG `(variance curve, weight)` partials — same algebra as
+/// EAGLET over `ssag_points` lanes.
+pub fn reduce_ssag(
+    rt: &impl Exec,
+    p: &ModelParams,
+    partials: Vec<(Vec<f32>, f32)>,
+) -> Result<(Vec<f32>, f32)> {
+    reduce_weighted_curve(rt, p, partials, "ssag_reduce", p.ssag_points)
+}
+
+/// Reduce Netflix `[months × fields]` partial stat tensors to one.
+pub fn reduce_netflix(
+    rt: &impl Exec,
+    p: &ModelParams,
+    partials: Vec<Vec<f32>>,
+) -> Result<Vec<f32>> {
+    reduce_summed_stats(
+        rt,
+        p,
+        partials,
+        "netflix_reduce",
+        &[p.months, p.stat_fields],
+    )
+}
+
+/// Reduce SeqAddr `[sa_bins × fields]` partial stat tensors to one.
+pub fn reduce_seqaddr(
+    rt: &impl Exec,
+    p: &ModelParams,
+    partials: Vec<Vec<f32>>,
+) -> Result<Vec<f32>> {
+    reduce_summed_stats(
+        rt,
+        p,
+        partials,
+        "seqaddr_reduce",
+        &[p.sa_bins, p.stat_fields],
+    )
+}
+
+/// Final per-key estimates. Historically Netflix's "typical user
+/// ratings by month" (§4.1.1.2); the same mean/CI finalization serves
+/// SeqAddr's per-address-bin window means — `mean[k]` is then the
+/// windowed-mean estimate for bin `k`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetflixStats {
     pub mean: Vec<f64>,
-    /// 95% CI half-width per month (t≈1.96 normal approximation).
+    /// 95% CI half-width per key (t≈1.96 normal approximation).
     pub ci_half: Vec<f64>,
     pub count: Vec<f64>,
 }
 
-/// Turn the reduced `[months × (sum, sumsq, count)]` tensor into
-/// mean/CI — scalar math after the reduce tree bottoms out.
-pub fn finalize_netflix(p: &ModelParams, stats: &[f32]) -> Result<NetflixStats> {
-    let f = p.stat_fields;
-    if stats.len() != p.months * f {
+/// Turn a reduced `[keys × (sum, sumsq, count)]` tensor into mean/CI —
+/// scalar math after the reduce tree bottoms out.
+fn finalize_moments(
+    stat_fields: usize,
+    keys: usize,
+    stats: &[f32],
+) -> Result<NetflixStats> {
+    let f = stat_fields;
+    if stats.len() != keys * f {
         return Err(Error::Artifact(format!(
-            "finalize: stats {} != {}×{f}",
-            stats.len(),
-            p.months
+            "finalize: stats {} != {keys}×{f}",
+            stats.len()
         )));
     }
     let mut out = NetflixStats {
-        mean: Vec::with_capacity(p.months),
-        ci_half: Vec::with_capacity(p.months),
-        count: Vec::with_capacity(p.months),
+        mean: Vec::with_capacity(keys),
+        ci_half: Vec::with_capacity(keys),
+        count: Vec::with_capacity(keys),
     };
-    for m in 0..p.months {
+    for m in 0..keys {
         let sum = stats[m * f] as f64;
         let sumsq = stats[m * f + 1] as f64;
         let n = stats[m * f + 2] as f64;
@@ -152,6 +219,22 @@ pub fn finalize_netflix(p: &ModelParams, stats: &[f32]) -> Result<NetflixStats> 
     Ok(out)
 }
 
+/// Finalize the Netflix reduce: one (mean, CI) per month.
+pub fn finalize_netflix(
+    p: &ModelParams,
+    stats: &[f32],
+) -> Result<NetflixStats> {
+    finalize_moments(p.stat_fields, p.months, stats)
+}
+
+/// Finalize the SeqAddr reduce: one (mean, CI) per address bin.
+pub fn finalize_seqaddr(
+    p: &ModelParams,
+    stats: &[f32],
+) -> Result<NetflixStats> {
+    finalize_moments(p.stat_fields, p.sa_bins, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +255,21 @@ mod tests {
         // empty month → NaN mean, count 0
         assert!(s.mean[1].is_nan());
         assert_eq!(s.count[1], 0.0);
+    }
+
+    #[test]
+    fn finalize_seqaddr_uses_bin_count() {
+        let p = ModelParams::default();
+        let f = p.stat_fields;
+        let mut stats = vec![0.0f32; p.sa_bins * f];
+        stats[0] = 6.0; // bin 0: {2, 4} → mean 3
+        stats[1] = 20.0;
+        stats[2] = 2.0;
+        let s = finalize_seqaddr(&p, &stats).unwrap();
+        assert_eq!(s.mean.len(), p.sa_bins);
+        assert!((s.mean[0] - 3.0).abs() < 1e-9);
+        // wrong length (months ≠ sa_bins would catch a mixed-up call)
+        assert!(finalize_seqaddr(&p, &stats[..f]).is_err());
     }
 
     #[test]

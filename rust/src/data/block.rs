@@ -2,7 +2,8 @@
 //!
 //! Layout (little-endian):
 //!   magic  u32 = 0x42545342 ("BSTB")
-//!   kind   u32   (0 = eaglet family, 1 = netflix movie)
+//!   kind   u32   (0 = eaglet family, 1 = netflix movie,
+//!                 2 = seqaddr series, 3 = ssag series)
 //!   id     u64
 //!   units  u32   (eaglet: chunk count; netflix: 1)
 //!   nf32   u32   number of f32 payload words
@@ -10,6 +11,7 @@
 //!
 //! EAGLET payload: per chunk, geno[M*I] then pos[M].
 //! Netflix payload: vals[N], months[N], mask[N].
+//! SeqAddr payload: series[sa_len]. Ssag payload: series[ssag_len].
 
 use crate::error::{Error, Result};
 
@@ -18,17 +20,26 @@ use super::Workload;
 pub const MAGIC: u32 = 0x4254_5342;
 pub const KIND_EAGLET: u32 = 0;
 pub const KIND_NETFLIX: u32 = 1;
+pub const KIND_SEQADDR: u32 = 2;
+pub const KIND_SSAG: u32 = 3;
+
+/// Block kind for a workload's samples. Both Netflix confidence
+/// levels share one dataset, hence one kind.
+pub fn kind_of(workload: Workload) -> u32 {
+    match workload {
+        Workload::Eaglet => KIND_EAGLET,
+        Workload::NetflixHi | Workload::NetflixLo => KIND_NETFLIX,
+        Workload::SeqAddr => KIND_SEQADDR,
+        Workload::Ssag => KIND_SSAG,
+    }
+}
 
 /// Store key for one sample's block under a job namespace (`""` for
 /// solo runs; [`crate::dfs::job_ns`] prefixes for multiplexed jobs).
 /// Shared by the executors, the serve pool, and the scheduler's
 /// cache-affinity scoring so key construction can never drift.
 pub fn block_key(ns: &str, workload: Workload, sample: u64) -> String {
-    let kind = match workload {
-        Workload::Eaglet => KIND_EAGLET,
-        _ => KIND_NETFLIX,
-    };
-    format!("{ns}{}", BlockId { kind, sample }.key())
+    format!("{ns}{}", BlockId { kind: kind_of(workload), sample }.key())
 }
 
 /// Identifies one sample's block in the store.

@@ -14,6 +14,8 @@ pub mod block;
 pub mod eaglet;
 pub mod netflix;
 pub mod params;
+pub mod seqaddr;
+pub mod ssag;
 
 pub use block::{Block, BlockId};
 pub use params::ModelParams;
@@ -26,14 +28,31 @@ pub enum Workload {
     NetflixHi,
     /// Netflix with the low-confidence subsample size (S_LO).
     NetflixLo,
+    /// Sequential-addressing subsampling under a memory constraint
+    /// (Pan et al. 2021): windowed means over contiguous series
+    /// offsets, binned by start address.
+    SeqAddr,
+    /// Scalable-subsampling aggregation (Politis 2021): block-means
+    /// variance curve over a ladder of subsample block sizes.
+    Ssag,
 }
 
 impl Workload {
+    pub const ALL: [Workload; 5] = [
+        Workload::Eaglet,
+        Workload::NetflixHi,
+        Workload::NetflixLo,
+        Workload::SeqAddr,
+        Workload::Ssag,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             Workload::Eaglet => "eaglet",
             Workload::NetflixHi => "netflix_hi",
             Workload::NetflixLo => "netflix_lo",
+            Workload::SeqAddr => "seqaddr",
+            Workload::Ssag => "ssag",
         }
     }
 
@@ -42,6 +61,8 @@ impl Workload {
             "eaglet" => Some(Workload::Eaglet),
             "netflix_hi" | "netflix-hi" => Some(Workload::NetflixHi),
             "netflix_lo" | "netflix-lo" => Some(Workload::NetflixLo),
+            "seqaddr" => Some(Workload::SeqAddr),
+            "ssag" => Some(Workload::Ssag),
             _ => None,
         }
     }
@@ -76,7 +97,7 @@ mod tests {
 
     #[test]
     fn workload_name_round_trip() {
-        for w in [Workload::Eaglet, Workload::NetflixHi, Workload::NetflixLo] {
+        for w in Workload::ALL {
             assert_eq!(Workload::parse(w.name()), Some(w));
         }
         assert_eq!(Workload::parse("hadoop"), None);

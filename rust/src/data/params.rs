@@ -22,6 +22,18 @@ pub struct ModelParams {
     pub buckets: Vec<usize>, // compiled samples-per-task buckets
     pub reduce_fan: usize,   // K: parts per reduce call
     pub chunk_bytes: usize,  // bytes per EAGLET chunk in the data layer
+    // Sequential-addressing subsampling (Pan et al. 2021): windowed
+    // means over a series of sa_len points, start offsets binned into
+    // sa_bins address buckets.
+    pub sa_len: usize,
+    pub sa_window: usize,
+    pub sa_bins: usize,
+    pub sa_rounds: usize,
+    // Scalable-subsampling aggregation (Politis 2021): variance of
+    // non-overlapping block means at block sizes ssag_b * (1..=points).
+    pub ssag_len: usize,
+    pub ssag_b: usize,
+    pub ssag_points: usize,
 }
 
 impl Default for ModelParams {
@@ -41,13 +53,27 @@ impl Default for ModelParams {
             buckets: vec![1, 4, 16, 64],
             reduce_fan: 16,
             chunk_bytes: 64 * 8 * 4 + 64 * 4,
+            sa_len: 512,
+            sa_window: 32,
+            sa_bins: 16,
+            sa_rounds: 8,
+            ssag_len: 256,
+            ssag_b: 8,
+            ssag_points: 8,
         }
     }
 }
 
 impl ModelParams {
     /// Parse the `params` block of artifacts/manifest.json.
+    ///
+    /// The seqaddr/ssag fields are optional (older manifests predate
+    /// them) and fall back to the compiled defaults.
     pub fn from_json(j: &Json) -> crate::error::Result<Self> {
+        let d = ModelParams::default();
+        let opt = |k: &str, fallback: usize| {
+            j.get(k).and_then(Json::as_usize).unwrap_or(fallback)
+        };
         Ok(ModelParams {
             markers: j.req_usize("markers")?,
             individuals: j.req_usize("individuals")?,
@@ -67,6 +93,13 @@ impl ModelParams {
                 .collect(),
             reduce_fan: j.req_usize("reduce_fan")?,
             chunk_bytes: j.req_usize("chunk_bytes")?,
+            sa_len: opt("sa_len", d.sa_len),
+            sa_window: opt("sa_window", d.sa_window),
+            sa_bins: opt("sa_bins", d.sa_bins),
+            sa_rounds: opt("sa_rounds", d.sa_rounds),
+            ssag_len: opt("ssag_len", d.ssag_len),
+            ssag_b: opt("ssag_b", d.ssag_b),
+            ssag_points: opt("ssag_points", d.ssag_points),
         })
     }
 

@@ -1,0 +1,142 @@
+//! Synthetic series dataset for scalable-subsampling aggregation
+//! (Politis 2021): each sample is one stationary-but-correlated
+//! series of `ssag_len` points. The kernel computes the variance of
+//! non-overlapping block means at a ladder of block sizes, so the
+//! generator gives each series its own AR(1) correlation — the
+//! variance curve's decay rate genuinely differs per sample.
+
+use super::block::{Block, BlockId, KIND_SSAG};
+use super::params::ModelParams;
+use super::{Dataset, SampleMeta, Workload};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SsagConfig {
+    pub series: usize,
+    pub seed: u64,
+}
+
+impl Default for SsagConfig {
+    fn default() -> Self {
+        SsagConfig { series: 256, seed: 0x55A6_0001 }
+    }
+}
+
+/// One series sample.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub id: u64,
+    pub points: Vec<f32>, // [ssag_len]
+}
+
+#[derive(Debug, Clone)]
+pub struct SsagDataset {
+    pub params: ModelParams,
+    pub config: SsagConfig,
+    pub series: Vec<Series>,
+    metas: Vec<SampleMeta>,
+}
+
+impl SsagDataset {
+    pub fn generate(params: &ModelParams, config: SsagConfig) -> Self {
+        let mut rng = Rng::new(config.seed);
+        let len = params.ssag_len;
+        let mut series = Vec::with_capacity(config.series);
+        for id in 0..config.series as u64 {
+            let mut r = rng.fork(id);
+            let mean = 2.0 * r.f64() - 1.0;
+            let rho = 0.9 * r.f64(); // per-series correlation
+            let sigma = 0.5 + r.f64();
+            let mut prev = 0.0f64;
+            let mut points = Vec::with_capacity(len);
+            for _ in 0..len {
+                prev = rho * prev + r.normal_ms(0.0, sigma);
+                points.push((mean + prev) as f32);
+            }
+            series.push(Series { id, points });
+        }
+        let bytes = len * 4;
+        let metas = series
+            .iter()
+            .map(|s| SampleMeta { id: s.id, bytes, units: 1 })
+            .collect();
+        SsagDataset { params: params.clone(), config, series, metas }
+    }
+
+    /// Scale by appending series (job-size sweeps).
+    pub fn scaled_to(&self, target_bytes: usize) -> SsagDataset {
+        let need = target_bytes.div_ceil(self.params.ssag_len * 4);
+        if need <= self.series.len() {
+            return self.clone();
+        }
+        let config = SsagConfig { series: need, seed: self.config.seed };
+        SsagDataset::generate(&self.params, config)
+    }
+
+    pub fn sample(&self, id: u64) -> Option<&Series> {
+        self.series.get(id as usize).filter(|s| s.id == id)
+    }
+}
+
+impl Dataset for SsagDataset {
+    fn workload(&self) -> Workload {
+        Workload::Ssag
+    }
+
+    fn metas(&self) -> &[SampleMeta] {
+        &self.metas
+    }
+
+    fn encode_block(&self, id: u64) -> Block {
+        let s = self.sample(id).expect("unknown series id");
+        Block {
+            id: BlockId { kind: KIND_SSAG, sample: id },
+            units: 1,
+            payload: s.points.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SsagDataset {
+        SsagDataset::generate(
+            &ModelParams::default(),
+            SsagConfig { series: 32, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(small().series[7].points, small().series[7].points);
+    }
+
+    #[test]
+    fn block_round_trip_and_meta_bytes() {
+        let d = small();
+        let b = d.encode_block(3);
+        assert_eq!(Block::decode(&b.encode()).unwrap(), b);
+        assert_eq!(b.payload.len(), d.params.ssag_len);
+        assert_eq!(b.payload.len() * 4, d.metas()[3].bytes);
+        assert_eq!(b.units, 1);
+    }
+
+    #[test]
+    fn scaled_to_is_prefix_stable() {
+        let d = small();
+        let s = d.scaled_to(d.total_bytes() * 4);
+        assert!(s.series.len() >= d.series.len() * 4);
+        assert_eq!(s.series[5].points, d.series[5].points);
+    }
+
+    #[test]
+    fn block_size_ladder_fits() {
+        // the largest ladder rung must still give >= 2 blocks, or the
+        // block-means variance is degenerate
+        let p = ModelParams::default();
+        let b_max = p.ssag_b * p.ssag_points;
+        assert!(p.ssag_len / b_max >= 2, "{} / {}", p.ssag_len, b_max);
+    }
+}

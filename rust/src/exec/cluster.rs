@@ -56,7 +56,8 @@ use crate::cache::{CacheLayer, CacheStats};
 use crate::coordinator::assemble::TaskPartial;
 use crate::coordinator::recovery::{retry, FailurePlan};
 use crate::coordinator::reduce::{
-    finalize_netflix, reduce_eaglet, reduce_netflix,
+    finalize_netflix, finalize_seqaddr, reduce_eaglet, reduce_netflix,
+    reduce_seqaddr, reduce_ssag,
 };
 use crate::coordinator::JobOutput;
 use crate::data::{Dataset, ModelParams, Workload};
@@ -324,7 +325,7 @@ fn reduce_partials(
     collected: Vec<TaskPartial>,
 ) -> Result<JobOutput> {
     Ok(match workload {
-        Workload::Eaglet => {
+        Workload::Eaglet | Workload::Ssag => {
             let parts: Vec<(Vec<f32>, f32)> = collected
                 .into_iter()
                 .map(|p| match p {
@@ -332,10 +333,13 @@ fn reduce_partials(
                     _ => unreachable!("workload-homogeneous job"),
                 })
                 .collect();
-            let (alod, weight) = reduce_eaglet(backend, params, parts)?;
+            let (alod, weight) = match workload {
+                Workload::Eaglet => reduce_eaglet(backend, params, parts)?,
+                _ => reduce_ssag(backend, params, parts)?,
+            };
             JobOutput::Eaglet { alod, weight }
         }
-        Workload::NetflixHi | Workload::NetflixLo => {
+        Workload::NetflixHi | Workload::NetflixLo | Workload::SeqAddr => {
             let parts: Vec<Vec<f32>> = collected
                 .into_iter()
                 .map(|pt| match pt {
@@ -343,8 +347,17 @@ fn reduce_partials(
                     _ => unreachable!("workload-homogeneous job"),
                 })
                 .collect();
-            let stats = reduce_netflix(backend, params, parts)?;
-            JobOutput::Netflix(finalize_netflix(params, &stats)?)
+            let out = match workload {
+                Workload::SeqAddr => {
+                    let stats = reduce_seqaddr(backend, params, parts)?;
+                    finalize_seqaddr(params, &stats)?
+                }
+                _ => {
+                    let stats = reduce_netflix(backend, params, parts)?;
+                    finalize_netflix(params, &stats)?
+                }
+            };
+            JobOutput::Netflix(out)
         }
     })
 }

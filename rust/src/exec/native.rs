@@ -156,6 +156,115 @@ pub fn netflix_reduce(p: &ModelParams, parts: &[f32]) -> Vec<f32> {
     out
 }
 
+/// `seqaddr_map`: windowed means under sequential addressing
+/// (Pan et al. 2021). Every row reads the same `sa_rounds` window
+/// start offsets (the contiguous-access pattern the workload is
+/// about); each window mean is accumulated as `(sum, sumsq, count)`
+/// into the address bin its start offset falls in.
+///
+/// Inputs: `series [bucket, sa_len]`, `idx [sa_rounds]`; returns
+/// `[bucket, sa_bins, stat_fields]` row-major. Padding rows produce
+/// zero-mean windows and are discarded by `from_map_output`.
+pub fn seqaddr_map(
+    p: &ModelParams,
+    bucket: usize,
+    series: &[f32],
+    idx: &[i32],
+) -> Vec<f32> {
+    let (len, w) = (p.sa_len, p.sa_window);
+    let (bins, f) = (p.sa_bins, p.stat_fields);
+    let starts = len - w + 1;
+    let mut out = vec![0.0f32; bucket * bins * f];
+    for b in 0..bucket {
+        let s_b = &series[b * len..(b + 1) * len];
+        let out_b = &mut out[b * bins * f..(b + 1) * bins * f];
+        for &o in idx {
+            let o = o as usize;
+            let mean = s_b[o..o + w].iter().sum::<f32>() / w as f32;
+            let bin = o * bins / starts;
+            let base = bin * f;
+            out_b[base] += mean;
+            out_b[base + 1] += mean * mean;
+            out_b[base + 2] += 1.0;
+        }
+    }
+    out
+}
+
+/// `ssag_map`: scalable-subsampling aggregation (Politis 2021). For
+/// each rung `g` of the block-size ladder `b_g = ssag_b·(g+1)`, split
+/// the series into `q = ssag_len / b_g` non-overlapping blocks and
+/// emit the subsampling variance estimate `b_g · Var(block means)`.
+/// Deterministic — the blocks *are* the subsamples, no idx input.
+///
+/// Inputs: `series [bucket, ssag_len]`; returns `[bucket, ssag_points]`.
+pub fn ssag_map(p: &ModelParams, bucket: usize, series: &[f32]) -> Vec<f32> {
+    let len = p.ssag_len;
+    let pts = p.ssag_points;
+    let mut out = vec![0.0f32; bucket * pts];
+    let mut means = Vec::with_capacity(len / p.ssag_b.max(1) + 1);
+    for b in 0..bucket {
+        let s_b = &series[b * len..(b + 1) * len];
+        let out_b = &mut out[b * pts..(b + 1) * pts];
+        for g in 0..pts {
+            let bg = p.ssag_b * (g + 1);
+            let q = len / bg;
+            if q == 0 {
+                continue; // ladder rung larger than the series
+            }
+            means.clear();
+            let mut tbar = 0.0f32;
+            for i in 0..q {
+                let m = s_b[i * bg..(i + 1) * bg].iter().sum::<f32>()
+                    / bg as f32;
+                means.push(m);
+                tbar += m;
+            }
+            tbar /= q as f32;
+            let var = means
+                .iter()
+                .map(|m| (m - tbar) * (m - tbar))
+                .sum::<f32>()
+                / q as f32;
+            out_b[g] = bg as f32 * var;
+        }
+    }
+    out
+}
+
+/// `ssag_reduce`: weighted combine of `reduce_fan` variance-curve
+/// partials — the Eaglet algebra over `ssag_points` lanes.
+pub fn ssag_reduce(
+    p: &ModelParams,
+    parts: &[f32],
+    weights: &[f32],
+) -> (Vec<f32>, f32) {
+    let g = p.ssag_points;
+    let mut wsum = vec![0.0f32; g];
+    for (ki, &w) in weights.iter().enumerate().take(p.reduce_fan) {
+        if w == 0.0 {
+            continue;
+        }
+        for gi in 0..g {
+            wsum[gi] += parts[ki * g + gi] * w;
+        }
+    }
+    (wsum, weights.iter().sum())
+}
+
+/// `seqaddr_reduce`: sum `reduce_fan` stat tensors — the Netflix
+/// algebra over `sa_bins × stat_fields` lanes.
+pub fn seqaddr_reduce(p: &ModelParams, parts: &[f32]) -> Vec<f32> {
+    let f = p.sa_bins * p.stat_fields;
+    let mut out = vec![0.0f32; f];
+    for ki in 0..p.reduce_fan {
+        for fi in 0..f {
+            out[fi] += parts[ki * f + fi];
+        }
+    }
+    out
+}
+
 /// An [`Exec`] backend that computes every manifest entry natively.
 /// Always available — no artifacts, no XLA runtime, no filesystem.
 pub struct NativeExec {
@@ -210,6 +319,16 @@ impl Exec for NativeExec {
                 Self::check_idx(entry, idx, p.ratings_cap)?;
                 Ok(vec![netflix_map(p, entry.bucket, vals, months, mask, idx)])
             }
+            "seqaddr_map" => {
+                let series = inputs[0].as_f32()?;
+                let idx = inputs[1].as_i32()?;
+                Self::check_idx(entry, idx, p.sa_len - p.sa_window + 1)?;
+                Ok(vec![seqaddr_map(p, entry.bucket, series, idx)])
+            }
+            "ssag_map" => {
+                let series = inputs[0].as_f32()?;
+                Ok(vec![ssag_map(p, entry.bucket, series)])
+            }
             "eaglet_reduce" => {
                 let parts = inputs[0].as_f32()?;
                 let weights = inputs[1].as_f32()?;
@@ -219,6 +338,16 @@ impl Exec for NativeExec {
             "netflix_reduce" => {
                 let parts = inputs[0].as_f32()?;
                 Ok(vec![netflix_reduce(p, parts)])
+            }
+            "ssag_reduce" => {
+                let parts = inputs[0].as_f32()?;
+                let weights = inputs[1].as_f32()?;
+                let (wsum, wtot) = ssag_reduce(p, parts, weights);
+                Ok(vec![wsum, vec![wtot]])
+            }
+            "seqaddr_reduce" => {
+                let parts = inputs[0].as_f32()?;
+                Ok(vec![seqaddr_reduce(p, parts)])
             }
             other => Err(Error::Artifact(format!(
                 "native backend: unknown entry kind {other}"
@@ -379,6 +508,115 @@ mod tests {
         for fi in 0..f {
             let want: f64 =
                 (0..k).map(|ki| nparts[ki * f + fi] as f64).sum();
+            assert!((out[0][fi] as f64 - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn seqaddr_map_matches_hand_computed_stats() {
+        let p = params();
+        let ne = NativeExec::new(p.clone());
+        let entry = ne.manifest().entry("seqaddr_map", 1).unwrap().clone();
+        // a linear series: window mean at offset o is o + (w-1)/2
+        let series: Vec<f32> = (0..p.sa_len).map(|t| t as f32).collect();
+        // two draws at offset 0 and one at the last valid start
+        let last = (p.sa_len - p.sa_window) as i32;
+        let mut idx = vec![0i32; p.sa_rounds];
+        idx[p.sa_rounds - 1] = last;
+        let out = ne
+            .run(
+                &entry,
+                vec![
+                    HostTensor::F32(series, vec![1, p.sa_len]),
+                    HostTensor::I32(idx, vec![p.sa_rounds]),
+                ],
+            )
+            .unwrap();
+        let f = p.stat_fields;
+        let half = (p.sa_window - 1) as f32 / 2.0;
+        // bin 0: sa_rounds-1 draws at offset 0, mean = half
+        let n0 = (p.sa_rounds - 1) as f32;
+        assert!((out[0][0] - n0 * half).abs() < 1e-2);
+        assert!((out[0][2] - n0).abs() < 1e-6);
+        // last bin: one draw, mean = last + half
+        let lb = (p.sa_bins - 1) * f;
+        assert!((out[0][lb] - (last as f32 + half)).abs() < 1e-2);
+        assert!((out[0][lb + 2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ssag_map_matches_hand_computed_variance() {
+        let p = params();
+        let ne = NativeExec::new(p.clone());
+        let entry = ne.manifest().entry("ssag_map", 1).unwrap().clone();
+        // alternating +1/-1 at block scale b: blocks of even size have
+        // mean 0 → variance 0; constant series → variance 0 everywhere
+        let constant = vec![2.5f32; p.ssag_len];
+        let out = ne
+            .run(
+                &entry,
+                vec![HostTensor::F32(constant, vec![1, p.ssag_len])],
+            )
+            .unwrap();
+        assert!(out[0].iter().all(|&v| v.abs() < 1e-4));
+        // first half 0, second half 2: the coarsest blocks straddle
+        // means 0 and 2, giving a strictly positive estimate
+        let step: Vec<f32> = (0..p.ssag_len)
+            .map(|t| if t < p.ssag_len / 2 { 0.0 } else { 2.0 })
+            .collect();
+        let out = ne
+            .run(&entry, vec![HostTensor::F32(step, vec![1, p.ssag_len])])
+            .unwrap();
+        // hand-check rung 0: q blocks of size b, half mean 0, half
+        // mean 2 → Var = 1, estimate = b * 1
+        let b0 = p.ssag_b as f32;
+        assert!((out[0][0] - b0).abs() < 1e-3, "got {}", out[0][0]);
+        assert!(out[0].iter().all(|&v| v.is_finite() && v >= 0.0));
+    }
+
+    #[test]
+    fn series_reduce_kernels_match_f64_oracle() {
+        let p = params();
+        let ne = NativeExec::new(p.clone());
+        let k = p.reduce_fan;
+        let mut rng = crate::util::rng::Rng::new(11);
+        let g = p.ssag_points;
+        let parts: Vec<f32> =
+            (0..k * g).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let weights: Vec<f32> =
+            (0..k).map(|_| 1.0 + rng.below(9) as f32).collect();
+        let e = ne.manifest().entry("ssag_reduce", k).unwrap().clone();
+        let out = ne
+            .run(
+                &e,
+                vec![
+                    HostTensor::F32(parts.clone(), vec![k, g]),
+                    HostTensor::F32(weights.clone(), vec![k]),
+                ],
+            )
+            .unwrap();
+        for gi in 0..g {
+            let want: f64 = (0..k)
+                .map(|ki| parts[ki * g + gi] as f64 * weights[ki] as f64)
+                .sum();
+            assert!((out[0][gi] as f64 - want).abs() < 1e-3);
+        }
+        let f = p.sa_bins * p.stat_fields;
+        let sparts: Vec<f32> =
+            (0..k * f).map(|_| rng.f32() * 10.0).collect();
+        let e = ne.manifest().entry("seqaddr_reduce", k).unwrap().clone();
+        let out = ne
+            .run(
+                &e,
+                vec![HostTensor::F32(
+                    sparts.clone(),
+                    vec![k, p.sa_bins, p.stat_fields],
+                )],
+            )
+            .unwrap();
+        for fi in 0..f {
+            let want: f64 =
+                (0..k).map(|ki| sparts[ki * f + fi] as f64).sum();
             assert!((out[0][fi] as f64 - want).abs() < 1e-3);
         }
     }

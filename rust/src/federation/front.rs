@@ -430,8 +430,11 @@ impl Federation {
                     (cap.dominant_share(held), t.clone())
                 })
                 .collect();
+            // total_cmp, not partial_cmp().unwrap(): dominant shares
+            // derive from remotely-submitted job demands, and a NaN
+            // there must order deterministically, not panic the pump.
             order.sort_by(|a, b| {
-                a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
+                a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1))
             });
             let mut dispatched = false;
             for (_, tenant) in order {
@@ -439,13 +442,30 @@ impl Federation {
                 else {
                     continue;
                 };
-                let queue = self.pending.get_mut(&tenant).unwrap();
-                let pj = queue.pop_front().unwrap();
+                // `order` was built from non-empty queues, but stay
+                // panic-free if that invariant ever slips: an empty or
+                // missing queue just yields no dispatch this round.
+                let Some(queue) = self.pending.get_mut(&tenant) else {
+                    continue;
+                };
+                let Some(pj) = queue.pop_front() else {
+                    self.pending.remove(&tenant);
+                    continue;
+                };
                 if queue.is_empty() {
                     self.pending.remove(&tenant);
                 }
                 self.pending_total -= 1;
-                let svc = self.leaders[leader].as_ref().unwrap();
+                let Some(svc) = self.leaders[leader].as_ref() else {
+                    // Routed to a leader that died under us: requeue at
+                    // the front and let the next round re-route.
+                    self.pending_total += 1;
+                    self.pending
+                        .entry(tenant)
+                        .or_default()
+                        .push_front(pj);
+                    continue;
+                };
                 match svc.submit(pj.req.clone()) {
                     Ok(handle) => {
                         self.outstanding[leader] += 1;

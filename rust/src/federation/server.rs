@@ -53,6 +53,12 @@ fn decode_error(message: String) -> Error {
     }
 }
 
+/// Wire text for a poisoned federation mutex — some connection thread
+/// panicked mid-mutation, so the shared state can no longer be
+/// trusted; clients get a structured refusal instead of a hung or
+/// panicking server.
+const POISONED: &str = "front-door federation state poisoned";
+
 /// Serve one [`Federation`] on `listener` until a `Down::Shutdown`
 /// frame arrives; drains queued work and returns the final report.
 pub fn serve_frontdoor(
@@ -68,7 +74,12 @@ pub fn serve_frontdoor(
             .name("bts-frontdoor-pump".into())
             .spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
-                    fed.lock().unwrap().pump();
+                    // A poisoned federation means a connection thread
+                    // panicked mid-mutation; stop pumping instead of
+                    // cascading the panic through this thread too.
+                    let Ok(mut guard) = fed.lock() else { return };
+                    guard.pump();
+                    drop(guard);
                     thread::sleep(Duration::from_millis(2));
                 }
             })
@@ -89,12 +100,28 @@ pub fn serve_frontdoor(
                 let _ = Message::Down(Down::Shutdown).write_to(&mut wr);
                 break;
             }
-            Message::StatsReq => {
-                let stats = fed.lock().unwrap().leader_stats();
-                let _ = Message::LeaderStats { stats }.write_to(&mut wr);
-            }
+            Message::StatsReq => match fed.lock() {
+                Ok(guard) => {
+                    let stats = guard.leader_stats();
+                    drop(guard);
+                    let _ =
+                        Message::LeaderStats { stats }.write_to(&mut wr);
+                }
+                Err(_) => {
+                    let _ = Message::Error {
+                        message: POISONED.into(),
+                    }
+                    .write_to(&mut wr);
+                }
+            },
             Message::KillLeader { leader } => {
-                let mut guard = fed.lock().unwrap();
+                let Ok(mut guard) = fed.lock() else {
+                    let _ = Message::Error {
+                        message: POISONED.into(),
+                    }
+                    .write_to(&mut wr);
+                    continue;
+                };
                 match guard.kill_leader(leader as usize) {
                     Ok(()) => {
                         let stats = guard.leader_stats();
@@ -174,7 +201,11 @@ fn handle_submit(
     req: JobRequest,
     wr: &mut BufWriter<TcpStream>,
 ) {
-    let id = match fed.lock().unwrap().submit(tenant, req) {
+    let submitted = match fed.lock() {
+        Ok(mut guard) => guard.submit(tenant, req),
+        Err(_) => Err(Error::Scheduler(POISONED.into())),
+    };
+    let id = match submitted {
         Ok(id) => id,
         Err(Error::Shed { retry_after_s, reason }) => {
             let _ = Message::Shed { retry_after_s, reason }.write_to(wr);
@@ -187,7 +218,15 @@ fn handle_submit(
     };
     let deadline = Instant::now() + SERVE_JOB_DEADLINE;
     let done = loop {
-        if let Some(done) = fed.lock().unwrap().take_result(id) {
+        let polled = match fed.lock() {
+            Ok(mut guard) => guard.take_result(id),
+            Err(_) => {
+                let _ = Message::Error { message: POISONED.into() }
+                    .write_to(wr);
+                return;
+            }
+        };
+        if let Some(done) = polled {
             break done;
         }
         if Instant::now() >= deadline {

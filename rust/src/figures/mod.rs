@@ -41,6 +41,11 @@ impl Ctx {
             Workload::Eaglet => self.eaglet_s_per_mib,
             Workload::NetflixHi => self.netflix_hi_s_per_mib,
             Workload::NetflixLo => self.netflix_lo_s_per_mib,
+            // Figures model the paper's three workloads; the new
+            // kernels fall back to the recorded constants.
+            Workload::SeqAddr | Workload::Ssag => {
+                default_compute_s_per_mib(w)
+            }
         }
     }
 

@@ -61,6 +61,18 @@ fn trace_for(workload: Workload, task_bytes: usize, frac: Option<f64>) -> TraceC
         }
         Workload::NetflixHi => TraceConfig::netflix(task_bytes, frac.unwrap_or(0.5)),
         Workload::NetflixLo => TraceConfig::netflix(task_bytes, frac.unwrap_or(0.0625)),
+        // SeqAddr's sequential-addressing windows stream like the
+        // EAGLET scan (windowed sequential reads, modest reuse).
+        Workload::SeqAddr => {
+            let mut t = TraceConfig::eaglet(task_bytes);
+            if let Some(f) = frac {
+                t.subsample_frac = f;
+            }
+            t
+        }
+        // SSAG re-walks the full series once per ladder rung — access
+        // pattern matches a high-fraction subsample scan.
+        Workload::Ssag => TraceConfig::netflix(task_bytes, frac.unwrap_or(0.5)),
     }
 }
 

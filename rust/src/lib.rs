@@ -48,6 +48,7 @@ pub mod scheduler;
 pub mod serve;
 pub mod sim;
 pub mod slo;
+pub mod suite;
 pub mod transport;
 pub mod util;
 pub mod workloads;

@@ -5,6 +5,7 @@
 //! bts run [--config FILE] [--set k=v ...]       run a real job end to end
 //! bts exec [--workload W] [--cache-mb MB]
 //!     [--listen ADDR --workers-remote N] [...]  run via the cluster executor
+//! bts suite GRID.toml [--out-dir DIR]           run a declarative scenario grid
 //! bts serve [--jobs N] [--workers N]
 //!     [--listen ADDR --workers-remote N] [...]  sustained multi-tenant load
 //! bts submit [--workload W] [--deadline S]
@@ -50,6 +51,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("repro") => cmd_repro(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
         Some("exec") => cmd_exec(&args[1..]),
+        Some("suite") => cmd_suite(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("submit") => cmd_submit(&args[1..]),
         Some("frontdoor") => cmd_frontdoor(&args[1..]),
@@ -109,6 +111,16 @@ commands:
                                     output into R executed reduce
                                     partitions (bit-identical result);
                                     writes results/BENCH_exec.json
+  suite GRID.toml [--out-dir DIR]   expand a TOML scenario grid
+                                    (workload/transport/cache-mb/
+                                    affinity/speculate/batch/
+                                    turbulence/reduce-tasks axes; see
+                                    ci/suite_smoke.toml) and run every
+                                    cell with repetitions through the
+                                    cluster executor; hard-errors if
+                                    any cell's repetitions disagree on
+                                    the job output; writes one row per
+                                    cell to results/BENCH_suite.json
   serve [--jobs N] [--workers N] [--rate R] [--max-active N]
         [--samples N] [--seed S] [--cache-mb MB] [--affinity on|off]
         [--speculate on|off] [--straggler-pct P]
@@ -185,12 +197,7 @@ fn on_off_flag(f: &Flags, name: &str, default: bool) -> Result<bool> {
 /// N = 1 (the default) keeps the leader-side seq-ordered reduce; N > 1
 /// runs the executed shuffle + reduce phase on the worker pool.
 fn reduce_flags(f: &Flags) -> Result<(usize, bts::reduce::Partitioner)> {
-    let r: usize = f.num("--reduce-tasks", 1)?;
-    if r == 0 {
-        return Err(Error::Config(
-            "--reduce-tasks must be at least 1".into(),
-        ));
-    }
+    let r: usize = f.num_at_least("--reduce-tasks", 1, 1)?;
     let p = match f.get("--partitioner") {
         None => bts::reduce::Partitioner::Hash,
         Some(v) => bts::reduce::Partitioner::parse(v).ok_or_else(|| {
@@ -215,8 +222,10 @@ fn speculation_flags(f: &Flags) -> Result<(bool, f64)> {
 
 fn cmd_repro(args: &[String]) -> Result<()> {
     let f = Flags::parse(args, &["--only", "--out"])?;
-    let only: Option<Vec<&str>> =
-        f.get("--only").map(|s| s.split(',').collect());
+    // repeatable + comma-splittable; `--only fig4,` is an error
+    let only_ids = f.list("--only")?;
+    let only: Option<Vec<&str>> = (!only_ids.is_empty())
+        .then(|| only_ids.iter().map(String::as_str).collect());
     let out_dir = f.get("--out");
     if let Some(d) = out_dir {
         std::fs::create_dir_all(d)?;
@@ -374,33 +383,12 @@ fn remote_flags(
     }
 }
 
-/// The job statistic as deterministic JSON — what the CI transport
-/// smoke diffs between an in-proc and a loopback-TCP run of the same
-/// seed (bit-identical outputs ⇒ byte-identical files).
+/// The job statistic as deterministic JSON — what the CI transport and
+/// suite smokes diff between an in-proc and a loopback-TCP run of the
+/// same seed (bit-identical outputs ⇒ byte-identical files). Lives on
+/// [`bts::coordinator::JobOutput`] so `bts suite` rows share it.
 fn output_json(output: &bts::coordinator::JobOutput) -> bts::util::json::Json {
-    use bts::util::json::{arr, num, obj, s};
-    match output {
-        bts::coordinator::JobOutput::Eaglet { alod, weight } => obj(vec![
-            ("workload", s("eaglet")),
-            ("weight", num(*weight as f64)),
-            (
-                "alod",
-                arr(alod.iter().map(|&v| num(v as f64)).collect()),
-            ),
-        ]),
-        bts::coordinator::JobOutput::Netflix(stats) => obj(vec![
-            ("workload", s("netflix")),
-            ("mean", arr(stats.mean.iter().map(|&v| num(v)).collect())),
-            (
-                "ci_half",
-                arr(stats.ci_half.iter().map(|&v| num(v)).collect()),
-            ),
-            (
-                "count",
-                arr(stats.count.iter().map(|&v| num(v)).collect()),
-            ),
-        ]),
-    }
+    output.to_json()
 }
 
 fn cmd_exec(args: &[String]) -> Result<()> {
@@ -546,8 +534,56 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         std::fs::write(out, rec.to_string_pretty())?;
         println!("wrote {out}");
     }
-    let path = bts::util::bench_record::write("exec", vec![r.metrics_json()])?;
+    let mut rec = r.metrics_json();
+    if let bts::util::json::Json::Obj(m) = &mut rec {
+        m.insert("label".into(), bts::util::json::s(w.name()));
+    }
+    let path = bts::util::bench_record::write("exec", vec![rec])?;
     println!("wrote {path}");
+    Ok(())
+}
+
+/// `bts suite GRID.toml` — expand a declarative scenario grid and run
+/// every cell through the cluster executor, enforcing repetition
+/// bit-identity and writing one row per cell to
+/// `results/BENCH_suite.json` (see [`bts::suite`]).
+fn cmd_suite(args: &[String]) -> Result<()> {
+    use bts::exec::Backend;
+    use bts::suite::{cell_label, run_suite, SuiteSpec};
+
+    let (path, rest) = match args.first() {
+        Some(p) if !p.starts_with("--") => (p.as_str(), &args[1..]),
+        _ => {
+            return Err(Error::Config(
+                "usage: bts suite GRID.toml [--out-dir DIR]".into(),
+            ))
+        }
+    };
+    let f = Flags::parse(rest, &["--out-dir"])?;
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        Error::Config(format!("cannot read grid file {path}: {e}"))
+    })?;
+    let spec = SuiteSpec::parse(&text)?;
+    let backend = Arc::new(Backend::auto());
+    println!(
+        "suite {}: {} axes -> {} cells x {} reps ({} samples/cell), \
+         backend {}",
+        spec.name,
+        spec.axes.len(),
+        spec.n_cells(),
+        spec.reps,
+        spec.samples,
+        backend.name()
+    );
+    for (ci, cell) in spec.cells().iter().enumerate() {
+        println!("  cell {ci:3}: {}", cell_label(cell));
+    }
+    let rows = run_suite(&spec, backend)?;
+    let n = rows.len();
+    let out_dir = f.get("--out-dir").unwrap_or("results");
+    let out = bts::util::bench_record::write_in(out_dir, "suite", rows)?;
+    println!("all {n} cells deterministic across {} reps", spec.reps);
+    println!("wrote {out}");
     Ok(())
 }
 
@@ -614,10 +650,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "admission rejected {} infeasible-deadline submissions at the door",
         out.report.jobs_rejected
     );
-    let path = bts::util::bench_record::write(
-        "serve",
-        vec![out.report.metrics_json()],
-    )?;
+    let mut rec = out.report.metrics_json();
+    if let bts::util::json::Json::Obj(m) = &mut rec {
+        m.insert(
+            "label".into(),
+            bts::util::json::s(&format!(
+                "jobs={} workers={}",
+                cfg.jobs, cfg.workers
+            )),
+        );
+    }
+    let path = bts::util::bench_record::write("serve", vec![rec])?;
     println!("wrote {path}");
     Ok(())
 }
@@ -829,13 +872,18 @@ fn cmd_frontdoor(args: &[String]) -> Result<()> {
         cfg.workers_per_leader,
         backend.name()
     );
+    let label = format!(
+        "leaders={} workers={}",
+        cfg.leaders, cfg.workers_per_leader
+    );
     let fed = Federation::start(backend, cfg)?;
     let report = serve_frontdoor(listener, fed)?;
     println!("{}", report.render());
-    let path = bts::util::bench_record::write(
-        "frontdoor",
-        vec![report.metrics_json()],
-    )?;
+    let mut rec = report.metrics_json();
+    if let bts::util::json::Json::Obj(m) = &mut rec {
+        m.insert("label".into(), bts::util::json::s(&label));
+    }
+    let path = bts::util::bench_record::write("frontdoor", vec![rec])?;
     println!("wrote {path}");
     Ok(())
 }

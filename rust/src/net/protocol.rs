@@ -409,6 +409,8 @@ fn workload_tag(w: Workload) -> u8 {
         Workload::Eaglet => 0,
         Workload::NetflixHi => 1,
         Workload::NetflixLo => 2,
+        Workload::SeqAddr => 3,
+        Workload::Ssag => 4,
     }
 }
 
@@ -417,6 +419,8 @@ fn workload_from(tag: u8) -> Result<Workload> {
         0 => Ok(Workload::Eaglet),
         1 => Ok(Workload::NetflixHi),
         2 => Ok(Workload::NetflixLo),
+        3 => Ok(Workload::SeqAddr),
+        4 => Ok(Workload::Ssag),
         other => Err(Error::Protocol(format!("bad workload tag {other}"))),
     }
 }
@@ -1446,6 +1450,8 @@ mod tests {
         round_trip(&Message::Welcome { worker: 7 });
         round_trip(&sample_task(Workload::Eaglet));
         round_trip(&sample_task(Workload::NetflixHi));
+        round_trip(&sample_task(Workload::SeqAddr));
+        round_trip(&sample_task(Workload::Ssag));
         round_trip(&Message::Down(Down::Abort {
             job: 12,
             upto_attempt: 3,
@@ -1453,6 +1459,7 @@ mod tests {
         round_trip(&Message::Down(Down::Shutdown));
         round_trip(&sample_reduce_task(Workload::Eaglet));
         round_trip(&sample_reduce_task(Workload::NetflixLo));
+        round_trip(&sample_reduce_task(Workload::Ssag));
         round_trip(&sample_reduce_done());
         round_trip(&Message::Up(Up::ReduceDone {
             job: 0,
@@ -1764,6 +1771,24 @@ mod tests {
         assert!(Message::decode(&payload).is_err());
     }
 
+    /// Regression: a `TaskBatch` frame (tag 28) cut off at *any* byte
+    /// boundary — a peer dying mid-write, or a proxy truncating the
+    /// stream — must decode to a clean error at every prefix length,
+    /// never a panic and never a silently shorter batch.
+    #[test]
+    fn truncated_task_batch_frames_error_at_every_prefix() {
+        let payload = sample_task_batch().encode();
+        assert_eq!(payload[0], TAG_TASK_BATCH);
+        assert!(Message::decode(&payload).is_ok(), "full frame decodes");
+        for len in 0..payload.len() {
+            assert!(
+                Message::decode(&payload[..len]).is_err(),
+                "prefix of {len}/{} bytes decoded as a valid frame",
+                payload.len()
+            );
+        }
+    }
+
     #[test]
     fn garbage_payloads_never_panic() {
         // Fuzz decode over random byte strings — errors are fine,
@@ -1875,8 +1900,7 @@ mod tests {
 
     #[test]
     fn workload_tags_round_trip() {
-        for w in [Workload::Eaglet, Workload::NetflixHi, Workload::NetflixLo]
-        {
+        for w in Workload::ALL {
             assert_eq!(workload_from(workload_tag(w)).unwrap(), w);
         }
         assert!(workload_from(7).is_err());

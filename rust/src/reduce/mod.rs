@@ -4,7 +4,8 @@
 //! phase lived as the analytical model in [`crate::sim::reduce_model`].
 //! This module is the *execution* half of that pair: map partials are
 //! sliced into per-partition **fragments** keyed by the workload's
-//! reduce keys (EAGLET: LOD grid bins; Netflix: months), staged in the
+//! reduce keys (EAGLET: LOD grid bins; Netflix: months; SeqAddr:
+//! address bins; SSAG: block-size rungs), staged in the
 //! leader's replicated store under shuffle keys, and streaming-merged
 //! by reducer tasks that run in the same `worker_body` loop as map
 //! slots. `sim::reduce_model` stays the model counterpart —
@@ -41,7 +42,8 @@
 use std::sync::Arc;
 
 use crate::coordinator::reduce::{
-    finalize_netflix, reduce_eaglet, reduce_netflix,
+    finalize_netflix, finalize_seqaddr, reduce_eaglet, reduce_netflix,
+    reduce_seqaddr, reduce_ssag,
 };
 use crate::coordinator::{JobOutput, TaskPartial};
 use crate::data::{ModelParams, Workload};
@@ -184,50 +186,58 @@ pub fn build_plan(
 }
 
 /// Number of reduce keys for a workload: EAGLET reduces over the LOD
-/// grid, Netflix over months.
+/// grid, Netflix over months, SeqAddr over address bins, SSAG over
+/// the block-size ladder.
 pub fn n_keys(workload: Workload, p: &ModelParams) -> usize {
     match workload {
         Workload::Eaglet => p.grid,
         Workload::NetflixHi | Workload::NetflixLo => p.months,
+        Workload::SeqAddr => p.sa_bins,
+        Workload::Ssag => p.ssag_points,
     }
 }
 
-/// Output lanes per key (EAGLET: one ALOD value; Netflix: the
-/// `(sum, sumsq, count)` stat fields).
+/// Output lanes per key: one value for the weighted-mean-curve
+/// workloads (EAGLET ALOD, SSAG variance), the `(sum, sumsq, count)`
+/// stat fields for the moment workloads (Netflix, SeqAddr).
 pub fn lanes_per_key(workload: Workload, p: &ModelParams) -> usize {
     match workload {
-        Workload::Eaglet => 1,
-        Workload::NetflixHi | Workload::NetflixLo => p.stat_fields,
+        Workload::Eaglet | Workload::Ssag => 1,
+        Workload::NetflixHi | Workload::NetflixLo | Workload::SeqAddr => {
+            p.stat_fields
+        }
     }
 }
 
 /// Observed per-key weights from the complete map-partial set, in
-/// `seq` order. EAGLET grid bins carry uniform weight (every partial
-/// touches every bin — skew degenerates to balanced greedy, which is
-/// why EAGLET stays flat in Fig 16); Netflix months are weighted by
-/// their rating counts, the real hot-key signal.
+/// `seq` order. Curve workloads carry uniform weight (every partial
+/// touches every key — skew degenerates to balanced greedy, which is
+/// why EAGLET stays flat in Fig 16); the moment workloads are
+/// weighted by their per-key counts, the real hot-key signal
+/// (Netflix: rating draws per month; SeqAddr: window draws per
+/// address bin).
 pub fn key_weights(
     workload: Workload,
     p: &ModelParams,
     partials: &[TaskPartial],
 ) -> Result<Vec<f64>> {
+    let keys = n_keys(workload, p);
     match workload {
-        Workload::Eaglet => Ok(vec![1.0; p.grid]),
-        Workload::NetflixHi | Workload::NetflixLo => {
+        Workload::Eaglet | Workload::Ssag => Ok(vec![1.0; keys]),
+        Workload::NetflixHi | Workload::NetflixLo | Workload::SeqAddr => {
             let f = p.stat_fields;
-            let mut w = vec![0.0f64; p.months];
+            let mut w = vec![0.0f64; keys];
             for t in partials {
                 let TaskPartial::Netflix { stats } = t else {
                     return Err(Error::Scheduler(
-                        "netflix job produced a non-netflix partial"
+                        "moment-keyed job produced a curve partial"
                             .into(),
                     ));
                 };
-                if stats.len() != p.months * f {
+                if stats.len() != keys * f {
                     return Err(Error::Scheduler(format!(
-                        "partial stats {} != {}×{f}",
-                        stats.len(),
-                        p.months
+                        "partial stats {} != {keys}×{f}",
+                        stats.len()
                     )));
                 }
                 for (m, wm) in w.iter_mut().enumerate() {
@@ -391,12 +401,11 @@ pub fn slice_partial(
 ) -> Result<Fragment> {
     match partial {
         TaskPartial::Eaglet { alod, weight } => {
-            if alod.len() != p.grid || plan.assign.len() != p.grid {
+            if alod.len() != plan.assign.len() {
                 return Err(Error::Scheduler(format!(
-                    "eaglet partial/plan {} / {} != grid {}",
+                    "curve partial {} != plan keys {}",
                     alod.len(),
-                    plan.assign.len(),
-                    p.grid
+                    plan.assign.len()
                 )));
             }
             Ok(Fragment::Eaglet {
@@ -410,13 +419,11 @@ pub fn slice_partial(
         }
         TaskPartial::Netflix { stats } => {
             let f = p.stat_fields;
-            if stats.len() != p.months * f || plan.assign.len() != p.months
-            {
+            if stats.len() != plan.assign.len() * f {
                 return Err(Error::Scheduler(format!(
-                    "netflix partial/plan {} / {} != {}×{f}",
+                    "stats partial {} != plan keys {}×{f}",
                     stats.len(),
-                    plan.assign.len(),
-                    p.months
+                    plan.assign.len()
                 )));
             }
             Ok(Fragment::Netflix {
@@ -445,55 +452,60 @@ pub fn run_reduce(
     workload: Workload,
     fragments: &[Fragment],
 ) -> Result<TaskPartial> {
+    let keys = n_keys(workload, p);
     match workload {
-        Workload::Eaglet => {
+        Workload::Eaglet | Workload::Ssag => {
             let mut partials = Vec::with_capacity(fragments.len());
             for frag in fragments {
                 let Fragment::Eaglet { weight, entries } = frag else {
                     return Err(Error::Scheduler(
-                        "eaglet reduce got a netflix fragment".into(),
+                        "curve reduce got a stats fragment".into(),
                     ));
                 };
-                let mut alod = vec![0.0f32; p.grid];
+                let mut alod = vec![0.0f32; keys];
                 for &(k, v) in entries {
                     let lane = alod.get_mut(k as usize).ok_or_else(|| {
                         Error::Protocol(format!(
-                            "fragment key {k} outside grid {}",
-                            p.grid
+                            "fragment key {k} outside curve {keys}"
                         ))
                     })?;
                     *lane = v;
                 }
                 partials.push((alod, *weight));
             }
-            let (alod, weight) = reduce_eaglet(rt, p, partials)?;
+            let (alod, weight) = match workload {
+                Workload::Eaglet => reduce_eaglet(rt, p, partials)?,
+                _ => reduce_ssag(rt, p, partials)?,
+            };
             Ok(TaskPartial::Eaglet { alod, weight })
         }
-        Workload::NetflixHi | Workload::NetflixLo => {
+        Workload::NetflixHi | Workload::NetflixLo | Workload::SeqAddr => {
             let f = p.stat_fields;
             let mut partials = Vec::with_capacity(fragments.len());
             for frag in fragments {
                 let Fragment::Netflix { entries } = frag else {
                     return Err(Error::Scheduler(
-                        "netflix reduce got an eaglet fragment".into(),
+                        "stats reduce got a curve fragment".into(),
                     ));
                 };
-                let mut stats = vec![0.0f32; p.months * f];
+                let mut stats = vec![0.0f32; keys * f];
                 for (k, lanes) in entries {
                     let k = *k as usize;
-                    if k >= p.months || lanes.len() != f {
+                    if k >= keys || lanes.len() != f {
                         return Err(Error::Protocol(format!(
-                            "fragment month {k} / {} lanes outside \
-                             {}×{f}",
-                            lanes.len(),
-                            p.months
+                            "fragment key {k} / {} lanes outside \
+                             {keys}×{f}",
+                            lanes.len()
                         )));
                     }
                     stats[k * f..(k + 1) * f].copy_from_slice(lanes);
                 }
                 partials.push(stats);
             }
-            let stats = reduce_netflix(rt, p, partials)?;
+            let stats = match workload {
+                Workload::SeqAddr => reduce_seqaddr(rt, p, partials)?,
+                _ => reduce_netflix(rt, p, partials)?,
+            };
             Ok(TaskPartial::Netflix { stats })
         }
     }
@@ -515,16 +527,17 @@ pub fn assemble_output(
             plan.partitions
         )));
     }
+    let keys = n_keys(workload, p);
     match workload {
-        Workload::Eaglet => {
-            let mut alod = vec![0.0f32; p.grid];
+        Workload::Eaglet | Workload::Ssag => {
+            let mut alod = vec![0.0f32; keys];
             let mut weight = None;
             for (k, lane) in alod.iter_mut().enumerate() {
                 let TaskPartial::Eaglet { alod: part, weight: w } =
                     &reduced[plan.assign[k] as usize]
                 else {
                     return Err(Error::Scheduler(
-                        "eaglet assembly over a netflix partial".into(),
+                        "curve assembly over a stats partial".into(),
                     ));
                 };
                 *lane = part[k];
@@ -533,7 +546,7 @@ pub fn assemble_output(
             let TaskPartial::Eaglet { weight: w0, .. } = &reduced[0]
             else {
                 return Err(Error::Scheduler(
-                    "eaglet assembly over a netflix partial".into(),
+                    "curve assembly over a stats partial".into(),
                 ));
             };
             Ok(JobOutput::Eaglet {
@@ -541,21 +554,25 @@ pub fn assemble_output(
                 weight: weight.unwrap_or(*w0),
             })
         }
-        Workload::NetflixHi | Workload::NetflixLo => {
+        Workload::NetflixHi | Workload::NetflixLo | Workload::SeqAddr => {
             let f = p.stat_fields;
-            let mut stats = vec![0.0f32; p.months * f];
-            for m in 0..p.months {
+            let mut stats = vec![0.0f32; keys * f];
+            for m in 0..keys {
                 let TaskPartial::Netflix { stats: part } =
                     &reduced[plan.assign[m] as usize]
                 else {
                     return Err(Error::Scheduler(
-                        "netflix assembly over an eaglet partial".into(),
+                        "stats assembly over a curve partial".into(),
                     ));
                 };
                 stats[m * f..(m + 1) * f]
                     .copy_from_slice(&part[m * f..(m + 1) * f]);
             }
-            Ok(JobOutput::Netflix(finalize_netflix(p, &stats)?))
+            let out = match workload {
+                Workload::SeqAddr => finalize_seqaddr(p, &stats)?,
+                _ => finalize_netflix(p, &stats)?,
+            };
+            Ok(JobOutput::Netflix(out))
         }
     }
 }
@@ -718,7 +735,7 @@ mod tests {
     /// The determinism theorem, in miniature: slicing synthetic map
     /// partials by any plan, reducing each partition with the same
     /// tree, and assembling owned lanes reproduces the r=1 reduce
-    /// bit for bit — for both workloads and both partitioners.
+    /// bit for bit — for all four workloads and both partitioners.
     #[test]
     fn sliced_reduce_matches_single_reducer_bit_for_bit() {
         let p = params();
@@ -785,6 +802,61 @@ mod tests {
                 );
                 assert_eq!(got, single, "netflix r={r} {partitioner:?}");
             }
+        }
+
+        // SSAG rides the curve algebra over ssag_points keys
+        let partials: Vec<TaskPartial> = (0..6)
+            .map(|_| TaskPartial::Eaglet {
+                alod: (0..p.ssag_points)
+                    .map(|_| rng.f32() * 2.0)
+                    .collect(),
+                weight: rng.range(1, 9) as f32,
+            })
+            .collect();
+        let single =
+            run_reduce_all(&backend, &p, Workload::Ssag, &partials, 1);
+        for r in [2usize, 3] {
+            let got = run_reduce_all_with(
+                &backend,
+                &p,
+                Workload::Ssag,
+                &partials,
+                r,
+                Partitioner::Skew,
+            );
+            assert_eq!(got, single, "ssag r={r}");
+        }
+
+        // SeqAddr rides the moment algebra over sa_bins keys
+        let partials: Vec<TaskPartial> = (0..5)
+            .map(|_| {
+                let mut stats = vec![0.0f32; p.sa_bins * f];
+                for b in 0..p.sa_bins {
+                    let n = rng.below(12) as f32;
+                    stats[b * f] = n * 1.5;
+                    stats[b * f + 1] = n * 4.0;
+                    stats[b * f + 2] = n;
+                }
+                TaskPartial::Netflix { stats }
+            })
+            .collect();
+        let single = run_reduce_all(
+            &backend,
+            &p,
+            Workload::SeqAddr,
+            &partials,
+            1,
+        );
+        for r in [2usize, 4] {
+            let got = run_reduce_all_with(
+                &backend,
+                &p,
+                Workload::SeqAddr,
+                &partials,
+                r,
+                Partitioner::Skew,
+            );
+            assert_eq!(got, single, "seqaddr r={r}");
         }
     }
 

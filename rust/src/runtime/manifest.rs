@@ -46,7 +46,8 @@ impl TensorSpec {
 pub struct Entry {
     pub name: String,
     /// Entry family: eaglet_map, netflix_map_hi, netflix_map_lo,
-    /// eaglet_reduce, netflix_reduce.
+    /// seqaddr_map, ssag_map, eaglet_reduce, netflix_reduce,
+    /// seqaddr_reduce, ssag_reduce.
     pub kind: String,
     /// Samples-per-task bucket (map) or fan-in K (reduce).
     pub bucket: usize,
@@ -166,6 +167,33 @@ impl Manifest {
                     )],
                 });
             }
+            entries.push(Entry {
+                name: format!("seqaddr_map_b{b}"),
+                kind: "seqaddr_map".to_string(),
+                bucket: b,
+                file: format!("seqaddr_map_b{b}.hlo.txt"),
+                inputs: vec![
+                    spec("series", vec![b, params.sa_len], F32),
+                    spec("idx", vec![params.sa_rounds], I32),
+                ],
+                outputs: vec![spec(
+                    "stats",
+                    vec![b, params.sa_bins, params.stat_fields],
+                    F32,
+                )],
+            });
+            entries.push(Entry {
+                name: format!("ssag_map_b{b}"),
+                kind: "ssag_map".to_string(),
+                bucket: b,
+                file: format!("ssag_map_b{b}.hlo.txt"),
+                inputs: vec![spec("series", vec![b, params.ssag_len], F32)],
+                outputs: vec![spec(
+                    "var",
+                    vec![b, params.ssag_points],
+                    F32,
+                )],
+            });
         }
         entries.push(Entry {
             name: "eaglet_reduce".to_string(),
@@ -194,6 +222,40 @@ impl Manifest {
             outputs: vec![spec(
                 "stats",
                 vec![params.months, params.stat_fields],
+                F32,
+            )],
+        });
+        entries.push(Entry {
+            name: "ssag_reduce".to_string(),
+            kind: "ssag_reduce".to_string(),
+            bucket: params.reduce_fan,
+            file: "ssag_reduce.hlo.txt".to_string(),
+            inputs: vec![
+                spec(
+                    "parts",
+                    vec![params.reduce_fan, params.ssag_points],
+                    F32,
+                ),
+                spec("weights", vec![params.reduce_fan], F32),
+            ],
+            outputs: vec![
+                spec("wsum", vec![params.ssag_points], F32),
+                spec("wtot", vec![1], F32),
+            ],
+        });
+        entries.push(Entry {
+            name: "seqaddr_reduce".to_string(),
+            kind: "seqaddr_reduce".to_string(),
+            bucket: params.reduce_fan,
+            file: "seqaddr_reduce.hlo.txt".to_string(),
+            inputs: vec![spec(
+                "parts",
+                vec![params.reduce_fan, params.sa_bins, params.stat_fields],
+                F32,
+            )],
+            outputs: vec![spec(
+                "stats",
+                vec![params.sa_bins, params.stat_fields],
                 F32,
             )],
         });
@@ -307,8 +369,8 @@ mod tests {
     fn synthetic_mirrors_aot_entry_points() {
         let p = ModelParams::default();
         let m = Manifest::synthetic(p.clone());
-        // 3 map kinds × buckets + 2 reduce kinds (aot.py's count).
-        assert_eq!(m.entries.len(), 3 * p.buckets.len() + 2);
+        // 5 map kinds × buckets + 4 reduce kinds.
+        assert_eq!(m.entries.len(), 5 * p.buckets.len() + 4);
         let e = m.map_entry("eaglet_map", 3).unwrap();
         assert_eq!(e.bucket, 4);
         assert_eq!(e.name, "eaglet_map_b4");
@@ -319,9 +381,26 @@ mod tests {
                 assert!(m.entry(kind, b).is_some(), "missing {kind} b{b}");
             }
         }
+        for kind in ["seqaddr_map", "ssag_map"] {
+            for &b in &p.buckets {
+                assert!(m.entry(kind, b).is_some(), "missing {kind} b{b}");
+            }
+        }
+        let sa = m.entry("seqaddr_map", 1).unwrap();
+        assert_eq!(sa.inputs[0].shape, vec![1, p.sa_len]);
+        assert_eq!(sa.inputs[1].shape, vec![p.sa_rounds]);
+        assert_eq!(
+            sa.outputs[0].shape,
+            vec![1, p.sa_bins, p.stat_fields]
+        );
+        let sg = m.entry("ssag_map", 1).unwrap();
+        assert_eq!(sg.inputs.len(), 1);
+        assert_eq!(sg.outputs[0].shape, vec![1, p.ssag_points]);
         let r = m.entry("eaglet_reduce", p.reduce_fan).unwrap();
         assert_eq!(r.outputs.len(), 2);
         assert!(m.entry("netflix_reduce", p.reduce_fan).is_some());
+        assert!(m.entry("ssag_reduce", p.reduce_fan).is_some());
+        assert!(m.entry("seqaddr_reduce", p.reduce_fan).is_some());
         // hi entries subsample more than lo
         let hi = m.entry("netflix_map_hi", 1).unwrap();
         let lo = m.entry("netflix_map_lo", 1).unwrap();

@@ -26,9 +26,13 @@ use crate::reduce::Partitioner;
 /// thesis-scale constants `sim::default_params` is calibrated with
 /// (§4.1.1: a bi-polar family ≈ 576 KB, a Netflix movie ≈ 118 KB).
 pub fn nominal_sample_bytes(workload: Workload) -> usize {
+    let p = crate::data::ModelParams::default();
     match workload {
         Workload::Eaglet => 576 * 1024,
         Workload::NetflixHi | Workload::NetflixLo => 118 * 1024,
+        // series workloads: one bare f32 series per sample
+        Workload::SeqAddr => p.sa_len * 4,
+        Workload::Ssag => p.ssag_len * 4,
     }
 }
 

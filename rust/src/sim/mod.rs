@@ -52,6 +52,8 @@ pub fn penalty_curve(workload: Workload, cache: &CacheConfig) -> Vec<CurvePoint>
     let base_cpi = match workload {
         Workload::Eaglet => 12.0,
         Workload::NetflixHi | Workload::NetflixLo => 5.0,
+        // Executed-only kernels: scan-shaped, Netflix-like stall mix.
+        Workload::SeqAddr | Workload::Ssag => 5.0,
     };
     let extra = base_cpi - 1.0;
     let min_cpi = profile
@@ -91,6 +93,10 @@ pub fn default_params(
         Workload::Eaglet => (576 * 1024, ReduceParams::eaglet_like(), 6, 0.40),
         Workload::NetflixHi => (118 * 1024, ReduceParams::netflix_like(), 1, 0.30),
         Workload::NetflixLo => (118 * 1024, ReduceParams::netflix_like(), 1, 0.30),
+        // One bare f32 series per sample (sa_len/ssag_len defaults);
+        // single-binary kernels shaped like the Netflix reduce.
+        Workload::SeqAddr => (2 * 1024, ReduceParams::netflix_like(), 1, 0.30),
+        Workload::Ssag => (1024, ReduceParams::netflix_like(), 1, 0.30),
     };
     SimParams {
         job_bytes,

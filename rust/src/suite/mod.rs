@@ -1,0 +1,755 @@
+//! `bts suite` — the declarative scenario-matrix runner.
+//!
+//! A suite is a TOML grid file (parsed by [`toml::TomlDoc`], a
+//! dependency-free subset reader) that names axes over the executor's
+//! knobs — workload, transport, cache budget, affinity, speculation,
+//! dispatch batching, turbulence, reduce fan-out — and the runner
+//! expands the cross product, runs every cell `reps` times through the
+//! same [`ExecConfig`] plumbing `bts exec` uses, and emits one
+//! schema-versioned `results/BENCH_suite.json` with a row per cell:
+//! the cell's axis values, the full [`ExecResult::metrics_json`]
+//! counter set, and the job `output` subtree.
+//!
+//! Two properties make the suite an *oracle*, not just a sweep:
+//!
+//! * **Repetition bit-identity.** Every cell runs `reps` times and the
+//!   runner hard-errors if any repetition's `output` differs — the
+//!   platform's determinism contract (same seed ⇒ same statistic,
+//!   regardless of transport, cache, speculation, or turbulence) is
+//!   enforced on every cell of every suite, every run.
+//! * **Exec equivalence.** Cells deliberately reuse `bts exec`'s
+//!   defaults (seed, kneepoint cap, backend), so CI can diff any
+//!   cell's `output` against a direct `bts exec --workload W` run.
+//!
+//! Grid file shape (see `[grid]` keys in [`GRID_KEYS`]):
+//!
+//! ```toml
+//! [suite]
+//! name = "smoke"
+//! reps = 2
+//! samples = 24
+//!
+//! [factors]
+//! caches = [0, 8]
+//!
+//! [grid]
+//! workload = ["seqaddr", "ssag"]   # array ⇒ axis
+//! transport = ["inproc", "tcp"]
+//! cache-mb = "$caches$"            # whole-value factor reference
+//! speculate = "off"                # scalar ⇒ fixed for every cell
+//! ```
+//!
+//! Axis order is declaration order: the first `[grid]` key is the
+//! outermost loop of the cross product, so rows come out grouped the
+//! way the file reads.
+
+pub mod toml;
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::cachesim::CacheConfig;
+use crate::data::{Dataset, Workload};
+use crate::error::{Error, Result};
+use crate::exec::{
+    run_cluster_with_recovery, Backend, ExecConfig, ExecResult,
+};
+use crate::kneepoint::{kneepoint_bytes, TaskSizing};
+use crate::net::run_worker;
+use crate::reduce::Partitioner;
+use crate::scheduler::SchedConfig;
+use crate::transport::{RemoteWorkerOpts, RemoteWorkers};
+use crate::util::json::{num, s, Json};
+use crate::util::testutil::Turbulence;
+use crate::workloads::build_small;
+
+use self::toml::TomlDoc;
+
+/// The knobs a `[grid]` may sweep. Anything else is a config error —
+/// a typo'd axis must not silently run a default.
+pub const GRID_KEYS: &[&str] = &[
+    "workload",
+    "transport",
+    "cache-mb",
+    "affinity",
+    "speculate",
+    "straggler-pct",
+    "batch",
+    "turbulence",
+    "reduce-tasks",
+    "partitioner",
+    "workers",
+];
+
+/// Remote TCP slots a `transport = "tcp"` cell runs (plus one local
+/// slot for the leader-side mix, mirroring the integration oracles).
+const TCP_REMOTE_SLOTS: usize = 2;
+/// Job-level recovery budget per cell run (matches `bts exec`'s
+/// recovery-capable siblings and the oracle suites).
+const RECOVERY_ATTEMPTS: u32 = 3;
+/// The `turbulence = "slow"` axis: worker 0 is delayed this much per
+/// task from its third task on. Delay-only (no fault rules): injected
+/// latency must never change the statistic, and fault rules re-fire on
+/// every recovery attempt, which would exhaust the budget here.
+const SLOW_DELAY: Duration = Duration::from_millis(3);
+
+/// A parsed suite: run parameters plus the grid axes in declaration
+/// order. Singleton axes are fixed values; multi-valued axes multiply
+/// the cell count.
+#[derive(Debug, Clone)]
+pub struct SuiteSpec {
+    pub name: String,
+    /// Repetitions per cell (all must produce bit-identical `output`).
+    pub reps: usize,
+    /// Samples per synthetic dataset (shared by every cell).
+    pub samples: usize,
+    pub axes: Vec<(String, Vec<Json>)>,
+}
+
+impl SuiteSpec {
+    pub fn parse(text: &str) -> Result<SuiteSpec> {
+        let doc = TomlDoc::parse(text)?;
+        for (name, _) in &doc.sections {
+            if !matches!(name.as_str(), "suite" | "factors" | "grid") {
+                return Err(Error::Config(format!(
+                    "unknown section [{name}]; want [suite], [factors], \
+                     [grid]"
+                )));
+            }
+        }
+
+        let mut spec = SuiteSpec {
+            name: "suite".into(),
+            reps: 2,
+            samples: 24,
+            axes: Vec::new(),
+        };
+        for (key, value) in doc.section("suite").unwrap_or(&[]) {
+            match key.as_str() {
+                "name" => match value {
+                    Json::Str(v) => spec.name = v.clone(),
+                    _ => {
+                        return Err(Error::Config(
+                            "suite.name must be a string".into(),
+                        ))
+                    }
+                },
+                "reps" => {
+                    spec.reps = positive_int(value, "suite.reps")?
+                }
+                "samples" => {
+                    spec.samples = positive_int(value, "suite.samples")?
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown key `{other}` in [suite]; want name, \
+                         reps, samples"
+                    )))
+                }
+            }
+        }
+
+        let factors = doc.section("factors").unwrap_or(&[]);
+        let grid = doc.section("grid").ok_or_else(|| {
+            Error::Config("grid file has no [grid] section".into())
+        })?;
+        if grid.is_empty() {
+            return Err(Error::Config("[grid] has no axes".into()));
+        }
+        for (key, value) in grid {
+            if !GRID_KEYS.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown grid key `{key}`; want one of {}",
+                    GRID_KEYS.join(", ")
+                )));
+            }
+            let value = resolve_factor(value, factors)?;
+            let values = match value {
+                Json::Arr(items) => items,
+                scalar => vec![scalar],
+            };
+            // Eager validation: every axis value must parse as its
+            // knob *before* any cell runs, so a bad value at the end
+            // of the grid can't waste the front of it.
+            let mut probe = CellCfg::default();
+            for v in &values {
+                probe.apply(key, v)?;
+            }
+            spec.axes.push((key.clone(), values));
+        }
+        Ok(spec)
+    }
+
+    /// Cross product of the axes, declaration order outermost-first.
+    pub fn cells(&self) -> Vec<Vec<(String, Json)>> {
+        let mut out: Vec<Vec<(String, Json)>> = vec![Vec::new()];
+        for (key, values) in &self.axes {
+            let mut next = Vec::with_capacity(out.len() * values.len());
+            for partial in &out {
+                for v in values {
+                    let mut cell = partial.clone();
+                    cell.push((key.clone(), v.clone()));
+                    next.push(cell);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.axes.iter().map(|(_, v)| v.len()).product()
+    }
+}
+
+/// Resolve a whole-value `"$name$"` factor reference against
+/// `[factors]`; every other value passes through unchanged.
+fn resolve_factor(value: &Json, factors: &[(String, Json)]) -> Result<Json> {
+    let name = match value {
+        Json::Str(v)
+            if v.len() > 2 && v.starts_with('$') && v.ends_with('$') =>
+        {
+            &v[1..v.len() - 1]
+        }
+        other => return Ok(other.clone()),
+    };
+    factors
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.clone())
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "grid references factor `${name}$` but [factors] has no \
+                 `{name}`"
+            ))
+        })
+}
+
+fn positive_int(v: &Json, what: &str) -> Result<usize> {
+    match v {
+        Json::Num(n)
+            if n.is_finite() && *n >= 1.0 && n.fract() == 0.0 =>
+        {
+            Ok(*n as usize)
+        }
+        other => Err(Error::Config(format!(
+            "{what} must be a positive integer, got {}",
+            other.to_string_pretty()
+        ))),
+    }
+}
+
+fn non_negative_int(v: &Json, what: &str) -> Result<usize> {
+    match v {
+        Json::Num(n)
+            if n.is_finite() && *n >= 0.0 && n.fract() == 0.0 =>
+        {
+            Ok(*n as usize)
+        }
+        other => Err(Error::Config(format!(
+            "{what} must be a non-negative integer, got {}",
+            other.to_string_pretty()
+        ))),
+    }
+}
+
+fn on_off(v: &Json, what: &str) -> Result<bool> {
+    match v {
+        Json::Bool(b) => Ok(*b),
+        Json::Str(t) if t == "on" || t == "true" => Ok(true),
+        Json::Str(t) if t == "off" || t == "false" => Ok(false),
+        other => Err(Error::Config(format!(
+            "{what} must be on|off, got {}",
+            other.to_string_pretty()
+        ))),
+    }
+}
+
+fn string_of<'a>(v: &'a Json, what: &str) -> Result<&'a str> {
+    match v {
+        Json::Str(t) => Ok(t),
+        other => Err(Error::Config(format!(
+            "{what} must be a string, got {}",
+            other.to_string_pretty()
+        ))),
+    }
+}
+
+/// One cell's typed configuration. Defaults mirror `bts exec`'s flag
+/// defaults (modulo `workers = 2` — suites run many small cells, and
+/// the statistic is worker-count-invariant by contract).
+#[derive(Debug, Clone)]
+pub struct CellCfg {
+    pub workload: Workload,
+    pub tcp: bool,
+    pub cache_mb: usize,
+    pub affinity: bool,
+    pub speculate: bool,
+    pub straggler_pct: f64,
+    pub batch: bool,
+    pub slow: bool,
+    pub reduce_tasks: usize,
+    pub partitioner: Partitioner,
+    pub workers: usize,
+}
+
+impl Default for CellCfg {
+    fn default() -> Self {
+        CellCfg {
+            workload: Workload::Eaglet,
+            tcp: false,
+            cache_mb: 0,
+            affinity: false,
+            speculate: false,
+            straggler_pct: 95.0,
+            batch: true,
+            slow: false,
+            reduce_tasks: 1,
+            partitioner: Partitioner::Hash,
+            workers: 2,
+        }
+    }
+}
+
+impl CellCfg {
+    pub fn parse(cell: &[(String, Json)]) -> Result<CellCfg> {
+        let mut cfg = CellCfg::default();
+        for (key, value) in cell {
+            cfg.apply(key, value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one axis value. Shared by cell construction and the
+    /// parse-time eager validation in [`SuiteSpec::parse`].
+    fn apply(&mut self, key: &str, value: &Json) -> Result<()> {
+        match key {
+            "workload" => {
+                let t = string_of(value, "workload")?;
+                self.workload = Workload::parse(t).ok_or_else(|| {
+                    Error::Config(format!("unknown workload {t}"))
+                })?;
+            }
+            "transport" => {
+                self.tcp = match string_of(value, "transport")? {
+                    "inproc" => false,
+                    "tcp" => true,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "bad transport {other}; want inproc|tcp"
+                        )))
+                    }
+                };
+            }
+            "cache-mb" => {
+                self.cache_mb = non_negative_int(value, "cache-mb")?
+            }
+            "affinity" => self.affinity = on_off(value, "affinity")?,
+            "speculate" => self.speculate = on_off(value, "speculate")?,
+            "straggler-pct" => {
+                let pct = match value {
+                    Json::Num(n) => *n,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "straggler-pct must be a number, got {}",
+                            other.to_string_pretty()
+                        )))
+                    }
+                };
+                if !pct.is_finite() || pct <= 0.0 || pct > 100.0 {
+                    return Err(Error::Config(format!(
+                        "bad straggler-pct {pct}; want a percentile in \
+                         (0, 100]"
+                    )));
+                }
+                self.straggler_pct = pct;
+            }
+            "batch" => self.batch = on_off(value, "batch")?,
+            "turbulence" => {
+                self.slow = match string_of(value, "turbulence")? {
+                    "off" => false,
+                    "slow" => true,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "bad turbulence {other}; want off|slow"
+                        )))
+                    }
+                };
+            }
+            "reduce-tasks" => {
+                self.reduce_tasks =
+                    positive_int(value, "reduce-tasks")?
+            }
+            "partitioner" => {
+                let t = string_of(value, "partitioner")?;
+                self.partitioner =
+                    Partitioner::parse(t).ok_or_else(|| {
+                        Error::Config(format!(
+                            "bad partitioner {t}; want hash|skew"
+                        ))
+                    })?;
+            }
+            "workers" => {
+                self.workers = positive_int(value, "workers")?
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown grid key `{other}`"
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// The `ExecConfig` this cell runs — `bts exec`'s defaults (seed,
+    /// kneepoint cap, scheduler wiring) with the cell's axes applied,
+    /// which is what makes suite cells diffable against direct exec
+    /// runs.
+    fn exec_config(&self, remote: Option<RemoteWorkers>) -> ExecConfig {
+        let knee =
+            kneepoint_bytes(self.workload, &CacheConfig::sandy_bridge());
+        let base = ExecConfig::default();
+        ExecConfig {
+            sizing: TaskSizing::Kneepoint(knee.min(256 * 1024)),
+            workers: if self.tcp { 1 } else { self.workers },
+            remote,
+            cache_mb: self.cache_mb,
+            affinity: self.affinity,
+            sched: SchedConfig {
+                dynamic: self.speculate,
+                speculate: self.speculate,
+                straggler_pct: self.straggler_pct,
+                ..Default::default()
+            },
+            reduce_tasks: self.reduce_tasks,
+            partitioner: self.partitioner,
+            batch_dispatch: self.batch,
+            turbulence: self.slow.then(|| {
+                Arc::new(
+                    Turbulence::new(base.seed).slow_from(0, 2, SLOW_DELAY),
+                )
+            }),
+            ..base
+        }
+    }
+}
+
+/// Human label for a cell: its axis values in declaration order.
+pub fn cell_label(cell: &[(String, Json)]) -> String {
+    cell.iter()
+        .map(|(k, v)| format!("{k}={}", scalar_text(v)))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn scalar_text(v: &Json) -> String {
+    match v {
+        Json::Str(t) => t.clone(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 1e15 => {
+            format!("{}", *n as i64)
+        }
+        other => other.to_string_pretty(),
+    }
+}
+
+/// Run every cell of `spec` and return one JSON row per cell, in cell
+/// order. Hard-errors if any cell's repetitions disagree on `output`.
+pub fn run_suite(
+    spec: &SuiteSpec,
+    backend: Arc<Backend>,
+) -> Result<Vec<Json>> {
+    let params = backend.manifest().params.clone();
+    let cells = spec.cells();
+    let mut rows = Vec::with_capacity(cells.len());
+    for (ci, cell) in cells.iter().enumerate() {
+        let cfg = CellCfg::parse(cell)?;
+        let ds = build_small(cfg.workload, &params, spec.samples);
+        let mut outputs: Vec<Json> = Vec::new();
+        let mut last: Option<ExecResult> = None;
+        for _ in 0..spec.reps {
+            let r = run_cell(ds.as_ref(), backend.clone(), &cfg)?;
+            outputs.push(r.output.to_json());
+            last = Some(r);
+        }
+        if outputs.windows(2).any(|w| w[0] != w[1]) {
+            return Err(Error::Scheduler(format!(
+                "suite cell {ci} ({}) produced diverging outputs \
+                 across {} repetitions — determinism contract broken",
+                cell_label(cell),
+                spec.reps
+            )));
+        }
+        let r = last.expect("reps >= 1");
+        rows.push(cell_row(spec, ci, cell, &cfg, &r));
+    }
+    Ok(rows)
+}
+
+/// One cell run: in-proc directly; TCP cells bind a fresh loopback
+/// listener and run [`TCP_REMOTE_SLOTS`] full `bts worker` sessions on
+/// threads, exactly like the transport oracle tests.
+fn run_cell(
+    ds: &dyn Dataset,
+    backend: Arc<Backend>,
+    cfg: &CellCfg,
+) -> Result<ExecResult> {
+    if !cfg.tcp {
+        let ec = cfg.exec_config(None);
+        return run_cluster_with_recovery(
+            ds,
+            backend,
+            &ec,
+            RECOVERY_ATTEMPTS,
+        );
+    }
+    let remote = RemoteWorkers::bind("127.0.0.1:0", TCP_REMOTE_SLOTS)?;
+    let addr = remote.addr();
+    let workers: Vec<_> = (0..TCP_REMOTE_SLOTS)
+        .map(|_| {
+            let addr = addr.clone();
+            let backend = backend.clone();
+            thread::spawn(move || {
+                run_worker(&addr, backend, &RemoteWorkerOpts::default())
+            })
+        })
+        .collect();
+    let ec = cfg.exec_config(Some(remote));
+    let result =
+        run_cluster_with_recovery(ds, backend, &ec, RECOVERY_ATTEMPTS);
+    for handle in workers {
+        match handle.join() {
+            Ok(Ok(_)) => {}
+            Ok(Err(e)) => return result.and(Err(e)),
+            Err(_) => {
+                return result.and(Err(Error::Scheduler(
+                    "suite TCP worker thread panicked".into(),
+                )))
+            }
+        }
+    }
+    result
+}
+
+/// One `BENCH_suite.json` row: the full exec counter record, the
+/// cell's axis values (dashes → underscores, normalized workload and
+/// transport always present), and the `output` subtree CI diffs.
+fn cell_row(
+    spec: &SuiteSpec,
+    ci: usize,
+    cell: &[(String, Json)],
+    cfg: &CellCfg,
+    r: &ExecResult,
+) -> Json {
+    let mut row = match r.metrics_json() {
+        Json::Obj(map) => map,
+        _ => unreachable!("metrics_json is always an object"),
+    };
+    row.insert("suite".into(), s(&spec.name));
+    row.insert("cell".into(), num(ci as f64));
+    row.insert("label".into(), s(&cell_label(cell)));
+    row.insert("reps".into(), num(spec.reps as f64));
+    row.insert("samples".into(), num(spec.samples as f64));
+    for (key, value) in cell {
+        row.insert(key.replace('-', "_"), value.clone());
+    }
+    row.insert("workload".into(), s(cfg.workload.name()));
+    row.insert(
+        "transport".into(),
+        s(if cfg.tcp { "tcp" } else { "inproc" }),
+    );
+    row.insert("output".into(), r.output.to_json());
+    Json::Obj(row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ModelParams;
+    use crate::exec::run_cluster;
+
+    fn native() -> Arc<Backend> {
+        Arc::new(Backend::native(ModelParams::default()))
+    }
+
+    #[test]
+    fn expands_the_cross_product_in_declaration_order() {
+        let spec = SuiteSpec::parse(
+            r#"
+            [suite]
+            name = "order"
+            reps = 3
+            samples = 12
+
+            [grid]
+            workload = ["seqaddr", "ssag"]
+            cache-mb = [0, 8]
+            speculate = "off"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "order");
+        assert_eq!(spec.reps, 3);
+        assert_eq!(spec.samples, 12);
+        assert_eq!(spec.n_cells(), 4);
+        let labels: Vec<String> =
+            spec.cells().iter().map(|c| cell_label(c)).collect();
+        // first [grid] key is the outermost loop
+        assert_eq!(
+            labels,
+            [
+                "workload=seqaddr cache-mb=0 speculate=off",
+                "workload=seqaddr cache-mb=8 speculate=off",
+                "workload=ssag cache-mb=0 speculate=off",
+                "workload=ssag cache-mb=8 speculate=off",
+            ]
+        );
+        let cfg = CellCfg::parse(&spec.cells()[3]).unwrap();
+        assert_eq!(cfg.workload, Workload::Ssag);
+        assert_eq!(cfg.cache_mb, 8);
+        assert!(!cfg.speculate);
+    }
+
+    #[test]
+    fn factor_sentinels_resolve_against_the_factors_table() {
+        let spec = SuiteSpec::parse(
+            r#"
+            [suite]
+            name = "factored"
+
+            [factors]
+            caches = [0, 8, 16]
+            deep-fanout = 4
+
+            [grid]
+            cache-mb = "$caches$"
+            reduce-tasks = "$deep-fanout$"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.n_cells(), 3);
+        assert_eq!(spec.axes[0].1.len(), 3);
+        let cfg = CellCfg::parse(&spec.cells()[2]).unwrap();
+        assert_eq!(cfg.cache_mb, 16);
+        assert_eq!(cfg.reduce_tasks, 4);
+
+        let err = SuiteSpec::parse(
+            "[grid]\ncache-mb = \"$missing$\"\n",
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("no `missing`"),
+            "wrong error: {err}"
+        );
+    }
+
+    #[test]
+    fn unknown_sections_keys_and_values_are_rejected_up_front() {
+        for (text, needle) in [
+            ("[gird]\nworkload = \"eaglet\"\n", "unknown section"),
+            ("[suite]\nrepz = 2\n[grid]\nbatch = \"on\"\n", "unknown key"),
+            ("[grid]\nworkloads = [\"eaglet\"]\n", "unknown grid key"),
+            ("[suite]\nname = \"x\"\n", "no [grid]"),
+            ("[grid]\ncache-mb = -1\n", "non-negative"),
+            ("[grid]\ncache-mb = 1.5\n", "non-negative integer"),
+            ("[grid]\nreduce-tasks = 0\n", "positive integer"),
+            ("[grid]\nworkers = 0\n", "positive integer"),
+            ("[grid]\nstraggler-pct = 0\n", "(0, 100]"),
+            ("[grid]\nstraggler-pct = 101\n", "(0, 100]"),
+            ("[grid]\nworkload = \"netflix\"\n", "unknown workload"),
+            ("[grid]\ntransport = \"udp\"\n", "inproc|tcp"),
+            ("[grid]\nturbulence = \"storm\"\n", "off|slow"),
+            ("[grid]\npartitioner = \"round\"\n", "hash|skew"),
+            ("[grid]\naffinity = 1\n", "on|off"),
+            ("[suite]\nreps = 0\n[grid]\nbatch = \"on\"\n", "positive"),
+        ] {
+            let err = SuiteSpec::parse(text).unwrap_err();
+            assert!(
+                err.to_string().contains(needle),
+                "`{text}`: expected `{needle}` in `{err}`"
+            );
+        }
+    }
+
+    /// A tiny in-proc suite: rows carry the axes, the counters, and an
+    /// `output` subtree bit-identical to a direct exec-default run of
+    /// the same workload — the equivalence CI's suite smoke diffs at
+    /// larger scale.
+    #[test]
+    fn suite_rows_match_direct_exec_runs_bit_for_bit() {
+        let spec = SuiteSpec::parse(
+            r#"
+            [suite]
+            name = "unit-smoke"
+            reps = 2
+            samples = 10
+
+            [grid]
+            workload = ["seqaddr", "ssag"]
+            cache-mb = [0, 8]
+            "#,
+        )
+        .unwrap();
+        let rows = run_suite(&spec, native()).unwrap();
+        assert_eq!(rows.len(), 4);
+        for (ci, row) in rows.iter().enumerate() {
+            assert_eq!(row.req_usize("cell").unwrap(), ci);
+            assert_eq!(row.req_str("suite").unwrap(), "unit-smoke");
+            assert_eq!(row.req_str("transport").unwrap(), "inproc");
+            assert!(row.req_usize("cache_mb").is_ok());
+            assert!(row.get("report").is_some(), "missing counters");
+            let w = Workload::parse(row.req_str("workload").unwrap())
+                .unwrap();
+            // direct run with the cell's own config = the exec oracle
+            let cfg = CellCfg {
+                workload: w,
+                cache_mb: row.req_usize("cache_mb").unwrap(),
+                ..CellCfg::default()
+            };
+            let ds = build_small(
+                w,
+                &ModelParams::default(),
+                spec.samples,
+            );
+            let direct =
+                run_cluster(ds.as_ref(), native(), &cfg.exec_config(None))
+                    .unwrap();
+            assert_eq!(
+                *row.get("output").unwrap(),
+                direct.output.to_json(),
+                "cell {ci} diverged from its direct exec run"
+            );
+        }
+    }
+
+    /// The TCP transport axis: a tcp cell's output equals the inproc
+    /// cell's output on the same workload, through the full remote
+    /// worker session path.
+    #[test]
+    fn tcp_cells_match_inproc_cells_bit_for_bit() {
+        let spec = SuiteSpec::parse(
+            r#"
+            [suite]
+            name = "tcp-smoke"
+            reps = 1
+            samples = 8
+
+            [grid]
+            transport = ["inproc", "tcp"]
+            workload = "ssag"
+            turbulence = "slow"
+            "#,
+        )
+        .unwrap();
+        let rows = run_suite(&spec, native()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req_str("transport").unwrap(), "inproc");
+        assert_eq!(rows[1].req_str("transport").unwrap(), "tcp");
+        assert_eq!(
+            rows[0].get("output").unwrap(),
+            rows[1].get("output").unwrap(),
+            "transport changed the statistic"
+        );
+    }
+}

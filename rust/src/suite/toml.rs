@@ -1,0 +1,306 @@
+//! A tiny TOML-subset parser for suite grid files.
+//!
+//! The suite runner needs exactly the fragment of TOML a grid spec
+//! uses — `[section]` headers, `key = value` pairs, `#` comments, and
+//! scalar or single-line-array values — and the container ships no
+//! external crates, so this hand-rolled reader covers that fragment
+//! and nothing more. Values land as [`Json`] (the crate's common
+//! dynamic value), sections and keys keep their declaration order
+//! (axis order in the grid is the cross-product nesting order).
+//!
+//! Supported values:
+//!
+//! * basic strings: `"eaglet"` with `\\ \" \n \t` escapes
+//! * booleans: `true` / `false`
+//! * numbers: anything `f64::from_str` accepts (`8`, `0.5`, `-1`)
+//! * single-line arrays of the above: `[1, 2, 4]`, `["a", "b"]`
+//!
+//! Anything outside the fragment — multi-line arrays, inline tables,
+//! dotted keys, dates — is a parse error naming the line, not a silent
+//! skip: a grid file that doesn't mean what it says must not run.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One parsed grid file: sections in declaration order, each holding
+/// its `key = value` pairs in declaration order.
+#[derive(Debug, Clone)]
+pub struct TomlDoc {
+    pub sections: Vec<(String, Vec<(String, Json)>)>,
+}
+
+impl TomlDoc {
+    /// The pairs of `[name]`, if the section is present.
+    pub fn section(&self, name: &str) -> Option<&[(String, Json)]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, pairs)| pairs.as_slice())
+    }
+
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut sections: Vec<(String, Vec<(String, Json)>)> = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    bad(lineno, "unterminated [section] header")
+                })?;
+                let name = name.trim();
+                if name.is_empty() || !name.chars().all(is_key_char) {
+                    return Err(bad(lineno, "bad section name"));
+                }
+                if sections.iter().any(|(n, _)| n == name) {
+                    return Err(bad(
+                        lineno,
+                        &format!("duplicate section [{name}]"),
+                    ));
+                }
+                sections.push((name.to_string(), Vec::new()));
+                continue;
+            }
+            let (key, value) = split_pair(&line, lineno)?;
+            let section = sections.last_mut().ok_or_else(|| {
+                bad(lineno, "key before any [section] header")
+            })?;
+            if section.1.iter().any(|(k, _)| *k == key) {
+                return Err(bad(
+                    lineno,
+                    &format!("duplicate key `{key}` in [{}]", section.0),
+                ));
+            }
+            section.1.push((key, parse_value(&value, lineno)?));
+        }
+        Ok(TomlDoc { sections })
+    }
+}
+
+fn bad(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("grid line {lineno}: {msg}"))
+}
+
+fn is_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+/// Drop a `#` comment, but only outside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_pair(line: &str, lineno: usize) -> Result<(String, String)> {
+    let eq = line
+        .find('=')
+        .ok_or_else(|| bad(lineno, "expected `key = value`"))?;
+    let key = line[..eq].trim();
+    let value = line[eq + 1..].trim();
+    if key.is_empty() || !key.chars().all(is_key_char) {
+        return Err(bad(lineno, &format!("bad key `{key}`")));
+    }
+    if value.is_empty() {
+        return Err(bad(lineno, &format!("`{key}` has no value")));
+    }
+    Ok((key.to_string(), value.to_string()))
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Json> {
+    if let Some(body) = text.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or_else(|| {
+            bad(lineno, "arrays must open and close on one line")
+        })?;
+        let mut out = Vec::new();
+        for item in split_array_items(body, lineno)? {
+            out.push(parse_scalar(&item, lineno)?);
+        }
+        if out.is_empty() {
+            return Err(bad(lineno, "empty axis array"));
+        }
+        return Ok(Json::Arr(out));
+    }
+    parse_scalar(text, lineno)
+}
+
+/// Split an array body on commas that sit outside quoted strings.
+fn split_array_items(body: &str, lineno: usize) -> Result<Vec<String>> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut escaped = false;
+    for c in body.chars() {
+        if escaped {
+            cur.push(c);
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => {
+                cur.push(c);
+                escaped = true;
+            }
+            '"' => {
+                cur.push(c);
+                in_str = !in_str;
+            }
+            ',' if !in_str => {
+                items.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err(bad(lineno, "unterminated string in array"));
+    }
+    items.push(cur);
+    let items: Vec<String> =
+        items.into_iter().map(|s| s.trim().to_string()).collect();
+    if items.iter().any(|s| s.is_empty()) {
+        return Err(bad(lineno, "empty item in array (trailing comma?)"));
+    }
+    Ok(items)
+}
+
+fn parse_scalar(text: &str, lineno: usize) -> Result<Json> {
+    if let Some(body) = text.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| bad(lineno, "unterminated string"))?;
+        return Ok(Json::Str(unescape(body, lineno)?));
+    }
+    match text {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    text.parse::<f64>().map(Json::Num).map_err(|_| {
+        bad(lineno, &format!("unsupported value `{text}`"))
+    })
+}
+
+fn unescape(body: &str, lineno: usize) -> Result<String> {
+    let mut out = String::with_capacity(body.len());
+    let mut chars = body.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            if c == '"' {
+                return Err(bad(lineno, "unescaped quote inside string"));
+            }
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('\\') => out.push('\\'),
+            Some('"') => out.push('"'),
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            other => {
+                return Err(bad(
+                    lineno,
+                    &format!("bad escape `\\{}`", other.unwrap_or(' ')),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    #[test]
+    fn parses_sections_keys_and_all_value_shapes() {
+        let doc = TomlDoc::parse(
+            r#"
+            # a grid
+            [suite]
+            name = "smoke"   # trailing comment
+            reps = 2
+            deep = true
+
+            [grid]
+            workload = ["seqaddr", "ssag"]
+            cache-mb = [0, 8]
+            frac = 0.5
+            note = "has # hash and \"quote\""
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.sections.len(), 2);
+        let suite = doc.section("suite").unwrap();
+        assert_eq!(suite[0], ("name".into(), Json::Str("smoke".into())));
+        assert_eq!(suite[1], ("reps".into(), n(2.0)));
+        assert_eq!(suite[2], ("deep".into(), Json::Bool(true)));
+        let grid = doc.section("grid").unwrap();
+        assert_eq!(
+            grid[0].1,
+            Json::Arr(vec![
+                Json::Str("seqaddr".into()),
+                Json::Str("ssag".into())
+            ])
+        );
+        assert_eq!(grid[1].1, Json::Arr(vec![n(0.0), n(8.0)]));
+        assert_eq!(grid[2].1, n(0.5));
+        assert_eq!(
+            grid[3].1,
+            Json::Str("has # hash and \"quote\"".into())
+        );
+        assert!(doc.section("missing").is_none());
+    }
+
+    #[test]
+    fn keys_keep_declaration_order() {
+        let doc =
+            TomlDoc::parse("[g]\nb = 1\na = 2\nc = 3\n").unwrap();
+        let keys: Vec<&str> = doc.section("g").unwrap()
+            .iter()
+            .map(|(k, _)| k.as_str())
+            .collect();
+        assert_eq!(keys, ["b", "a", "c"]);
+    }
+
+    #[test]
+    fn malformed_grids_are_errors_not_silent_skips() {
+        for (text, what) in [
+            ("key = 1\n", "key before any section"),
+            ("[s]\nkey = 1\nkey = 2\n", "duplicate key"),
+            ("[s]\n[s]\n", "duplicate section"),
+            ("[s\nkey = 1\n", "unterminated header"),
+            ("[s]\nkey =\n", "missing value"),
+            ("[s]\nkey 1\n", "missing equals"),
+            ("[s]\nkey = [1,\n2]\n", "multi-line array"),
+            ("[s]\nkey = []\n", "empty array"),
+            ("[s]\nkey = [1,,2]\n", "empty item"),
+            ("[s]\nkey = \"open\n", "unterminated string"),
+            ("[s]\nkey = 1970-01-01\n", "dates unsupported"),
+            ("[s]\nbad.dot = 1\n", "dotted key"),
+        ] {
+            let err = TomlDoc::parse(text).unwrap_err();
+            assert!(
+                matches!(err, Error::Config(ref m) if m.contains("line")),
+                "{what}: wrong error {err:?}"
+            );
+        }
+    }
+}

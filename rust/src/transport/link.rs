@@ -205,7 +205,14 @@ impl WorkerLink {
             counters,
         )));
         {
-            let mut g = wr.lock().unwrap();
+            // The mutex is seconds old, but a panic between creation
+            // and here would poison it — surface that as a protocol
+            // failure on this link, never a leader panic.
+            let mut g = wr.lock().map_err(|_| {
+                Error::Protocol(format!(
+                    "link {worker}: writer lock poisoned before Welcome"
+                ))
+            })?;
             g.send(&Message::Welcome { worker: worker as u32 })?;
         }
         let pump_wr = wr.clone();

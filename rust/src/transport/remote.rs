@@ -346,7 +346,13 @@ pub fn run_remote_worker(
         counters,
     )));
     {
-        let mut g = wr.lock().unwrap();
+        // Poisoned-lock paths must exit the session as an error, not
+        // a panic — the worker loop may be wrapped in a respawner.
+        let mut g = wr.lock().map_err(|_| {
+            Error::Protocol(
+                "session writer lock poisoned before Hello".into(),
+            )
+        })?;
         g.send(&Message::Hello { worker: 0 })?;
     }
     let worker = match Message::read_deadline(

@@ -13,13 +13,22 @@
 //! from different PRs — and from hosts of different sizes or debug
 //! builds — stay comparable across the whole trajectory. Stamping
 //! never overwrites a key a record already carries.
+//!
+//! Schema v3 unifies the row shape across every writer on the
+//! `BENCH_suite.json` model: each record carries `surface` (which
+//! writer produced it — stamped here from the file name) and `label`
+//! (the writer's own discriminator for the row: the suite cell label,
+//! a bench's mode/config name, …) alongside its flat counters. Before
+//! v3 the discriminator key drifted per writer (`bench`, `mode`,
+//! `config`, `segment`); trajectory readers can branch on
+//! `schema_version` to handle old rows.
 
 use super::json::{arr, num, s, Json};
 use crate::error::Result;
 
 /// Version stamped into every record; bump on incompatible changes to
 /// the record shape so trajectory readers can branch on it.
-pub const SCHEMA_VERSION: u64 = 2;
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// The run-metadata pairs added to every record.
 fn run_meta() -> Vec<(&'static str, Json)> {
@@ -61,7 +70,18 @@ pub fn write_in(
 ) -> Result<String> {
     std::fs::create_dir_all(dir)?;
     let path = format!("{dir}/BENCH_{name}.json");
-    let stamped: Vec<Json> = records.into_iter().map(stamp).collect();
+    // `surface` is the v3 cross-writer discriminator; like the rest of
+    // the stamp, a caller-provided value wins.
+    let stamped: Vec<Json> = records
+        .into_iter()
+        .map(|r| match stamp(r) {
+            Json::Obj(mut m) => {
+                m.entry("surface".to_string()).or_insert_with(|| s(name));
+                Json::Obj(m)
+            }
+            other => other,
+        })
+        .collect();
     std::fs::write(&path, arr(stamped).to_string_pretty())?;
     Ok(path)
 }
@@ -122,6 +142,7 @@ mod tests {
             SCHEMA_VERSION as usize
         );
         assert!(r.req_usize("host_threads").unwrap() >= 1);
+        assert_eq!(r.req_str("surface").unwrap(), "stamped");
         let profile = r.req_str("cargo_profile").unwrap();
         assert!(
             profile == "debug" || profile == "release",
@@ -143,5 +164,25 @@ mod tests {
         );
         // non-object records pass through untouched
         assert_eq!(stamp(num(7.0)), num(7.0));
+    }
+
+    #[test]
+    fn caller_surface_beats_the_file_name_stamp() {
+        let dir = std::env::temp_dir()
+            .join("bts_bench_record_surface_test")
+            .to_string_lossy()
+            .into_owned();
+        let path = write_in(
+            &dir,
+            "outer",
+            vec![obj(vec![("surface", s("inner"))])],
+        )
+        .unwrap();
+        let back =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let Json::Arr(v) = back else { panic!("expected array") };
+        assert_eq!(v[0].req_str("surface").unwrap(), "inner");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 }

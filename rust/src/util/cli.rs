@@ -98,6 +98,43 @@ impl Flags {
                 .map_err(|_| Error::Config(format!("bad {name} value {v}"))),
         }
     }
+
+    /// Every occurrence of `name`, each further split on commas — the
+    /// grid-spec form (`--only fig4,fig7 --only tab1` →
+    /// `[fig4, fig7, tab1]`). An empty item (empty value, leading /
+    /// trailing / doubled comma) is an error, never a silent skip.
+    pub fn list(&self, name: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for occ in self.get_all(name) {
+            for item in occ.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    return Err(Error::Config(format!(
+                        "flag {name} has an empty item in {occ:?}; want \
+                         comma-separated non-empty values"
+                    )));
+                }
+                out.push(item.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Like [`Flags::num`], with an inclusive lower bound: the shared
+    /// validator for count-like knobs where zero or negative values
+    /// are configuration mistakes, not requests.
+    pub fn num_at_least<T>(&self, name: &str, default: T, min: T) -> Result<T>
+    where
+        T: std::str::FromStr + PartialOrd + std::fmt::Display,
+    {
+        let v = self.num(name, default)?;
+        if v < min {
+            return Err(Error::Config(format!(
+                "bad {name} value {v}; want at least {min}"
+            )));
+        }
+        Ok(v)
+    }
 }
 
 #[cfg(test)]

@@ -8,12 +8,18 @@ pub use calibration::{default_compute_s_per_mib, measure_compute_s_per_mib};
 
 use crate::data::eaglet::{EagletConfig, EagletDataset};
 use crate::data::netflix::{NetflixConfig, NetflixDataset};
+use crate::data::seqaddr::{SeqAddrConfig, SeqAddrDataset};
+use crate::data::ssag::{SsagConfig, SsagDataset};
 use crate::data::{Dataset, ModelParams, Workload};
 
 /// Original-dataset sizes from the thesis (§4.1.1): the bi-polar study's
-/// 400 families and a Netflix slice at `movies` samples.
+/// 400 families and a Netflix slice at `movies` samples. The series
+/// workloads (Pan et al. 2021, Politis 2021) default to enough series
+/// that every compiled bucket size gets exercised.
 pub const EAGLET_BASE_FAMILIES: usize = 400;
 pub const NETFLIX_BASE_MOVIES: usize = 2000;
+pub const SEQADDR_BASE_SERIES: usize = 1024;
+pub const SSAG_BASE_SERIES: usize = 1024;
 
 /// Build a dataset for `workload`, optionally scaled up to roughly
 /// `target_bytes` with statistically-similar synthetic samples
@@ -52,6 +58,32 @@ pub fn build(
                 _ => base,
             })
         }
+        Workload::SeqAddr => {
+            let base = SeqAddrDataset::generate(
+                params,
+                SeqAddrConfig {
+                    series: SEQADDR_BASE_SERIES,
+                    ..Default::default()
+                },
+            );
+            Box::new(match target_bytes {
+                Some(t) if t > base.total_bytes() => base.scaled_to(t),
+                _ => base,
+            })
+        }
+        Workload::Ssag => {
+            let base = SsagDataset::generate(
+                params,
+                SsagConfig {
+                    series: SSAG_BASE_SERIES,
+                    ..Default::default()
+                },
+            );
+            Box::new(match target_bytes {
+                Some(t) if t > base.total_bytes() => base.scaled_to(t),
+                _ => base,
+            })
+        }
     }
 }
 
@@ -77,6 +109,14 @@ pub fn build_small(
                 },
             ))
         }
+        Workload::SeqAddr => Box::new(SeqAddrDataset::generate(
+            params,
+            SeqAddrConfig { series: samples, ..Default::default() },
+        )),
+        Workload::Ssag => Box::new(SsagDataset::generate(
+            params,
+            SsagConfig { series: samples, ..Default::default() },
+        )),
     }
 }
 
@@ -87,8 +127,7 @@ mod tests {
     #[test]
     fn build_small_respects_workload_tag() {
         let p = ModelParams::default();
-        for w in [Workload::Eaglet, Workload::NetflixHi, Workload::NetflixLo]
-        {
+        for w in Workload::ALL {
             let ds = build_small(w, &p, 10);
             assert_eq!(ds.workload(), w);
             assert_eq!(ds.metas().len(), 10);

@@ -32,7 +32,12 @@ fn cfg(cache_mb: usize, affinity: bool) -> ExecConfig {
 
 #[test]
 fn cache_and_affinity_never_change_the_statistic() {
-    for w in [Workload::Eaglet, Workload::NetflixHi] {
+    for w in [
+        Workload::Eaglet,
+        Workload::NetflixHi,
+        Workload::SeqAddr,
+        Workload::Ssag,
+    ] {
         let ds = build_small(w, &ModelParams::default(), 24);
         let plain =
             run_cluster(ds.as_ref(), native(), &cfg(0, false)).unwrap();

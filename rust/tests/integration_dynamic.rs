@@ -146,7 +146,12 @@ fn dynamic_speculation_beats_twostep_tail_under_a_slow_worker() {
 
 #[test]
 fn speculation_is_bit_identical_over_loopback_tcp() {
-    for workload in [Workload::Eaglet, Workload::NetflixLo] {
+    for workload in [
+        Workload::Eaglet,
+        Workload::NetflixLo,
+        Workload::SeqAddr,
+        Workload::Ssag,
+    ] {
         // In-proc, speculation off: the oracle.
         let reference = run(
             workload,

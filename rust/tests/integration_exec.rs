@@ -137,6 +137,91 @@ fn netflix_cluster_produces_sane_stats() {
 }
 
 #[test]
+fn seqaddr_cluster_matches_expected_moments() {
+    // SeqAddr rides the Netflix moment algebra: every sample draws
+    // exactly `sa_rounds` windows, so the summed count lane is a
+    // closed-form invariant regardless of packing or parallelism.
+    let backend = native();
+    let p = params();
+    let samples = 30;
+    let ds = build_small(Workload::SeqAddr, &p, samples);
+    let cfg = ExecConfig {
+        sizing: TaskSizing::Kneepoint(16 * 1024),
+        workers: 3,
+        ..Default::default()
+    };
+    let r = run_cluster(ds.as_ref(), backend, &cfg).unwrap();
+    let JobOutput::Netflix(stats) = &r.output else {
+        panic!("wrong output kind")
+    };
+    assert_eq!(stats.mean.len(), p.sa_bins);
+    let total: f64 = stats.count.iter().sum();
+    assert_eq!(total, (samples * p.sa_rounds) as f64);
+    for (b, (mean, n)) in
+        stats.mean.iter().zip(&stats.count).enumerate()
+    {
+        if *n > 0.0 {
+            assert!(mean.is_finite(), "bin {b} mean not finite");
+        }
+    }
+}
+
+#[test]
+fn ssag_cluster_produces_a_positive_variance_ladder() {
+    // SSAG rides the EAGLET weighted-mean algebra: the output curve is
+    // b_g · Var(block means) per ladder rung, strictly positive for
+    // non-constant series, with total weight = series count.
+    let backend = native();
+    let p = params();
+    let samples = 24;
+    let ds = build_small(Workload::Ssag, &p, samples);
+    let cfg = ExecConfig {
+        sizing: TaskSizing::Kneepoint(8 * 1024),
+        workers: 3,
+        ..Default::default()
+    };
+    let r = run_cluster(ds.as_ref(), backend, &cfg).unwrap();
+    let JobOutput::Eaglet { alod, weight } = &r.output else {
+        panic!("wrong output kind")
+    };
+    assert_eq!(alod.len(), p.ssag_points);
+    assert!(alod.iter().all(|v| v.is_finite() && *v > 0.0), "{alod:?}");
+    assert!((*weight - samples as f32).abs() < 1e-3);
+}
+
+#[test]
+fn new_kernels_recover_bit_identically() {
+    // Determinism through job-level recovery, same contract the
+    // original pair pins in `recovery_restarts_and_reproduces…`.
+    let backend = native();
+    for w in [Workload::SeqAddr, Workload::Ssag] {
+        let ds = build_small(w, &params(), 20);
+        let cfg = ExecConfig {
+            sizing: TaskSizing::Tiniest,
+            workers: 3,
+            ..Default::default()
+        };
+        let clean =
+            run_cluster(ds.as_ref(), backend.clone(), &cfg).unwrap();
+        let mut failing = cfg.clone();
+        failing.failure =
+            Some(FailurePlan { worker: 0, after_tasks: 2, on_attempt: 1 });
+        let recovered = run_cluster_with_recovery(
+            ds.as_ref(),
+            backend.clone(),
+            &failing,
+            3,
+        )
+        .unwrap();
+        assert_eq!(recovered.report.restarts, 1);
+        assert_eq!(
+            recovered.output, clean.output,
+            "{w:?}: recovery changed the statistic"
+        );
+    }
+}
+
+#[test]
 fn shutdown_is_orderly_and_accounted() {
     let backend = native();
     let ds = build_small(Workload::Eaglet, &params(), 25);

@@ -71,7 +71,12 @@ fn spawn_workers(
 
 #[test]
 fn reduce_fanout_and_partitioner_never_change_the_statistic() {
-    for workload in [Workload::Eaglet, Workload::NetflixLo] {
+    for workload in [
+        Workload::Eaglet,
+        Workload::NetflixLo,
+        Workload::SeqAddr,
+        Workload::Ssag,
+    ] {
         let backend = native();
         let ds = build_small(workload, &params(), 36);
 

@@ -730,3 +730,178 @@ fn prop_task_batches_bit_identical_to_singles() {
         Ok(())
     });
 }
+
+// ---- CLI grid-spec parsing (util::cli::Flags) -----------------------
+
+use bts::util::cli::Flags;
+
+/// Random item tokens a grid spec might carry (axis values, figure
+/// ids, workload names).
+fn grid_item(rng: &mut Rng) -> String {
+    const POOL: &[&str] = &[
+        "eaglet", "netflix_lo", "seqaddr", "ssag", "fig4", "tab1", "0",
+        "8", "64", "on", "off", "hash", "skew", "tcp", "inproc",
+    ];
+    POOL[rng.below(POOL.len() as u64) as usize].to_string()
+}
+
+/// For any grouping of items into repeated `--only` occurrences — any
+/// mix of `--flag v` / `--flag=v` spellings, any comma grouping —
+/// `Flags::list` recovers exactly the flat item sequence, `get_all`
+/// keeps every occurrence in order, and `get` returns the last one.
+#[test]
+fn prop_flags_repeated_and_comma_grouped_specs_round_trip() {
+    check("grid-spec round trip", 300, |rng: &mut Rng| {
+        let items: Vec<String> =
+            (0..rng.range(1, 9)).map(|_| grid_item(rng)).collect();
+        // split the item list into 1..=len contiguous occurrence groups
+        let mut groups: Vec<Vec<String>> = vec![Vec::new()];
+        for (i, it) in items.iter().enumerate() {
+            if i > 0 && rng.below(2) == 0 {
+                groups.push(Vec::new());
+            }
+            groups.last_mut().unwrap().push(it.clone());
+        }
+        let mut args: Vec<String> = Vec::new();
+        for g in &groups {
+            let joined = g.join(",");
+            if rng.below(2) == 0 {
+                args.push(format!("--only={joined}"));
+            } else {
+                args.push("--only".into());
+                args.push(joined);
+            }
+        }
+        let f = Flags::parse(&args, &["--only"])
+            .map_err(|e| e.to_string())?;
+        let flat = f.list("--only").map_err(|e| e.to_string())?;
+        prop_assert!(
+            flat == items,
+            "list() lost or reordered items: {flat:?} != {items:?}"
+        );
+        let occs: Vec<&str> = f.get_all("--only").collect();
+        let want: Vec<String> = groups.iter().map(|g| g.join(",")).collect();
+        prop_assert!(
+            occs == want.iter().map(String::as_str).collect::<Vec<_>>(),
+            "get_all() changed occurrences: {occs:?} != {want:?}"
+        );
+        prop_assert!(
+            f.get("--only") == Some(want.last().unwrap().as_str()),
+            "get() is not the last occurrence"
+        );
+        Ok(())
+    });
+}
+
+/// Corrupting any one occurrence of a valid grid spec with an empty
+/// item — empty value, leading/trailing comma, or a doubled comma —
+/// turns `Flags::list` into a clear error naming the flag, never a
+/// silent skip.
+#[test]
+fn prop_flags_empty_list_items_are_clear_errors() {
+    check("empty grid items rejected", 300, |rng: &mut Rng| {
+        let n = rng.range(1, 5) as usize;
+        let mut occs: Vec<String> = (0..n)
+            .map(|_| {
+                let k = rng.range(1, 4);
+                (0..k)
+                    .map(|_| grid_item(rng))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            })
+            .collect();
+        let victim = rng.below(n as u64) as usize;
+        let good = occs[victim].clone();
+        occs[victim] = match rng.below(4) {
+            0 => String::new(),          // --only=
+            1 => format!(",{good}"),     // leading comma
+            2 => format!("{good},"),     // trailing comma
+            _ => {
+                // doubled comma inside (or degenerate lone comma)
+                match good.split_once(',') {
+                    Some((a, b)) => format!("{a},,{b}"),
+                    None => format!("{good},,{good}"),
+                }
+            }
+        };
+        // the inline spelling is required for the empty-value case
+        let args: Vec<String> =
+            occs.iter().map(|o| format!("--only={o}")).collect();
+        let f = Flags::parse(&args, &["--only"])
+            .map_err(|e| e.to_string())?;
+        let err = match f.list("--only") {
+            Err(e) => e.to_string(),
+            Ok(v) => {
+                return Err(format!(
+                    "empty item in {occs:?} parsed silently as {v:?}"
+                ))
+            }
+        };
+        prop_assert!(
+            err.contains("--only"),
+            "error must name the flag: {err}"
+        );
+        Ok(())
+    });
+}
+
+/// Count/percentile knobs reject zero and negative values with errors
+/// that name the flag and the offending value: `--cache-mb` is a
+/// byte budget (unsigned — any negative literal is malformed), and
+/// `--straggler-pct` / `--reduce-tasks`-style knobs sit behind
+/// `num_at_least`, which errs exactly when the value is under the
+/// bound.
+#[test]
+fn prop_flags_negative_or_zero_knob_values_are_clear_errors() {
+    check("bad knob values rejected", 300, |rng: &mut Rng| {
+        // negative --cache-mb can never parse as a byte budget
+        let neg = -(rng.range(1, 1_000_000) as i64);
+        let f = Flags::parse(
+            &[format!("--cache-mb={neg}")],
+            &["--cache-mb"],
+        )
+        .map_err(|e| e.to_string())?;
+        let err = match f.num::<usize>("--cache-mb", 0) {
+            Err(e) => e.to_string(),
+            Ok(v) => {
+                return Err(format!("--cache-mb {neg} parsed as {v}"))
+            }
+        };
+        prop_assert!(
+            err.contains("--cache-mb") && err.contains(&neg.to_string()),
+            "error must name flag and value: {err}"
+        );
+
+        // num_at_least errs exactly on values under the bound, and
+        // the error carries flag, value, and bound
+        let v = rng.range(0, 201) as i64 - 100; // [-100, 100]
+        let min = rng.range(1, 5) as i64;
+        let f = Flags::parse(
+            &[format!("--straggler-pct={v}")],
+            &["--straggler-pct"],
+        )
+        .map_err(|e| e.to_string())?;
+        match f.num_at_least("--straggler-pct", min, min) {
+            Ok(got) => {
+                prop_assert!(
+                    v >= min && got == v,
+                    "accepted {v} under bound {min}"
+                );
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                prop_assert!(
+                    v < min,
+                    "rejected in-range {v} (bound {min}): {msg}"
+                );
+                prop_assert!(
+                    msg.contains("--straggler-pct")
+                        && msg.contains(&v.to_string())
+                        && msg.contains(&min.to_string()),
+                    "error must name flag, value, bound: {msg}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
